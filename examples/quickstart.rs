@@ -1,0 +1,48 @@
+//! Quickstart: load the AOT artifacts, prefill a prompt, and stream a few
+//! tokens through the LycheeCluster decode path.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example quickstart
+//! ```
+
+use lychee::config::Config;
+use lychee::engine::{Engine, Sampling};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        cfg.artifacts_dir = "artifacts".into();
+    }
+    let engine = Engine::load(cfg)?;
+    println!(
+        "loaded LycheeLM: {} layers, d_model {}, platform {}",
+        engine.dims().layers,
+        engine.dims().d_model,
+        engine.rt.platform()
+    );
+
+    let prompt = b"LycheeCluster organizes the KV cache into a pyramid: \
+coarse units, fine clusters, and structure-aware chunks. ";
+    let mut seq = engine.prefill(1, prompt, "lychee")?;
+    println!("prefilled {} tokens", seq.pos);
+
+    let sampling = Sampling::default();
+    print!("generated: ");
+    for _ in 0..24 {
+        let tok = engine.decode_step(&mut seq, &sampling)?;
+        print!("{}", String::from_utf8_lossy(&[tok]));
+    }
+    println!();
+
+    println!("\nper-phase decode time:");
+    for (phase, total_us, share) in seq.timer.breakdown() {
+        println!("  {phase:<10} {:>8.2} ms  {:>5.1}%", total_us / 1e3, share * 100.0);
+    }
+    println!(
+        "\nKV cache: {:.1} kB, retrieval index: {:.1} kB ({:.2}% overhead)",
+        seq.kv_bytes() as f64 / 1e3,
+        seq.index_bytes() as f64 / 1e3,
+        100.0 * seq.index_bytes() as f64 / seq.kv_bytes() as f64
+    );
+    Ok(())
+}

@@ -1,0 +1,105 @@
+//! End-to-end serving driver (the repo's system-level validation run,
+//! recorded in EXPERIMENTS.md):
+//!
+//! 1. starts the coordinator + TCP JSON-lines server on the real
+//!    LycheeLM artifacts,
+//! 2. replays a Poisson arrival trace of batched requests through the
+//!    TCP client and reports TTFT / TPOT / throughput,
+//! 3. then measures single-stream decode TPOT at long synthetic contexts
+//!    for full attention vs LycheeCluster (the Fig. 4 phenomenon, live).
+//!
+//! ```bash
+//! cargo run --release --offline --example serve_longcontext
+//! ```
+
+use lychee::config::Config;
+use lychee::coordinator::spawn;
+use lychee::engine::{Engine, Sampling};
+use lychee::server::{Client, Server};
+use lychee::util::stats::mean;
+use lychee::workloads::trace::{self, TraceParams};
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = Config::new();
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        cfg.artifacts_dir = "artifacts".into();
+    }
+
+    // ---------------------------------------------------------------
+    // Phase 1: batched serving over TCP
+    // ---------------------------------------------------------------
+    println!("=== phase 1: batched serving over TCP (lychee policy) ===");
+    let (handle, metrics, join) = spawn(cfg.clone())?;
+    let server = Server::start("127.0.0.1:0", handle.clone())?;
+    println!("server on {}", server.addr);
+
+    let params = TraceParams { rate: 4.0, n_requests: 12, prompt_min: 96, prompt_max: 480, out_min: 8, out_max: 24 };
+    let reqs = trace::generate(&params, 7);
+    let t0 = std::time::Instant::now();
+    let addr = server.addr;
+    let mut workers = Vec::new();
+    for (i, r) in reqs.into_iter().enumerate() {
+        workers.push(std::thread::spawn(move || -> anyhow::Result<(f64, f64)> {
+            let wait = r.at_s - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let prompt = String::from_utf8_lossy(&trace::prompt_text(r.prompt_len, i as u64)).into_owned();
+            let mut client = Client::connect(&addr)?;
+            let res = client.generate(&prompt, r.max_new_tokens, "lychee")?;
+            Ok((res.ttft_ms, res.tpot_ms))
+        }));
+    }
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    for w in workers {
+        let (ttft, tpot) = w.join().unwrap()?;
+        ttfts.push(ttft);
+        tpots.push(tpot);
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    {
+        let m = metrics.lock().unwrap();
+        println!(
+            "served {} requests in {:.1}s | throughput {:.1} tok/s | mean TTFT {:.0} ms | mean TPOT {:.2} ms",
+            m.completed,
+            elapsed,
+            m.throughput_tokens_per_s(elapsed),
+            mean(&ttfts),
+            mean(&tpots)
+        );
+    }
+    server.stop();
+    handle.shutdown();
+    let _ = join.join();
+
+    // ---------------------------------------------------------------
+    // Phase 2: long-context TPOT, full vs lychee (single stream)
+    // ---------------------------------------------------------------
+    println!("\n=== phase 2: long-context decode TPOT (single stream) ===");
+    let engine = Engine::load(cfg)?;
+    let sampling = Sampling::default();
+    println!("{:<10} {:>12} {:>12} {:>9}", "context", "full ms/tok", "lychee ms/tok", "speedup");
+    for ctx in [8 * 1024usize, 16 * 1024, 32 * 1024] {
+        let mut times = Vec::new();
+        for policy in ["full", "lychee"] {
+            let mut seq = engine.synth_sequence(1, ctx, policy, 11)?;
+            engine.decode_step(&mut seq, &sampling)?; // warmup
+            let mut samples = Vec::new();
+            for _ in 0..4 {
+                let t = std::time::Instant::now();
+                engine.decode_step(&mut seq, &sampling)?;
+                samples.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            times.push(mean(&samples));
+        }
+        println!(
+            "{:<10} {:>12.2} {:>12.2} {:>8.2}x",
+            format!("{}k", ctx / 1024),
+            times[0],
+            times[1],
+            times[0] / times[1]
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,202 @@
+"""AOT lowering: JAX (L2) + Pallas (L1) -> HLO text artifacts for Rust (L3).
+
+Emits HLO *text* (NOT `.serialize()`): jax >= 0.5 serializes HloModuleProto
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects; the text parser reassigns ids
+and round-trips cleanly (see /opt/xla-example/README.md).
+
+Outputs in --out (default ../artifacts):
+  <program>.hlo.txt   one per (stage, shape-bucket) - see PROGRAMS below
+  weights.bin         LCT1 tensor container with LycheeLM parameters
+  manifest.json       program table (files, arg specs, output arity),
+                      model config, weight order, bucket lists
+
+Python runs ONCE at build time (`make artifacts`); the Rust binary is
+self-contained afterwards.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile import model as M
+from compile.kernels.chunk_pool import chunk_pool
+
+CFG = M.CFG
+
+# Shape buckets (the Rust runtime picks the smallest bucket that fits).
+BATCH_BUCKETS = (1, 4, 8)
+ATTN_M_B1 = (128, 512, 1024, 2048, 4096, 8192, 16384, 32768, 65536)
+ATTN_M_BN = (128, 512, 1024, 2048)
+PREFILL_S = (128, 512, 2048)
+KVBUF_M = (2048, 16384, 65536, 131072)
+GATHER_N = (1024, 2048)
+POOL_SC = ((512, 128), (2048, 512))
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def spec_json(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def build_programs():
+    """Yield (name, fn, arg_specs, n_outputs)."""
+    h, dh, d, f, v = CFG.heads, CFG.head_dim, CFG.d_model, CFG.ffn, CFG.vocab
+    progs = []
+
+    for b in BATCH_BUCKETS:
+        progs.append((f"embed_b{b}", M.embed, [f32(v, d), i32(b)], 1))
+        progs.append((
+            f"qkv_b{b}", M.qkv,
+            [f32(b, d), f32(d), f32(d, d), f32(d, d), f32(d, d), i32(b)], 3))
+        progs.append((
+            f"proj_ffn_b{b}", M.proj_ffn,
+            [f32(b, h, dh), f32(b, d), f32(d, d), f32(d), f32(d, f), f32(f, d)],
+            1))
+        progs.append((f"lm_head_b{b}", M.lm_head, [f32(b, d), f32(d), f32(v, d)], 1))
+        ms = ATTN_M_B1 if b == 1 else ATTN_M_BN
+        for m in ms:
+            progs.append((
+                f"attn_b{b}_m{m}", M.attn,
+                [f32(b, h, dh), f32(b, m, h, dh), f32(b, m, h, dh), f32(b, m)],
+                1))
+
+    n_params = len(M.param_order())
+    for s in PREFILL_S:
+        def prefill_fn(*args, _s=s):
+            return M.prefill(args[:n_params], args[n_params], args[n_params + 1])
+        specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in PARAM_SPECS]
+        specs += [i32(s), i32()]
+        progs.append((f"prefill_s{s}", prefill_fn, specs, 4))
+
+    for mmax in KVBUF_M:
+        progs.append((
+            f"append_m{mmax}", M.append_kv,
+            [f32(mmax, h, dh), f32(h, dh), i32()], 1))
+        for n in GATHER_N:
+            progs.append((
+                f"gather_m{mmax}_n{n}", M.gather_kv,
+                [f32(mmax, h, dh), i32(n)], 1))
+
+    for s, c in POOL_SC:
+        progs.append((f"pool_s{s}_c{c}", chunk_pool, [f32(s, d), i32(c), i32(c)], 1))
+
+    return progs
+
+
+def make_param_specs(params):
+    return [jax.ShapeDtypeStruct(params[n].shape, params[n].dtype)
+            for n in M.param_order()]
+
+
+DTYPE_CODE = {"float32": 0, "int32": 1}
+
+
+def write_lct1(path, named_arrays):
+    """LCT1 tensor container: magic, count, then (name, dtype, dims, data)."""
+    with open(path, "wb") as fh:
+        fh.write(b"LCT1")
+        fh.write(struct.pack("<I", len(named_arrays)))
+        for name, arr in named_arrays:
+            arr = np.ascontiguousarray(arr)
+            nb = name.encode("utf-8")
+            fh.write(struct.pack("<H", len(nb)))
+            fh.write(nb)
+            fh.write(struct.pack("<BB", DTYPE_CODE[str(arr.dtype)], arr.ndim))
+            for dim in arr.shape:
+                fh.write(struct.pack("<I", dim))
+            fh.write(arr.tobytes())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated program-name prefixes to (re)build")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    global PARAM_SPECS
+    params = M.init_params(jax.random.PRNGKey(0))
+    PARAM_SPECS = make_param_specs(params)
+
+    order = M.param_order()
+    write_lct1(os.path.join(args.out, "weights.bin"),
+               [(n, np.asarray(params[n])) for n in order])
+    print(f"wrote weights.bin ({len(order)} tensors)")
+
+    only = args.only.split(",") if args.only else None
+    manifest_programs = {}
+    t_all = time.time()
+    for name, fn, specs, nouts in build_programs():
+        fname = f"{name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        manifest_programs[name] = {
+            "file": fname,
+            "tuple": nouts > 1,
+            "nouts": nouts,
+            "args": [spec_json(s) for s in specs],
+        }
+        if only and not any(name.startswith(p) for p in only):
+            continue
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered, return_tuple=nouts > 1)
+        with open(path, "w") as fh:
+            fh.write(text)
+        print(f"  {fname:28s} {len(text)/1e3:9.1f} kB  {time.time()-t0:5.1f}s",
+              flush=True)
+
+    manifest = {
+        "model": {
+            "vocab": CFG.vocab, "layers": CFG.layers, "heads": CFG.heads,
+            "head_dim": CFG.head_dim, "d_model": CFG.d_model, "ffn": CFG.ffn,
+            "rope_theta": CFG.rope_theta, "norm_eps": CFG.norm_eps,
+            "layer_tensors": list(M.LAYER_TENSORS),
+            "final_tensors": list(M.FINAL_TENSORS),
+        },
+        "weights": {"file": "weights.bin", "order": order},
+        "buckets": {
+            "batch": list(BATCH_BUCKETS),
+            "attn_m_b1": list(ATTN_M_B1),
+            "attn_m_bn": list(ATTN_M_BN),
+            "prefill_s": list(PREFILL_S),
+            "kvbuf_m": list(KVBUF_M),
+            "gather_n": list(GATHER_N),
+            "pool_sc": [list(x) for x in POOL_SC],
+        },
+        "programs": manifest_programs,
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as fh:
+        json.dump(manifest, fh, indent=1)
+    print(f"wrote manifest.json ({len(manifest_programs)} programs, "
+          f"{time.time()-t_all:.0f}s total)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,78 @@
+"""L1 Pallas kernel: variable-length chunk mean-pooling (index build).
+
+LycheeCluster's index construction computes, for every structure-aware
+chunk, a representative key: the mean of the chunk's (head-merged) token
+keys followed by L2 normalization (paper section 4.3). The paper ships a
+CUDA "variable-length chunk parallel pooling" kernel; this is the TPU
+adaptation (DESIGN.md "Hardware-Adaptation"):
+
+- chunks are contiguous token spans with length <= WMAX (the chunker's
+  max-chunk bound, 16 by default), so instead of a segmented atomic
+  reduction each grid program loads one fixed WMAX-token window starting
+  at the chunk offset and masks the tail - no atomics, MXU-free VPU
+  reduction, one pass over the keys.
+- a chunk starting closer than WMAX to the end of the buffer would make
+  the dynamic slice clamp and shift; the kernel compensates by clamping
+  the window start and offsetting the validity mask.
+
+Inputs:
+  keys   [S, D]  head-merged token keys for one layer.
+  starts [C] int32 chunk start offsets (padded entries: any value).
+  lens   [C] int32 chunk lengths (0 for padded entries).
+
+Output:
+  pooled [C, D]  L2-normalized mean key per chunk (zeros for len==0).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Upper bound on chunk length; must match the Rust chunker's max_chunk.
+DEFAULT_WMAX = 16
+
+
+def _pool_kernel(starts_ref, lens_ref, keys_ref, out_ref, *, wmax: int,
+                 s_total: int):
+    c = pl.program_id(0)
+    start = starts_ref[c]
+    ln = lens_ref[c]
+    # Clamp the window so the dynamic slice never shifts silently, then
+    # offset the in-window validity range accordingly.
+    start_c = jnp.minimum(start, jnp.int32(max(s_total - wmax, 0)))
+    off = start - start_c
+    window = pl.load(keys_ref, (pl.dslice(start_c, wmax), slice(None)))
+    idx = jax.lax.iota(jnp.int32, wmax)
+    valid = jnp.logical_and(idx >= off, idx < off + ln)
+    w = valid.astype(jnp.float32)[:, None]
+    total = jnp.sum(window.astype(jnp.float32) * w, axis=0)
+    mean = total / jnp.maximum(ln.astype(jnp.float32), 1.0)
+    norm = jnp.sqrt(jnp.sum(mean * mean))
+    unit = mean / jnp.maximum(norm, 1e-12)
+    out_ref[0, :] = jnp.where(ln > 0, unit, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("wmax",))
+def chunk_pool(keys, starts, lens, *, wmax: int = DEFAULT_WMAX):
+    """Mean-pool + L2-normalize contiguous chunk spans of `keys`."""
+    s_total, d = keys.shape
+    (c,) = starts.shape
+    assert lens.shape == (c,)
+
+    kernel = functools.partial(_pool_kernel, wmax=wmax, s_total=s_total)
+    return pl.pallas_call(
+        kernel,
+        grid=(c,),
+        in_specs=[
+            pl.BlockSpec((c,), lambda ci: (0,)),
+            pl.BlockSpec((c,), lambda ci: (0,)),
+            pl.BlockSpec((s_total, d), lambda ci: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, d), lambda ci: (ci, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, d), jnp.float32),
+        interpret=True,  # CPU PJRT target.
+    )(starts, lens, keys)

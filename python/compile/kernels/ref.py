@@ -1,0 +1,47 @@
+"""Pure-jnp oracles for the Pallas kernels (build-time correctness only).
+
+Every kernel in this package has an exact reference here; pytest asserts
+allclose between kernel and oracle across shape/mask sweeps (hypothesis).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_sparse_attention(q, k, v, mask):
+    """Reference for kernels.sparse_attn.sparse_attention.
+
+    q [B,H,Dh], k/v [B,M,H,Dh], mask [B,M] -> [B,H,Dh].
+    Fully-masked rows return zeros (matching the kernel contract).
+    """
+    b, h, dh = q.shape
+    scale = 1.0 / float(dh) ** 0.5
+    # [B,H,M]
+    s = jnp.einsum("bhd,bmhd->bhm", q, k).astype(jnp.float32) * scale
+    neg = (1.0 - mask.astype(jnp.float32))[:, None, :] * 1e30
+    s = s - neg
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m) * mask.astype(jnp.float32)[:, None, :]
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhm,bmhd->bhd", p, v.astype(jnp.float32))
+    any_valid = (jnp.sum(mask, axis=-1) > 0)[:, None, None]
+    return jnp.where(any_valid, out / jnp.maximum(l, 1e-30), 0.0)
+
+
+def ref_chunk_pool(keys, starts, lens):
+    """Reference for kernels.chunk_pool.chunk_pool.
+
+    keys [S,D], starts/lens [C] -> pooled [C,D] (L2-normalized means,
+    zeros for empty chunks).
+    """
+    s_total, d = keys.shape
+    idx = jnp.arange(s_total)[None, :]  # [1,S]
+    lo = starts[:, None]
+    hi = (starts + lens)[:, None]
+    sel = ((idx >= lo) & (idx < hi)).astype(jnp.float32)  # [C,S]
+    total = sel @ keys.astype(jnp.float32)  # [C,D]
+    mean = total / jnp.maximum(lens.astype(jnp.float32), 1.0)[:, None]
+    norm = jnp.linalg.norm(mean, axis=-1, keepdims=True)
+    unit = mean / jnp.maximum(norm, 1e-12)
+    return jnp.where((lens > 0)[:, None], unit, 0.0)

@@ -1,0 +1,102 @@
+"""L1 Pallas kernel: budget-padded sparse attention (the decode hot-spot).
+
+The Rust coordinator (L3) retrieves the active KV set for a decode step via
+the hierarchical LycheeCluster index and gathers it into a dense,
+budget-padded buffer ``k/v: [B, M, H, Dh]`` with a validity mask
+``mask: [B, M]`` (1.0 = real token, 0.0 = padding). This kernel computes
+exact multi-head attention of one query token per sequence over that
+active set:
+
+    out[b, h] = sum_i softmax_i(q[b,h] . k[b,i,h] / sqrt(Dh)) * v[b,i,h]
+
+TPU adaptation of the paper's CUDA gathered-attention kernel (see
+DESIGN.md "Hardware-Adaptation"): the grid iterates (batch, head) and the
+M dimension is consumed in BM-sized blocks with an online-softmax
+(running max / running sum) recurrence, i.e. the classic
+flash-attention schedule expressed as an HBM->VMEM block pipeline. With
+``interpret=True`` the same kernel lowers to plain HLO (a while loop over
+blocks) so the Rust PJRT CPU client can execute it; on a real TPU the
+block loop becomes the Mosaic grid over VMEM tiles feeding the MXU.
+
+All-padding blocks are handled exactly: probabilities are multiplied by
+the mask, so a fully-masked active set yields a zero output vector rather
+than NaN.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block size along the active-set dimension M. 128 keys x Dh=32 floats is
+# 16 KiB per ref block - comfortably VMEM-resident alongside q/v/accum.
+DEFAULT_BLOCK_M = 128
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, mask_ref, o_ref, *, bm: int, nm: int,
+                 scale: float):
+    """One (batch, head) program: online-softmax over nm blocks of M."""
+    q = q_ref[0, 0, :].astype(jnp.float32)  # [Dh]
+    dh = q.shape[0]
+
+    def body(i, carry):
+        m_prev, l_prev, acc = carry
+        k_blk = k_ref[0, pl.dslice(i * bm, bm), 0, :].astype(jnp.float32)
+        v_blk = v_ref[0, pl.dslice(i * bm, bm), 0, :].astype(jnp.float32)
+        msk = mask_ref[0, pl.dslice(i * bm, bm)].astype(jnp.float32)  # [bm]
+        # Scores; padding positions are pushed to -inf *and* their
+        # probability mass is zeroed below (robust to all-padding blocks).
+        s = jnp.dot(k_blk, q) * scale + (msk - 1.0) * 1e30
+        m_new = jnp.maximum(m_prev, jnp.max(s))
+        p = jnp.exp(s - m_new) * msk
+        alpha = jnp.exp(m_prev - m_new)
+        l_new = l_prev * alpha + jnp.sum(p)
+        acc_new = acc * alpha + jnp.dot(p, v_blk)
+        return m_new, l_new, acc_new
+
+    init = (jnp.float32(-1e30), jnp.float32(0.0), jnp.zeros((dh,), jnp.float32))
+    _, l_fin, acc = jax.lax.fori_loop(0, nm, body, init)
+    safe_l = jnp.maximum(l_fin, 1e-30)
+    o_ref[0, 0, :] = jnp.where(l_fin > 0.0, acc / safe_l, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m",))
+def sparse_attention(q, k, v, mask, *, block_m: int = DEFAULT_BLOCK_M):
+    """Masked single-query multi-head attention over a padded active set.
+
+    Args:
+      q:    [B, H, Dh] query for the current decode position.
+      k:    [B, M, H, Dh] gathered active keys (padded).
+      v:    [B, M, H, Dh] gathered active values (padded).
+      mask: [B, M] 1.0 for valid tokens, 0.0 for padding.
+
+    Returns:
+      [B, H, Dh] attention output (zeros where the active set is empty).
+    """
+    b, h, dh = q.shape
+    m = k.shape[1]
+    assert k.shape == (b, m, h, dh), (k.shape, (b, m, h, dh))
+    assert v.shape == k.shape
+    assert mask.shape == (b, m)
+    bm = min(block_m, m)
+    assert m % bm == 0, f"M={m} must be a multiple of block_m={bm}"
+    nm = m // bm
+    scale = 1.0 / float(dh) ** 0.5
+
+    kernel = functools.partial(_attn_kernel, bm=bm, nm=nm, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, h),
+        in_specs=[
+            pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+            pl.BlockSpec((1, m, 1, dh), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, m, 1, dh), lambda bi, hi: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, m), lambda bi, hi: (bi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, dh), lambda bi, hi: (bi, hi, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, dh), jnp.float32),
+        interpret=True,  # CPU PJRT target; Mosaic custom-calls cannot run here.
+    )(q, k, v, mask)

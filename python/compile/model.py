@@ -1,0 +1,243 @@
+"""L2: LycheeLM - the JAX model whose decode step the Rust engine drives.
+
+A deliberately small byte-level decoder-only transformer (DESIGN.md
+"Model"). The decode step is *split into per-stage functions* so the Rust
+coordinator can run LycheeCluster retrieval between QKV and attention:
+
+    embed -> [ qkv -> (L3 retrieval) -> sparse_attention -> proj_ffn ] x L
+          -> lm_head
+
+Every stage is AOT-lowered to HLO text by aot.py; weights are runtime
+arguments (kept out of the HLO) written to artifacts/weights.bin.
+
+Conventions:
+  B  batch of decode-step tokens, S prompt length, V vocab (256 bytes)
+  L  layers, H heads, Dh head dim, D = H*Dh model dim, F ffn dim
+  KV layout is token-major [.., M/S, H, Dh] to match the Rust cache.
+  RoPE is applied to both q and k *before* caching, so gathered keys are
+  position-consistent without re-rotation (the Quest/ClusterKV convention).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.sparse_attn import sparse_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    vocab: int = 256
+    layers: int = 4
+    heads: int = 4
+    head_dim: int = 32
+    ffn: int = 512
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-5
+
+    @property
+    def d_model(self) -> int:
+        return self.heads * self.head_dim
+
+
+CFG = ModelConfig()
+
+# Per-layer tensors in canonical order (mirrored by the Rust weights loader).
+LAYER_TENSORS = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")
+FINAL_TENSORS = ("ln_f", "emb")
+
+
+def init_params(key, cfg: ModelConfig = CFG):
+    """Deterministic scaled-gaussian init; returns name -> array dict."""
+    d, f, v = cfg.d_model, cfg.ffn, cfg.vocab
+    params = {}
+    key, ek = jax.random.split(key)
+    params["emb"] = (jax.random.normal(ek, (v, d)) * 0.02).astype(jnp.float32)
+    params["ln_f"] = jnp.ones((d,), jnp.float32)
+    for l in range(cfg.layers):
+        key, *ks = jax.random.split(key, 6)
+        sd_attn = (2.0 / (d + d)) ** 0.5
+        sd_f1 = (2.0 / (d + f)) ** 0.5
+        params[f"l{l}.ln1"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.wq"] = (jax.random.normal(ks[0], (d, d)) * sd_attn).astype(jnp.float32)
+        params[f"l{l}.wk"] = (jax.random.normal(ks[1], (d, d)) * sd_attn).astype(jnp.float32)
+        params[f"l{l}.wv"] = (jax.random.normal(ks[2], (d, d)) * sd_attn).astype(jnp.float32)
+        params[f"l{l}.wo"] = (jax.random.normal(ks[3], (d, d)) * sd_attn / (2 * cfg.layers) ** 0.5).astype(jnp.float32)
+        params[f"l{l}.ln2"] = jnp.ones((d,), jnp.float32)
+        params[f"l{l}.w1"] = (jax.random.normal(ks[4], (d, f)) * sd_f1).astype(jnp.float32)
+        key, k2 = jax.random.split(key)
+        params[f"l{l}.w2"] = (jax.random.normal(k2, (f, d)) * sd_f1 / (2 * cfg.layers) ** 0.5).astype(jnp.float32)
+    return params
+
+
+def param_order(cfg: ModelConfig = CFG):
+    """Flat tensor order used by weights.bin and prefill's argument list."""
+    names = []
+    for l in range(cfg.layers):
+        names.extend(f"l{l}.{t}" for t in LAYER_TENSORS)
+    names.extend(FINAL_TENSORS)
+    return names
+
+
+# ---------------------------------------------------------------------------
+# Numerics shared by stages
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps: float = CFG.norm_eps):
+    ms = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * w
+
+
+def rope(x, pos, theta: float = CFG.rope_theta):
+    """Rotate-half RoPE. x [..., H, Dh], pos int32 [...] (one per row)."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None, None] * freqs  # [..., 1, half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Decode-step stages (each one becomes an HLO artifact)
+# ---------------------------------------------------------------------------
+
+def embed(emb, tokens):
+    """(emb [V,D], tokens i32[B]) -> x [B,D]."""
+    return jnp.take(emb, tokens, axis=0)
+
+
+def qkv(x, ln1, wq, wk, wv, pos, cfg: ModelConfig = CFG):
+    """One layer's pre-attention: RMSNorm + QKV projections + RoPE.
+
+    (x [B,D], ln1 [D], wq/wk/wv [D,D], pos i32[B]) -> q,k,v [B,H,Dh].
+    k/v are what the Rust engine appends to the paged KV cache.
+    """
+    b = x.shape[0]
+    h, dh = cfg.heads, cfg.head_dim
+    xn = rms_norm(x, ln1)
+    q = (xn @ wq).reshape(b, h, dh)
+    k = (xn @ wk).reshape(b, h, dh)
+    v = (xn @ wv).reshape(b, h, dh)
+    return rope(q, pos), rope(k, pos), v
+
+
+def attn(q, k, v, mask):
+    """The L1 Pallas kernel, lowered into this stage's HLO."""
+    return sparse_attention(q, k, v, mask)
+
+
+def proj_ffn(attn_out, x_resid, wo, ln2, w1, w2):
+    """Post-attention: output proj + residual + FFN + residual.
+
+    (attn_out [B,H,Dh], x_resid [B,D], wo [D,D], ln2 [D], w1 [D,F],
+     w2 [F,D]) -> x [B,D].
+    """
+    b = attn_out.shape[0]
+    x1 = x_resid + attn_out.reshape(b, -1) @ wo
+    hidden = jax.nn.gelu(rms_norm(x1, ln2) @ w1)
+    return x1 + hidden @ w2
+
+
+def lm_head(x, ln_f, emb):
+    """(x [B,D], ln_f [D], emb [V,D]) -> logits [B,V] (tied embeddings)."""
+    return rms_norm(x, ln_f) @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# KV-cache device programs (keep KV device-resident on the Rust side)
+# ---------------------------------------------------------------------------
+
+def append_kv(buf, new, pos):
+    """(buf [Mmax,H,Dh], new [H,Dh], pos i32) -> buf with row pos replaced."""
+    return jax.lax.dynamic_update_slice(buf, new[None], (pos, 0, 0))
+
+
+def gather_kv(buf, idx):
+    """(buf [Mmax,H,Dh], idx i32[M]) -> gathered [M,H,Dh].
+
+    Device-side gather of the retrieved active set; the Rust engine only
+    uploads the M int32 indices, never KV bytes (perf-critical).
+    """
+    return jnp.take(buf, idx, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# Prefill (full causal attention; the paper does not accelerate prefill)
+# ---------------------------------------------------------------------------
+
+def prefill(flat_params, tokens, length, cfg: ModelConfig = CFG):
+    """Process a (padded) prompt, producing the KV cache and next logits.
+
+    Args:
+      flat_params: tensors in param_order(cfg).
+      tokens: i32[S] prompt, padded to the bucket size.
+      length: i32 scalar, number of valid tokens (1..S).
+
+    Returns:
+      (k_cache [L,S,H,Dh], v_cache [L,S,H,Dh], x_last [D], logits [V])
+    """
+    named = dict(zip(param_order(cfg), flat_params))
+    s = tokens.shape[0]
+    h, dh = cfg.heads, cfg.head_dim
+    scale = 1.0 / float(dh) ** 0.5
+    pos = jnp.arange(s, dtype=jnp.int32)
+    valid = pos < length
+
+    x = jnp.take(named["emb"], tokens, axis=0)  # [S,D]
+    ks, vs = [], []
+    causal = pos[None, :] <= pos[:, None]  # [S(q),S(k)]
+    attn_mask = causal & valid[None, :]
+    for l in range(cfg.layers):
+        p = lambda t: named[f"l{l}.{t}"]  # noqa: B023
+        xn = rms_norm(x, p("ln1"))
+        q = rope((xn @ p("wq")).reshape(s, h, dh), pos)
+        k = rope((xn @ p("wk")).reshape(s, h, dh), pos)
+        v = (xn @ p("wv")).reshape(s, h, dh)
+        scores = jnp.einsum("qhd,khd->hqk", q, k) * scale
+        scores = jnp.where(attn_mask[None], scores, -1e30)
+        probs = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("hqk,khd->qhd", probs, v).reshape(s, -1)
+        x = x + o @ p("wo")
+        hidden = jax.nn.gelu(rms_norm(x, p("ln2")) @ p("w1"))
+        x = x + hidden @ p("w2")
+        ks.append(k)
+        vs.append(v)
+    k_cache = jnp.stack(ks)  # [L,S,H,Dh]
+    v_cache = jnp.stack(vs)
+    x_last = jnp.take(x, length - 1, axis=0)  # [D]
+    logits = rms_norm(x_last, named["ln_f"]) @ named["emb"].T
+    return k_cache, v_cache, x_last, logits
+
+
+# ---------------------------------------------------------------------------
+# Reference full decode step (used by tests to validate stage composition)
+# ---------------------------------------------------------------------------
+
+def decode_step_reference(params, token, position, k_cache, v_cache, n_valid,
+                          cfg: ModelConfig = CFG):
+    """Full-attention decode step composed from the stage functions.
+
+    k_cache/v_cache: [L, Mmax, H, Dh] with rows [0, n_valid) valid.
+    Returns (logits [V], new_k [L,H,Dh], new_v [L,H,Dh]).
+    """
+    mmax = k_cache.shape[1]
+    x = embed(params["emb"], token[None])  # [1,D]
+    pos = position[None]
+    new_ks, new_vs = [], []
+    for l in range(cfg.layers):
+        p = lambda t: params[f"l{l}.{t}"]  # noqa: B023
+        q, k, v = qkv(x, p("ln1"), p("wq"), p("wk"), p("wv"), pos, cfg)
+        kc = jax.lax.dynamic_update_slice(k_cache[l], k, (n_valid, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[l], v, (n_valid, 0, 0))
+        mask = (jnp.arange(mmax) <= n_valid).astype(jnp.float32)[None]
+        o = attn(q, kc[None], vc[None], mask)
+        x = proj_ffn(o, x, p("wo"), p("ln2"), p("w1"), p("w2"))
+        new_ks.append(k[0])
+        new_vs.append(v[0])
+    logits = lm_head(x, params["ln_f"], params["emb"])[0]
+    return logits, jnp.stack(new_ks), jnp.stack(new_vs)

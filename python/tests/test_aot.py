@@ -1,0 +1,102 @@
+"""AOT pipeline tests: HLO-text emission and the LCT1 weights container."""
+
+import json
+import os
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_emits_parseable_module():
+    lowered = jax.jit(lambda x, y: x @ y + 1.0).lower(
+        jax.ShapeDtypeStruct((4, 4), jnp.float32),
+        jax.ShapeDtypeStruct((4, 4), jnp.float32))
+    text = aot.to_hlo_text(lowered, return_tuple=False)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_to_hlo_text_tuple_root():
+    lowered = jax.jit(lambda x: (x + 1.0, x * 2.0)).lower(
+        jax.ShapeDtypeStruct((2,), jnp.float32))
+    text = aot.to_hlo_text(lowered, return_tuple=True)
+    assert "tuple" in text.lower()
+
+
+def read_lct1(path):
+    out = {}
+    with open(path, "rb") as fh:
+        assert fh.read(4) == b"LCT1"
+        (count,) = struct.unpack("<I", fh.read(4))
+        for _ in range(count):
+            (nlen,) = struct.unpack("<H", fh.read(2))
+            name = fh.read(nlen).decode()
+            dt, nd = struct.unpack("<BB", fh.read(2))
+            dims = struct.unpack(f"<{nd}I", fh.read(4 * nd))
+            dtype = np.float32 if dt == 0 else np.int32
+            n = int(np.prod(dims)) if nd else 1
+            data = np.frombuffer(fh.read(4 * n), dtype=dtype).reshape(dims)
+            out[name] = data
+    return out
+
+
+def test_lct1_round_trip(tmp_path):
+    rng = np.random.default_rng(0)
+    tensors = [
+        ("a", rng.normal(size=(3, 4)).astype(np.float32)),
+        ("b.ln", np.arange(7, dtype=np.float32)),
+        ("c_idx", np.array([[1, 2], [3, 4]], np.int32)),
+    ]
+    path = tmp_path / "w.bin"
+    aot.write_lct1(path, tensors)
+    back = read_lct1(path)
+    assert list(back.keys()) == ["a", "b.ln", "c_idx"]
+    for name, arr in tensors:
+        np.testing.assert_array_equal(back[name], arr)
+
+
+def test_build_programs_covers_all_stages():
+    aot.PARAM_SPECS = aot.make_param_specs(M.init_params(jax.random.PRNGKey(0)))
+    progs = {name for name, *_ in aot.build_programs()}
+    for b in aot.BATCH_BUCKETS:
+        for stem in ("embed", "qkv", "proj_ffn", "lm_head"):
+            assert f"{stem}_b{b}" in progs
+    for m in aot.ATTN_M_B1:
+        assert f"attn_b1_m{m}" in progs
+    for s in aot.PREFILL_S:
+        assert f"prefill_s{s}" in progs
+    for mm in aot.KVBUF_M:
+        assert f"append_m{mm}" in progs
+
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+                    reason="run `make artifacts` first")
+def test_manifest_programs_exist_on_disk():
+    with open(os.path.join(ARTIFACTS, "manifest.json")) as fh:
+        manifest = json.load(fh)
+    assert manifest["model"]["d_model"] == M.CFG.d_model
+    for name, meta in manifest["programs"].items():
+        path = os.path.join(ARTIFACTS, meta["file"])
+        assert os.path.exists(path), f"missing artifact {name}"
+        with open(path) as fh:
+            head = fh.read(256)
+        assert "HloModule" in head
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ARTIFACTS, "weights.bin")),
+                    reason="run `make artifacts` first")
+def test_weights_bin_matches_param_order():
+    back = read_lct1(os.path.join(ARTIFACTS, "weights.bin"))
+    assert list(back.keys()) == M.param_order()
+    params = M.init_params(jax.random.PRNGKey(0))
+    for n in M.param_order():
+        np.testing.assert_allclose(back[n], np.asarray(params[n]), rtol=1e-6)

@@ -1,0 +1,86 @@
+"""Pallas chunk-pool kernel vs pure-jnp oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.chunk_pool import chunk_pool
+from compile.kernels.ref import ref_chunk_pool
+
+
+def make_chunks(rng, s, c, wmax=16):
+    """Contiguous non-overlapping spans like the Rust chunker emits."""
+    starts = np.zeros(c, np.int32)
+    lens = np.zeros(c, np.int32)
+    cur = 0
+    for i in range(c):
+        if cur >= s:
+            break
+        ln = int(rng.integers(1, wmax + 1))
+        ln = min(ln, s - cur)
+        starts[i], lens[i] = cur, ln
+        cur += ln
+    return jnp.asarray(starts), jnp.asarray(lens)
+
+
+def check(keys, starts, lens):
+    out = chunk_pool(keys, starts, lens)
+    ref = ref_chunk_pool(keys, starts, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    s=st.sampled_from([64, 128, 512]),
+    c=st.sampled_from([8, 32, 128]),
+    d=st.sampled_from([16, 64, 128]),
+)
+def test_hypothesis_sweep(seed, s, c, d):
+    rng = np.random.default_rng(seed)
+    keys = jnp.asarray(rng.normal(size=(s, d)), jnp.float32)
+    starts, lens = make_chunks(rng, s, c)
+    check(keys, starts, lens)
+
+
+def test_output_is_unit_norm():
+    rng = np.random.default_rng(0)
+    keys = jnp.asarray(rng.normal(size=(128, 32)), jnp.float32)
+    starts, lens = make_chunks(rng, 128, 16)
+    out = np.asarray(chunk_pool(keys, starts, lens))
+    norms = np.linalg.norm(out, axis=-1)
+    valid = np.asarray(lens) > 0
+    np.testing.assert_allclose(norms[valid], 1.0, rtol=1e-5)
+    assert np.all(out[~valid] == 0.0)
+
+
+def test_tail_chunk_near_buffer_end():
+    """A chunk within WMAX of the end must not be shifted by slice clamping."""
+    rng = np.random.default_rng(1)
+    keys = jnp.asarray(rng.normal(size=(128, 16)), jnp.float32)
+    starts = jnp.asarray(np.array([123], np.int32))
+    lens = jnp.asarray(np.array([5], np.int32))
+    check(keys, starts, lens)
+
+
+def test_single_token_chunk_is_normalized_key():
+    rng = np.random.default_rng(2)
+    keys = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    starts = jnp.asarray(np.array([10], np.int32))
+    lens = jnp.asarray(np.array([1], np.int32))
+    out = np.asarray(chunk_pool(keys, starts, lens))[0]
+    k = np.asarray(keys)[10]
+    np.testing.assert_allclose(out, k / np.linalg.norm(k), rtol=1e-5)
+
+
+@pytest.mark.parametrize("wmax", [4, 8, 16])
+def test_wmax_variants(wmax):
+    rng = np.random.default_rng(3)
+    keys = jnp.asarray(rng.normal(size=(256, 32)), jnp.float32)
+    starts, lens = make_chunks(rng, 256, 32, wmax=wmax)
+    out = chunk_pool(keys, starts, lens, wmax=wmax)
+    ref = ref_chunk_pool(keys, starts, lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)

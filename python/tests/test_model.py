@@ -1,0 +1,161 @@
+"""L2 model correctness: stage composition == monolithic prefill.
+
+The critical invariant for the Rust engine: running the *per-stage*
+decode-step programs (embed/qkv/attn/proj_ffn/lm_head) with a
+full-attention active set must reproduce the logits that the monolithic
+prefill program computes - i.e. the stage split introduces no numerical
+divergence beyond float tolerance.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.CFG
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(0))
+
+
+def test_param_order_matches_dict(params):
+    order = M.param_order()
+    assert len(order) == CFG.layers * len(M.LAYER_TENSORS) + len(M.FINAL_TENSORS)
+    assert set(order) == set(params.keys())
+
+
+def test_rope_preserves_norm():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(4, CFG.heads, CFG.head_dim)), jnp.float32)
+    pos = jnp.asarray([0, 1, 77, 4096], jnp.int32)
+    y = M.rope(x, pos)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(y), axis=-1),
+        np.linalg.norm(np.asarray(x), axis=-1), rtol=1e-5)
+
+
+def test_rope_relative_property():
+    """<rope(q,i), rope(k,j)> depends only on i-j."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 1, CFG.head_dim)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(1, 1, CFG.head_dim)), jnp.float32)
+
+    def dot(i, j):
+        qi = M.rope(q, jnp.asarray([i], jnp.int32))
+        kj = M.rope(k, jnp.asarray([j], jnp.int32))
+        return float(jnp.sum(qi * kj))
+
+    assert abs(dot(5, 3) - dot(105, 103)) < 1e-3
+    assert abs(dot(17, 0) - dot(1017, 1000)) < 1e-3
+
+
+def test_rope_position_zero_is_identity():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(1, 2, CFG.head_dim)), jnp.float32)
+    y = M.rope(x, jnp.asarray([0], jnp.int32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x), rtol=1e-6)
+
+
+def test_rms_norm_scale_invariant_direction():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(8,)), jnp.float32)
+    w = jnp.ones((8,), jnp.float32)
+    a, b = M.rms_norm(x, w), M.rms_norm(3.0 * x, w)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4)
+
+
+def _run_prefill(params, tokens, length, s_bucket):
+    padded = np.zeros(s_bucket, np.int32)
+    padded[: len(tokens)] = tokens
+    flat = [params[n] for n in M.param_order()]
+    return M.prefill(flat, jnp.asarray(padded), jnp.int32(length))
+
+
+def test_prefill_padding_invariance(params):
+    """Prefill result must not depend on bucket padding."""
+    rng = np.random.default_rng(4)
+    toks = rng.integers(0, 256, size=20).astype(np.int32)
+    k1, v1, x1, lg1 = _run_prefill(params, toks, 20, 32)
+    k2, v2, x2, lg2 = _run_prefill(params, toks, 20, 64)
+    np.testing.assert_allclose(np.asarray(lg1), np.asarray(lg2), atol=1e-4)
+    np.testing.assert_allclose(np.asarray(k1)[:, :20], np.asarray(k2)[:, :20],
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(x1), np.asarray(x2), atol=1e-4)
+
+
+def test_stage_composition_matches_prefill(params):
+    """Decode token t via stages (full active set) == prefill at length t+1."""
+    rng = np.random.default_rng(5)
+    n = 24
+    toks = rng.integers(0, 256, size=n).astype(np.int32)
+    s_bucket = 32
+    mmax = 64
+
+    # Ground truth: prefill over the first t tokens gives logits for token t.
+    k_pre, v_pre, _, logits_pre = _run_prefill(params, toks, n, s_bucket)
+
+    # Stage path: prefill first n-1 tokens, then decode token n-1 by stages.
+    k_c, v_c, _, _ = _run_prefill(params, toks, n - 1, s_bucket)
+    k_cache = np.zeros((CFG.layers, mmax, CFG.heads, CFG.head_dim), np.float32)
+    v_cache = np.zeros_like(k_cache)
+    k_cache[:, : n - 1] = np.asarray(k_c)[:, : n - 1]
+    v_cache[:, : n - 1] = np.asarray(v_c)[:, : n - 1]
+
+    logits, new_k, new_v = M.decode_step_reference(
+        params, jnp.asarray(toks[n - 1]), jnp.int32(n - 1),
+        jnp.asarray(k_cache), jnp.asarray(v_cache), jnp.int32(n - 1))
+
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(logits_pre),
+                               rtol=1e-3, atol=1e-3)
+    # The k/v the decode step produces must match prefill's row n-1.
+    np.testing.assert_allclose(np.asarray(new_k), np.asarray(k_pre)[:, n - 1],
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(new_v), np.asarray(v_pre)[:, n - 1],
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_multi_step_stage_decode_matches_prefill(params):
+    """Greedy 6-step stage decode == prefill-recomputed logits each step."""
+    rng = np.random.default_rng(6)
+    n0, steps = 12, 6
+    toks = list(rng.integers(0, 256, size=n0).astype(np.int32))
+    mmax = 64
+    k_c, v_c, _, logits = _run_prefill(params, np.asarray(toks), n0, 32)
+    k_cache = np.zeros((CFG.layers, mmax, CFG.heads, CFG.head_dim), np.float32)
+    v_cache = np.zeros_like(k_cache)
+    k_cache[:, :n0] = np.asarray(k_c)[:, :n0]
+    v_cache[:, :n0] = np.asarray(v_c)[:, :n0]
+
+    cur = int(np.argmax(np.asarray(logits)))
+    for t in range(steps):
+        pos = n0 + t
+        logits_s, nk, nv = M.decode_step_reference(
+            params, jnp.asarray(cur, jnp.int32), jnp.int32(pos),
+            jnp.asarray(k_cache), jnp.asarray(v_cache), jnp.int32(pos))
+        k_cache[:, pos] = np.asarray(nk)
+        v_cache[:, pos] = np.asarray(nv)
+        toks.append(cur)
+        # oracle: full prefill over toks (length pos+1) gives same logits
+        _, _, _, logits_o = _run_prefill(params, np.asarray(toks), pos + 1, 32)
+        np.testing.assert_allclose(np.asarray(logits_s), np.asarray(logits_o),
+                                   rtol=2e-3, atol=2e-3)
+        cur = int(np.argmax(np.asarray(logits_s)))
+
+
+def test_qkv_rope_consistency(params):
+    """qkv() applies RoPE at the given positions (cache convention)."""
+    rng = np.random.default_rng(7)
+    x = jnp.asarray(rng.normal(size=(2, CFG.d_model)), jnp.float32)
+    p = lambda t: params[f"l0.{t}"]
+    q0, k0, _ = M.qkv(x, p("ln1"), p("wq"), p("wk"), p("wv"),
+                      jnp.asarray([0, 0], jnp.int32))
+    q5, k5, _ = M.qkv(x, p("ln1"), p("wq"), p("wk"), p("wv"),
+                      jnp.asarray([5, 9], jnp.int32))
+    expect_q5 = M.rope(q0, jnp.asarray([5, 9], jnp.int32))
+    np.testing.assert_allclose(np.asarray(q5), np.asarray(expect_q5),
+                               rtol=1e-4, atol=1e-5)
+    assert not np.allclose(np.asarray(k0), np.asarray(k5))

@@ -1,0 +1,236 @@
+//! Benchmark harness (criterion is unavailable offline; this is a
+//! self-contained warmup+iterations harness with mean/p50/p99 reporting).
+//!
+//! One bench section per paper table/figure plus the design-choice
+//! ablations called out in DESIGN.md:
+//!   retrieval_micro      — UB-pruned hierarchical search vs flat scan
+//!   ablation_tiers       — 3-tier vs 2-tier (flat clusters)
+//!   ablation_update      — lazy graft vs periodic full re-clustering
+//!   kmeans               — spherical k-means build cost
+//!   chunking             — segmentation throughput
+//!   kvcache_gather       — paged-cache gather into budget buffers
+//!   fig4_tpot            — end-to-end decode TPOT (engine + PJRT)
+//!   serving_throughput   — batched coordinator throughput
+//!
+//! Run with `cargo bench` (all) or `cargo bench -- <filter>`.
+
+use lychee::chunking::{Chunker, FixedSizeChunker, StructureAwareChunker};
+use lychee::config::{Config, LycheeConfig};
+use lychee::index::hierarchy::{HierarchicalIndex, IndexParams};
+use lychee::index::kmeans::spherical_kmeans;
+use lychee::index::reps::FlatKeys;
+use lychee::kvcache::KvCache;
+use lychee::sparse::{make_policy, Ctx};
+use lychee::util::rng::Rng;
+use lychee::util::stats::Summary;
+use lychee::workloads::trace::prompt_text;
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = std::time::Instant::now();
+        f();
+        samples.push(t.elapsed().as_secs_f64() * 1e6);
+    }
+    let s = Summary::of(&samples);
+    println!(
+        "{name:<44} mean {m:>10.1} µs   p50 {p50:>10.1}   p99 {p99:>10.1}   n={n}",
+        m = s.mean,
+        p50 = s.p50,
+        p99 = s.p99,
+        n = s.n
+    );
+}
+
+fn filter_match(name: &str) -> bool {
+    let args: Vec<String> = std::env::args().skip(1).filter(|a| !a.starts_with('-')).collect();
+    args.is_empty() || args.iter().any(|a| name.contains(a.as_str()))
+}
+
+fn section(name: &str) -> bool {
+    let run = filter_match(name);
+    if run {
+        println!("\n--- {name} ---");
+    }
+    run
+}
+
+fn main() {
+    println!("lychee bench harness (custom; see rust/benches/bench_main.rs)");
+
+    let mut rng = Rng::new(0xBE9C4);
+    let d = 32;
+
+    // shared corpus: 32k tokens of mixed text + synthetic keys
+    let n = 32 * 1024;
+    let text = prompt_text(n, 1);
+    let keys: Vec<f32> = rng.normal_vec(n * d);
+    let src = FlatKeys::new(&keys, d);
+    let chunker = StructureAwareChunker::new(16, 64);
+    let spans = chunker.chunk(&text);
+
+    if section("chunking") {
+        bench("structure-aware chunk 32k bytes", 2, 20, || {
+            std::hint::black_box(chunker.chunk(&text));
+        });
+        let fx = FixedSizeChunker::new(48);
+        bench("fixed-48 chunk 32k bytes", 2, 20, || {
+            std::hint::black_box(fx.chunk(&text));
+        });
+    }
+
+    if section("kmeans") {
+        let reps: Vec<f32> = rng.normal_vec(1000 * d);
+        bench("spherical k-means 1000x32 k=500 it=10", 1, 10, || {
+            std::hint::black_box(spherical_kmeans(&reps, d, 500, 10, 1));
+        });
+    }
+
+    let index = HierarchicalIndex::build(&src, &spans, IndexParams::default());
+    println!(
+        "index: {} chunks, {} clusters, {} units over {} tokens",
+        index.num_chunks(),
+        index.num_clusters(),
+        index.num_units(),
+        index.num_tokens()
+    );
+
+    if section("retrieval_micro") {
+        let q = rng.unit_vec(d);
+        bench("hierarchical UB search (kg=8,kc=64,B=960)", 5, 200, || {
+            std::hint::black_box(index.select_tokens(&q, 8, 64, 960));
+        });
+        bench("flat chunk scan (ablation_ub)", 5, 200, || {
+            std::hint::black_box(index.select_tokens_flat(&q, 960));
+        });
+    }
+
+    if section("ablation_tiers") {
+        let q = rng.unit_vec(d);
+        // 2-tier = skip coarse pruning: kg = all units
+        bench("3-tier (kg=8)", 5, 200, || {
+            std::hint::black_box(index.select_tokens(&q, 8, 64, 960));
+        });
+        let all_units = index.num_units();
+        bench("2-tier (kg=all units)", 5, 200, || {
+            std::hint::black_box(index.select_tokens(&q, all_units, 64, 960));
+        });
+    }
+
+    if section("ablation_update") {
+        let mut idx = index.clone();
+        let mut r2 = Rng::new(7);
+        let mut next = n;
+        bench("lazy graft (1 dynamic chunk)", 5, 200, || {
+            idx.graft_rep(
+                lychee::chunking::Chunk { start: next, len: 48 },
+                r2.unit_vec(d),
+            );
+            next += 48;
+        });
+        let mut idx2 = index.clone();
+        bench("full re-cluster (the avoided cost)", 0, 3, || {
+            idx2.recluster();
+        });
+    }
+
+    if section("kvcache_gather") {
+        let mut cache = KvCache::new(4, 4, 32);
+        let mut r3 = Rng::new(9);
+        for _ in 0..16 * 1024 {
+            let kr: Vec<Vec<f32>> = (0..4).map(|_| r3.normal_vec(128)).collect();
+            let krr: Vec<&[f32]> = kr.iter().map(|r| r.as_slice()).collect();
+            cache.append_token(&krr, &krr).unwrap();
+        }
+        let idx: Vec<usize> = (0..1024).map(|i| (i * 16) % (16 * 1024)).collect();
+        let (mut k, mut v, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        bench("gather 1024 rows into 1024-bucket", 5, 200, || {
+            cache.gather(0, &idx, 1024, &mut k, &mut v, &mut m);
+            std::hint::black_box(&k);
+        });
+    }
+
+    if section("policies_select") {
+        let cfg = LycheeConfig::default();
+        for name in ["lychee", "quest", "clusterkv", "arkvale", "shadowkv"] {
+            let mut p = make_policy(name, &cfg, 1, 4).unwrap();
+            let ctx = Ctx { keys: &src, text: &text, n };
+            p.build(&ctx);
+            let q = rng.normal_vec(d);
+            bench(&format!("{name} select @32k budget=1024"), 3, 100, || {
+                std::hint::black_box(p.select(&ctx, &q, n));
+            });
+        }
+    }
+
+    // engine benches need artifacts
+    let mut cfg = Config::new();
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        let alt = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if alt.join("manifest.json").exists() {
+            cfg.artifacts_dir = alt.to_str().unwrap().to_string();
+        } else {
+            println!("\n(artifacts missing: skipping fig4_tpot / serving benches)");
+            return;
+        }
+    }
+
+    if section("fig4_tpot") {
+        let engine = lychee::engine::Engine::load(cfg.clone()).unwrap();
+        let sampling = lychee::engine::Sampling::default();
+        for ctx_len in [8 * 1024usize, 32 * 1024] {
+            for policy in ["full", "lychee"] {
+                let mut seq = engine.synth_sequence(1, ctx_len, policy, 3).unwrap();
+                engine.decode_step(&mut seq, &sampling).unwrap();
+                bench(
+                    &format!("decode step {policy} @{}k", ctx_len / 1024),
+                    1,
+                    5,
+                    || {
+                        engine.decode_step(&mut seq, &sampling).unwrap();
+                    },
+                );
+            }
+        }
+    }
+
+    if section("serving_throughput") {
+        let (handle, metrics, join) = lychee::coordinator::spawn(cfg).unwrap();
+        let t0 = std::time::Instant::now();
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            rxs.push(
+                handle
+                    .submit(lychee::coordinator::Request {
+                        id: i,
+                        prompt: prompt_text(256, i),
+                        max_new_tokens: 16,
+                        policy: "lychee".into(),
+                    })
+                    .unwrap(),
+            );
+        }
+        for rx in rxs {
+            for ev in rx {
+                if matches!(ev, lychee::coordinator::Event::Done(_) | lychee::coordinator::Event::Error(_)) {
+                    break;
+                }
+            }
+        }
+        let el = t0.elapsed().as_secs_f64();
+        let m = metrics.lock().unwrap();
+        println!(
+            "serving: 8 reqs x 16 toks in {el:.2}s -> {:.1} tok/s (p50 TPOT {:.1} ms)",
+            m.throughput_tokens_per_s(el),
+            m.tpot_us.quantile(0.5) / 1e3
+        );
+        drop(m);
+        handle.shutdown();
+        let _ = join.join();
+    }
+
+    println!("\nbench harness done.");
+}

@@ -1,0 +1,174 @@
+//! Exact attention oracle (pure Rust, numerically careful).
+//!
+//! Serves three roles: (1) ground truth for the Recall Rate metric
+//! (paper Table 3: fraction of the true top-k attention tokens a policy
+//! retrieves within budget), (2) correctness oracle for the PJRT/Pallas
+//! kernel in integration tests, (3) the scoring core that eviction
+//! baselines (H2O, RaaS) feed on.
+
+use crate::index::reps::KeySource;
+use crate::linalg;
+
+/// Softmax attention weights of query `q` over keys `[0, n)` from a key
+/// source (head-merged dim-d rows). `scale` is usually 1/sqrt(head_dim)
+/// — on merged rows the per-head softmax structure is collapsed; for
+/// oracle purposes the merged form preserves the ranking the index sees.
+pub fn attention_weights(q: &[f32], keys: &dyn KeySource, n: usize, scale: f32) -> Vec<f32> {
+    let mut scores: Vec<f32> = (0..n).map(|t| linalg::dot(q, keys.key(t)) * scale).collect();
+    linalg::softmax(&mut scores);
+    scores
+}
+
+/// Attention weights over an arbitrary token subset (the sparse path);
+/// returns (token, weight) pairs with weights renormalized over the set.
+pub fn sparse_attention_weights(
+    q: &[f32],
+    keys: &dyn KeySource,
+    tokens: &[usize],
+    scale: f32,
+) -> Vec<(usize, f32)> {
+    let mut scores: Vec<f32> = tokens
+        .iter()
+        .map(|&t| linalg::dot(q, keys.key(t)) * scale)
+        .collect();
+    linalg::softmax(&mut scores);
+    tokens.iter().copied().zip(scores).collect()
+}
+
+/// Ground-truth top-k attention token ids (descending weight).
+pub fn top_attention_tokens(q: &[f32], keys: &dyn KeySource, n: usize, k: usize, scale: f32) -> Vec<usize> {
+    let w = attention_weights(q, keys, n, scale);
+    linalg::top_k(&w, k)
+}
+
+/// Weighted value sum using full attention: `out = Σ softmax(q·K) · V`.
+/// `values` indexed like `keys`. The reference output for kernel checks.
+pub fn full_attention_output(
+    q: &[f32],
+    keys: &dyn KeySource,
+    values: &dyn KeySource,
+    n: usize,
+    scale: f32,
+) -> Vec<f32> {
+    let w = attention_weights(q, keys, n, scale);
+    let mut out = vec![0.0f32; values.dim()];
+    for (t, &wt) in w.iter().enumerate() {
+        linalg::axpy(&mut out, wt, values.key(t));
+    }
+    out
+}
+
+/// Sparse attention output over a token subset.
+pub fn sparse_attention_output(
+    q: &[f32],
+    keys: &dyn KeySource,
+    values: &dyn KeySource,
+    tokens: &[usize],
+    scale: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; values.dim()];
+    if tokens.is_empty() {
+        return out;
+    }
+    for (t, w) in sparse_attention_weights(q, keys, tokens, scale) {
+        linalg::axpy(&mut out, w, values.key(t));
+    }
+    out
+}
+
+/// Recall Rate (paper Table 3): |retrieved ∩ true-top-k| / k where
+/// true-top-k are the ground-truth highest-attention tokens.
+pub fn recall_rate(
+    q: &[f32],
+    keys: &dyn KeySource,
+    n: usize,
+    retrieved: &[usize],
+    k: usize,
+    scale: f32,
+) -> f64 {
+    let k = k.min(n);
+    if k == 0 {
+        return 1.0;
+    }
+    let truth = top_attention_tokens(q, keys, n, k, scale);
+    let set: std::collections::HashSet<usize> = retrieved.iter().copied().collect();
+    truth.iter().filter(|t| set.contains(t)).count() as f64 / k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn weights_sum_to_one() {
+        let mut rng = Rng::new(0);
+        let data = rng.normal_vec(32 * 8);
+        let keys = FlatKeys::new(&data, 8);
+        let q = rng.normal_vec(8);
+        let w = attention_weights(&q, &keys, 32, 0.35);
+        assert!((w.iter().sum::<f32>() - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn aligned_key_dominates() {
+        let mut data = vec![0.0f32; 16 * 4];
+        data[5 * 4] = 5.0; // token 5 = [5,0,0,0]
+        let keys = FlatKeys::new(&data, 4);
+        let q = [3.0, 0.0, 0.0, 0.0];
+        let w = attention_weights(&q, &keys, 16, 1.0);
+        assert_eq!(linalg::argmax(&w), 5);
+        assert!(w[5] > 0.9);
+    }
+
+    #[test]
+    fn sparse_weights_renormalize() {
+        let mut rng = Rng::new(1);
+        let data = rng.normal_vec(20 * 4);
+        let keys = FlatKeys::new(&data, 4);
+        let q = rng.normal_vec(4);
+        let subset = vec![1, 5, 9];
+        let sw = sparse_attention_weights(&q, &keys, &subset, 0.5);
+        let total: f32 = sw.iter().map(|(_, w)| w).sum();
+        assert!((total - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn sparse_equals_full_when_subset_is_everything() {
+        let mut rng = Rng::new(2);
+        let kd = rng.normal_vec(12 * 4);
+        let vd = rng.normal_vec(12 * 4);
+        let keys = FlatKeys::new(&kd, 4);
+        let values = FlatKeys::new(&vd, 4);
+        let q = rng.normal_vec(4);
+        let full = full_attention_output(&q, &keys, &values, 12, 0.5);
+        let all: Vec<usize> = (0..12).collect();
+        let sparse = sparse_attention_output(&q, &keys, &values, &all, 0.5);
+        for (a, b) in full.iter().zip(&sparse) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn recall_rate_bounds() {
+        let mut rng = Rng::new(3);
+        let data = rng.normal_vec(64 * 8);
+        let keys = FlatKeys::new(&data, 8);
+        let q = rng.normal_vec(8);
+        let all: Vec<usize> = (0..64).collect();
+        assert!((recall_rate(&q, &keys, 64, &all, 16, 0.35) - 1.0).abs() < 1e-12);
+        assert_eq!(recall_rate(&q, &keys, 64, &[], 16, 0.35), 0.0);
+        let truth = top_attention_tokens(&q, &keys, 64, 16, 0.35);
+        let half = &truth[..8];
+        assert!((recall_rate(&q, &keys, 64, half, 16, 0.35) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_subset_gives_zero_output() {
+        let data = vec![1.0f32; 4];
+        let keys = FlatKeys::new(&data, 4);
+        let out = sparse_attention_output(&[1.0, 0.0, 0.0, 0.0], &keys, &keys, &[], 1.0);
+        assert_eq!(out, vec![0.0; 4]);
+    }
+}

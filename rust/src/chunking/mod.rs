@@ -1,0 +1,391 @@
+//! Context segmentation strategies.
+//!
+//! The paper's core observation (§3) is that the *atomic unit of
+//! retrieval* matters as much as the scoring metric: fixed-size pages
+//! sever semantic units, token-level clustering scatters them. This
+//! module implements:
+//!
+//! - [`StructureAwareChunker`] — the paper's boundary-aware segmentation
+//!   (Algorithm 1 / Appendix B): greedy accumulation to a minimum length,
+//!   then a look-ahead for the strongest natural delimiter within the
+//!   window, with a forced split at the maximum length.
+//! - [`FixedSizeChunker`] — the Quest-style page baseline.
+//! - [`SentenceChunker`] — the SentenceKV-style punctuation baseline
+//!   (no window constraints; suffers on structured data, reproduced in
+//!   the Fig. 2 pilot).
+
+use crate::tokenizer::{boundary_level, DelimiterLevel};
+
+/// A contiguous token span `[start, start+len)`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Chunk {
+    pub start: usize,
+    pub len: usize,
+}
+
+impl Chunk {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+
+    pub fn contains(&self, tok: usize) -> bool {
+        tok >= self.start && tok < self.end()
+    }
+}
+
+/// A segmentation strategy over a byte/token stream.
+pub trait Chunker: Send + Sync {
+    /// Partition `bytes` into contiguous, non-overlapping, covering chunks.
+    fn chunk(&self, bytes: &[u8]) -> Vec<Chunk>;
+
+    fn name(&self) -> &'static str;
+}
+
+/// Paper §4.3: boundary-aware segmentation with `[min_len, max_len]`
+/// window constraints (defaults 8/16, Appendix A).
+#[derive(Clone, Debug)]
+pub struct StructureAwareChunker {
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Default for StructureAwareChunker {
+    fn default() -> Self {
+        StructureAwareChunker { min_len: 8, max_len: 16 }
+    }
+}
+
+impl StructureAwareChunker {
+    pub fn new(min_len: usize, max_len: usize) -> Self {
+        assert!(min_len >= 1 && max_len >= min_len);
+        StructureAwareChunker { min_len, max_len }
+    }
+
+    /// Choose the split point for a chunk starting at `start`.
+    ///
+    /// Scans boundary candidates in `[start+min_len-1, start+max_len-1]`
+    /// and returns the exclusive end of the chunk: the position *after*
+    /// the strongest delimiter (ties -> the latest occurrence, preferring
+    /// the most complete unit), or a forced split at `max_len`.
+    fn split_end(&self, bytes: &[u8], start: usize) -> usize {
+        let hard_end = (start + self.max_len).min(bytes.len());
+        if hard_end - start <= self.min_len {
+            return hard_end; // tail shorter than min: take it all
+        }
+        let mut best: Option<(DelimiterLevel, usize)> = None;
+        for i in (start + self.min_len - 1)..hard_end {
+            if let Some(level) = boundary_level(bytes, i) {
+                let better = match best {
+                    None => true,
+                    // stronger-or-equal level at a later position wins
+                    Some((bl, _)) => level <= bl,
+                };
+                if better {
+                    best = Some((level, i));
+                }
+            }
+        }
+        match best {
+            Some((_, i)) => i + 1,
+            None => hard_end, // forced split: no natural break in window
+        }
+    }
+}
+
+impl Chunker for StructureAwareChunker {
+    fn chunk(&self, bytes: &[u8]) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < bytes.len() {
+            let end = self.split_end(bytes, start);
+            debug_assert!(end > start);
+            out.push(Chunk { start, len: end - start });
+            start = end;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "structure-aware"
+    }
+}
+
+/// Quest-style fixed pages (paper baseline, page size 16 in the pilot).
+#[derive(Clone, Debug)]
+pub struct FixedSizeChunker {
+    pub size: usize,
+}
+
+impl FixedSizeChunker {
+    pub fn new(size: usize) -> Self {
+        assert!(size >= 1);
+        FixedSizeChunker { size }
+    }
+}
+
+impl Chunker for FixedSizeChunker {
+    fn chunk(&self, bytes: &[u8]) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        while start < bytes.len() {
+            let len = self.size.min(bytes.len() - start);
+            out.push(Chunk { start, len });
+            start += len;
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "fixed"
+    }
+}
+
+/// SentenceKV-style segmentation: split only at sentence terminators
+/// (Level <= Sentence), with a safety cap for delimiter-free streams.
+#[derive(Clone, Debug)]
+pub struct SentenceChunker {
+    pub cap: usize,
+}
+
+impl Default for SentenceChunker {
+    fn default() -> Self {
+        SentenceChunker { cap: 256 }
+    }
+}
+
+impl Chunker for SentenceChunker {
+    fn chunk(&self, bytes: &[u8]) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        let mut start = 0;
+        let mut i = 0;
+        while i < bytes.len() {
+            let is_sentence_end = matches!(
+                boundary_level(bytes, i),
+                Some(DelimiterLevel::Structural) | Some(DelimiterLevel::Sentence)
+            );
+            if is_sentence_end || i + 1 - start >= self.cap {
+                out.push(Chunk { start, len: i + 1 - start });
+                start = i + 1;
+            }
+            i += 1;
+        }
+        if start < bytes.len() {
+            out.push(Chunk { start, len: bytes.len() - start });
+        }
+        out
+    }
+
+    fn name(&self) -> &'static str {
+        "sentence"
+    }
+}
+
+/// Statistics over a segmentation (used by EXPERIMENTS.md and the
+/// adaptive-chunking extension).
+#[derive(Clone, Debug, Default)]
+pub struct ChunkStats {
+    pub count: usize,
+    pub mean_len: f64,
+    pub min_len: usize,
+    pub max_len: usize,
+    /// Fraction of chunk boundaries that land on a natural delimiter.
+    pub boundary_alignment: f64,
+}
+
+pub fn chunk_stats(bytes: &[u8], chunks: &[Chunk]) -> ChunkStats {
+    if chunks.is_empty() {
+        return ChunkStats::default();
+    }
+    let lens: Vec<usize> = chunks.iter().map(|c| c.len).collect();
+    let aligned = chunks
+        .iter()
+        .filter(|c| c.end() == bytes.len() || boundary_level(bytes, c.end() - 1).is_some())
+        .count();
+    ChunkStats {
+        count: chunks.len(),
+        mean_len: lens.iter().sum::<usize>() as f64 / lens.len() as f64,
+        min_len: *lens.iter().min().unwrap(),
+        max_len: *lens.iter().max().unwrap(),
+        boundary_alignment: aligned as f64 / chunks.len() as f64,
+    }
+}
+
+/// Verify the partition invariant (tests + debug assertions).
+pub fn is_partition(total_len: usize, chunks: &[Chunk]) -> bool {
+    let mut pos = 0;
+    for c in chunks {
+        if c.start != pos || c.len == 0 {
+            return false;
+        }
+        pos = c.end();
+    }
+    pos == total_len
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    const JSON: &str = r#"{"user": {"id": 12345, "name": "alice", "tags": ["a", "b"]}, "active": true}"#;
+    const PROSE: &str = "The quick brown fox jumps over the lazy dog. It was a sunny day, and everything seemed fine. Then it rained!";
+    const CODE: &str = "fn main() {\n    let x = compute(1, 2);\n    println!(\"{}\", x);\n}\n";
+
+    fn assert_valid(c: &dyn Chunker, text: &str) -> Vec<Chunk> {
+        let chunks = c.chunk(text.as_bytes());
+        assert!(is_partition(text.len(), &chunks), "{} not a partition", c.name());
+        chunks
+    }
+
+    #[test]
+    fn structure_aware_respects_window() {
+        let c = StructureAwareChunker::new(8, 16);
+        for text in [JSON, PROSE, CODE] {
+            let chunks = assert_valid(&c, text);
+            for (i, ch) in chunks.iter().enumerate() {
+                assert!(ch.len <= 16, "chunk {i} too long: {}", ch.len);
+                if i + 1 < chunks.len() {
+                    assert!(ch.len >= 8, "chunk {i} too short: {}", ch.len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn structure_aware_prefers_structural_boundaries() {
+        let c = StructureAwareChunker::new(4, 32);
+        let text = r#"{"k": [1]} tail text"#;
+        let chunks = c.chunk(text.as_bytes());
+        // First split should land right after a structural closer,
+        // not at an arbitrary byte.
+        let first_end = chunks[0].end();
+        let b = text.as_bytes()[first_end - 1];
+        assert!(matches!(b, b'}' | b']'), "split after {:?}", b as char);
+    }
+
+    #[test]
+    fn forced_split_without_delimiters() {
+        let c = StructureAwareChunker::new(8, 16);
+        let text = "a".repeat(100);
+        let chunks = assert_valid(&c, &text);
+        // degrades to fixed-size: all but last exactly max_len
+        for ch in &chunks[..chunks.len() - 1] {
+            assert_eq!(ch.len, 16);
+        }
+    }
+
+    #[test]
+    fn ties_prefer_latest_boundary() {
+        // two commas in window; later one should win (more complete unit)
+        let c = StructureAwareChunker::new(2, 16);
+        let text = "ab, cd, efghijklmnop";
+        let chunks = c.chunk(text.as_bytes());
+        assert_eq!(chunks[0].end(), 7); // after the second ','
+    }
+
+    #[test]
+    fn fixed_chunker_is_uniform() {
+        let c = FixedSizeChunker::new(16);
+        let chunks = assert_valid(&c, PROSE);
+        for ch in &chunks[..chunks.len() - 1] {
+            assert_eq!(ch.len, 16);
+        }
+    }
+
+    #[test]
+    fn sentence_chunker_splits_at_sentences() {
+        let c = SentenceChunker::default();
+        let chunks = assert_valid(&c, PROSE);
+        assert!(chunks.len() >= 3, "expected >=3 sentences, got {}", chunks.len());
+        let text = PROSE.as_bytes();
+        for ch in &chunks[..chunks.len() - 1] {
+            assert!(boundary_level(text, ch.end() - 1).is_some());
+        }
+    }
+
+    #[test]
+    fn sentence_chunker_caps_unpunctuated_streams() {
+        let c = SentenceChunker { cap: 32 };
+        let text = "x".repeat(200);
+        let chunks = assert_valid(&c, &text);
+        assert!(chunks.iter().all(|ch| ch.len <= 32));
+    }
+
+    #[test]
+    fn stats_report_alignment() {
+        let c = StructureAwareChunker::default();
+        let chunks = c.chunk(PROSE.as_bytes());
+        let st = chunk_stats(PROSE.as_bytes(), &chunks);
+        assert_eq!(st.count, chunks.len());
+        assert!(st.mean_len >= 8.0 && st.mean_len <= 16.0);
+        let f = FixedSizeChunker::new(16);
+        let st_fixed = chunk_stats(PROSE.as_bytes(), &f.chunk(PROSE.as_bytes()));
+        assert!(
+            st.boundary_alignment >= st_fixed.boundary_alignment,
+            "structure-aware {} < fixed {}",
+            st.boundary_alignment,
+            st_fixed.boundary_alignment
+        );
+    }
+
+    #[test]
+    fn empty_input_gives_no_chunks() {
+        for c in [&StructureAwareChunker::default() as &dyn Chunker,
+                  &FixedSizeChunker::new(4), &SentenceChunker::default()] {
+            assert!(c.chunk(b"").is_empty());
+        }
+    }
+
+    #[test]
+    fn prop_partition_invariant_all_chunkers() {
+        prop::check("chunkers partition", 80, |g| {
+            let n = g.usize_in(0..400);
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| {
+                    let pool = b"abc123 ,.;:\n{}[]\t\"";
+                    pool[g.usize_in(0..pool.len())]
+                })
+                .collect();
+            let chunkers: Vec<Box<dyn Chunker>> = vec![
+                Box::new(StructureAwareChunker::new(
+                    g.usize_in(1..8),
+                    8 + g.usize_in(0..24),
+                )),
+                Box::new(FixedSizeChunker::new(g.usize_in(1..32))),
+                Box::new(SentenceChunker { cap: g.usize_in(4..64) }),
+            ];
+            for c in &chunkers {
+                let chunks = c.chunk(&bytes);
+                prop_assert!(
+                    is_partition(bytes.len(), &chunks),
+                    "{} broke partition on len {}",
+                    c.name(),
+                    bytes.len()
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_structure_aware_window_bounds() {
+        prop::check("window bounds", 60, |g| {
+            let min = g.usize_in(2..10);
+            let max = min + g.usize_in(0..20);
+            let c = StructureAwareChunker::new(min, max);
+            let n = g.usize_in(1..500);
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| b"word. and, more\n"[g.usize_in(0..16)])
+                .collect();
+            let chunks = c.chunk(&bytes);
+            for (i, ch) in chunks.iter().enumerate() {
+                prop_assert!(ch.len <= max, "chunk {i} len {} > max {max}", ch.len);
+                if i + 1 < chunks.len() {
+                    prop_assert!(ch.len >= min.min(max), "chunk {i} len {} < min", ch.len);
+                }
+            }
+            Ok(())
+        });
+    }
+}

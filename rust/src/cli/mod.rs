@@ -1,0 +1,369 @@
+//! `lychee` command-line interface (hand-rolled; no clap offline).
+//!
+//! ```text
+//! lychee serve [--addr 127.0.0.1:7711] [--config f.json] [-o k=v]...
+//! lychee generate --prompt "..." [--policy lychee] [--tokens 32]
+//! lychee table <1|2|3|6> [--quick]
+//! lychee fig <2|4|5a|5b|6|7|8|9|10|11> [--quick]
+//! lychee all [--quick]           # every table + figure
+//! lychee bench-serve [--rate 2.0] [--requests 16]
+//! lychee info                    # artifacts / model / bucket info
+//! ```
+
+use crate::config::Config;
+use crate::eval::harness::{self, Opts};
+use crate::eval::latency::{self, LatOpts};
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    pub flags: std::collections::BTreeMap<String, String>,
+    pub switches: std::collections::BTreeSet<String>,
+}
+
+pub fn parse_args(argv: &[String]) -> Result<Args> {
+    let mut it = argv.iter().peekable();
+    let cmd = it.next().cloned().unwrap_or_else(|| "help".to_string());
+    let mut positional = Vec::new();
+    let mut flags = std::collections::BTreeMap::new();
+    let mut switches = std::collections::BTreeSet::new();
+    while let Some(a) = it.next() {
+        if let Some(name) = a.strip_prefix("--") {
+            // --flag value | --switch
+            match it.peek() {
+                Some(v) if !v.starts_with("--") && *a != "--quick" => {
+                    flags.insert(name.to_string(), (*it.next().unwrap()).clone());
+                }
+                _ => {
+                    switches.insert(name.to_string());
+                }
+            }
+        } else if a == "-o" {
+            let v = it.next().context("-o needs key=value")?;
+            flags
+                .entry("overrides".to_string())
+                .and_modify(|e| {
+                    e.push(';');
+                    e.push_str(v);
+                })
+                .or_insert_with(|| v.clone());
+        } else {
+            positional.push(a.clone());
+        }
+    }
+    Ok(Args { cmd, positional, flags, switches })
+}
+
+fn build_config(args: &Args) -> Result<Config> {
+    let mut cfg = if let Some(path) = args.flags.get("config") {
+        Config::from_file(std::path::Path::new(path))?
+    } else {
+        Config::new()
+    };
+    if let Some(ovs) = args.flags.get("overrides") {
+        for ov in ovs.split(';') {
+            cfg.apply_override(ov)?;
+        }
+    }
+    if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
+        // also look relative to the binary's crate root
+        let alt = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if alt.join("manifest.json").exists() {
+            cfg.artifacts_dir = alt.to_str().unwrap().to_string();
+        }
+    }
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+/// Main dispatch (called from `main.rs`).
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    run_argv(&argv)
+}
+
+pub fn run_argv(argv: &[String]) -> Result<()> {
+    let args = parse_args(argv)?;
+    let quick = args.switches.contains("quick");
+    match args.cmd.as_str() {
+        "help" | "--help" | "-h" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "info" => cmd_info(&args),
+        "serve" => cmd_serve(&args),
+        "generate" => cmd_generate(&args),
+        "bench-serve" => cmd_bench_serve(&args),
+        "table" => {
+            let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+            let opts = eval_opts(&args, quick)?;
+            match which {
+                "1" => {
+                    harness::table1(&opts);
+                }
+                "2" => {
+                    harness::table2(&opts);
+                }
+                "3" => {
+                    harness::table3(&opts);
+                }
+                "6" => {
+                    harness::table6(&opts);
+                }
+                _ => bail!("unknown table '{which}' (1|2|3|6)"),
+            }
+            Ok(())
+        }
+        "fig" => {
+            let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
+            match which {
+                "2" => {
+                    harness::fig2(&eval_opts(&args, quick)?);
+                }
+                "6" => {
+                    harness::fig6(&eval_opts(&args, quick)?);
+                }
+                "7" => {
+                    harness::fig7(&eval_opts(&args, quick)?);
+                }
+                "9" => {
+                    harness::fig9(&eval_opts(&args, quick)?);
+                }
+                "10" => {
+                    harness::fig10(&eval_opts(&args, quick)?);
+                }
+                "11" => {
+                    harness::fig11(&eval_opts(&args, quick)?);
+                }
+                "4" => {
+                    latency::fig4(&lat_opts(&args, quick)?)?;
+                }
+                "5a" => {
+                    latency::fig5a(&lat_opts(&args, quick)?)?;
+                }
+                "5b" => {
+                    latency::fig5b(&lat_opts(&args, quick)?)?;
+                }
+                "8" => {
+                    latency::fig8(&lat_opts(&args, quick)?)?;
+                }
+                _ => bail!("unknown figure '{which}' (2|4|5a|5b|6|7|8|9|10|11)"),
+            }
+            Ok(())
+        }
+        "all" => {
+            let e = eval_opts(&args, quick)?;
+            let l = lat_opts(&args, quick)?;
+            harness::fig2(&e);
+            harness::table1(&e);
+            harness::table2(&e);
+            harness::table3(&e);
+            harness::table6(&e);
+            harness::fig6(&e);
+            harness::fig7(&e);
+            harness::fig9(&e);
+            harness::fig10(&e);
+            harness::fig11(&e);
+            latency::fig4(&l)?;
+            latency::fig5a(&l)?;
+            latency::fig5b(&l)?;
+            latency::fig8(&l)?;
+            println!("all experiment outputs written to results/");
+            Ok(())
+        }
+        other => bail!("unknown command '{other}'; see `lychee help`"),
+    }
+}
+
+fn eval_opts(args: &Args, quick: bool) -> Result<Opts> {
+    let cfg = build_config(args)?;
+    Ok(Opts { quick, seed: cfg.seed, cfg: cfg.lychee })
+}
+
+fn lat_opts(args: &Args, quick: bool) -> Result<LatOpts> {
+    let cfg = build_config(args)?;
+    Ok(LatOpts { quick, seed: cfg.seed.max(1), cfg })
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let manifest = crate::model::Manifest::load(std::path::Path::new(&cfg.artifacts_dir))?;
+    println!("artifacts dir : {}", cfg.artifacts_dir);
+    println!(
+        "model         : {} layers, {} heads x {} dims (d_model {}), vocab {}",
+        manifest.dims.layers,
+        manifest.dims.heads,
+        manifest.dims.head_dim,
+        manifest.dims.d_model,
+        manifest.dims.vocab
+    );
+    println!("programs      : {}", manifest.programs.len());
+    println!("batch buckets : {:?}", manifest.buckets.batch);
+    println!("attn buckets  : {:?}", manifest.buckets.attn_m_b1);
+    println!("prefill       : {:?}", manifest.buckets.prefill_s);
+    println!("lychee config : {:?}", cfg.lychee);
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let addr = args.flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1:7711");
+    let (handle, metrics, join) = crate::coordinator::spawn(cfg)?;
+    let server = crate::server::Server::start(addr, handle.clone())?;
+    println!("lychee serving on {} (JSON-lines; Ctrl-C to stop)", server.addr);
+    // block forever, reporting metrics periodically
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let m = metrics.lock().unwrap();
+        println!(
+            "requests={} completed={} rejected={} tokens={} p50_tpot={:.1}ms",
+            m.requests,
+            m.completed,
+            m.rejected,
+            m.tokens_out,
+            m.tpot_us.quantile(0.5) / 1e3
+        );
+        drop(m);
+        if false {
+            break;
+        }
+    }
+    #[allow(unreachable_code)]
+    {
+        server.stop();
+        handle.shutdown();
+        let _ = join.join();
+        Ok(())
+    }
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let cfg = build_config(args)?;
+    let prompt = args.flags.get("prompt").context("--prompt required")?.clone();
+    let tokens: usize = args.flags.get("tokens").map(|s| s.parse()).transpose()?.unwrap_or(32);
+    let policy = args.flags.get("policy").cloned().unwrap_or_else(|| "lychee".to_string());
+    let (handle, _metrics, join) = crate::coordinator::spawn(cfg)?;
+    let (out, stats) = handle.generate(crate::coordinator::Request {
+        id: 1,
+        prompt: prompt.into_bytes(),
+        max_new_tokens: tokens,
+        policy,
+    })?;
+    println!("{}", String::from_utf8_lossy(&out));
+    println!(
+        "--- {} tokens, ttft {:.1} ms, tpot {:.2} ms",
+        stats.tokens, stats.ttft_ms, stats.tpot_ms
+    );
+    handle.shutdown();
+    let _ = join.join();
+    Ok(())
+}
+
+fn cmd_bench_serve(args: &Args) -> Result<()> {
+    use crate::workloads::trace;
+    let cfg = build_config(args)?;
+    let rate: f64 = args.flags.get("rate").map(|s| s.parse()).transpose()?.unwrap_or(2.0);
+    let n: usize = args.flags.get("requests").map(|s| s.parse()).transpose()?.unwrap_or(16);
+    let policy = args.flags.get("policy").cloned().unwrap_or_else(|| "lychee".to_string());
+    let params = trace::TraceParams { rate, n_requests: n, ..Default::default() };
+    let reqs = trace::generate(&params, cfg.seed);
+    let (handle, metrics, join) = crate::coordinator::spawn(cfg)?;
+
+    let t0 = std::time::Instant::now();
+    let mut workers = Vec::new();
+    for (i, r) in reqs.into_iter().enumerate() {
+        let h = handle.clone();
+        let pol = policy.clone();
+        workers.push(std::thread::spawn(move || {
+            let wait = r.at_s - t0.elapsed().as_secs_f64();
+            if wait > 0.0 {
+                std::thread::sleep(std::time::Duration::from_secs_f64(wait));
+            }
+            let prompt = trace::prompt_text(r.prompt_len, i as u64);
+            h.generate(crate::coordinator::Request {
+                id: i as u64,
+                prompt,
+                max_new_tokens: r.max_new_tokens,
+                policy: pol,
+            })
+        }));
+    }
+    let mut ok = 0;
+    for w in workers {
+        if w.join().unwrap().is_ok() {
+            ok += 1;
+        }
+    }
+    let elapsed = t0.elapsed().as_secs_f64();
+    let m = metrics.lock().unwrap();
+    println!(
+        "served {ok}/{n} requests in {elapsed:.1}s  throughput={:.1} tok/s  p50_ttft={:.0}ms p50_tpot={:.1}ms p99_tpot={:.1}ms",
+        m.throughput_tokens_per_s(elapsed),
+        m.ttft_us.quantile(0.5) / 1e3,
+        m.tpot_us.quantile(0.5) / 1e3,
+        m.tpot_us.quantile(0.99) / 1e3,
+    );
+    drop(m);
+    handle.shutdown();
+    let _ = join.join();
+    Ok(())
+}
+
+const HELP: &str = "lychee — LycheeCluster long-context serving (ACL 2026 reproduction)
+
+USAGE:
+  lychee info                        artifact + model summary
+  lychee serve [--addr A] [-o k=v]   TCP JSON-lines server
+  lychee generate --prompt P [--policy lychee] [--tokens N]
+  lychee bench-serve [--rate R] [--requests N] [--policy P]
+  lychee table <1|2|3|6> [--quick]   regenerate a paper table
+  lychee fig <2|4|5a|5b|6|7|8|9|10|11> [--quick]
+  lychee all [--quick]               every table and figure -> results/
+
+OPTIONS:
+  --config file.json                 config overrides
+  -o section.key=value               inline override (repeatable)
+  --quick                            CI-sized runs";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_commands_and_flags() {
+        let a = parse_args(&argv("table 1 --quick -o lychee.budget=512")).unwrap();
+        assert_eq!(a.cmd, "table");
+        assert_eq!(a.positional, vec!["1"]);
+        assert!(a.switches.contains("quick"));
+        assert_eq!(a.flags["overrides"], "lychee.budget=512");
+    }
+
+    #[test]
+    fn parses_flag_values() {
+        let a = parse_args(&argv("generate --prompt hello --tokens 8")).unwrap();
+        assert_eq!(a.flags["prompt"], "hello");
+        assert_eq!(a.flags["tokens"], "8");
+    }
+
+    #[test]
+    fn multiple_overrides_accumulate() {
+        let a = parse_args(&argv("all -o lychee.budget=256 -o seed=7")).unwrap();
+        assert_eq!(a.flags["overrides"], "lychee.budget=256;seed=7");
+    }
+
+    #[test]
+    fn unknown_command_errors() {
+        assert!(run_argv(&argv("frobnicate")).is_err());
+    }
+
+    #[test]
+    fn help_runs() {
+        run_argv(&argv("help")).unwrap();
+    }
+}

@@ -1,0 +1,315 @@
+//! Typed configuration system: defaults matching the paper's Appendix A,
+//! JSON overrides (`--config file.json` / inline `-o key=value`), and
+//! validation. Every experiment harness takes one of these structs so
+//! runs are fully described by a config + seed.
+
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// LycheeCluster algorithm hyper-parameters (paper §4 + Appendix A).
+#[derive(Clone, Debug, PartialEq)]
+pub struct LycheeConfig {
+    /// Minimum chunk length before the chunker looks for a delimiter.
+    pub min_chunk: usize,
+    /// Maximum chunk length (forced split).
+    pub max_chunk: usize,
+    /// Decode-time token buffer size before packing a dynamic chunk.
+    pub update_buffer: usize,
+    /// Average chunks per fine cluster (sets L = ceil(M / this)).
+    pub avg_cluster_size: usize,
+    /// Maximum number of coarse units P.
+    pub max_coarse_units: usize,
+    /// Spherical k-means iterations.
+    pub kmeans_iters: usize,
+    /// Coarse units kept per query (top-k_g).
+    pub top_kg: usize,
+    /// Fine clusters kept per query (top-k_c); the token budget is the
+    /// binding constraint — clusters are taken in UB order until the
+    /// budget is filled, capped at top_kc.
+    pub top_kc: usize,
+    /// Retrieval token budget (active-set size), paper default 1024.
+    pub budget: usize,
+    /// Attention-sink prefix always kept active (paper: 16).
+    pub sink: usize,
+    /// Recent-window suffix always kept active.
+    pub recent: usize,
+    /// Leading transformer layers that keep full attention (paper keeps
+    /// the first 2 of 32; scaled to 1 of 4 for LycheeLM).
+    pub full_attn_layers: usize,
+    /// Mean (true) or max (false) pooling for chunk representatives.
+    pub mean_pooling: bool,
+}
+
+impl Default for LycheeConfig {
+    fn default() -> Self {
+        LycheeConfig {
+            // Paper Appendix A uses 8/16 BPE tokens; LycheeLM is
+            // byte-level (1 token = 1 byte, ~3-4x denser), so the chunk
+            // window scales to 16/64 bytes to cover the same semantic
+            // span while letting short unit tails align (a tighter
+            // min_chunk misses end-of-record delimiters).
+            min_chunk: 16,
+            max_chunk: 64,
+            update_buffer: 128,
+            avg_cluster_size: 2,
+            max_coarse_units: 64,
+            kmeans_iters: 10,
+            top_kg: 8,
+            top_kc: 64,
+            budget: 1024,
+            sink: 16,
+            recent: 64,
+            full_attn_layers: 1,
+            mean_pooling: true,
+        }
+    }
+}
+
+impl LycheeConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.min_chunk == 0 || self.max_chunk < self.min_chunk {
+            bail!("need 0 < min_chunk <= max_chunk (got {} / {})", self.min_chunk, self.max_chunk);
+        }
+        if self.update_buffer < self.max_chunk {
+            bail!("update_buffer {} < max_chunk {}", self.update_buffer, self.max_chunk);
+        }
+        if self.avg_cluster_size == 0 || self.max_coarse_units == 0 {
+            bail!("cluster sizes must be positive");
+        }
+        if self.budget < self.sink + self.recent {
+            bail!("budget {} smaller than sink {} + recent {}", self.budget, self.sink, self.recent);
+        }
+        if self.top_kg == 0 || self.top_kc == 0 {
+            bail!("top_kg / top_kc must be positive");
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
+        let u = || v.as_usize().context("expected number");
+        match key {
+            "min_chunk" => self.min_chunk = u()?,
+            "max_chunk" => self.max_chunk = u()?,
+            "update_buffer" => self.update_buffer = u()?,
+            "avg_cluster_size" => self.avg_cluster_size = u()?,
+            "max_coarse_units" => self.max_coarse_units = u()?,
+            "kmeans_iters" => self.kmeans_iters = u()?,
+            "top_kg" => self.top_kg = u()?,
+            "top_kc" => self.top_kc = u()?,
+            "budget" => self.budget = u()?,
+            "sink" => self.sink = u()?,
+            "recent" => self.recent = u()?,
+            "full_attn_layers" => self.full_attn_layers = u()?,
+            "mean_pooling" => self.mean_pooling = v.as_bool().context("expected bool")?,
+            _ => bail!("unknown lychee config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
+/// Serving/coordination parameters.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServingConfig {
+    /// Maximum decode batch size (must be one of the compiled buckets).
+    pub max_batch: usize,
+    /// Queue capacity before admission control rejects requests.
+    pub queue_cap: usize,
+    /// Max new tokens per request unless overridden.
+    pub max_new_tokens: usize,
+    /// Scheduler tick in microseconds when idle.
+    pub idle_tick_us: u64,
+    /// Prefill chunk bucket cap.
+    pub max_prompt: usize,
+}
+
+impl Default for ServingConfig {
+    fn default() -> Self {
+        ServingConfig {
+            max_batch: 8,
+            queue_cap: 256,
+            max_new_tokens: 128,
+            idle_tick_us: 200,
+            max_prompt: 2048,
+        }
+    }
+}
+
+impl ServingConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.max_batch == 0 || self.queue_cap == 0 {
+            bail!("max_batch / queue_cap must be positive");
+        }
+        Ok(())
+    }
+
+    fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
+        let u = || v.as_usize().context("expected number");
+        match key {
+            "max_batch" => self.max_batch = u()?,
+            "queue_cap" => self.queue_cap = u()?,
+            "max_new_tokens" => self.max_new_tokens = u()?,
+            "idle_tick_us" => self.idle_tick_us = u()? as u64,
+            "max_prompt" => self.max_prompt = u()?,
+            _ => bail!("unknown serving config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
+/// Top-level config bundle.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Config {
+    pub lychee: LycheeConfig,
+    pub serving: ServingConfig,
+    /// Artifact directory (HLO programs, weights, manifest).
+    pub artifacts_dir: String,
+    /// Global experiment seed.
+    pub seed: u64,
+}
+
+impl Config {
+    pub fn new() -> Config {
+        Config {
+            lychee: LycheeConfig::default(),
+            serving: ServingConfig::default(),
+            artifacts_dir: "artifacts".to_string(),
+            seed: 0,
+        }
+    }
+
+    /// Load JSON overrides from a file on top of defaults.
+    pub fn from_file(path: &Path) -> Result<Config> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config {}", path.display()))?;
+        let json = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let mut cfg = Config::new();
+        cfg.apply_json(&json)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn apply_json(&mut self, json: &Json) -> Result<()> {
+        let obj = json.as_obj().context("config root must be an object")?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "lychee" => {
+                    for (lk, lv) in v.as_obj().context("lychee must be object")? {
+                        self.lychee.apply(lk, lv)?;
+                    }
+                }
+                "serving" => {
+                    for (sk, sv) in v.as_obj().context("serving must be object")? {
+                        self.serving.apply(sk, sv)?;
+                    }
+                }
+                "artifacts_dir" => {
+                    self.artifacts_dir = v.as_str().context("artifacts_dir string")?.to_string()
+                }
+                "seed" => self.seed = v.as_usize().context("seed number")? as u64,
+                _ => bail!("unknown config section '{k}'"),
+            }
+        }
+        Ok(())
+    }
+
+    /// Apply one `section.key=value` override (CLI `-o`).
+    pub fn apply_override(&mut self, spec: &str) -> Result<()> {
+        let (path, value) = spec.split_once('=').context("override must be key=value")?;
+        let json_v = Json::parse(value).unwrap_or_else(|_| Json::Str(value.to_string()));
+        match path.split_once('.') {
+            Some(("lychee", key)) => self.lychee.apply(key, &json_v)?,
+            Some(("serving", key)) => self.serving.apply(key, &json_v)?,
+            None if path == "seed" => self.seed = json_v.as_usize().context("seed")? as u64,
+            None if path == "artifacts_dir" => {
+                self.artifacts_dir = json_v.as_str().unwrap_or(value).to_string()
+            }
+            _ => bail!("unknown override path '{path}'"),
+        }
+        Ok(())
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        self.lychee.validate()?;
+        self.serving.validate()?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_appendix_a() {
+        let c = LycheeConfig::default();
+        assert_eq!(c.min_chunk, 16);
+        assert_eq!(c.max_chunk, 64);
+        assert_eq!(c.update_buffer, 128);
+        assert_eq!(c.avg_cluster_size, 2);
+        assert_eq!(c.max_coarse_units, 64);
+        assert_eq!(c.kmeans_iters, 10);
+        assert_eq!(c.budget, 1024);
+        assert_eq!(c.sink, 16);
+        assert!(c.mean_pooling);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn json_overrides() {
+        let mut cfg = Config::new();
+        let j = Json::parse(
+            r#"{"lychee": {"budget": 512, "mean_pooling": false},
+                "serving": {"max_batch": 4}, "seed": 7}"#,
+        )
+        .unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.lychee.budget, 512);
+        assert!(!cfg.lychee.mean_pooling);
+        assert_eq!(cfg.serving.max_batch, 4);
+        assert_eq!(cfg.seed, 7);
+    }
+
+    #[test]
+    fn cli_override() {
+        let mut cfg = Config::new();
+        cfg.apply_override("lychee.budget=2048").unwrap();
+        cfg.apply_override("serving.max_batch=1").unwrap();
+        cfg.apply_override("seed=99").unwrap();
+        assert_eq!(cfg.lychee.budget, 2048);
+        assert_eq!(cfg.serving.max_batch, 1);
+        assert_eq!(cfg.seed, 99);
+        assert!(cfg.apply_override("nope.x=1").is_err());
+        assert!(cfg.apply_override("novalue").is_err());
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        let mut cfg = Config::new();
+        let j = Json::parse(r#"{"lychee": {"typo_key": 1}}"#).unwrap();
+        assert!(cfg.apply_json(&j).is_err());
+    }
+
+    #[test]
+    fn validation_catches_inconsistency() {
+        let mut c = LycheeConfig::default();
+        c.max_chunk = 4; // < min_chunk
+        assert!(c.validate().is_err());
+        let mut c2 = LycheeConfig::default();
+        c2.budget = 10; // < sink + recent
+        assert!(c2.validate().is_err());
+        let mut c3 = LycheeConfig::default();
+        c3.update_buffer = 8; // < max_chunk
+        assert!(c3.validate().is_err());
+    }
+
+    #[test]
+    fn from_file_round_trip() {
+        let dir = std::env::temp_dir().join("lychee_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, r#"{"lychee": {"budget": 256}}"#).unwrap();
+        let cfg = Config::from_file(&p).unwrap();
+        assert_eq!(cfg.lychee.budget, 256);
+    }
+}

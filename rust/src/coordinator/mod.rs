@@ -1,0 +1,418 @@
+//! Request coordinator: continuous-batching scheduler over the decode
+//! engine (the vLLM-router-shaped L3 serving layer).
+//!
+//! Architecture (std threads; the offline registry has no tokio):
+//!
+//! ```text
+//! clients ──submit──> mpsc ──> scheduler thread (owns Engine)
+//!                                 │  admit prefills (queue_cap bound)
+//!                                 │  form decode batches (bucket-sized)
+//!                                 │  step engine, stream tokens back
+//! clients <──Event::Token/Done── per-request mpsc
+//! ```
+//!
+//! Scheduling policy: FCFS admission, one prefill admitted per tick
+//! (prefill is the long pole; interleaving keeps decode TPOT stable),
+//! decode batch = all running sequences up to `max_batch`.
+
+use crate::config::Config;
+use crate::engine::{Engine, Sampling, Sequence};
+use crate::util::stats::LogHistogram;
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// A generation request.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: usize,
+    /// Retrieval policy name ("lychee", "full", "quest", ...).
+    pub policy: String,
+}
+
+/// Completion statistics for one request.
+#[derive(Clone, Debug, Default)]
+pub struct FinishStats {
+    /// Time to first token (prefill + first decode step), ms.
+    pub ttft_ms: f64,
+    /// Mean time per output token over the decode phase, ms.
+    pub tpot_ms: f64,
+    pub tokens: usize,
+    pub e2e_ms: f64,
+}
+
+/// Streamed to the requester.
+#[derive(Clone, Debug)]
+pub enum Event {
+    Token(u8),
+    Done(FinishStats),
+    Error(String),
+}
+
+/// Aggregate serving metrics (shared with the metrics endpoint / CLI).
+#[derive(Default)]
+pub struct Metrics {
+    pub requests: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub tokens_out: u64,
+    pub ttft_us: LogHistogram,
+    pub tpot_us: LogHistogram,
+}
+
+impl Metrics {
+    pub fn throughput_tokens_per_s(&self, elapsed_s: f64) -> f64 {
+        self.tokens_out as f64 / elapsed_s.max(1e-9)
+    }
+}
+
+struct Running {
+    seq: Sequence,
+    tx: Sender<Event>,
+    max_new: usize,
+    submitted: Instant,
+    first_token: Option<Instant>,
+    decode_started: Option<Instant>,
+}
+
+enum Msg {
+    Submit(Request, Sender<Event>),
+    Shutdown,
+}
+
+/// Cloneable handle for submitting requests to a running coordinator.
+#[derive(Clone)]
+pub struct Handle {
+    tx: Sender<Msg>,
+}
+
+impl Handle {
+    /// Submit a request; events stream on the returned receiver.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: run a request to completion.
+    pub fn generate(&self, req: Request) -> Result<(Vec<u8>, FinishStats)> {
+        let rx = self.submit(req)?;
+        let mut out = Vec::new();
+        for ev in rx {
+            match ev {
+                Event::Token(t) => out.push(t),
+                Event::Done(stats) => return Ok((out, stats)),
+                Event::Error(e) => anyhow::bail!("request failed: {e}"),
+            }
+        }
+        anyhow::bail!("stream ended without Done")
+    }
+
+    pub fn shutdown(&self) {
+        let _ = self.tx.send(Msg::Shutdown);
+    }
+}
+
+/// The coordinator. `run` consumes it on the scheduler thread; use
+/// [`spawn`] for the common thread-owning setup.
+pub struct Coordinator {
+    engine: Engine,
+    cfg: Config,
+    rx: Receiver<Msg>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+/// Start a coordinator on its own thread; returns the submit handle, the
+/// shared metrics, and the scheduler join handle.
+///
+/// The engine is constructed *inside* the scheduler thread: PJRT handles
+/// (`Rc`-backed client, raw buffer pointers) are not `Send`, so the
+/// engine must live and die on the thread that drives it.
+pub fn spawn(cfg: Config) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::JoinHandle<()>)> {
+    let (tx, rx) = channel();
+    let metrics = Arc::new(Mutex::new(Metrics::default()));
+    let m2 = Arc::clone(&metrics);
+    let (ready_tx, ready_rx) = channel();
+    let join = std::thread::Builder::new()
+        .name("lychee-coordinator".into())
+        .spawn(move || {
+            let engine = match Engine::load(cfg.clone()) {
+                Ok(e) => {
+                    let _ = ready_tx.send(Ok(()));
+                    e
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            Coordinator { engine, cfg, rx, metrics: m2 }.run();
+        })
+        .expect("spawn coordinator");
+    match ready_rx.recv() {
+        Ok(Ok(())) => Ok((Handle { tx }, metrics, join)),
+        Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
+        Err(_) => anyhow::bail!("coordinator thread died during init"),
+    }
+}
+
+impl Coordinator {
+    /// Scheduler loop: admit, decode, stream, repeat.
+    pub fn run(self) {
+        let mut pending: VecDeque<(Request, Sender<Event>)> = VecDeque::new();
+        let mut running: Vec<Running> = Vec::new();
+        let sampling = Sampling::default();
+        let mut next_seq_id = 1u64;
+
+        loop {
+            // ---- drain the submit queue --------------------------------
+            loop {
+                match self.rx.try_recv() {
+                    Ok(Msg::Submit(req, tx)) => {
+                        if pending.len() >= self.cfg.serving.queue_cap {
+                            self.metrics.lock().unwrap().rejected += 1;
+                            let _ = tx.send(Event::Error("queue full".into()));
+                        } else if req.prompt.len() > self.engine.rt.max_prompt() {
+                            self.metrics.lock().unwrap().rejected += 1;
+                            let _ = tx.send(Event::Error(format!(
+                                "prompt too long ({} > {})",
+                                req.prompt.len(),
+                                self.engine.rt.max_prompt()
+                            )));
+                        } else {
+                            self.metrics.lock().unwrap().requests += 1;
+                            pending.push_back((req, tx));
+                        }
+                    }
+                    Ok(Msg::Shutdown) => return,
+                    Err(TryRecvError::Empty) => break,
+                    Err(TryRecvError::Disconnected) => return,
+                }
+            }
+
+            // ---- admit one prefill per tick ------------------------------
+            if running.len() < self.cfg.serving.max_batch {
+                if let Some((req, tx)) = pending.pop_front() {
+                    let submitted = Instant::now();
+                    match self.engine.prefill(next_seq_id, &req.prompt, &req.policy) {
+                        Ok(seq) => {
+                            next_seq_id += 1;
+                            running.push(Running {
+                                seq,
+                                tx,
+                                max_new: req.max_new_tokens.max(1),
+                                submitted,
+                                first_token: None,
+                                decode_started: None,
+                            });
+                        }
+                        Err(e) => {
+                            let _ = tx.send(Event::Error(format!("prefill: {e}")));
+                        }
+                    }
+                }
+            }
+
+            if running.is_empty() {
+                if pending.is_empty() {
+                    // idle: block briefly for new work
+                    match self
+                        .rx
+                        .recv_timeout(std::time::Duration::from_micros(self.cfg.serving.idle_tick_us))
+                    {
+                        Ok(Msg::Submit(req, tx)) => pending.push_back((req, tx)),
+                        Ok(Msg::Shutdown) => return,
+                        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                    }
+                }
+                continue;
+            }
+
+            // ---- one decode step over the running batch -----------------
+            let batch_n = running.len().min(self.cfg.serving.max_batch);
+            let step_t = Instant::now();
+            let toks = {
+                let mut refs: Vec<&mut Sequence> =
+                    running[..batch_n].iter_mut().map(|r| &mut r.seq).collect();
+                match self.engine.decode_batch(&mut refs, &sampling) {
+                    Ok(t) => t,
+                    Err(e) => {
+                        for r in running.drain(..) {
+                            let _ = r.tx.send(Event::Error(format!("decode: {e}")));
+                        }
+                        continue;
+                    }
+                }
+            };
+            let _step_ms = step_t.elapsed().as_secs_f64() * 1e3;
+
+            // ---- stream + retire ----------------------------------------
+            let mut i = 0;
+            let mut finished_any = false;
+            for tok in toks {
+                let r = &mut running[i];
+                if r.first_token.is_none() {
+                    r.first_token = Some(Instant::now());
+                    r.decode_started = Some(Instant::now());
+                }
+                let _ = r.tx.send(Event::Token(tok));
+                {
+                    let mut m = self.metrics.lock().unwrap();
+                    m.tokens_out += 1;
+                }
+                if r.seq.generated.len() >= r.max_new {
+                    let e2e = r.submitted.elapsed().as_secs_f64() * 1e3;
+                    let ttft =
+                        r.first_token.map(|t| (t - r.submitted).as_secs_f64() * 1e3).unwrap_or(e2e);
+                    let n = r.seq.generated.len();
+                    let decode_ms = r
+                        .decode_started
+                        .map(|t| t.elapsed().as_secs_f64() * 1e3)
+                        .unwrap_or(0.0);
+                    let tpot = if n > 1 { decode_ms / (n - 1) as f64 } else { decode_ms };
+                    {
+                        let mut m = self.metrics.lock().unwrap();
+                        m.completed += 1;
+                        m.ttft_us.record(ttft * 1e3);
+                        m.tpot_us.record(tpot * 1e3);
+                    }
+                    let _ = r.tx.send(Event::Done(FinishStats {
+                        ttft_ms: ttft,
+                        tpot_ms: tpot,
+                        tokens: n,
+                        e2e_ms: e2e,
+                    }));
+                    running.remove(i);
+                    finished_any = true;
+                    continue; // do not advance i: next element shifted in
+                }
+                i += 1;
+            }
+            let _ = finished_any;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn test_config() -> Option<Config> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        Some(cfg)
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let Some(cfg) = test_config() else { return };
+        let (handle, metrics, join) = spawn(cfg).unwrap();
+        let (out, stats) = handle
+            .generate(Request {
+                id: 1,
+                prompt: b"hello coordinator".to_vec(),
+                max_new_tokens: 5,
+                policy: "lychee".into(),
+            })
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        assert_eq!(stats.tokens, 5);
+        assert!(stats.ttft_ms > 0.0);
+        assert!(stats.e2e_ms >= stats.ttft_ms);
+        {
+            let m = metrics.lock().unwrap();
+            assert_eq!(m.completed, 1);
+            assert_eq!(m.tokens_out, 5);
+        }
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn serves_concurrent_requests_batched() {
+        let Some(cfg) = test_config() else { return };
+        let (handle, metrics, join) = spawn(cfg).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..4 {
+            let rx = handle
+                .submit(Request {
+                    id: i,
+                    prompt: format!("request number {i} with some text.").into_bytes(),
+                    max_new_tokens: 4,
+                    policy: "lychee".into(),
+                })
+                .unwrap();
+            rxs.push(rx);
+        }
+        for rx in rxs {
+            let mut toks = 0;
+            let mut done = false;
+            for ev in rx {
+                match ev {
+                    Event::Token(_) => toks += 1,
+                    Event::Done(s) => {
+                        assert_eq!(s.tokens, 4);
+                        done = true;
+                        break;
+                    }
+                    Event::Error(e) => panic!("error: {e}"),
+                }
+            }
+            assert!(done);
+            assert_eq!(toks, 4);
+        }
+        assert_eq!(metrics.lock().unwrap().completed, 4);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_prompt() {
+        let Some(cfg) = test_config() else { return };
+        let (handle, metrics, join) = spawn(cfg).unwrap();
+        let rx = handle
+            .submit(Request {
+                id: 1,
+                prompt: vec![b'a'; 100_000],
+                max_new_tokens: 1,
+                policy: "full".into(),
+            })
+            .unwrap();
+        match rx.recv().unwrap() {
+            Event::Error(e) => assert!(e.contains("too long")),
+            other => panic!("expected error, got {other:?}"),
+        }
+        assert_eq!(metrics.lock().unwrap().rejected, 1);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn identical_prompts_get_identical_outputs() {
+        // continuous batching must not change results (greedy sampling)
+        let Some(cfg) = test_config() else { return };
+        let (handle, _m, join) = spawn(cfg).unwrap();
+        let req = |id| Request {
+            id,
+            prompt: b"determinism check prompt".to_vec(),
+            max_new_tokens: 6,
+            policy: "full".into(),
+        };
+        let (a, _) = handle.generate(req(1)).unwrap();
+        let (b, _) = handle.generate(req(2)).unwrap();
+        assert_eq!(a, b);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+}

@@ -1,0 +1,538 @@
+//! The decode engine: drives the per-stage HLO programs through the PJRT
+//! runtime with LycheeCluster retrieval between QKV and attention.
+//!
+//! One decode step for a batch of sequences (Algorithm 1, decode phase):
+//!
+//! ```text
+//! embed(tokens)                                       [B, D]
+//! for layer l in 0..L:
+//!     q,k,v = qkv(x, weights_l, positions)            [B, H, Dh]
+//!     cache.append(l, k, v)
+//!     active = policy_l.select(q)  ∪  {self}          (L3 retrieval)
+//!     K,V,mask = cache.gather(l, active, bucket)      [B, M, H, Dh]
+//!     a = attn(q, K, V, mask)           <- Pallas kernel artifact
+//!     x = proj_ffn(a, x, weights_l)
+//! logits = lm_head(x)
+//! ```
+//!
+//! Weights are uploaded to device once at engine construction (cached
+//! literals) — per-step uploads are only the gathered active set, the
+//! tiny stage activations, and the masks.
+
+use crate::config::Config;
+use crate::index::reps::KeySource;
+use crate::kvcache::KvCache;
+use crate::model::{Manifest, Weights};
+use crate::runtime::{lit_f32, lit_i32, to_f32_vec, Runtime};
+use crate::sparse::{make_policy, Ctx, Policy};
+use crate::util::rng::Rng;
+use crate::util::timer::PhaseTimer;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+use xla::Literal;
+
+/// View of one layer of a paged KV cache as a key source for policies.
+pub struct LayerKeys<'a> {
+    pub cache: &'a KvCache,
+    pub layer: usize,
+    pub n: usize,
+}
+
+impl KeySource for LayerKeys<'_> {
+    fn dim(&self) -> usize {
+        self.cache.row_dim()
+    }
+
+    fn key(&self, token: usize) -> &[f32] {
+        self.cache.key_row(self.layer, token)
+    }
+
+    fn len(&self) -> usize {
+        self.n
+    }
+}
+
+/// Token sampling configuration.
+#[derive(Clone, Debug)]
+pub struct Sampling {
+    pub greedy: bool,
+    pub temperature: f32,
+}
+
+impl Default for Sampling {
+    fn default() -> Self {
+        Sampling { greedy: true, temperature: 1.0 }
+    }
+}
+
+/// One in-flight sequence: prompt + generated text, its paged KV cache
+/// and the per-layer retrieval policies.
+pub struct Sequence {
+    pub id: u64,
+    pub text: Vec<u8>,
+    pub kv: KvCache,
+    pub policies: Vec<Box<dyn Policy>>,
+    /// Tokens cached so far (== next position).
+    pub pos: usize,
+    pub last_logits: Vec<f32>,
+    pub generated: Vec<u8>,
+    pub timer: PhaseTimer,
+    rng: Rng,
+}
+
+impl Sequence {
+    /// Total KV bytes held (Fig. 8).
+    pub fn kv_bytes(&self) -> usize {
+        self.kv.bytes()
+    }
+
+    /// Total policy index bytes (Fig. 8).
+    pub fn index_bytes(&self) -> usize {
+        self.policies.iter().map(|p| p.index_bytes()).sum()
+    }
+
+    /// Sample the next token from `last_logits`.
+    fn sample(&mut self, s: &Sampling) -> u8 {
+        if s.greedy {
+            crate::linalg::argmax(&self.last_logits) as u8
+        } else {
+            let mut probs = self.last_logits.clone();
+            for p in probs.iter_mut() {
+                *p /= s.temperature.max(1e-6);
+            }
+            crate::linalg::softmax(&mut probs);
+            let mut r = self.rng.f32();
+            for (i, &p) in probs.iter().enumerate() {
+                r -= p;
+                if r <= 0.0 {
+                    return i as u8;
+                }
+            }
+            (probs.len() - 1) as u8
+        }
+    }
+}
+
+/// The engine: runtime + weights + device-cached weight literals.
+pub struct Engine {
+    pub rt: Runtime,
+    pub weights: Weights,
+    pub cfg: Config,
+    /// Literals per weight tensor, in canonical (manifest) order.
+    wlits: Vec<Literal>,
+}
+
+impl Engine {
+    pub fn load(cfg: Config) -> Result<Engine> {
+        let manifest = Manifest::load(Path::new(&cfg.artifacts_dir))?;
+        let weights = Weights::load(&manifest)?;
+        let rt = Runtime::new(manifest)?;
+        let mut wlits = Vec::new();
+        for (_name, data, shape) in weights.flat_order() {
+            wlits.push(lit_f32(data, shape)?);
+        }
+        Ok(Engine { rt, weights, cfg, wlits })
+    }
+
+    pub fn dims(&self) -> &crate::model::ModelDims {
+        &self.rt.manifest.dims
+    }
+
+    fn wlit(&self, name: &str) -> &Literal {
+        let pos = self
+            .weights
+            .tensors
+            .tensors
+            .iter()
+            .position(|t| t.name == name)
+            .unwrap_or_else(|| panic!("weight {name}"));
+        &self.wlits[pos]
+    }
+
+    fn layer_lit(&self, l: usize, t: &str) -> &Literal {
+        // canonical order: 8 tensors per layer, then ln_f, emb
+        let idx = l * 8 + crate::model::LAYER_TENSORS.iter().position(|&x| x == t).unwrap();
+        &self.wlits[idx]
+    }
+
+    /// Per-layer policy roster: the first `full_attn_layers` keep full
+    /// attention (paper Appendix A), the rest run `policy_name`.
+    fn make_policies(&self, policy_name: &str) -> Result<Vec<Box<dyn Policy>>> {
+        let dims = self.dims();
+        (0..dims.layers)
+            .map(|l| {
+                let name = if l < self.cfg.lychee.full_attn_layers {
+                    "full"
+                } else {
+                    policy_name
+                };
+                make_policy(name, &self.cfg.lychee, l, dims.layers)
+                    .with_context(|| format!("unknown policy '{name}'"))
+            })
+            .collect()
+    }
+
+    /// Prefill a prompt through the monolithic prefill program; returns a
+    /// ready-to-decode sequence (Algorithm 1, phase 1).
+    pub fn prefill(&self, id: u64, prompt: &[u8], policy_name: &str) -> Result<Sequence> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        let dims = self.dims().clone();
+        let s_bucket = self.rt.prefill_bucket(prompt.len())?;
+        let mut tokens = vec![0i32; s_bucket];
+        for (i, &b) in prompt.iter().enumerate() {
+            tokens[i] = b as i32;
+        }
+        let tok_lit = lit_i32(&tokens, &[s_bucket])?;
+        let len_lit = Literal::scalar(prompt.len() as i32);
+        let mut args: Vec<&Literal> = self.wlits.iter().collect();
+        args.push(&tok_lit);
+        args.push(&len_lit);
+        let outs = self.rt.exec(&format!("prefill_s{s_bucket}"), &args)?;
+        let k_flat = to_f32_vec(&outs[0])?;
+        let v_flat = to_f32_vec(&outs[1])?;
+        let logits = to_f32_vec(&outs[3])?;
+
+        let mut kv = KvCache::new(dims.layers, dims.heads, dims.head_dim);
+        kv.load_prefill(&k_flat, &v_flat, s_bucket, prompt.len())?;
+
+        let mut policies = self.make_policies(policy_name)?;
+        for (l, p) in policies.iter_mut().enumerate() {
+            let keys = LayerKeys { cache: &kv, layer: l, n: prompt.len() };
+            p.build(&Ctx { keys: &keys, text: prompt, n: prompt.len() });
+        }
+        Ok(Sequence {
+            id,
+            text: prompt.to_vec(),
+            kv,
+            policies,
+            pos: prompt.len(),
+            last_logits: logits,
+            generated: Vec::new(),
+            timer: PhaseTimer::new(),
+            rng: Rng::new(id ^ 0x5EED),
+        })
+    }
+
+    /// Build a sequence with synthetic KV content of `n_tokens` (for the
+    /// long-context latency benches where transformer prefill at 64k on
+    /// CPU is impractical — TPOT depends on shapes, not values).
+    pub fn synth_sequence(
+        &self,
+        id: u64,
+        n_tokens: usize,
+        policy_name: &str,
+        seed: u64,
+    ) -> Result<Sequence> {
+        let dims = self.dims().clone();
+        let mut rng = Rng::new(seed);
+        let mut kv = KvCache::new(dims.layers, dims.heads, dims.head_dim);
+        let row = dims.d_model;
+        let text: Vec<u8> = (0..n_tokens)
+            .map(|_| b"lorem ipsum, dolor sit. amet\n"[rng.range(0, 29)])
+            .collect();
+        for _ in 0..n_tokens {
+            let k_rows: Vec<Vec<f32>> = (0..dims.layers).map(|_| rng.normal_vec(row)).collect();
+            let v_rows: Vec<Vec<f32>> = (0..dims.layers).map(|_| rng.normal_vec(row)).collect();
+            let kr: Vec<&[f32]> = k_rows.iter().map(|r| r.as_slice()).collect();
+            let vr: Vec<&[f32]> = v_rows.iter().map(|r| r.as_slice()).collect();
+            kv.append_token(&kr, &vr)?;
+        }
+        let mut policies = self.make_policies(policy_name)?;
+        for (l, p) in policies.iter_mut().enumerate() {
+            let keys = LayerKeys { cache: &kv, layer: l, n: n_tokens };
+            p.build(&Ctx { keys: &keys, text: &text, n: n_tokens });
+        }
+        Ok(Sequence {
+            id,
+            text,
+            kv,
+            policies,
+            pos: n_tokens,
+            last_logits: vec![0.0; dims.vocab],
+            generated: Vec::new(),
+            timer: PhaseTimer::new(),
+            rng: Rng::new(seed ^ 0xABCD),
+        })
+    }
+
+    /// One decode step for a batch of sequences (any size up to the
+    /// largest compiled batch bucket). Returns the sampled token per
+    /// sequence.
+    pub fn decode_batch(&self, seqs: &mut [&mut Sequence], sampling: &Sampling) -> Result<Vec<u8>> {
+        if seqs.is_empty() {
+            return Ok(Vec::new());
+        }
+        let dims = self.dims().clone();
+        let b_real = seqs.len();
+        let b = self.rt.batch_bucket(b_real)?;
+        let (h, dh, d) = (dims.heads, dims.head_dim, dims.d_model);
+
+        // sample this step's input token per sequence
+        let mut step_tokens = Vec::with_capacity(b_real);
+        for s in seqs.iter_mut() {
+            let t = s.sample(sampling);
+            s.text.push(t);
+            s.generated.push(t);
+            step_tokens.push(t);
+        }
+
+        // ---- embed -----------------------------------------------------
+        let mut tok_ids = vec![0i32; b];
+        let mut positions = vec![0i32; b];
+        for (i, s) in seqs.iter().enumerate() {
+            tok_ids[i] = step_tokens[i] as i32;
+            positions[i] = s.pos as i32;
+        }
+        let t_embed = std::time::Instant::now();
+        let tok_lit = lit_i32(&tok_ids, &[b])?;
+        let x_lit = self
+            .rt
+            .exec(&format!("embed_b{b}"), &[self.wlit("emb"), &tok_lit])?
+            .remove(0);
+        let mut x = to_f32_vec(&x_lit)?;
+        let d_embed = t_embed.elapsed() / b_real as u32;
+        for s in seqs.iter_mut() {
+            s.timer.add("embed", d_embed);
+        }
+
+        let pos_lit = lit_i32(&positions, &[b])?;
+        // reusable gather buffers
+        let (mut kbuf, mut vbuf, mut mbuf) = (Vec::new(), Vec::new(), Vec::new());
+
+        for l in 0..dims.layers {
+            // ---- qkv ----------------------------------------------------
+            let t0 = std::time::Instant::now();
+            let x_in = lit_f32(&x, &[b, d])?;
+            let qkv = self.rt.exec(
+                &format!("qkv_b{b}"),
+                &[
+                    &x_in,
+                    self.layer_lit(l, "ln1"),
+                    self.layer_lit(l, "wq"),
+                    self.layer_lit(l, "wk"),
+                    self.layer_lit(l, "wv"),
+                    &pos_lit,
+                ],
+            )?;
+            let q_all = to_f32_vec(&qkv[0])?; // [b,H,Dh]
+            let k_all = to_f32_vec(&qkv[1])?;
+            let v_all = to_f32_vec(&qkv[2])?;
+            let d_qkv = t0.elapsed() / b_real as u32;
+
+            // append new k/v rows to each sequence's cache (layer l)
+            for (i, s) in seqs.iter_mut().enumerate() {
+                s.timer.add("qkv", d_qkv);
+                let kr = &k_all[i * d..(i + 1) * d];
+                let vr = &v_all[i * d..(i + 1) * d];
+                s.kv.append_row(l, kr, vr);
+            }
+
+            // ---- retrieval (the L3 contribution) ------------------------
+            let mut selections: Vec<Vec<usize>> = Vec::with_capacity(b_real);
+            for (i, s) in seqs.iter_mut().enumerate() {
+                let t1 = std::time::Instant::now();
+                let q = &q_all[i * d..(i + 1) * d];
+                let Sequence { kv, policies, text, pos, .. } = &mut **s;
+                let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
+                let ctx = Ctx { keys: &keys, text, n: *pos };
+                let mut sel = policies[l].select(&ctx, q, *pos);
+                sel.push(*pos); // self-attention to the current token
+                s.timer.add("retrieval", t1.elapsed());
+                selections.push(sel);
+            }
+
+            // ---- gather + attention -------------------------------------
+            let max_active = selections.iter().map(|s| s.len()).max().unwrap();
+            let m = self.rt.attn_bucket(b, max_active)?;
+            let t2 = std::time::Instant::now();
+            let row = d;
+            let mut k_batch = vec![0.0f32; b * m * row];
+            let mut v_batch = vec![0.0f32; b * m * row];
+            let mut mask_batch = vec![0.0f32; b * m];
+            for (i, s) in seqs.iter().enumerate() {
+                s.kv.gather(l, &selections[i], m, &mut kbuf, &mut vbuf, &mut mbuf);
+                k_batch[i * m * row..(i + 1) * m * row].copy_from_slice(&kbuf);
+                v_batch[i * m * row..(i + 1) * m * row].copy_from_slice(&vbuf);
+                mask_batch[i * m..(i + 1) * m].copy_from_slice(&mbuf);
+            }
+            let q_lit = lit_f32(&q_all, &[b, h, dh])?;
+            let k_lit = lit_f32(&k_batch, &[b, m, h, dh])?;
+            let v_lit = lit_f32(&v_batch, &[b, m, h, dh])?;
+            let mask_lit = lit_f32(&mask_batch, &[b, m])?;
+            let d_gather = t2.elapsed() / b_real as u32;
+
+            let t3 = std::time::Instant::now();
+            let attn = self
+                .rt
+                .exec(&format!("attn_b{b}_m{m}"), &[&q_lit, &k_lit, &v_lit, &mask_lit])?
+                .remove(0);
+            let d_attn = t3.elapsed() / b_real as u32;
+
+            // ---- ffn ----------------------------------------------------
+            let t4 = std::time::Instant::now();
+            let x_resid = lit_f32(&x, &[b, d])?;
+            let x_out = self.rt.exec(
+                &format!("proj_ffn_b{b}"),
+                &[
+                    &attn,
+                    &x_resid,
+                    self.layer_lit(l, "wo"),
+                    self.layer_lit(l, "ln2"),
+                    self.layer_lit(l, "w1"),
+                    self.layer_lit(l, "w2"),
+                ],
+            )?;
+            x = to_f32_vec(&x_out[0])?;
+            let d_ffn = t4.elapsed() / b_real as u32;
+            for s in seqs.iter_mut() {
+                s.timer.add("gather", d_gather);
+                s.timer.add("attention", d_attn);
+                s.timer.add("ffn", d_ffn);
+            }
+        }
+
+        // ---- lm head ----------------------------------------------------
+        let t5 = std::time::Instant::now();
+        let x_lit = lit_f32(&x, &[b, d])?;
+        let logits = self
+            .rt
+            .exec(&format!("lm_head_b{b}"), &[&x_lit, self.wlit("ln_f"), self.wlit("emb")])?
+            .remove(0);
+        let logits_all = to_f32_vec(&logits)?;
+        let d_head = t5.elapsed() / b_real as u32;
+
+        // ---- commit + lazy index update ----------------------------------
+        for (i, s) in seqs.iter_mut().enumerate() {
+            s.timer.add("lm_head", d_head);
+            s.kv.commit_token();
+            let t6 = std::time::Instant::now();
+            let Sequence { kv, policies, text, pos, .. } = &mut **s;
+            for (l, policy) in policies.iter_mut().enumerate() {
+                let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
+                let ctx = Ctx { keys: &keys, text, n: *pos + 1 };
+                policy.on_token(&ctx, *pos);
+            }
+            s.timer.add("update", t6.elapsed());
+            s.pos += 1;
+            s.last_logits = logits_all[i * dims.vocab..(i + 1) * dims.vocab].to_vec();
+        }
+        Ok(step_tokens)
+    }
+
+    /// Convenience: single-sequence decode step.
+    pub fn decode_step(&self, seq: &mut Sequence, sampling: &Sampling) -> Result<u8> {
+        let mut refs = [seq];
+        Ok(self.decode_batch(&mut refs, sampling)?[0])
+    }
+
+    /// Generate `n` tokens greedily; returns the generated bytes.
+    pub fn generate(&self, seq: &mut Sequence, n: usize) -> Result<Vec<u8>> {
+        let sampling = Sampling::default();
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(self.decode_step(seq, &sampling)?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Option<Engine> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        Some(Engine::load(cfg).unwrap())
+    }
+
+    #[test]
+    fn prefill_produces_kv_and_logits() {
+        let Some(eng) = engine() else { return };
+        let seq = eng.prefill(1, b"Hello, lychee cluster!", "full").unwrap();
+        assert_eq!(seq.pos, 22);
+        assert_eq!(seq.kv.len(), 22);
+        assert_eq!(seq.last_logits.len(), 256);
+        assert!(seq.last_logits.iter().any(|&x| x != 0.0));
+    }
+
+    #[test]
+    fn decode_steps_are_deterministic() {
+        let Some(eng) = engine() else { return };
+        let mut a = eng.prefill(1, b"The quick brown fox.", "full").unwrap();
+        let mut b = eng.prefill(2, b"The quick brown fox.", "full").unwrap();
+        let ta = eng.generate(&mut a, 8).unwrap();
+        let tb = eng.generate(&mut b, 8).unwrap();
+        assert_eq!(ta, tb);
+        assert_eq!(a.pos, 28);
+        assert_eq!(a.kv.len(), 28);
+    }
+
+    #[test]
+    fn lychee_policy_decodes_and_stays_consistent() {
+        let Some(eng) = engine() else { return };
+        let prompt: Vec<u8> =
+            b"fn main() { println!(\"hi\"); } // some code, and prose. More text here!".to_vec();
+        let mut seq = eng.prefill(3, &prompt, "lychee").unwrap();
+        let toks = eng.generate(&mut seq, 6).unwrap();
+        assert_eq!(toks.len(), 6);
+        assert_eq!(seq.pos, prompt.len() + 6);
+        // budget >> context: lychee degenerates to full attention, so the
+        // generated tokens must match the full policy exactly
+        let mut full = eng.prefill(4, &prompt, "full").unwrap();
+        let toks_full = eng.generate(&mut full, 6).unwrap();
+        assert_eq!(toks, toks_full, "degenerate lychee != full");
+    }
+
+    #[test]
+    fn batched_decode_matches_single() {
+        let Some(eng) = engine() else { return };
+        let s = Sampling::default();
+        let mut a1 = eng.prefill(1, b"alpha beta gamma", "full").unwrap();
+        let mut a2 = eng.prefill(2, b"one two three four", "full").unwrap();
+        let t1 = eng.decode_step(&mut a1, &s).unwrap();
+        let t2 = eng.decode_step(&mut a2, &s).unwrap();
+        let mut b1 = eng.prefill(1, b"alpha beta gamma", "full").unwrap();
+        let mut b2 = eng.prefill(2, b"one two three four", "full").unwrap();
+        let mut batch = [&mut b1, &mut b2];
+        let toks = eng.decode_batch(&mut batch, &s).unwrap();
+        assert_eq!(toks, vec![t1, t2]);
+        for (x, y) in a1.last_logits.iter().zip(&b1.last_logits) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn synth_sequence_long_context_decode() {
+        let Some(eng) = engine() else { return };
+        let mut seq = eng.synth_sequence(9, 3000, "lychee", 7).unwrap();
+        let s = Sampling::default();
+        let _t = eng.decode_step(&mut seq, &s).unwrap();
+        assert_eq!(seq.pos, 3001);
+        // retrieval must have produced a bounded active set (budget 1024)
+        let counts = eng.rt.exec_counts.borrow();
+        assert!(
+            counts.keys().any(|k| k.starts_with("attn_b1_m1024") || k.starts_with("attn_b1_m2048")),
+            "expected small attn bucket, got {:?}",
+            counts.keys().collect::<Vec<_>>()
+        );
+        assert!(seq.index_bytes() > 0);
+        assert!(seq.kv_bytes() > 3000 * 128 * 4 * 2);
+    }
+
+    #[test]
+    fn phase_timer_populated() {
+        let Some(eng) = engine() else { return };
+        let mut seq = eng.prefill(5, b"timing test prompt.", "lychee").unwrap();
+        eng.generate(&mut seq, 3).unwrap();
+        for phase in ["embed", "qkv", "retrieval", "gather", "attention", "ffn", "update"] {
+            assert!(seq.timer.count(phase) > 0, "missing phase {phase}");
+        }
+    }
+}

@@ -1,0 +1,216 @@
+//! Latency-side experiment harnesses (engine + PJRT on the real decode
+//! path): Fig. 4 (TPOT vs context), Fig. 5a/5b (kernel-level breakdown),
+//! Fig. 8 (index memory overhead).
+
+use crate::config::Config;
+use crate::engine::{Engine, Sampling};
+use crate::eval::table::{ms, Table};
+use crate::util::stats::mean;
+use crate::util::timer::Stopwatch;
+
+/// Options for the latency harnesses.
+#[derive(Clone, Debug)]
+pub struct LatOpts {
+    pub quick: bool,
+    pub seed: u64,
+    pub cfg: Config,
+}
+
+impl LatOpts {
+    fn contexts(&self) -> Vec<usize> {
+        if self.quick {
+            vec![8 * 1024, 16 * 1024]
+        } else {
+            vec![8 * 1024, 16 * 1024, 32 * 1024, 64 * 1024]
+        }
+    }
+
+    fn steps(&self) -> usize {
+        if self.quick {
+            4
+        } else {
+            8
+        }
+    }
+}
+
+/// Measured TPOT for one policy at one context length.
+fn tpot_ms(engine: &Engine, ctx_len: usize, policy: &str, steps: usize, seed: u64) -> anyhow::Result<f64> {
+    let mut seq = engine.synth_sequence(seed, ctx_len, policy, seed)?;
+    let sampling = Sampling::default();
+    // warmup (compile + cache effects)
+    engine.decode_step(&mut seq, &sampling)?;
+    let mut samples = Vec::new();
+    for _ in 0..steps {
+        let sw = Stopwatch::start();
+        engine.decode_step(&mut seq, &sampling)?;
+        samples.push(sw.elapsed_ms());
+    }
+    Ok(mean(&samples))
+}
+
+/// Fig. 4 — end-to-end decoding TPOT across context lengths:
+/// Full attention vs ClusterKV vs LycheeCluster.
+pub fn fig4(opts: &LatOpts) -> anyhow::Result<Table> {
+    let engine = Engine::load(opts.cfg.clone())?;
+    let mut t = Table::new(
+        "Fig 4 — TPOT (ms/token) vs context length",
+        &["context", "full", "clusterkv", "lychee", "speedup(full/lychee)"],
+    );
+    for ctx in opts.contexts() {
+        let full = tpot_ms(&engine, ctx, "full", opts.steps(), opts.seed)?;
+        let ckv = tpot_ms(&engine, ctx, "clusterkv", opts.steps(), opts.seed)?;
+        let lychee = tpot_ms(&engine, ctx, "lychee", opts.steps(), opts.seed)?;
+        t.row(vec![
+            format!("{}k", ctx / 1024),
+            ms(full),
+            ms(ckv),
+            ms(lychee),
+            format!("{:.2}x", full / lychee),
+        ]);
+    }
+    t.emit("fig4_tpot");
+    Ok(t)
+}
+
+/// Fig. 5a — prefill-phase breakdown: index-construction time vs total
+/// prefill. The transformer-prefill component is measured at the largest
+/// compiled bucket and scaled O(S^2) to longer contexts (documented —
+/// prefill attention is quadratic and not accelerated by the paper).
+pub fn fig5a(opts: &LatOpts) -> anyhow::Result<Table> {
+    use crate::index::reps::FlatKeys;
+    use crate::sparse::{make_policy, Ctx};
+    let engine = Engine::load(opts.cfg.clone())?;
+
+    // measured real prefill at the largest bucket
+    let base_s = engine.rt.max_prompt();
+    let prompt = crate::workloads::trace::prompt_text(base_s, opts.seed);
+    let sw = Stopwatch::start();
+    let _seq = engine.prefill(1, &prompt, "full")?;
+    let base_prefill_ms = sw.elapsed_ms();
+
+    let mut t = Table::new(
+        "Fig 5a — prefill breakdown: index construction vs model prefill",
+        &["context", "model_prefill_ms(est)", "lychee_index_ms", "clusterkv_index_ms", "lychee_share"],
+    );
+    let d = engine.dims().d_model;
+    for ctx in opts.contexts() {
+        let est_prefill = base_prefill_ms * (ctx as f64 / base_s as f64).powi(2);
+        // synthetic keys at model dim for honest index-build cost
+        let mut rng = crate::util::rng::Rng::new(opts.seed);
+        let keys: Vec<f32> = rng.normal_vec(ctx * d);
+        let text = crate::workloads::trace::prompt_text(ctx, opts.seed ^ 1);
+        let src = FlatKeys::new(&keys, d);
+        let ctx_s = Ctx { keys: &src, text: &text, n: ctx };
+
+        let mut lychee = make_policy("lychee", &opts.cfg.lychee, 1, 4).unwrap();
+        let sw = Stopwatch::start();
+        lychee.build(&ctx_s);
+        let lychee_ms = sw.elapsed_ms();
+
+        let mut ckv = make_policy("clusterkv", &opts.cfg.lychee, 1, 4).unwrap();
+        let sw = Stopwatch::start();
+        ckv.build(&ctx_s);
+        let ckv_ms = sw.elapsed_ms();
+
+        let share = lychee_ms / (lychee_ms + est_prefill);
+        t.row(vec![
+            format!("{}k", ctx / 1024),
+            ms(est_prefill),
+            ms(lychee_ms),
+            ms(ckv_ms),
+            format!("{:.1}%", share * 100.0),
+        ]);
+    }
+    t.emit("fig5a_prefill_breakdown");
+    Ok(t)
+}
+
+/// Fig. 5b — single decode step latency breakdown at long context
+/// (paper uses 72k): retrieval / index update / sparse attention.
+pub fn fig5b(opts: &LatOpts) -> anyhow::Result<Table> {
+    let engine = Engine::load(opts.cfg.clone())?;
+    let ctx = if opts.quick { 16 * 1024 } else { 72 * 1024 };
+    let mut seq = engine.synth_sequence(1, ctx, "lychee", opts.seed)?;
+    let sampling = Sampling::default();
+    engine.decode_step(&mut seq, &sampling)?; // warmup
+    seq.timer.reset();
+    let steps = if opts.quick { 8 } else { 32 };
+    for _ in 0..steps {
+        engine.decode_step(&mut seq, &sampling)?;
+    }
+    let mut t = Table::new(
+        &format!("Fig 5b — decode-step breakdown at {}k context (lychee)", ctx / 1024),
+        &["phase", "total_ms", "share"],
+    );
+    for (phase, us, share) in seq.timer.breakdown() {
+        t.row(vec![phase.to_string(), ms(us / 1e3), format!("{:.1}%", share * 100.0)]);
+    }
+    let retr = seq.timer.total_us("retrieval");
+    let upd = seq.timer.total_us("update");
+    let attn = seq.timer.total_us("attention") + seq.timer.total_us("gather");
+    t.row(vec![
+        "retrieval+update / attention".into(),
+        String::new(),
+        format!("{:.1}%", 100.0 * (retr + upd) / attn.max(1.0)),
+    ]);
+    t.emit("fig5b_decode_breakdown");
+    Ok(t)
+}
+
+/// Fig. 8 — index memory overhead vs full KV cache across contexts.
+pub fn fig8(opts: &LatOpts) -> anyhow::Result<Table> {
+    let engine = Engine::load(opts.cfg.clone())?;
+    let mut t = Table::new(
+        "Fig 8 — KV cache vs index memory",
+        &["context", "kv_mb", "index_kb", "ratio"],
+    );
+    for ctx in opts.contexts() {
+        let seq = engine.synth_sequence(1, ctx, "lychee", opts.seed)?;
+        let kv = seq.kv_bytes() as f64;
+        let idx = seq.index_bytes() as f64;
+        t.row(vec![
+            format!("{}k", ctx / 1024),
+            format!("{:.1}", kv / 1e6),
+            format!("{:.1}", idx / 1e3),
+            format!("{:.2}%", 100.0 * idx / kv),
+        ]);
+    }
+    t.emit("fig8_memory");
+    Ok(t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn opts() -> Option<LatOpts> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        Some(LatOpts { quick: true, seed: 3, cfg })
+    }
+
+    #[test]
+    fn fig8_index_overhead_is_small() {
+        let Some(opts) = opts() else { return };
+        let t = fig8(&opts).unwrap();
+        for row in &t.rows {
+            let ratio: f64 = row[3].trim_end_matches('%').parse().unwrap();
+            assert!(ratio < 10.0, "index overhead too large: {ratio}%");
+        }
+    }
+
+    #[test]
+    fn fig5b_retrieval_is_minor_fraction() {
+        let Some(opts) = opts() else { return };
+        let t = fig5b(&opts).unwrap();
+        // find retrieval row share
+        let retr = t.rows.iter().find(|r| r[0] == "retrieval").unwrap();
+        let share: f64 = retr[2].trim_end_matches('%').parse().unwrap();
+        assert!(share < 50.0, "retrieval dominates decode step: {share}%");
+    }
+}

@@ -1,0 +1,126 @@
+//! Stability metrics for ultra-long generation (paper Appendix D,
+//! Fig. 9): step-to-step Jaccard similarity of the retrieved set and the
+//! window hit rate over a trailing window.
+
+use std::collections::HashSet;
+use std::collections::VecDeque;
+
+/// Jaccard similarity |A∩B| / |A∪B| (1.0 for two empty sets).
+pub fn jaccard(a: &HashSet<usize>, b: &HashSet<usize>) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let inter = a.intersection(b).count();
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+/// Streaming stability tracker: feed the retrieved set (as *cluster/block
+/// signatures*) per decode step; read back Jaccard and window-hit series.
+pub struct StabilityTracker {
+    window: usize,
+    history: VecDeque<HashSet<usize>>,
+    prev: Option<HashSet<usize>>,
+    pub jaccard_series: Vec<f64>,
+    pub window_hit_series: Vec<f64>,
+}
+
+impl StabilityTracker {
+    pub fn new(window: usize) -> Self {
+        StabilityTracker {
+            window,
+            history: VecDeque::new(),
+            prev: None,
+            jaccard_series: Vec::new(),
+            window_hit_series: Vec::new(),
+        }
+    }
+
+    /// Signature used by the paper: the set of retrieved clusters. We use
+    /// 64-token block ids of the selected tokens, a policy-agnostic proxy.
+    pub fn signature(selected: &[usize]) -> HashSet<usize> {
+        selected.iter().map(|&t| t / 64).collect()
+    }
+
+    pub fn record(&mut self, sig: HashSet<usize>) {
+        if let Some(prev) = &self.prev {
+            self.jaccard_series.push(jaccard(prev, &sig));
+        }
+        if !self.history.is_empty() {
+            let union: HashSet<usize> =
+                self.history.iter().flat_map(|s| s.iter().copied()).collect();
+            let hit = if sig.is_empty() {
+                1.0
+            } else {
+                sig.iter().filter(|x| union.contains(x)).count() as f64 / sig.len() as f64
+            };
+            self.window_hit_series.push(hit);
+        }
+        self.history.push_back(sig.clone());
+        if self.history.len() > self.window {
+            self.history.pop_front();
+        }
+        self.prev = Some(sig);
+    }
+
+    pub fn mean_jaccard(&self) -> f64 {
+        crate::util::stats::mean(&self.jaccard_series)
+    }
+
+    pub fn mean_window_hit(&self) -> f64 {
+        crate::util::stats::mean(&self.window_hit_series)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn set(v: &[usize]) -> HashSet<usize> {
+        v.iter().copied().collect()
+    }
+
+    #[test]
+    fn jaccard_basics() {
+        assert_eq!(jaccard(&set(&[1, 2]), &set(&[1, 2])), 1.0);
+        assert_eq!(jaccard(&set(&[1]), &set(&[2])), 0.0);
+        assert!((jaccard(&set(&[1, 2, 3]), &set(&[2, 3, 4])) - 0.5).abs() < 1e-12);
+        assert_eq!(jaccard(&set(&[]), &set(&[])), 1.0);
+    }
+
+    #[test]
+    fn tracker_stable_stream() {
+        let mut tr = StabilityTracker::new(4);
+        for _ in 0..10 {
+            tr.record(set(&[1, 2, 3]));
+        }
+        assert!((tr.mean_jaccard() - 1.0).abs() < 1e-12);
+        assert!((tr.mean_window_hit() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tracker_detects_drift() {
+        let mut tr = StabilityTracker::new(4);
+        for i in 0..10 {
+            tr.record(set(&[i, i + 1]));
+        }
+        assert!(tr.mean_jaccard() < 0.6);
+    }
+
+    #[test]
+    fn window_hit_sees_recent_history() {
+        let mut tr = StabilityTracker::new(3);
+        tr.record(set(&[1]));
+        tr.record(set(&[2]));
+        tr.record(set(&[1])); // 1 still in window -> hit 1.0
+        assert_eq!(*tr.window_hit_series.last().unwrap(), 1.0);
+        tr.record(set(&[9])); // unseen -> 0.0
+        assert_eq!(*tr.window_hit_series.last().unwrap(), 0.0);
+    }
+
+    #[test]
+    fn signature_blocks_tokens() {
+        let s = StabilityTracker::signature(&[0, 1, 63, 64, 200]);
+        assert_eq!(s, set(&[0, 1, 3]));
+    }
+}

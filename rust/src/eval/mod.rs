@@ -1,0 +1,12 @@
+//! Evaluation: policy runners over synthetic tasks, stability metrics,
+//! and the per-table/per-figure harnesses that regenerate every result
+//! in the paper's evaluation section (see DESIGN.md experiment index).
+
+pub mod harness;
+pub mod latency;
+pub mod metrics;
+pub mod runner;
+pub mod table;
+
+pub use runner::{run_cot, run_task, CotResult, TaskResult};
+pub use table::Table;

@@ -1,0 +1,542 @@
+//! The three-tier index: construction (prefill phase) and top-down
+//! upper-bound pruned retrieval (decoding phase). Paper §4.3–4.4.
+
+use super::kmeans::spherical_kmeans;
+use super::reps::{pool_rep, KeySource, Pooling};
+use crate::chunking::Chunk;
+use crate::linalg;
+
+/// Construction parameters (defaults = paper Appendix A).
+#[derive(Clone, Debug)]
+pub struct IndexParams {
+    /// Average chunks per fine cluster (L = ceil(M / this)). Paper: 2.
+    pub avg_cluster_size: usize,
+    /// Hard cap on coarse units P. Paper: 64.
+    pub max_coarse_units: usize,
+    /// Target fine clusters per coarse unit (sets P before the cap).
+    pub coarse_fanout: usize,
+    /// Spherical k-means iterations. Paper: 10.
+    pub kmeans_iters: usize,
+    pub pooling: Pooling,
+    pub seed: u64,
+    /// Lazy-update refinement: if a dynamic chunk's similarity to the
+    /// nearest cluster centroid falls below this, sprout a new cluster
+    /// instead of inflating that cluster's radius (keeps UB bounds tight
+    /// under topic drift during long generation — Appendix D's decay is
+    /// the failure mode this prevents).
+    pub sprout_threshold: f32,
+}
+
+impl Default for IndexParams {
+    fn default() -> Self {
+        IndexParams {
+            avg_cluster_size: 2,
+            max_coarse_units: 64,
+            coarse_fanout: 16,
+            kmeans_iters: 10,
+            pooling: Pooling::Mean,
+            seed: 0,
+            sprout_threshold: 0.6,
+        }
+    }
+}
+
+/// Leaf: a structure-aware chunk with its representative key.
+#[derive(Clone, Debug)]
+pub struct IndexChunk {
+    pub start: usize,
+    pub len: usize,
+    /// Unit-norm representative (mean/max pool of token keys).
+    pub rep: Vec<f32>,
+    /// Owning fine cluster.
+    pub cluster: usize,
+}
+
+impl IndexChunk {
+    pub fn end(&self) -> usize {
+        self.start + self.len
+    }
+}
+
+/// Middle tier: fine cluster with centroid + covering radius over its
+/// member chunk representatives.
+#[derive(Clone, Debug)]
+pub struct FineCluster {
+    pub centroid: Vec<f32>,
+    pub radius: f32,
+    pub chunks: Vec<usize>,
+    /// Owning coarse unit.
+    pub unit: usize,
+    /// Total tokens covered (cached for budget-filling retrieval).
+    pub tokens: usize,
+}
+
+/// Top tier: coarse unit with centroid + covering radius over its member
+/// fine-cluster centroids.
+#[derive(Clone, Debug)]
+pub struct CoarseUnit {
+    pub centroid: Vec<f32>,
+    pub radius: f32,
+    pub clusters: Vec<usize>,
+}
+
+/// The hierarchical KV index for one attention layer.
+#[derive(Clone, Debug)]
+pub struct HierarchicalIndex {
+    pub d: usize,
+    pub params: IndexParams,
+    pub chunks: Vec<IndexChunk>,
+    pub fine: Vec<FineCluster>,
+    pub coarse: Vec<CoarseUnit>,
+}
+
+/// Eqn. 2: `UB(q, u) = q·μ_u + ‖q‖ · r_u`.
+#[inline]
+pub fn upper_bound(q: &[f32], q_norm: f32, centroid: &[f32], radius: f32) -> f32 {
+    linalg::dot(q, centroid) + q_norm * radius
+}
+
+impl HierarchicalIndex {
+    /// Build the full pyramid from chunk spans over a key source
+    /// (prefill phase, Algorithm 1 lines 2–3).
+    pub fn build(keys: &dyn KeySource, spans: &[Chunk], params: IndexParams) -> Self {
+        let d = keys.dim();
+        if spans.is_empty() {
+            return HierarchicalIndex { d, params, chunks: Vec::new(), fine: Vec::new(), coarse: Vec::new() };
+        }
+
+        // --- leaf tier: representatives --------------------------------
+        let mut chunks: Vec<IndexChunk> = spans
+            .iter()
+            .map(|c| IndexChunk {
+                start: c.start,
+                len: c.len,
+                rep: pool_rep(params.pooling, keys, c.start, c.len),
+                cluster: 0,
+            })
+            .collect();
+        let m = chunks.len();
+        let reps: Vec<f32> = chunks.iter().flat_map(|c| c.rep.iter().copied()).collect();
+
+        // --- fine tier: spherical k-means over reps ---------------------
+        let l = m.div_ceil(params.avg_cluster_size.max(1)).max(1);
+        let fine_res = spherical_kmeans(&reps, d, l, params.kmeans_iters, params.seed);
+        let mut fine: Vec<FineCluster> = (0..fine_res.k)
+            .map(|c| FineCluster {
+                centroid: fine_res.centroid(c).to_vec(),
+                radius: 0.0,
+                chunks: Vec::new(),
+                unit: 0,
+                tokens: 0,
+            })
+            .collect();
+        for (ci, chunk) in chunks.iter_mut().enumerate() {
+            let f = fine_res.assignment[ci];
+            chunk.cluster = f;
+            fine[f].chunks.push(ci);
+            fine[f].tokens += chunk.len;
+            fine[f].radius = fine[f].radius.max(linalg::dist(&chunk.rep, &fine[f].centroid));
+        }
+        // drop empty clusters (k-means reseeding guarantees none, but be safe)
+        debug_assert!(fine.iter().all(|f| !f.chunks.is_empty()));
+
+        // --- coarse tier: k-means over fine centroids -------------------
+        let lk = fine.len();
+        let p = lk
+            .div_ceil(params.coarse_fanout.max(1))
+            .clamp(1, params.max_coarse_units.max(1));
+        let cents: Vec<f32> = fine.iter().flat_map(|f| f.centroid.iter().copied()).collect();
+        let coarse_res = spherical_kmeans(&cents, d, p, params.kmeans_iters, params.seed ^ 0x5EED);
+        let mut coarse: Vec<CoarseUnit> = (0..coarse_res.k)
+            .map(|u| CoarseUnit {
+                centroid: coarse_res.centroid(u).to_vec(),
+                radius: 0.0,
+                clusters: Vec::new(),
+            })
+            .collect();
+        for (fi, f) in fine.iter_mut().enumerate() {
+            let u = coarse_res.assignment[fi];
+            f.unit = u;
+            coarse[u].clusters.push(fi);
+            coarse[u].radius = coarse[u].radius.max(linalg::dist(&f.centroid, &coarse[u].centroid));
+        }
+
+        HierarchicalIndex { d, params, chunks, fine, coarse }
+    }
+
+    pub fn num_chunks(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.fine.len()
+    }
+
+    pub fn num_units(&self) -> usize {
+        self.coarse.len()
+    }
+
+    /// Total indexed tokens.
+    pub fn num_tokens(&self) -> usize {
+        self.chunks.iter().map(|c| c.len).sum()
+    }
+
+    /// Top-down pruned search (Algorithm 1 steps 1–2): returns fine
+    /// cluster ids with their UB scores, descending, drawn from the
+    /// top-`kg` coarse units and capped at `kc` clusters.
+    pub fn search_clusters(&self, q: &[f32], kg: usize, kc: usize) -> Vec<(usize, f32)> {
+        if self.coarse.is_empty() {
+            return Vec::new();
+        }
+        let qn = linalg::norm(q);
+        // coarse level
+        let unit_scores: Vec<f32> = self
+            .coarse
+            .iter()
+            .map(|u| upper_bound(q, qn, &u.centroid, u.radius))
+            .collect();
+        let top_units = linalg::top_k(&unit_scores, kg);
+        // fine level within surviving units
+        let mut cand: Vec<(usize, f32)> = Vec::new();
+        for &u in &top_units {
+            for &f in &self.coarse[u].clusters {
+                let fc = &self.fine[f];
+                cand.push((f, upper_bound(q, qn, &fc.centroid, fc.radius)));
+            }
+        }
+        cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        cand.truncate(kc);
+        cand
+    }
+
+    /// Full retrieval (Algorithm 1 steps 1–3): expand the selected
+    /// clusters' chunks into token indices, filling up to `budget`
+    /// tokens. Returns ascending token ids.
+    ///
+    /// Clusters are consumed in UB order; a cluster whose chunks would
+    /// overflow the remaining budget is partially taken chunk-by-chunk
+    /// (never splitting a chunk — semantic atomicity is the whole point).
+    pub fn select_tokens(&self, q: &[f32], kg: usize, kc: usize, budget: usize) -> Vec<usize> {
+        let clusters = self.search_clusters(q, kg, kc);
+        let qn = linalg::norm(q);
+        let mut out: Vec<usize> = Vec::with_capacity(budget);
+        let mut remaining = budget;
+        'outer: for (f, _) in clusters {
+            let fc = &self.fine[f];
+            if fc.tokens <= remaining {
+                for &ci in &fc.chunks {
+                    let c = &self.chunks[ci];
+                    out.extend(c.start..c.end());
+                }
+                remaining -= fc.tokens;
+            } else {
+                // partial: take member chunks in rep-UB order until full
+                let mut member_scores: Vec<(usize, f32)> = fc
+                    .chunks
+                    .iter()
+                    .map(|&ci| (ci, upper_bound(q, qn, &self.chunks[ci].rep, 0.0)))
+                    .collect();
+                member_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+                for (ci, _) in member_scores {
+                    let c = &self.chunks[ci];
+                    if c.len > remaining {
+                        continue;
+                    }
+                    out.extend(c.start..c.end());
+                    remaining -= c.len;
+                    if remaining == 0 {
+                        break 'outer;
+                    }
+                }
+            }
+            if remaining == 0 {
+                break;
+            }
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Exhaustive chunk scan (no hierarchy) — the ablation baseline for
+    /// `benches/ablation_ub.rs` and recall ground truth at chunk level.
+    pub fn select_tokens_flat(&self, q: &[f32], budget: usize) -> Vec<usize> {
+        let scores: Vec<f32> = self.chunks.iter().map(|c| linalg::dot(q, &c.rep)).collect();
+        let order = linalg::top_k(&scores, self.chunks.len());
+        let mut out = Vec::with_capacity(budget);
+        let mut remaining = budget;
+        for ci in order {
+            let c = &self.chunks[ci];
+            if c.len > remaining {
+                continue;
+            }
+            out.extend(c.start..c.end());
+            remaining -= c.len;
+            if remaining == 0 {
+                break;
+            }
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Index memory footprint in bytes (Fig. 8): chunk representatives +
+    /// centroids + radii + membership tables.
+    pub fn bytes(&self) -> usize {
+        let f32s = self.chunks.len() * self.d          // reps
+            + self.fine.len() * (self.d + 1)           // centroids + radii
+            + self.coarse.len() * (self.d + 1);
+        let meta = self.chunks.len() * (2 * 8 + 8)      // start/len/cluster
+            + self.fine.iter().map(|f| f.chunks.len() * 8 + 24).sum::<usize>()
+            + self.coarse.iter().map(|u| u.clusters.len() * 8 + 8).sum::<usize>();
+        f32s * 4 + meta
+    }
+
+    /// Structural invariants (used by tests and debug builds):
+    /// partition of chunks into clusters, clusters into units, and
+    /// covering-radius soundness at both levels.
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let mut seen = vec![false; self.chunks.len()];
+        for (fi, f) in self.fine.iter().enumerate() {
+            if f.chunks.is_empty() {
+                return Err(format!("fine cluster {fi} empty"));
+            }
+            let mut tokens = 0;
+            for &ci in &f.chunks {
+                if seen[ci] {
+                    return Err(format!("chunk {ci} in two clusters"));
+                }
+                seen[ci] = true;
+                if self.chunks[ci].cluster != fi {
+                    return Err(format!("chunk {ci} back-pointer wrong"));
+                }
+                let dist = linalg::dist(&self.chunks[ci].rep, &f.centroid);
+                if dist > f.radius + 1e-4 {
+                    return Err(format!("cluster {fi} radius {} < dist {dist}", f.radius));
+                }
+                tokens += self.chunks[ci].len;
+            }
+            if tokens != f.tokens {
+                return Err(format!("cluster {fi} token count stale"));
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            return Err("orphan chunk".into());
+        }
+        let mut fseen = vec![false; self.fine.len()];
+        for (ui, u) in self.coarse.iter().enumerate() {
+            for &fi in &u.clusters {
+                if fseen[fi] {
+                    return Err(format!("cluster {fi} in two units"));
+                }
+                fseen[fi] = true;
+                if self.fine[fi].unit != ui {
+                    return Err(format!("cluster {fi} unit back-pointer wrong"));
+                }
+                let dist = linalg::dist(&self.fine[fi].centroid, &u.centroid);
+                if dist > u.radius + 1e-4 {
+                    return Err(format!("unit {ui} radius {} < dist {dist}", u.radius));
+                }
+            }
+        }
+        if !fseen.iter().all(|&s| s) {
+            return Err("orphan cluster".into());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::{Chunker, StructureAwareChunker};
+    use crate::index::reps::FlatKeys;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Keys with planted topic structure: `units` groups of contiguous
+    /// tokens, each group near a random direction.
+    fn topic_keys(rng: &mut Rng, units: usize, per: usize, d: usize, noise: f32) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let dirs: Vec<Vec<f32>> = (0..units).map(|_| rng.unit_vec(d)).collect();
+        let mut keys = Vec::new();
+        for dir in &dirs {
+            for _ in 0..per {
+                let mut k = dir.clone();
+                for x in k.iter_mut() {
+                    *x += noise * rng.normal();
+                }
+                keys.extend_from_slice(&k);
+            }
+        }
+        (keys, dirs)
+    }
+
+    fn fixed_spans(n: usize, size: usize) -> Vec<Chunk> {
+        let mut out = Vec::new();
+        let mut s = 0;
+        while s < n {
+            let len = size.min(n - s);
+            out.push(Chunk { start: s, len });
+            s += len;
+        }
+        out
+    }
+
+    fn build_topic_index(seed: u64, units: usize, per: usize, d: usize) -> (HierarchicalIndex, Vec<f32>, Vec<Vec<f32>>) {
+        let mut rng = Rng::new(seed);
+        let (keys, dirs) = topic_keys(&mut rng, units, per, d, 0.15);
+        let spans = fixed_spans(units * per, 8);
+        let idx = HierarchicalIndex::build(&FlatKeys::new(&keys, d), &spans, IndexParams::default());
+        (idx, keys, dirs)
+    }
+
+    #[test]
+    fn builds_three_tiers_with_expected_sizes() {
+        let (idx, ..) = build_topic_index(0, 8, 32, 16);
+        assert_eq!(idx.num_tokens(), 8 * 32);
+        assert_eq!(idx.num_chunks(), 8 * 32 / 8);
+        // L = ceil(M/2)
+        assert_eq!(idx.num_clusters(), idx.num_chunks().div_ceil(2));
+        assert!(idx.num_units() <= 64);
+        assert!(idx.num_units() >= 1);
+        idx.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn empty_input() {
+        let keys: Vec<f32> = Vec::new();
+        let idx = HierarchicalIndex::build(&FlatKeys::new(&keys, 4), &[], IndexParams::default());
+        assert_eq!(idx.num_chunks(), 0);
+        assert!(idx.search_clusters(&[1.0, 0.0, 0.0, 0.0], 4, 4).is_empty());
+        assert!(idx.select_tokens(&[1.0, 0.0, 0.0, 0.0], 4, 4, 100).is_empty());
+    }
+
+    #[test]
+    fn ub_soundness_over_descendants() {
+        // UB(q, cluster) >= q·rep for every member chunk; UB(q, unit) >=
+        // q·centroid for every member cluster — the Eqn. 2 guarantee.
+        let (idx, ..) = build_topic_index(1, 6, 24, 16);
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let q: Vec<f32> = rng.normal_vec(16);
+            let qn = linalg::norm(&q);
+            for f in &idx.fine {
+                let ub = upper_bound(&q, qn, &f.centroid, f.radius);
+                for &ci in &f.chunks {
+                    let dp = linalg::dot(&q, &idx.chunks[ci].rep);
+                    assert!(dp <= ub + 1e-3, "cluster UB violated: {dp} > {ub}");
+                }
+            }
+            for u in &idx.coarse {
+                let ub = upper_bound(&q, qn, &u.centroid, u.radius);
+                for &fi in &u.clusters {
+                    let dp = linalg::dot(&q, &idx.fine[fi].centroid);
+                    assert!(dp <= ub + 1e-3, "unit UB violated: {dp} > {ub}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn retrieval_finds_planted_topic() {
+        let (idx, _keys, dirs) = build_topic_index(2, 8, 32, 16);
+        // query = topic direction 3 -> retrieved tokens should be mostly
+        // from group 3's token range [3*32, 4*32)
+        let q = &dirs[3];
+        let toks = idx.select_tokens(q, 4, 16, 64);
+        assert!(!toks.is_empty());
+        let hits = toks.iter().filter(|&&t| (96..128).contains(&t)).count();
+        assert!(
+            hits >= 24,
+            "only {hits}/{} retrieved tokens in target group",
+            toks.len()
+        );
+    }
+
+    #[test]
+    fn budget_is_respected_and_chunks_kept_atomic() {
+        let (idx, ..) = build_topic_index(3, 4, 32, 8);
+        let mut rng = Rng::new(5);
+        for _ in 0..20 {
+            let q = rng.unit_vec(8);
+            let budget = rng.range(8, 120);
+            let toks = idx.select_tokens(&q, 4, 64, budget);
+            assert!(toks.len() <= budget, "{} > {budget}", toks.len());
+            // atomicity: every retrieved token's chunk is fully retrieved
+            let set: std::collections::HashSet<usize> = toks.iter().copied().collect();
+            for c in &idx.chunks {
+                let inside = (c.start..c.end()).filter(|t| set.contains(t)).count();
+                assert!(
+                    inside == 0 || inside == c.len,
+                    "chunk [{}, {}) partially retrieved ({inside}/{})",
+                    c.start,
+                    c.end(),
+                    c.len
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wide_search_matches_flat_scan() {
+        // with kg=#units and kc=#clusters the pruned search must equal
+        // the exhaustive scan's token set for the same budget
+        let (idx, ..) = build_topic_index(4, 4, 16, 8);
+        let mut rng = Rng::new(7);
+        for _ in 0..10 {
+            let q = rng.unit_vec(8);
+            let a = idx.select_tokens(&q, idx.num_units(), idx.num_clusters(), 48);
+            let b = idx.select_tokens_flat(&q, 48);
+            // not necessarily identical (cluster-ordered vs chunk-ordered
+            // fill) but overlap must be high
+            let sa: std::collections::HashSet<_> = a.iter().collect();
+            let inter = b.iter().filter(|t| sa.contains(t)).count();
+            assert!(
+                inter as f64 >= 0.5 * b.len() as f64,
+                "overlap {inter}/{}",
+                b.len()
+            );
+        }
+    }
+
+    #[test]
+    fn search_clusters_descending_ub() {
+        let (idx, ..) = build_topic_index(6, 5, 20, 8);
+        let mut rng = Rng::new(11);
+        let q = rng.unit_vec(8);
+        let res = idx.search_clusters(&q, 3, 10);
+        for w in res.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn bytes_scale_with_chunks() {
+        let (small, ..) = build_topic_index(8, 2, 16, 8);
+        let (large, ..) = build_topic_index(8, 8, 32, 8);
+        assert!(large.bytes() > small.bytes());
+    }
+
+    #[test]
+    fn prop_invariants_hold_for_random_builds() {
+        prop::check("index invariants", 25, |g| {
+            let d = 8;
+            let n_tokens = g.usize_in(1..300);
+            let mut rng = Rng::new(g.usize_in(0..1_000_000) as u64);
+            let keys: Vec<f32> = rng.normal_vec(n_tokens * d);
+            let chunker = StructureAwareChunker::new(2, 12);
+            // fake text to derive spans of varying length
+            let text: Vec<u8> = (0..n_tokens).map(|_| b"ab cd. ef, gh\n"[rng.range(0, 14)]).collect();
+            let spans = chunker.chunk(&text);
+            let mut params = IndexParams::default();
+            params.avg_cluster_size = g.usize_in(1..5);
+            params.max_coarse_units = g.usize_in(1..20);
+            params.kmeans_iters = g.usize_in(1..6);
+            let idx = HierarchicalIndex::build(&FlatKeys::new(&keys, d), &spans, params);
+            idx.check_invariants().map_err(|e| format!("invariant: {e}"))?;
+            prop_assert!(idx.num_units() <= 20, "units {}", idx.num_units());
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,283 @@
+//! Spherical k-means (Hornik et al., 2012) over unit vectors.
+//!
+//! Assignment maximizes the inner product (equivalently minimizes the
+//! chord distance on the sphere); centroids are L2-normalized means.
+//! Initialization is k-means++-style over chord distances with a
+//! deterministic seed; empty clusters are reseeded to the point farthest
+//! from its centroid. Iteration count is fixed (paper: 10, Appendix A —
+//! "initialization and convergence iterations have negligible impact").
+
+use crate::linalg;
+use crate::util::rng::Rng;
+
+/// Result of a clustering run.
+#[derive(Clone, Debug)]
+pub struct KMeansResult {
+    /// `k` centroids, row-major `[k, d]`, unit norm.
+    pub centroids: Vec<f32>,
+    /// Cluster id per input point.
+    pub assignment: Vec<usize>,
+    pub k: usize,
+    pub d: usize,
+}
+
+impl KMeansResult {
+    pub fn centroid(&self, c: usize) -> &[f32] {
+        &self.centroids[c * self.d..(c + 1) * self.d]
+    }
+
+    /// Members of each cluster.
+    pub fn members(&self) -> Vec<Vec<usize>> {
+        let mut out = vec![Vec::new(); self.k];
+        for (i, &c) in self.assignment.iter().enumerate() {
+            out[c].push(i);
+        }
+        out
+    }
+}
+
+/// Run spherical k-means on `n` unit vectors (`points`: `[n, d]`).
+///
+/// `k` is clamped to `n`. Deterministic for a given `seed`.
+pub fn spherical_kmeans(points: &[f32], d: usize, k: usize, iters: usize, seed: u64) -> KMeansResult {
+    assert!(d > 0 && points.len() % d == 0);
+    let n = points.len() / d;
+    assert!(n > 0, "kmeans on empty input");
+    let k = k.clamp(1, n);
+    let point = |i: usize| &points[i * d..(i + 1) * d];
+
+    // ---- k-means++ init over chord distance ------------------------------
+    let mut rng = Rng::new(seed);
+    let mut centroids = Vec::with_capacity(k * d);
+    let first = rng.range(0, n);
+    centroids.extend_from_slice(point(first));
+    let mut min_dist_sq: Vec<f32> = (0..n)
+        .map(|i| linalg::dist_sq(point(i), point(first)))
+        .collect();
+    while centroids.len() < k * d {
+        let total: f64 = min_dist_sq.iter().map(|&x| x as f64).sum();
+        let pick = if total <= 1e-12 {
+            rng.range(0, n) // all points identical
+        } else {
+            let mut target = rng.f64() * total;
+            let mut idx = n - 1;
+            for (i, &dsq) in min_dist_sq.iter().enumerate() {
+                target -= dsq as f64;
+                if target <= 0.0 {
+                    idx = i;
+                    break;
+                }
+            }
+            idx
+        };
+        centroids.extend_from_slice(point(pick));
+        let c = centroids.len() / d - 1;
+        for i in 0..n {
+            let dsq = linalg::dist_sq(point(i), &centroids[c * d..(c + 1) * d]);
+            min_dist_sq[i] = min_dist_sq[i].min(dsq);
+        }
+    }
+
+    // ---- Lloyd iterations (inner-product assignment) ----------------------
+    let mut assignment = vec![0usize; n];
+    for _ in 0..iters.max(1) {
+        // assign
+        for i in 0..n {
+            let p = point(i);
+            let mut best = 0;
+            let mut best_dot = f32::NEG_INFINITY;
+            for c in 0..k {
+                let dp = linalg::dot(p, &centroids[c * d..(c + 1) * d]);
+                if dp > best_dot {
+                    best_dot = dp;
+                    best = c;
+                }
+            }
+            assignment[i] = best;
+        }
+        // update
+        let mut sums = vec![0.0f32; k * d];
+        let mut counts = vec![0usize; k];
+        for i in 0..n {
+            let c = assignment[i];
+            linalg::add_assign(&mut sums[c * d..(c + 1) * d], point(i));
+            counts[c] += 1;
+        }
+        for c in 0..k {
+            if counts[c] == 0 {
+                // reseed empty cluster at the point farthest from its centroid
+                let far = (0..n)
+                    .max_by(|&a, &b| {
+                        let da = linalg::dist_sq(point(a), &centroids[assignment[a] * d..(assignment[a] + 1) * d]);
+                        let db = linalg::dist_sq(point(b), &centroids[assignment[b] * d..(assignment[b] + 1) * d]);
+                        da.partial_cmp(&db).unwrap()
+                    })
+                    .unwrap();
+                centroids[c * d..(c + 1) * d].copy_from_slice(point(far));
+                assignment[far] = c;
+                continue;
+            }
+            let row = &mut centroids[c * d..(c + 1) * d];
+            row.copy_from_slice(&sums[c * d..(c + 1) * d]);
+            linalg::scale(row, 1.0 / counts[c] as f32);
+            if linalg::normalize(row) < 1e-12 {
+                // degenerate (sum cancelled out): keep direction of first member
+                let m = assignment.iter().position(|&a| a == c).unwrap();
+                row.copy_from_slice(point(m));
+            }
+        }
+    }
+    // final assignment pass so `assignment` matches returned centroids
+    for i in 0..n {
+        let p = point(i);
+        let mut best = 0;
+        let mut best_dot = f32::NEG_INFINITY;
+        for c in 0..k {
+            let dp = linalg::dot(p, &centroids[c * d..(c + 1) * d]);
+            if dp > best_dot {
+                best_dot = dp;
+                best = c;
+            }
+        }
+        assignment[i] = best;
+    }
+    KMeansResult { centroids, assignment, k, d }
+}
+
+/// Mean intra-cluster cosine (clustering quality metric for tests/benches).
+pub fn mean_intra_cosine(points: &[f32], d: usize, res: &KMeansResult) -> f64 {
+    let n = points.len() / d;
+    let mut total = 0.0f64;
+    for i in 0..n {
+        total += linalg::dot(&points[i * d..(i + 1) * d], res.centroid(res.assignment[i])) as f64;
+    }
+    total / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    /// Points drawn around `k` well-separated directions.
+    fn clustered_points(rng: &mut Rng, k: usize, per: usize, d: usize, noise: f32) -> (Vec<f32>, Vec<usize>) {
+        let centers: Vec<Vec<f32>> = (0..k).map(|_| rng.unit_vec(d)).collect();
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for (ci, c) in centers.iter().enumerate() {
+            for _ in 0..per {
+                let mut p = c.clone();
+                for x in p.iter_mut() {
+                    *x += noise * rng.normal();
+                }
+                linalg::normalize(&mut p);
+                pts.extend_from_slice(&p);
+                labels.push(ci);
+            }
+        }
+        (pts, labels)
+    }
+
+    #[test]
+    fn recovers_separated_clusters() {
+        let mut rng = Rng::new(1);
+        let (pts, labels) = clustered_points(&mut rng, 4, 25, 16, 0.05);
+        let res = spherical_kmeans(&pts, 16, 4, 10, 7);
+        // same-label points should share a cluster (purity ~1)
+        let mut pure = 0;
+        for chunk in labels.chunks(25) {
+            let ids: Vec<usize> = chunk
+                .iter()
+                .enumerate()
+                .map(|(j, &l)| res.assignment[l * 25 + j])
+                .collect();
+            if ids.iter().all(|&c| c == ids[0]) {
+                pure += 1;
+            }
+        }
+        assert!(pure >= 3, "only {pure}/4 clusters pure");
+    }
+
+    #[test]
+    fn centroids_are_unit_norm() {
+        let mut rng = Rng::new(2);
+        let pts: Vec<f32> = (0..50).flat_map(|_| rng.unit_vec(8)).collect();
+        let res = spherical_kmeans(&pts, 8, 7, 10, 3);
+        for c in 0..res.k {
+            let n = linalg::norm(res.centroid(c));
+            assert!((n - 1.0).abs() < 1e-4, "centroid {c} norm {n}");
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let mut rng = Rng::new(3);
+        let pts: Vec<f32> = (0..40).flat_map(|_| rng.unit_vec(4)).collect();
+        let a = spherical_kmeans(&pts, 4, 5, 10, 42);
+        let b = spherical_kmeans(&pts, 4, 5, 10, 42);
+        assert_eq!(a.assignment, b.assignment);
+        assert_eq!(a.centroids, b.centroids);
+    }
+
+    #[test]
+    fn k_clamped_to_n() {
+        let mut rng = Rng::new(4);
+        let pts: Vec<f32> = (0..3).flat_map(|_| rng.unit_vec(4)).collect();
+        let res = spherical_kmeans(&pts, 4, 10, 5, 0);
+        assert_eq!(res.k, 3);
+        // every cluster non-empty
+        let members = res.members();
+        assert!(members.iter().all(|m| !m.is_empty()));
+    }
+
+    #[test]
+    fn single_cluster_centroid_is_spherical_mean() {
+        let pts = vec![1.0, 0.0, 0.0, 1.0];
+        let res = spherical_kmeans(&pts, 2, 1, 5, 0);
+        let s = 0.5f32.sqrt();
+        assert!((res.centroid(0)[0] - s).abs() < 1e-5);
+        assert!((res.centroid(0)[1] - s).abs() < 1e-5);
+    }
+
+    #[test]
+    fn identical_points_handled() {
+        let pts: Vec<f32> = (0..10).flat_map(|_| vec![0.0, 1.0]).collect();
+        let res = spherical_kmeans(&pts, 2, 3, 5, 1);
+        assert_eq!(res.assignment.len(), 10);
+    }
+
+    #[test]
+    fn prop_assignment_is_nearest_centroid() {
+        prop::check("kmeans nearest", 30, |g| {
+            let d = 8;
+            let n = g.usize_in(5..60);
+            let k = g.usize_in(1..(n.min(10) + 1));
+            let mut rng = Rng::new(g.usize_in(0..10_000) as u64);
+            let pts: Vec<f32> = (0..n).flat_map(|_| rng.unit_vec(d)).collect();
+            let res = spherical_kmeans(&pts, d, k, 8, 5);
+            for i in 0..n {
+                let p = &pts[i * d..(i + 1) * d];
+                let assigned = linalg::dot(p, res.centroid(res.assignment[i]));
+                for c in 0..res.k {
+                    let other = linalg::dot(p, res.centroid(c));
+                    prop_assert!(
+                        other <= assigned + 1e-5,
+                        "point {i}: cluster {c} dot {other} > assigned {assigned}"
+                    );
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn more_iters_do_not_hurt_quality() {
+        let mut rng = Rng::new(9);
+        let (pts, _) = clustered_points(&mut rng, 5, 20, 8, 0.2);
+        let q1 = mean_intra_cosine(&pts, 8, &spherical_kmeans(&pts, 8, 5, 1, 3));
+        let q10 = mean_intra_cosine(&pts, 8, &spherical_kmeans(&pts, 8, 5, 10, 3));
+        assert!(q10 >= q1 - 1e-6, "q10 {q10} < q1 {q1}");
+    }
+}

@@ -1,0 +1,24 @@
+//! Hierarchical KV indexing (paper §4) — the LycheeCluster contribution.
+//!
+//! The KV cache is organized as a three-tier pyramid:
+//!
+//! ```text
+//!   coarse units (P <= 64)        centroid + covering radius
+//!     └── fine clusters (L)       centroid + covering radius
+//!           └── chunks (M)        representative key (mean-pool + L2)
+//!                 └── tokens      exact KV rows in the paged cache
+//! ```
+//!
+//! Retrieval walks top-down scoring nodes with the Eqn. 2 upper bound
+//! `UB(q,u) = q·μ_u + ‖q‖·r_u` (triangle + Cauchy–Schwarz), pruning
+//! whole branches; decode-time tokens are grafted via the lazy update
+//! strategy (buffer → pack → assign nearest → moving-average centroid +
+//! monotonic radius expansion).
+
+pub mod hierarchy;
+pub mod kmeans;
+pub mod reps;
+pub mod update;
+
+pub use hierarchy::{CoarseUnit, FineCluster, HierarchicalIndex, IndexChunk, IndexParams};
+pub use reps::{max_pool_rep, mean_pool_rep, KeySource, Pooling};

@@ -1,0 +1,165 @@
+//! Chunk representative keys (paper §4.1 + Table 3 ablation).
+//!
+//! A chunk's representative is the aggregate of its token keys projected
+//! onto the unit sphere. Mean pooling (the paper's choice) computes the
+//! geometric centroid — faithful to the average semantic direction; max
+//! pooling (the ablation) takes elementwise maxima, which distorts
+//! direction and loses recall (reproduced in Table 3).
+
+use crate::linalg;
+
+/// Abstract access to per-token key rows (head-merged, dim `d`).
+/// Implemented by the paged KV cache (one layer) and by flat arrays in
+/// the synthetic workloads.
+pub trait KeySource {
+    fn dim(&self) -> usize;
+    fn key(&self, token: usize) -> &[f32];
+    fn len(&self) -> usize;
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Flat `[N, d]` row-major key matrix.
+pub struct FlatKeys<'a> {
+    pub data: &'a [f32],
+    pub d: usize,
+}
+
+impl<'a> FlatKeys<'a> {
+    pub fn new(data: &'a [f32], d: usize) -> Self {
+        assert!(d > 0 && data.len() % d == 0);
+        FlatKeys { data, d }
+    }
+}
+
+impl KeySource for FlatKeys<'_> {
+    fn dim(&self) -> usize {
+        self.d
+    }
+
+    fn key(&self, token: usize) -> &[f32] {
+        &self.data[token * self.d..(token + 1) * self.d]
+    }
+
+    fn len(&self) -> usize {
+        self.data.len() / self.d
+    }
+}
+
+/// Pooling strategy for chunk representatives.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pooling {
+    Mean,
+    Max,
+}
+
+/// Mean of token keys in `[start, start+len)`, L2-normalized.
+pub fn mean_pool_rep(keys: &dyn KeySource, start: usize, len: usize) -> Vec<f32> {
+    assert!(len > 0);
+    let d = keys.dim();
+    let mut out = vec![0.0f32; d];
+    for t in start..start + len {
+        linalg::add_assign(&mut out, keys.key(t));
+    }
+    linalg::scale(&mut out, 1.0 / len as f32);
+    linalg::normalize(&mut out);
+    out
+}
+
+/// Elementwise max of token keys, L2-normalized (Table 3 ablation).
+pub fn max_pool_rep(keys: &dyn KeySource, start: usize, len: usize) -> Vec<f32> {
+    assert!(len > 0);
+    let d = keys.dim();
+    let mut out = vec![f32::NEG_INFINITY; d];
+    for t in start..start + len {
+        for (o, &x) in out.iter_mut().zip(keys.key(t)) {
+            *o = o.max(x);
+        }
+    }
+    linalg::normalize(&mut out);
+    out
+}
+
+/// Dispatch on the configured pooling.
+pub fn pool_rep(pooling: Pooling, keys: &dyn KeySource, start: usize, len: usize) -> Vec<f32> {
+    match pooling {
+        Pooling::Mean => mean_pool_rep(keys, start, len),
+        Pooling::Max => max_pool_rep(keys, start, len),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::norm;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn flat(rng: &mut Rng, n: usize, d: usize) -> Vec<f32> {
+        rng.normal_vec(n * d)
+    }
+
+    #[test]
+    fn mean_pool_is_normalized_centroid() {
+        let data = vec![1.0, 0.0, 0.0, 1.0]; // two 2-d keys
+        let keys = FlatKeys::new(&data, 2);
+        let rep = mean_pool_rep(&keys, 0, 2);
+        let s = 0.5f32.sqrt();
+        assert!((rep[0] - s).abs() < 1e-6 && (rep[1] - s).abs() < 1e-6);
+    }
+
+    #[test]
+    fn single_token_rep_is_normalized_key() {
+        let mut rng = Rng::new(0);
+        let data = flat(&mut rng, 4, 8);
+        let keys = FlatKeys::new(&data, 8);
+        let rep = mean_pool_rep(&keys, 2, 1);
+        let mut expect = keys.key(2).to_vec();
+        crate::linalg::normalize(&mut expect);
+        for (a, b) in rep.iter().zip(&expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn max_pool_takes_elementwise_max() {
+        let data = vec![1.0, -2.0, 3.0, 0.5];
+        let keys = FlatKeys::new(&data, 2);
+        let rep = max_pool_rep(&keys, 0, 2);
+        // max = [3.0, 0.5], normalized
+        let n = (3.0f32 * 3.0 + 0.25).sqrt();
+        assert!((rep[0] - 3.0 / n).abs() < 1e-6);
+        assert!((rep[1] - 0.5 / n).abs() < 1e-6);
+    }
+
+    #[test]
+    fn reps_are_unit_norm() {
+        prop::check("rep unit norm", 60, |g| {
+            let d = [4, 16, 64][g.usize_in(0..3)];
+            let n = g.usize_in(1..50);
+            let mut rng = Rng::new(g.usize_in(0..1000) as u64);
+            let data = flat(&mut rng, n, d);
+            let keys = FlatKeys::new(&data, d);
+            let len = g.usize_in(1..(n + 1));
+            for pooling in [Pooling::Mean, Pooling::Max] {
+                let rep = pool_rep(pooling, &keys, 0, len);
+                let nm = norm(&rep);
+                prop_assert!((nm - 1.0).abs() < 1e-4, "{pooling:?} norm {nm}");
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mean_pool_of_identical_keys_is_that_direction() {
+        let mut data = Vec::new();
+        for _ in 0..5 {
+            data.extend_from_slice(&[0.6, 0.8]);
+        }
+        let keys = FlatKeys::new(&data, 2);
+        let rep = mean_pool_rep(&keys, 0, 5);
+        assert!((rep[0] - 0.6).abs() < 1e-6 && (rep[1] - 0.8).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,356 @@
+//! Paged KV cache (vLLM-style block storage, CPU-resident).
+//!
+//! Tokens are stored in fixed-size pages per layer; appends never move
+//! existing data (stable indices — the hierarchical index stores token
+//! positions), and the gather path copies the retrieved active set into a
+//! dense budget-padded buffer with the `[M, H, Dh]` token-major layout the
+//! Pallas attention kernel expects.
+//!
+//! Memory accounting (`bytes()`) backs the paper's Fig. 8 comparison of
+//! KV bytes vs index bytes.
+
+use anyhow::{bail, Result};
+
+/// Tokens per page. 64 matches common GPU paged-attention block sizes.
+pub const PAGE_SIZE: usize = 64;
+
+/// One page of K or V data: `PAGE_SIZE` rows of `row_dim` floats.
+struct Page {
+    data: Vec<f32>,
+    used: usize,
+}
+
+impl Page {
+    fn new(row_dim: usize) -> Page {
+        Page { data: vec![0.0; PAGE_SIZE * row_dim], used: 0 }
+    }
+}
+
+/// Per-layer paged storage for one of K or V.
+struct LayerStore {
+    row_dim: usize,
+    pages: Vec<Page>,
+}
+
+impl LayerStore {
+    fn new(row_dim: usize) -> LayerStore {
+        LayerStore { row_dim, pages: Vec::new() }
+    }
+
+    fn len(&self) -> usize {
+        self.pages.last().map_or(0, |p| (self.pages.len() - 1) * PAGE_SIZE + p.used)
+    }
+
+    fn append(&mut self, row: &[f32]) {
+        debug_assert_eq!(row.len(), self.row_dim);
+        if self.pages.last().map_or(true, |p| p.used == PAGE_SIZE) {
+            self.pages.push(Page::new(self.row_dim));
+        }
+        let page = self.pages.last_mut().unwrap();
+        let off = page.used * self.row_dim;
+        page.data[off..off + self.row_dim].copy_from_slice(row);
+        page.used += 1;
+    }
+
+    #[inline]
+    fn row(&self, idx: usize) -> &[f32] {
+        let (p, o) = (idx / PAGE_SIZE, idx % PAGE_SIZE);
+        let page = &self.pages[p];
+        debug_assert!(o < page.used, "token {idx} out of range");
+        &page.data[o * self.row_dim..(o + 1) * self.row_dim]
+    }
+
+    fn bytes(&self) -> usize {
+        self.pages.len() * PAGE_SIZE * self.row_dim * 4
+    }
+}
+
+/// Multi-layer paged KV cache for a single sequence.
+pub struct KvCache {
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    k: Vec<LayerStore>,
+    v: Vec<LayerStore>,
+    len: usize,
+}
+
+impl KvCache {
+    pub fn new(layers: usize, heads: usize, head_dim: usize) -> KvCache {
+        let row = heads * head_dim;
+        KvCache {
+            layers,
+            heads,
+            head_dim,
+            k: (0..layers).map(|_| LayerStore::new(row)).collect(),
+            v: (0..layers).map(|_| LayerStore::new(row)).collect(),
+            len: 0,
+        }
+    }
+
+    /// Number of cached tokens (identical across layers by construction).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn row_dim(&self) -> usize {
+        self.heads * self.head_dim
+    }
+
+    /// Append one token's K/V rows for every layer.
+    /// `k_rows`/`v_rows`: `layers` slices of `heads*head_dim` floats.
+    pub fn append_token(&mut self, k_rows: &[&[f32]], v_rows: &[&[f32]]) -> Result<usize> {
+        if k_rows.len() != self.layers || v_rows.len() != self.layers {
+            bail!("expected {} layers, got {}/{}", self.layers, k_rows.len(), v_rows.len());
+        }
+        for l in 0..self.layers {
+            self.k[l].append(k_rows[l]);
+            self.v[l].append(v_rows[l]);
+        }
+        self.len += 1;
+        Ok(self.len - 1)
+    }
+
+    /// Append one layer's K/V rows for the in-flight token. The engine
+    /// calls this per layer as QKV results arrive, then `commit_token`
+    /// once all layers are written. Rows become readable immediately
+    /// (the current token takes part in its own attention step).
+    pub fn append_row(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        self.k[layer].append(k_row);
+        self.v[layer].append(v_row);
+    }
+
+    /// Finish an `append_row`-per-layer token; bumps `len` and checks all
+    /// layers advanced together.
+    pub fn commit_token(&mut self) {
+        self.len += 1;
+        debug_assert!(
+            self.k.iter().all(|s| s.len() == self.len)
+                && self.v.iter().all(|s| s.len() == self.len),
+            "commit_token with unevenly appended layers"
+        );
+    }
+
+    /// Bulk-load a prefill result: `k_flat`/`v_flat` are `[L, S, H, Dh]`
+    /// row-major with `n_tokens <= S` valid rows.
+    pub fn load_prefill(
+        &mut self,
+        k_flat: &[f32],
+        v_flat: &[f32],
+        s_bucket: usize,
+        n_tokens: usize,
+    ) -> Result<()> {
+        let row = self.row_dim();
+        if k_flat.len() != self.layers * s_bucket * row {
+            bail!(
+                "prefill K size {} != {}x{}x{}",
+                k_flat.len(),
+                self.layers,
+                s_bucket,
+                row
+            );
+        }
+        for t in 0..n_tokens {
+            for l in 0..self.layers {
+                let off = (l * s_bucket + t) * row;
+                self.k[l].append(&k_flat[off..off + row]);
+                self.v[l].append(&v_flat[off..off + row]);
+            }
+            self.len += 1;
+        }
+        Ok(())
+    }
+
+    /// Key row (RoPE'd, head-merged `[H*Dh]`) of a token at one layer.
+    #[inline]
+    pub fn key_row(&self, layer: usize, token: usize) -> &[f32] {
+        self.k[layer].row(token)
+    }
+
+    #[inline]
+    pub fn value_row(&self, layer: usize, token: usize) -> &[f32] {
+        self.v[layer].row(token)
+    }
+
+    /// Gather `indices` into dense `[M, H, Dh]` buffers padded to
+    /// `m_bucket`, plus the `[M]` validity mask. Buffers are caller-owned
+    /// so the engine can reuse allocations across steps.
+    pub fn gather(
+        &self,
+        layer: usize,
+        indices: &[usize],
+        m_bucket: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+        mask_out: &mut Vec<f32>,
+    ) {
+        let row = self.row_dim();
+        assert!(indices.len() <= m_bucket, "{} > bucket {}", indices.len(), m_bucket);
+        k_out.clear();
+        v_out.clear();
+        mask_out.clear();
+        k_out.resize(m_bucket * row, 0.0);
+        v_out.resize(m_bucket * row, 0.0);
+        mask_out.resize(m_bucket, 0.0);
+        for (i, &tok) in indices.iter().enumerate() {
+            k_out[i * row..(i + 1) * row].copy_from_slice(self.k[layer].row(tok));
+            v_out[i * row..(i + 1) * row].copy_from_slice(self.v[layer].row(tok));
+            mask_out[i] = 1.0;
+        }
+    }
+
+    /// Total bytes held by K+V pages (allocated, incl. partial pages).
+    pub fn bytes(&self) -> usize {
+        self.k.iter().map(|s| s.bytes()).sum::<usize>()
+            + self.v.iter().map(|s| s.bytes()).sum::<usize>()
+    }
+
+    /// Number of allocated pages across layers (both K and V).
+    pub fn pages(&self) -> usize {
+        self.k.iter().map(|s| s.pages.len()).sum::<usize>()
+            + self.v.iter().map(|s| s.pages.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mk(layers: usize) -> KvCache {
+        KvCache::new(layers, 2, 4)
+    }
+
+    fn tok_rows(rng: &mut Rng, layers: usize, row: usize) -> Vec<Vec<f32>> {
+        (0..layers).map(|_| rng.normal_vec(row)).collect()
+    }
+
+    #[test]
+    fn append_and_read_back() {
+        let mut c = mk(2);
+        let mut rng = Rng::new(0);
+        let mut expect: Vec<Vec<Vec<f32>>> = vec![Vec::new(); 2];
+        for _ in 0..150 {
+            let ks = tok_rows(&mut rng, 2, 8);
+            let vs = tok_rows(&mut rng, 2, 8);
+            let refs_k: Vec<&[f32]> = ks.iter().map(|r| r.as_slice()).collect();
+            let refs_v: Vec<&[f32]> = vs.iter().map(|r| r.as_slice()).collect();
+            c.append_token(&refs_k, &refs_v).unwrap();
+            for l in 0..2 {
+                expect[l].push(ks[l].clone());
+            }
+        }
+        assert_eq!(c.len(), 150);
+        for l in 0..2 {
+            for t in 0..150 {
+                assert_eq!(c.key_row(l, t), expect[l][t].as_slice());
+            }
+        }
+    }
+
+    #[test]
+    fn pages_grow_as_needed() {
+        let mut c = mk(1);
+        let mut rng = Rng::new(1);
+        for _ in 0..PAGE_SIZE + 1 {
+            let ks = tok_rows(&mut rng, 1, 8);
+            let vs = tok_rows(&mut rng, 1, 8);
+            c.append_token(&[&ks[0]], &[&vs[0]]).unwrap();
+        }
+        assert_eq!(c.pages(), 4); // 2 pages K + 2 pages V
+    }
+
+    #[test]
+    fn gather_pads_and_masks() {
+        let mut c = mk(1);
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            let ks = tok_rows(&mut rng, 1, 8);
+            let vs = tok_rows(&mut rng, 1, 8);
+            c.append_token(&[&ks[0]], &[&vs[0]]).unwrap();
+        }
+        let (mut k, mut v, mut m) = (Vec::new(), Vec::new(), Vec::new());
+        c.gather(0, &[3, 7, 1], 8, &mut k, &mut v, &mut m);
+        assert_eq!(k.len(), 8 * 8);
+        assert_eq!(m, vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0, 0.0, 0.0]);
+        assert_eq!(&k[0..8], c.key_row(0, 3));
+        assert_eq!(&k[8..16], c.key_row(0, 7));
+        assert_eq!(&v[16..24], c.value_row(0, 1));
+        assert_eq!(&k[24..32], &[0.0; 8]);
+    }
+
+    #[test]
+    fn load_prefill_matches_layout() {
+        // [L=2, S=4, row=8]: fill with recognizable values
+        let layers = 2;
+        let s = 4;
+        let row = 8;
+        let mut k_flat = vec![0.0f32; layers * s * row];
+        let mut v_flat = vec![0.0f32; layers * s * row];
+        for l in 0..layers {
+            for t in 0..s {
+                for r in 0..row {
+                    k_flat[(l * s + t) * row + r] = (l * 100 + t * 10 + r) as f32;
+                    v_flat[(l * s + t) * row + r] = -((l * 100 + t * 10 + r) as f32);
+                }
+            }
+        }
+        let mut c = mk(2);
+        c.load_prefill(&k_flat, &v_flat, s, 3).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.key_row(1, 2)[0], 120.0);
+        assert_eq!(c.value_row(0, 1)[3], -13.0);
+    }
+
+    #[test]
+    fn load_prefill_rejects_bad_size() {
+        let mut c = mk(2);
+        assert!(c.load_prefill(&[0.0; 7], &[0.0; 7], 4, 2).is_err());
+    }
+
+    #[test]
+    fn bytes_accounting() {
+        let mut c = mk(1);
+        assert_eq!(c.bytes(), 0);
+        let mut rng = Rng::new(3);
+        let ks = tok_rows(&mut rng, 1, 8);
+        let vs = tok_rows(&mut rng, 1, 8);
+        c.append_token(&[&ks[0]], &[&vs[0]]).unwrap();
+        assert_eq!(c.bytes(), 2 * PAGE_SIZE * 8 * 4);
+    }
+
+    #[test]
+    fn prop_gather_round_trips_any_index_set() {
+        prop::check("kv gather", 50, |g| {
+            let n = g.usize_in(1..200);
+            let mut c = KvCache::new(1, 1, 4);
+            let mut rng = Rng::new(n as u64);
+            let mut keys = Vec::new();
+            for _ in 0..n {
+                let kr = rng.normal_vec(4);
+                let vr = rng.normal_vec(4);
+                c.append_token(&[&kr], &[&vr]).unwrap();
+                keys.push(kr);
+            }
+            let m = g.usize_in(1..(n + 1));
+            let idx: Vec<usize> = (0..m).map(|_| g.usize_in(0..n)).collect();
+            let bucket = m.next_power_of_two();
+            let (mut k, mut v, mut msk) = (Vec::new(), Vec::new(), Vec::new());
+            c.gather(0, &idx, bucket, &mut k, &mut v, &mut msk);
+            for (i, &t) in idx.iter().enumerate() {
+                prop_assert!(k[i * 4..(i + 1) * 4] == keys[t][..], "row {i} mismatch");
+                prop_assert!(msk[i] == 1.0, "mask {i}");
+            }
+            for i in idx.len()..bucket {
+                prop_assert!(msk[i] == 0.0, "pad mask {i}");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,42 @@
+//! # LycheeCluster
+//!
+//! Production-oriented reproduction of *"LycheeCluster: Efficient
+//! Long-Context Inference with Structure-Aware Chunking and Hierarchical
+//! KV Indexing"* (ACL 2026) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's coordination contribution:
+//!   structure-aware chunking ([`chunking`]), the 3-tier hierarchical KV
+//!   index with upper-bound pruning and lazy updates ([`index`]), the
+//!   paged KV cache ([`kvcache`]), all retrieval/eviction baselines
+//!   ([`sparse`]), the decode engine ([`engine`]) and the continuous
+//!   batching coordinator ([`coordinator`]).
+//! - **L2/L1 (python/, build-time only)** — a small JAX transformer whose
+//!   decode step is split per stage, with the sparse-attention hot-spot
+//!   and chunk pooling written as Pallas kernels; AOT-lowered to HLO text.
+//! - **Runtime** ([`runtime`]) — loads the HLO artifacts through the PJRT
+//!   CPU client (`xla` crate) and executes them from the request path.
+//!   Python never runs at serving time.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
+//! reproduced tables/figures.
+
+pub mod attention;
+pub mod chunking;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod engine;
+pub mod eval;
+pub mod index;
+pub mod kvcache;
+pub mod linalg;
+pub mod model;
+pub mod runtime;
+pub mod server;
+pub mod sparse;
+pub mod tokenizer;
+pub mod util;
+pub mod workloads;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

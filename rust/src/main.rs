@@ -1,0 +1,7 @@
+//! `lychee` CLI entrypoint (L3 leader).
+fn main() {
+    if let Err(e) = lychee::cli::run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,226 @@
+//! Model metadata + weights: parses `artifacts/manifest.json` (written by
+//! the python AOT step) and loads `weights.bin` (LCT1). This is the only
+//! coupling point between the python build path and the Rust runtime —
+//! everything downstream works off these structs.
+
+use crate::util::binfmt::TensorFile;
+use crate::util::json::Json;
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// LycheeLM dimensions (mirrors python `ModelConfig`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub head_dim: usize,
+    pub d_model: usize,
+    pub ffn: usize,
+}
+
+/// One AOT program's interface.
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub file: String,
+    pub tuple: bool,
+    pub nouts: usize,
+    /// (dtype, shape) per argument.
+    pub args: Vec<(String, Vec<usize>)>,
+}
+
+/// Shape buckets compiled by aot.py.
+#[derive(Clone, Debug, Default)]
+pub struct Buckets {
+    pub batch: Vec<usize>,
+    pub attn_m_b1: Vec<usize>,
+    pub attn_m_bn: Vec<usize>,
+    pub prefill_s: Vec<usize>,
+    pub kvbuf_m: Vec<usize>,
+    pub gather_n: Vec<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub dims: ModelDims,
+    pub weight_order: Vec<String>,
+    pub buckets: Buckets,
+    pub programs: BTreeMap<String, ProgramMeta>,
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> Result<Manifest> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+
+        let m = j.get("model");
+        let u = |k: &str| -> Result<usize> {
+            m.get(k).as_usize().with_context(|| format!("model.{k}"))
+        };
+        let dims = ModelDims {
+            vocab: u("vocab")?,
+            layers: u("layers")?,
+            heads: u("heads")?,
+            head_dim: u("head_dim")?,
+            d_model: u("d_model")?,
+            ffn: u("ffn")?,
+        };
+        if dims.d_model != dims.heads * dims.head_dim {
+            bail!("inconsistent dims: d_model != heads*head_dim");
+        }
+
+        let weight_order = j
+            .path(&["weights", "order"])
+            .as_arr()
+            .context("weights.order")?
+            .iter()
+            .map(|v| v.as_str().unwrap_or("").to_string())
+            .collect();
+
+        let b = j.get("buckets");
+        let usv = |k: &str| -> Vec<usize> {
+            b.get(k)
+                .as_arr()
+                .map(|a| a.iter().filter_map(|v| v.as_usize()).collect())
+                .unwrap_or_default()
+        };
+        let buckets = Buckets {
+            batch: usv("batch"),
+            attn_m_b1: usv("attn_m_b1"),
+            attn_m_bn: usv("attn_m_bn"),
+            prefill_s: usv("prefill_s"),
+            kvbuf_m: usv("kvbuf_m"),
+            gather_n: usv("gather_n"),
+        };
+
+        let mut programs = BTreeMap::new();
+        for (name, p) in j.get("programs").as_obj().context("programs")? {
+            let args = p
+                .get("args")
+                .as_arr()
+                .context("args")?
+                .iter()
+                .map(|a| {
+                    let dtype = a.get("dtype").as_str().unwrap_or("float32").to_string();
+                    let shape = a
+                        .get("shape")
+                        .as_arr()
+                        .map(|s| s.iter().filter_map(|v| v.as_usize()).collect())
+                        .unwrap_or_default();
+                    (dtype, shape)
+                })
+                .collect();
+            programs.insert(
+                name.clone(),
+                ProgramMeta {
+                    file: p.get("file").as_str().unwrap_or("").to_string(),
+                    tuple: p.get("tuple").as_bool().unwrap_or(false),
+                    nouts: p.get("nouts").as_usize().unwrap_or(1),
+                    args,
+                },
+            );
+        }
+        Ok(Manifest { dir: artifacts_dir.to_path_buf(), dims, weight_order, buckets, programs })
+    }
+
+    pub fn program(&self, name: &str) -> Result<&ProgramMeta> {
+        self.programs
+            .get(name)
+            .with_context(|| format!("program '{name}' not in manifest"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.program(name)?.file))
+    }
+}
+
+/// Loaded model weights with per-layer accessors.
+pub struct Weights {
+    pub tensors: TensorFile,
+    pub dims: ModelDims,
+}
+
+/// Per-layer tensor names in python's canonical order.
+pub const LAYER_TENSORS: [&str; 8] = ["ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2"];
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        let path = manifest.dir.join("weights.bin");
+        let tensors = TensorFile::load(&path)?;
+        // verify ordering matches the manifest (prefill arg order depends on it)
+        let names = tensors.names();
+        if names.len() != manifest.weight_order.len() {
+            bail!(
+                "weights.bin has {} tensors, manifest {}",
+                names.len(),
+                manifest.weight_order.len()
+            );
+        }
+        for (a, b) in names.iter().zip(&manifest.weight_order) {
+            if a != b {
+                bail!("weight order mismatch: {a} vs {b}");
+            }
+        }
+        Ok(Weights { tensors, dims: manifest.dims.clone() })
+    }
+
+    pub fn get(&self, name: &str) -> &[f32] {
+        &self.tensors.get(name).unwrap_or_else(|| panic!("missing weight {name}")).data_f32
+    }
+
+    pub fn layer(&self, l: usize, t: &str) -> &[f32] {
+        self.get(&format!("l{l}.{t}"))
+    }
+
+    /// All tensors in canonical (prefill argument) order.
+    pub fn flat_order(&self) -> Vec<(&str, &[f32], &[usize])> {
+        self.tensors
+            .tensors
+            .iter()
+            .map(|t| (t.name.as_str(), t.data_f32.as_slice(), t.shape.as_slice()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts() -> Option<PathBuf> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        p.join("manifest.json").exists().then_some(p)
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let Some(dir) = artifacts() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.dims.d_model, 128);
+        assert_eq!(m.dims.layers, 4);
+        assert!(m.programs.len() >= 40);
+        assert!(m.program("attn_b1_m1024").is_ok());
+        assert!(m.program("nope").is_err());
+        let p = m.program("qkv_b1").unwrap();
+        assert_eq!(p.nouts, 3);
+        assert!(p.tuple);
+        assert_eq!(p.args.len(), 6);
+    }
+
+    #[test]
+    fn weights_load_and_order() {
+        let Some(dir) = artifacts() else { return };
+        let m = Manifest::load(&dir).unwrap();
+        let w = Weights::load(&m).unwrap();
+        assert_eq!(w.get("emb").len(), 256 * 128);
+        assert_eq!(w.layer(0, "wq").len(), 128 * 128);
+        assert_eq!(w.layer(3, "w1").len(), 128 * 512);
+        assert_eq!(w.flat_order().len(), 34);
+        // ln weights are ones at init
+        assert!(w.get("ln_f").iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,293 @@
+//! PJRT runtime: loads AOT HLO-text artifacts and executes them on the
+//! CPU client (`xla` crate / xla_extension 0.5.1). The interchange format
+//! is HLO *text* — jax >= 0.5 emits 64-bit instruction ids in serialized
+//! protos that this XLA rejects; the text parser reassigns ids.
+//!
+//! Executables are compiled once on first use and cached; shape buckets
+//! (batch, active-set size M, prefill length S) are resolved here so the
+//! engine just asks for "attention with B sequences and >= n active
+//! tokens".
+
+use crate::model::Manifest;
+use anyhow::{bail, Context, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+/// Literal constructors for the shapes this runtime feeds.
+pub fn lit_f32(data: &[f32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_f32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32(data: &[i32], shape: &[usize]) -> Result<Literal> {
+    let n: usize = shape.iter().product();
+    if n != data.len() {
+        bail!("lit_i32: {} elements for shape {:?}", data.len(), shape);
+    }
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(data).reshape(&dims)?)
+}
+
+pub fn lit_i32_scalar(v: i32) -> Literal {
+    Literal::scalar(v)
+}
+
+/// The PJRT runtime with a compiled-executable cache.
+pub struct Runtime {
+    client: PjRtClient,
+    pub manifest: Manifest,
+    exes: RefCell<HashMap<String, PjRtLoadedExecutable>>,
+    /// Executions per program (visible in `lychee stats` / benches).
+    pub exec_counts: RefCell<HashMap<String, u64>>,
+}
+
+impl Runtime {
+    pub fn new(manifest: Manifest) -> Result<Runtime> {
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            exec_counts: RefCell::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) a program by manifest name.
+    fn ensure_compiled(&self, name: &str) -> Result<()> {
+        if self.exes.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap())
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling program {name}"))?;
+        self.exes.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of programs (warmup; avoids first-request jitter).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.ensure_compiled(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.exes.borrow().len()
+    }
+
+    /// Execute a program; returns its outputs as literals (tuple outputs
+    /// are decomposed using the manifest's `nouts`).
+    pub fn exec(&self, name: &str, args: &[&Literal]) -> Result<Vec<Literal>> {
+        self.ensure_compiled(name)?;
+        *self.exec_counts.borrow_mut().entry(name.to_string()).or_insert(0) += 1;
+        let exes = self.exes.borrow();
+        let exe = exes.get(name).unwrap();
+        let meta = self.manifest.program(name)?;
+        if args.len() != meta.args.len() {
+            bail!("{name}: {} args given, {} expected", args.len(), meta.args.len());
+        }
+        let result = exe
+            .execute::<&Literal>(args)
+            .with_context(|| format!("executing {name}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching {name} output"))?;
+        if meta.tuple {
+            let parts = lit.to_tuple().with_context(|| format!("{name}: untuple"))?;
+            if parts.len() != meta.nouts {
+                bail!("{name}: got {} outputs, manifest says {}", parts.len(), meta.nouts);
+            }
+            Ok(parts)
+        } else {
+            Ok(vec![lit])
+        }
+    }
+
+    // ---- bucket resolution -------------------------------------------
+
+    /// Smallest compiled batch bucket >= `b`.
+    pub fn batch_bucket(&self, b: usize) -> Result<usize> {
+        self.manifest
+            .buckets
+            .batch
+            .iter()
+            .copied()
+            .filter(|&x| x >= b)
+            .min()
+            .with_context(|| format!("no batch bucket >= {b}"))
+    }
+
+    /// Smallest compiled attention M bucket >= `m` for batch bucket `b`.
+    pub fn attn_bucket(&self, b: usize, m: usize) -> Result<usize> {
+        let list = if b == 1 {
+            &self.manifest.buckets.attn_m_b1
+        } else {
+            &self.manifest.buckets.attn_m_bn
+        };
+        list.iter()
+            .copied()
+            .filter(|&x| x >= m)
+            .min()
+            .with_context(|| format!("no attn bucket >= {m} for batch {b}"))
+    }
+
+    /// Smallest compiled prefill S bucket >= `s`.
+    pub fn prefill_bucket(&self, s: usize) -> Result<usize> {
+        self.manifest
+            .buckets
+            .prefill_s
+            .iter()
+            .copied()
+            .filter(|&x| x >= s)
+            .min()
+            .with_context(|| format!("prompt of {s} tokens exceeds largest prefill bucket"))
+    }
+
+    /// Largest prefill bucket (coordinator admission control).
+    pub fn max_prompt(&self) -> usize {
+        self.manifest.buckets.prefill_s.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Extract an f32 vector from a literal.
+pub fn to_f32_vec(lit: &Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn runtime() -> Option<Runtime> {
+        let p = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !p.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&p).unwrap();
+        Some(Runtime::new(m).unwrap())
+    }
+
+    #[test]
+    fn literal_builders_validate_shape() {
+        assert!(lit_f32(&[1.0, 2.0], &[3]).is_err());
+        let l = lit_f32(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        assert_eq!(l.element_count(), 4);
+        assert!(lit_i32(&[1], &[2]).is_err());
+    }
+
+    #[test]
+    fn bucket_resolution() {
+        let Some(rt) = runtime() else { return };
+        assert_eq!(rt.batch_bucket(1).unwrap(), 1);
+        assert_eq!(rt.batch_bucket(3).unwrap(), 4);
+        assert_eq!(rt.batch_bucket(5).unwrap(), 8);
+        assert!(rt.batch_bucket(9).is_err());
+        assert_eq!(rt.attn_bucket(1, 100).unwrap(), 128);
+        assert_eq!(rt.attn_bucket(1, 1025).unwrap(), 2048);
+        assert_eq!(rt.attn_bucket(4, 1500).unwrap(), 2048);
+        assert!(rt.attn_bucket(4, 64000).is_err());
+        assert_eq!(rt.attn_bucket(1, 64000).unwrap(), 65536);
+        assert_eq!(rt.prefill_bucket(10).unwrap(), 128);
+        assert_eq!(rt.prefill_bucket(600).unwrap(), 2048);
+        assert_eq!(rt.max_prompt(), 2048);
+    }
+
+    #[test]
+    fn embed_program_runs_and_matches_weights() {
+        let Some(rt) = runtime() else { return };
+        let w = crate::model::Weights::load(&rt.manifest).unwrap();
+        let emb = w.get("emb");
+        let d = rt.manifest.dims.d_model;
+        let args = vec![
+            lit_f32(emb, &[256, d]).unwrap(),
+            lit_i32(&[65], &[1]).unwrap(), // token 'A'
+        ];
+        let argrefs: Vec<&Literal> = args.iter().collect();
+        let out = rt.exec("embed_b1", &argrefs).unwrap();
+        let x = to_f32_vec(&out[0]).unwrap();
+        assert_eq!(x.len(), d);
+        let expect = &emb[65 * d..66 * d];
+        for (a, b) in x.iter().zip(expect) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn attn_kernel_matches_rust_oracle() {
+        // The PJRT-executed Pallas kernel vs the pure-Rust oracle: the
+        // cross-layer correctness anchor for the whole serving stack.
+        let Some(rt) = runtime() else { return };
+        let dims = rt.manifest.dims.clone();
+        let (h, dh) = (dims.heads, dims.head_dim);
+        let m = 128usize;
+        let mut rng = crate::util::rng::Rng::new(42);
+        let q = rng.normal_vec(h * dh);
+        let k = rng.normal_vec(m * h * dh);
+        let v = rng.normal_vec(m * h * dh);
+        let mut mask = vec![0.0f32; m];
+        for slot in mask.iter_mut().take(70) {
+            *slot = 1.0;
+        }
+        let args = vec![
+            lit_f32(&q, &[1, h, dh]).unwrap(),
+            lit_f32(&k, &[1, m, h, dh]).unwrap(),
+            lit_f32(&v, &[1, m, h, dh]).unwrap(),
+            lit_f32(&mask, &[1, m]).unwrap(),
+        ];
+        let argrefs: Vec<&Literal> = args.iter().collect();
+        let out = to_f32_vec(&rt.exec("attn_b1_m128", &argrefs).unwrap()[0]).unwrap();
+        assert_eq!(out.len(), h * dh);
+
+        // oracle: per-head attention over the 70 valid tokens
+        let scale = 1.0 / (dh as f32).sqrt();
+        for head in 0..h {
+            let qh: Vec<f32> = q[head * dh..(head + 1) * dh].to_vec();
+            let mut scores = Vec::new();
+            for t in 0..70 {
+                let kh = &k[(t * h + head) * dh..(t * h + head + 1) * dh];
+                scores.push(crate::linalg::dot(&qh, kh) * scale);
+            }
+            crate::linalg::softmax(&mut scores);
+            let mut expect = vec![0.0f32; dh];
+            for (t, &w) in scores.iter().enumerate() {
+                let vh = &v[(t * h + head) * dh..(t * h + head + 1) * dh];
+                crate::linalg::axpy(&mut expect, w, vh);
+            }
+            for (a, b) in out[head * dh..(head + 1) * dh].iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4, "head {head}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn exec_counts_tracked() {
+        let Some(rt) = runtime() else { return };
+        let w = crate::model::Weights::load(&rt.manifest).unwrap();
+        let d = rt.manifest.dims.d_model;
+        let args = vec![
+            lit_f32(w.get("emb"), &[256, d]).unwrap(),
+            lit_i32(&[1], &[1]).unwrap(),
+        ];
+        let argrefs: Vec<&Literal> = args.iter().collect();
+        rt.exec("embed_b1", &argrefs).unwrap();
+        rt.exec("embed_b1", &argrefs).unwrap();
+        assert_eq!(rt.exec_counts.borrow()["embed_b1"], 2);
+        assert_eq!(rt.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,246 @@
+//! TCP JSON-lines serving front-end over the coordinator.
+//!
+//! Protocol (one JSON object per line):
+//!
+//! ```text
+//! -> {"prompt": "...", "max_new_tokens": 32, "policy": "lychee"}
+//! <- {"token": "t"}            (streamed, one per generated token)
+//! <- {"done": true, "tokens": 32, "ttft_ms": ..., "tpot_ms": ...}
+//! or {"error": "..."}
+//! ```
+//!
+//! Thread-per-connection (serving CPU-bound decode, connection counts
+//! are small); the coordinator handle is cloneable and thread-safe.
+
+use crate::coordinator::{Event, Handle, Request};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// A running TCP server; dropping stops accepting (in-flight requests
+/// finish on the coordinator).
+pub struct Server {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (use port 0 for an OS-assigned
+    /// port; the bound address is in `server.addr`).
+    pub fn start(addr: &str, handle: Handle) -> Result<Server> {
+        let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let next_id = Arc::new(AtomicU64::new(1));
+        let accept_thread = std::thread::Builder::new()
+            .name("lychee-accept".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((stream, _)) => {
+                            let h = handle.clone();
+                            let ids = Arc::clone(&next_id);
+                            std::thread::spawn(move || {
+                                let _ = handle_conn(stream, h, &ids);
+                            });
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(std::time::Duration::from_millis(5));
+                        }
+                        Err(_) => break,
+                    }
+                }
+            })?;
+        Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn handle_conn(stream: TcpStream, handle: Handle, ids: &AtomicU64) -> Result<()> {
+    let peer = stream.peer_addr().ok();
+    let mut writer = stream.try_clone()?;
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let reply_err = |w: &mut TcpStream, msg: &str| -> Result<()> {
+            let j = Json::obj(vec![("error", Json::str(msg))]);
+            writeln!(w, "{}", j.dump())?;
+            Ok(())
+        };
+        let parsed = match Json::parse(&line) {
+            Ok(j) => j,
+            Err(e) => {
+                reply_err(&mut writer, &format!("bad json: {e}"))?;
+                continue;
+            }
+        };
+        let Some(prompt) = parsed.get("prompt").as_str() else {
+            reply_err(&mut writer, "missing 'prompt'")?;
+            continue;
+        };
+        let req = Request {
+            id: ids.fetch_add(1, Ordering::Relaxed),
+            prompt: prompt.as_bytes().to_vec(),
+            max_new_tokens: parsed.get("max_new_tokens").as_usize().unwrap_or(32),
+            policy: parsed.get("policy").as_str().unwrap_or("lychee").to_string(),
+        };
+        let rx = match handle.submit(req) {
+            Ok(rx) => rx,
+            Err(e) => {
+                reply_err(&mut writer, &e.to_string())?;
+                continue;
+            }
+        };
+        for ev in rx {
+            match ev {
+                Event::Token(t) => {
+                    let s = String::from_utf8_lossy(&[t]).into_owned();
+                    let j = Json::obj(vec![("token", Json::str(&s))]);
+                    writeln!(writer, "{}", j.dump())?;
+                }
+                Event::Done(stats) => {
+                    let j = Json::obj(vec![
+                        ("done", Json::Bool(true)),
+                        ("tokens", Json::num(stats.tokens as f64)),
+                        ("ttft_ms", Json::num(stats.ttft_ms)),
+                        ("tpot_ms", Json::num(stats.tpot_ms)),
+                        ("e2e_ms", Json::num(stats.e2e_ms)),
+                    ]);
+                    writeln!(writer, "{}", j.dump())?;
+                    break;
+                }
+                Event::Error(e) => {
+                    reply_err(&mut writer, &e)?;
+                    break;
+                }
+            }
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// Minimal blocking client (tests + examples).
+pub struct Client {
+    stream: TcpStream,
+}
+
+/// One completed generation as seen by the client.
+#[derive(Debug, Default)]
+pub struct ClientResult {
+    pub text: String,
+    pub tokens: usize,
+    pub ttft_ms: f64,
+    pub tpot_ms: f64,
+}
+
+impl Client {
+    pub fn connect(addr: &std::net::SocketAddr) -> Result<Client> {
+        Ok(Client { stream: TcpStream::connect(addr)? })
+    }
+
+    pub fn generate(&mut self, prompt: &str, max_new_tokens: usize, policy: &str) -> Result<ClientResult> {
+        let req = Json::obj(vec![
+            ("prompt", Json::str(prompt)),
+            ("max_new_tokens", Json::num(max_new_tokens as f64)),
+            ("policy", Json::str(policy)),
+        ]);
+        writeln!(self.stream, "{}", req.dump())?;
+        let mut out = ClientResult::default();
+        let reader = BufReader::new(self.stream.try_clone()?);
+        for line in reader.lines() {
+            let line = line?;
+            let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad reply: {e}"))?;
+            if let Some(t) = j.get("token").as_str() {
+                out.text.push_str(t);
+            } else if j.get("done").as_bool() == Some(true) {
+                out.tokens = j.get("tokens").as_usize().unwrap_or(0);
+                out.ttft_ms = j.get("ttft_ms").as_f64().unwrap_or(0.0);
+                out.tpot_ms = j.get("tpot_ms").as_f64().unwrap_or(0.0);
+                return Ok(out);
+            } else if let Some(e) = j.get("error").as_str() {
+                anyhow::bail!("server error: {e}");
+            }
+        }
+        anyhow::bail!("connection closed mid-stream")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Config;
+    use crate::coordinator::spawn;
+    
+
+    fn test_config() -> Option<Config> {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let mut cfg = Config::new();
+        cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+        Some(cfg)
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let Some(cfg) = test_config() else { return };
+        let (handle, _m, join) = spawn(cfg).unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone()).unwrap();
+        let addr = server.addr;
+
+        let mut client = Client::connect(&addr).unwrap();
+        let res = client.generate("tcp serving test!", 4, "lychee").unwrap();
+        assert_eq!(res.tokens, 4);
+        assert!(!res.text.is_empty());
+        assert!(res.tpot_ms >= 0.0);
+
+        // second request on the same connection
+        let res2 = client.generate("another one.", 3, "full").unwrap();
+        assert_eq!(res2.tokens, 3);
+
+        server.stop();
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn bad_request_gets_error_line() {
+        let Some(cfg) = test_config() else { return };
+        let (handle, _m, join) = spawn(cfg).unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone()).unwrap();
+        let mut stream = TcpStream::connect(server.addr).unwrap();
+        writeln!(stream, "{{\"nope\": 1}}").unwrap();
+        let mut line = String::new();
+        BufReader::new(stream.try_clone().unwrap()).read_line(&mut line).unwrap();
+        assert!(line.contains("error"), "got: {line}");
+        server.stop();
+        handle.shutdown();
+        join.join().unwrap();
+    }
+}

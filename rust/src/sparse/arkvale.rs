@@ -1,0 +1,191 @@
+//! ArkVale (Chen et al., 2024): page-based eviction with *recallable*
+//! pages. Each 32-token page keeps a ball summary (centroid + radius);
+//! evicted pages live in a backup store and are recalled when their
+//! summary scores high for the current query — so unlike H2O, no
+//! information is permanently lost, but retrieval granularity is the
+//! fixed page.
+
+use super::{always_active, merge_with_budget, Ctx, Policy};
+use crate::config::LycheeConfig;
+use crate::index::reps::KeySource;
+use crate::linalg;
+
+const PAGE: usize = 128; // 32 BPE tokens ~= 128 bytes
+
+struct PageSummary {
+    start: usize,
+    len: usize,
+    centroid: Vec<f32>,
+    radius: f32,
+}
+
+impl PageSummary {
+    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> PageSummary {
+        let d = keys.dim();
+        let mut c = vec![0.0f32; d];
+        for t in start..start + len {
+            linalg::add_assign(&mut c, keys.key(t));
+        }
+        linalg::scale(&mut c, 1.0 / len as f32);
+        let mut r = 0.0f32;
+        for t in start..start + len {
+            r = r.max(linalg::dist(keys.key(t), &c));
+        }
+        PageSummary { start, len, centroid: c, radius: r }
+    }
+
+    /// Ball upper bound — same geometry as Eqn. 2, page granularity.
+    fn score(&self, q: &[f32], qn: f32) -> f32 {
+        linalg::dot(q, &self.centroid) + qn * self.radius
+    }
+}
+
+pub struct ArkVale {
+    cfg: LycheeConfig,
+    pages: Vec<PageSummary>,
+    open_start: Option<usize>,
+    open_len: usize,
+}
+
+impl ArkVale {
+    pub fn new(cfg: LycheeConfig) -> ArkVale {
+        ArkVale { cfg, pages: Vec::new(), open_start: None, open_len: 0 }
+    }
+}
+
+impl Policy for ArkVale {
+    fn name(&self) -> &'static str {
+        "arkvale"
+    }
+
+    fn build(&mut self, ctx: &Ctx) {
+        self.pages.clear();
+        let mut s = 0;
+        while s < ctx.n {
+            let len = PAGE.min(ctx.n - s);
+            self.pages.push(PageSummary::from_span(ctx.keys, s, len));
+            s += len;
+        }
+        self.open_start = None;
+        self.open_len = 0;
+    }
+
+    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let budget = self.cfg.budget;
+        if pos <= budget {
+            return (0..pos).collect();
+        }
+        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        if let Some(s) = self.open_start {
+            always.extend(s..(s + self.open_len).min(pos));
+            always.sort_unstable();
+            always.dedup();
+        }
+        let remaining = budget.saturating_sub(always.len());
+        let qn = linalg::norm(q);
+        let mut scored: Vec<(usize, f32)> = self
+            .pages
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, p.score(q, qn)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut cand = Vec::new();
+        let mut left = remaining;
+        for (i, _) in scored {
+            let p = &self.pages[i];
+            if p.len > left {
+                continue;
+            }
+            cand.extend(p.start..p.start + p.len);
+            left -= p.len;
+            if left == 0 {
+                break;
+            }
+        }
+        merge_with_budget(always, &cand, budget)
+    }
+
+    fn on_token(&mut self, ctx: &Ctx, pos: usize) {
+        match self.open_start {
+            None => {
+                self.open_start = Some(pos);
+                self.open_len = 1;
+            }
+            Some(_) => self.open_len += 1,
+        }
+        if self.open_len >= PAGE {
+            let start = self.open_start.take().unwrap();
+            self.pages.push(PageSummary::from_span(ctx.keys, start, self.open_len));
+            self.open_len = 0;
+        }
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.pages.iter().map(|p| p.centroid.len() * 4 + 20).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn ball_score_is_upper_bound() {
+        let mut rng = Rng::new(0);
+        let keys = rng.normal_vec(128 * 8);
+        let src = FlatKeys::new(&keys, 8);
+        let page = PageSummary::from_span(&src, 32, 32);
+        for _ in 0..50 {
+            let q = rng.normal_vec(8);
+            let qn = linalg::norm(&q);
+            let ub = page.score(&q, qn);
+            for t in 32..64 {
+                let dp = linalg::dot(&q, src.key(t));
+                assert!(dp <= ub + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn recalls_planted_page() {
+        let d = 8;
+        let n = 1024;
+        let mut rng = Rng::new(1);
+        let mut keys = rng.normal_vec(n * d);
+        for t in 512..640 {
+            for j in 0..d {
+                keys[t * d + j] = if j == 2 { 6.0 } else { 0.0 };
+            }
+        }
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 256;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut p = ArkVale::new(cfg);
+        let src = FlatKeys::new(&keys, d);
+        let text = vec![b'x'; n];
+        let ctx = Ctx { keys: &src, text: &text, n };
+        p.build(&ctx);
+        let mut q = vec![0.0; d];
+        q[2] = 1.0;
+        let sel = p.select(&ctx, &q, n);
+        for t in 512..640 {
+            assert!(sel.contains(&t), "planted page token {t} not recalled");
+        }
+    }
+
+    #[test]
+    fn pages_cover_prefill() {
+        let mut rng = Rng::new(2);
+        let keys = rng.normal_vec(100 * 4);
+        let src = FlatKeys::new(&keys, 4);
+        let mut p = ArkVale::new(LycheeConfig::default());
+        p.build(&Ctx { keys: &src, text: &[b'x'; 300], n: 100 });
+        let total: usize = p.pages.iter().map(|pg| pg.len).sum();
+        assert_eq!(total, 100);
+        assert_eq!(p.pages.len(), 1); // single 100-byte partial page
+    }
+}

@@ -1,0 +1,226 @@
+//! ClusterKV (Liu et al., 2025a): token-granularity semantic clustering.
+//!
+//! Keys are L2-normalized and clustered globally with spherical k-means;
+//! retrieval scores clusters by query–centroid similarity and pulls in
+//! member *tokens* (not chunks) until the budget fills — partial clusters
+//! are taken in position order, which is exactly the local-coherence
+//! fragmentation the paper's §3 critiques. Decode-time tokens are
+//! assigned to the nearest centroid; a periodic full re-clustering (the
+//! "high update overhead" of global methods) refreshes the index.
+
+use super::{always_active, merge_with_budget, Ctx, Policy};
+use crate::config::LycheeConfig;
+use crate::index::kmeans::spherical_kmeans;
+use crate::linalg;
+
+pub struct ClusterKv {
+    cfg: LycheeConfig,
+    d: usize,
+    centroids: Vec<f32>,
+    members: Vec<Vec<usize>>,
+    /// Tokens since the last full re-clustering.
+    stale: usize,
+    /// Re-cluster period (tokens).
+    pub recluster_every: usize,
+    /// Tokens per cluster target (ClusterKV uses fine granularity).
+    pub tokens_per_cluster: usize,
+    n_indexed: usize,
+}
+
+impl ClusterKv {
+    pub fn new(cfg: LycheeConfig) -> ClusterKv {
+        ClusterKv {
+            cfg,
+            d: 0,
+            centroids: Vec::new(),
+            members: Vec::new(),
+            stale: 0,
+            recluster_every: 512,
+            tokens_per_cluster: 8,
+            n_indexed: 0,
+        }
+    }
+
+    fn k_for(&self, n: usize) -> usize {
+        n.div_ceil(self.tokens_per_cluster).clamp(1, 4096)
+    }
+
+    fn cluster_all(&mut self, ctx: &Ctx, n: usize) {
+        self.d = ctx.keys.dim();
+        if n == 0 {
+            self.centroids.clear();
+            self.members.clear();
+            self.n_indexed = 0;
+            return;
+        }
+        let mut pts = Vec::with_capacity(n * self.d);
+        for t in 0..n {
+            let mut k = ctx.keys.key(t).to_vec();
+            linalg::normalize(&mut k);
+            pts.extend_from_slice(&k);
+        }
+        let res = spherical_kmeans(&pts, self.d, self.k_for(n), 5, 0xC1A5);
+        self.centroids = res.centroids.clone();
+        self.members = res.members();
+        self.n_indexed = n;
+        self.stale = 0;
+    }
+
+    pub fn num_clusters(&self) -> usize {
+        self.members.len()
+    }
+}
+
+impl Policy for ClusterKv {
+    fn name(&self) -> &'static str {
+        "clusterkv"
+    }
+
+    fn build(&mut self, ctx: &Ctx) {
+        self.cluster_all(ctx, ctx.n);
+    }
+
+    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let budget = self.cfg.budget;
+        if pos <= budget {
+            return (0..pos).collect();
+        }
+        let always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        let remaining = budget.saturating_sub(always.len());
+        let k = self.members.len();
+        let scores: Vec<f32> = (0..k)
+            .map(|c| linalg::dot(q, &self.centroids[c * self.d..(c + 1) * self.d]))
+            .collect();
+        let order = linalg::top_k(&scores, k);
+        let mut cand = Vec::new();
+        let mut left = remaining;
+        'outer: for c in order {
+            for &t in &self.members[c] {
+                if left == 0 {
+                    break 'outer;
+                }
+                if t < pos {
+                    cand.push(t);
+                    left -= 1;
+                }
+            }
+        }
+        merge_with_budget(always, &cand, budget)
+    }
+
+    fn on_token(&mut self, ctx: &Ctx, pos: usize) {
+        if self.centroids.is_empty() {
+            self.cluster_all(ctx, pos + 1);
+            return;
+        }
+        let mut key = ctx.keys.key(pos).to_vec();
+        linalg::normalize(&mut key);
+        let k = self.members.len();
+        let mut best = 0;
+        let mut best_dot = f32::NEG_INFINITY;
+        for c in 0..k {
+            let dp = linalg::dot(&key, &self.centroids[c * self.d..(c + 1) * self.d]);
+            if dp > best_dot {
+                best_dot = dp;
+                best = c;
+            }
+        }
+        self.members[best].push(pos);
+        self.n_indexed = pos + 1;
+        self.stale += 1;
+        if self.stale >= self.recluster_every {
+            self.cluster_all(ctx, pos + 1);
+        }
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.centroids.len() * 4 + self.members.iter().map(|m| m.len() * 8).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    fn ctx_data(seed: u64, n: usize, d: usize) -> (Vec<f32>, Vec<u8>) {
+        let mut rng = Rng::new(seed);
+        (rng.normal_vec(n * d), vec![b'x'; n])
+    }
+
+    #[test]
+    fn builds_token_granularity_clusters() {
+        let (keys, text) = ctx_data(0, 400, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let mut p = ClusterKv::new(LycheeConfig::default());
+        p.build(&Ctx { keys: &src, text: &text, n: 400 });
+        assert_eq!(p.num_clusters(), 400usize.div_ceil(8));
+        let total: usize = p.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 400);
+    }
+
+    #[test]
+    fn retrieves_aligned_cluster_tokens() {
+        let d = 8;
+        let n = 600;
+        let mut rng = Rng::new(1);
+        let mut keys = rng.normal_vec(n * d);
+        // plant 30 scattered tokens aligned with e0
+        let planted: Vec<usize> = (0..30).map(|i| 20 * i).collect();
+        for &t in &planted {
+            for j in 0..d {
+                keys[t * d + j] = if j == 0 { 3.0 } else { 0.01 * keys[t * d + j] };
+            }
+        }
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 128;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut p = ClusterKv::new(cfg);
+        let src = FlatKeys::new(&keys, d);
+        let text = vec![b'x'; n];
+        let ctx = Ctx { keys: &src, text: &text, n };
+        p.build(&ctx);
+        let mut q = vec![0.0; d];
+        q[0] = 1.0;
+        let sel = p.select(&ctx, &q, n);
+        let hits = planted.iter().filter(|t| sel.contains(t)).count();
+        assert!(hits >= 24, "only {hits}/30 planted tokens retrieved");
+    }
+
+    #[test]
+    fn periodic_recluster_fires() {
+        let (keys, _) = ctx_data(2, 300, 8);
+        let mut all_keys = keys.clone();
+        let mut rng = Rng::new(3);
+        all_keys.extend(rng.normal_vec(600 * 8));
+        let src = FlatKeys::new(&all_keys, 8);
+        let text = vec![b'x'; 900];
+        let mut p = ClusterKv::new(LycheeConfig::default());
+        p.recluster_every = 100;
+        p.build(&Ctx { keys: &src, text: &text, n: 300 });
+        for pos in 300..450 {
+            let ctx = Ctx { keys: &src, text: &text, n: pos };
+            p.on_token(&ctx, pos);
+        }
+        // after 150 tokens with period 100, exactly one recluster happened
+        // (at the 100th decode token, i.e. n = 400); 50 tokens are pending
+        assert_eq!(p.n_indexed, 450);
+        assert_eq!(p.stale, 50);
+        assert_eq!(p.num_clusters(), 400usize.div_ceil(8));
+        let total: usize = p.members.iter().map(|m| m.len()).sum();
+        assert_eq!(total, 450);
+    }
+
+    #[test]
+    fn degenerates_within_budget() {
+        let (keys, text) = ctx_data(4, 100, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let mut p = ClusterKv::new(LycheeConfig::default());
+        let ctx = Ctx { keys: &src, text: &text, n: 100 };
+        p.build(&ctx);
+        let mut rng = Rng::new(5);
+        assert_eq!(p.select(&ctx, &rng.normal_vec(8), 100).len(), 100);
+    }
+}

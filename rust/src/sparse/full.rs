@@ -1,0 +1,45 @@
+//! Full attention (no sparsity) — the accuracy ceiling and the latency
+//! baseline whose TPOT grows linearly with context (paper Fig. 4).
+
+use super::{Ctx, Policy};
+
+#[derive(Default)]
+pub struct FullAttention;
+
+impl FullAttention {
+    pub fn new() -> FullAttention {
+        FullAttention
+    }
+}
+
+impl Policy for FullAttention {
+    fn name(&self) -> &'static str {
+        "full"
+    }
+
+    fn build(&mut self, _ctx: &Ctx) {}
+
+    fn select(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize) -> Vec<usize> {
+        (0..pos).collect()
+    }
+
+    fn on_token(&mut self, _ctx: &Ctx, _pos: usize) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+
+    #[test]
+    fn selects_entire_history() {
+        let keys = vec![0.0f32; 10 * 4];
+        let src = FlatKeys::new(&keys, 4);
+        let ctx = Ctx { keys: &src, text: b"xxxxxxxxxx", n: 10 };
+        let mut p = FullAttention::new();
+        p.build(&ctx);
+        assert_eq!(p.select(&ctx, &[1.0; 4], 10), (0..10).collect::<Vec<_>>());
+        assert_eq!(p.select(&ctx, &[1.0; 4], 0), Vec::<usize>::new());
+        assert_eq!(p.index_bytes(), 0);
+    }
+}

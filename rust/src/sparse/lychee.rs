@@ -1,0 +1,253 @@
+//! The LycheeCluster policy (paper Algorithm 1) — structure-aware
+//! chunking + hierarchical UB-pruned retrieval + lazy updates, glued to
+//! the [`Policy`] trait the engine drives.
+
+use super::{always_active, merge_with_budget, Ctx, Policy};
+use crate::chunking::Chunker;
+use crate::config::LycheeConfig;
+use crate::index::hierarchy::{HierarchicalIndex, IndexParams};
+use crate::index::reps::Pooling;
+use crate::index::update::TokenBuffer;
+
+pub struct LycheePolicy {
+    cfg: LycheeConfig,
+    chunker: Box<dyn Chunker>,
+    pooling: Pooling,
+    index: Option<HierarchicalIndex>,
+    buffer: TokenBuffer,
+    /// SentenceKV-style flat mode: score chunks directly without the
+    /// coarse/fine pyramid.
+    flat: bool,
+}
+
+impl LycheePolicy {
+    pub fn new(cfg: LycheeConfig, chunker: Box<dyn Chunker>, pooling: Pooling) -> Self {
+        let buffer = TokenBuffer::new(cfg.max_chunk, cfg.update_buffer);
+        LycheePolicy { cfg, chunker, pooling, index: None, buffer, flat: false }
+    }
+
+    /// Flat (non-hierarchical) variant used for the `sentencekv` baseline.
+    pub fn flat(cfg: LycheeConfig, chunker: Box<dyn Chunker>, pooling: Pooling) -> Self {
+        let mut p = Self::new(cfg, chunker, pooling);
+        p.flat = true;
+        p
+    }
+
+    fn params(&self) -> IndexParams {
+        IndexParams {
+            avg_cluster_size: self.cfg.avg_cluster_size,
+            max_coarse_units: self.cfg.max_coarse_units,
+            coarse_fanout: 16,
+            kmeans_iters: self.cfg.kmeans_iters,
+            pooling: self.pooling,
+            seed: 0x17C4EE,
+            ..IndexParams::default()
+        }
+    }
+
+    pub fn index(&self) -> Option<&HierarchicalIndex> {
+        self.index.as_ref()
+    }
+}
+
+impl Policy for LycheePolicy {
+    fn name(&self) -> &'static str {
+        if self.flat {
+            "sentencekv"
+        } else {
+            match self.pooling {
+                Pooling::Mean => "lychee",
+                Pooling::Max => "lychee-max",
+            }
+        }
+    }
+
+    fn build(&mut self, ctx: &Ctx) {
+        let spans = self.chunker.chunk(&ctx.text[..ctx.n.min(ctx.text.len())]);
+        self.index = Some(HierarchicalIndex::build(ctx.keys, &spans, self.params()));
+        self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
+    }
+
+    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let budget = self.cfg.budget;
+        // Budget-sufficient degeneration (paper Appendix F.1): with the
+        // whole history within budget, behave exactly like full attention.
+        if pos <= budget {
+            return (0..pos).collect();
+        }
+        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        // Unindexed buffered tokens stay active (index freshness gap).
+        if let Some(pending) = self.buffer.pending() {
+            always.extend(pending.start..pending.end().min(pos));
+        }
+        always.sort_unstable();
+        always.dedup();
+        let remaining = budget.saturating_sub(always.len());
+        let idx = self.index.as_ref().expect("select before build");
+        let picked = if self.flat {
+            idx.select_tokens_flat(q, remaining)
+        } else {
+            idx.select_tokens(q, self.cfg.top_kg, self.cfg.top_kc, remaining)
+        };
+        merge_with_budget(always, &picked, budget)
+    }
+
+    fn on_token(&mut self, ctx: &Ctx, pos: usize) {
+        // decode-time structure awareness: pack the dynamic chunk early
+        // at natural boundaries (same delimiter hierarchy as prefill)
+        let at_boundary = pos < ctx.text.len()
+            && matches!(
+                crate::tokenizer::boundary_level(ctx.text, pos),
+                Some(crate::tokenizer::DelimiterLevel::Structural)
+                    | Some(crate::tokenizer::DelimiterLevel::Sentence)
+            );
+        if let Some(chunk) = self.buffer.push_boundary_aware(pos, at_boundary, self.cfg.min_chunk) {
+            if self.index.is_none() {
+                self.index = Some(HierarchicalIndex {
+                    d: ctx.keys.dim(),
+                    params: self.params(),
+                    chunks: Vec::new(),
+                    fine: Vec::new(),
+                    coarse: Vec::new(),
+                });
+            }
+            self.index.as_mut().unwrap().graft(ctx.keys, chunk);
+        }
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.index.as_ref().map_or(0, |i| i.bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::StructureAwareChunker;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    fn mk(budget: usize) -> LycheePolicy {
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = budget;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        LycheePolicy::new(cfg.clone(), Box::new(StructureAwareChunker::new(4, 8)), Pooling::Mean)
+    }
+
+    fn mk_ctx(rng: &mut Rng, n: usize, d: usize) -> (Vec<f32>, Vec<u8>) {
+        let keys = rng.normal_vec(n * d);
+        let text: Vec<u8> = (0..n).map(|_| b"lorem ipsum, dolor. sit\n"[rng.range(0, 24)]).collect();
+        (keys, text)
+    }
+
+    #[test]
+    fn degenerates_to_full_attention_within_budget() {
+        let mut p = mk(256);
+        let mut rng = Rng::new(0);
+        let (keys, text) = mk_ctx(&mut rng, 100, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let ctx = Ctx { keys: &src, text: &text, n: 100 };
+        p.build(&ctx);
+        let q = rng.normal_vec(8);
+        let sel = p.select(&ctx, &q, 100);
+        assert_eq!(sel, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn sparse_mode_over_budget() {
+        let mut p = mk(64);
+        let mut rng = Rng::new(1);
+        let (keys, text) = mk_ctx(&mut rng, 400, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let ctx = Ctx { keys: &src, text: &text, n: 400 };
+        p.build(&ctx);
+        let q = rng.normal_vec(8);
+        let sel = p.select(&ctx, &q, 400);
+        assert!(sel.len() <= 64);
+        // sink + recent always present
+        for t in [0, 1, 2, 3, 392, 399] {
+            assert!(sel.contains(&t), "missing always-active {t}");
+        }
+    }
+
+    #[test]
+    fn buffered_tokens_stay_active_until_grafted() {
+        let mut p = mk(64);
+        let mut rng = Rng::new(2);
+        let n0 = 300;
+        let steps = 10;
+        let (keys, text) = mk_ctx(&mut rng, n0 + steps, 8);
+        let src = FlatKeys::new(&keys, 8);
+        p.build(&Ctx { keys: &src, text: &text, n: n0 });
+        let chunks_before = p.index().unwrap().num_chunks();
+        for s in 0..steps {
+            let pos = n0 + s;
+            let ctx = Ctx { keys: &src, text: &text, n: pos };
+            let q = rng.normal_vec(8);
+            let sel = p.select(&ctx, &q, pos);
+            // recent window covers latest; buffered tokens must be active
+            if let Some(pend) = p.buffer.pending() {
+                for t in pend.start..pend.end().min(pos) {
+                    assert!(sel.contains(&t), "pending {t} missing at step {s}");
+                }
+            }
+            p.on_token(&ctx, pos);
+        }
+        // chunk_size = max_chunk = 48 -> no graft in 10 steps
+        assert_eq!(p.index().unwrap().num_chunks(), chunks_before);
+        assert_eq!(p.buffer.len(), 10);
+    }
+
+    #[test]
+    fn grafts_after_chunk_size_tokens() {
+        let mut p = mk(64);
+        let mut rng = Rng::new(3);
+        let n0 = 300;
+        let steps = 100;
+        let (keys, text) = mk_ctx(&mut rng, n0 + steps, 8);
+        let src = FlatKeys::new(&keys, 8);
+        p.build(&Ctx { keys: &src, text: &text, n: n0 });
+        let chunks_before = p.index().unwrap().num_chunks();
+        for s in 0..steps {
+            let pos = n0 + s;
+            let ctx = Ctx { keys: &src, text: &text, n: pos };
+            p.on_token(&ctx, pos);
+        }
+        // 100 tokens / 48 per dynamic chunk = 2 grafts
+        assert_eq!(p.index().unwrap().num_chunks(), chunks_before + 2);
+        p.index().unwrap().check_invariants().unwrap();
+    }
+
+    #[test]
+    fn flat_mode_works() {
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 48;
+        cfg.sink = 2;
+        cfg.recent = 4;
+        let mut p = LycheePolicy::flat(
+            cfg,
+            Box::new(crate::chunking::SentenceChunker::default()),
+            Pooling::Mean,
+        );
+        assert_eq!(p.name(), "sentencekv");
+        let mut rng = Rng::new(4);
+        let (keys, text) = mk_ctx(&mut rng, 300, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let ctx = Ctx { keys: &src, text: &text, n: 300 };
+        p.build(&ctx);
+        let sel = p.select(&ctx, &rng.normal_vec(8), 300);
+        assert!(sel.len() <= 48 && !sel.is_empty());
+    }
+
+    #[test]
+    fn index_bytes_nonzero_after_build() {
+        let mut p = mk(64);
+        let mut rng = Rng::new(5);
+        let (keys, text) = mk_ctx(&mut rng, 200, 8);
+        let src = FlatKeys::new(&keys, 8);
+        assert_eq!(p.index_bytes(), 0);
+        p.build(&Ctx { keys: &src, text: &text, n: 200 });
+        assert!(p.index_bytes() > 0);
+    }
+}

@@ -1,0 +1,236 @@
+//! Retrieval / eviction policies: LycheeCluster plus every baseline the
+//! paper compares against (§5.1), all behind one [`Policy`] trait so the
+//! engine, the eval harnesses and the benches treat them uniformly.
+//!
+//! | name           | granularity       | mechanism                        |
+//! |----------------|-------------------|----------------------------------|
+//! | `full`         | —                 | exact attention over everything  |
+//! | `lychee`       | structure chunks  | 3-tier UB-pruned index (ours)    |
+//! | `quest`        | fixed pages (16)  | min-max AABB page scoring        |
+//! | `clusterkv`    | tokens            | global spherical k-means         |
+//! | `streaming`    | —                 | attention sink + recent window   |
+//! | `h2o`          | tokens            | heavy-hitter eviction            |
+//! | `raas`         | tokens            | milestone-timestamp eviction     |
+//! | `arkvale`      | fixed pages (32)  | page ball summaries + recall     |
+//! | `shadowkv`     | fixed pages (8)   | landmark (mean) pre-selection    |
+//! | `razor`        | heads             | retrieval-head full cache        |
+//! | `sentencekv`   | sentences         | sentence-level semantic caching  |
+//! | `quest-chunks` | structure chunks  | pilot §3: Quest scoring, our     |
+//! |                |                   | segmentation                     |
+//! | `lychee-fixed` | fixed pages (16)  | Fig 6 ablation: ours w/o chunker |
+//! | `lychee-max`   | structure chunks  | Tab 3 ablation: max pooling      |
+
+mod arkvale;
+mod baselines;
+mod clusterkv;
+mod full;
+mod lychee;
+mod quest;
+mod shadowkv;
+
+pub use arkvale::ArkVale;
+pub use baselines::{RaaS, RazorAttention, StreamingLlm, H2O};
+pub use clusterkv::ClusterKv;
+pub use full::FullAttention;
+pub use lychee::LycheePolicy;
+pub use quest::Quest;
+pub use shadowkv::ShadowKv;
+
+use crate::config::LycheeConfig;
+use crate::index::reps::KeySource;
+
+/// Everything a policy may consult: the (layer's) key rows and the raw
+/// byte/token stream (for structure-aware segmentation). `n` is the
+/// number of cached tokens; `text.len() >= n`.
+pub struct Ctx<'a> {
+    pub keys: &'a dyn KeySource,
+    pub text: &'a [u8],
+    pub n: usize,
+}
+
+/// A KV retrieval/eviction policy for one attention layer.
+///
+/// Call order per sequence: `build` once after prefill, then per decode
+/// step `select(q, pos)` (the active set used for attention at position
+/// `pos`) followed by `on_token(pos)` once that token's KV is cached.
+pub trait Policy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Index the prefill context (`ctx.n` tokens).
+    fn build(&mut self, ctx: &Ctx);
+
+    /// Active token set (sorted, deduped, `len <= budget`) for query `q`
+    /// issued at position `pos` (tokens `0..pos` are valid history).
+    fn select(&mut self, ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize>;
+
+    /// Register the newly generated token at `pos`.
+    fn on_token(&mut self, ctx: &Ctx, pos: usize);
+
+    /// Auxiliary index memory (Fig. 8). Zero for stateless policies.
+    fn index_bytes(&self) -> usize {
+        0
+    }
+}
+
+/// Sink + recent-window positions every retrieval policy keeps active
+/// (paper Appendix A: sink 16; recency is standard across baselines).
+pub fn always_active(n: usize, sink: usize, recent: usize) -> Vec<usize> {
+    let mut out: Vec<usize> = (0..sink.min(n)).collect();
+    out.extend(n.saturating_sub(recent)..n);
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+/// Merge candidate tokens with the always-active set under a budget:
+/// always-active first, then candidates in given order until full.
+pub fn merge_with_budget(always: Vec<usize>, candidates: &[usize], budget: usize) -> Vec<usize> {
+    let mut out = always;
+    out.truncate(budget);
+    let mut set: std::collections::HashSet<usize> = out.iter().copied().collect();
+    for &c in candidates {
+        if out.len() >= budget {
+            break;
+        }
+        if set.insert(c) {
+            out.push(c);
+        }
+    }
+    out.sort_unstable();
+    out
+}
+
+/// Instantiate a policy by name. `layer` / `layers` parameterize
+/// layer-dependent policies (RazorAttention's retrieval heads).
+pub fn make_policy(name: &str, cfg: &LycheeConfig, layer: usize, layers: usize) -> Option<Box<dyn Policy>> {
+    use crate::chunking::{FixedSizeChunker, SentenceChunker, StructureAwareChunker};
+    use crate::index::reps::Pooling;
+    let c = cfg.clone();
+    Some(match name {
+        "full" => Box::new(FullAttention::new()),
+        "lychee" => Box::new(LycheePolicy::new(
+            c.clone(),
+            Box::new(StructureAwareChunker::new(c.min_chunk, c.max_chunk)),
+            Pooling::Mean,
+        )),
+        "lychee-fixed" => Box::new(LycheePolicy::new(
+            c.clone(),
+            Box::new(FixedSizeChunker::new(48)),
+            Pooling::Mean,
+        )),
+        "lychee-max" => Box::new(LycheePolicy::new(
+            c.clone(),
+            Box::new(StructureAwareChunker::new(c.min_chunk, c.max_chunk)),
+            Pooling::Max,
+        )),
+        "sentencekv" => Box::new(LycheePolicy::flat(
+            c.clone(),
+            Box::new(SentenceChunker::default()),
+            Pooling::Mean,
+        )),
+        "quest" => Box::new(Quest::new(c.clone(), Box::new(FixedSizeChunker::new(48)))),
+        // pilot §3 variant: identical min-max scoring, structure-aware
+        // segmentation with the mean chunk size matched to Quest's page
+        // (paper: "average chunk size matched baseline")
+        "quest-chunks" => Box::new(Quest::new(
+            c.clone(),
+            Box::new(StructureAwareChunker::new(16, 64)),
+        )),
+        "clusterkv" => Box::new(ClusterKv::new(c.clone())),
+        "streaming" => Box::new(StreamingLlm::new(c.clone())),
+        "h2o" => Box::new(H2O::new(c.clone())),
+        "raas" => Box::new(RaaS::new(c.clone())),
+        "arkvale" => Box::new(ArkVale::new(c.clone())),
+        "shadowkv" => Box::new(ShadowKv::new(c.clone())),
+        "razor" => Box::new(RazorAttention::new(c, layer, layers)),
+        _ => return None,
+    })
+}
+
+/// The roster used by the Table 1 / Table 2 harnesses.
+pub const TABLE1_POLICIES: &[&str] = &[
+    "full", "razor", "raas", "arkvale", "shadowkv", "quest", "clusterkv", "lychee",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn always_active_shape() {
+        assert_eq!(always_active(100, 4, 3), vec![0, 1, 2, 3, 97, 98, 99]);
+        assert_eq!(always_active(3, 16, 64), vec![0, 1, 2]);
+        assert_eq!(always_active(0, 4, 4), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn merge_respects_budget_and_dedup() {
+        let m = merge_with_budget(vec![0, 1, 9], &[1, 5, 7, 8], 5);
+        assert_eq!(m, vec![0, 1, 5, 7, 9]);
+        let m2 = merge_with_budget(vec![0], &[2, 3], 10);
+        assert_eq!(m2, vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn registry_makes_all_policies() {
+        let cfg = LycheeConfig::default();
+        for name in [
+            "full", "lychee", "lychee-fixed", "lychee-max", "sentencekv", "quest",
+            "quest-chunks", "clusterkv", "streaming", "h2o", "raas", "arkvale",
+            "shadowkv", "razor",
+        ] {
+            let p = make_policy(name, &cfg, 0, 4);
+            assert!(p.is_some(), "missing policy {name}");
+        }
+        assert!(make_policy("nope", &cfg, 0, 4).is_none());
+    }
+
+    /// Shared contract test: every policy returns a sorted, deduped,
+    /// budget-bounded subset of valid history and degenerates safely on
+    /// tiny contexts.
+    #[test]
+    fn all_policies_respect_select_contract() {
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 96;
+        cfg.sink = 8;
+        cfg.recent = 16;
+        let mut rng = Rng::new(0);
+        let n = 512;
+        let steps = 5;
+        let keys = rng.normal_vec((n + steps) * 16);
+        let text: Vec<u8> =
+            (0..n + steps).map(|_| b"the quick, brown. fox\n"[rng.range(0, 22)]).collect();
+
+        for name in [
+            "full", "lychee", "lychee-fixed", "lychee-max", "sentencekv", "quest",
+            "quest-chunks", "clusterkv", "streaming", "h2o", "raas", "arkvale",
+            "shadowkv", "razor",
+        ] {
+            let mut p = make_policy(name, &cfg, 1, 4).unwrap();
+            let src = FlatKeys::new(&keys, 16);
+            p.build(&Ctx { keys: &src, text: &text, n });
+            for step in 0..steps {
+                let pos = n + step;
+                let ctx = Ctx { keys: &src, text: &text, n: pos };
+                let q = rng.normal_vec(16);
+                let sel = p.select(&ctx, &q, pos);
+                if !matches!(name, "full" | "razor") {
+                    assert!(
+                        sel.len() <= cfg.budget,
+                        "{name}: {} > budget {}",
+                        sel.len(),
+                        cfg.budget
+                    );
+                }
+                let mut sorted = sel.clone();
+                sorted.sort_unstable();
+                sorted.dedup();
+                assert_eq!(sel, sorted, "{name}: unsorted/dup selection");
+                assert!(sel.iter().all(|&t| t < pos), "{name}: out-of-range token");
+                p.on_token(&ctx, pos);
+            }
+        }
+    }
+}

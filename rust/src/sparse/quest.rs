@@ -1,0 +1,248 @@
+//! Quest (Tang et al., 2024): page-level retrieval with min-max key
+//! bounds. Each page stores the elementwise min/max of its keys (an
+//! axis-aligned bounding box); a query scores a page by the maximum
+//! possible dot product over that box: `Σ_d max(q_d·min_d, q_d·max_d)`.
+//!
+//! The segmentation is pluggable so the pilot study (paper §3 / Fig. 2)
+//! can swap fixed 16-token pages for structure-aware chunks while
+//! keeping the scoring identical (`quest-chunks`).
+
+use super::{always_active, merge_with_budget, Ctx, Policy};
+use crate::chunking::Chunker;
+use crate::config::LycheeConfig;
+use crate::index::reps::KeySource;
+
+struct Page {
+    start: usize,
+    len: usize,
+    min: Vec<f32>,
+    max: Vec<f32>,
+}
+
+impl Page {
+    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> Page {
+        let d = keys.dim();
+        let mut min = vec![f32::INFINITY; d];
+        let mut max = vec![f32::NEG_INFINITY; d];
+        for t in start..start + len {
+            for (j, &x) in keys.key(t).iter().enumerate() {
+                min[j] = min[j].min(x);
+                max[j] = max[j].max(x);
+            }
+        }
+        Page { start, len, min, max }
+    }
+
+    /// Quest's score: upper bound of q·k over the page AABB.
+    fn score(&self, q: &[f32]) -> f32 {
+        let mut s = 0.0;
+        for j in 0..q.len() {
+            s += (q[j] * self.min[j]).max(q[j] * self.max[j]);
+        }
+        s
+    }
+}
+
+pub struct Quest {
+    cfg: LycheeConfig,
+    chunker: Box<dyn Chunker>,
+    pages: Vec<Page>,
+    /// Decode-side accumulation (fixed page size like the paper's system).
+    open_start: Option<usize>,
+    open_len: usize,
+    decode_page: usize,
+}
+
+impl Quest {
+    pub fn new(cfg: LycheeConfig, chunker: Box<dyn Chunker>) -> Quest {
+        Quest { cfg, chunker, pages: Vec::new(), open_start: None, open_len: 0, decode_page: 48 }
+    }
+}
+
+impl Policy for Quest {
+    fn name(&self) -> &'static str {
+        "quest"
+    }
+
+    fn build(&mut self, ctx: &Ctx) {
+        let spans = self.chunker.chunk(&ctx.text[..ctx.n.min(ctx.text.len())]);
+        self.pages = spans
+            .iter()
+            .map(|s| Page::from_span(ctx.keys, s.start, s.len))
+            .collect();
+        self.open_start = None;
+        self.open_len = 0;
+    }
+
+    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let budget = self.cfg.budget;
+        if pos <= budget {
+            return (0..pos).collect();
+        }
+        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        if let Some(s) = self.open_start {
+            always.extend(s..(s + self.open_len).min(pos));
+            always.sort_unstable();
+            always.dedup();
+        }
+        let remaining = budget.saturating_sub(always.len());
+        // rank pages by AABB score, take whole pages until the budget
+        let mut scored: Vec<(usize, f32)> = self
+            .pages
+            .iter()
+            .enumerate()
+            .map(|(i, p)| (i, p.score(q)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut cand = Vec::new();
+        let mut left = remaining;
+        for (i, _) in scored {
+            let p = &self.pages[i];
+            if p.len > left {
+                continue; // whole-page granularity: fragmentation cost is Quest's
+            }
+            cand.extend(p.start..p.start + p.len);
+            left -= p.len;
+            if left == 0 {
+                break;
+            }
+        }
+        merge_with_budget(always, &cand, budget)
+    }
+
+    fn on_token(&mut self, ctx: &Ctx, pos: usize) {
+        match self.open_start {
+            None => {
+                self.open_start = Some(pos);
+                self.open_len = 1;
+            }
+            Some(_) => self.open_len += 1,
+        }
+        if self.open_len >= self.decode_page {
+            let start = self.open_start.take().unwrap();
+            self.pages.push(Page::from_span(ctx.keys, start, self.open_len));
+            self.open_len = 0;
+        }
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.pages
+            .iter()
+            .map(|p| (p.min.len() + p.max.len()) * 4 + 16)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::FixedSizeChunker;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    fn build_quest(n: usize, d: usize, budget: usize, seed: u64) -> (Quest, Vec<f32>, Vec<u8>) {
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = budget;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut rng = Rng::new(seed);
+        let keys = rng.normal_vec(n * d);
+        let text = vec![b'x'; n];
+        let mut q = Quest::new(cfg, Box::new(FixedSizeChunker::new(16)));
+        let src = FlatKeys::new(&keys, d);
+        q.build(&Ctx { keys: &src, text: &text, n });
+        (q, keys, text)
+    }
+
+    #[test]
+    fn aabb_score_is_upper_bound() {
+        let mut rng = Rng::new(0);
+        let keys = rng.normal_vec(64 * 8);
+        let src = FlatKeys::new(&keys, 8);
+        let page = Page::from_span(&src, 16, 16);
+        for _ in 0..50 {
+            let q = rng.normal_vec(8);
+            let ub = page.score(&q);
+            for t in 16..32 {
+                let dp = crate::linalg::dot(&q, src.key(t));
+                assert!(dp <= ub + 1e-4, "page UB violated: {dp} > {ub}");
+            }
+        }
+    }
+
+    #[test]
+    fn selects_page_containing_spike() {
+        // plant a page whose keys align with q: Quest must select it
+        let d = 8;
+        let n = 512;
+        let mut rng = Rng::new(1);
+        let mut keys = rng.normal_vec(n * d);
+        for t in 256..272 {
+            for j in 0..d {
+                keys[t * d + j] = if j == 0 { 10.0 } else { 0.0 };
+            }
+        }
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 64;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut quest = Quest::new(cfg, Box::new(FixedSizeChunker::new(16)));
+        let src = FlatKeys::new(&keys, d);
+        let text = vec![b'x'; n];
+        let ctx = Ctx { keys: &src, text: &text, n };
+        quest.build(&ctx);
+        let mut q = vec![0.0; d];
+        q[0] = 1.0;
+        let sel = quest.select(&ctx, &q, n);
+        for t in 256..272 {
+            assert!(sel.contains(&t), "spiked page token {t} not selected");
+        }
+    }
+
+    #[test]
+    fn whole_page_granularity() {
+        let (mut quest, keys, text) = build_quest(512, 8, 64, 2);
+        let src = FlatKeys::new(&keys, 8);
+        let ctx = Ctx { keys: &src, text: &text, n: 512 };
+        let mut rng = Rng::new(3);
+        let q = rng.normal_vec(8);
+        let sel = quest.select(&ctx, &q, 512);
+        let set: std::collections::HashSet<usize> = sel.iter().copied().collect();
+        // every selected non-sink/recent token's page is fully selected
+        for p in &quest.pages {
+            let inside = (p.start..p.start + p.len).filter(|t| set.contains(t)).count();
+            let overlaps_always = p.start < 4 || p.start + p.len > 512 - 8;
+            if !overlaps_always {
+                assert!(
+                    inside == 0 || inside == p.len,
+                    "page [{}..{}) partially selected: {inside}",
+                    p.start,
+                    p.start + p.len
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_pages_sealed_every_page_tokens() {
+        let (mut quest, _keys, _) = build_quest(512, 8, 64, 4);
+        let mut rng = Rng::new(5);
+        let all_keys = rng.normal_vec((512 + 100) * 8);
+        let src = FlatKeys::new(&all_keys, 8);
+        let text = vec![b'x'; 612];
+        let before = quest.pages.len();
+        for pos in 512..512 + 100 {
+            let ctx = Ctx { keys: &src, text: &text, n: pos };
+            quest.on_token(&ctx, pos);
+        }
+        assert_eq!(quest.pages.len(), before + 2); // 100/48 = 2 sealed
+        assert_eq!(quest.open_len, 4);
+    }
+
+    #[test]
+    fn index_bytes_scales_with_pages() {
+        let (q1, ..) = build_quest(256, 8, 64, 6);
+        let (q2, ..) = build_quest(1024, 8, 64, 6);
+        assert!(q2.index_bytes() > q1.index_bytes());
+    }
+}

@@ -1,0 +1,217 @@
+//! ShadowKV (Sun et al., 2025a): landmark-based pre-selection. Small
+//! (8-token) pages are summarized by their mean key ("landmark"); pages
+//! whose keys deviate most from their landmark are *outliers* kept
+//! resident; at decode, the landmark scores select the top pages.
+//! (The paper's low-rank pre-RoPE K compression is a GPU-memory
+//! optimization orthogonal to selection quality; the selection mechanism
+//! is what matters for accuracy and is modeled here.)
+
+use super::{always_active, merge_with_budget, Ctx, Policy};
+use crate::config::LycheeConfig;
+use crate::index::reps::KeySource;
+use crate::linalg;
+
+const PAGE: usize = 32; // 8 BPE tokens ~= 32 bytes
+/// Fraction of pages kept resident as outliers.
+const OUTLIER_FRAC: f64 = 0.02;
+
+struct Landmark {
+    start: usize,
+    len: usize,
+    mean: Vec<f32>,
+    deviation: f32,
+}
+
+impl Landmark {
+    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> Landmark {
+        let d = keys.dim();
+        let mut mean = vec![0.0f32; d];
+        for t in start..start + len {
+            linalg::add_assign(&mut mean, keys.key(t));
+        }
+        linalg::scale(&mut mean, 1.0 / len as f32);
+        let mut dev = 0.0f32;
+        for t in start..start + len {
+            dev = dev.max(linalg::dist(keys.key(t), &mean));
+        }
+        Landmark { start, len, mean, deviation: dev }
+    }
+}
+
+pub struct ShadowKv {
+    cfg: LycheeConfig,
+    landmarks: Vec<Landmark>,
+    outliers: Vec<usize>, // page indices always active
+    open_start: Option<usize>,
+    open_len: usize,
+}
+
+impl ShadowKv {
+    pub fn new(cfg: LycheeConfig) -> ShadowKv {
+        ShadowKv { cfg, landmarks: Vec::new(), outliers: Vec::new(), open_start: None, open_len: 0 }
+    }
+
+    fn recompute_outliers(&mut self) {
+        let k = ((self.landmarks.len() as f64 * OUTLIER_FRAC).ceil() as usize).max(1);
+        let devs: Vec<f32> = self.landmarks.iter().map(|l| l.deviation).collect();
+        self.outliers = linalg::top_k(&devs, k.min(devs.len()));
+    }
+}
+
+impl Policy for ShadowKv {
+    fn name(&self) -> &'static str {
+        "shadowkv"
+    }
+
+    fn build(&mut self, ctx: &Ctx) {
+        self.landmarks.clear();
+        let mut s = 0;
+        while s < ctx.n {
+            let len = PAGE.min(ctx.n - s);
+            self.landmarks.push(Landmark::from_span(ctx.keys, s, len));
+            s += len;
+        }
+        self.recompute_outliers();
+        self.open_start = None;
+        self.open_len = 0;
+    }
+
+    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let budget = self.cfg.budget;
+        if pos <= budget {
+            return (0..pos).collect();
+        }
+        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        for &pi in &self.outliers {
+            let l = &self.landmarks[pi];
+            always.extend(l.start..(l.start + l.len).min(pos));
+        }
+        if let Some(s) = self.open_start {
+            always.extend(s..(s + self.open_len).min(pos));
+        }
+        always.sort_unstable();
+        always.dedup();
+        always.truncate(budget);
+        let remaining = budget.saturating_sub(always.len());
+        // landmark scoring: plain mean-key dot (no radius slack — this is
+        // ShadowKV's approximation; its recall deficit vs ball/UB methods
+        // on scattered topics is visible in Table 1's reproduction)
+        let mut scored: Vec<(usize, f32)> = self
+            .landmarks
+            .iter()
+            .enumerate()
+            .map(|(i, l)| (i, linalg::dot(q, &l.mean)))
+            .collect();
+        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        let mut cand = Vec::new();
+        let mut left = remaining;
+        for (i, _) in scored {
+            let l = &self.landmarks[i];
+            if l.len > left {
+                continue;
+            }
+            cand.extend(l.start..l.start + l.len);
+            left -= l.len;
+            if left == 0 {
+                break;
+            }
+        }
+        merge_with_budget(always, &cand, budget)
+    }
+
+    fn on_token(&mut self, ctx: &Ctx, pos: usize) {
+        match self.open_start {
+            None => {
+                self.open_start = Some(pos);
+                self.open_len = 1;
+            }
+            Some(_) => self.open_len += 1,
+        }
+        if self.open_len >= PAGE {
+            let start = self.open_start.take().unwrap();
+            self.landmarks.push(Landmark::from_span(ctx.keys, start, self.open_len));
+            self.open_len = 0;
+            self.recompute_outliers();
+        }
+    }
+
+    fn index_bytes(&self) -> usize {
+        self.landmarks.iter().map(|l| l.mean.len() * 4 + 20).sum::<usize>()
+            + self.outliers.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn landmark_pages_cover_context() {
+        let mut rng = Rng::new(0);
+        let keys = rng.normal_vec(100 * 4);
+        let src = FlatKeys::new(&keys, 4);
+        let mut p = ShadowKv::new(LycheeConfig::default());
+        p.build(&Ctx { keys: &src, text: &[b'x'; 100], n: 100 });
+        assert_eq!(p.landmarks.iter().map(|l| l.len).sum::<usize>(), 100);
+        assert!(!p.outliers.is_empty());
+    }
+
+    #[test]
+    fn finds_aligned_page() {
+        let d = 8;
+        let n = 1024;
+        let mut rng = Rng::new(1);
+        let mut keys = rng.normal_vec(n * d);
+        for t in 384..416 {
+            for j in 0..d {
+                keys[t * d + j] = if j == 1 { 4.0 } else { 0.0 };
+            }
+        }
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 96;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut p = ShadowKv::new(cfg);
+        let src = FlatKeys::new(&keys, d);
+        let text = vec![b'x'; n];
+        let ctx = Ctx { keys: &src, text: &text, n };
+        p.build(&ctx);
+        let mut q = vec![0.0; d];
+        q[1] = 1.0;
+        let sel = p.select(&ctx, &q, n);
+        for t in 384..416 {
+            assert!(sel.contains(&t));
+        }
+    }
+
+    #[test]
+    fn outliers_always_active() {
+        let mut rng = Rng::new(2);
+        let d = 8;
+        let n = 2048;
+        let mut keys = rng.normal_vec(n * d);
+        // one page with wildly divergent keys -> top outlier
+        for (i, t) in (800..808).enumerate() {
+            for j in 0..d {
+                keys[t * d + j] = if j == i % d { 20.0 * (1.0 + i as f32) } else { -9.0 };
+            }
+        }
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 256;
+        cfg.sink = 4;
+        cfg.recent = 8;
+        let mut p = ShadowKv::new(cfg);
+        let src = FlatKeys::new(&keys, d);
+        let text = vec![b'x'; n];
+        let ctx = Ctx { keys: &src, text: &text, n };
+        p.build(&ctx);
+        let top_outlier = p.outliers[0];
+        assert_eq!(p.landmarks[top_outlier].start, 800);
+        // a query orthogonal to the outlier still keeps it active
+        let q = rng.unit_vec(d);
+        let sel = p.select(&ctx, &q, n);
+        assert!(sel.contains(&800));
+    }
+}

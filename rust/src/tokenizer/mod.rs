@@ -1,0 +1,203 @@
+//! Byte-level tokenizer + the hierarchical delimiter classification
+//! (paper Table 4) that drives structure-aware chunking.
+//!
+//! LycheeLM is byte-level (vocab 256), so tokenization is the identity on
+//! bytes; the value of this module is the *delimiter priority* function:
+//! four levels from structural separators down to whitespace, matching
+//! the paper's Appendix B exactly. Multi-byte delimiters (paragraph
+//! breaks, Markdown fences, CJK punctuation) are detected over a byte
+//! window ending at the candidate split point.
+
+/// Priority level of a boundary (paper Table 4). Lower = stronger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum DelimiterLevel {
+    /// Paragraph breaks (`\n\n`), Markdown (`-`, `***`, code fences),
+    /// structural language (`}`, `]`, `>`).
+    Structural = 1,
+    /// Sentence terminators (`.`, `?`, `!`, CJK 。？！) and single `\n`.
+    Sentence = 2,
+    /// Phrasal punctuation (`,`, `;`, `:` and CJK ，；：、).
+    Phrasal = 3,
+    /// Spaces and tabs.
+    Whitespace = 4,
+}
+
+/// Byte-level token stream (identity mapping, kept as a type so a subword
+/// tokenizer could be swapped in without touching the chunker).
+#[derive(Clone, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn new() -> Self {
+        ByteTokenizer
+    }
+
+    pub fn encode(&self, text: &str) -> Vec<u8> {
+        text.as_bytes().to_vec()
+    }
+
+    pub fn decode(&self, tokens: &[u8]) -> String {
+        String::from_utf8_lossy(tokens).into_owned()
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        256
+    }
+}
+
+// CJK punctuation UTF-8 encodings (all 3 bytes).
+const CJK_SENTENCE: [&[u8]; 3] = ["。".as_bytes(), "？".as_bytes(), "！".as_bytes()];
+const CJK_PHRASAL: [&[u8]; 4] = ["，".as_bytes(), "；".as_bytes(), "：".as_bytes(), "、".as_bytes()];
+
+/// Classify the boundary *after* byte index `i` in `bytes`.
+///
+/// Returns the strongest delimiter level that a split after position `i`
+/// would respect, or `None` if `bytes[i]` ends no delimiter. This is the
+/// "natural delimiter lookahead" primitive of the paper's Algorithm 1
+/// (structure-aware chunking).
+pub fn boundary_level(bytes: &[u8], i: usize) -> Option<DelimiterLevel> {
+    if i >= bytes.len() {
+        return None;
+    }
+    let b = bytes[i];
+    let prev = if i > 0 { Some(bytes[i - 1]) } else { None };
+
+    // ---- Level 1: structural ------------------------------------------
+    // Paragraph break: second '\n' of "\n\n".
+    if b == b'\n' && prev == Some(b'\n') {
+        return Some(DelimiterLevel::Structural);
+    }
+    // Markdown fence/rule: last byte of "```" or "***" or "---".
+    if i >= 2 {
+        let w = &bytes[i - 2..=i];
+        if w == b"```" || w == b"***" || w == b"---" {
+            return Some(DelimiterLevel::Structural);
+        }
+    }
+    // Structural language closers.
+    if matches!(b, b'}' | b']' | b'>') {
+        return Some(DelimiterLevel::Structural);
+    }
+
+    // ---- Level 2: sentence --------------------------------------------
+    if matches!(b, b'.' | b'?' | b'!') {
+        // Do not split inside decimal numbers ("3.14") or identifiers
+        // ("obj.field"): require the next byte to not be alphanumeric.
+        let next_alnum = bytes
+            .get(i + 1)
+            .map(|c| c.is_ascii_alphanumeric())
+            .unwrap_or(false);
+        if !next_alnum {
+            return Some(DelimiterLevel::Sentence);
+        }
+        return None;
+    }
+    if b == b'\n' {
+        return Some(DelimiterLevel::Sentence);
+    }
+    if ends_with_any(bytes, i, &CJK_SENTENCE) {
+        return Some(DelimiterLevel::Sentence);
+    }
+
+    // ---- Level 3: phrasal ----------------------------------------------
+    if matches!(b, b',' | b';' | b':') {
+        return Some(DelimiterLevel::Phrasal);
+    }
+    if ends_with_any(bytes, i, &CJK_PHRASAL) {
+        return Some(DelimiterLevel::Phrasal);
+    }
+
+    // ---- Level 4: whitespace -------------------------------------------
+    if matches!(b, b' ' | b'\t') {
+        return Some(DelimiterLevel::Whitespace);
+    }
+    None
+}
+
+fn ends_with_any(bytes: &[u8], i: usize, pats: &[&[u8]]) -> bool {
+    pats.iter().any(|p| {
+        let n = p.len();
+        i + 1 >= n && &bytes[i + 1 - n..=i] == *p
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn level_at(text: &str, i: usize) -> Option<DelimiterLevel> {
+        boundary_level(text.as_bytes(), i)
+    }
+
+    #[test]
+    fn encode_decode_round_trip() {
+        let t = ByteTokenizer::new();
+        let s = "hello, 世界!\n";
+        assert_eq!(t.decode(&t.encode(s)), s);
+        assert_eq!(t.vocab_size(), 256);
+    }
+
+    #[test]
+    fn paragraph_break_is_structural() {
+        let s = "para one.\n\npara two";
+        let i = s.find("\n\n").unwrap() + 1;
+        assert_eq!(level_at(s, i), Some(DelimiterLevel::Structural));
+    }
+
+    #[test]
+    fn json_closers_structural() {
+        let s = r#"{"a": [1, 2]}"#;
+        assert_eq!(level_at(s, s.len() - 1), Some(DelimiterLevel::Structural)); // }
+        assert_eq!(level_at(s, s.find(']').unwrap()), Some(DelimiterLevel::Structural));
+    }
+
+    #[test]
+    fn markdown_fence_structural() {
+        let s = "```\ncode\n```";
+        assert_eq!(level_at(s, 2), Some(DelimiterLevel::Structural));
+    }
+
+    #[test]
+    fn sentence_terminators() {
+        assert_eq!(level_at("Done. Next", 4), Some(DelimiterLevel::Sentence));
+        assert_eq!(level_at("Why? Because", 3), Some(DelimiterLevel::Sentence));
+        assert_eq!(level_at("single\nnewline", 6), Some(DelimiterLevel::Sentence));
+    }
+
+    #[test]
+    fn decimal_point_not_a_boundary() {
+        assert_eq!(level_at("pi is 3.14 ok", 7), None); // the '.' in 3.14
+        assert_eq!(level_at("obj.field", 3), None);
+    }
+
+    #[test]
+    fn phrasal_and_whitespace() {
+        assert_eq!(level_at("a, b", 1), Some(DelimiterLevel::Phrasal));
+        assert_eq!(level_at("k: v", 1), Some(DelimiterLevel::Phrasal));
+        assert_eq!(level_at("a b", 1), Some(DelimiterLevel::Whitespace));
+        assert_eq!(level_at("a\tb", 1), Some(DelimiterLevel::Whitespace));
+    }
+
+    #[test]
+    fn cjk_punctuation() {
+        let s = "你好。再见";
+        let bytes = s.as_bytes();
+        // "。" is 3 bytes; its last byte ends a Sentence boundary.
+        let idx = 6 + 2; // 你好 = 6 bytes, 。 = bytes 6..9
+        assert_eq!(boundary_level(bytes, idx), Some(DelimiterLevel::Sentence));
+        let s2 = "一，二";
+        assert_eq!(boundary_level(s2.as_bytes(), 3 + 2), Some(DelimiterLevel::Phrasal));
+    }
+
+    #[test]
+    fn plain_letters_no_boundary() {
+        assert_eq!(level_at("abc", 1), None);
+    }
+
+    #[test]
+    fn level_ordering_matches_priorities() {
+        assert!(DelimiterLevel::Structural < DelimiterLevel::Sentence);
+        assert!(DelimiterLevel::Sentence < DelimiterLevel::Phrasal);
+        assert!(DelimiterLevel::Phrasal < DelimiterLevel::Whitespace);
+    }
+}

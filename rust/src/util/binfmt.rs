@@ -1,0 +1,198 @@
+//! LCT1 tensor container reader — the weights interchange format written
+//! by `python/compile/aot.py` (`write_lct1`). Layout (little-endian):
+//!
+//! ```text
+//! magic "LCT1" | u32 count | count x {
+//!     u16 name_len | name utf8 | u8 dtype (0=f32, 1=i32) | u8 ndim |
+//!     u32 dims[ndim] | raw data (row-major)
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::path::Path;
+
+/// Element type of a stored tensor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+/// A named tensor loaded from an LCT1 container.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Raw data; f32 for DType::F32, bit-cast i32 for DType::I32.
+    pub data_f32: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as i32 (only valid for DType::I32).
+    pub fn as_i32(&self) -> Vec<i32> {
+        assert_eq!(self.dtype, DType::I32);
+        self.data_f32.iter().map(|f| f.to_bits() as i32).collect()
+    }
+}
+
+/// All tensors from an LCT1 file, retaining file order.
+#[derive(Debug, Default)]
+pub struct TensorFile {
+    pub tensors: Vec<Tensor>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl TensorFile {
+    pub fn load(path: &Path) -> Result<TensorFile> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading LCT1 file {}", path.display()))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<TensorFile> {
+        let mut r = bytes;
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic).context("LCT1 magic")?;
+        if &magic != b"LCT1" {
+            bail!("bad magic {:?}", magic);
+        }
+        let count = read_u32(&mut r)? as usize;
+        let mut tensors = Vec::with_capacity(count);
+        let mut by_name = BTreeMap::new();
+        for ti in 0..count {
+            let name_len = read_u16(&mut r)? as usize;
+            let mut name_bytes = vec![0u8; name_len];
+            r.read_exact(&mut name_bytes).context("tensor name")?;
+            let name = String::from_utf8(name_bytes).context("tensor name utf8")?;
+            let mut hdr = [0u8; 2];
+            r.read_exact(&mut hdr)?;
+            let dtype = match hdr[0] {
+                0 => DType::F32,
+                1 => DType::I32,
+                d => bail!("unknown dtype code {d} in tensor {name}"),
+            };
+            let ndim = hdr[1] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(read_u32(&mut r)? as usize);
+            }
+            let numel: usize = shape.iter().product::<usize>().max(1);
+            let mut raw = vec![0u8; numel * 4];
+            r.read_exact(&mut raw)
+                .with_context(|| format!("tensor {name} data ({} B)", numel * 4))?;
+            let data_f32: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            by_name.insert(name.clone(), ti);
+            tensors.push(Tensor { name, dtype, shape, data_f32 });
+        }
+        if !r.is_empty() {
+            bail!("{} trailing bytes after last tensor", r.len());
+        }
+        Ok(TensorFile { tensors, by_name })
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.by_name.get(name).map(|&i| &self.tensors[i])
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.tensors.iter().map(|t| t.name.as_str()).collect()
+    }
+}
+
+fn read_u32(r: &mut &[u8]) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u16(r: &mut &[u8]) -> Result<u16> {
+    let mut b = [0u8; 2];
+    r.read_exact(&mut b)?;
+    Ok(u16::from_le_bytes(b))
+}
+
+/// Writer (tests + tooling symmetry with the python writer).
+pub fn write_lct1(tensors: &[(&str, DType, &[usize], &[f32])]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(b"LCT1");
+    out.extend_from_slice(&(tensors.len() as u32).to_le_bytes());
+    for (name, dtype, shape, data) in tensors {
+        out.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        out.extend_from_slice(name.as_bytes());
+        out.push(match dtype {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        });
+        out.push(shape.len() as u8);
+        for &d in *shape {
+            out.extend_from_slice(&(d as u32).to_le_bytes());
+        }
+        for &f in *data {
+            out.extend_from_slice(&f.to_le_bytes());
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_trip() {
+        let data_a = [1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let data_b = [7.5f32];
+        let bytes = write_lct1(&[
+            ("layer.w", DType::F32, &[2, 3], &data_a),
+            ("scalar", DType::F32, &[], &data_b),
+        ]);
+        let tf = TensorFile::parse(&bytes).unwrap();
+        assert_eq!(tf.tensors.len(), 2);
+        let a = tf.get("layer.w").unwrap();
+        assert_eq!(a.shape, vec![2, 3]);
+        assert_eq!(a.data_f32, data_a);
+        assert_eq!(tf.get("scalar").unwrap().numel(), 1);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(TensorFile::parse(b"NOPE\x00\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated() {
+        let data = [1.0f32; 4];
+        let mut bytes = write_lct1(&[("t", DType::F32, &[4], &data)]);
+        bytes.truncate(bytes.len() - 3);
+        assert!(TensorFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn rejects_trailing_garbage() {
+        let data = [1.0f32];
+        let mut bytes = write_lct1(&[("t", DType::F32, &[1], &data)]);
+        bytes.push(0);
+        assert!(TensorFile::parse(&bytes).is_err());
+    }
+
+    #[test]
+    fn preserves_order() {
+        let d = [0.0f32];
+        let bytes = write_lct1(&[
+            ("z", DType::F32, &[1], &d),
+            ("a", DType::F32, &[1], &d),
+        ]);
+        let tf = TensorFile::parse(&bytes).unwrap();
+        assert_eq!(tf.names(), vec!["z", "a"]);
+    }
+}

@@ -1,0 +1,16 @@
+//! Foundational utilities built in-tree (the offline registry lacks
+//! `serde`, `rand`, `proptest`, `criterion` — see DESIGN.md
+//! "Substitutions"): JSON, deterministic RNG, statistics, the LCT1 tensor
+//! container, a mini property-testing framework, a thread pool and timing
+//! helpers.
+
+pub mod binfmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use rng::Rng;
+pub use timer::Stopwatch;

@@ -1,0 +1,167 @@
+//! Mini property-testing framework (offline substitute for `proptest`).
+//!
+//! Runs a property over N generated cases; on failure it re-runs with a
+//! simple halving shrink over the case's size parameter and reports the
+//! seed so the case is reproducible:
+//!
+//! ```ignore
+//! prop::check("sorted stays permutation", 200, |g| {
+//!     let v = g.vec_usize(0..100, 0..50);
+//!     /* ... assert invariant, return Result<(), String> ... */
+//! });
+//! ```
+
+use super::rng::Rng;
+use std::ops::Range;
+
+/// Case generator handed to properties: wraps a seeded RNG with
+/// convenience constructors plus a size knob used for shrinking.
+pub struct Gen {
+    pub rng: Rng,
+    pub size: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, r: Range<usize>) -> usize {
+        if r.is_empty() {
+            r.start
+        } else {
+            self.rng.range(r.start, r.end)
+        }
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + self.rng.f32() * (hi - lo)
+    }
+
+    /// A vector whose length scales with the shrink size.
+    pub fn vec_f32(&mut self, len: Range<usize>, lo: f32, hi: f32) -> Vec<f32> {
+        let max = len.end.min(len.start.max(self.size) + 1);
+        let n = self.usize_in(len.start..max.max(len.start + 1));
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_usize(&mut self, range: Range<usize>, len: Range<usize>) -> Vec<usize> {
+        let max = len.end.min(len.start.max(self.size) + 1);
+        let n = self.usize_in(len.start..max.max(len.start + 1));
+        (0..n).map(|_| self.usize_in(range.clone())).collect()
+    }
+
+    pub fn unit_vec(&mut self, dim: usize) -> Vec<f32> {
+        self.rng.unit_vec(dim)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+}
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` generated cases of `property`. Panics (test failure) with
+/// the reproducing seed + shrink info on the first violated case.
+pub fn check<F>(name: &str, cases: usize, mut property: F)
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let base_seed = 0xC0FFEE ^ fxhash(name);
+    for i in 0..cases {
+        let seed = base_seed.wrapping_add(i as u64);
+        let full_size = 64usize;
+        if let Err(msg) = run_case(&mut property, seed, full_size) {
+            // shrink: halve the size parameter while the failure persists
+            let mut best = (full_size, msg);
+            let mut size = full_size / 2;
+            while size >= 1 {
+                match run_case(&mut property, seed, size) {
+                    Err(m) => {
+                        best = (size, m);
+                        size /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {seed:#x}, shrunk size {}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+fn run_case<F>(property: &mut F, seed: u64, size: usize) -> CaseResult
+where
+    F: FnMut(&mut Gen) -> CaseResult,
+{
+    let mut g = Gen { rng: Rng::new(seed), size };
+    property(&mut g)
+}
+
+/// Tiny FNV-style string hash for seeding per-property streams.
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always ok", 50, |g| {
+            count += 1;
+            let v = g.vec_f32(0..10, -1.0, 1.0);
+            prop_assert!(v.len() < 10, "len {}", v.len());
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check("always fails", 10, |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn deterministic_given_name() {
+        let mut first: Vec<usize> = Vec::new();
+        check("det", 5, |g| {
+            first.push(g.usize_in(0..1000));
+            Ok(())
+        });
+        let mut second: Vec<usize> = Vec::new();
+        check("det", 5, |g| {
+            second.push(g.usize_in(0..1000));
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn unit_vec_normalized() {
+        check("unit vec", 20, |g| {
+            let v = g.unit_vec(16);
+            let n: f32 = v.iter().map(|x| x * x).sum::<f32>().sqrt();
+            prop_assert!((n - 1.0).abs() < 1e-4, "norm {n}");
+            Ok(())
+        });
+    }
+}

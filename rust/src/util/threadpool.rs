@@ -1,0 +1,136 @@
+//! Fixed-size thread pool over `std::sync::mpsc` (offline substitute for
+//! tokio; the coordinator's event loop and workers run on these threads).
+
+use std::sync::mpsc;
+use std::sync::{Arc, Mutex};
+use std::thread;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A simple fixed worker pool. Jobs are executed FIFO; `join` blocks until
+/// all submitted jobs have completed and shuts the pool down.
+pub struct ThreadPool {
+    sender: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> ThreadPool {
+        let threads = threads.max(1);
+        let (sender, receiver) = mpsc::channel::<Job>();
+        let receiver = Arc::new(Mutex::new(receiver));
+        let workers = (0..threads)
+            .map(|i| {
+                let rx = Arc::clone(&receiver);
+                thread::Builder::new()
+                    .name(format!("lychee-worker-{i}"))
+                    .spawn(move || loop {
+                        let job = rx.lock().unwrap().recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // channel closed
+                        }
+                    })
+                    .expect("spawn worker")
+            })
+            .collect();
+        ThreadPool { sender: Some(sender), workers }
+    }
+
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.sender
+            .as_ref()
+            .expect("pool already joined")
+            .send(Box::new(f))
+            .expect("pool thread died");
+    }
+
+    /// Run a closure over each item of a slice in parallel, collecting
+    /// results in order.
+    pub fn map<T: Sync, R: Send + 'static>(
+        &self,
+        items: &[T],
+        f: impl Fn(&T) -> R + Sync,
+    ) -> Vec<R> {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        // Scoped parallelism without external crates: chunk via std::thread::scope.
+        let n = self.workers.len().min(items.len()).max(1);
+        let chunk = items.len().div_ceil(n);
+        let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+        let slots: Vec<(usize, &[T])> = items.chunks(chunk).enumerate().collect();
+        thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (ci, block) in slots {
+                let f = &f;
+                handles.push((ci, s.spawn(move || block.iter().map(f).collect::<Vec<R>>())));
+            }
+            for (ci, h) in handles {
+                let res = h.join().expect("map worker panicked");
+                for (j, r) in res.into_iter().enumerate() {
+                    out[ci * chunk + j] = Some(r);
+                }
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    pub fn join(mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        drop(self.sender.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn executes_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicUsize::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(3);
+        let items: Vec<usize> = (0..50).collect();
+        let out = pool.map(&items, |&x| x * 2);
+        assert_eq!(out, (0..50).map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_on_empty_slice() {
+        let pool = ThreadPool::new(2);
+        let out: Vec<usize> = pool.map(&[], |x: &usize| *x);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn single_thread_pool_works() {
+        let pool = ThreadPool::new(1);
+        let out = pool.map(&[1, 2, 3], |&x: &i32| x + 1);
+        assert_eq!(out, vec![2, 3, 4]);
+    }
+}

@@ -1,0 +1,152 @@
+//! Timing helpers: a stopwatch and a named phase accumulator used for the
+//! kernel-level latency breakdowns (paper Fig. 5).
+
+use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
+
+/// Simple stopwatch.
+#[derive(Clone, Copy, Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Stopwatch {
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_us(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e6
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+/// Accumulates wall time per named phase ("retrieval", "update",
+/// "attention", ...). Backs Fig. 5's breakdown tables.
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimer {
+    totals: BTreeMap<&'static str, Duration>,
+    counts: BTreeMap<&'static str, u64>,
+}
+
+impl PhaseTimer {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Time a closure under the given phase name.
+    pub fn time<R>(&mut self, phase: &'static str, f: impl FnOnce() -> R) -> R {
+        let t = Instant::now();
+        let r = f();
+        self.add(phase, t.elapsed());
+        r
+    }
+
+    pub fn add(&mut self, phase: &'static str, d: Duration) {
+        *self.totals.entry(phase).or_default() += d;
+        *self.counts.entry(phase).or_default() += 1;
+    }
+
+    pub fn total_us(&self, phase: &str) -> f64 {
+        self.totals.get(phase).map(|d| d.as_secs_f64() * 1e6).unwrap_or(0.0)
+    }
+
+    pub fn count(&self, phase: &str) -> u64 {
+        self.counts.get(phase).copied().unwrap_or(0)
+    }
+
+    pub fn grand_total_us(&self) -> f64 {
+        self.totals.values().map(|d| d.as_secs_f64() * 1e6).sum()
+    }
+
+    /// (phase, total_us, share-of-total) rows, descending by time.
+    pub fn breakdown(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.grand_total_us().max(1e-12);
+        let mut rows: Vec<_> = self
+            .totals
+            .iter()
+            .map(|(&k, d)| {
+                let us = d.as_secs_f64() * 1e6;
+                (k, us, us / total)
+            })
+            .collect();
+        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows
+    }
+
+    pub fn merge(&mut self, other: &PhaseTimer) {
+        for (&k, d) in &other.totals {
+            *self.totals.entry(k).or_default() += *d;
+        }
+        for (&k, c) in &other.counts {
+            *self.counts.entry(k).or_default() += c;
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.totals.clear();
+        self.counts.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_advances() {
+        let sw = Stopwatch::start();
+        std::thread::sleep(Duration::from_millis(2));
+        assert!(sw.elapsed_us() >= 1000.0);
+    }
+
+    #[test]
+    fn phase_timer_accumulates() {
+        let mut pt = PhaseTimer::new();
+        pt.add("a", Duration::from_micros(100));
+        pt.add("a", Duration::from_micros(50));
+        pt.add("b", Duration::from_micros(25));
+        assert!((pt.total_us("a") - 150.0).abs() < 1.0);
+        assert_eq!(pt.count("a"), 2);
+        let rows = pt.breakdown();
+        assert_eq!(rows[0].0, "a");
+        assert!((rows[0].2 - 150.0 / 175.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn time_closure_returns_value() {
+        let mut pt = PhaseTimer::new();
+        let v = pt.time("x", || 42);
+        assert_eq!(v, 42);
+        assert_eq!(pt.count("x"), 1);
+    }
+
+    #[test]
+    fn merge_adds() {
+        let mut a = PhaseTimer::new();
+        let mut b = PhaseTimer::new();
+        a.add("p", Duration::from_micros(10));
+        b.add("p", Duration::from_micros(20));
+        a.merge(&b);
+        assert!((a.total_us("p") - 30.0).abs() < 1.0);
+    }
+}

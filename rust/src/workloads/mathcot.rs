@@ -1,0 +1,152 @@
+//! MATH500-style chain-of-thought streaming workload (paper Table 2 and
+//! the Fig. 9 stability analysis).
+//!
+//! A problem statement (premise units) is followed by a *generated*
+//! chain of reasoning steps. At each step the model's query probes either
+//! an original premise or an earlier derived step (premise recall — the
+//! property the paper credits for LycheeCluster's MATH500 score). The
+//! decode stream exercises the policies' `on_token` / lazy-update path:
+//! step tokens arrive one at a time, get buffered, packed, and grafted.
+
+use super::textgen;
+use super::{key_near, GenParams, Query, Task, TaskBuilder, UnitKind};
+use crate::util::rng::Rng;
+
+/// A streaming CoT instance: an initial `Task` (the prompt) plus the
+/// decode-time script of steps and probes.
+#[derive(Clone, Debug)]
+pub struct CotInstance {
+    pub prompt: Task,
+    /// Per generated step: the step's text/keys and the probe issued
+    /// *while generating* that step.
+    pub steps: Vec<CotStep>,
+}
+
+#[derive(Clone, Debug)]
+pub struct CotStep {
+    pub text: Vec<u8>,
+    /// [len, d] keys for the step's tokens.
+    pub keys: Vec<f32>,
+    /// Probe issued at the END of this step (targets a premise or an
+    /// earlier step's span, expressed in absolute token positions).
+    pub probe: Query,
+    /// Absolute token span this probe must retrieve.
+    pub target_span: (usize, usize),
+}
+
+/// Generate a CoT instance: `premises` premise units, `steps` reasoning
+/// steps of ~`step_len` tokens each.
+pub fn generate(premises: usize, steps: usize, step_len: usize, seed: u64) -> CotInstance {
+    let p = GenParams::default();
+    let mut b = TaskBuilder::new("mathcot", p.clone(), seed);
+    let mut rng = Rng::new(seed ^ 0xC07);
+    let mut premise_units = Vec::new();
+    for _ in 0..premises {
+        premise_units.push(b.push_unit(UnitKind::ProseSentence, textgen::math_problem(&mut rng).as_bytes()));
+    }
+    let prompt = b.build();
+
+    // decode-time steps: each step has a topic; its probe targets either
+    // a premise (40%) or a previous step (60%, CoT self-reference)
+    let mut inst_rng = Rng::new(seed ^ 0x57E9);
+    let mut step_spans: Vec<(usize, usize, Vec<f32>)> = Vec::new(); // start,end,topic
+    let mut cursor = prompt.n_tokens();
+    let mut out_steps = Vec::new();
+    for s in 0..steps {
+        let topic = inst_rng.unit_vec(p.d);
+        let refers = if step_spans.is_empty() || inst_rng.chance(0.4) {
+            None // premise
+        } else {
+            Some(inst_rng.range(0, step_spans.len()))
+        };
+        let text_s = textgen::cot_step(&mut inst_rng, s + 1, refers.map(|r| r + 1).unwrap_or(0));
+        let mut text = text_s.into_bytes();
+        text.resize(step_len, b' ');
+        let mut keys = Vec::with_capacity(step_len * p.d);
+        for _ in 0..step_len {
+            keys.extend_from_slice(&key_near(&mut inst_rng, &topic, p.coherence));
+        }
+        // probe target: premise unit or earlier step span
+        let (span, target_topic) = match refers {
+            None => {
+                let u = &prompt.units[premise_units[inst_rng.range(0, premise_units.len())]];
+                ((u.start, u.end()), u.topic.clone())
+            }
+            Some(r) => {
+                let (st, en, ref t) = step_spans[r];
+                ((st, en), t.clone())
+            }
+        };
+        let q = key_near(&mut inst_rng, &target_topic, p.query_coherence);
+        out_steps.push(CotStep {
+            text,
+            keys,
+            probe: Query { q, targets: Vec::new(), coverage: p.coverage, min_targets: 0 },
+            target_span: span,
+        });
+        step_spans.push((cursor, cursor + step_len, topic));
+        cursor += step_len;
+    }
+    CotInstance { prompt, steps: out_steps }
+}
+
+impl CotInstance {
+    /// Total tokens after all steps stream in.
+    pub fn total_tokens(&self) -> usize {
+        self.prompt.n_tokens() + self.steps.iter().map(|s| s.text.len()).sum::<usize>()
+    }
+
+    /// Span coverage of `sel` over `span`.
+    pub fn span_coverage(span: (usize, usize), sel: &[usize]) -> f64 {
+        let (lo, hi) = span;
+        if hi <= lo {
+            return 1.0;
+        }
+        let set: std::collections::HashSet<usize> = sel.iter().copied().collect();
+        (lo..hi).filter(|t| set.contains(t)).count() as f64 / (hi - lo) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generates_prompt_and_steps() {
+        let inst = generate(4, 10, 24, 1);
+        assert_eq!(inst.steps.len(), 10);
+        assert!(inst.prompt.n_tokens() > 100);
+        for s in &inst.steps {
+            assert_eq!(s.text.len(), 24);
+            assert_eq!(s.keys.len(), 24 * inst.prompt.d);
+        }
+        assert_eq!(inst.total_tokens(), inst.prompt.n_tokens() + 240);
+    }
+
+    #[test]
+    fn probes_target_valid_history() {
+        let inst = generate(3, 20, 16, 2);
+        let mut cursor = inst.prompt.n_tokens();
+        for s in &inst.steps {
+            let (lo, hi) = s.target_span;
+            assert!(hi <= cursor, "probe target span beyond history");
+            assert!(lo < hi);
+            cursor += s.text.len();
+        }
+    }
+
+    #[test]
+    fn span_coverage_math() {
+        assert_eq!(CotInstance::span_coverage((0, 4), &[0, 1, 2, 3]), 1.0);
+        assert_eq!(CotInstance::span_coverage((0, 4), &[0, 1]), 0.5);
+        assert_eq!(CotInstance::span_coverage((2, 2), &[]), 1.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(3, 5, 16, 7);
+        let b = generate(3, 5, 16, 7);
+        assert_eq!(a.prompt.text, b.prompt.text);
+        assert_eq!(a.steps[4].keys, b.steps[4].keys);
+    }
+}

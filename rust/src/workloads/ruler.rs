@@ -1,0 +1,207 @@
+//! RULER-style retrieval/aggregation tasks (paper Appendix H, Table 6):
+//! `single`, `multikey`, `multivalue`, `multiquery`, `vt` (variable
+//! tracking), `fwe` (frequent words), `qa1`, `qa2`, across context
+//! lengths 4k–32k.
+
+use super::textgen;
+use super::{GenParams, Task, TaskBuilder, UnitKind};
+use crate::util::rng::Rng;
+
+pub const TASKS: &[&str] =
+    &["single", "multikey", "multivalue", "multiquery", "vt", "fwe", "qa1", "qa2"];
+
+pub const CONTEXTS: &[usize] = &[4096, 8192, 16384, 32768];
+
+/// Generate one RULER instance.
+pub fn generate(task: &str, context: usize, seed: u64) -> Task {
+    let mut p = GenParams::default();
+    // qa tasks are noisier (real-document QA vs synthetic needles)
+    if task.starts_with("qa") {
+        p.coherence = 0.72;
+        p.query_coherence = 0.8;
+    }
+    if task == "qa2" {
+        p.coherence = 0.65; // multi-hop-ish harder QA
+    }
+    let mut b = TaskBuilder::new(&format!("ruler/{task}/{context}"), p, seed);
+    let mut rng = Rng::new(seed ^ 0x12C1E2);
+
+    // haystack of prose with needles planted at deterministic offsets
+    let needle = |b: &mut TaskBuilder, tag: usize| -> usize {
+        let text = format!("The special magic number for key-{tag} is {}. ", 100000 + tag * 7);
+        b.push_unit(UnitKind::ProseSentence, text.as_bytes())
+    };
+
+    match task {
+        "single" => {
+            let mut planted = None;
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i == 7 {
+                    planted = Some(needle(b, 1));
+                }
+            });
+            b.probe(planted.expect("needle planted"));
+        }
+        "multikey" => {
+            // many keyed needles; only one is the target
+            let mut needles = Vec::new();
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i % 5 == 2 && needles.len() < 16 {
+                    needles.push(needle(b, needles.len()));
+                }
+            });
+            b.probe(needles[seed as usize % needles.len().max(1)]);
+        }
+        "multivalue" => {
+            // one key with 4 values: all must be retrieved
+            let mut vals = Vec::new();
+            let shared_topic = b.rng.unit_vec(b.p.d);
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i % 9 == 3 && vals.len() < 4 {
+                    let text = format!("A magic value for THE key is {}. ", 5000 + vals.len());
+                    let u = b.push_unit_with_topic(
+                        UnitKind::ProseSentence,
+                        text.as_bytes(),
+                        shared_topic.clone(),
+                    );
+                    vals.push(u);
+                }
+            });
+            b.probe_multi(vals);
+        }
+        "multiquery" => {
+            // 4 independent queries, each with its own needle
+            let mut needles = Vec::new();
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i % 11 == 5 && needles.len() < 4 {
+                    needles.push(needle(b, 100 + needles.len()));
+                }
+            });
+            for &n in &needles {
+                b.probe(n);
+            }
+        }
+        "vt" => {
+            // variable tracking: chain X1 = 5; X2 = X1; X3 = X2 ... the
+            // probe must recover the whole chain
+            let mut chain = Vec::new();
+            let chain_topic = b.rng.unit_vec(b.p.d);
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i % 8 == 4 && chain.len() < 5 {
+                    let k = chain.len();
+                    // chunk-sized hop statements (tiny units would share
+                    // chunks with haystack prose and dilute their reps)
+                    let text = if k == 0 {
+                        "VAR X1 was assigned the special value 12345 here.\n".to_string()
+                    } else {
+                        format!("VAR X{} was assigned a copy of variable X{} here.\n", k + 1, k)
+                    };
+                    // all hops reference the same variable -> same topic
+                    chain.push(b.push_unit_with_topic(
+                        UnitKind::ProseSentence,
+                        text.as_bytes(),
+                        chain_topic.clone(),
+                    ));
+                }
+            });
+            b.probe_multi(chain);
+        }
+        "fwe" => {
+            // frequent-word extraction: the 3 planted words appear in many
+            // units; the answer needs a majority of those occurrences
+            let word_topics: Vec<Vec<f32>> = (0..3).map(|_| b.rng.unit_vec(b.p.d)).collect();
+            let mut occs: Vec<usize> = Vec::new();
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i % 4 == 1 && occs.len() < 12 {
+                    let w = occs.len() % 3;
+                    let text = format!("The frequent word omega{w} appears here again. ");
+                    let topic = super::key_near(&mut b.rng, &word_topics[w].clone(), 0.95);
+                    occs.push(b.push_unit_with_topic(UnitKind::ProseSentence, text.as_bytes(), topic));
+                }
+            });
+            b.probe_blended(occs, 0.5, 8); // majority of the 12 occurrences
+        }
+        "qa1" | "qa2" => {
+            let mut planted = None;
+            fill_until(&mut b, &mut rng, context, |b, i| {
+                if i == 13 {
+                    let text = format!("According to the report, the answer is {}. ", seed % 997);
+                    planted = Some(b.push_unit(UnitKind::ProseSentence, text.as_bytes()));
+                }
+            });
+            b.probe(planted.expect("qa needle planted"));
+        }
+        other => panic!("unknown ruler task {other}"),
+    }
+    b.build()
+}
+
+/// Fill with haystack prose until `target` bytes, invoking `hook` with a
+/// running unit counter so tasks can plant needles mid-stream.
+fn fill_until(
+    b: &mut TaskBuilder,
+    rng: &mut Rng,
+    target: usize,
+    mut hook: impl FnMut(&mut TaskBuilder, usize),
+) {
+    let mut i = 0;
+    while b.len() < target {
+        hook(b, i);
+        b.push_unit(UnitKind::ProseSentence, textgen::prose_sentence(rng).as_bytes());
+        i += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate_at_all_contexts() {
+        for task in TASKS {
+            let t = generate(task, 4096, 1);
+            assert!(t.n_tokens() >= 4096, "{task} too short");
+            assert!(!t.queries.is_empty(), "{task}: no queries");
+        }
+    }
+
+    #[test]
+    fn multivalue_requires_all_four() {
+        let t = generate("multivalue", 4096, 2);
+        assert_eq!(t.queries.len(), 1);
+        assert_eq!(t.queries[0].targets.len(), 4);
+    }
+
+    #[test]
+    fn vt_chain_is_five_hops() {
+        let t = generate("vt", 8192, 3);
+        assert_eq!(t.queries[0].targets.len(), 5);
+    }
+
+    #[test]
+    fn multiquery_has_four_probes() {
+        let t = generate("multiquery", 4096, 4);
+        assert_eq!(t.queries.len(), 4);
+    }
+
+    #[test]
+    fn qa_tasks_are_noisier() {
+        let a = generate("single", 4096, 5);
+        let b = generate("qa2", 4096, 5);
+        // qa2 keys cohere less with the needle topic
+        // compare mean token-topic coherence across ALL units (per-unit
+        // glue sampling makes single-unit comparisons noisy)
+        let cos = |t: &Task| {
+            let mut c = 0.0f32;
+            let mut n = 0usize;
+            for unit in &t.units {
+                for i in unit.start..unit.end() {
+                    c += crate::linalg::dot(&t.keys[i * t.d..(i + 1) * t.d], &unit.topic);
+                    n += 1;
+                }
+            }
+            c / n as f32
+        };
+        assert!(cos(&a) > cos(&b), "single {} <= qa2 {}", cos(&a), cos(&b));
+    }
+}

@@ -1,0 +1,104 @@
+//! StrucText-Eval-style structured-data tasks (paper §3 pilot, Fig. 2):
+//! JSON extraction, tree path lookup, code completion, YAML lookup. Each
+//! instance is a long stream of structured units with one needle unit the
+//! query must retrieve intact.
+
+use super::textgen;
+use super::{GenParams, Task, TaskBuilder, UnitKind};
+use crate::util::rng::Rng;
+
+pub const SUBTASKS: &[&str] = &["json", "tree", "code", "yaml"];
+
+/// Generate one StrucText instance of `subtask` with roughly
+/// `target_tokens` bytes of context and `probes` needle queries.
+pub fn generate(subtask: &str, target_tokens: usize, probes: usize, seed: u64) -> Task {
+    let p = GenParams::default();
+    generate_p(subtask, target_tokens, probes, seed, p)
+}
+
+/// Variant with explicit hardness knobs (used by regime sweeps).
+pub fn generate_with(
+    subtask: &str,
+    target_tokens: usize,
+    probes: usize,
+    seed: u64,
+    query_coherence: f32,
+    theme_mix: f32,
+) -> Task {
+    let mut p = GenParams::default();
+    p.query_coherence = query_coherence;
+    p.theme_mix = theme_mix;
+    generate_p(subtask, target_tokens, probes, seed, p)
+}
+
+fn generate_p(subtask: &str, target_tokens: usize, probes: usize, seed: u64, p: GenParams) -> Task {
+    let mut b = TaskBuilder::new(&format!("structext/{subtask}"), p, seed);
+    let mut gen_rng = Rng::new(seed ^ 0x57AC);
+    let mut unit_ids = Vec::new();
+    while b.len() < target_tokens {
+        let (kind, text) = match subtask {
+            "json" => (UnitKind::JsonRecord, textgen::json_record(&mut gen_rng)),
+            "tree" => (UnitKind::TreePath, textgen::tree_path(&mut gen_rng)),
+            "code" => (UnitKind::CodeFunction, textgen::code_function(&mut gen_rng)),
+            "yaml" => (UnitKind::YamlEntry, textgen::yaml_entry(&mut gen_rng)),
+            other => panic!("unknown structext subtask {other}"),
+        };
+        unit_ids.push(b.push_unit(kind, text.as_bytes()));
+    }
+    // most probes target interior units (retrieval, not recency); a
+    // third hit the tail like real structured-data QA
+    let cut = unit_ids.len().saturating_sub(8).max(1);
+    for i in 0..probes {
+        let target = if i % 3 == 2 {
+            unit_ids[unit_ids.len() - 1 - (i / 3) % 4.min(unit_ids.len())]
+        } else {
+            unit_ids[(seed as usize + i * 131) % cut]
+        };
+        b.probe(target);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_subtasks_generate() {
+        for st in SUBTASKS {
+            let t = generate(st, 2000, 4, 1);
+            assert!(t.n_tokens() >= 2000, "{st} too short");
+            assert_eq!(t.queries.len(), 4);
+            assert!(t.units.len() > 10);
+            // units tile the text exactly
+            let total: usize = t.units.iter().map(|u| u.len).sum();
+            assert_eq!(total, t.n_tokens());
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate("json", 1000, 2, 42);
+        let b = generate("json", 1000, 2, 42);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.keys, b.keys);
+    }
+
+    #[test]
+    fn probe_mix_interior_and_tail() {
+        let t = generate("code", 4000, 9, 3);
+        let tail_start = t.units[t.units.len().saturating_sub(8)].start;
+        let mut interior = 0;
+        let mut tail = 0;
+        for q in &t.queries {
+            let u = &t.units[q.targets[0]];
+            if u.start < tail_start {
+                interior += 1;
+            } else {
+                tail += 1;
+            }
+        }
+        assert_eq!(tail, 3, "one third of probes target the tail");
+        assert_eq!(interior, 6);
+    }
+}

@@ -1,0 +1,168 @@
+//! Deterministic text generators per unit kind. These produce *real*
+//! structured text so the structure-aware chunker faces the same
+//! delimiter patterns as in the paper's corpora (JSON commas/braces,
+//! code punctuation, prose sentences, dialogue turns).
+
+use crate::util::rng::Rng;
+
+const NOUNS: &[&str] = &[
+    "server", "cache", "token", "index", "cluster", "query", "budget", "chunk", "model",
+    "engine", "router", "batch", "kernel", "tensor", "lattice", "ledger",
+];
+const VERBS: &[&str] = &[
+    "loads", "emits", "routes", "prunes", "updates", "streams", "scores", "packs",
+    "merges", "splits", "selects", "caches",
+];
+const ADJS: &[&str] = &[
+    "sparse", "coherent", "hierarchical", "lazy", "bounded", "semantic", "recursive",
+    "adaptive", "stale", "fresh",
+];
+
+fn word(rng: &mut Rng, pool: &[&str]) -> &'static str {
+    let s: &&str = &pool[rng.range(0, pool.len())];
+    // the pools are 'static
+    unsafe { std::mem::transmute::<&str, &'static str>(*s) }
+}
+
+fn ident(rng: &mut Rng) -> String {
+    format!("{}_{}", word(rng, NOUNS), rng.range(0, 1000))
+}
+
+/// A prose sentence, e.g. "The sparse cache routes stale tokens."
+pub fn prose_sentence(rng: &mut Rng) -> String {
+    format!(
+        "The {} {} {} {} {}. ",
+        word(rng, ADJS),
+        word(rng, NOUNS),
+        word(rng, VERBS),
+        word(rng, ADJS),
+        word(rng, NOUNS)
+    )
+}
+
+/// A JSON-lines record, e.g. `{"id": 42, "name": "cache_7", "s": 83}` —
+/// sized so one record ≈ one semantic chunk (the BPE-scale ratio the
+/// paper's corpora have; see DESIGN.md).
+pub fn json_record(rng: &mut Rng) -> String {
+    format!(
+        "{{\"id\": {}, \"name\": \"{}\", \"s\": {}}}\n",
+        rng.range(0, 100_000),
+        ident(rng),
+        rng.range(0, 100)
+    )
+}
+
+/// A small code function.
+pub fn code_function(rng: &mut Rng) -> String {
+    let name = ident(rng);
+    let a = ident(rng);
+    let b = ident(rng);
+    format!(
+        "fn {}({}: u32, {}: u32) -> u32 {{\n    let out = {} * 2 + {};\n    out\n}}\n",
+        name, a, b, a, b
+    )
+}
+
+/// A call site referencing `callee` (code-repo tasks link def + use).
+pub fn code_callsite(rng: &mut Rng, callee: &str) -> String {
+    format!("    let r_{} = {}({}, {});\n", rng.range(0, 1000), callee, rng.range(0, 99), rng.range(0, 99))
+}
+
+/// A markdown list item.
+pub fn markdown_item(rng: &mut Rng) -> String {
+    format!("- **{}**: the {} {}\n", ident(rng), word(rng, ADJS), word(rng, NOUNS))
+}
+
+/// A YAML entry (single line, record-per-line style).
+pub fn yaml_entry(rng: &mut Rng) -> String {
+    format!("{}: {{kind: {}, value: {}}}\n", ident(rng), word(rng, ADJS), rng.range(0, 10_000))
+}
+
+/// A dialogue turn.
+pub fn dialogue_turn(rng: &mut Rng, speaker: usize) -> String {
+    format!(
+        "[user{}]: I think the {} should {} the {}.\n",
+        speaker,
+        word(rng, NOUNS),
+        word(rng, VERBS),
+        word(rng, NOUNS)
+    )
+}
+
+/// A filesystem-tree path line (StrucText "tree" task).
+pub fn tree_path(rng: &mut Rng) -> String {
+    format!(
+        "/{}/{}/{}.rs ({} bytes)\n",
+        word(rng, NOUNS),
+        word(rng, ADJS),
+        ident(rng),
+        rng.range(10, 100_000)
+    )
+}
+
+/// A chain-of-thought reasoning step referencing an earlier step id.
+pub fn cot_step(rng: &mut Rng, step: usize, refers_to: usize) -> String {
+    format!(
+        "Step {}: from step {} we know the {} is {}; therefore compute {} + {}. ",
+        step,
+        refers_to,
+        word(rng, NOUNS),
+        word(rng, ADJS),
+        rng.range(0, 1000),
+        rng.range(0, 1000)
+    )
+}
+
+/// A math problem statement (MATH500-style premise container).
+pub fn math_problem(rng: &mut Rng) -> String {
+    format!(
+        "Problem: let x = {} and y = {}. Find the value of {}x + {}y - {}. ",
+        rng.range(1, 50),
+        rng.range(1, 50),
+        rng.range(2, 9),
+        rng.range(2, 9),
+        rng.range(0, 100)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = json_record(&mut Rng::new(7));
+        let b = json_record(&mut Rng::new(7));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn json_records_have_structural_delimiters() {
+        let r = json_record(&mut Rng::new(1));
+        assert!(r.contains('{') && r.contains('}') && r.contains(','));
+    }
+
+    #[test]
+    fn code_has_function_structure() {
+        let c = code_function(&mut Rng::new(2));
+        assert!(c.starts_with("fn "));
+        assert!(c.contains("{\n") && c.ends_with("}\n"));
+    }
+
+    #[test]
+    fn units_are_reasonable_lengths() {
+        let mut rng = Rng::new(3);
+        for _ in 0..50 {
+            assert!(prose_sentence(&mut rng).len() >= 20);
+            assert!(json_record(&mut rng).len() >= 30);
+            assert!(yaml_entry(&mut rng).len() >= 20);
+            assert!(tree_path(&mut rng).len() >= 10);
+        }
+    }
+
+    #[test]
+    fn cot_step_mentions_reference() {
+        let s = cot_step(&mut Rng::new(4), 9, 3);
+        assert!(s.contains("Step 9") && s.contains("step 3"));
+    }
+}

@@ -1,0 +1,105 @@
+//! Serving arrival traces: Poisson arrivals with configurable prompt /
+//! output length distributions, used by the end-to-end serving example
+//! and throughput benches.
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, Debug)]
+pub struct TraceRequest {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    pub prompt_len: usize,
+    pub max_new_tokens: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct TraceParams {
+    /// Mean arrivals per second.
+    pub rate: f64,
+    pub n_requests: usize,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub out_min: usize,
+    pub out_max: usize,
+}
+
+impl Default for TraceParams {
+    fn default() -> Self {
+        TraceParams { rate: 2.0, n_requests: 16, prompt_min: 64, prompt_max: 512, out_min: 8, out_max: 48 }
+    }
+}
+
+/// Generate a deterministic arrival trace.
+pub fn generate(p: &TraceParams, seed: u64) -> Vec<TraceRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..p.n_requests)
+        .map(|_| {
+            t += rng.exponential(p.rate);
+            TraceRequest {
+                at_s: t,
+                prompt_len: rng.range(p.prompt_min, p.prompt_max + 1),
+                max_new_tokens: rng.range(p.out_min, p.out_max + 1),
+            }
+        })
+        .collect()
+}
+
+/// Deterministic prompt text of a given byte length (mixed prose/code so
+/// the chunker sees realistic boundaries).
+pub fn prompt_text(len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = Rng::new(seed ^ 0x7E47u64);
+    let mut out = Vec::with_capacity(len + 64);
+    while out.len() < len {
+        let s = if rng.chance(0.3) {
+            super::textgen::json_record(&mut rng)
+        } else if rng.chance(0.3) {
+            super::textgen::code_function(&mut rng)
+        } else {
+            super::textgen::prose_sentence(&mut rng)
+        };
+        out.extend_from_slice(s.as_bytes());
+    }
+    out.truncate(len);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let trace = generate(&TraceParams::default(), 1);
+        assert_eq!(trace.len(), 16);
+        for w in trace.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn mean_rate_roughly_matches() {
+        let p = TraceParams { rate: 5.0, n_requests: 2000, ..Default::default() };
+        let trace = generate(&p, 2);
+        let total = trace.last().unwrap().at_s;
+        let rate = trace.len() as f64 / total;
+        assert!((rate - 5.0).abs() < 0.5, "rate {rate}");
+    }
+
+    #[test]
+    fn prompt_text_exact_length() {
+        let t = prompt_text(300, 3);
+        assert_eq!(t.len(), 300);
+        let t2 = prompt_text(300, 3);
+        assert_eq!(t, t2);
+    }
+
+    #[test]
+    fn lengths_within_bounds() {
+        let p = TraceParams::default();
+        for r in generate(&p, 4) {
+            assert!((p.prompt_min..=p.prompt_max).contains(&r.prompt_len));
+            assert!((p.out_min..=p.out_max).contains(&r.max_new_tokens));
+        }
+    }
+}

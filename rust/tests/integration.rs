@@ -1,0 +1,156 @@
+//! Cross-module integration tests: the full pipeline from workload
+//! generation through policies, the hierarchical index, and (when
+//! artifacts are present) the PJRT engine — the end-to-end invariants a
+//! downstream user relies on.
+
+use lychee::config::{Config, LycheeConfig};
+use lychee::eval::runner::{run_cot, run_task};
+use lychee::workloads::{longbench, mathcot, ruler, structext};
+
+fn eval_cfg() -> LycheeConfig {
+    let mut cfg = LycheeConfig::default();
+    cfg.budget = 384;
+    cfg.sink = 8;
+    cfg.recent = 16;
+    cfg
+}
+
+#[test]
+fn pilot_ordering_structure_beats_fixed_pages() {
+    // Fig 2's headline: identical scoring, boundary-aware segmentation
+    // must win on structured data (averaged over subtasks + seeds).
+    let cfg = eval_cfg();
+    let mut fixed = 0.0;
+    let mut chunks = 0.0;
+    let mut n = 0.0;
+    for sub in structext::SUBTASKS {
+        for seed in 0..3 {
+            let task = structext::generate(sub, 6144, 8, seed);
+            fixed += run_task(&task, "quest", &cfg, 1).accuracy;
+            chunks += run_task(&task, "quest-chunks", &cfg, 1).accuracy;
+            n += 1.0;
+        }
+    }
+    assert!(
+        chunks / n > fixed / n,
+        "structure-aware chunks {:.2} <= fixed pages {:.2}",
+        chunks / n,
+        fixed / n
+    );
+}
+
+#[test]
+fn retrieval_methods_beat_eviction_on_interior_needles() {
+    let cfg = eval_cfg();
+    let mut lychee = 0.0;
+    let mut h2o = 0.0;
+    let mut streaming = 0.0;
+    for seed in 0..3 {
+        let task = longbench::generate("single_doc_qa", longbench::Band::Medium, 6, seed);
+        lychee += run_task(&task, "lychee", &cfg, 1).accuracy;
+        h2o += run_task(&task, "h2o", &cfg, 1).accuracy;
+        streaming += run_task(&task, "streaming", &cfg, 1).accuracy;
+    }
+    assert!(lychee > h2o, "lychee {lychee} <= h2o {h2o}");
+    assert!(lychee > streaming, "lychee {lychee} <= streaming {streaming}");
+}
+
+#[test]
+fn lychee_recall_tracks_full_attention_on_ruler() {
+    let cfg = eval_cfg();
+    let mut total_gap = 0.0;
+    let mut n = 0.0;
+    for task_name in ["single", "multikey", "qa1"] {
+        for seed in 0..2 {
+            let task = ruler::generate(task_name, 8192, seed);
+            let full = run_task(&task, "full", &cfg, 1);
+            let ly = run_task(&task, "lychee", &cfg, 1);
+            total_gap += full.accuracy - ly.accuracy;
+            n += 1.0;
+        }
+    }
+    // paper Table 6: lychee within a few points of full attention
+    assert!(
+        total_gap / n < 0.35,
+        "lychee trails full attention by {:.2} on RULER",
+        total_gap / n
+    );
+}
+
+#[test]
+fn cot_stream_lychee_retains_premises_better_than_eviction() {
+    let cfg = eval_cfg();
+    let inst = mathcot::generate(6, 80, 72, 11);
+    let lychee = run_cot(&inst, "lychee", &cfg);
+    let h2o = run_cot(&inst, "h2o", &cfg);
+    assert!(
+        lychee.accuracy >= h2o.accuracy,
+        "lychee {} < h2o {}",
+        lychee.accuracy,
+        h2o.accuracy
+    );
+    // lazy updates must stay cheap (paper: <1% of decode time)
+    assert!(lychee.update_us_mean < lychee.select_us_mean,
+        "update {}us >= select {}us", lychee.update_us_mean, lychee.select_us_mean);
+}
+
+#[test]
+fn index_overhead_within_small_fraction_of_kv() {
+    // Fig 8: at model dims (128), index bytes << KV bytes.
+    use lychee::index::reps::FlatKeys;
+    use lychee::sparse::{make_policy, Ctx};
+    let n = 16 * 1024;
+    let d = 128;
+    let mut rng = lychee::util::rng::Rng::new(5);
+    let keys = rng.normal_vec(n * d);
+    let text = lychee::workloads::trace::prompt_text(n, 5);
+    let src = FlatKeys::new(&keys, d);
+    let mut p = make_policy("lychee", &LycheeConfig::default(), 1, 4).unwrap();
+    p.build(&Ctx { keys: &src, text: &text, n });
+    let kv_bytes = n * d * 4 * 2; // K+V one layer
+    let ratio = p.index_bytes() as f64 / kv_bytes as f64;
+    assert!(ratio < 0.10, "index overhead {:.1}% too large", ratio * 100.0);
+}
+
+// ---- engine-level integration (requires `make artifacts`) -------------
+
+fn engine_config() -> Option<Config> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        return None;
+    }
+    let mut cfg = Config::new();
+    cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+    Some(cfg)
+}
+
+#[test]
+fn engine_sparse_decode_close_to_full_at_long_context() {
+    // With budget 1024 at a 3k context, lychee's sparse decode should
+    // usually agree with full attention on the greedy token (random
+    // weights make logits diffuse; exact agreement is not required —
+    // cosine of logits must be high).
+    let Some(cfg) = engine_config() else { return };
+    let engine = lychee::engine::Engine::load(cfg).unwrap();
+    let sampling = lychee::engine::Sampling::default();
+    let mut full = engine.synth_sequence(1, 3000, "full", 13).unwrap();
+    let mut ly = engine.synth_sequence(1, 3000, "lychee", 13).unwrap();
+    engine.decode_step(&mut full, &sampling).unwrap();
+    engine.decode_step(&mut ly, &sampling).unwrap();
+    let cos = lychee::linalg::cosine(&full.last_logits, &ly.last_logits);
+    assert!(cos > 0.55, "sparse/full logit cosine too low: {cos}");
+}
+
+#[test]
+fn serving_stack_streams_tokens_over_tcp() {
+    let Some(cfg) = engine_config() else { return };
+    let (handle, metrics, join) = lychee::coordinator::spawn(cfg).unwrap();
+    let server = lychee::server::Server::start("127.0.0.1:0", handle.clone()).unwrap();
+    let mut client = lychee::server::Client::connect(&server.addr).unwrap();
+    let res = client.generate("integration over tcp, end to end.", 6, "lychee").unwrap();
+    assert_eq!(res.tokens, 6);
+    assert_eq!(metrics.lock().unwrap().completed, 1);
+    server.stop();
+    handle.shutdown();
+    join.join().unwrap();
+}
