@@ -31,7 +31,7 @@ fn main() {
         "policy", "accuracy", "select µs", "update µs/tok", "jaccard", "window-hit"
     );
     for policy in ["full", "lychee", "quest", "h2o", "raas", "streaming"] {
-        let r = run_cot(&inst, policy, &cfg);
+        let r = run_cot(&inst, policy, &cfg).expect("policy in registry");
         println!(
             "{:<12} {:>8.1}% {:>12.1} {:>12.2} {:>10.3} {:>11.3}",
             policy,

@@ -68,7 +68,7 @@ fn main() {
     // --- aggregate accuracy over all probes --------------------------
     println!("\naccuracy over {} probes:", task.queries.len());
     for name in ["quest", "clusterkv", "lychee", "full"] {
-        let r = run_task(&task, name, &cfg, 1);
+        let r = run_task(&task, name, &cfg, 1).expect("policy in registry");
         println!("  {:<10} {:>5.1}%  (recall {:.1}%)", name, r.accuracy * 100.0, r.recall * 100.0);
     }
 }

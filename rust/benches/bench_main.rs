@@ -137,6 +137,90 @@ fn main() {
         });
     }
 
+    if section("batch_retrieval") {
+        // The serving hot path in isolation: per-step policy select() +
+        // arena gather() for a decode batch, serial loop vs the scoped-
+        // thread sharding the engine uses. Same caches, same policies,
+        // same queries — only the scheduling differs. Throughput should
+        // improve with batch size >= 4 on multi-core hosts.
+        use lychee::engine::LayerKeys;
+        use lychee::kvcache::PagePool;
+        use lychee::sparse::Policy;
+        use lychee::util::threadpool::scoped_map_mut;
+        use std::sync::Arc;
+
+        let d2 = 64usize;
+        let ctx_tokens = 8 * 1024;
+        let cfg = LycheeConfig::default();
+        let pool = PagePool::unbounded();
+
+        struct BatchSeq {
+            kv: KvCache,
+            policy: Box<dyn Policy>,
+            text: Vec<u8>,
+            q: Vec<f32>,
+        }
+
+        let mk_seq = |i: usize| -> BatchSeq {
+            let mut rng = Rng::new(0xBA7C4 + i as u64);
+            let mut kv = KvCache::with_pool(1, 1, d2, Arc::clone(&pool));
+            let text = prompt_text(ctx_tokens, i as u64);
+            for _ in 0..ctx_tokens {
+                let kr = rng.normal_vec(d2);
+                kv.append_token(&[&kr], &[&kr]).unwrap();
+            }
+            let mut policy = make_policy("lychee", &cfg, 1, 4).unwrap();
+            {
+                let keys = LayerKeys { cache: &kv, layer: 0, n: ctx_tokens };
+                policy.build(&Ctx { keys: &keys, text: &text, n: ctx_tokens });
+            }
+            BatchSeq { kv, policy, text, q: rng.normal_vec(d2) }
+        };
+
+        let m = 2048usize;
+        let row = d2;
+        for bsz in [1usize, 2, 4, 8] {
+            let mut batch: Vec<BatchSeq> = (0..bsz).map(|i| mk_seq(i)).collect();
+            let mut kb = vec![0.0f32; bsz * m * row];
+            let mut vb = vec![0.0f32; bsz * m * row];
+            let mut mb = vec![0.0f32; bsz * m];
+
+            bench(&format!("retrieval+gather serial   b={bsz}"), 2, 15, || {
+                for i in 0..bsz {
+                    let sel = {
+                        let s = &mut batch[i];
+                        let keys = LayerKeys { cache: &s.kv, layer: 0, n: ctx_tokens };
+                        let ctx = Ctx { keys: &keys, text: &s.text, n: ctx_tokens };
+                        s.policy.select(&ctx, &s.q, ctx_tokens)
+                    };
+                    batch[i].kv.gather_into(
+                        0,
+                        &sel,
+                        &mut kb[i * m * row..(i + 1) * m * row],
+                        &mut vb[i * m * row..(i + 1) * m * row],
+                        &mut mb[i * m..(i + 1) * m],
+                    );
+                }
+                std::hint::black_box(&kb);
+            });
+
+            bench(&format!("retrieval+gather parallel b={bsz}"), 2, 15, || {
+                let sels: Vec<Vec<usize>> = scoped_map_mut(&mut batch, bsz, |_i, s| {
+                    let keys = LayerKeys { cache: &s.kv, layer: 0, n: ctx_tokens };
+                    let ctx = Ctx { keys: &keys, text: &s.text, n: ctx_tokens };
+                    s.policy.select(&ctx, &s.q, ctx_tokens)
+                });
+                // same batched-gather entry point the engine's decode
+                // loop uses, so this measures the real serving path
+                let caches: Vec<&KvCache> = batch.iter().map(|s| &s.kv).collect();
+                lychee::kvcache::gather_batch_into(
+                    &caches, 0, &sels, m, &mut kb, &mut vb, &mut mb, bsz,
+                );
+                std::hint::black_box(&kb);
+            });
+        }
+    }
+
     if section("kvcache_gather") {
         let mut cache = KvCache::new(4, 4, 32);
         let mut r3 = Rng::new(9);

@@ -101,16 +101,16 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
             let opts = eval_opts(&args, quick)?;
             match which {
                 "1" => {
-                    harness::table1(&opts);
+                    harness::table1(&opts)?;
                 }
                 "2" => {
-                    harness::table2(&opts);
+                    harness::table2(&opts)?;
                 }
                 "3" => {
-                    harness::table3(&opts);
+                    harness::table3(&opts)?;
                 }
                 "6" => {
-                    harness::table6(&opts);
+                    harness::table6(&opts)?;
                 }
                 _ => bail!("unknown table '{which}' (1|2|3|6)"),
             }
@@ -120,22 +120,22 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
             let which = args.positional.first().map(|s| s.as_str()).unwrap_or("");
             match which {
                 "2" => {
-                    harness::fig2(&eval_opts(&args, quick)?);
+                    harness::fig2(&eval_opts(&args, quick)?)?;
                 }
                 "6" => {
-                    harness::fig6(&eval_opts(&args, quick)?);
+                    harness::fig6(&eval_opts(&args, quick)?)?;
                 }
                 "7" => {
-                    harness::fig7(&eval_opts(&args, quick)?);
+                    harness::fig7(&eval_opts(&args, quick)?)?;
                 }
                 "9" => {
-                    harness::fig9(&eval_opts(&args, quick)?);
+                    harness::fig9(&eval_opts(&args, quick)?)?;
                 }
                 "10" => {
-                    harness::fig10(&eval_opts(&args, quick)?);
+                    harness::fig10(&eval_opts(&args, quick)?)?;
                 }
                 "11" => {
-                    harness::fig11(&eval_opts(&args, quick)?);
+                    harness::fig11(&eval_opts(&args, quick)?)?;
                 }
                 "4" => {
                     latency::fig4(&lat_opts(&args, quick)?)?;
@@ -156,16 +156,16 @@ pub fn run_argv(argv: &[String]) -> Result<()> {
         "all" => {
             let e = eval_opts(&args, quick)?;
             let l = lat_opts(&args, quick)?;
-            harness::fig2(&e);
-            harness::table1(&e);
-            harness::table2(&e);
-            harness::table3(&e);
-            harness::table6(&e);
-            harness::fig6(&e);
-            harness::fig7(&e);
-            harness::fig9(&e);
-            harness::fig10(&e);
-            harness::fig11(&e);
+            harness::fig2(&e)?;
+            harness::table1(&e)?;
+            harness::table2(&e)?;
+            harness::table3(&e)?;
+            harness::table6(&e)?;
+            harness::fig6(&e)?;
+            harness::fig7(&e)?;
+            harness::fig9(&e)?;
+            harness::fig10(&e)?;
+            harness::fig11(&e)?;
             latency::fig4(&l)?;
             latency::fig5a(&l)?;
             latency::fig5b(&l)?;

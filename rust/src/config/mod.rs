@@ -115,12 +115,22 @@ pub struct ServingConfig {
     pub max_batch: usize,
     /// Queue capacity before admission control rejects requests.
     pub queue_cap: usize,
-    /// Max new tokens per request unless overridden.
+    /// Hard cap on new tokens per request; larger asks are clamped, and
+    /// `max_new_tokens: 0` requests are rejected at the wire.
     pub max_new_tokens: usize,
     /// Scheduler tick in microseconds when idle.
     pub idle_tick_us: u64,
     /// Prefill chunk bucket cap.
     pub max_prompt: usize,
+    /// KV page-pool (arena) capacity in MiB; 0 = unbounded. When bounded,
+    /// the coordinator queues new prefills that do not currently fit
+    /// (backpressure) and rejects requests that can never fit, instead of
+    /// growing without limit.
+    pub kv_pool_mb: usize,
+    /// Threads for batch-parallel retrieval (policy select + arena
+    /// gather) per decode step; 0 = auto (one per logical core, capped at
+    /// the batch size), 1 = serial.
+    pub retrieval_threads: usize,
 }
 
 impl Default for ServingConfig {
@@ -131,6 +141,8 @@ impl Default for ServingConfig {
             max_new_tokens: 128,
             idle_tick_us: 200,
             max_prompt: 2048,
+            kv_pool_mb: 1024,
+            retrieval_threads: 0,
         }
     }
 }
@@ -139,6 +151,9 @@ impl ServingConfig {
     pub fn validate(&self) -> Result<()> {
         if self.max_batch == 0 || self.queue_cap == 0 {
             bail!("max_batch / queue_cap must be positive");
+        }
+        if self.max_new_tokens == 0 {
+            bail!("max_new_tokens cap must be >= 1");
         }
         Ok(())
     }
@@ -151,6 +166,8 @@ impl ServingConfig {
             "max_new_tokens" => self.max_new_tokens = u()?,
             "idle_tick_us" => self.idle_tick_us = u()? as u64,
             "max_prompt" => self.max_prompt = u()?,
+            "kv_pool_mb" => self.kv_pool_mb = u()?,
+            "retrieval_threads" => self.retrieval_threads = u()?,
             _ => bail!("unknown serving config key '{key}'"),
         }
         Ok(())
@@ -281,6 +298,26 @@ mod tests {
         assert_eq!(cfg.seed, 99);
         assert!(cfg.apply_override("nope.x=1").is_err());
         assert!(cfg.apply_override("novalue").is_err());
+    }
+
+    #[test]
+    fn pool_and_parallelism_knobs() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.serving.kv_pool_mb, 1024);
+        assert_eq!(cfg.serving.retrieval_threads, 0);
+        cfg.apply_override("serving.kv_pool_mb=64").unwrap();
+        cfg.apply_override("serving.retrieval_threads=4").unwrap();
+        assert_eq!(cfg.serving.kv_pool_mb, 64);
+        assert_eq!(cfg.serving.retrieval_threads, 4);
+        cfg.validate().unwrap();
+        // 0 = unbounded pool / auto threads are both valid
+        cfg.apply_override("serving.kv_pool_mb=0").unwrap();
+        cfg.apply_override("serving.retrieval_threads=0").unwrap();
+        cfg.validate().unwrap();
+        // but a zero output-token cap is not
+        let mut bad = ServingConfig::default();
+        bad.max_new_tokens = 0;
+        assert!(bad.validate().is_err());
     }
 
     #[test]

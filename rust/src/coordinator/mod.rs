@@ -62,6 +62,12 @@ pub struct Metrics {
     pub tokens_out: u64,
     pub ttft_us: LogHistogram,
     pub tpot_us: LogHistogram,
+    /// Gauge: KV arena bytes leased by live sequences (refreshed on
+    /// admission and retirement).
+    pub kv_bytes_in_use: u64,
+    /// Scheduler ticks the head-of-queue prefill waited for arena pages
+    /// to recycle (memory backpressure).
+    pub admission_waits: u64,
 }
 
 impl Metrics {
@@ -77,6 +83,9 @@ struct Running {
     submitted: Instant,
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
+    /// Arena bytes reserved at admission (estimate over prompt + clamped
+    /// max_new_tokens); released from the reservation total on retire.
+    reserved_bytes: usize,
 }
 
 enum Msg {
@@ -162,55 +171,146 @@ pub fn spawn(cfg: Config) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::J
     }
 }
 
+/// Per-tick admission decision over the head-of-queue request.
+enum Admission {
+    /// Nothing queued, or the running set is full.
+    Idle,
+    /// The request fits the KV arena — prefill it (footprint attached).
+    Admit(usize),
+    /// The arena is near capacity — leave it queued until pages recycle.
+    Wait,
+    /// The request can never fit the arena (footprint in bytes attached).
+    Reject(usize),
+}
+
 impl Coordinator {
+    /// Validate + enqueue one submission (shared by the drain loop and
+    /// the idle path, which previously bypassed admission checks).
+    fn enqueue(
+        &self,
+        pending: &mut VecDeque<(Request, Sender<Event>)>,
+        mut req: Request,
+        tx: Sender<Event>,
+    ) {
+        let err = if pending.len() >= self.cfg.serving.queue_cap {
+            Some("queue full".to_string())
+        } else if req.prompt.len() > self.engine.rt.max_prompt() {
+            Some(format!(
+                "prompt too long ({} > {})",
+                req.prompt.len(),
+                self.engine.rt.max_prompt()
+            ))
+        } else if req.max_new_tokens == 0 {
+            Some("max_new_tokens must be >= 1".to_string())
+        } else {
+            None
+        };
+        match err {
+            Some(msg) => {
+                self.metrics.lock().unwrap().rejected += 1;
+                let _ = tx.send(Event::Error(msg));
+            }
+            None => {
+                // clamp to the configured per-request output cap so one
+                // request cannot monopolize the batch (or the arena)
+                req.max_new_tokens = req.max_new_tokens.min(self.cfg.serving.max_new_tokens);
+                self.metrics.lock().unwrap().requests += 1;
+                pending.push_back((req, tx));
+            }
+        }
+    }
+
+    /// KV-arena admission control for the head-of-queue request.
+    ///
+    /// Checks against `reserved_total` — the sum of *estimated final*
+    /// footprints of running sequences — not current leased bytes: a
+    /// just-admitted sequence has leased only its prompt pages so far
+    /// and grows during decode (acquire never refuses mid-step), so
+    /// admitting on live usage would overcommit a bounded pool.
+    fn admission(
+        &self,
+        pending: &VecDeque<(Request, Sender<Event>)>,
+        running: usize,
+        reserved_total: usize,
+    ) -> Admission {
+        if running >= self.cfg.serving.max_batch {
+            return Admission::Idle;
+        }
+        match pending.front() {
+            None => Admission::Idle,
+            Some((req, _)) => {
+                let need =
+                    self.engine.estimate_seq_bytes(req.prompt.len() + req.max_new_tokens);
+                let cap = self.engine.pool().capacity_bytes();
+                if need > cap {
+                    Admission::Reject(need)
+                } else if reserved_total.saturating_add(need) > cap {
+                    Admission::Wait
+                } else {
+                    Admission::Admit(need)
+                }
+            }
+        }
+    }
+
+    fn refresh_pool_gauge(&self) {
+        let in_use = self.engine.pool().bytes_in_use() as u64;
+        self.metrics.lock().unwrap().kv_bytes_in_use = in_use;
+    }
+
     /// Scheduler loop: admit, decode, stream, repeat.
     pub fn run(self) {
         let mut pending: VecDeque<(Request, Sender<Event>)> = VecDeque::new();
         let mut running: Vec<Running> = Vec::new();
         let sampling = Sampling::default();
         let mut next_seq_id = 1u64;
+        // sum of running sequences' reserved (estimated final) footprints
+        let mut reserved_total: usize = 0;
 
         loop {
             // ---- drain the submit queue --------------------------------
             loop {
                 match self.rx.try_recv() {
-                    Ok(Msg::Submit(req, tx)) => {
-                        if pending.len() >= self.cfg.serving.queue_cap {
-                            self.metrics.lock().unwrap().rejected += 1;
-                            let _ = tx.send(Event::Error("queue full".into()));
-                        } else if req.prompt.len() > self.engine.rt.max_prompt() {
-                            self.metrics.lock().unwrap().rejected += 1;
-                            let _ = tx.send(Event::Error(format!(
-                                "prompt too long ({} > {})",
-                                req.prompt.len(),
-                                self.engine.rt.max_prompt()
-                            )));
-                        } else {
-                            self.metrics.lock().unwrap().requests += 1;
-                            pending.push_back((req, tx));
-                        }
-                    }
+                    Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, req, tx),
                     Ok(Msg::Shutdown) => return,
                     Err(TryRecvError::Empty) => break,
                     Err(TryRecvError::Disconnected) => return,
                 }
             }
 
-            // ---- admit one prefill per tick ------------------------------
-            if running.len() < self.cfg.serving.max_batch {
-                if let Some((req, tx)) = pending.pop_front() {
+            // ---- admit one prefill per tick (arena backpressure) ---------
+            match self.admission(&pending, running.len(), reserved_total) {
+                Admission::Idle => {}
+                Admission::Wait => {
+                    self.metrics.lock().unwrap().admission_waits += 1;
+                }
+                Admission::Reject(need) => {
+                    let (req, tx) = pending.pop_front().unwrap();
+                    self.metrics.lock().unwrap().rejected += 1;
+                    let _ = tx.send(Event::Error(format!(
+                        "request {} cannot fit the kv pool: needs {} bytes, pool capacity {} bytes",
+                        req.id,
+                        need,
+                        self.engine.pool().capacity_bytes()
+                    )));
+                }
+                Admission::Admit(need) => {
+                    let (req, tx) = pending.pop_front().unwrap();
                     let submitted = Instant::now();
                     match self.engine.prefill(next_seq_id, &req.prompt, &req.policy) {
                         Ok(seq) => {
                             next_seq_id += 1;
+                            reserved_total += need;
                             running.push(Running {
                                 seq,
                                 tx,
-                                max_new: req.max_new_tokens.max(1),
+                                max_new: req.max_new_tokens,
                                 submitted,
                                 first_token: None,
                                 decode_started: None,
+                                reserved_bytes: need,
                             });
+                            self.refresh_pool_gauge();
                         }
                         Err(e) => {
                             let _ = tx.send(Event::Error(format!("prefill: {e}")));
@@ -226,7 +326,7 @@ impl Coordinator {
                         .rx
                         .recv_timeout(std::time::Duration::from_micros(self.cfg.serving.idle_tick_us))
                     {
-                        Ok(Msg::Submit(req, tx)) => pending.push_back((req, tx)),
+                        Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, req, tx),
                         Ok(Msg::Shutdown) => return,
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
                         Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
@@ -247,6 +347,8 @@ impl Coordinator {
                         for r in running.drain(..) {
                             let _ = r.tx.send(Event::Error(format!("decode: {e}")));
                         }
+                        reserved_total = 0;
+                        self.refresh_pool_gauge();
                         continue;
                     }
                 }
@@ -289,13 +391,17 @@ impl Coordinator {
                         tokens: n,
                         e2e_ms: e2e,
                     }));
-                    running.remove(i);
+                    let retired = running.remove(i);
+                    reserved_total = reserved_total.saturating_sub(retired.reserved_bytes);
                     finished_any = true;
                     continue; // do not advance i: next element shifted in
                 }
                 i += 1;
             }
-            let _ = finished_any;
+            if finished_any {
+                // retired sequences just recycled their pages
+                self.refresh_pool_gauge();
+            }
         }
     }
 }
@@ -394,6 +500,82 @@ mod tests {
             other => panic!("expected error, got {other:?}"),
         }
         assert_eq!(metrics.lock().unwrap().rejected, 1);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn rejects_zero_max_new_tokens_and_clamps_large() {
+        let Some(mut cfg) = test_config() else { return };
+        cfg.serving.max_new_tokens = 4;
+        let (handle, metrics, join) = spawn(cfg).unwrap();
+        let rx = handle
+            .submit(Request {
+                id: 1,
+                prompt: b"zero tokens requested".to_vec(),
+                max_new_tokens: 0,
+                policy: "full".into(),
+            })
+            .unwrap();
+        match rx.recv().unwrap() {
+            Event::Error(e) => assert!(e.contains("max_new_tokens"), "got: {e}"),
+            other => panic!("expected error, got {other:?}"),
+        }
+        // an absurdly large ask is clamped to the configured cap
+        let (out, stats) = handle
+            .generate(Request {
+                id: 2,
+                prompt: b"clamp me".to_vec(),
+                max_new_tokens: 10_000,
+                policy: "full".into(),
+            })
+            .unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(stats.tokens, 4);
+        assert_eq!(metrics.lock().unwrap().rejected, 1);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    #[test]
+    fn arena_backpressure_small_pool_still_serves_all() {
+        // pool sized for ~4 concurrent sequences; 8 requests must all
+        // complete via admission backpressure + page recycling
+        let Some(mut cfg) = test_config() else { return };
+        cfg.serving.kv_pool_mb = 1;
+        let (handle, metrics, join) = spawn(cfg).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            rxs.push(
+                handle
+                    .submit(Request {
+                        id: i,
+                        prompt: format!("backpressure request {i}").into_bytes(),
+                        max_new_tokens: 3,
+                        policy: "full".into(),
+                    })
+                    .unwrap(),
+            );
+        }
+        for rx in rxs {
+            let mut done = false;
+            for ev in rx {
+                match ev {
+                    Event::Done(s) => {
+                        assert_eq!(s.tokens, 3);
+                        done = true;
+                        break;
+                    }
+                    Event::Error(e) => panic!("unexpected error: {e}"),
+                    Event::Token(_) => {}
+                }
+            }
+            assert!(done);
+        }
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.completed, 8);
+        assert_eq!(m.kv_bytes_in_use, 0, "all pages recycled after retirement");
+        drop(m);
         handle.shutdown();
         join.join().unwrap();
     }

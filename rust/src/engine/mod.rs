@@ -21,14 +21,16 @@
 
 use crate::config::Config;
 use crate::index::reps::KeySource;
-use crate::kvcache::KvCache;
+use crate::kvcache::{KvCache, PagePool};
 use crate::model::{Manifest, Weights};
 use crate::runtime::{lit_f32, lit_i32, to_f32_vec, Runtime};
 use crate::sparse::{make_policy, Ctx, Policy};
 use crate::util::rng::Rng;
+use crate::util::threadpool::scoped_map_mut;
 use crate::util::timer::PhaseTimer;
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 use std::path::Path;
+use std::sync::Arc;
 use xla::Literal;
 
 /// View of one layer of a paged KV cache as a key source for policies.
@@ -113,13 +115,16 @@ impl Sequence {
     }
 }
 
-/// The engine: runtime + weights + device-cached weight literals.
+/// The engine: runtime + weights + device-cached weight literals + the
+/// shared KV page arena every sequence leases from.
 pub struct Engine {
     pub rt: Runtime,
     pub weights: Weights,
     pub cfg: Config,
     /// Literals per weight tensor, in canonical (manifest) order.
     wlits: Vec<Literal>,
+    /// Shared KV page arena (capacity from `serving.kv_pool_mb`).
+    pool: Arc<PagePool>,
 }
 
 impl Engine {
@@ -131,7 +136,32 @@ impl Engine {
         for (_name, data, shape) in weights.flat_order() {
             wlits.push(lit_f32(data, shape)?);
         }
-        Ok(Engine { rt, weights, cfg, wlits })
+        let pool = PagePool::with_capacity(cfg.serving.kv_pool_mb.saturating_mul(1024 * 1024));
+        Ok(Engine { rt, weights, cfg, wlits, pool })
+    }
+
+    /// The shared KV page arena (admission control reads its accounting).
+    pub fn pool(&self) -> &Arc<PagePool> {
+        &self.pool
+    }
+
+    /// Estimated arena bytes a sequence of `n_tokens` will lease — the
+    /// coordinator's admission-control footprint for a request.
+    pub fn estimate_seq_bytes(&self, n_tokens: usize) -> usize {
+        let dims = self.dims();
+        KvCache::estimate_bytes(dims.layers, dims.heads, dims.head_dim, n_tokens)
+    }
+
+    /// Resolve retrieval parallelism for a decode batch of `batch`
+    /// sequences (config `serving.retrieval_threads`; 0 = auto).
+    fn retrieval_threads(&self, batch: usize) -> usize {
+        let configured = self.cfg.serving.retrieval_threads;
+        let t = if configured == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            configured
+        };
+        t.clamp(1, batch.max(1))
     }
 
     pub fn dims(&self) -> &crate::model::ModelDims {
@@ -167,7 +197,7 @@ impl Engine {
                     policy_name
                 };
                 make_policy(name, &self.cfg.lychee, l, dims.layers)
-                    .with_context(|| format!("unknown policy '{name}'"))
+                    .ok_or_else(|| crate::sparse::unknown_policy_error(name))
             })
             .collect()
     }
@@ -194,7 +224,8 @@ impl Engine {
         let v_flat = to_f32_vec(&outs[1])?;
         let logits = to_f32_vec(&outs[3])?;
 
-        let mut kv = KvCache::new(dims.layers, dims.heads, dims.head_dim);
+        let mut kv =
+            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
         kv.load_prefill(&k_flat, &v_flat, s_bucket, prompt.len())?;
 
         let mut policies = self.make_policies(policy_name)?;
@@ -227,7 +258,8 @@ impl Engine {
     ) -> Result<Sequence> {
         let dims = self.dims().clone();
         let mut rng = Rng::new(seed);
-        let mut kv = KvCache::new(dims.layers, dims.heads, dims.head_dim);
+        let mut kv =
+            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
         let row = dims.d_model;
         let text: Vec<u8> = (0..n_tokens)
             .map(|_| b"lorem ipsum, dolor sit. amet\n"[rng.range(0, 29)])
@@ -298,8 +330,7 @@ impl Engine {
         }
 
         let pos_lit = lit_i32(&positions, &[b])?;
-        // reusable gather buffers
-        let (mut kbuf, mut vbuf, mut mbuf) = (Vec::new(), Vec::new(), Vec::new());
+        let retr_threads = self.retrieval_threads(b_real);
 
         for l in 0..dims.layers {
             // ---- qkv ----------------------------------------------------
@@ -330,18 +361,26 @@ impl Engine {
             }
 
             // ---- retrieval (the L3 contribution) ------------------------
-            let mut selections: Vec<Vec<usize>> = Vec::with_capacity(b_real);
-            for (i, s) in seqs.iter_mut().enumerate() {
+            // Policy select is per-sequence independent and read-only
+            // over the shared arena (each sequence owns its pages), so
+            // the batch shards onto scoped threads; the device step
+            // below stays serial. Scoped spawns cost ~10µs each and run
+            // only when retr_threads > 1 (batch 1 stays a plain loop);
+            // per-sequence select at long context is 100µs–ms, so the
+            // spawn overhead amortizes — a persistent lending worker
+            // pool would shave the remainder if profiles ever show it.
+            let selections: Vec<Vec<usize>> = scoped_map_mut(seqs, retr_threads, |i, s| {
                 let t1 = std::time::Instant::now();
                 let q = &q_all[i * d..(i + 1) * d];
-                let Sequence { kv, policies, text, pos, .. } = &mut **s;
+                let s: &mut Sequence = &mut **s;
+                let Sequence { kv, policies, text, pos, .. } = &mut *s;
                 let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
                 let ctx = Ctx { keys: &keys, text, n: *pos };
                 let mut sel = policies[l].select(&ctx, q, *pos);
                 sel.push(*pos); // self-attention to the current token
                 s.timer.add("retrieval", t1.elapsed());
-                selections.push(sel);
-            }
+                sel
+            });
 
             // ---- gather + attention -------------------------------------
             let max_active = selections.iter().map(|s| s.len()).max().unwrap();
@@ -351,11 +390,20 @@ impl Engine {
             let mut k_batch = vec![0.0f32; b * m * row];
             let mut v_batch = vec![0.0f32; b * m * row];
             let mut mask_batch = vec![0.0f32; b * m];
-            for (i, s) in seqs.iter().enumerate() {
-                s.kv.gather(l, &selections[i], m, &mut kbuf, &mut vbuf, &mut mbuf);
-                k_batch[i * m * row..(i + 1) * m * row].copy_from_slice(&kbuf);
-                v_batch[i * m * row..(i + 1) * m * row].copy_from_slice(&vbuf);
-                mask_batch[i * m..(i + 1) * m].copy_from_slice(&mbuf);
+            {
+                // each sequence gathers straight into its disjoint slice
+                // of the batch buffers, in parallel with the others
+                let caches: Vec<&KvCache> = seqs.iter().map(|s| &s.kv).collect();
+                crate::kvcache::gather_batch_into(
+                    &caches,
+                    l,
+                    &selections,
+                    m,
+                    &mut k_batch,
+                    &mut v_batch,
+                    &mut mask_batch,
+                    retr_threads,
+                );
             }
             let q_lit = lit_f32(&q_all, &[b, h, dh])?;
             let k_lit = lit_f32(&k_batch, &[b, m, h, dh])?;
@@ -403,12 +451,14 @@ impl Engine {
         let logits_all = to_f32_vec(&logits)?;
         let d_head = t5.elapsed() / b_real as u32;
 
-        // ---- commit + lazy index update ----------------------------------
-        for (i, s) in seqs.iter_mut().enumerate() {
+        // ---- commit + lazy index update (parallel across sequences) ------
+        let vocab = dims.vocab;
+        scoped_map_mut(seqs, retr_threads, |i, s| {
+            let s: &mut Sequence = &mut **s;
             s.timer.add("lm_head", d_head);
             s.kv.commit_token();
             let t6 = std::time::Instant::now();
-            let Sequence { kv, policies, text, pos, .. } = &mut **s;
+            let Sequence { kv, policies, text, pos, .. } = &mut *s;
             for (l, policy) in policies.iter_mut().enumerate() {
                 let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
                 let ctx = Ctx { keys: &keys, text, n: *pos + 1 };
@@ -416,8 +466,8 @@ impl Engine {
             }
             s.timer.add("update", t6.elapsed());
             s.pos += 1;
-            s.last_logits = logits_all[i * dims.vocab..(i + 1) * dims.vocab].to_vec();
-        }
+            s.last_logits = logits_all[i * vocab..(i + 1) * vocab].to_vec();
+        });
         Ok(step_tokens)
     }
 

@@ -8,6 +8,7 @@ use crate::eval::table::{pct, Table};
 use crate::util::stats::mean;
 use crate::workloads::longbench::{Band, CATEGORIES};
 use crate::workloads::{mathcot, ruler, structext};
+use anyhow::Result;
 
 /// Harness options.
 #[derive(Clone, Debug)]
@@ -48,21 +49,21 @@ fn mean_accuracy(
     policy: &str,
     cfg: &LycheeConfig,
     gen: impl Fn(u64) -> crate::workloads::Task,
-) -> (f64, f64) {
+) -> Result<(f64, f64)> {
     let mut accs = Vec::new();
     let mut recalls = Vec::new();
     for i in 0..opts.instances() {
         let task = gen(opts.seed + i as u64);
-        let r = run_task(&task, policy, cfg, i % 4);
+        let r = run_task(&task, policy, cfg, i % 4)?;
         accs.push(r.accuracy);
         recalls.push(r.recall);
     }
-    (mean(&accs), mean(&recalls))
+    Ok((mean(&accs), mean(&recalls)))
 }
 
 /// Fig. 2 — pilot study: Quest with fixed pages vs structure-aware
 /// chunks on StrucText-Eval, identical min-max scoring.
-pub fn fig2(opts: &Opts) -> Table {
+pub fn fig2(opts: &Opts) -> Result<Table> {
     let mut cfg = opts.cfg.clone();
     cfg.budget = 384; // sparse regime (6% of context), where granularity bites
     cfg.sink = 8;
@@ -74,8 +75,8 @@ pub fn fig2(opts: &Opts) -> Table {
     let mut deltas = Vec::new();
     for sub in structext::SUBTASKS {
         let gen = |seed: u64| structext::generate(sub, 6144, opts.probes(), seed);
-        let (fixed, _) = mean_accuracy(opts, "quest", &cfg, gen);
-        let (chunks, _) = mean_accuracy(opts, "quest-chunks", &cfg, gen);
+        let (fixed, _) = mean_accuracy(opts, "quest", &cfg, gen)?;
+        let (chunks, _) = mean_accuracy(opts, "quest-chunks", &cfg, gen)?;
         deltas.push(chunks - fixed);
         t.row(vec![sub.to_string(), pct(fixed), pct(chunks), pct(chunks - fixed)]);
     }
@@ -86,11 +87,11 @@ pub fn fig2(opts: &Opts) -> Table {
         pct(mean(&deltas)),
     ]);
     t.emit("fig2_pilot");
-    t
+    Ok(t)
 }
 
 /// Table 1 — LongBench-V2-sim across all policies, Short/Medium/Long.
-pub fn table1(opts: &Opts) -> Table {
+pub fn table1(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let policies = crate::sparse::TABLE1_POLICIES;
     let mut t = Table::new(
@@ -105,7 +106,7 @@ pub fn table1(opts: &Opts) -> Table {
                 let gen = |seed: u64| {
                     crate::workloads::longbench::generate(cat, band, opts.probes(), seed * 7 + 13)
                 };
-                let (a, _) = mean_accuracy(opts, policy, &cfg, gen);
+                let (a, _) = mean_accuracy(opts, policy, &cfg, gen)?;
                 accs.push(a);
             }
             band_accs.push(mean(&accs));
@@ -120,12 +121,12 @@ pub fn table1(opts: &Opts) -> Table {
         ]);
     }
     t.emit("table1_longbench");
-    t
+    Ok(t)
 }
 
 /// Table 2 — MATH500-sim (streaming CoT premise recall). ClusterKV is
 /// excluded as in the paper (degenerate at these context lengths).
-pub fn table2(opts: &Opts) -> Table {
+pub fn table2(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let policies = ["full", "razor", "raas", "arkvale", "shadowkv", "quest", "lychee"];
     // two simulated model scales (llama-8b-like, qwen-14b-like)
@@ -142,11 +143,11 @@ pub fn table2(opts: &Opts) -> Table {
                 let inst = mathcot::generate(*premises, *steps, 72, opts.seed + i as u64);
                 // razor mixture across instances
                 let r = if *policy == "razor" && i % 4 != 0 {
-                    run_cot(&inst, "streaming", &cfg)
+                    run_cot(&inst, "streaming", &cfg)?
                 } else if *policy == "razor" {
-                    run_cot(&inst, "full", &cfg)
+                    run_cot(&inst, "full", &cfg)?
                 } else {
-                    run_cot(&inst, policy, &cfg)
+                    run_cot(&inst, policy, &cfg)?
                 };
                 accs.push(r.accuracy);
             }
@@ -155,11 +156,11 @@ pub fn table2(opts: &Opts) -> Table {
         t.row(vec![policy.to_string(), pct(cols[0]), pct(cols[1])]);
     }
     t.emit("table2_mathcot");
-    t
+    Ok(t)
 }
 
 /// Table 3 — pooling-strategy ablation (mean vs max) + Recall Rate.
-pub fn table3(opts: &Opts) -> Table {
+pub fn table3(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let mut t = Table::new(
         "Table 3 — chunk-representative pooling ablation (LongBench-sim)",
@@ -174,7 +175,7 @@ pub fn table3(opts: &Opts) -> Table {
                 let gen = |seed: u64| {
                     crate::workloads::longbench::generate(cat, band, opts.probes(), seed * 7 + 13)
                 };
-                let (a, r) = mean_accuracy(opts, policy, &cfg, gen);
+                let (a, r) = mean_accuracy(opts, policy, &cfg, gen)?;
                 accs.push(a);
                 recalls.push(r);
             }
@@ -190,11 +191,11 @@ pub fn table3(opts: &Opts) -> Table {
         ]);
     }
     t.emit("table3_pooling");
-    t
+    Ok(t)
 }
 
 /// Table 6 — RULER-sim: Full Attention vs LycheeCluster, 4k–32k.
-pub fn table6(opts: &Opts) -> Table {
+pub fn table6(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let mut t = Table::new(
         "Table 6 — RULER-sim accuracy",
@@ -207,7 +208,7 @@ pub fn table6(opts: &Opts) -> Table {
                 let mut accs = Vec::new();
                 for i in 0..opts.instances() {
                     let task = ruler::generate(task_name, ctx_len, opts.seed + i as u64 * 31);
-                    accs.push(run_task(&task, policy, &cfg, i % 4).accuracy);
+                    accs.push(run_task(&task, policy, &cfg, i % 4)?.accuracy);
                 }
                 cells.push(mean(&accs));
             }
@@ -219,11 +220,11 @@ pub fn table6(opts: &Opts) -> Table {
         }
     }
     t.emit("table6_ruler");
-    t
+    Ok(t)
 }
 
 /// Fig. 6 — chunking ablation per task category.
-pub fn fig6(opts: &Opts) -> Table {
+pub fn fig6(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let cats = ["structured_data", "code_repo", "single_doc_qa", "dialogue"];
     let mut t = Table::new(
@@ -234,16 +235,16 @@ pub fn fig6(opts: &Opts) -> Table {
         let gen = |seed: u64| {
             crate::workloads::longbench::generate(cat, Band::Medium, opts.probes(), seed * 3 + 5)
         };
-        let (sa, _) = mean_accuracy(opts, "lychee", &cfg, gen);
-        let (fx, _) = mean_accuracy(opts, "lychee-fixed", &cfg, gen);
+        let (sa, _) = mean_accuracy(opts, "lychee", &cfg, gen)?;
+        let (fx, _) = mean_accuracy(opts, "lychee-fixed", &cfg, gen)?;
         t.row(vec![cat.to_string(), pct(sa), pct(fx), pct(sa - fx)]);
     }
     t.emit("fig6_chunking_ablation");
-    t
+    Ok(t)
 }
 
 /// Fig. 7 — token-budget sweep.
-pub fn fig7(opts: &Opts) -> Table {
+pub fn fig7(opts: &Opts) -> Result<Table> {
     let mut t = Table::new(
         "Fig 7 — token budget vs accuracy (LongBench-sim overall)",
         &["budget", "accuracy"],
@@ -257,22 +258,22 @@ pub fn fig7(opts: &Opts) -> Table {
                 let gen = |seed: u64| {
                     crate::workloads::longbench::generate(cat, band, opts.probes(), seed * 7 + 13)
                 };
-                let (a, _) = mean_accuracy(opts, "lychee", &cfg, gen);
+                let (a, _) = mean_accuracy(opts, "lychee", &cfg, gen)?;
                 accs.push(a);
             }
         }
         t.row(vec![budget.to_string(), pct(mean(&accs))]);
     }
     t.emit("fig7_budget");
-    t
+    Ok(t)
 }
 
 /// Fig. 9 — stability during long generation (Jaccard + window hit).
-pub fn fig9(opts: &Opts) -> Table {
+pub fn fig9(opts: &Opts) -> Result<Table> {
     let cfg = opts.cfg.clone();
     let steps = if opts.quick { 120 } else { 600 };
     let inst = mathcot::generate(8, steps, 72, opts.seed);
-    let r = run_cot(&inst, "lychee", &cfg);
+    let r = run_cot(&inst, "lychee", &cfg)?;
     let mut t = Table::new(
         "Fig 9 — stability over decode steps (lychee)",
         &["step-bucket", "jaccard", "window-hit(w=32)"],
@@ -292,12 +293,12 @@ pub fn fig9(opts: &Opts) -> Table {
         format!("{:.3}", mean(&r.window_hit_series)),
     ]);
     t.emit("fig9_stability");
-    t
+    Ok(t)
 }
 
 /// Fig. 10 / Appendix E — clustering-granularity sensitivity: recall and
 /// index-build latency vs average chunks per fine cluster.
-pub fn fig10(opts: &Opts) -> Table {
+pub fn fig10(opts: &Opts) -> Result<Table> {
     let mut t = Table::new(
         "Fig 10 — avg cluster size vs recall / prefill(index) latency",
         &["chunks/cluster", "recall", "build_ms"],
@@ -314,19 +315,19 @@ pub fn fig10(opts: &Opts) -> Table {
                 opts.probes(),
                 opts.seed + i as u64,
             );
-            let r = run_task(&task, "lychee", &cfg, 1);
+            let r = run_task(&task, "lychee", &cfg, 1)?;
             recalls.push(r.recall);
             builds.push(r.build_us / 1e3);
         }
         t.row(vec![size.to_string(), pct(mean(&recalls)), format!("{:.1}", mean(&builds))]);
     }
     t.emit("fig10_granularity");
-    t
+    Ok(t)
 }
 
 /// Fig. 11 — 2-D projection (power-iteration PCA) of chunk reps with
 /// fine-cluster and coarse-unit labels; written as CSV for plotting.
-pub fn fig11(opts: &Opts) -> Table {
+pub fn fig11(opts: &Opts) -> Result<Table> {
     use crate::chunking::{Chunker, StructureAwareChunker};
     use crate::index::hierarchy::{HierarchicalIndex, IndexParams};
     use crate::index::reps::FlatKeys;
@@ -359,7 +360,7 @@ pub fn fig11(opts: &Opts) -> Table {
         idx.num_units().to_string(),
     ]);
     t.emit("fig11_projection");
-    t
+    Ok(t)
 }
 
 /// Top-2 principal components via power iteration with deflation.
@@ -405,7 +406,7 @@ mod tests {
         // statistical check: needs full sampling, not quick mode
         let mut o = quick();
         o.quick = false;
-        let t = fig2(&o);
+        let t = fig2(&o).unwrap();
         assert_eq!(t.rows.len(), 5); // 4 subtasks + average
         let avg_delta: f64 = t.rows[4][3].parse().unwrap();
         assert!(avg_delta > -3.0, "pilot delta strongly negative: {avg_delta}");
@@ -413,7 +414,7 @@ mod tests {
 
     #[test]
     fn fig10_latency_decreases_with_cluster_size() {
-        let t = fig10(&quick());
+        let t = fig10(&quick()).unwrap();
         let first: f64 = t.rows[0][2].parse().unwrap();
         let last: f64 = t.rows[3][2].parse().unwrap();
         assert!(last <= first * 1.5, "build latency should drop: {first} -> {last}");
@@ -424,7 +425,7 @@ mod tests {
 
     #[test]
     fn fig9_stability_metrics_in_range() {
-        let t = fig9(&quick());
+        let t = fig9(&quick()).unwrap();
         let mean_row = t.rows.last().unwrap();
         let j: f64 = mean_row[1].parse().unwrap();
         let w: f64 = mean_row[2].parse().unwrap();
@@ -435,7 +436,7 @@ mod tests {
 
     #[test]
     fn fig11_writes_projection() {
-        let _ = fig11(&quick());
+        let _ = fig11(&quick()).unwrap();
         let csv = std::fs::read_to_string("results/fig11_projection.csv").unwrap();
         assert!(csv.lines().count() > 10);
         assert!(csv.starts_with("x,y,cluster,unit"));

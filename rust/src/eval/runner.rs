@@ -6,10 +6,11 @@ use crate::attention::recall_rate;
 use crate::config::LycheeConfig;
 use crate::eval::metrics::StabilityTracker;
 use crate::index::reps::FlatKeys;
-use crate::sparse::{make_policy, Ctx};
+use crate::sparse::{make_policy, unknown_policy_error, Ctx};
 use crate::util::timer::Stopwatch;
 use crate::workloads::mathcot::CotInstance;
 use crate::workloads::Task;
+use anyhow::Result;
 
 /// Result of running one policy over one task instance.
 #[derive(Clone, Debug, Default)]
@@ -33,11 +34,19 @@ fn recall_k(budget: usize) -> usize {
 ///
 /// `layer`/`layers` parameterize layer-split policies (RazorAttention);
 /// pass `instance_idx % layers` to emulate the head mixture.
-pub fn run_task(task: &Task, policy_name: &str, cfg: &LycheeConfig, layer: usize) -> TaskResult {
+///
+/// Errors (rather than panicking) on a policy name outside the registry,
+/// with the full list of valid names in the message.
+pub fn run_task(
+    task: &Task,
+    policy_name: &str,
+    cfg: &LycheeConfig,
+    layer: usize,
+) -> Result<TaskResult> {
     let keys = FlatKeys::new(&task.keys, task.d);
     let n = task.n_tokens();
-    let mut policy = make_policy(policy_name, cfg, layer, 4)
-        .unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+    let mut policy =
+        make_policy(policy_name, cfg, layer, 4).ok_or_else(|| unknown_policy_error(policy_name))?;
     let ctx = Ctx { keys: &keys, text: &task.text, n };
 
     let sw = Stopwatch::start();
@@ -57,14 +66,14 @@ pub fn run_task(task: &Task, policy_name: &str, cfg: &LycheeConfig, layer: usize
         recall_sum += recall_rate(&q.q, &keys, n, &sel, recall_k(cfg.budget), 1.0);
     }
     let nq = task.queries.len().max(1);
-    TaskResult {
+    Ok(TaskResult {
         accuracy: correct as f64 / nq as f64,
         recall: recall_sum / nq as f64,
         queries: nq,
         build_us,
         select_us_mean: select_us / nq as f64,
         index_bytes: policy.index_bytes(),
-    }
+    })
 }
 
 /// Result of a streaming CoT run.
@@ -83,12 +92,14 @@ pub struct CotResult {
 /// Run a streaming chain-of-thought instance: tokens arrive one at a
 /// time (exercising the lazy-update path); at each step's end the probe
 /// must retrieve its premise span.
-pub fn run_cot(inst: &CotInstance, policy_name: &str, cfg: &LycheeConfig) -> CotResult {
+///
+/// Errors (rather than panicking) on a policy name outside the registry.
+pub fn run_cot(inst: &CotInstance, policy_name: &str, cfg: &LycheeConfig) -> Result<CotResult> {
     let d = inst.prompt.d;
     let mut keys_flat = inst.prompt.keys.clone();
     let mut text = inst.prompt.text.clone();
     let mut policy =
-        make_policy(policy_name, cfg, 1, 4).unwrap_or_else(|| panic!("unknown policy {policy_name}"));
+        make_policy(policy_name, cfg, 1, 4).ok_or_else(|| unknown_policy_error(policy_name))?;
     {
         let keys = FlatKeys::new(&keys_flat, d);
         let n = text.len();
@@ -128,14 +139,14 @@ pub fn run_cot(inst: &CotInstance, policy_name: &str, cfg: &LycheeConfig) -> Cot
     }
 
     let nsteps = inst.steps.len().max(1);
-    CotResult {
+    Ok(CotResult {
         accuracy: correct as f64 / nsteps as f64,
         probes: nsteps,
         select_us_mean: select_us / nsteps as f64,
         update_us_mean: update_us / n_tokens_streamed.max(1) as f64,
         jaccard_series: tracker.jaccard_series,
         window_hit_series: tracker.window_hit_series,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -154,12 +165,12 @@ mod tests {
     #[test]
     fn full_attention_has_perfect_recall_and_tops_streaming() {
         let task = structext::generate("json", 2000, 6, 1);
-        let full = run_task(&task, "full", &small_cfg(), 0);
+        let full = run_task(&task, "full", &small_cfg(), 0).unwrap();
         // recall is coverage-based: full attention always retrieves all
         // ground-truth tokens; accuracy can dip below 1.0 under the
         // focus criterion (confusable distractors), like a real model.
         assert!((full.recall - 1.0).abs() < 1e-9);
-        let st = run_task(&task, "streaming", &small_cfg(), 0);
+        let st = run_task(&task, "streaming", &small_cfg(), 0).unwrap();
         assert!(full.accuracy >= st.accuracy);
     }
 
@@ -167,8 +178,8 @@ mod tests {
     fn lychee_beats_streaming_on_needles() {
         let task = structext::generate("json", 3000, 8, 2);
         let cfg = small_cfg();
-        let lychee = run_task(&task, "lychee", &cfg, 1);
-        let streaming = run_task(&task, "streaming", &cfg, 1);
+        let lychee = run_task(&task, "lychee", &cfg, 1).unwrap();
+        let streaming = run_task(&task, "streaming", &cfg, 1).unwrap();
         assert!(
             lychee.accuracy > streaming.accuracy,
             "lychee {} <= streaming {}",
@@ -189,8 +200,8 @@ mod tests {
         let mut acc_chunks = 0.0;
         for seed in 0..4 {
             let task = structext::generate("json", 3000, 8, seed);
-            acc_fixed += run_task(&task, "quest", &cfg, 1).accuracy;
-            acc_chunks += run_task(&task, "quest-chunks", &cfg, 1).accuracy;
+            acc_fixed += run_task(&task, "quest", &cfg, 1).unwrap().accuracy;
+            acc_chunks += run_task(&task, "quest-chunks", &cfg, 1).unwrap().accuracy;
         }
         assert!(
             acc_chunks >= acc_fixed,
@@ -204,13 +215,13 @@ mod tests {
     fn cot_runner_produces_metrics() {
         let inst = mathcot::generate(4, 30, 16, 3);
         let cfg = small_cfg();
-        let r = run_cot(&inst, "lychee", &cfg);
+        let r = run_cot(&inst, "lychee", &cfg).unwrap();
         assert_eq!(r.probes, 30);
         assert!(r.accuracy > 0.0);
         assert_eq!(r.jaccard_series.len(), 29);
         assert!(r.update_us_mean >= 0.0);
         // full attention must be perfect on CoT recall too
-        let rf = run_cot(&inst, "full", &cfg);
+        let rf = run_cot(&inst, "full", &cfg).unwrap();
         assert_eq!(rf.accuracy, 1.0);
     }
 
@@ -218,9 +229,21 @@ mod tests {
     fn razor_mixture_layers_differ() {
         let task = structext::generate("code", 3000, 8, 5);
         let cfg = small_cfg();
-        let retrieval_layer = run_task(&task, "razor", &cfg, 0); // full
-        let window_layer = run_task(&task, "razor", &cfg, 3); // sink+window
+        let retrieval_layer = run_task(&task, "razor", &cfg, 0).unwrap(); // full
+        let window_layer = run_task(&task, "razor", &cfg, 3).unwrap(); // sink+window
         assert_eq!(retrieval_layer.accuracy, 1.0);
         assert!(window_layer.accuracy < retrieval_layer.accuracy);
+    }
+
+    #[test]
+    fn unknown_policy_is_an_error_not_a_panic() {
+        let task = structext::generate("json", 500, 2, 0);
+        let cfg = small_cfg();
+        let err = run_task(&task, "not-a-policy", &cfg, 0).unwrap_err().to_string();
+        assert!(err.contains("unknown policy 'not-a-policy'"), "{err}");
+        assert!(err.contains("lychee"), "should list valid policies: {err}");
+        let inst = mathcot::generate(2, 4, 16, 0);
+        let err = run_cot(&inst, "not-a-policy", &cfg).unwrap_err().to_string();
+        assert!(err.contains("unknown policy"), "{err}");
     }
 }

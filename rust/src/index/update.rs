@@ -425,6 +425,58 @@ mod tests {
     }
 
     #[test]
+    fn prop_covering_invariant_under_topic_drift() {
+        // The lazy-update soundness claim (Eqn. 2 rests on it): after any
+        // mix of grafts and sprouts driven by a *drifting* topic
+        // direction — the Appendix D failure mode — every cluster still
+        // covers its members: ‖v − μ‖ ≤ r for every member chunk rep of
+        // every fine cluster, and for every fine centroid within its
+        // coarse unit (checked by `check_invariants`, plus an explicit
+        // member-by-member pass here).
+        prop::check("graft covering under drift", 20, |g| {
+            let d = 8;
+            let mut idx = small_index(g.usize_in(0..1000) as u64, 3, 16, d);
+            let mut rng = Rng::new(g.usize_in(0..1_000_000) as u64);
+            let mut topic = rng.unit_vec(d);
+            let base = idx.num_tokens();
+            let n = 40 + g.usize_in(0..80);
+            let drift = 0.1 + 0.4 * (g.usize_in(0..10) as f32) / 10.0;
+            for i in 0..n {
+                // random-walk the topic so grafts both extend existing
+                // clusters (small steps) and sprout fresh ones (far hops)
+                for (t, x) in topic.iter_mut().zip(rng.normal_vec(d)) {
+                    *t += drift * x;
+                }
+                linalg::normalize(&mut topic);
+                let mut rep = topic.clone();
+                for x in rep.iter_mut() {
+                    *x += 0.05 * rng.normal();
+                }
+                linalg::normalize(&mut rep);
+                idx.graft_rep(Chunk { start: base + i * 4, len: 4 }, rep);
+                idx.check_invariants().map_err(|e| format!("after graft {i}: {e}"))?;
+                for (fi, f) in idx.fine.iter().enumerate() {
+                    for &ci in &f.chunks {
+                        let dist = linalg::dist(&idx.chunks[ci].rep, &f.centroid);
+                        prop_assert!(
+                            dist <= f.radius + 1e-4,
+                            "graft {i} cluster {fi}: ‖v−μ‖ {dist} > r {}",
+                            f.radius
+                        );
+                    }
+                }
+            }
+            prop_assert!(
+                idx.num_tokens() == base + n * 4,
+                "token count drifted: {} != {}",
+                idx.num_tokens(),
+                base + n * 4
+            );
+            Ok(())
+        });
+    }
+
+    #[test]
     fn prop_buffer_never_loses_tokens() {
         prop::check("token buffer", 50, |g| {
             let chunk = g.usize_in(1..16);

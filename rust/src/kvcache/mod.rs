@@ -1,4 +1,20 @@
-//! Paged KV cache (vLLM-style block storage, CPU-resident).
+//! Paged KV cache over a process-wide shared page arena.
+//!
+//! Storage is split in two layers:
+//!
+//! - [`PagePool`] — a shared slab of fixed [`PAGE_SIZE`]-token pages with
+//!   a free-list. All sequences served by one engine lease pages from the
+//!   same pool; when a sequence finishes its pages are recycled (returned
+//!   to the free-list) instead of handed back to the allocator. The pool
+//!   keeps global byte accounting that the coordinator uses for admission
+//!   control / backpressure: new prefills are queued (or rejected with a
+//!   structured error) when the pool is near capacity, instead of OOM-ing
+//!   mid-decode.
+//! - [`KvCache`] — the per-sequence page table. A sequence *owns* its
+//!   leased pages while it is live, so the decode hot path (row reads,
+//!   gathers) takes no locks and retrieval for different sequences can
+//!   run on parallel threads; the pool mutex is touched only on page
+//!   acquire/release (once per [`PAGE_SIZE`] appended tokens per store).
 //!
 //! Tokens are stored in fixed-size pages per layer; appends never move
 //! existing data (stable indices — the hierarchical index stores token
@@ -6,27 +22,172 @@
 //! dense budget-padded buffer with the `[M, H, Dh]` token-major layout the
 //! Pallas attention kernel expects.
 //!
-//! Memory accounting (`bytes()`) backs the paper's Fig. 8 comparison of
-//! KV bytes vs index bytes.
+//! Memory accounting (`bytes()` per sequence, [`PagePool::stats`]
+//! globally) backs the paper's Fig. 8 comparison of KV bytes vs index
+//! bytes and the serving-side pool gauges.
 
 use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
 /// Tokens per page. 64 matches common GPU paged-attention block sizes.
 pub const PAGE_SIZE: usize = 64;
 
-/// One page of K or V data: `PAGE_SIZE` rows of `row_dim` floats.
+/// One page leased from the pool: `PAGE_SIZE` rows of `row_dim` floats.
 struct Page {
-    data: Vec<f32>,
+    data: Box<[f32]>,
+    /// Monotonic lease id: a recycled buffer gets a fresh id, so two live
+    /// leases never share an id (asserted by the arena tests).
+    lease: u64,
     used: usize,
 }
 
-impl Page {
-    fn new(row_dim: usize) -> Page {
-        Page { data: vec![0.0; PAGE_SIZE * row_dim], used: 0 }
+/// Snapshot of the arena's global accounting.
+#[derive(Clone, Debug, Default)]
+pub struct PoolStats {
+    /// Bytes currently leased to live sequences.
+    pub bytes_in_use: usize,
+    /// Bytes parked on the free-list, ready for reuse.
+    pub bytes_free: usize,
+    /// Admission-control capacity (`usize::MAX` when unbounded).
+    pub capacity_bytes: usize,
+    pub pages_in_use: usize,
+    /// Fresh allocations over the pool's lifetime.
+    pub pages_allocated_total: u64,
+    /// Leases served from the free-list over the pool's lifetime.
+    pub pages_recycled_total: u64,
+}
+
+struct PoolInner {
+    /// Free buffers keyed by row dimension (a pool normally serves one
+    /// model geometry, but keying keeps mixed-geometry use safe).
+    free: HashMap<usize, Vec<Box<[f32]>>>,
+    bytes_in_use: usize,
+    bytes_free: usize,
+    pages_in_use: usize,
+    pages_allocated_total: u64,
+    pages_recycled_total: u64,
+}
+
+/// Process-wide page arena shared by every sequence of an engine.
+pub struct PagePool {
+    inner: Mutex<PoolInner>,
+    /// `usize::MAX` = unbounded (no admission control).
+    capacity_bytes: usize,
+    next_lease: AtomicU64,
+}
+
+impl PagePool {
+    /// A pool with an admission-control capacity in bytes (`0` means
+    /// unbounded). The capacity bounds *leased* bytes; the free-list is
+    /// bounded by the peak of past usage.
+    pub fn with_capacity(capacity_bytes: usize) -> Arc<PagePool> {
+        let cap = if capacity_bytes == 0 { usize::MAX } else { capacity_bytes };
+        Arc::new(PagePool {
+            inner: Mutex::new(PoolInner {
+                free: HashMap::new(),
+                bytes_in_use: 0,
+                bytes_free: 0,
+                pages_in_use: 0,
+                pages_allocated_total: 0,
+                pages_recycled_total: 0,
+            }),
+            capacity_bytes: cap,
+            next_lease: AtomicU64::new(1),
+        })
+    }
+
+    /// A pool with no capacity bound (tests, offline eval).
+    pub fn unbounded() -> Arc<PagePool> {
+        Self::with_capacity(0)
+    }
+
+    /// Bytes of one page at the given row dimension.
+    pub fn page_bytes(row_dim: usize) -> usize {
+        PAGE_SIZE * row_dim * 4
+    }
+
+    /// Lease a page, recycling a freed buffer when one fits. Leases are
+    /// not refused at this level — the coordinator admits requests
+    /// against *reserved* estimated-final footprints (its own ledger, vs
+    /// [`PagePool::capacity_bytes`]), so decode-time growth of already
+    /// admitted sequences never fails mid-step.
+    fn acquire(&self, row_dim: usize) -> Page {
+        let bytes = Self::page_bytes(row_dim);
+        let recycled = {
+            let mut inner = self.inner.lock().unwrap();
+            let buf = inner.free.get_mut(&row_dim).and_then(|v| v.pop());
+            if buf.is_some() {
+                inner.bytes_free -= bytes;
+                inner.pages_recycled_total += 1;
+            } else {
+                inner.pages_allocated_total += 1;
+            }
+            inner.bytes_in_use += bytes;
+            inner.pages_in_use += 1;
+            buf
+        };
+        let data = match recycled {
+            // Zero recycled buffers (outside the lock): keeps the
+            // fresh-page invariant, so a previous owner's rows are never
+            // observable through an out-of-range read in release builds
+            // (the in-range guard in `LayerStore::row` is debug-only).
+            Some(mut buf) => {
+                buf.fill(0.0);
+                buf
+            }
+            None => vec![0.0f32; PAGE_SIZE * row_dim].into_boxed_slice(),
+        };
+        Page { data, lease: self.next_lease.fetch_add(1, Ordering::Relaxed), used: 0 }
+    }
+
+    /// Return a page to the free-list (sequence teardown).
+    fn release(&self, page: Page, row_dim: usize) {
+        let bytes = Self::page_bytes(row_dim);
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes_in_use -= bytes;
+        inner.pages_in_use -= 1;
+        inner.bytes_free += bytes;
+        inner.free.entry(row_dim).or_default().push(page.data);
+    }
+
+    pub fn bytes_in_use(&self) -> usize {
+        self.inner.lock().unwrap().bytes_in_use
+    }
+
+    /// Admission-control capacity (`usize::MAX` when unbounded).
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn is_bounded(&self) -> bool {
+        self.capacity_bytes != usize::MAX
+    }
+
+    /// Would leasing `extra` more bytes stay within capacity, judged
+    /// against *currently leased* bytes? Accounting helper for tests and
+    /// tooling only: admission control must not use it, because running
+    /// sequences keep growing after admission — the coordinator admits
+    /// against its ledger of reserved estimated-final footprints instead.
+    pub fn fits(&self, extra: usize) -> bool {
+        !self.is_bounded() || self.bytes_in_use().saturating_add(extra) <= self.capacity_bytes
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.lock().unwrap();
+        PoolStats {
+            bytes_in_use: inner.bytes_in_use,
+            bytes_free: inner.bytes_free,
+            capacity_bytes: self.capacity_bytes,
+            pages_in_use: inner.pages_in_use,
+            pages_allocated_total: inner.pages_allocated_total,
+            pages_recycled_total: inner.pages_recycled_total,
+        }
     }
 }
 
-/// Per-layer paged storage for one of K or V.
+/// Per-layer paged storage for one of K or V (page table over leases).
 struct LayerStore {
     row_dim: usize,
     pages: Vec<Page>,
@@ -41,10 +202,10 @@ impl LayerStore {
         self.pages.last().map_or(0, |p| (self.pages.len() - 1) * PAGE_SIZE + p.used)
     }
 
-    fn append(&mut self, row: &[f32]) {
+    fn append(&mut self, pool: &PagePool, row: &[f32]) {
         debug_assert_eq!(row.len(), self.row_dim);
         if self.pages.last().map_or(true, |p| p.used == PAGE_SIZE) {
-            self.pages.push(Page::new(self.row_dim));
+            self.pages.push(pool.acquire(self.row_dim));
         }
         let page = self.pages.last_mut().unwrap();
         let off = page.used * self.row_dim;
@@ -61,31 +222,63 @@ impl LayerStore {
     }
 
     fn bytes(&self) -> usize {
-        self.pages.len() * PAGE_SIZE * self.row_dim * 4
+        self.pages.len() * PagePool::page_bytes(self.row_dim)
+    }
+
+    fn release_all(&mut self, pool: &PagePool) {
+        for p in self.pages.drain(..) {
+            pool.release(p, self.row_dim);
+        }
     }
 }
 
-/// Multi-layer paged KV cache for a single sequence.
+/// Multi-layer paged KV cache for a single sequence, backed by a shared
+/// [`PagePool`]. Dropping the cache recycles every leased page.
 pub struct KvCache {
     pub layers: usize,
     pub heads: usize,
     pub head_dim: usize,
+    pool: Arc<PagePool>,
     k: Vec<LayerStore>,
     v: Vec<LayerStore>,
     len: usize,
 }
 
 impl KvCache {
+    /// A cache over its own private unbounded pool (tests, one-off eval).
     pub fn new(layers: usize, heads: usize, head_dim: usize) -> KvCache {
+        Self::with_pool(layers, heads, head_dim, PagePool::unbounded())
+    }
+
+    /// A cache leasing pages from a shared arena (the serving path).
+    pub fn with_pool(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        pool: Arc<PagePool>,
+    ) -> KvCache {
         let row = heads * head_dim;
         KvCache {
             layers,
             heads,
             head_dim,
+            pool,
             k: (0..layers).map(|_| LayerStore::new(row)).collect(),
             v: (0..layers).map(|_| LayerStore::new(row)).collect(),
             len: 0,
         }
+    }
+
+    /// The arena this cache leases from.
+    pub fn pool(&self) -> &Arc<PagePool> {
+        &self.pool
+    }
+
+    /// Arena bytes a sequence of `n_tokens` will lease at this geometry
+    /// (whole pages, K+V, all layers) — the admission-control estimate.
+    pub fn estimate_bytes(layers: usize, heads: usize, head_dim: usize, n_tokens: usize) -> usize {
+        let pages_per_store = n_tokens.div_ceil(PAGE_SIZE);
+        pages_per_store * PagePool::page_bytes(heads * head_dim) * 2 * layers
     }
 
     /// Number of cached tokens (identical across layers by construction).
@@ -108,8 +301,8 @@ impl KvCache {
             bail!("expected {} layers, got {}/{}", self.layers, k_rows.len(), v_rows.len());
         }
         for l in 0..self.layers {
-            self.k[l].append(k_rows[l]);
-            self.v[l].append(v_rows[l]);
+            self.k[l].append(&self.pool, k_rows[l]);
+            self.v[l].append(&self.pool, v_rows[l]);
         }
         self.len += 1;
         Ok(self.len - 1)
@@ -120,8 +313,8 @@ impl KvCache {
     /// once all layers are written. Rows become readable immediately
     /// (the current token takes part in its own attention step).
     pub fn append_row(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
-        self.k[layer].append(k_row);
-        self.v[layer].append(v_row);
+        self.k[layer].append(&self.pool, k_row);
+        self.v[layer].append(&self.pool, v_row);
     }
 
     /// Finish an `append_row`-per-layer token; bumps `len` and checks all
@@ -157,8 +350,8 @@ impl KvCache {
         for t in 0..n_tokens {
             for l in 0..self.layers {
                 let off = (l * s_bucket + t) * row;
-                self.k[l].append(&k_flat[off..off + row]);
-                self.v[l].append(&v_flat[off..off + row]);
+                self.k[l].append(&self.pool, &k_flat[off..off + row]);
+                self.v[l].append(&self.pool, &v_flat[off..off + row]);
             }
             self.len += 1;
         }
@@ -176,6 +369,33 @@ impl KvCache {
         self.v[layer].row(token)
     }
 
+    /// Gather `indices` into caller-provided dense `[M, H, Dh]` slices
+    /// plus the `[M]` validity mask (`mask_out.len()` is the bucket).
+    /// Lock-free and read-only over this sequence's pages, so gathers for
+    /// different sequences of a batch run on parallel threads.
+    pub fn gather_into(
+        &self,
+        layer: usize,
+        indices: &[usize],
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+        mask_out: &mut [f32],
+    ) {
+        let row = self.row_dim();
+        let m_bucket = mask_out.len();
+        assert!(indices.len() <= m_bucket, "{} > bucket {}", indices.len(), m_bucket);
+        assert_eq!(k_out.len(), m_bucket * row, "k_out size");
+        assert_eq!(v_out.len(), m_bucket * row, "v_out size");
+        k_out.fill(0.0);
+        v_out.fill(0.0);
+        mask_out.fill(0.0);
+        for (i, &tok) in indices.iter().enumerate() {
+            k_out[i * row..(i + 1) * row].copy_from_slice(self.k[layer].row(tok));
+            v_out[i * row..(i + 1) * row].copy_from_slice(self.v[layer].row(tok));
+            mask_out[i] = 1.0;
+        }
+    }
+
     /// Gather `indices` into dense `[M, H, Dh]` buffers padded to
     /// `m_bucket`, plus the `[M]` validity mask. Buffers are caller-owned
     /// so the engine can reuse allocations across steps.
@@ -189,31 +409,82 @@ impl KvCache {
         mask_out: &mut Vec<f32>,
     ) {
         let row = self.row_dim();
-        assert!(indices.len() <= m_bucket, "{} > bucket {}", indices.len(), m_bucket);
-        k_out.clear();
-        v_out.clear();
-        mask_out.clear();
+        // size only — gather_into zero-fills, so no clear-then-rezero
         k_out.resize(m_bucket * row, 0.0);
         v_out.resize(m_bucket * row, 0.0);
         mask_out.resize(m_bucket, 0.0);
-        for (i, &tok) in indices.iter().enumerate() {
-            k_out[i * row..(i + 1) * row].copy_from_slice(self.k[layer].row(tok));
-            v_out[i * row..(i + 1) * row].copy_from_slice(self.v[layer].row(tok));
-            mask_out[i] = 1.0;
-        }
+        self.gather_into(layer, indices, k_out, v_out, mask_out);
     }
 
-    /// Total bytes held by K+V pages (allocated, incl. partial pages).
+    /// Total bytes leased by K+V pages (allocated, incl. partial pages).
     pub fn bytes(&self) -> usize {
         self.k.iter().map(|s| s.bytes()).sum::<usize>()
             + self.v.iter().map(|s| s.bytes()).sum::<usize>()
     }
 
-    /// Number of allocated pages across layers (both K and V).
+    /// Number of leased pages across layers (both K and V).
     pub fn pages(&self) -> usize {
         self.k.iter().map(|s| s.pages.len()).sum::<usize>()
             + self.v.iter().map(|s| s.pages.len()).sum::<usize>()
     }
+
+    /// Lease ids of every page this cache holds (arena tests).
+    pub fn lease_ids(&self) -> Vec<u64> {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .flat_map(|s| s.pages.iter().map(|p| p.lease))
+            .collect()
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        let pool = Arc::clone(&self.pool);
+        for s in self.k.iter_mut().chain(self.v.iter_mut()) {
+            s.release_all(&pool);
+        }
+    }
+}
+
+/// Batched gather: `caches[i].gather_into(layer, &selections[i], ...)`
+/// into the i-th `m_bucket`-sized chunk of the batch buffers, sharded
+/// over up to `threads` scoped threads (each chunk is a disjoint `&mut`
+/// slice; cache reads are lock-free). This is the decode hot path's
+/// gather stage — the engine and the `batch_retrieval` bench both call
+/// it, so the benchmark measures exactly what serving runs.
+///
+/// Buffers may be sized for a batch bucket larger than `caches.len()`;
+/// trailing chunks are left untouched.
+#[allow(clippy::too_many_arguments)]
+pub fn gather_batch_into(
+    caches: &[&KvCache],
+    layer: usize,
+    selections: &[Vec<usize>],
+    m_bucket: usize,
+    k_out: &mut [f32],
+    v_out: &mut [f32],
+    mask_out: &mut [f32],
+    threads: usize,
+) {
+    let n = caches.len();
+    assert_eq!(selections.len(), n, "one selection per cache");
+    if n == 0 {
+        return;
+    }
+    let row = caches[0].row_dim();
+    let mut slots: Vec<(usize, &mut [f32], &mut [f32], &mut [f32])> = k_out
+        .chunks_mut(m_bucket * row)
+        .zip(v_out.chunks_mut(m_bucket * row))
+        .zip(mask_out.chunks_mut(m_bucket))
+        .take(n)
+        .enumerate()
+        .map(|(i, ((kc, vc), mc))| (i, kc, vc, mc))
+        .collect();
+    crate::util::threadpool::scoped_map_mut(&mut slots, threads, |_, slot| {
+        let (i, kc, vc, mc) = slot;
+        caches[*i].gather_into(layer, &selections[*i], kc, vc, mc);
+    });
 }
 
 #[cfg(test)]
@@ -323,6 +594,159 @@ mod tests {
         let vs = tok_rows(&mut rng, 1, 8);
         c.append_token(&[&ks[0]], &[&vs[0]]).unwrap();
         assert_eq!(c.bytes(), 2 * PAGE_SIZE * 8 * 4);
+    }
+
+    #[test]
+    fn pool_accounting_and_recycling() {
+        let pool = PagePool::with_capacity(1 << 20);
+        assert!(pool.is_bounded());
+        assert_eq!(pool.bytes_in_use(), 0);
+        let page = PagePool::page_bytes(8);
+        let mut rng = Rng::new(4);
+        let leases;
+        {
+            let mut c = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+            let ks = rng.normal_vec(8);
+            c.append_token(&[&ks], &[&ks]).unwrap();
+            assert_eq!(pool.bytes_in_use(), 2 * page); // one K + one V page
+            assert_eq!(c.bytes(), 2 * page);
+            leases = c.lease_ids();
+            assert_eq!(leases.len(), 2);
+        }
+        // sequence finished: everything recycled, nothing leased
+        assert_eq!(pool.bytes_in_use(), 0);
+        let st = pool.stats();
+        assert_eq!(st.pages_in_use, 0);
+        assert_eq!(st.bytes_free, 2 * page);
+        assert_eq!(st.pages_allocated_total, 2);
+
+        // a new sequence reuses the freed buffers under fresh lease ids
+        let mut c2 = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+        let ks2 = rng.normal_vec(8);
+        c2.append_token(&[&ks2], &[&ks2]).unwrap();
+        assert_eq!(c2.key_row(0, 0), &ks2[..]);
+        let st = pool.stats();
+        assert_eq!(st.pages_allocated_total, 2, "should not allocate fresh pages");
+        assert_eq!(st.pages_recycled_total, 2);
+        for lease in c2.lease_ids() {
+            assert!(!leases.contains(&lease), "lease id reused across owners");
+        }
+    }
+
+    #[test]
+    fn pool_capacity_and_estimates() {
+        let page = PagePool::page_bytes(8);
+        let pool = PagePool::with_capacity(4 * page);
+        assert!(pool.fits(4 * page));
+        assert!(!pool.fits(5 * page));
+        let mut c = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+        let row = vec![0.0f32; 8];
+        c.append_token(&[&row], &[&row]).unwrap(); // 2 pages leased
+        assert!(pool.fits(2 * page));
+        assert!(!pool.fits(3 * page));
+        assert_eq!(KvCache::estimate_bytes(1, 2, 4, 1), 2 * page);
+        assert_eq!(KvCache::estimate_bytes(1, 2, 4, PAGE_SIZE), 2 * page);
+        assert_eq!(KvCache::estimate_bytes(1, 2, 4, PAGE_SIZE + 1), 4 * page);
+        assert_eq!(KvCache::estimate_bytes(2, 2, 4, 1), 4 * page);
+        let unb = PagePool::unbounded();
+        assert!(!unb.is_bounded());
+        assert!(unb.fits(usize::MAX / 2));
+    }
+
+    #[test]
+    fn gather_batch_into_shards_disjoint_chunks() {
+        let pool = PagePool::unbounded();
+        let mut caches = Vec::new();
+        for c in 0..3usize {
+            let mut kv = KvCache::with_pool(1, 1, 4, Arc::clone(&pool));
+            for tok in 0..6usize {
+                let r: Vec<f32> = (0..4).map(|x| (c * 100 + tok * 10 + x) as f32).collect();
+                kv.append_token(&[&r], &[&r]).unwrap();
+            }
+            caches.push(kv);
+        }
+        let refs: Vec<&KvCache> = caches.iter().collect();
+        let sels = vec![vec![0, 2], vec![5], vec![1, 3, 4]];
+        let m = 4;
+        // buffers sized for a bucket of 4 > 3 real caches
+        let mut k = vec![9.0f32; 4 * m * 4];
+        let mut v = vec![9.0f32; 4 * m * 4];
+        let mut msk = vec![9.0f32; 4 * m];
+        for threads in [1, 3] {
+            gather_batch_into(&refs, 0, &sels, m, &mut k, &mut v, &mut msk, threads);
+            assert_eq!(&k[0..4], caches[0].key_row(0, 0));
+            assert_eq!(&k[4..8], caches[0].key_row(0, 2));
+            assert_eq!(&msk[0..m], &[1.0, 1.0, 0.0, 0.0]);
+            assert_eq!(&k[m * 4..m * 4 + 4], caches[1].key_row(0, 5));
+            assert_eq!(&msk[m..2 * m], &[1.0, 0.0, 0.0, 0.0]);
+            assert_eq!(&v[2 * m * 4 + 8..2 * m * 4 + 12], caches[2].value_row(0, 4));
+            assert_eq!(&msk[2 * m..3 * m], &[1.0, 1.0, 1.0, 0.0]);
+            // trailing bucket chunk untouched
+            assert_eq!(&msk[3 * m..4 * m], &[9.0; 4]);
+        }
+    }
+
+    #[test]
+    fn arena_concurrent_append_gather_recycle() {
+        // Hammer one shared arena from several concurrent sequences:
+        // every gathered row must carry its own sequence's fill pattern —
+        // if an index ever read a page recycled to another owner, the
+        // foreign pattern would surface here.
+        let pool = PagePool::unbounded();
+        let threads = 4usize;
+        let rounds = 6usize;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let pool = Arc::clone(&pool);
+                scope.spawn(move || {
+                    for r in 0..rounds {
+                        let id = (t * 100 + r) as f32;
+                        let mut c = KvCache::with_pool(2, 1, 8, Arc::clone(&pool));
+                        let n = 80 + t * 30 + r * 7;
+                        for tok in 0..n {
+                            let rows: Vec<Vec<f32>> = (0..2)
+                                .map(|l| {
+                                    (0..8)
+                                        .map(|cix| {
+                                            id + l as f32 * 10_000.0
+                                                + tok as f32 * 16.0
+                                                + cix as f32
+                                        })
+                                        .collect()
+                                })
+                                .collect();
+                            let kr: Vec<&[f32]> = rows.iter().map(|x| x.as_slice()).collect();
+                            c.append_token(&kr, &kr).unwrap();
+                        }
+                        let idx: Vec<usize> = (0..n).step_by(3).collect();
+                        let bucket = idx.len().next_power_of_two();
+                        let (mut k, mut v, mut m) = (Vec::new(), Vec::new(), Vec::new());
+                        for l in 0..2 {
+                            c.gather(l, &idx, bucket, &mut k, &mut v, &mut m);
+                            for (i, &tok) in idx.iter().enumerate() {
+                                for cix in 0..8 {
+                                    let expect = id
+                                        + l as f32 * 10_000.0
+                                        + tok as f32 * 16.0
+                                        + cix as f32;
+                                    assert_eq!(
+                                        k[i * 8 + cix],
+                                        expect,
+                                        "seq {t}/{r} layer {l} tok {tok} col {cix}"
+                                    );
+                                }
+                            }
+                        }
+                        drop(c); // recycle this sequence's pages
+                    }
+                });
+            }
+        });
+        let st = pool.stats();
+        assert_eq!(st.bytes_in_use, 0, "all pages recycled after teardown");
+        assert_eq!(st.pages_in_use, 0);
+        assert!(st.pages_recycled_total > 0, "arena reuse never happened");
+        assert!(st.bytes_free > 0);
     }
 
     #[test]

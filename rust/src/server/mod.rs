@@ -77,6 +77,59 @@ impl Drop for Server {
     }
 }
 
+/// Default output length when a request omits `max_new_tokens` (the
+/// coordinator additionally clamps to `serving.max_new_tokens`).
+pub const DEFAULT_MAX_NEW_TOKENS: usize = 32;
+
+/// Validated fields of one JSON-lines request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WireRequest {
+    pub prompt: Vec<u8>,
+    pub max_new_tokens: Option<usize>,
+    pub policy: String,
+}
+
+/// Validate a wire request before it reaches the scheduler: a missing
+/// prompt, `max_new_tokens: 0` (a no-op the old code happily enqueued),
+/// non-integer token counts, and unknown policies all get a structured
+/// `{"error": ...}` reply instead of a panic or a wasted prefill.
+/// Absurdly large `max_new_tokens` are accepted here and clamped by the
+/// coordinator to its configured `serving.max_new_tokens` cap.
+pub fn parse_request(j: &Json) -> std::result::Result<WireRequest, String> {
+    let Some(prompt) = j.get("prompt").as_str() else {
+        return Err("missing 'prompt'".to_string());
+    };
+    let max_new_tokens = match j.get("max_new_tokens") {
+        Json::Null => None,
+        v => {
+            let Some(n) = v.as_f64() else {
+                return Err("'max_new_tokens' must be an integer".to_string());
+            };
+            if n.fract() != 0.0 || n < 0.0 {
+                return Err("'max_new_tokens' must be a non-negative integer".to_string());
+            }
+            if n == 0.0 {
+                return Err("'max_new_tokens' must be >= 1".to_string());
+            }
+            Some(n as usize)
+        }
+    };
+    let policy = match j.get("policy") {
+        Json::Null => "lychee".to_string(),
+        v => match v.as_str() {
+            Some(p) if crate::sparse::POLICY_NAMES.contains(&p) => p.to_string(),
+            Some(p) => {
+                return Err(format!(
+                    "unknown policy '{p}' (valid: {})",
+                    crate::sparse::POLICY_NAMES.join(", ")
+                ))
+            }
+            None => return Err("'policy' must be a string".to_string()),
+        },
+    };
+    Ok(WireRequest { prompt: prompt.as_bytes().to_vec(), max_new_tokens, policy })
+}
+
 fn handle_conn(stream: TcpStream, handle: Handle, ids: &AtomicU64) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -98,15 +151,18 @@ fn handle_conn(stream: TcpStream, handle: Handle, ids: &AtomicU64) -> Result<()>
                 continue;
             }
         };
-        let Some(prompt) = parsed.get("prompt").as_str() else {
-            reply_err(&mut writer, "missing 'prompt'")?;
-            continue;
+        let wire = match parse_request(&parsed) {
+            Ok(w) => w,
+            Err(msg) => {
+                reply_err(&mut writer, &msg)?;
+                continue;
+            }
         };
         let req = Request {
             id: ids.fetch_add(1, Ordering::Relaxed),
-            prompt: prompt.as_bytes().to_vec(),
-            max_new_tokens: parsed.get("max_new_tokens").as_usize().unwrap_or(32),
-            policy: parsed.get("policy").as_str().unwrap_or("lychee").to_string(),
+            prompt: wire.prompt,
+            max_new_tokens: wire.max_new_tokens.unwrap_or(DEFAULT_MAX_NEW_TOKENS),
+            policy: wire.policy,
         };
         let rx = match handle.submit(req) {
             Ok(rx) => rx,
@@ -227,6 +283,50 @@ mod tests {
         server.stop();
         handle.shutdown();
         join.join().unwrap();
+    }
+
+    fn parse(s: &str) -> std::result::Result<WireRequest, String> {
+        parse_request(&Json::parse(s).unwrap())
+    }
+
+    #[test]
+    fn parse_request_accepts_valid_and_defaults() {
+        let w = parse(r#"{"prompt": "hi", "max_new_tokens": 8, "policy": "full"}"#).unwrap();
+        assert_eq!(w.prompt, b"hi".to_vec());
+        assert_eq!(w.max_new_tokens, Some(8));
+        assert_eq!(w.policy, "full");
+        let w = parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(w.max_new_tokens, None);
+        assert_eq!(w.policy, "lychee");
+    }
+
+    #[test]
+    fn parse_request_rejects_zero_and_junk_token_counts() {
+        assert!(parse(r#"{"max_new_tokens": 4}"#).unwrap_err().contains("prompt"));
+        let e = parse(r#"{"prompt": "x", "max_new_tokens": 0}"#).unwrap_err();
+        assert!(e.contains(">= 1"), "{e}");
+        let e = parse(r#"{"prompt": "x", "max_new_tokens": 2.5}"#).unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        let e = parse(r#"{"prompt": "x", "max_new_tokens": -3}"#).unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        let e = parse(r#"{"prompt": "x", "max_new_tokens": "many"}"#).unwrap_err();
+        assert!(e.contains("integer"), "{e}");
+        // huge values are accepted here; the coordinator clamps them
+        let w = parse(r#"{"prompt": "x", "max_new_tokens": 1000000}"#).unwrap();
+        assert_eq!(w.max_new_tokens, Some(1_000_000));
+    }
+
+    #[test]
+    fn parse_request_validates_policy_names() {
+        let e = parse(r#"{"prompt": "x", "policy": "nope"}"#).unwrap_err();
+        assert!(e.contains("unknown policy 'nope'"), "{e}");
+        assert!(e.contains("lychee"), "should list valid policies: {e}");
+        let e = parse(r#"{"prompt": "x", "policy": 3}"#).unwrap_err();
+        assert!(e.contains("string"), "{e}");
+        for name in crate::sparse::POLICY_NAMES {
+            let w = parse(&format!(r#"{{"prompt": "x", "policy": "{name}"}}"#)).unwrap();
+            assert_eq!(w.policy, *name);
+        }
     }
 
     #[test]

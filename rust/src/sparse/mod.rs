@@ -53,7 +53,11 @@ pub struct Ctx<'a> {
 /// Call order per sequence: `build` once after prefill, then per decode
 /// step `select(q, pos)` (the active set used for attention at position
 /// `pos`) followed by `on_token(pos)` once that token's KV is cached.
-pub trait Policy: Send {
+///
+/// `Send + Sync` so a decode batch can shard per-sequence retrieval onto
+/// scoped threads (each thread takes `&mut` of one sequence's policies;
+/// shared reads happen during the parallel gather).
+pub trait Policy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Index the prefill context (`ctx.n` tokens).
@@ -98,6 +102,21 @@ pub fn merge_with_budget(always: Vec<usize>, candidates: &[usize], budget: usize
     }
     out.sort_unstable();
     out
+}
+
+/// Every policy name [`make_policy`] accepts (kept in sync by the
+/// registry test below; the CLI and server quote this list in errors).
+pub const POLICY_NAMES: &[&str] = &[
+    "full", "lychee", "lychee-fixed", "lychee-max", "sentencekv", "quest",
+    "quest-chunks", "clusterkv", "streaming", "h2o", "raas", "arkvale",
+    "shadowkv", "razor",
+];
+
+/// Uniform error for a policy name outside the registry: names the bad
+/// input and lists every valid policy (CLI prints this and exits non-zero
+/// instead of the old `panic!`).
+pub fn unknown_policy_error(name: &str) -> anyhow::Error {
+    anyhow::anyhow!("unknown policy '{name}' (valid: {})", POLICY_NAMES.join(", "))
 }
 
 /// Instantiate a policy by name. `layer` / `layers` parameterize
@@ -176,15 +195,16 @@ mod tests {
     #[test]
     fn registry_makes_all_policies() {
         let cfg = LycheeConfig::default();
-        for name in [
-            "full", "lychee", "lychee-fixed", "lychee-max", "sentencekv", "quest",
-            "quest-chunks", "clusterkv", "streaming", "h2o", "raas", "arkvale",
-            "shadowkv", "razor",
-        ] {
+        for name in POLICY_NAMES {
             let p = make_policy(name, &cfg, 0, 4);
             assert!(p.is_some(), "missing policy {name}");
         }
         assert!(make_policy("nope", &cfg, 0, 4).is_none());
+        let msg = unknown_policy_error("nope").to_string();
+        assert!(msg.contains("unknown policy 'nope'"), "{msg}");
+        for name in POLICY_NAMES {
+            assert!(msg.contains(name), "error does not list '{name}': {msg}");
+        }
     }
 
     /// Shared contract test: every policy returns a sorted, deduped,
@@ -203,11 +223,7 @@ mod tests {
         let text: Vec<u8> =
             (0..n + steps).map(|_| b"the quick, brown. fox\n"[rng.range(0, 22)]).collect();
 
-        for name in [
-            "full", "lychee", "lychee-fixed", "lychee-max", "sentencekv", "quest",
-            "quest-chunks", "clusterkv", "streaming", "h2o", "raas", "arkvale",
-            "shadowkv", "razor",
-        ] {
+        for &name in POLICY_NAMES {
             let mut p = make_policy(name, &cfg, 1, 4).unwrap();
             let src = FlatKeys::new(&keys, 16);
             p.build(&Ctx { keys: &src, text: &text, n });

@@ -93,6 +93,50 @@ impl Drop for ThreadPool {
     }
 }
 
+/// Run `f(index, &mut item)` over every item on up to `threads` scoped
+/// threads, collecting results in order. The decode hot path uses this to
+/// shard per-sequence retrieval (policy `select` + arena `gather`) across
+/// a batch: items are disjoint `&mut` borrows, so no locking is needed,
+/// and `threads == 1` degrades to a plain serial loop with zero spawns.
+pub fn scoped_map_mut<T: Send, R: Send>(
+    items: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut T) -> R + Sync,
+) -> Vec<R> {
+    let n = items.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        return items.iter_mut().enumerate().map(|(i, it)| f(i, it)).collect();
+    }
+    let chunk = n.div_ceil(threads);
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (ci, block) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            handles.push((
+                ci,
+                s.spawn(move || {
+                    block
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(j, it)| f(ci * chunk + j, it))
+                        .collect::<Vec<R>>()
+                }),
+            ));
+        }
+        for (ci, h) in handles {
+            for (j, r) in h.join().expect("scoped worker panicked").into_iter().enumerate() {
+                out[ci * chunk + j] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +176,22 @@ mod tests {
         let pool = ThreadPool::new(1);
         let out = pool.map(&[1, 2, 3], |&x: &i32| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_mut_mutates_and_orders() {
+        for threads in [1, 2, 3, 8] {
+            let mut items: Vec<usize> = (0..23).collect();
+            let out = scoped_map_mut(&mut items, threads, |i, it| {
+                *it += 100;
+                i * 2
+            });
+            assert_eq!(out, (0..23).map(|i| i * 2).collect::<Vec<_>>(), "threads={threads}");
+            assert_eq!(items[0], 100);
+            assert_eq!(items[22], 122);
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        let out: Vec<usize> = scoped_map_mut(&mut empty, 4, |i, _| i);
+        assert!(out.is_empty());
     }
 }

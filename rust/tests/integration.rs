@@ -26,8 +26,8 @@ fn pilot_ordering_structure_beats_fixed_pages() {
     for sub in structext::SUBTASKS {
         for seed in 0..3 {
             let task = structext::generate(sub, 6144, 8, seed);
-            fixed += run_task(&task, "quest", &cfg, 1).accuracy;
-            chunks += run_task(&task, "quest-chunks", &cfg, 1).accuracy;
+            fixed += run_task(&task, "quest", &cfg, 1).unwrap().accuracy;
+            chunks += run_task(&task, "quest-chunks", &cfg, 1).unwrap().accuracy;
             n += 1.0;
         }
     }
@@ -47,9 +47,9 @@ fn retrieval_methods_beat_eviction_on_interior_needles() {
     let mut streaming = 0.0;
     for seed in 0..3 {
         let task = longbench::generate("single_doc_qa", longbench::Band::Medium, 6, seed);
-        lychee += run_task(&task, "lychee", &cfg, 1).accuracy;
-        h2o += run_task(&task, "h2o", &cfg, 1).accuracy;
-        streaming += run_task(&task, "streaming", &cfg, 1).accuracy;
+        lychee += run_task(&task, "lychee", &cfg, 1).unwrap().accuracy;
+        h2o += run_task(&task, "h2o", &cfg, 1).unwrap().accuracy;
+        streaming += run_task(&task, "streaming", &cfg, 1).unwrap().accuracy;
     }
     assert!(lychee > h2o, "lychee {lychee} <= h2o {h2o}");
     assert!(lychee > streaming, "lychee {lychee} <= streaming {streaming}");
@@ -63,8 +63,8 @@ fn lychee_recall_tracks_full_attention_on_ruler() {
     for task_name in ["single", "multikey", "qa1"] {
         for seed in 0..2 {
             let task = ruler::generate(task_name, 8192, seed);
-            let full = run_task(&task, "full", &cfg, 1);
-            let ly = run_task(&task, "lychee", &cfg, 1);
+            let full = run_task(&task, "full", &cfg, 1).unwrap();
+            let ly = run_task(&task, "lychee", &cfg, 1).unwrap();
             total_gap += full.accuracy - ly.accuracy;
             n += 1.0;
         }
@@ -81,8 +81,8 @@ fn lychee_recall_tracks_full_attention_on_ruler() {
 fn cot_stream_lychee_retains_premises_better_than_eviction() {
     let cfg = eval_cfg();
     let inst = mathcot::generate(6, 80, 72, 11);
-    let lychee = run_cot(&inst, "lychee", &cfg);
-    let h2o = run_cot(&inst, "h2o", &cfg);
+    let lychee = run_cot(&inst, "lychee", &cfg).unwrap();
+    let h2o = run_cot(&inst, "h2o", &cfg).unwrap();
     assert!(
         lychee.accuracy >= h2o.accuracy,
         "lychee {} < h2o {}",

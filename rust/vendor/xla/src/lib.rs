@@ -1,0 +1,239 @@
+//! Vendored offline stub of the `xla` crate (xla_extension 0.5.1).
+//!
+//! The real crate links the XLA C++ runtime, which is not available in
+//! the offline build image. This stub keeps the exact API surface the
+//! `lychee` runtime uses so the workspace compiles and every test that
+//! does not touch a PJRT executable runs normally:
+//!
+//! - [`Literal`] is fully functional (host-side tensors: f32/i32 data +
+//!   dims, reshape, to_vec, tuples) — the runtime's literal builders and
+//!   their tests work for real.
+//! - [`PjRtClient::cpu`] succeeds (so engine construction fails no
+//!   earlier than artifact loading), but [`PjRtClient::compile`] returns
+//!   an error: executing AOT HLO artifacts requires the real crate.
+//!   Everything engine-level is gated on `artifacts/manifest.json`
+//!   existing, so the test suite self-skips those paths.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (implements `std::error::Error` so it converts into
+/// `anyhow::Error` via `?`).
+#[derive(Debug)]
+pub struct Error(String);
+
+impl Error {
+    fn new(msg: impl Into<String>) -> Error {
+        Error(msg.into())
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "xla: {}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element payload of a literal.
+#[derive(Clone, Debug)]
+enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Element types this stub supports.
+pub trait NativeType: Copy {
+    fn wrap(v: Vec<Self>) -> Data;
+    fn unwrap(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(v: Vec<f32>) -> Data {
+        Data::F32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(v: Vec<i32>) -> Data {
+        Data::I32(v)
+    }
+    fn unwrap(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+/// A host-side tensor literal (dims + typed data).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::wrap(v.to_vec()), dims: vec![v.len() as i64] }
+    }
+
+    /// Rank-0 (scalar) literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    /// Reinterpret with new dims; errors if the element count differs.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        if want < 0 || want as usize != self.element_count() {
+            return Err(Error::new(format!(
+                "reshape: {} elements into dims {:?}",
+                self.element_count(),
+                dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Copy out as a flat vector of `T`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(&self.data).ok_or_else(|| Error::new("to_vec: element type mismatch"))
+    }
+
+    /// Decompose a tuple literal.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.data {
+            Data::Tuple(t) => Ok(t.clone()),
+            _ => Err(Error::new("to_tuple on non-tuple literal")),
+        }
+    }
+
+    /// Build a tuple literal (symmetry helper; unused by the stub paths).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        let n = parts.len() as i64;
+        Literal { data: Data::Tuple(parts), dims: vec![n] }
+    }
+}
+
+/// Parsed HLO module (stub: retains only the source path).
+#[derive(Clone, Debug)]
+pub struct HloModuleProto {
+    pub path: String,
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error::new(format!("HLO text file not found: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// Computation wrapper (stub).
+#[derive(Clone, Debug)]
+pub struct XlaComputation {
+    module: HloModuleProto,
+}
+
+impl XlaComputation {
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { module: proto.clone() }
+    }
+}
+
+/// PJRT client (stub: construction succeeds, compilation does not).
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "cpu-stub".to_string()
+    }
+
+    pub fn compile(&self, comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::new(format!(
+            "offline xla stub cannot compile {}; build against the real xla_extension crate to execute HLO artifacts",
+            comp.module.path
+        )))
+    }
+}
+
+/// Device buffer handle (stub; never constructed since compile errors).
+pub struct PjRtBuffer {
+    literal: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.literal.clone())
+    }
+}
+
+/// Loaded executable handle (stub; never constructed since compile errors).
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::new("offline xla stub cannot execute programs"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        assert_eq!(l.element_count(), 4);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3]).is_err());
+        assert!(l.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_and_tuple() {
+        let s = Literal::scalar(7i32);
+        assert_eq!(s.element_count(), 1);
+        assert_eq!(s.to_vec::<i32>().unwrap(), vec![7]);
+        let t = Literal::tuple(vec![s.clone(), s]);
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn client_exists_but_cannot_compile() {
+        let c = PjRtClient::cpu().unwrap();
+        assert_eq!(c.platform_name(), "cpu-stub");
+        assert!(HloModuleProto::from_text_file("/definitely/not/here.hlo.txt").is_err());
+    }
+}
