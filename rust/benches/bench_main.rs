@@ -9,10 +9,18 @@
 //!   kmeans               — spherical k-means build cost
 //!   chunking             — segmentation throughput
 //!   kvcache_gather       — paged-cache gather into budget buffers
+//!   simd                 — scalar vs AVX2 kernels (dot / matvec)
+//!   retrieval_json       — machine-readable BENCH_retrieval.json:
+//!                          ns/token select per policy per context size,
+//!                          SoA+SIMD vs seed-style scalar scoring at 32k,
+//!                          serial-vs-parallel batch retrieval
 //!   fig4_tpot            — end-to-end decode TPOT (engine + PJRT)
 //!   serving_throughput   — batched coordinator throughput
 //!
 //! Run with `cargo bench` (all) or `cargo bench -- <filter>`.
+//! `BENCH_SMOKE=1` shrinks iteration counts/contexts for CI smoke runs;
+//! `BENCH_JSON_PATH` overrides where `retrieval_json` writes its file
+//! (default: `BENCH_retrieval.json` in the current directory).
 
 use lychee::chunking::{Chunker, FixedSizeChunker, StructureAwareChunker};
 use lychee::config::{Config, LycheeConfig};
@@ -20,12 +28,17 @@ use lychee::index::hierarchy::{HierarchicalIndex, IndexParams};
 use lychee::index::kmeans::spherical_kmeans;
 use lychee::index::reps::FlatKeys;
 use lychee::kvcache::KvCache;
-use lychee::sparse::{make_policy, Ctx};
+use lychee::linalg;
+use lychee::sparse::{make_policy, Ctx, SelectScratch};
 use lychee::util::rng::Rng;
 use lychee::util::stats::Summary;
 use lychee::workloads::trace::prompt_text;
 
-fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
+fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0" && !v.is_empty()).unwrap_or(false)
+}
+
+fn bench_quiet<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Summary {
     for _ in 0..warmup {
         f();
     }
@@ -35,7 +48,11 @@ fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
         f();
         samples.push(t.elapsed().as_secs_f64() * 1e6);
     }
-    let s = Summary::of(&samples);
+    Summary::of(&samples)
+}
+
+fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, f: F) -> Summary {
+    let s = bench_quiet(warmup, iters, f);
     println!(
         "{name:<44} mean {m:>10.1} µs   p50 {p50:>10.1}   p99 {p99:>10.1}   n={n}",
         m = s.mean,
@@ -43,6 +60,7 @@ fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) {
         p99 = s.p99,
         n = s.n
     );
+    s
 }
 
 fn filter_match(name: &str) -> bool {
@@ -250,6 +268,50 @@ fn main() {
         }
     }
 
+    if section("simd") {
+        // scalar reference vs the dispatched (AVX2 where available)
+        // kernels on scoring-shaped inputs
+        println!("kernel backend: {}", linalg::simd::backend().name());
+        let d2 = 64usize;
+        let rows = 683usize; // ~32k tokens / 48-byte chunks
+        let mut r = Rng::new(0x51D);
+        let mat: Vec<f32> = r.normal_vec(rows * d2);
+        let q = r.normal_vec(d2);
+        let mut out = vec![0.0f32; rows];
+        bench("scalar matvec 683x64", 5, 200, || {
+            linalg::simd::scalar_matvec(&mat, d2, &q, &mut out);
+            std::hint::black_box(&out);
+        });
+        bench("dispatched matvec 683x64", 5, 200, || {
+            linalg::matvec(&mat, d2, &q, &mut out);
+            std::hint::black_box(&out);
+        });
+        let a = r.normal_vec(4096);
+        let b = r.normal_vec(4096);
+        bench("scalar dot 4096", 5, 500, || {
+            std::hint::black_box(linalg::simd::scalar_dot(&a, &b));
+        });
+        bench("dispatched dot 4096", 5, 500, || {
+            std::hint::black_box(linalg::dot(&a, &b));
+        });
+    }
+
+    if section("retrieval_json") {
+        let json = retrieval_json_section();
+        let path = std::env::var("BENCH_JSON_PATH")
+            .unwrap_or_else(|_| "BENCH_retrieval.json".to_string());
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                // fail the run loudly: CI's artifact upload depends on
+                // this file existing, and a green run without it would
+                // silently drop the perf trajectory
+                eprintln!("FAILED writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     // engine benches need artifacts
     let mut cfg = Config::new();
     if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
@@ -317,4 +379,174 @@ fn main() {
     }
 
     println!("\nbench harness done.");
+}
+
+/// The perf-trajectory section: measures the scoring/select hot path and
+/// renders `BENCH_retrieval.json` (schema documented in EXPERIMENTS.md
+/// §Perf). Returns the JSON text.
+fn retrieval_json_section() -> String {
+    let d = 32usize;
+    let smoke = smoke();
+    let contexts: &[usize] = if smoke { &[4 * 1024] } else { &[4 * 1024, 16 * 1024, 32 * 1024] };
+    let (warm, iters) = if smoke { (1, 5) } else { (3, 50) };
+    let policies = ["lychee", "quest", "clusterkv", "arkvale", "shadowkv"];
+    let cfg = LycheeConfig::default();
+
+    // --- per-policy select latency at several context lengths ----------
+    let mut select_rows = Vec::new();
+    for &n in contexts {
+        let mut rng = Rng::new(0xBE9C4 ^ n as u64);
+        let text = prompt_text(n, 1);
+        let keys: Vec<f32> = rng.normal_vec(n * d);
+        let src = FlatKeys::new(&keys, d);
+        for name in policies {
+            let mut p = make_policy(name, &cfg, 1, 4).unwrap();
+            let ctx = Ctx { keys: &src, text: &text, n };
+            p.build(&ctx);
+            let q = rng.normal_vec(d);
+            let mut scratch = SelectScratch::new();
+            let s = bench(
+                &format!("{name} select_into @{}k", n / 1024),
+                warm,
+                iters,
+                || {
+                    p.select_into(&ctx, &q, n, &mut scratch);
+                    std::hint::black_box(&scratch.out);
+                },
+            );
+            select_rows.push(format!(
+                "{{\"context_tokens\": {n}, \"policy\": \"{name}\", \
+                 \"select_us_mean\": {:.2}, \"ns_per_ctx_token\": {:.3}}}",
+                s.mean,
+                s.mean * 1000.0 / n as f64
+            ));
+        }
+    }
+
+    // --- SoA+SIMD scoring vs the seed-style scalar path at 32k ---------
+    // Seed layout: one separately-allocated Vec per chunk rep, scored
+    // with per-row scalar dot (pointer chasing + no GEMV blocking).
+    // Current layout: one contiguous [rows, d] matrix + blocked GEMV.
+    let score_d = 64usize;
+    let rows = 32 * 1024 / 48; // chunk reps of a 32k-token context
+    let mut rng = Rng::new(0x5C0FE);
+    let flat: Vec<f32> = rng.normal_vec(rows * score_d);
+    let nested: Vec<Vec<f32>> = (0..rows)
+        .map(|r| flat[r * score_d..(r + 1) * score_d].to_vec())
+        .collect();
+    let q = rng.normal_vec(score_d);
+    let mut out = vec![0.0f32; rows];
+    let (sw, si) = if smoke { (2, 20) } else { (10, 300) };
+    let scalar = bench(&format!("score {rows}x{score_d} scalar AoS (seed path)"), sw, si, || {
+        for (o, row) in out.iter_mut().zip(&nested) {
+            *o = linalg::simd::scalar_dot(row, &q);
+        }
+        std::hint::black_box(&out);
+    });
+    let simd = bench(&format!("score {rows}x{score_d} SIMD SoA (matvec)"), sw, si, || {
+        linalg::matvec(&flat, score_d, &q, &mut out);
+        std::hint::black_box(&out);
+    });
+    let speedup = if simd.mean > 0.0 { scalar.mean / simd.mean } else { 0.0 };
+    println!("score path speedup (scalar AoS -> SIMD SoA): {speedup:.2}x");
+
+    // --- serial vs parallel batch retrieval (select + gather) ----------
+    use lychee::engine::LayerKeys;
+    use lychee::kvcache::PagePool;
+    use lychee::sparse::Policy;
+    use lychee::util::threadpool::scoped_map_mut;
+    use std::sync::Arc;
+
+    let bd = 64usize;
+    let ctx_tokens = if smoke { 2 * 1024 } else { 8 * 1024 };
+    let pool = PagePool::unbounded();
+    struct BatchSeq {
+        kv: KvCache,
+        policy: Box<dyn Policy>,
+        text: Vec<u8>,
+        q: Vec<f32>,
+        scratch: SelectScratch,
+    }
+    let mk_seq = |i: usize| -> BatchSeq {
+        let mut rng = Rng::new(0xBA7C4 + i as u64);
+        let mut kv = KvCache::with_pool(1, 1, bd, Arc::clone(&pool));
+        let text = prompt_text(ctx_tokens, i as u64);
+        for _ in 0..ctx_tokens {
+            let kr = rng.normal_vec(bd);
+            kv.append_token(&[&kr], &[&kr]).unwrap();
+        }
+        let mut policy = make_policy("lychee", &cfg, 1, 4).unwrap();
+        {
+            let keys = LayerKeys { cache: &kv, layer: 0, n: ctx_tokens };
+            policy.build(&Ctx { keys: &keys, text: &text, n: ctx_tokens });
+        }
+        BatchSeq { kv, policy, text, q: rng.normal_vec(bd), scratch: SelectScratch::new() }
+    };
+    let m = 2048usize;
+    let (bw, bi) = if smoke { (1, 3) } else { (2, 15) };
+    let mut batch_rows = Vec::new();
+    for bsz in [1usize, 2, 4, 8] {
+        let mut batch: Vec<BatchSeq> = (0..bsz).map(mk_seq).collect();
+        let mut kb = vec![0.0f32; bsz * m * bd];
+        let mut vb = vec![0.0f32; bsz * m * bd];
+        let mut mb = vec![0.0f32; bsz * m];
+        let serial = bench(&format!("json serial   select+gather b={bsz}"), bw, bi, || {
+            for i in 0..bsz {
+                let sel = {
+                    let s = &mut batch[i];
+                    let keys = LayerKeys { cache: &s.kv, layer: 0, n: ctx_tokens };
+                    let ctx = Ctx { keys: &keys, text: &s.text, n: ctx_tokens };
+                    s.policy.select_into(&ctx, &s.q, ctx_tokens, &mut s.scratch);
+                    std::mem::take(&mut s.scratch.out)
+                };
+                batch[i].kv.gather_into(
+                    0,
+                    &sel,
+                    &mut kb[i * m * bd..(i + 1) * m * bd],
+                    &mut vb[i * m * bd..(i + 1) * m * bd],
+                    &mut mb[i * m..(i + 1) * m],
+                );
+                batch[i].scratch.out = sel;
+            }
+            std::hint::black_box(&kb);
+        });
+        let parallel = bench(&format!("json parallel select+gather b={bsz}"), bw, bi, || {
+            let sels: Vec<Vec<usize>> = scoped_map_mut(&mut batch, bsz, |_i, s| {
+                let keys = LayerKeys { cache: &s.kv, layer: 0, n: ctx_tokens };
+                let ctx = Ctx { keys: &keys, text: &s.text, n: ctx_tokens };
+                s.policy.select_into(&ctx, &s.q, ctx_tokens, &mut s.scratch);
+                std::mem::take(&mut s.scratch.out)
+            });
+            let caches: Vec<&KvCache> = batch.iter().map(|s| &s.kv).collect();
+            lychee::kvcache::gather_batch_into(
+                &caches, 0, &sels, m, &mut kb, &mut vb, &mut mb, bsz,
+            );
+            for (s, sel) in batch.iter_mut().zip(sels) {
+                s.scratch.out = sel;
+            }
+            std::hint::black_box(&kb);
+        });
+        batch_rows.push(format!(
+            "{{\"batch\": {bsz}, \"context_tokens\": {ctx_tokens}, \
+             \"serial_us\": {:.1}, \"parallel_us\": {:.1}}}",
+            serial.mean, parallel.mean
+        ));
+    }
+
+    format!(
+        "{{\n  \"schema\": \"lychee-bench-retrieval-v1\",\n  \
+         \"backend\": \"{}\",\n  \"smoke\": {},\n  \"select_dim\": {},\n  \
+         \"select\": [\n    {}\n  ],\n  \
+         \"score_32k\": {{\"rows\": {rows}, \"d\": {score_d}, \
+         \"scalar_aos_us\": {:.2}, \"simd_soa_us\": {:.2}, \"speedup\": {:.2}}},\n  \
+         \"batch\": [\n    {}\n  ]\n}}\n",
+        linalg::simd::backend().name(),
+        smoke,
+        d,
+        select_rows.join(",\n    "),
+        scalar.mean,
+        simd.mean,
+        speedup,
+        batch_rows.join(",\n    ")
+    )
 }

@@ -10,13 +10,55 @@ use crate::index::reps::KeySource;
 use crate::linalg;
 
 /// Softmax attention weights of query `q` over keys `[0, n)` from a key
-/// source (head-merged dim-d rows). `scale` is usually 1/sqrt(head_dim)
-/// — on merged rows the per-head softmax structure is collapsed; for
-/// oracle purposes the merged form preserves the ranking the index sees.
+/// source (head-merged dim-d rows), written into `out` (cleared first).
+/// `scale` is usually 1/sqrt(head_dim) — on merged rows the per-head
+/// softmax structure is collapsed; for oracle purposes the merged form
+/// preserves the ranking the index sees. Flat key sources score with one
+/// blocked GEMV; paged sources fall back to per-row dots.
+pub fn attention_weights_into(
+    q: &[f32],
+    keys: &dyn KeySource,
+    n: usize,
+    scale: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.resize(n, 0.0);
+    match keys.as_rows() {
+        Some(rows) => linalg::matvec(&rows[..n * keys.dim()], keys.dim(), q, out),
+        None => {
+            for (t, o) in out.iter_mut().enumerate() {
+                *o = linalg::dot(q, keys.key(t));
+            }
+        }
+    }
+    for s in out.iter_mut() {
+        *s *= scale;
+    }
+    linalg::softmax(out);
+}
+
+/// Allocating wrapper over [`attention_weights_into`].
 pub fn attention_weights(q: &[f32], keys: &dyn KeySource, n: usize, scale: f32) -> Vec<f32> {
-    let mut scores: Vec<f32> = (0..n).map(|t| linalg::dot(q, keys.key(t)) * scale).collect();
-    linalg::softmax(&mut scores);
-    scores
+    let mut out = Vec::new();
+    attention_weights_into(q, keys, n, scale, &mut out);
+    out
+}
+
+/// Renormalized softmax weights over an arbitrary token subset (the
+/// sparse path), written into `out` aligned with `tokens` (cleared
+/// first). Allocation-free when `out` has capacity — the eviction
+/// baselines call this every decode step.
+pub fn sparse_attention_weights_into(
+    q: &[f32],
+    keys: &dyn KeySource,
+    tokens: &[usize],
+    scale: f32,
+    out: &mut Vec<f32>,
+) {
+    out.clear();
+    out.extend(tokens.iter().map(|&t| linalg::dot(q, keys.key(t)) * scale));
+    linalg::softmax(out);
 }
 
 /// Attention weights over an arbitrary token subset (the sparse path);
@@ -27,11 +69,8 @@ pub fn sparse_attention_weights(
     tokens: &[usize],
     scale: f32,
 ) -> Vec<(usize, f32)> {
-    let mut scores: Vec<f32> = tokens
-        .iter()
-        .map(|&t| linalg::dot(q, keys.key(t)) * scale)
-        .collect();
-    linalg::softmax(&mut scores);
+    let mut scores = Vec::new();
+    sparse_attention_weights_into(q, keys, tokens, scale, &mut scores);
     tokens.iter().copied().zip(scores).collect()
 }
 

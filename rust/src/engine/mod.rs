@@ -24,7 +24,7 @@ use crate::index::reps::KeySource;
 use crate::kvcache::{KvCache, PagePool};
 use crate::model::{Manifest, Weights};
 use crate::runtime::{lit_f32, lit_i32, to_f32_vec, Runtime};
-use crate::sparse::{make_policy, Ctx, Policy};
+use crate::sparse::{make_policy, Ctx, Policy, SelectScratch};
 use crate::util::rng::Rng;
 use crate::util::threadpool::scoped_map_mut;
 use crate::util::timer::PhaseTimer;
@@ -79,6 +79,10 @@ pub struct Sequence {
     pub last_logits: Vec<f32>,
     pub generated: Vec<u8>,
     pub timer: PhaseTimer,
+    /// Reusable retrieval buffers shared by all of this sequence's layer
+    /// policies — steady-state decode allocates nothing on the select
+    /// path (buffers keep their high-water capacity across tokens).
+    pub scratch: SelectScratch,
     rng: Rng,
 }
 
@@ -242,6 +246,7 @@ impl Engine {
             last_logits: logits,
             generated: Vec::new(),
             timer: PhaseTimer::new(),
+            scratch: SelectScratch::new(),
             rng: Rng::new(id ^ 0x5EED),
         })
     }
@@ -285,6 +290,7 @@ impl Engine {
             last_logits: vec![0.0; dims.vocab],
             generated: Vec::new(),
             timer: PhaseTimer::new(),
+            scratch: SelectScratch::new(),
             rng: Rng::new(seed ^ 0xABCD),
         })
     }
@@ -373,11 +379,16 @@ impl Engine {
                 let t1 = std::time::Instant::now();
                 let q = &q_all[i * d..(i + 1) * d];
                 let s: &mut Sequence = &mut **s;
-                let Sequence { kv, policies, text, pos, .. } = &mut *s;
+                let Sequence { kv, policies, text, pos, scratch, .. } = &mut *s;
                 let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
                 let ctx = Ctx { keys: &keys, text, n: *pos };
-                let mut sel = policies[l].select(&ctx, q, *pos);
-                sel.push(*pos); // self-attention to the current token
+                // allocation-free select into the sequence's scratch; the
+                // output buffer is taken here and handed back (recycled)
+                // after the batched gather below, so steady-state decode
+                // performs zero allocations on the retrieval path
+                policies[l].select_into(&ctx, q, *pos, scratch);
+                scratch.out.push(*pos); // self-attention to the current token
+                let sel = std::mem::take(&mut scratch.out);
                 s.timer.add("retrieval", t1.elapsed());
                 sel
             });
@@ -410,6 +421,13 @@ impl Engine {
             let v_lit = lit_f32(&v_batch, &[b, m, h, dh])?;
             let mask_lit = lit_f32(&mask_batch, &[b, m])?;
             let d_gather = t2.elapsed() / b_real as u32;
+
+            // hand each selection buffer back to its sequence's scratch so
+            // the next layer/token reuses the allocation
+            for (s, mut sel) in seqs.iter_mut().zip(selections) {
+                sel.clear();
+                s.scratch.out = sel;
+            }
 
             let t3 = std::time::Instant::now();
             let attn = self

@@ -338,14 +338,16 @@ pub fn fig11(opts: &Opts) -> Result<Table> {
     let idx = HierarchicalIndex::build(&keys, &spans, IndexParams::default());
 
     // top-2 principal directions of the reps via power iteration
-    let reps: Vec<&[f32]> = idx.chunks.iter().map(|c| c.rep.as_slice()).collect();
+    let reps: Vec<&[f32]> = (0..idx.num_chunks()).map(|ci| idx.chunk_rep(ci)).collect();
     let (p1, p2) = top2_pcs(&reps, task.d);
     let mut csv = String::from("x,y,cluster,unit\n");
-    for c in &idx.chunks {
-        let x = crate::linalg::dot(&c.rep, &p1);
-        let y = crate::linalg::dot(&c.rep, &p2);
-        let unit = idx.fine[c.cluster].unit;
-        csv.push_str(&format!("{x:.4},{y:.4},{},{}\n", c.cluster, unit));
+    for ci in 0..idx.num_chunks() {
+        let rep = idx.chunk_rep(ci);
+        let x = crate::linalg::dot(rep, &p1);
+        let y = crate::linalg::dot(rep, &p2);
+        let cluster = idx.chunk_clusters[ci];
+        let unit = idx.fine_units[cluster];
+        csv.push_str(&format!("{x:.4},{y:.4},{cluster},{unit}\n"));
     }
     let _ = std::fs::create_dir_all("results");
     let _ = std::fs::write("results/fig11_projection.csv", &csv);

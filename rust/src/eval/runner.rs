@@ -6,7 +6,7 @@ use crate::attention::recall_rate;
 use crate::config::LycheeConfig;
 use crate::eval::metrics::StabilityTracker;
 use crate::index::reps::FlatKeys;
-use crate::sparse::{make_policy, unknown_policy_error, Ctx};
+use crate::sparse::{make_policy, unknown_policy_error, Ctx, SelectScratch};
 use crate::util::timer::Stopwatch;
 use crate::workloads::mathcot::CotInstance;
 use crate::workloads::Task;
@@ -56,14 +56,15 @@ pub fn run_task(
     let mut correct = 0usize;
     let mut recall_sum = 0.0;
     let mut select_us = 0.0;
+    let mut scratch = SelectScratch::new();
     for q in &task.queries {
         let sw = Stopwatch::start();
-        let sel = policy.select(&ctx, &q.q, n);
+        policy.select_into(&ctx, &q.q, n, &mut scratch);
         select_us += sw.elapsed_us();
-        if task.query_correct(q, &sel) {
+        if task.query_correct(q, &scratch.out) {
             correct += 1;
         }
-        recall_sum += recall_rate(&q.q, &keys, n, &sel, recall_k(cfg.budget), 1.0);
+        recall_sum += recall_rate(&q.q, &keys, n, &scratch.out, recall_k(cfg.budget), 1.0);
     }
     let nq = task.queries.len().max(1);
     Ok(TaskResult {
@@ -111,6 +112,7 @@ pub fn run_cot(inst: &CotInstance, policy_name: &str, cfg: &LycheeConfig) -> Res
     let mut update_us = 0.0;
     let mut n_tokens_streamed = 0usize;
     let mut tracker = StabilityTracker::new(32);
+    let mut scratch = SelectScratch::new();
 
     for step in &inst.steps {
         // stream the step's tokens
@@ -130,12 +132,12 @@ pub fn run_cot(inst: &CotInstance, policy_name: &str, cfg: &LycheeConfig) -> Res
         let keys = FlatKeys::new(&keys_flat, d);
         let ctx = Ctx { keys: &keys, text: &text, n };
         let sw = Stopwatch::start();
-        let sel = policy.select(&ctx, &step.probe.q, n);
+        policy.select_into(&ctx, &step.probe.q, n, &mut scratch);
         select_us += sw.elapsed_us();
-        if CotInstance::span_coverage(step.target_span, &sel) >= step.probe.coverage {
+        if CotInstance::span_coverage(step.target_span, &scratch.out) >= step.probe.coverage {
             correct += 1;
         }
-        tracker.record(StabilityTracker::signature(&sel));
+        tracker.record(StabilityTracker::signature(&scratch.out));
     }
 
     let nsteps = inst.steps.len().max(1);

@@ -1,10 +1,19 @@
 //! The three-tier index: construction (prefill phase) and top-down
 //! upper-bound pruned retrieval (decoding phase). Paper §4.3–4.4.
+//!
+//! Layout: every tier is a flat structure-of-arrays — one contiguous
+//! row-major `[rows, d]` centroid/representative matrix per tier with
+//! parallel `radius` / `tokens` / membership arrays — so decode-time
+//! scoring is a single blocked GEMV ([`crate::linalg::matvec`]) over
+//! cache-line-sequential rows instead of per-node pointer chasing. The
+//! hot entry points (`search_clusters_into`, `select_tokens_into`) write
+//! into a caller-owned [`SelectScratch`] and perform no heap allocation.
 
 use super::kmeans::spherical_kmeans;
 use super::reps::{pool_rep, KeySource, Pooling};
 use crate::chunking::Chunk;
 use crate::linalg;
+use crate::sparse::SelectScratch;
 
 /// Construction parameters (defaults = paper Appendix A).
 #[derive(Clone, Debug)]
@@ -41,53 +50,45 @@ impl Default for IndexParams {
     }
 }
 
-/// Leaf: a structure-aware chunk with its representative key.
-#[derive(Clone, Debug)]
-pub struct IndexChunk {
-    pub start: usize,
-    pub len: usize,
-    /// Unit-norm representative (mean/max pool of token keys).
-    pub rep: Vec<f32>,
-    /// Owning fine cluster.
-    pub cluster: usize,
-}
-
-impl IndexChunk {
-    pub fn end(&self) -> usize {
-        self.start + self.len
-    }
-}
-
-/// Middle tier: fine cluster with centroid + covering radius over its
-/// member chunk representatives.
-#[derive(Clone, Debug)]
-pub struct FineCluster {
-    pub centroid: Vec<f32>,
-    pub radius: f32,
-    pub chunks: Vec<usize>,
-    /// Owning coarse unit.
-    pub unit: usize,
-    /// Total tokens covered (cached for budget-filling retrieval).
-    pub tokens: usize,
-}
-
-/// Top tier: coarse unit with centroid + covering radius over its member
-/// fine-cluster centroids.
-#[derive(Clone, Debug)]
-pub struct CoarseUnit {
-    pub centroid: Vec<f32>,
-    pub radius: f32,
-    pub clusters: Vec<usize>,
-}
-
-/// The hierarchical KV index for one attention layer.
+/// The hierarchical KV index for one attention layer, stored as three
+/// structure-of-arrays tiers:
+///
+/// - **leaf**: chunk representatives `[M, d]` + start/len/owner arrays
+/// - **fine**: cluster centroids `[L, d]` + radius/tokens/unit/members
+/// - **coarse**: unit centroids `[P, d]` + radius/members
 #[derive(Clone, Debug)]
 pub struct HierarchicalIndex {
     pub d: usize,
     pub params: IndexParams,
-    pub chunks: Vec<IndexChunk>,
-    pub fine: Vec<FineCluster>,
-    pub coarse: Vec<CoarseUnit>,
+    /// Unit-norm chunk representatives, row-major `[M, d]`.
+    pub chunk_reps: Vec<f32>,
+    /// First token position per chunk.
+    pub chunk_starts: Vec<usize>,
+    /// Token count per chunk.
+    pub chunk_lens: Vec<usize>,
+    /// Owning fine cluster per chunk.
+    pub chunk_clusters: Vec<usize>,
+    /// Fine-cluster centroids, row-major `[L, d]`, unit norm.
+    pub fine_centroids: Vec<f32>,
+    /// Covering radius over member chunk reps, per fine cluster.
+    pub fine_radii: Vec<f32>,
+    /// Total tokens covered per fine cluster (budget-filling retrieval).
+    pub fine_token_counts: Vec<usize>,
+    /// Owning coarse unit per fine cluster.
+    pub fine_units: Vec<usize>,
+    /// Member chunk ids per fine cluster.
+    pub fine_members: Vec<Vec<usize>>,
+    /// Coarse-unit centroids, row-major `[P, d]`, unit norm.
+    pub coarse_centroids: Vec<f32>,
+    /// Covering radius over member fine centroids, per coarse unit.
+    pub coarse_radii: Vec<f32>,
+    /// Member fine-cluster ids per coarse unit.
+    pub coarse_members: Vec<Vec<usize>>,
+    /// Reusable unit-score buffer for the lazy-update path (`graft_rep`'s
+    /// nearest-unit GEMV), so grafting a dynamic chunk allocates nothing.
+    pub graft_scores: Vec<f32>,
+    /// Reusable centroid snapshot for the moving-average radius bound.
+    pub graft_tmp: Vec<f32>,
 }
 
 /// Eqn. 2: `UB(q, u) = q·μ_u + ‖q‖ · r_u`.
@@ -96,246 +97,376 @@ pub fn upper_bound(q: &[f32], q_norm: f32, centroid: &[f32], radius: f32) -> f32
     linalg::dot(q, centroid) + q_norm * radius
 }
 
+/// Descending-score, ascending-index comparator for (id, score) pairs;
+/// `total_cmp` so a degenerate (NaN) score cannot panic mid-request.
+#[inline]
+fn by_score_desc(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
+    b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
+}
+
 impl HierarchicalIndex {
+    /// An index with no content (the decode-time bootstrap state).
+    pub fn empty(d: usize, params: IndexParams) -> Self {
+        HierarchicalIndex {
+            d,
+            params,
+            chunk_reps: Vec::new(),
+            chunk_starts: Vec::new(),
+            chunk_lens: Vec::new(),
+            chunk_clusters: Vec::new(),
+            fine_centroids: Vec::new(),
+            fine_radii: Vec::new(),
+            fine_token_counts: Vec::new(),
+            fine_units: Vec::new(),
+            fine_members: Vec::new(),
+            coarse_centroids: Vec::new(),
+            coarse_radii: Vec::new(),
+            coarse_members: Vec::new(),
+            graft_scores: Vec::new(),
+            graft_tmp: Vec::new(),
+        }
+    }
+
     /// Build the full pyramid from chunk spans over a key source
     /// (prefill phase, Algorithm 1 lines 2–3).
     pub fn build(keys: &dyn KeySource, spans: &[Chunk], params: IndexParams) -> Self {
         let d = keys.dim();
+        let mut idx = HierarchicalIndex::empty(d, params);
         if spans.is_empty() {
-            return HierarchicalIndex { d, params, chunks: Vec::new(), fine: Vec::new(), coarse: Vec::new() };
+            return idx;
         }
 
-        // --- leaf tier: representatives --------------------------------
-        let mut chunks: Vec<IndexChunk> = spans
-            .iter()
-            .map(|c| IndexChunk {
-                start: c.start,
-                len: c.len,
-                rep: pool_rep(params.pooling, keys, c.start, c.len),
-                cluster: 0,
-            })
-            .collect();
-        let m = chunks.len();
-        let reps: Vec<f32> = chunks.iter().flat_map(|c| c.rep.iter().copied()).collect();
+        // --- leaf tier: representatives straight into the SoA matrix ----
+        let m = spans.len();
+        idx.chunk_reps.reserve(m * d);
+        for c in spans {
+            let rep = pool_rep(idx.params.pooling, keys, c.start, c.len);
+            idx.chunk_reps.extend_from_slice(&rep);
+            idx.chunk_starts.push(c.start);
+            idx.chunk_lens.push(c.len);
+            idx.chunk_clusters.push(0);
+        }
 
-        // --- fine tier: spherical k-means over reps ---------------------
-        let l = m.div_ceil(params.avg_cluster_size.max(1)).max(1);
-        let fine_res = spherical_kmeans(&reps, d, l, params.kmeans_iters, params.seed);
-        let mut fine: Vec<FineCluster> = (0..fine_res.k)
-            .map(|c| FineCluster {
-                centroid: fine_res.centroid(c).to_vec(),
-                radius: 0.0,
-                chunks: Vec::new(),
-                unit: 0,
-                tokens: 0,
-            })
-            .collect();
-        for (ci, chunk) in chunks.iter_mut().enumerate() {
+        // --- fine tier: spherical k-means over the rep matrix -----------
+        let l = m.div_ceil(idx.params.avg_cluster_size.max(1)).max(1);
+        let fine_res =
+            spherical_kmeans(&idx.chunk_reps, d, l, idx.params.kmeans_iters, idx.params.seed);
+        let lk = fine_res.k;
+        idx.fine_centroids = fine_res.centroids;
+        idx.fine_radii = vec![0.0; lk];
+        idx.fine_token_counts = vec![0; lk];
+        idx.fine_units = vec![0; lk];
+        idx.fine_members = vec![Vec::new(); lk];
+        for ci in 0..m {
             let f = fine_res.assignment[ci];
-            chunk.cluster = f;
-            fine[f].chunks.push(ci);
-            fine[f].tokens += chunk.len;
-            fine[f].radius = fine[f].radius.max(linalg::dist(&chunk.rep, &fine[f].centroid));
+            idx.chunk_clusters[ci] = f;
+            idx.fine_members[f].push(ci);
+            idx.fine_token_counts[f] += idx.chunk_lens[ci];
+            let dist = linalg::dist(idx.chunk_rep(ci), idx.fine_centroid(f));
+            if dist > idx.fine_radii[f] {
+                idx.fine_radii[f] = dist;
+            }
         }
-        // drop empty clusters (k-means reseeding guarantees none, but be safe)
-        debug_assert!(fine.iter().all(|f| !f.chunks.is_empty()));
+        // k-means reseeding guarantees no empty clusters, but be safe
+        debug_assert!(idx.fine_members.iter().all(|mm| !mm.is_empty()));
 
-        // --- coarse tier: k-means over fine centroids -------------------
-        let lk = fine.len();
+        // --- coarse tier: k-means over the fine centroid matrix ---------
         let p = lk
-            .div_ceil(params.coarse_fanout.max(1))
-            .clamp(1, params.max_coarse_units.max(1));
-        let cents: Vec<f32> = fine.iter().flat_map(|f| f.centroid.iter().copied()).collect();
-        let coarse_res = spherical_kmeans(&cents, d, p, params.kmeans_iters, params.seed ^ 0x5EED);
-        let mut coarse: Vec<CoarseUnit> = (0..coarse_res.k)
-            .map(|u| CoarseUnit {
-                centroid: coarse_res.centroid(u).to_vec(),
-                radius: 0.0,
-                clusters: Vec::new(),
-            })
-            .collect();
-        for (fi, f) in fine.iter_mut().enumerate() {
+            .div_ceil(idx.params.coarse_fanout.max(1))
+            .clamp(1, idx.params.max_coarse_units.max(1));
+        let coarse_res = spherical_kmeans(
+            &idx.fine_centroids,
+            d,
+            p,
+            idx.params.kmeans_iters,
+            idx.params.seed ^ 0x5EED,
+        );
+        let pk = coarse_res.k;
+        idx.coarse_centroids = coarse_res.centroids;
+        idx.coarse_radii = vec![0.0; pk];
+        idx.coarse_members = vec![Vec::new(); pk];
+        for fi in 0..lk {
             let u = coarse_res.assignment[fi];
-            f.unit = u;
-            coarse[u].clusters.push(fi);
-            coarse[u].radius = coarse[u].radius.max(linalg::dist(&f.centroid, &coarse[u].centroid));
+            idx.fine_units[fi] = u;
+            idx.coarse_members[u].push(fi);
+            let dist = linalg::dist(idx.fine_centroid(fi), idx.coarse_centroid(u));
+            if dist > idx.coarse_radii[u] {
+                idx.coarse_radii[u] = dist;
+            }
         }
-
-        HierarchicalIndex { d, params, chunks, fine, coarse }
+        idx
     }
 
     pub fn num_chunks(&self) -> usize {
-        self.chunks.len()
+        self.chunk_lens.len()
     }
 
     pub fn num_clusters(&self) -> usize {
-        self.fine.len()
+        self.fine_radii.len()
     }
 
     pub fn num_units(&self) -> usize {
-        self.coarse.len()
+        self.coarse_radii.len()
     }
 
     /// Total indexed tokens.
     pub fn num_tokens(&self) -> usize {
-        self.chunks.iter().map(|c| c.len).sum()
+        self.chunk_lens.iter().sum()
     }
 
-    /// Top-down pruned search (Algorithm 1 steps 1–2): returns fine
-    /// cluster ids with their UB scores, descending, drawn from the
-    /// top-`kg` coarse units and capped at `kc` clusters.
-    pub fn search_clusters(&self, q: &[f32], kg: usize, kc: usize) -> Vec<(usize, f32)> {
-        if self.coarse.is_empty() {
-            return Vec::new();
+    /// Representative row of chunk `ci`.
+    #[inline]
+    pub fn chunk_rep(&self, ci: usize) -> &[f32] {
+        &self.chunk_reps[ci * self.d..(ci + 1) * self.d]
+    }
+
+    /// One-past-the-end token position of chunk `ci`.
+    #[inline]
+    pub fn chunk_end(&self, ci: usize) -> usize {
+        self.chunk_starts[ci] + self.chunk_lens[ci]
+    }
+
+    /// Centroid row of fine cluster `fi`.
+    #[inline]
+    pub fn fine_centroid(&self, fi: usize) -> &[f32] {
+        &self.fine_centroids[fi * self.d..(fi + 1) * self.d]
+    }
+
+    /// Centroid row of coarse unit `ui`.
+    #[inline]
+    pub fn coarse_centroid(&self, ui: usize) -> &[f32] {
+        &self.coarse_centroids[ui * self.d..(ui + 1) * self.d]
+    }
+
+    /// Top-down pruned search (Algorithm 1 steps 1–2), allocation-free:
+    /// leaves fine cluster ids with their UB scores, descending, in
+    /// `scratch.cand`, drawn from the top-`kg` coarse units and capped at
+    /// `kc` clusters. `q_norm` is passed in so callers that already
+    /// computed `‖q‖` (e.g. [`Self::select_tokens_into`]) don't pay for
+    /// it twice.
+    pub fn search_clusters_into(
+        &self,
+        q: &[f32],
+        q_norm: f32,
+        kg: usize,
+        kc: usize,
+        scratch: &mut SelectScratch,
+    ) {
+        scratch.cand.clear();
+        let p = self.num_units();
+        if p == 0 || kc == 0 {
+            return;
         }
-        let qn = linalg::norm(q);
-        // coarse level
-        let unit_scores: Vec<f32> = self
-            .coarse
-            .iter()
-            .map(|u| upper_bound(q, qn, &u.centroid, u.radius))
-            .collect();
-        let top_units = linalg::top_k(&unit_scores, kg);
+        // coarse level: one GEMV over the unit centroid matrix
+        scratch.scores.clear();
+        scratch.scores.resize(p, 0.0);
+        linalg::matvec(&self.coarse_centroids, self.d, q, &mut scratch.scores);
+        for (s, r) in scratch.scores.iter_mut().zip(&self.coarse_radii) {
+            *s += q_norm * r;
+        }
+        linalg::top_k_partial(&scratch.scores, kg, &mut scratch.order);
         // fine level within surviving units
-        let mut cand: Vec<(usize, f32)> = Vec::new();
-        for &u in &top_units {
-            for &f in &self.coarse[u].clusters {
-                let fc = &self.fine[f];
-                cand.push((f, upper_bound(q, qn, &fc.centroid, fc.radius)));
+        for &u in &scratch.order {
+            for &f in &self.coarse_members[u] {
+                let ub = upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f]);
+                scratch.cand.push((f, ub));
             }
         }
-        cand.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        cand.truncate(kc);
-        cand
+        // partial selection: only the top-kc survive, so a full sort of
+        // the candidate set is wasted work
+        let kc = kc.min(scratch.cand.len());
+        if kc < scratch.cand.len() {
+            scratch.cand.select_nth_unstable_by(kc - 1, by_score_desc);
+            scratch.cand.truncate(kc);
+        }
+        scratch.cand.sort_unstable_by(by_score_desc);
     }
 
-    /// Full retrieval (Algorithm 1 steps 1–3): expand the selected
-    /// clusters' chunks into token indices, filling up to `budget`
-    /// tokens. Returns ascending token ids.
+    /// Allocating wrapper over [`Self::search_clusters_into`] (tests,
+    /// one-off callers).
+    pub fn search_clusters(&self, q: &[f32], kg: usize, kc: usize) -> Vec<(usize, f32)> {
+        let mut scratch = SelectScratch::new();
+        self.search_clusters_into(q, linalg::norm(q), kg, kc, &mut scratch);
+        std::mem::take(&mut scratch.cand)
+    }
+
+    /// Full retrieval (Algorithm 1 steps 1–3), allocation-free: expands
+    /// the selected clusters' chunks into token indices in
+    /// `scratch.tokens`, filling up to `budget` tokens (ascending ids).
     ///
     /// Clusters are consumed in UB order; a cluster whose chunks would
     /// overflow the remaining budget is partially taken chunk-by-chunk
     /// (never splitting a chunk — semantic atomicity is the whole point).
-    pub fn select_tokens(&self, q: &[f32], kg: usize, kc: usize, budget: usize) -> Vec<usize> {
-        let clusters = self.search_clusters(q, kg, kc);
-        let qn = linalg::norm(q);
-        let mut out: Vec<usize> = Vec::with_capacity(budget);
+    pub fn select_tokens_into(
+        &self,
+        q: &[f32],
+        kg: usize,
+        kc: usize,
+        budget: usize,
+        scratch: &mut SelectScratch,
+    ) {
+        let qn = linalg::norm(q); // computed once, shared with the search
+        self.search_clusters_into(q, qn, kg, kc, scratch);
+        scratch.tokens.clear();
+        let SelectScratch { cand, members, tokens, .. } = scratch;
         let mut remaining = budget;
-        'outer: for (f, _) in clusters {
-            let fc = &self.fine[f];
-            if fc.tokens <= remaining {
-                for &ci in &fc.chunks {
-                    let c = &self.chunks[ci];
-                    out.extend(c.start..c.end());
+        'outer: for &(f, _) in cand.iter() {
+            if remaining == 0 {
+                break;
+            }
+            if self.fine_token_counts[f] <= remaining {
+                for &ci in &self.fine_members[f] {
+                    tokens.extend(self.chunk_starts[ci]..self.chunk_end(ci));
                 }
-                remaining -= fc.tokens;
+                remaining -= self.fine_token_counts[f];
             } else {
                 // partial: take member chunks in rep-UB order until full
-                let mut member_scores: Vec<(usize, f32)> = fc
-                    .chunks
-                    .iter()
-                    .map(|&ci| (ci, upper_bound(q, qn, &self.chunks[ci].rep, 0.0)))
-                    .collect();
-                member_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-                for (ci, _) in member_scores {
-                    let c = &self.chunks[ci];
-                    if c.len > remaining {
+                members.clear();
+                for &ci in &self.fine_members[f] {
+                    members.push((ci, upper_bound(q, qn, self.chunk_rep(ci), 0.0)));
+                }
+                members.sort_unstable_by(by_score_desc);
+                for &(ci, _) in members.iter() {
+                    let len = self.chunk_lens[ci];
+                    if len > remaining {
                         continue;
                     }
-                    out.extend(c.start..c.end());
-                    remaining -= c.len;
+                    tokens.extend(self.chunk_starts[ci]..self.chunk_end(ci));
+                    remaining -= len;
                     if remaining == 0 {
                         break 'outer;
                     }
                 }
             }
-            if remaining == 0 {
-                break;
-            }
         }
-        out.sort_unstable();
-        out.dedup();
-        out
+        tokens.sort_unstable();
+        tokens.dedup();
+    }
+
+    /// Allocating wrapper over [`Self::select_tokens_into`].
+    pub fn select_tokens(&self, q: &[f32], kg: usize, kc: usize, budget: usize) -> Vec<usize> {
+        let mut scratch = SelectScratch::new();
+        self.select_tokens_into(q, kg, kc, budget, &mut scratch);
+        std::mem::take(&mut scratch.tokens)
     }
 
     /// Exhaustive chunk scan (no hierarchy) — the ablation baseline for
     /// `benches/ablation_ub.rs` and recall ground truth at chunk level.
-    pub fn select_tokens_flat(&self, q: &[f32], budget: usize) -> Vec<usize> {
-        let scores: Vec<f32> = self.chunks.iter().map(|c| linalg::dot(q, &c.rep)).collect();
-        let order = linalg::top_k(&scores, self.chunks.len());
-        let mut out = Vec::with_capacity(budget);
+    /// One GEMV over the whole rep matrix, result in `scratch.tokens`.
+    pub fn select_tokens_flat_into(&self, q: &[f32], budget: usize, scratch: &mut SelectScratch) {
+        scratch.tokens.clear();
+        let m = self.num_chunks();
+        if m == 0 {
+            return;
+        }
+        scratch.scores.clear();
+        scratch.scores.resize(m, 0.0);
+        linalg::matvec(&self.chunk_reps, self.d, q, &mut scratch.scores);
+        // full order: budget filling may skip over-size chunks arbitrarily
+        // deep into the ranking, so this baseline keeps the full sort
+        linalg::top_k_partial(&scratch.scores, m, &mut scratch.order);
+        let SelectScratch { order, tokens, .. } = scratch;
         let mut remaining = budget;
-        for ci in order {
-            let c = &self.chunks[ci];
-            if c.len > remaining {
+        for &ci in order.iter() {
+            let len = self.chunk_lens[ci];
+            if len > remaining {
                 continue;
             }
-            out.extend(c.start..c.end());
-            remaining -= c.len;
+            tokens.extend(self.chunk_starts[ci]..self.chunk_end(ci));
+            remaining -= len;
             if remaining == 0 {
                 break;
             }
         }
-        out.sort_unstable();
-        out
+        tokens.sort_unstable();
+    }
+
+    /// Allocating wrapper over [`Self::select_tokens_flat_into`].
+    pub fn select_tokens_flat(&self, q: &[f32], budget: usize) -> Vec<usize> {
+        let mut scratch = SelectScratch::new();
+        self.select_tokens_flat_into(q, budget, &mut scratch);
+        std::mem::take(&mut scratch.tokens)
     }
 
     /// Index memory footprint in bytes (Fig. 8): chunk representatives +
     /// centroids + radii + membership tables.
     pub fn bytes(&self) -> usize {
-        let f32s = self.chunks.len() * self.d          // reps
-            + self.fine.len() * (self.d + 1)           // centroids + radii
-            + self.coarse.len() * (self.d + 1);
-        let meta = self.chunks.len() * (2 * 8 + 8)      // start/len/cluster
-            + self.fine.iter().map(|f| f.chunks.len() * 8 + 24).sum::<usize>()
-            + self.coarse.iter().map(|u| u.clusters.len() * 8 + 8).sum::<usize>();
+        let f32s = self.num_chunks() * self.d          // reps
+            + self.num_clusters() * (self.d + 1)       // centroids + radii
+            + self.num_units() * (self.d + 1);
+        let meta = self.num_chunks() * (2 * 8 + 8)      // start/len/cluster
+            + self.fine_members.iter().map(|f| f.len() * 8 + 24).sum::<usize>()
+            + self.coarse_members.iter().map(|u| u.len() * 8 + 8).sum::<usize>();
         f32s * 4 + meta
     }
 
     /// Structural invariants (used by tests and debug builds):
-    /// partition of chunks into clusters, clusters into units, and
-    /// covering-radius soundness at both levels.
+    /// partition of chunks into clusters, clusters into units, covering-
+    /// radius soundness at both levels, and SoA array-length consistency.
     pub fn check_invariants(&self) -> Result<(), String> {
-        let mut seen = vec![false; self.chunks.len()];
-        for (fi, f) in self.fine.iter().enumerate() {
-            if f.chunks.is_empty() {
+        let (m, l, p) = (self.num_chunks(), self.num_clusters(), self.num_units());
+        if self.chunk_reps.len() != m * self.d
+            || self.chunk_starts.len() != m
+            || self.chunk_clusters.len() != m
+        {
+            return Err("leaf SoA arrays inconsistent".into());
+        }
+        if self.fine_centroids.len() != l * self.d
+            || self.fine_token_counts.len() != l
+            || self.fine_units.len() != l
+            || self.fine_members.len() != l
+        {
+            return Err("fine SoA arrays inconsistent".into());
+        }
+        if self.coarse_centroids.len() != p * self.d || self.coarse_members.len() != p {
+            return Err("coarse SoA arrays inconsistent".into());
+        }
+        let mut seen = vec![false; m];
+        for fi in 0..l {
+            if self.fine_members[fi].is_empty() {
                 return Err(format!("fine cluster {fi} empty"));
             }
             let mut tokens = 0;
-            for &ci in &f.chunks {
+            for &ci in &self.fine_members[fi] {
                 if seen[ci] {
                     return Err(format!("chunk {ci} in two clusters"));
                 }
                 seen[ci] = true;
-                if self.chunks[ci].cluster != fi {
+                if self.chunk_clusters[ci] != fi {
                     return Err(format!("chunk {ci} back-pointer wrong"));
                 }
-                let dist = linalg::dist(&self.chunks[ci].rep, &f.centroid);
-                if dist > f.radius + 1e-4 {
-                    return Err(format!("cluster {fi} radius {} < dist {dist}", f.radius));
+                let dist = linalg::dist(self.chunk_rep(ci), self.fine_centroid(fi));
+                if dist > self.fine_radii[fi] + 1e-4 {
+                    return Err(format!(
+                        "cluster {fi} radius {} < dist {dist}",
+                        self.fine_radii[fi]
+                    ));
                 }
-                tokens += self.chunks[ci].len;
+                tokens += self.chunk_lens[ci];
             }
-            if tokens != f.tokens {
+            if tokens != self.fine_token_counts[fi] {
                 return Err(format!("cluster {fi} token count stale"));
             }
         }
         if !seen.iter().all(|&s| s) {
             return Err("orphan chunk".into());
         }
-        let mut fseen = vec![false; self.fine.len()];
-        for (ui, u) in self.coarse.iter().enumerate() {
-            for &fi in &u.clusters {
+        let mut fseen = vec![false; l];
+        for ui in 0..p {
+            for &fi in &self.coarse_members[ui] {
                 if fseen[fi] {
                     return Err(format!("cluster {fi} in two units"));
                 }
                 fseen[fi] = true;
-                if self.fine[fi].unit != ui {
+                if self.fine_units[fi] != ui {
                     return Err(format!("cluster {fi} unit back-pointer wrong"));
                 }
-                let dist = linalg::dist(&self.fine[fi].centroid, &u.centroid);
-                if dist > u.radius + 1e-4 {
-                    return Err(format!("unit {ui} radius {} < dist {dist}", u.radius));
+                let dist = linalg::dist(self.fine_centroid(fi), self.coarse_centroid(ui));
+                if dist > self.coarse_radii[ui] + 1e-4 {
+                    return Err(format!(
+                        "unit {ui} radius {} < dist {dist}",
+                        self.coarse_radii[ui]
+                    ));
                 }
             }
         }
@@ -421,17 +552,17 @@ mod tests {
         for _ in 0..50 {
             let q: Vec<f32> = rng.normal_vec(16);
             let qn = linalg::norm(&q);
-            for f in &idx.fine {
-                let ub = upper_bound(&q, qn, &f.centroid, f.radius);
-                for &ci in &f.chunks {
-                    let dp = linalg::dot(&q, &idx.chunks[ci].rep);
+            for fi in 0..idx.num_clusters() {
+                let ub = upper_bound(&q, qn, idx.fine_centroid(fi), idx.fine_radii[fi]);
+                for &ci in &idx.fine_members[fi] {
+                    let dp = linalg::dot(&q, idx.chunk_rep(ci));
                     assert!(dp <= ub + 1e-3, "cluster UB violated: {dp} > {ub}");
                 }
             }
-            for u in &idx.coarse {
-                let ub = upper_bound(&q, qn, &u.centroid, u.radius);
-                for &fi in &u.clusters {
-                    let dp = linalg::dot(&q, &idx.fine[fi].centroid);
+            for ui in 0..idx.num_units() {
+                let ub = upper_bound(&q, qn, idx.coarse_centroid(ui), idx.coarse_radii[ui]);
+                for &fi in &idx.coarse_members[ui] {
+                    let dp = linalg::dot(&q, idx.fine_centroid(fi));
                     assert!(dp <= ub + 1e-3, "unit UB violated: {dp} > {ub}");
                 }
             }
@@ -465,14 +596,13 @@ mod tests {
             assert!(toks.len() <= budget, "{} > {budget}", toks.len());
             // atomicity: every retrieved token's chunk is fully retrieved
             let set: std::collections::HashSet<usize> = toks.iter().copied().collect();
-            for c in &idx.chunks {
-                let inside = (c.start..c.end()).filter(|t| set.contains(t)).count();
+            for ci in 0..idx.num_chunks() {
+                let (s, e) = (idx.chunk_starts[ci], idx.chunk_end(ci));
+                let inside = (s..e).filter(|t| set.contains(t)).count();
                 assert!(
-                    inside == 0 || inside == c.len,
-                    "chunk [{}, {}) partially retrieved ({inside}/{})",
-                    c.start,
-                    c.end(),
-                    c.len
+                    inside == 0 || inside == idx.chunk_lens[ci],
+                    "chunk [{s}, {e}) partially retrieved ({inside}/{})",
+                    idx.chunk_lens[ci]
                 );
             }
         }
@@ -508,6 +638,25 @@ mod tests {
         let res = idx.search_clusters(&q, 3, 10);
         for w in res.windows(2) {
             assert!(w[0].1 >= w[1].1);
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_identical_to_fresh() {
+        // the allocation-free entry points must return byte-identical
+        // results whether the scratch is fresh or heavily reused
+        let (idx, ..) = build_topic_index(9, 6, 24, 16);
+        let mut rng = Rng::new(21);
+        let mut reused = SelectScratch::new();
+        for _ in 0..25 {
+            let q = rng.normal_vec(16);
+            let budget = rng.range(8, 256);
+            idx.select_tokens_into(&q, 4, 32, budget, &mut reused);
+            let fresh = idx.select_tokens(&q, 4, 32, budget);
+            assert_eq!(reused.tokens, fresh);
+            idx.select_tokens_flat_into(&q, budget, &mut reused);
+            let fresh_flat = idx.select_tokens_flat(&q, budget);
+            assert_eq!(reused.tokens, fresh_flat);
         }
     }
 

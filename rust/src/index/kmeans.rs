@@ -79,21 +79,16 @@ pub fn spherical_kmeans(points: &[f32], d: usize, k: usize, iters: usize, seed: 
     }
 
     // ---- Lloyd iterations (inner-product assignment) ----------------------
+    // The centroid matrix is already SoA (`[k, d]` row-major), so each
+    // point's assignment is one blocked GEMV + argmax; `scores` is the
+    // only scratch buffer and is reused across all iterations.
     let mut assignment = vec![0usize; n];
+    let mut scores = vec![0.0f32; k];
     for _ in 0..iters.max(1) {
         // assign
         for i in 0..n {
-            let p = point(i);
-            let mut best = 0;
-            let mut best_dot = f32::NEG_INFINITY;
-            for c in 0..k {
-                let dp = linalg::dot(p, &centroids[c * d..(c + 1) * d]);
-                if dp > best_dot {
-                    best_dot = dp;
-                    best = c;
-                }
-            }
-            assignment[i] = best;
+            linalg::matvec(&centroids, d, point(i), &mut scores);
+            assignment[i] = linalg::argmax(&scores);
         }
         // update
         let mut sums = vec![0.0f32; k * d];
@@ -110,7 +105,7 @@ pub fn spherical_kmeans(points: &[f32], d: usize, k: usize, iters: usize, seed: 
                     .max_by(|&a, &b| {
                         let da = linalg::dist_sq(point(a), &centroids[assignment[a] * d..(assignment[a] + 1) * d]);
                         let db = linalg::dist_sq(point(b), &centroids[assignment[b] * d..(assignment[b] + 1) * d]);
-                        da.partial_cmp(&db).unwrap()
+                        da.total_cmp(&db)
                     })
                     .unwrap();
                 centroids[c * d..(c + 1) * d].copy_from_slice(point(far));
@@ -129,17 +124,8 @@ pub fn spherical_kmeans(points: &[f32], d: usize, k: usize, iters: usize, seed: 
     }
     // final assignment pass so `assignment` matches returned centroids
     for i in 0..n {
-        let p = point(i);
-        let mut best = 0;
-        let mut best_dot = f32::NEG_INFINITY;
-        for c in 0..k {
-            let dp = linalg::dot(p, &centroids[c * d..(c + 1) * d]);
-            if dp > best_dot {
-                best_dot = dp;
-                best = c;
-            }
-        }
-        assignment[i] = best;
+        linalg::matvec(&centroids, d, point(i), &mut scores);
+        assignment[i] = linalg::argmax(&scores);
     }
     KMeansResult { centroids, assignment, k, d }
 }

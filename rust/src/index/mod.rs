@@ -20,5 +20,5 @@ pub mod kmeans;
 pub mod reps;
 pub mod update;
 
-pub use hierarchy::{CoarseUnit, FineCluster, HierarchicalIndex, IndexChunk, IndexParams};
+pub use hierarchy::{HierarchicalIndex, IndexParams};
 pub use reps::{max_pool_rep, mean_pool_rep, KeySource, Pooling};

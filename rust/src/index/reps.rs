@@ -18,6 +18,14 @@ pub trait KeySource {
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// The contiguous row-major `[len, d]` backing store, if this source
+    /// is flat — lets scorers run one blocked GEMV
+    /// ([`crate::linalg::matvec`]) instead of `len` per-row dots. Paged
+    /// sources return `None` (the default) and fall back to per-row
+    /// scoring.
+    fn as_rows(&self) -> Option<&[f32]> {
+        None
+    }
 }
 
 /// Flat `[N, d]` row-major key matrix.
@@ -44,6 +52,10 @@ impl KeySource for FlatKeys<'_> {
 
     fn len(&self) -> usize {
         self.data.len() / self.d
+    }
+
+    fn as_rows(&self) -> Option<&[f32]> {
+        Some(self.data)
     }
 }
 

@@ -6,8 +6,10 @@
 //! average (then re-normalized — spherical geometry), and radii undergo
 //! monotonic expansion that also absorbs the centroid shift, preserving
 //! the covering invariant `∀v ∈ cluster: ‖v − μ‖ ≤ r` that Eqn. 2's
-//! soundness rests on. Cost is O(L·d) per dynamic chunk — measured at
-//! < 1 % of decode time (EXPERIMENTS.md Fig. 5b).
+//! soundness rests on. All updates operate **in place** on the SoA tier
+//! matrices (appending a row is an `extend_from_slice` on the flat
+//! matrix; a centroid move rewrites one row). Cost is O(L·d) per dynamic
+//! chunk — measured at < 1 % of decode time (EXPERIMENTS.md §Perf).
 
 use super::hierarchy::HierarchicalIndex;
 use super::reps::{pool_rep, KeySource};
@@ -103,142 +105,132 @@ impl HierarchicalIndex {
 
     /// Graft with a precomputed representative (synthetic workloads).
     pub fn graft_rep(&mut self, span: Chunk, rep: Vec<f32>) -> (usize, usize) {
-        if self.fine.is_empty() {
+        if self.num_clusters() == 0 {
             // no index yet: bootstrap a single cluster + unit
             return self.bootstrap(span, rep);
         }
-        // nearest coarse unit by centroid similarity, then nearest fine
-        // cluster within it (paper: "assigned to the nearest existing fine
-        // cluster and coarse unit based on centroid proximity")
-        let u_best = (0..self.coarse.len())
-            .max_by(|&a, &b| {
-                let da = linalg::dot(&rep, &self.coarse[a].centroid);
-                let db = linalg::dot(&rep, &self.coarse[b].centroid);
-                da.partial_cmp(&db).unwrap()
-            })
-            .unwrap();
-        let f_best = self.coarse[u_best]
-            .clusters
-            .iter()
-            .copied()
-            .max_by(|&a, &b| {
-                let da = linalg::dot(&rep, &self.fine[a].centroid);
-                let db = linalg::dot(&rep, &self.fine[b].centroid);
-                da.partial_cmp(&db).unwrap()
-            })
-            .unwrap();
+        // nearest coarse unit by centroid similarity (one GEMV over the
+        // unit matrix), then nearest fine cluster within it (paper:
+        // "assigned to the nearest existing fine cluster and coarse unit
+        // based on centroid proximity")
+        let p = self.num_units();
+        self.graft_scores.clear();
+        self.graft_scores.resize(p, 0.0);
+        linalg::matvec(&self.coarse_centroids, self.d, &rep, &mut self.graft_scores);
+        let u_best = linalg::argmax(&self.graft_scores);
+        let mut f_best = self.coarse_members[u_best][0];
+        let mut best_dot = f32::NEG_INFINITY;
+        for &f in &self.coarse_members[u_best] {
+            let dp = linalg::dot(&rep, self.fine_centroid(f));
+            if dp > best_dot {
+                best_dot = dp;
+                f_best = f;
+            }
+        }
 
         // Sprout: a dynamic chunk that is far from every existing
         // centroid would only inflate radii (loosening every UB bound in
         // that cluster); give it a fresh cluster under the nearest
         // coarse unit instead.
-        if linalg::dot(&rep, &self.fine[f_best].centroid) < self.params.sprout_threshold {
-            let ci = self.chunks.len();
-            let fi = self.fine.len();
-            self.chunks.push(super::hierarchy::IndexChunk {
-                start: span.start,
-                len: span.len,
-                rep: rep.clone(),
-                cluster: fi,
-            });
-            self.fine.push(super::hierarchy::FineCluster {
-                centroid: rep.clone(),
-                radius: 0.0,
-                chunks: vec![ci],
-                unit: u_best,
-                tokens: span.len,
-            });
-            let d_to_unit = linalg::dist(&rep, &self.coarse[u_best].centroid);
-            let cu = &mut self.coarse[u_best];
-            cu.clusters.push(fi);
-            cu.radius = cu.radius.max(d_to_unit);
+        if best_dot < self.params.sprout_threshold {
+            let ci = self.num_chunks();
+            let fi = self.num_clusters();
+            self.chunk_reps.extend_from_slice(&rep);
+            self.chunk_starts.push(span.start);
+            self.chunk_lens.push(span.len);
+            self.chunk_clusters.push(fi);
+            self.fine_centroids.extend_from_slice(&rep);
+            self.fine_radii.push(0.0);
+            self.fine_token_counts.push(span.len);
+            self.fine_units.push(u_best);
+            self.fine_members.push(vec![ci]);
+            let d_to_unit = linalg::dist(&rep, self.coarse_centroid(u_best));
+            self.coarse_members[u_best].push(fi);
+            if d_to_unit > self.coarse_radii[u_best] {
+                self.coarse_radii[u_best] = d_to_unit;
+            }
             return (u_best, fi);
         }
 
-        // --- leaf insert -----------------------------------------------
-        let ci = self.chunks.len();
-        self.chunks.push(super::hierarchy::IndexChunk {
-            start: span.start,
-            len: span.len,
-            rep: rep.clone(),
-            cluster: f_best,
-        });
+        // --- leaf insert: append a row to the rep matrix ----------------
+        let ci = self.num_chunks();
+        self.chunk_reps.extend_from_slice(&rep);
+        self.chunk_starts.push(span.start);
+        self.chunk_lens.push(span.len);
+        self.chunk_clusters.push(f_best);
 
         // --- fine cluster: moving-average centroid + radius expansion ---
-        let n = self.fine[f_best].chunks.len() as f32;
-        let mut new_centroid = self.fine[f_best].centroid.clone();
-        linalg::scale(&mut new_centroid, n);
-        linalg::add_assign(&mut new_centroid, &rep);
-        linalg::scale(&mut new_centroid, 1.0 / (n + 1.0));
-        linalg::normalize(&mut new_centroid);
-        let shift = linalg::dist(&self.fine[f_best].centroid, &new_centroid);
-        let new_dist = linalg::dist(&rep, &new_centroid);
+        // (row rewritten in place; the old row is snapshotted into the
+        // reusable graft buffer to bound the shift)
+        let n = self.fine_members[f_best].len() as f32;
+        let row_range = f_best * self.d..(f_best + 1) * self.d;
+        self.graft_tmp.clear();
+        let snapshot = &self.fine_centroids[row_range.clone()];
+        self.graft_tmp.extend_from_slice(snapshot);
         {
-            let f = &mut self.fine[f_best];
-            // monotonic expansion: old radius inflated by the centroid
-            // shift still covers all previous members (triangle ineq.),
-            // and the new member is covered explicitly.
-            f.radius = (f.radius + shift).max(new_dist);
-            f.centroid = new_centroid;
-            f.chunks.push(ci);
-            f.tokens += span.len;
+            let row = &mut self.fine_centroids[row_range];
+            for (x, r) in row.iter_mut().zip(rep.iter()) {
+                *x = (*x * n + r) / (n + 1.0);
+            }
+            linalg::normalize(row);
         }
+        let shift = linalg::dist(&self.graft_tmp, self.fine_centroid(f_best));
+        let new_dist = linalg::dist(&rep, self.fine_centroid(f_best));
+        // monotonic expansion: old radius inflated by the centroid shift
+        // still covers all previous members (triangle ineq.), and the new
+        // member is covered explicitly.
+        self.fine_radii[f_best] = (self.fine_radii[f_best] + shift).max(new_dist);
+        self.fine_members[f_best].push(ci);
+        self.fine_token_counts[f_best] += span.len;
 
         // --- coarse unit: absorb the cluster's new centroid -------------
-        let u = self.fine[f_best].unit;
-        let d_to_unit = linalg::dist(&self.fine[f_best].centroid, &self.coarse[u].centroid);
-        let cu = &mut self.coarse[u];
-        cu.radius = cu.radius.max(d_to_unit);
+        let u = self.fine_units[f_best];
+        let d_to_unit = linalg::dist(self.fine_centroid(f_best), self.coarse_centroid(u));
+        if d_to_unit > self.coarse_radii[u] {
+            self.coarse_radii[u] = d_to_unit;
+        }
         (u, f_best)
     }
 
     fn bootstrap(&mut self, span: Chunk, rep: Vec<f32>) -> (usize, usize) {
-        self.chunks.push(super::hierarchy::IndexChunk {
-            start: span.start,
-            len: span.len,
-            rep: rep.clone(),
-            cluster: 0,
-        });
-        self.fine.push(super::hierarchy::FineCluster {
-            centroid: rep.clone(),
-            radius: 0.0,
-            chunks: vec![self.chunks.len() - 1],
-            unit: 0,
-            tokens: span.len,
-        });
-        self.coarse.push(super::hierarchy::CoarseUnit {
-            centroid: rep,
-            radius: 0.0,
-            clusters: vec![self.fine.len() - 1],
-        });
+        self.chunk_starts.push(span.start);
+        self.chunk_lens.push(span.len);
+        self.chunk_clusters.push(0);
+        self.fine_radii.push(0.0);
+        self.fine_token_counts.push(span.len);
+        self.fine_units.push(0);
+        self.fine_members.push(vec![0]);
+        self.coarse_radii.push(0.0);
+        self.coarse_members.push(vec![0]);
+        self.chunk_reps.extend_from_slice(&rep);
+        self.fine_centroids.extend_from_slice(&rep);
+        self.coarse_centroids.extend(rep);
         (0, 0)
     }
 
     /// Full re-clustering over current chunk reps (the expensive baseline
     /// the lazy strategy avoids; `benches/ablation_update.rs`).
     pub fn recluster(&mut self) {
-        if self.chunks.is_empty() {
+        if self.num_chunks() == 0 {
             return;
         }
-        let spans: Vec<Chunk> = self
-            .chunks
-            .iter()
-            .map(|c| Chunk { start: c.start, len: c.len })
+        let spans: Vec<Chunk> = (0..self.num_chunks())
+            .map(|ci| Chunk { start: self.chunk_starts[ci], len: self.chunk_lens[ci] })
             .collect();
-        let reps: Vec<Vec<f32>> = self.chunks.iter().map(|c| c.rep.clone()).collect();
-        let rebuilt = Self::build_from_reps(self.d, self.params.clone(), &spans, reps);
-        *self = rebuilt;
+        let reps = self.chunk_reps.clone();
+        *self = Self::build_from_reps(self.d, self.params.clone(), &spans, reps);
     }
 
-    /// Build from precomputed representatives (synthetic workloads + the
-    /// re-clustering path, which must not re-pool token keys).
+    /// Build from precomputed representatives (row-major `[spans.len(),
+    /// d]`) — synthetic workloads + the re-clustering path, which must
+    /// not re-pool token keys.
     pub fn build_from_reps(
         d: usize,
         params: super::hierarchy::IndexParams,
         spans: &[Chunk],
-        reps: Vec<Vec<f32>>,
+        reps: Vec<f32>,
     ) -> HierarchicalIndex {
-        assert_eq!(spans.len(), reps.len());
+        assert_eq!(spans.len() * d, reps.len());
         struct RepSource {
             flat: Vec<f32>,
             d: usize,
@@ -253,20 +245,23 @@ impl HierarchicalIndex {
             fn len(&self) -> usize {
                 self.flat.len() / self.d
             }
+            fn as_rows(&self) -> Option<&[f32]> {
+                Some(&self.flat)
+            }
         }
         // Trick: treat each chunk's rep as a single "token" so build()
         // pools it back to itself (mean of one normalized vector).
-        let flat: Vec<f32> = reps.iter().flat_map(|r| r.iter().copied()).collect();
         let unit_spans: Vec<Chunk> = (0..spans.len()).map(|i| Chunk { start: i, len: 1 }).collect();
-        let mut idx = HierarchicalIndex::build(&RepSource { flat, d }, &unit_spans, params);
+        let mut idx = HierarchicalIndex::build(&RepSource { flat: reps, d }, &unit_spans, params);
         // restore real token spans
-        for (c, s) in idx.chunks.iter_mut().zip(spans) {
-            c.start = s.start;
-            c.len = s.len;
+        for (i, s) in spans.iter().enumerate() {
+            idx.chunk_starts[i] = s.start;
+            idx.chunk_lens[i] = s.len;
         }
         // fix cached token counts
-        for f in idx.fine.iter_mut() {
-            f.tokens = f.chunks.iter().map(|&ci| idx.chunks[ci].len).sum();
+        for fi in 0..idx.num_clusters() {
+            let tokens: usize = idx.fine_members[fi].iter().map(|&ci| idx.chunk_lens[ci]).sum();
+            idx.fine_token_counts[fi] = tokens;
         }
         idx
     }
@@ -337,16 +332,16 @@ mod tests {
     fn graft_lands_in_most_similar_cluster() {
         let mut idx = small_index(2, 3, 16, 8);
         // use an existing cluster centroid as the new rep: must land there
-        let target = 1.min(idx.fine.len() - 1);
-        let rep = idx.fine[target].centroid.clone();
+        let target = 1.min(idx.num_clusters() - 1);
+        let rep = idx.fine_centroid(target).to_vec();
         let (_, f) = idx.graft_rep(Chunk { start: 10_000, len: 4 }, rep.clone());
-        let got = linalg::dot(&rep, &idx.fine[f].centroid);
-        for (i, c) in idx.fine.iter().enumerate() {
+        let got = linalg::dot(&rep, idx.fine_centroid(f));
+        for i in 0..idx.num_clusters() {
             if i != f {
                 // allow ties but never a strictly more similar other cluster
                 // (compare against pre-update centroids is impractical; the
                 // moving average only moves toward rep, preserving argmax)
-                assert!(linalg::dot(&rep, &c.centroid) <= got + 1e-4);
+                assert!(linalg::dot(&rep, idx.fine_centroid(i)) <= got + 1e-4);
             }
         }
     }
@@ -362,10 +357,10 @@ mod tests {
         for _ in 0..30 {
             let q = rng.normal_vec(8);
             let qn = linalg::norm(&q);
-            for f in &idx.fine {
-                let ub = upper_bound(&q, qn, &f.centroid, f.radius);
-                for &ci in &f.chunks {
-                    let dp = linalg::dot(&q, &idx.chunks[ci].rep);
+            for fi in 0..idx.num_clusters() {
+                let ub = upper_bound(&q, qn, idx.fine_centroid(fi), idx.fine_radii[fi]);
+                for &ci in &idx.fine_members[fi] {
+                    let dp = linalg::dot(&q, idx.chunk_rep(ci));
                     assert!(dp <= ub + 1e-3, "UB broken after grafts: {dp} > {ub}");
                 }
             }
@@ -374,13 +369,7 @@ mod tests {
 
     #[test]
     fn bootstrap_from_empty() {
-        let mut idx = HierarchicalIndex {
-            d: 4,
-            params: IndexParams::default(),
-            chunks: Vec::new(),
-            fine: Vec::new(),
-            coarse: Vec::new(),
-        };
+        let mut idx = HierarchicalIndex::empty(4, IndexParams::default());
         let (u, f) = idx.graft_rep(Chunk { start: 0, len: 4 }, vec![1.0, 0.0, 0.0, 0.0]);
         assert_eq!((u, f), (0, 0));
         idx.check_invariants().unwrap();
@@ -414,10 +403,10 @@ mod tests {
             idx.graft_rep(Chunk { start: base + i, len: 1 }, rng.unit_vec(8));
         }
         let mean_r_before: f32 =
-            idx.fine.iter().map(|f| f.radius).sum::<f32>() / idx.fine.len() as f32;
+            idx.fine_radii.iter().sum::<f32>() / idx.num_clusters() as f32;
         idx.recluster();
         let mean_r_after: f32 =
-            idx.fine.iter().map(|f| f.radius).sum::<f32>() / idx.fine.len() as f32;
+            idx.fine_radii.iter().sum::<f32>() / idx.num_clusters() as f32;
         assert!(
             mean_r_after <= mean_r_before,
             "recluster did not tighten: {mean_r_after} > {mean_r_before}"
@@ -455,13 +444,13 @@ mod tests {
                 linalg::normalize(&mut rep);
                 idx.graft_rep(Chunk { start: base + i * 4, len: 4 }, rep);
                 idx.check_invariants().map_err(|e| format!("after graft {i}: {e}"))?;
-                for (fi, f) in idx.fine.iter().enumerate() {
-                    for &ci in &f.chunks {
-                        let dist = linalg::dist(&idx.chunks[ci].rep, &f.centroid);
+                for fi in 0..idx.num_clusters() {
+                    for &ci in &idx.fine_members[fi] {
+                        let dist = linalg::dist(idx.chunk_rep(ci), idx.fine_centroid(fi));
                         prop_assert!(
-                            dist <= f.radius + 1e-4,
+                            dist <= idx.fine_radii[fi] + 1e-4,
                             "graft {i} cluster {fi}: ‖v−μ‖ {dist} > r {}",
-                            f.radius
+                            idx.fine_radii[fi]
                         );
                     }
                 }

@@ -1,29 +1,15 @@
 //! Dense vector math on `f32` slices — the numeric substrate for the
 //! hierarchical index (centroids, radii, UB scores) and the attention
-//! oracle. Hot functions are written as straight-line loops the compiler
-//! auto-vectorizes; `dot` is the single hottest L3 operation (profiled in
-//! EXPERIMENTS.md §Perf).
+//! oracle. The three hot kernels (`dot`, `dist_sq`, `matvec`) dispatch
+//! once at startup to explicit AVX2+FMA implementations in [`simd`] with
+//! portable scalar fallbacks (profiled in EXPERIMENTS.md §Perf).
 
-/// Dot product.
+pub mod simd;
+
+/// Dot product (SIMD-dispatched; the single hottest L3 operation).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation: breaks the sequential FP dependency
-    // chain so LLVM vectorizes; ~3.5x over the naive loop (see §Perf).
-    let mut acc = [0.0f32; 4];
-    let chunks = a.len() / 4;
-    for i in 0..chunks {
-        let j = i * 4;
-        acc[0] += a[j] * b[j];
-        acc[1] += a[j + 1] * b[j + 1];
-        acc[2] += a[j + 2] * b[j + 2];
-        acc[3] += a[j + 3] * b[j + 3];
-    }
-    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
 /// Euclidean norm.
@@ -32,16 +18,18 @@ pub fn norm(a: &[f32]) -> f32 {
     dot(a, a).sqrt()
 }
 
-/// Squared Euclidean distance.
+/// Squared Euclidean distance (SIMD-dispatched).
 #[inline]
 pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    let mut s = 0.0;
-    for i in 0..a.len() {
-        let d = a[i] - b[i];
-        s += d * d;
-    }
-    s
+    simd::dist_sq(a, b)
+}
+
+/// Blocked GEMV (SIMD-dispatched): `out[r] = mat[r] · q` for every row of
+/// the row-major `[out.len(), d]` matrix. This is the one-call scoring
+/// primitive all SoA index tiers and page policies run through.
+#[inline]
+pub fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    simd::matvec(mat, d, q, out)
 }
 
 /// Euclidean distance.
@@ -134,9 +122,8 @@ pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
         fn cmp(&self, o: &Self) -> Ordering {
             // Reverse so BinaryHeap (max-heap) pops the smallest score;
             // ties broken to evict the *larger* index first (stability).
-            o.0.partial_cmp(&self.0)
-                .unwrap_or(Ordering::Equal)
-                .then(self.1.cmp(&o.1))
+            // total_cmp: a NaN score must never panic the server.
+            o.0.total_cmp(&self.0).then(self.1.cmp(&o.1))
         }
     }
 
@@ -156,8 +143,28 @@ pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
         }
     }
     let mut out: Vec<(f32, usize)> = heap.into_iter().map(|e| (e.0, e.1)).collect();
-    out.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    out.sort_by(|a, b| b.0.total_cmp(&a.0).then(a.1.cmp(&b.1)));
     out.into_iter().map(|(_, i)| i).collect()
+}
+
+/// Allocation-free partial top-`k`: fills `order` with the indices of the
+/// `k` largest scores, descending, ties to the smaller index (the same
+/// order [`top_k`] produces). Uses `select_nth_unstable` — O(n + k log k)
+/// instead of a full sort — which is what makes decode-time candidate
+/// ranking cheap when only the top-`k` survive.
+pub fn top_k_partial(scores: &[f32], k: usize, order: &mut Vec<usize>) {
+    order.clear();
+    let k = k.min(scores.len());
+    if k == 0 {
+        return;
+    }
+    order.extend(0..scores.len());
+    let desc = |&a: &usize, &b: &usize| scores[b].total_cmp(&scores[a]).then(a.cmp(&b));
+    if k < order.len() {
+        order.select_nth_unstable_by(k - 1, desc);
+        order.truncate(k);
+    }
+    order.sort_unstable_by(desc);
 }
 
 /// argmax; panics on empty input.
@@ -246,10 +253,35 @@ mod tests {
             let s: Vec<f32> = (0..n).map(|_| g.f32_in(-1.0, 1.0)).collect();
             let got = top_k(&s, k);
             let mut idx: Vec<usize> = (0..n).collect();
-            idx.sort_by(|&a, &b| s[b].partial_cmp(&s[a]).unwrap().then(a.cmp(&b)));
+            idx.sort_by(|&a, &b| s[b].total_cmp(&s[a]).then(a.cmp(&b)));
             prop_assert!(got == idx[..k], "got {:?} want {:?}", got, &idx[..k]);
+            let mut part = Vec::new();
+            top_k_partial(&s, k, &mut part);
+            prop_assert!(part == got, "partial {:?} != heap {:?}", part, got);
             Ok(())
         });
+    }
+
+    #[test]
+    fn top_k_partial_reuses_buffer() {
+        let s = [0.1, 0.9, 0.5, 0.7, 0.3];
+        let mut buf = vec![42usize; 9];
+        top_k_partial(&s, 3, &mut buf);
+        assert_eq!(buf, vec![1, 3, 2]);
+        top_k_partial(&s, 0, &mut buf);
+        assert!(buf.is_empty());
+        top_k_partial(&s, 99, &mut buf);
+        assert_eq!(buf.len(), 5);
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic() {
+        let s = [0.5, f32::NAN, 0.7];
+        let t = top_k(&s, 2);
+        assert_eq!(t.len(), 2);
+        let mut buf = Vec::new();
+        top_k_partial(&s, 2, &mut buf);
+        assert_eq!(buf.len(), 2);
     }
 
     #[test]

@@ -1,0 +1,382 @@
+//! Explicit SIMD kernels for the scoring substrate (EXPERIMENTS.md §Perf).
+//!
+//! Three kernels carry essentially all centroid/page scoring work in the
+//! decode hot path: `dot` (query·centroid), `dist_sq` (radius checks and
+//! k-means), and `matvec` (one query against an `n×d` row-major matrix —
+//! the blocked GEMV every SoA scoring tier runs through). Each has a
+//! portable scalar reference implementation and an AVX2+FMA variant; the
+//! backend is chosen **once** per process with runtime feature detection
+//! (`is_x86_feature_detected!`), so there is no per-call branching beyond
+//! a single predictable load.
+//!
+//! The scalar kernels are `pub` so property tests can assert that the
+//! SIMD paths match them within floating-point tolerance across aligned
+//! and remainder lengths (`simd_matches_scalar_*` below).
+
+use std::sync::OnceLock;
+
+/// Kernel family selected at startup.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// Portable unrolled loops (every platform; the reference semantics).
+    Scalar,
+    /// AVX2 + FMA `std::arch` intrinsics (x86_64 with runtime support).
+    Avx2Fma,
+}
+
+impl Backend {
+    /// Human-readable name (bench JSON + startup logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Scalar => "scalar",
+            Backend::Avx2Fma => "avx2+fma",
+        }
+    }
+}
+
+/// The process-wide kernel backend, detected on first use.
+pub fn backend() -> Backend {
+    static BACKEND: OnceLock<Backend> = OnceLock::new();
+    *BACKEND.get_or_init(detect)
+}
+
+fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2")
+            && std::arch::is_x86_feature_detected!("fma")
+        {
+            return Backend::Avx2Fma;
+        }
+    }
+    Backend::Scalar
+}
+
+// ---------------------------------------------------------------------------
+// scalar reference kernels
+// ---------------------------------------------------------------------------
+
+/// Scalar dot product: 4-way unrolled accumulation (breaks the sequential
+/// FP dependency chain so LLVM can auto-vectorize the remainder-free part).
+pub fn scalar_dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += a[j] * b[j];
+        acc[1] += a[j + 1] * b[j + 1];
+        acc[2] += a[j + 2] * b[j + 2];
+        acc[3] += a[j + 3] * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Scalar squared Euclidean distance.
+pub fn scalar_dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let d = a[i] - b[i];
+        s += d * d;
+    }
+    s
+}
+
+/// Scalar GEMV reference: `out[r] = mat[r*d..][..d] · q` for every row.
+pub fn scalar_matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(mat.len(), out.len() * d);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = scalar_dot(&mat[r * d..(r + 1) * d], q);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// AVX2 + FMA kernels
+// ---------------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of an 8-lane f32 register.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn hsum256(v: __m256) -> f32 {
+        let hi = _mm256_extractf128_ps(v, 1);
+        let lo = _mm256_castps256_ps128(v);
+        let s4 = _mm_add_ps(hi, lo);
+        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0x55));
+        _mm_cvtss_f32(s1)
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            acc1 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i + 8)),
+                _mm256_loadu_ps(pb.add(i + 8)),
+                acc1,
+            );
+            i += 16;
+        }
+        if i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(
+                _mm256_loadu_ps(pa.add(i)),
+                _mm256_loadu_ps(pb.add(i)),
+                acc0,
+            );
+            i += 8;
+        }
+        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += *pa.add(i) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+            acc = _mm256_fmadd_ps(d, d, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            let d = *pa.add(i) - *pb.add(i);
+            s += d * d;
+            i += 1;
+        }
+        s
+    }
+
+    /// Blocked GEMV: 4 rows share each query load (the query stays in
+    /// registers while 4 row streams flow past it).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available, `q.len() == d` and
+    /// `mat.len() == out.len() * d`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        let rows = out.len();
+        let pq = q.as_ptr();
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let p0 = mat.as_ptr().add(r * d);
+            let p1 = mat.as_ptr().add((r + 1) * d);
+            let p2 = mat.as_ptr().add((r + 2) * d);
+            let p3 = mat.as_ptr().add((r + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut j = 0usize;
+            while j + 8 <= d {
+                let qv = _mm256_loadu_ps(pq.add(j));
+                a0 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(j)), qv, a0);
+                a1 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(j)), qv, a1);
+                a2 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(j)), qv, a2);
+                a3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(j)), qv, a3);
+                j += 8;
+            }
+            let mut s0 = hsum256(a0);
+            let mut s1 = hsum256(a1);
+            let mut s2 = hsum256(a2);
+            let mut s3 = hsum256(a3);
+            while j < d {
+                let qj = *pq.add(j);
+                s0 += *p0.add(j) * qj;
+                s1 += *p1.add(j) * qj;
+                s2 += *p2.add(j) * qj;
+                s3 += *p3.add(j) * qj;
+                j += 1;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+            r += 4;
+        }
+        while r < rows {
+            out[r] = dot(&mat[r * d..(r + 1) * d], q);
+            r += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// dispatching entry points
+// ---------------------------------------------------------------------------
+
+/// Dot product on the selected backend.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma at startup; lengths match.
+            return unsafe { avx2::dot(a, b) };
+        }
+    }
+    scalar_dot(a, b)
+}
+
+/// Squared Euclidean distance on the selected backend.
+#[inline]
+pub fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma at startup; lengths match.
+            return unsafe { avx2::dist_sq(a, b) };
+        }
+    }
+    scalar_dist_sq(a, b)
+}
+
+/// Blocked GEMV on the selected backend: scores `out.len()` rows of the
+/// row-major `[rows, d]` matrix `mat` against query `q` in one call.
+#[inline]
+pub fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+    assert_eq!(q.len(), d, "matvec query dim mismatch");
+    assert_eq!(mat.len(), out.len() * d, "matvec matrix shape mismatch");
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma at startup; shapes checked.
+            unsafe { avx2::matvec(mat, d, q, out) };
+            return;
+        }
+    }
+    scalar_matvec(mat, d, q, out);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+
+    // Tolerance scales with length: FMA keeps intermediate products in
+    // higher precision, so SIMD results differ from scalar by a few ULPs
+    // per accumulation step.
+    fn tol(n: usize) -> f32 {
+        1e-4 * (n.max(1) as f32).sqrt()
+    }
+
+    #[test]
+    fn backend_is_stable() {
+        assert_eq!(backend(), backend());
+        assert!(!backend().name().is_empty());
+    }
+
+    #[test]
+    fn simd_matches_scalar_dot() {
+        // Covers aligned (multiples of 8/16) and remainder lengths.
+        prop::check("simd dot == scalar dot", 200, |g| {
+            let n = g.usize_in(0..67);
+            let a: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let want = scalar_dot(&a, &b);
+            let got = dot(&a, &b);
+            prop_assert!((got - want).abs() < tol(n), "dot {got} vs {want} (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_matches_scalar_dist_sq() {
+        prop::check("simd dist_sq == scalar", 200, |g| {
+            let n = g.usize_in(0..67);
+            let a: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let b: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let want = scalar_dist_sq(&a, &b);
+            let got = dist_sq(&a, &b);
+            prop_assert!((got - want).abs() < tol(n), "dist_sq {got} vs {want} (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_matches_scalar_matvec() {
+        // Row counts around the 4-row blocking boundary and dims around
+        // the 8/16-lane boundaries, so every remainder path is exercised.
+        prop::check("simd matvec == scalar", 120, |g| {
+            let d = g.usize_in(1..40);
+            let rows = g.usize_in(0..13);
+            let mat: Vec<f32> = (0..rows * d).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let q: Vec<f32> = (0..d).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let mut want = vec![0.0f32; rows];
+            let mut got = vec![0.0f32; rows];
+            scalar_matvec(&mat, d, &q, &mut want);
+            matvec(&mat, d, &q, &mut got);
+            for r in 0..rows {
+                prop_assert!(
+                    (got[r] - want[r]).abs() < tol(d),
+                    "row {r}: {} vs {} (rows={rows}, d={d})",
+                    got[r],
+                    want[r]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn matvec_exact_sizes() {
+        // d exactly 8 and 16 (no remainder), rows exactly 4 (no tail row)
+        for (rows, d) in [(4usize, 8usize), (4, 16), (5, 8), (3, 16), (1, 1)] {
+            let mat: Vec<f32> = (0..rows * d).map(|i| (i % 7) as f32 - 3.0).collect();
+            let q: Vec<f32> = (0..d).map(|i| (i % 5) as f32 - 2.0).collect();
+            let mut want = vec![0.0f32; rows];
+            let mut got = vec![0.0f32; rows];
+            scalar_matvec(&mat, d, &q, &mut want);
+            matvec(&mat, d, &q, &mut got);
+            for r in 0..rows {
+                assert!((got[r] - want[r]).abs() < 1e-3, "({rows},{d}) row {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_inputs_are_zero() {
+        assert_eq!(dot(&[], &[]), 0.0);
+        assert_eq!(dist_sq(&[], &[]), 0.0);
+        let mut out: Vec<f32> = Vec::new();
+        matvec(&[], 4, &[0.0; 4], &mut out);
+        assert!(out.is_empty());
+    }
+}

@@ -4,24 +4,62 @@
 //! summary scores high for the current query — so unlike H2O, no
 //! information is permanently lost, but retrieval granularity is the
 //! fixed page.
+//!
+//! Layout: page summaries are SoA — one contiguous `[P, d]` centroid
+//! matrix plus parallel radius/start/len arrays — so a query scores all
+//! pages with one blocked GEMV plus a radius fixup (the same Eqn. 2 ball
+//! bound the hierarchical index uses, at page granularity).
 
-use super::{always_active, merge_with_budget, Ctx, Policy};
+use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
 
 const PAGE: usize = 128; // 32 BPE tokens ~= 128 bytes
 
-struct PageSummary {
-    start: usize,
-    len: usize,
-    centroid: Vec<f32>,
-    radius: f32,
+pub struct ArkVale {
+    cfg: LycheeConfig,
+    d: usize,
+    /// First token position per page.
+    starts: Vec<usize>,
+    /// Token count per page.
+    lens: Vec<usize>,
+    /// Page centroids, row-major `[P, d]`.
+    centroids: Vec<f32>,
+    /// Ball radius per page.
+    radii: Vec<f32>,
+    open_start: Option<usize>,
+    open_len: usize,
 }
 
-impl PageSummary {
-    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> PageSummary {
-        let d = keys.dim();
+impl ArkVale {
+    pub fn new(cfg: LycheeConfig) -> ArkVale {
+        ArkVale {
+            cfg,
+            d: 0,
+            starts: Vec::new(),
+            lens: Vec::new(),
+            centroids: Vec::new(),
+            radii: Vec::new(),
+            open_start: None,
+            open_len: 0,
+        }
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Centroid row of page `i` (the UB test checks the ball bound
+    /// row-by-row; the hot path scores all rows with one GEMV).
+    #[cfg(test)]
+    fn centroid(&self, i: usize) -> &[f32] {
+        &self.centroids[i * self.d..(i + 1) * self.d]
+    }
+
+    /// Append the ball summary (mean + covering radius) for a span.
+    fn push_page(&mut self, keys: &dyn KeySource, start: usize, len: usize) {
+        let d = self.d;
         let mut c = vec![0.0f32; d];
         for t in start..start + len {
             linalg::add_assign(&mut c, keys.key(t));
@@ -31,25 +69,10 @@ impl PageSummary {
         for t in start..start + len {
             r = r.max(linalg::dist(keys.key(t), &c));
         }
-        PageSummary { start, len, centroid: c, radius: r }
-    }
-
-    /// Ball upper bound — same geometry as Eqn. 2, page granularity.
-    fn score(&self, q: &[f32], qn: f32) -> f32 {
-        linalg::dot(q, &self.centroid) + qn * self.radius
-    }
-}
-
-pub struct ArkVale {
-    cfg: LycheeConfig,
-    pages: Vec<PageSummary>,
-    open_start: Option<usize>,
-    open_len: usize,
-}
-
-impl ArkVale {
-    pub fn new(cfg: LycheeConfig) -> ArkVale {
-        ArkVale { cfg, pages: Vec::new(), open_start: None, open_len: 0 }
+        self.starts.push(start);
+        self.lens.push(len);
+        self.centroids.extend_from_slice(&c);
+        self.radii.push(r);
     }
 }
 
@@ -59,51 +82,63 @@ impl Policy for ArkVale {
     }
 
     fn build(&mut self, ctx: &Ctx) {
-        self.pages.clear();
+        self.d = ctx.keys.dim();
+        self.starts.clear();
+        self.lens.clear();
+        self.centroids.clear();
+        self.radii.clear();
         let mut s = 0;
         while s < ctx.n {
             let len = PAGE.min(ctx.n - s);
-            self.pages.push(PageSummary::from_span(ctx.keys, s, len));
+            self.push_page(ctx.keys, s, len);
             s += len;
         }
         self.open_start = None;
         self.open_len = 0;
     }
 
-    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.recent);
         if let Some(s) = self.open_start {
-            always.extend(s..(s + self.open_len).min(pos));
-            always.sort_unstable();
-            always.dedup();
+            scratch.out.extend(s..(s + self.open_len).min(pos));
+            scratch.out.sort_unstable();
+            scratch.out.dedup();
         }
-        let remaining = budget.saturating_sub(always.len());
-        let qn = linalg::norm(q);
-        let mut scored: Vec<(usize, f32)> = self
-            .pages
-            .iter()
-            .enumerate()
-            .map(|(i, p)| (i, p.score(q, qn)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let mut cand = Vec::new();
-        let mut left = remaining;
-        for (i, _) in scored {
-            let p = &self.pages[i];
-            if p.len > left {
-                continue;
+        let remaining = budget.saturating_sub(scratch.out.len());
+        scratch.tokens.clear();
+        let np = self.num_pages();
+        if np > 0 {
+            // ball upper bound for every page: one GEMV + radius fixup
+            let qn = linalg::norm(q);
+            scratch.scores.clear();
+            scratch.scores.resize(np, 0.0);
+            linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            for (s, r) in scratch.scores.iter_mut().zip(&self.radii) {
+                *s += qn * r;
             }
-            cand.extend(p.start..p.start + p.len);
-            left -= p.len;
-            if left == 0 {
-                break;
+            linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+            let mut left = remaining;
+            let SelectScratch { order, tokens, .. } = &mut *scratch;
+            for &pi in order.iter() {
+                let len = self.lens[pi];
+                if len > left {
+                    continue;
+                }
+                tokens.extend(self.starts[pi]..self.starts[pi] + len);
+                left -= len;
+                if left == 0 {
+                    break;
+                }
             }
         }
-        merge_with_budget(always, &cand, budget)
+        let SelectScratch { out, tokens, .. } = scratch;
+        merge_into(out, tokens, budget);
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -116,13 +151,16 @@ impl Policy for ArkVale {
         }
         if self.open_len >= PAGE {
             let start = self.open_start.take().unwrap();
-            self.pages.push(PageSummary::from_span(ctx.keys, start, self.open_len));
+            if self.d == 0 {
+                self.d = ctx.keys.dim();
+            }
+            self.push_page(ctx.keys, start, self.open_len);
             self.open_len = 0;
         }
     }
 
     fn index_bytes(&self) -> usize {
-        self.pages.iter().map(|p| p.centroid.len() * 4 + 20).sum()
+        self.centroids.len() * 4 + self.num_pages() * 20
     }
 }
 
@@ -137,12 +175,15 @@ mod tests {
         let mut rng = Rng::new(0);
         let keys = rng.normal_vec(128 * 8);
         let src = FlatKeys::new(&keys, 8);
-        let page = PageSummary::from_span(&src, 32, 32);
+        let mut p = ArkVale::new(LycheeConfig::default());
+        p.build(&Ctx { keys: &src, text: &[b'x'; 128], n: 128 });
+        // single 128-byte page covering every token
+        assert_eq!(p.num_pages(), 1);
         for _ in 0..50 {
             let q = rng.normal_vec(8);
             let qn = linalg::norm(&q);
-            let ub = page.score(&q, qn);
-            for t in 32..64 {
+            let ub = linalg::dot(&q, p.centroid(0)) + qn * p.radii[0];
+            for t in 0..128 {
                 let dp = linalg::dot(&q, src.key(t));
                 assert!(dp <= ub + 1e-4);
             }
@@ -184,8 +225,8 @@ mod tests {
         let src = FlatKeys::new(&keys, 4);
         let mut p = ArkVale::new(LycheeConfig::default());
         p.build(&Ctx { keys: &src, text: &[b'x'; 300], n: 100 });
-        let total: usize = p.pages.iter().map(|pg| pg.len).sum();
+        let total: usize = p.lens.iter().sum();
         assert_eq!(total, 100);
-        assert_eq!(p.pages.len(), 1); // single 100-byte partial page
+        assert_eq!(p.num_pages(), 1); // single 100-byte partial page
     }
 }

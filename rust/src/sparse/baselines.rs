@@ -6,8 +6,8 @@
 //! in Tables 1/2 come from that property, so the implementations here
 //! must genuinely forget.
 
-use super::{always_active, Ctx, Policy};
-use crate::attention::sparse_attention_weights;
+use super::{always_active_into, Ctx, Policy, SelectScratch};
+use crate::attention::sparse_attention_weights_into;
 use crate::config::LycheeConfig;
 use std::collections::HashMap;
 
@@ -29,12 +29,14 @@ impl Policy for StreamingLlm {
 
     fn build(&mut self, _ctx: &Ctx) {}
 
-    fn select(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         if pos <= self.cfg.budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
         // sink + window filling the whole budget
-        always_active(pos, self.cfg.sink, self.cfg.budget - self.cfg.sink)
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.budget - self.cfg.sink);
     }
 
     fn on_token(&mut self, _ctx: &Ctx, _pos: usize) {}
@@ -73,7 +75,8 @@ impl H2O {
         evictable.sort_by(|&a, &b| {
             let sa = self.acc.get(&a).copied().unwrap_or(0.0);
             let sb = self.acc.get(&b).copied().unwrap_or(0.0);
-            sa.partial_cmp(&sb).unwrap().then(a.cmp(&b))
+            // total_cmp: a NaN score must never panic the server
+            sa.total_cmp(&sb).then(a.cmp(&b))
         });
         let excess = self.retained.len() - budget;
         let victims: std::collections::HashSet<usize> =
@@ -103,19 +106,27 @@ impl Policy for H2O {
         self.evict_to_budget(ctx.n);
     }
 
-    fn select(&mut self, ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
+        scratch.out.clear();
         if pos <= self.cfg.budget && self.retained.len() >= pos {
-            let out: Vec<usize> = (0..pos).collect();
-            return out;
+            scratch.out.extend(0..pos);
+            return;
         }
-        let toks: Vec<usize> = self.retained.iter().copied().filter(|&t| t < pos).collect();
+        scratch.tokens.clear();
+        scratch.tokens.extend(self.retained.iter().copied().filter(|&t| t < pos));
         // accumulate real attention mass over the retained set
-        for (t, w) in sparse_attention_weights(q, ctx.keys, &toks, self.scale) {
+        sparse_attention_weights_into(
+            q,
+            ctx.keys,
+            &scratch.tokens,
+            self.scale,
+            &mut scratch.scores,
+        );
+        for (&t, &w) in scratch.tokens.iter().zip(scratch.scores.iter()) {
             *self.acc.entry(t).or_insert(0.0) += w as f64;
         }
-        let mut out = toks;
-        out.sort_unstable();
-        out
+        scratch.out.extend_from_slice(&scratch.tokens);
+        scratch.out.sort_unstable();
     }
 
     fn on_token(&mut self, _ctx: &Ctx, pos: usize) {
@@ -185,23 +196,32 @@ impl Policy for RaaS {
         self.evict_to_budget(ctx.n);
     }
 
-    fn select(&mut self, ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
+        scratch.out.clear();
         if pos <= self.cfg.budget && self.retained.len() >= pos {
-            return (0..pos).collect();
+            scratch.out.extend(0..pos);
+            return;
         }
         self.step += 1;
-        let toks: Vec<usize> = self.retained.iter().copied().filter(|&t| t < pos).collect();
-        if !toks.is_empty() {
-            let thresh = 1.0 / toks.len() as f32;
-            for (t, w) in sparse_attention_weights(q, ctx.keys, &toks, self.scale) {
+        scratch.tokens.clear();
+        scratch.tokens.extend(self.retained.iter().copied().filter(|&t| t < pos));
+        if !scratch.tokens.is_empty() {
+            let thresh = 1.0 / scratch.tokens.len() as f32;
+            sparse_attention_weights_into(
+                q,
+                ctx.keys,
+                &scratch.tokens,
+                self.scale,
+                &mut scratch.scores,
+            );
+            for (&t, &w) in scratch.tokens.iter().zip(scratch.scores.iter()) {
                 if w >= thresh {
                     self.ts.insert(t, self.step); // milestone refresh
                 }
             }
         }
-        let mut out = toks;
-        out.sort_unstable();
-        out
+        scratch.out.extend_from_slice(&scratch.tokens);
+        scratch.out.sort_unstable();
     }
 
     fn on_token(&mut self, _ctx: &Ctx, pos: usize) {
@@ -242,11 +262,13 @@ impl Policy for RazorAttention {
 
     fn build(&mut self, _ctx: &Ctx) {}
 
-    fn select(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         if self.retrieval || pos <= self.cfg.budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        always_active(pos, self.cfg.sink, self.cfg.budget - self.cfg.sink)
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.budget - self.cfg.sink);
     }
 
     fn on_token(&mut self, _ctx: &Ctx, _pos: usize) {}

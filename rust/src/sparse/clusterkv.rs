@@ -8,7 +8,7 @@
 //! assigned to the nearest centroid; a periodic full re-clustering (the
 //! "high update overhead" of global methods) refreshes the index.
 
-use super::{always_active, merge_with_budget, Ctx, Policy};
+use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::kmeans::spherical_kmeans;
 use crate::linalg;
@@ -16,6 +16,8 @@ use crate::linalg;
 pub struct ClusterKv {
     cfg: LycheeConfig,
     d: usize,
+    /// Cluster centroids, row-major `[k, d]` (already SoA — retrieval
+    /// scores them with one blocked GEMV).
     centroids: Vec<f32>,
     members: Vec<Vec<usize>>,
     /// Tokens since the last full re-clustering.
@@ -25,6 +27,10 @@ pub struct ClusterKv {
     /// Tokens per cluster target (ClusterKV uses fine granularity).
     pub tokens_per_cluster: usize,
     n_indexed: usize,
+    /// Policy-owned scratch for the per-token update path (`on_token`
+    /// has no caller scratch): normalized key + centroid scores.
+    key_buf: Vec<f32>,
+    score_buf: Vec<f32>,
 }
 
 impl ClusterKv {
@@ -38,6 +44,8 @@ impl ClusterKv {
             recluster_every: 512,
             tokens_per_cluster: 8,
             n_indexed: 0,
+            key_buf: Vec::new(),
+            score_buf: Vec::new(),
         }
     }
 
@@ -80,32 +88,38 @@ impl Policy for ClusterKv {
         self.cluster_all(ctx, ctx.n);
     }
 
-    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        let always = always_active(pos, self.cfg.sink, self.cfg.recent);
-        let remaining = budget.saturating_sub(always.len());
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.recent);
+        let remaining = budget.saturating_sub(scratch.out.len());
         let k = self.members.len();
-        let scores: Vec<f32> = (0..k)
-            .map(|c| linalg::dot(q, &self.centroids[c * self.d..(c + 1) * self.d]))
-            .collect();
-        let order = linalg::top_k(&scores, k);
-        let mut cand = Vec::new();
-        let mut left = remaining;
-        'outer: for c in order {
-            for &t in &self.members[c] {
-                if left == 0 {
-                    break 'outer;
-                }
-                if t < pos {
-                    cand.push(t);
-                    left -= 1;
+        scratch.tokens.clear();
+        if k > 0 {
+            scratch.scores.clear();
+            scratch.scores.resize(k, 0.0);
+            linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            linalg::top_k_partial(&scratch.scores, k, &mut scratch.order);
+            let mut left = remaining;
+            let SelectScratch { order, tokens, .. } = &mut *scratch;
+            'outer: for &c in order.iter() {
+                for &t in &self.members[c] {
+                    if left == 0 {
+                        break 'outer;
+                    }
+                    if t < pos {
+                        tokens.push(t);
+                        left -= 1;
+                    }
                 }
             }
         }
-        merge_with_budget(always, &cand, budget)
+        let SelectScratch { out, tokens, .. } = scratch;
+        merge_into(out, tokens, budget);
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -113,18 +127,14 @@ impl Policy for ClusterKv {
             self.cluster_all(ctx, pos + 1);
             return;
         }
-        let mut key = ctx.keys.key(pos).to_vec();
-        linalg::normalize(&mut key);
         let k = self.members.len();
-        let mut best = 0;
-        let mut best_dot = f32::NEG_INFINITY;
-        for c in 0..k {
-            let dp = linalg::dot(&key, &self.centroids[c * self.d..(c + 1) * self.d]);
-            if dp > best_dot {
-                best_dot = dp;
-                best = c;
-            }
-        }
+        self.key_buf.clear();
+        self.key_buf.extend_from_slice(ctx.keys.key(pos));
+        linalg::normalize(&mut self.key_buf);
+        self.score_buf.clear();
+        self.score_buf.resize(k, 0.0);
+        linalg::matvec(&self.centroids, self.d, &self.key_buf, &mut self.score_buf);
+        let best = linalg::argmax(&self.score_buf);
         self.members[best].push(pos);
         self.n_indexed = pos + 1;
         self.stale += 1;

@@ -1,7 +1,7 @@
 //! Full attention (no sparsity) — the accuracy ceiling and the latency
 //! baseline whose TPOT grows linearly with context (paper Fig. 4).
 
-use super::{Ctx, Policy};
+use super::{Ctx, Policy, SelectScratch};
 
 #[derive(Default)]
 pub struct FullAttention;
@@ -19,8 +19,9 @@ impl Policy for FullAttention {
 
     fn build(&mut self, _ctx: &Ctx) {}
 
-    fn select(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize) -> Vec<usize> {
-        (0..pos).collect()
+    fn select_into(&mut self, _ctx: &Ctx, _q: &[f32], pos: usize, scratch: &mut SelectScratch) {
+        scratch.out.clear();
+        scratch.out.extend(0..pos);
     }
 
     fn on_token(&mut self, _ctx: &Ctx, _pos: usize) {}

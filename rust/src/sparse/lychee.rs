@@ -2,7 +2,7 @@
 //! chunking + hierarchical UB-pruned retrieval + lazy updates, glued to
 //! the [`Policy`] trait the engine drives.
 
-use super::{always_active, merge_with_budget, Ctx, Policy};
+use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
 use crate::chunking::Chunker;
 use crate::config::LycheeConfig;
 use crate::index::hierarchy::{HierarchicalIndex, IndexParams};
@@ -68,28 +68,31 @@ impl Policy for LycheePolicy {
         self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
     }
 
-    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         // Budget-sufficient degeneration (paper Appendix F.1): with the
         // whole history within budget, behave exactly like full attention.
         if pos <= budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.recent);
         // Unindexed buffered tokens stay active (index freshness gap).
         if let Some(pending) = self.buffer.pending() {
-            always.extend(pending.start..pending.end().min(pos));
+            scratch.out.extend(pending.start..pending.end().min(pos));
+            scratch.out.sort_unstable();
+            scratch.out.dedup();
         }
-        always.sort_unstable();
-        always.dedup();
-        let remaining = budget.saturating_sub(always.len());
+        let remaining = budget.saturating_sub(scratch.out.len());
         let idx = self.index.as_ref().expect("select before build");
-        let picked = if self.flat {
-            idx.select_tokens_flat(q, remaining)
+        if self.flat {
+            idx.select_tokens_flat_into(q, remaining, scratch);
         } else {
-            idx.select_tokens(q, self.cfg.top_kg, self.cfg.top_kc, remaining)
-        };
-        merge_with_budget(always, &picked, budget)
+            idx.select_tokens_into(q, self.cfg.top_kg, self.cfg.top_kc, remaining, scratch);
+        }
+        let SelectScratch { out, tokens, .. } = scratch;
+        merge_into(out, tokens, budget);
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -103,13 +106,7 @@ impl Policy for LycheePolicy {
             );
         if let Some(chunk) = self.buffer.push_boundary_aware(pos, at_boundary, self.cfg.min_chunk) {
             if self.index.is_none() {
-                self.index = Some(HierarchicalIndex {
-                    d: ctx.keys.dim(),
-                    params: self.params(),
-                    chunks: Vec::new(),
-                    fine: Vec::new(),
-                    coarse: Vec::new(),
-                });
+                self.index = Some(HierarchicalIndex::empty(ctx.keys.dim(), self.params()));
             }
             self.index.as_mut().unwrap().graft(ctx.keys, chunk);
         }

@@ -48,11 +48,48 @@ pub struct Ctx<'a> {
     pub n: usize,
 }
 
+/// Reusable scoring/selection buffers for the decode hot path.
+///
+/// One `SelectScratch` is owned per sequence (the engine keeps it on
+/// [`crate::engine::Sequence`]) and threaded through every per-layer
+/// [`Policy::select_into`] call, so steady-state decode performs **zero**
+/// heap allocations in retrieval: score buffers, candidate lists and the
+/// output token vec all retain their high-water-mark capacity across
+/// tokens and layers. Buffers hold no state between calls — any policy
+/// may clobber any field — which is why a single scratch serves all of a
+/// sequence's layers.
+#[derive(Debug, Default)]
+pub struct SelectScratch {
+    /// Primary per-row score buffer (units / pages / clusters).
+    pub scores: Vec<f32>,
+    /// Secondary score buffer (two-pass scorers, e.g. Quest's min-max).
+    pub scores2: Vec<f32>,
+    /// Ranking buffer: indices ordered by score.
+    pub order: Vec<usize>,
+    /// (id, score) candidate pairs (hierarchy fine clusters).
+    pub cand: Vec<(usize, f32)>,
+    /// (id, score) member pairs (partial-cluster expansion).
+    pub members: Vec<(usize, f32)>,
+    /// Candidate token ids before the budget merge.
+    pub tokens: Vec<usize>,
+    /// Transformed query (e.g. `|q|` for Quest's AABB bound).
+    pub qbuf: Vec<f32>,
+    /// Final selection (sorted, deduped, `len <= budget`).
+    pub out: Vec<usize>,
+}
+
+impl SelectScratch {
+    pub fn new() -> SelectScratch {
+        SelectScratch::default()
+    }
+}
+
 /// A KV retrieval/eviction policy for one attention layer.
 ///
 /// Call order per sequence: `build` once after prefill, then per decode
-/// step `select(q, pos)` (the active set used for attention at position
-/// `pos`) followed by `on_token(pos)` once that token's KV is cached.
+/// step `select_into(q, pos, scratch)` (the active set used for attention
+/// at position `pos`) followed by `on_token(pos)` once that token's KV is
+/// cached.
 ///
 /// `Send + Sync` so a decode batch can shard per-sequence retrieval onto
 /// scoped threads (each thread takes `&mut` of one sequence's policies;
@@ -63,9 +100,20 @@ pub trait Policy: Send + Sync {
     /// Index the prefill context (`ctx.n` tokens).
     fn build(&mut self, ctx: &Ctx);
 
-    /// Active token set (sorted, deduped, `len <= budget`) for query `q`
-    /// issued at position `pos` (tokens `0..pos` are valid history).
-    fn select(&mut self, ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize>;
+    /// Allocation-free hot path: compute the active token set (sorted,
+    /// deduped, `len <= budget`) for query `q` issued at position `pos`
+    /// (tokens `0..pos` are valid history) into `scratch.out`, reusing
+    /// the scratch buffers for all intermediate scoring state.
+    fn select_into(&mut self, ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch);
+
+    /// Convenience wrapper over [`Policy::select_into`] with a fresh
+    /// scratch (tests, eval harnesses, one-off calls). The engine's
+    /// decode loop uses `select_into` with a per-sequence scratch.
+    fn select(&mut self, ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+        let mut scratch = SelectScratch::new();
+        self.select_into(ctx, q, pos, &mut scratch);
+        std::mem::take(&mut scratch.out)
+    }
 
     /// Register the newly generated token at `pos`.
     fn on_token(&mut self, ctx: &Ctx, pos: usize);
@@ -79,29 +127,51 @@ pub trait Policy: Send + Sync {
 /// Sink + recent-window positions every retrieval policy keeps active
 /// (paper Appendix A: sink 16; recency is standard across baselines).
 pub fn always_active(n: usize, sink: usize, recent: usize) -> Vec<usize> {
-    let mut out: Vec<usize> = (0..sink.min(n)).collect();
-    out.extend(n.saturating_sub(recent)..n);
-    out.sort_unstable();
-    out.dedup();
+    let mut out = Vec::new();
+    always_active_into(&mut out, n, sink, recent);
     out
+}
+
+/// Allocation-free variant of [`always_active`]: writes the sorted,
+/// deduped sink+recent set into `out` (cleared first). The two ranges are
+/// emitted directly in order, so no sort pass is needed.
+pub fn always_active_into(out: &mut Vec<usize>, n: usize, sink: usize, recent: usize) {
+    out.clear();
+    let sink_end = sink.min(n);
+    out.extend(0..sink_end);
+    out.extend(n.saturating_sub(recent).max(sink_end)..n);
 }
 
 /// Merge candidate tokens with the always-active set under a budget:
 /// always-active first, then candidates in given order until full.
 pub fn merge_with_budget(always: Vec<usize>, candidates: &[usize], budget: usize) -> Vec<usize> {
     let mut out = always;
+    out.sort_unstable();
+    out.dedup();
+    merge_into(&mut out, candidates, budget);
+    out
+}
+
+/// Allocation-free budget merge: `out` holds the sorted, deduped
+/// always-active set on entry and the final selection on exit.
+/// Candidates (mutually disjoint — they come from disjoint page/chunk
+/// spans) are appended in given order until the budget fills; collisions
+/// with the always-active prefix are skipped via binary search and do not
+/// consume budget.
+pub fn merge_into(out: &mut Vec<usize>, candidates: &[usize], budget: usize) {
     out.truncate(budget);
-    let mut set: std::collections::HashSet<usize> = out.iter().copied().collect();
+    let always_len = out.len();
+    debug_assert!(out.windows(2).all(|w| w[0] < w[1]), "always set not sorted/deduped");
     for &c in candidates {
         if out.len() >= budget {
             break;
         }
-        if set.insert(c) {
+        if out[..always_len].binary_search(&c).is_err() {
             out.push(c);
         }
     }
     out.sort_unstable();
-    out
+    out.dedup();
 }
 
 /// Every policy name [`make_policy`] accepts (kept in sync by the
@@ -204,6 +274,43 @@ mod tests {
         assert!(msg.contains("unknown policy 'nope'"), "{msg}");
         for name in POLICY_NAMES {
             assert!(msg.contains(name), "error does not list '{name}': {msg}");
+        }
+    }
+
+    /// Scratch reuse must be invisible: for every policy, a run that
+    /// reuses one `SelectScratch` across all steps returns byte-identical
+    /// token sets to a twin policy instance using fresh allocations
+    /// (`select`) at every step.
+    #[test]
+    fn scratch_reuse_matches_fresh_allocation_for_all_policies() {
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 96;
+        cfg.sink = 8;
+        cfg.recent = 16;
+        let mut rng = Rng::new(42);
+        let n = 600;
+        let steps = 8;
+        let keys = rng.normal_vec((n + steps) * 16);
+        let text: Vec<u8> =
+            (0..n + steps).map(|_| b"the quick, brown. fox\n"[rng.range(0, 22)]).collect();
+
+        for &name in POLICY_NAMES {
+            let mut fresh = make_policy(name, &cfg, 1, 4).unwrap();
+            let mut reused = make_policy(name, &cfg, 1, 4).unwrap();
+            let src = FlatKeys::new(&keys, 16);
+            fresh.build(&Ctx { keys: &src, text: &text, n });
+            reused.build(&Ctx { keys: &src, text: &text, n });
+            let mut scratch = SelectScratch::new();
+            for step in 0..steps {
+                let pos = n + step;
+                let ctx = Ctx { keys: &src, text: &text, n: pos };
+                let q = rng.normal_vec(16);
+                let a = fresh.select(&ctx, &q, pos);
+                reused.select_into(&ctx, &q, pos, &mut scratch);
+                assert_eq!(a, scratch.out, "{name}: scratch reuse diverged at step {step}");
+                fresh.on_token(&ctx, pos);
+                reused.on_token(&ctx, pos);
+            }
         }
     }
 

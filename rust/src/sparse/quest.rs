@@ -3,50 +3,34 @@
 //! axis-aligned bounding box); a query scores a page by the maximum
 //! possible dot product over that box: `Σ_d max(q_d·min_d, q_d·max_d)`.
 //!
+//! Layout: pages are SoA — two contiguous `[P, d]` matrices holding
+//! `min+max` and `max−min` per page — because the AABB bound factors as
+//! `max(a,b) = (a+b+|a−b|)/2`, so the whole score vector is two blocked
+//! GEMVs: `0.5·((min+max)·q + (max−min)·|q|)` (`max−min ≥ 0`, so
+//! `|q_d·min_d − q_d·max_d| = |q_d|·(max_d − min_d)`).
+//!
 //! The segmentation is pluggable so the pilot study (paper §3 / Fig. 2)
 //! can swap fixed 16-token pages for structure-aware chunks while
 //! keeping the scoring identical (`quest-chunks`).
 
-use super::{always_active, merge_with_budget, Ctx, Policy};
+use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
 use crate::chunking::Chunker;
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
-
-struct Page {
-    start: usize,
-    len: usize,
-    min: Vec<f32>,
-    max: Vec<f32>,
-}
-
-impl Page {
-    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> Page {
-        let d = keys.dim();
-        let mut min = vec![f32::INFINITY; d];
-        let mut max = vec![f32::NEG_INFINITY; d];
-        for t in start..start + len {
-            for (j, &x) in keys.key(t).iter().enumerate() {
-                min[j] = min[j].min(x);
-                max[j] = max[j].max(x);
-            }
-        }
-        Page { start, len, min, max }
-    }
-
-    /// Quest's score: upper bound of q·k over the page AABB.
-    fn score(&self, q: &[f32]) -> f32 {
-        let mut s = 0.0;
-        for j in 0..q.len() {
-            s += (q[j] * self.min[j]).max(q[j] * self.max[j]);
-        }
-        s
-    }
-}
+use crate::linalg;
 
 pub struct Quest {
     cfg: LycheeConfig,
     chunker: Box<dyn Chunker>,
-    pages: Vec<Page>,
+    d: usize,
+    /// First token position per page.
+    starts: Vec<usize>,
+    /// Token count per page.
+    lens: Vec<usize>,
+    /// `min + max` rows, row-major `[P, d]`.
+    sums: Vec<f32>,
+    /// `max - min` rows (elementwise non-negative), row-major `[P, d]`.
+    diffs: Vec<f32>,
     /// Decode-side accumulation (fixed page size like the paper's system).
     open_start: Option<usize>,
     open_len: usize,
@@ -55,7 +39,53 @@ pub struct Quest {
 
 impl Quest {
     pub fn new(cfg: LycheeConfig, chunker: Box<dyn Chunker>) -> Quest {
-        Quest { cfg, chunker, pages: Vec::new(), open_start: None, open_len: 0, decode_page: 48 }
+        Quest {
+            cfg,
+            chunker,
+            d: 0,
+            starts: Vec::new(),
+            lens: Vec::new(),
+            sums: Vec::new(),
+            diffs: Vec::new(),
+            open_start: None,
+            open_len: 0,
+            decode_page: 48,
+        }
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Append one page's AABB summary rows for `[start, start+len)`.
+    fn push_page(&mut self, keys: &dyn KeySource, start: usize, len: usize) {
+        let d = self.d;
+        let mut mn = vec![f32::INFINITY; d];
+        let mut mx = vec![f32::NEG_INFINITY; d];
+        for t in start..start + len {
+            for (j, &x) in keys.key(t).iter().enumerate() {
+                mn[j] = mn[j].min(x);
+                mx[j] = mx[j].max(x);
+            }
+        }
+        self.starts.push(start);
+        self.lens.push(len);
+        self.sums.extend(mn.iter().zip(&mx).map(|(a, b)| a + b));
+        self.diffs.extend(mn.iter().zip(&mx).map(|(a, b)| b - a));
+    }
+
+    /// Quest's AABB upper bound of `q·k` over page `i` (scalar reference
+    /// the equivalence/UB tests check the factored GEMV form against;
+    /// the hot path computes all pages at once with two GEMVs).
+    #[cfg(test)]
+    fn page_score(&self, i: usize, q: &[f32]) -> f32 {
+        let row = i * self.d..(i + 1) * self.d;
+        let s = linalg::dot(&self.sums[row.clone()], q);
+        let mut dabs = 0.0;
+        for (df, x) in self.diffs[row].iter().zip(q) {
+            dabs += df * x.abs();
+        }
+        0.5 * (s + dabs)
     }
 }
 
@@ -65,49 +95,68 @@ impl Policy for Quest {
     }
 
     fn build(&mut self, ctx: &Ctx) {
+        self.d = ctx.keys.dim();
+        self.starts.clear();
+        self.lens.clear();
+        self.sums.clear();
+        self.diffs.clear();
         let spans = self.chunker.chunk(&ctx.text[..ctx.n.min(ctx.text.len())]);
-        self.pages = spans
-            .iter()
-            .map(|s| Page::from_span(ctx.keys, s.start, s.len))
-            .collect();
+        for s in spans {
+            self.push_page(ctx.keys, s.start, s.len);
+        }
         self.open_start = None;
         self.open_len = 0;
     }
 
-    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.recent);
         if let Some(s) = self.open_start {
-            always.extend(s..(s + self.open_len).min(pos));
-            always.sort_unstable();
-            always.dedup();
+            scratch.out.extend(s..(s + self.open_len).min(pos));
+            scratch.out.sort_unstable();
+            scratch.out.dedup();
         }
-        let remaining = budget.saturating_sub(always.len());
-        // rank pages by AABB score, take whole pages until the budget
-        let mut scored: Vec<(usize, f32)> = self
-            .pages
-            .iter()
-            .enumerate()
-            .map(|(i, p)| (i, p.score(q)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let mut cand = Vec::new();
+        let remaining = budget.saturating_sub(scratch.out.len());
+        scratch.tokens.clear();
+        let np = self.num_pages();
+        if np == 0 {
+            let SelectScratch { out, tokens, .. } = scratch;
+            merge_into(out, tokens, budget);
+            return;
+        }
+        // score every page with two GEMVs: sums·q + diffs·|q|
+        scratch.qbuf.clear();
+        scratch.qbuf.extend(q.iter().map(|x| x.abs()));
+        scratch.scores.clear();
+        scratch.scores.resize(np, 0.0);
+        scratch.scores2.clear();
+        scratch.scores2.resize(np, 0.0);
+        linalg::matvec(&self.sums, self.d, q, &mut scratch.scores);
+        linalg::matvec(&self.diffs, self.d, &scratch.qbuf, &mut scratch.scores2);
+        for (s, s2) in scratch.scores.iter_mut().zip(&scratch.scores2) {
+            *s = 0.5 * (*s + s2);
+        }
+        // rank pages, take whole pages until the budget fills
+        linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+        let SelectScratch { out, order, tokens, .. } = scratch;
         let mut left = remaining;
-        for (i, _) in scored {
-            let p = &self.pages[i];
-            if p.len > left {
+        for &pi in order.iter() {
+            let len = self.lens[pi];
+            if len > left {
                 continue; // whole-page granularity: fragmentation cost is Quest's
             }
-            cand.extend(p.start..p.start + p.len);
-            left -= p.len;
+            tokens.extend(self.starts[pi]..self.starts[pi] + len);
+            left -= len;
             if left == 0 {
                 break;
             }
         }
-        merge_with_budget(always, &cand, budget)
+        merge_into(out, tokens, budget);
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -120,16 +169,16 @@ impl Policy for Quest {
         }
         if self.open_len >= self.decode_page {
             let start = self.open_start.take().unwrap();
-            self.pages.push(Page::from_span(ctx.keys, start, self.open_len));
+            if self.d == 0 {
+                self.d = ctx.keys.dim();
+            }
+            self.push_page(ctx.keys, start, self.open_len);
             self.open_len = 0;
         }
     }
 
     fn index_bytes(&self) -> usize {
-        self.pages
-            .iter()
-            .map(|p| (p.min.len() + p.max.len()) * 4 + 16)
-            .sum()
+        (self.sums.len() + self.diffs.len()) * 4 + self.num_pages() * 16
     }
 }
 
@@ -158,14 +207,41 @@ mod tests {
     fn aabb_score_is_upper_bound() {
         let mut rng = Rng::new(0);
         let keys = rng.normal_vec(64 * 8);
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 16;
+        let mut quest = Quest::new(cfg, Box::new(FixedSizeChunker::new(16)));
         let src = FlatKeys::new(&keys, 8);
-        let page = Page::from_span(&src, 16, 16);
+        let text = vec![b'x'; 64];
+        quest.build(&Ctx { keys: &src, text: &text, n: 64 });
         for _ in 0..50 {
             let q = rng.normal_vec(8);
-            let ub = page.score(&q);
+            // page 1 covers tokens [16, 32)
+            let ub = quest.page_score(1, &q);
             for t in 16..32 {
                 let dp = crate::linalg::dot(&q, src.key(t));
                 assert!(dp <= ub + 1e-4, "page UB violated: {dp} > {ub}");
+            }
+        }
+    }
+
+    #[test]
+    fn factored_score_matches_direct_minmax() {
+        // 0.5*((min+max)·q + (max−min)·|q|) == Σ max(q·min, q·max)
+        let mut rng = Rng::new(7);
+        let (quest, ..) = build_quest(64, 8, 16, 7);
+        for _ in 0..50 {
+            let q = rng.normal_vec(8);
+            for pi in 0..quest.num_pages() {
+                let row = pi * 8..(pi + 1) * 8;
+                let (sums, diffs) = (&quest.sums[row.clone()], &quest.diffs[row]);
+                let mut direct = 0.0f32;
+                for j in 0..8 {
+                    let mn = 0.5 * (sums[j] - diffs[j]);
+                    let mx = 0.5 * (sums[j] + diffs[j]);
+                    direct += (q[j] * mn).max(q[j] * mx);
+                }
+                let got = quest.page_score(pi, &q);
+                assert!((got - direct).abs() < 1e-3, "page {pi}: {got} vs {direct}");
             }
         }
     }
@@ -209,15 +285,15 @@ mod tests {
         let sel = quest.select(&ctx, &q, 512);
         let set: std::collections::HashSet<usize> = sel.iter().copied().collect();
         // every selected non-sink/recent token's page is fully selected
-        for p in &quest.pages {
-            let inside = (p.start..p.start + p.len).filter(|t| set.contains(t)).count();
-            let overlaps_always = p.start < 4 || p.start + p.len > 512 - 8;
+        for pi in 0..quest.num_pages() {
+            let (s, len) = (quest.starts[pi], quest.lens[pi]);
+            let inside = (s..s + len).filter(|t| set.contains(t)).count();
+            let overlaps_always = s < 4 || s + len > 512 - 8;
             if !overlaps_always {
                 assert!(
-                    inside == 0 || inside == p.len,
-                    "page [{}..{}) partially selected: {inside}",
-                    p.start,
-                    p.start + p.len
+                    inside == 0 || inside == len,
+                    "page [{s}..{}) partially selected: {inside}",
+                    s + len
                 );
             }
         }
@@ -230,12 +306,12 @@ mod tests {
         let all_keys = rng.normal_vec((512 + 100) * 8);
         let src = FlatKeys::new(&all_keys, 8);
         let text = vec![b'x'; 612];
-        let before = quest.pages.len();
+        let before = quest.num_pages();
         for pos in 512..512 + 100 {
             let ctx = Ctx { keys: &src, text: &text, n: pos };
             quest.on_token(&ctx, pos);
         }
-        assert_eq!(quest.pages.len(), before + 2); // 100/48 = 2 sealed
+        assert_eq!(quest.num_pages(), before + 2); // 100/48 = 2 sealed
         assert_eq!(quest.open_len, 4);
     }
 

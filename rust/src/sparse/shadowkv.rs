@@ -5,8 +5,12 @@
 //! (The paper's low-rank pre-RoPE K compression is a GPU-memory
 //! optimization orthogonal to selection quality; the selection mechanism
 //! is what matters for accuracy and is modeled here.)
+//!
+//! Layout: landmarks are SoA — one contiguous `[P, d]` mean matrix plus
+//! parallel deviation/start/len arrays — so a query scores all pages
+//! with a single blocked GEMV.
 
-use super::{always_active, merge_with_budget, Ctx, Policy};
+use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
@@ -15,16 +19,44 @@ const PAGE: usize = 32; // 8 BPE tokens ~= 32 bytes
 /// Fraction of pages kept resident as outliers.
 const OUTLIER_FRAC: f64 = 0.02;
 
-struct Landmark {
-    start: usize,
-    len: usize,
-    mean: Vec<f32>,
-    deviation: f32,
+pub struct ShadowKv {
+    cfg: LycheeConfig,
+    d: usize,
+    /// First token position per page.
+    starts: Vec<usize>,
+    /// Token count per page.
+    lens: Vec<usize>,
+    /// Landmark (mean-key) rows, row-major `[P, d]`.
+    means: Vec<f32>,
+    /// Max deviation of a member key from the landmark, per page.
+    deviations: Vec<f32>,
+    outliers: Vec<usize>, // page indices always active
+    open_start: Option<usize>,
+    open_len: usize,
 }
 
-impl Landmark {
-    fn from_span(keys: &dyn KeySource, start: usize, len: usize) -> Landmark {
-        let d = keys.dim();
+impl ShadowKv {
+    pub fn new(cfg: LycheeConfig) -> ShadowKv {
+        ShadowKv {
+            cfg,
+            d: 0,
+            starts: Vec::new(),
+            lens: Vec::new(),
+            means: Vec::new(),
+            deviations: Vec::new(),
+            outliers: Vec::new(),
+            open_start: None,
+            open_len: 0,
+        }
+    }
+
+    pub fn num_pages(&self) -> usize {
+        self.lens.len()
+    }
+
+    /// Append one landmark row (mean + max deviation) for a span.
+    fn push_page(&mut self, keys: &dyn KeySource, start: usize, len: usize) {
+        let d = self.d;
         let mut mean = vec![0.0f32; d];
         for t in start..start + len {
             linalg::add_assign(&mut mean, keys.key(t));
@@ -34,27 +66,15 @@ impl Landmark {
         for t in start..start + len {
             dev = dev.max(linalg::dist(keys.key(t), &mean));
         }
-        Landmark { start, len, mean, deviation: dev }
-    }
-}
-
-pub struct ShadowKv {
-    cfg: LycheeConfig,
-    landmarks: Vec<Landmark>,
-    outliers: Vec<usize>, // page indices always active
-    open_start: Option<usize>,
-    open_len: usize,
-}
-
-impl ShadowKv {
-    pub fn new(cfg: LycheeConfig) -> ShadowKv {
-        ShadowKv { cfg, landmarks: Vec::new(), outliers: Vec::new(), open_start: None, open_len: 0 }
+        self.starts.push(start);
+        self.lens.push(len);
+        self.means.extend_from_slice(&mean);
+        self.deviations.push(dev);
     }
 
     fn recompute_outliers(&mut self) {
-        let k = ((self.landmarks.len() as f64 * OUTLIER_FRAC).ceil() as usize).max(1);
-        let devs: Vec<f32> = self.landmarks.iter().map(|l| l.deviation).collect();
-        self.outliers = linalg::top_k(&devs, k.min(devs.len()));
+        let k = ((self.num_pages() as f64 * OUTLIER_FRAC).ceil() as usize).max(1);
+        self.outliers = linalg::top_k(&self.deviations, k.min(self.deviations.len()));
     }
 }
 
@@ -64,11 +84,15 @@ impl Policy for ShadowKv {
     }
 
     fn build(&mut self, ctx: &Ctx) {
-        self.landmarks.clear();
+        self.d = ctx.keys.dim();
+        self.starts.clear();
+        self.lens.clear();
+        self.means.clear();
+        self.deviations.clear();
         let mut s = 0;
         while s < ctx.n {
             let len = PAGE.min(ctx.n - s);
-            self.landmarks.push(Landmark::from_span(ctx.keys, s, len));
+            self.push_page(ctx.keys, s, len);
             s += len;
         }
         self.recompute_outliers();
@@ -76,47 +100,52 @@ impl Policy for ShadowKv {
         self.open_len = 0;
     }
 
-    fn select(&mut self, _ctx: &Ctx, q: &[f32], pos: usize) -> Vec<usize> {
+    fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {
-            return (0..pos).collect();
+            scratch.out.clear();
+            scratch.out.extend(0..pos);
+            return;
         }
-        let mut always = always_active(pos, self.cfg.sink, self.cfg.recent);
+        always_active_into(&mut scratch.out, pos, self.cfg.sink, self.cfg.recent);
         for &pi in &self.outliers {
-            let l = &self.landmarks[pi];
-            always.extend(l.start..(l.start + l.len).min(pos));
+            let (s, len) = (self.starts[pi], self.lens[pi]);
+            scratch.out.extend(s..(s + len).min(pos));
         }
         if let Some(s) = self.open_start {
-            always.extend(s..(s + self.open_len).min(pos));
+            scratch.out.extend(s..(s + self.open_len).min(pos));
         }
-        always.sort_unstable();
-        always.dedup();
-        always.truncate(budget);
-        let remaining = budget.saturating_sub(always.len());
-        // landmark scoring: plain mean-key dot (no radius slack — this is
-        // ShadowKV's approximation; its recall deficit vs ball/UB methods
-        // on scattered topics is visible in Table 1's reproduction)
-        let mut scored: Vec<(usize, f32)> = self
-            .landmarks
-            .iter()
-            .enumerate()
-            .map(|(i, l)| (i, linalg::dot(q, &l.mean)))
-            .collect();
-        scored.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        let mut cand = Vec::new();
-        let mut left = remaining;
-        for (i, _) in scored {
-            let l = &self.landmarks[i];
-            if l.len > left {
-                continue;
-            }
-            cand.extend(l.start..l.start + l.len);
-            left -= l.len;
-            if left == 0 {
-                break;
+        scratch.out.sort_unstable();
+        scratch.out.dedup();
+        scratch.out.truncate(budget);
+        let remaining = budget.saturating_sub(scratch.out.len());
+        scratch.tokens.clear();
+        let np = self.num_pages();
+        if np > 0 {
+            // landmark scoring: plain mean-key dot as one GEMV (no radius
+            // slack — this is ShadowKV's approximation; its recall deficit
+            // vs ball/UB methods on scattered topics is visible in Table
+            // 1's reproduction)
+            scratch.scores.clear();
+            scratch.scores.resize(np, 0.0);
+            linalg::matvec(&self.means, self.d, q, &mut scratch.scores);
+            linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+            let mut left = remaining;
+            let SelectScratch { order, tokens, .. } = &mut *scratch;
+            for &pi in order.iter() {
+                let len = self.lens[pi];
+                if len > left {
+                    continue;
+                }
+                tokens.extend(self.starts[pi]..self.starts[pi] + len);
+                left -= len;
+                if left == 0 {
+                    break;
+                }
             }
         }
-        merge_with_budget(always, &cand, budget)
+        let SelectScratch { out, tokens, .. } = scratch;
+        merge_into(out, tokens, budget);
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -129,15 +158,17 @@ impl Policy for ShadowKv {
         }
         if self.open_len >= PAGE {
             let start = self.open_start.take().unwrap();
-            self.landmarks.push(Landmark::from_span(ctx.keys, start, self.open_len));
+            if self.d == 0 {
+                self.d = ctx.keys.dim();
+            }
+            self.push_page(ctx.keys, start, self.open_len);
             self.open_len = 0;
             self.recompute_outliers();
         }
     }
 
     fn index_bytes(&self) -> usize {
-        self.landmarks.iter().map(|l| l.mean.len() * 4 + 20).sum::<usize>()
-            + self.outliers.len() * 8
+        self.means.len() * 4 + self.num_pages() * 20 + self.outliers.len() * 8
     }
 }
 
@@ -154,7 +185,7 @@ mod tests {
         let src = FlatKeys::new(&keys, 4);
         let mut p = ShadowKv::new(LycheeConfig::default());
         p.build(&Ctx { keys: &src, text: &[b'x'; 100], n: 100 });
-        assert_eq!(p.landmarks.iter().map(|l| l.len).sum::<usize>(), 100);
+        assert_eq!(p.lens.iter().sum::<usize>(), 100);
         assert!(!p.outliers.is_empty());
     }
 
@@ -208,7 +239,7 @@ mod tests {
         let ctx = Ctx { keys: &src, text: &text, n };
         p.build(&ctx);
         let top_outlier = p.outliers[0];
-        assert_eq!(p.landmarks[top_outlier].start, 800);
+        assert_eq!(p.starts[top_outlier], 800);
         // a query orthogonal to the outlier still keeps it active
         let q = rng.unit_vec(d);
         let sel = p.select(&ctx, &q, n);
