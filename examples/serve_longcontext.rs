@@ -30,7 +30,8 @@ fn main() -> anyhow::Result<()> {
     // ---------------------------------------------------------------
     println!("=== phase 1: batched serving over TCP (lychee policy) ===");
     let (handle, metrics, join) = spawn(cfg.clone())?;
-    let server = Server::start("127.0.0.1:0", handle.clone())?;
+    let server =
+        Server::start("127.0.0.1:0", handle.clone(), Some(std::sync::Arc::clone(&metrics)))?;
     println!("server on {}", server.addr);
 
     let params = TraceParams { rate: 4.0, n_requests: 12, prompt_min: 96, prompt_max: 480, out_min: 8, out_max: 24 };

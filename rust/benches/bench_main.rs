@@ -14,13 +14,19 @@
 //!                          ns/token select per policy per context size,
 //!                          SoA+SIMD vs seed-style scalar scoring at 32k,
 //!                          serial-vs-parallel batch retrieval
+//!   serving_json         — machine-readable BENCH_serving.json: mixed
+//!                          long+short load through the real coordinator
+//!                          (sim engine), chunked vs monolithic prefill —
+//!                          TTFT/TPOT p50+p99 per class and the worst
+//!                          decode stall the short sequences observed
 //!   fig4_tpot            — end-to-end decode TPOT (engine + PJRT)
 //!   serving_throughput   — batched coordinator throughput
 //!
 //! Run with `cargo bench` (all) or `cargo bench -- <filter>`.
 //! `BENCH_SMOKE=1` shrinks iteration counts/contexts for CI smoke runs;
-//! `BENCH_JSON_PATH` overrides where `retrieval_json` writes its file
-//! (default: `BENCH_retrieval.json` in the current directory).
+//! `BENCH_JSON_PATH` / `BENCH_SERVING_JSON_PATH` override where the
+//! `*_json` sections write their files (defaults: `BENCH_retrieval.json`
+//! / `BENCH_serving.json` in the current directory).
 
 use lychee::chunking::{Chunker, FixedSizeChunker, StructureAwareChunker};
 use lychee::config::{Config, LycheeConfig};
@@ -312,6 +318,19 @@ fn main() {
         }
     }
 
+    if section("serving_json") {
+        let json = serving_json_section();
+        let path = std::env::var("BENCH_SERVING_JSON_PATH")
+            .unwrap_or_else(|_| "BENCH_serving.json".to_string());
+        match std::fs::write(&path, &json) {
+            Ok(()) => println!("wrote {path}"),
+            Err(e) => {
+                eprintln!("FAILED writing {path}: {e}");
+                std::process::exit(1);
+            }
+        }
+    }
+
     // engine benches need artifacts
     let mut cfg = Config::new();
     if !std::path::Path::new(&cfg.artifacts_dir).join("manifest.json").exists() {
@@ -379,6 +398,136 @@ fn main() {
     }
 
     println!("\nbench harness done.");
+}
+
+/// The serving-trajectory section: mixed long+short load through the
+/// real coordinator (sim engine — no artifacts needed), chunked vs
+/// monolithic prefill, rendered as `BENCH_serving.json` (schema in
+/// EXPERIMENTS.md §Serving). Four short interactive sequences decode
+/// while one long prompt prefills mid-stream; per-class TTFT/TPOT
+/// p50+p99 plus the worst inter-token stall the shorts observed.
+fn serving_json_section() -> String {
+    use lychee::coordinator::{spawn_with, Event, Request};
+    use lychee::engine::sim::{SimConfig, SimEngine};
+    use lychee::util::stats::percentile;
+
+    let smoke = smoke();
+    let long_prompt_tokens: usize = if smoke { 4 * 1024 } else { 16 * 1024 };
+    let short_prompt_tokens: usize = 512;
+    let short_max_new: usize = if smoke { 64 } else { 256 };
+    let chunk_tokens: usize = 512;
+    let prefill_us_per_token: u64 = if smoke { 10 } else { 30 };
+
+    let mut mode_rows = Vec::new();
+    for (mode, chunk) in [("chunked", chunk_tokens), ("monolithic", 0usize)] {
+        let mut cfg = Config::new();
+        cfg.serving.prefill_chunk_tokens = chunk;
+        cfg.serving.max_new_tokens = short_max_new.max(8);
+        let sim = SimConfig {
+            prefill_us_per_token,
+            ..SimConfig::default()
+        };
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) =
+            spawn_with(cfg, move || Ok(SimEngine::new(engine_cfg, sim))).unwrap();
+
+        // 4 short interactive sequences, tracked token-by-token
+        let mut short_threads = Vec::new();
+        for i in 0..4u64 {
+            let rx = handle
+                .submit(Request {
+                    id: i,
+                    prompt: prompt_text(short_prompt_tokens, i),
+                    max_new_tokens: short_max_new,
+                    policy: "lychee".into(),
+                })
+                .unwrap();
+            short_threads.push(std::thread::spawn(move || {
+                // gaps measured only BETWEEN tokens: the first token's
+                // latency is TTFT (reported separately), not a decode
+                // stall, so it must not pollute the stall metric
+                let mut last: Option<std::time::Instant> = None;
+                let mut max_gap_ms = 0.0f64;
+                let mut stats = None;
+                for ev in rx {
+                    match ev {
+                        Event::Token(_) => {
+                            if let Some(l) = last {
+                                max_gap_ms = max_gap_ms.max(l.elapsed().as_secs_f64() * 1e3);
+                            }
+                            last = Some(std::time::Instant::now());
+                        }
+                        Event::Done(s) => {
+                            stats = Some(s);
+                            break;
+                        }
+                        Event::Error(e) => panic!("short request failed: {e}"),
+                    }
+                }
+                (stats.expect("short ended without Done"), max_gap_ms)
+            }));
+        }
+        // let the shorts reach steady-state decode, then drop the long
+        // prompt into the stream
+        std::thread::sleep(std::time::Duration::from_millis(if smoke { 30 } else { 100 }));
+        let (_, long_stats) = handle
+            .generate(Request {
+                id: 99,
+                prompt: prompt_text(long_prompt_tokens, 99),
+                max_new_tokens: 8,
+                policy: "lychee".into(),
+            })
+            .unwrap();
+
+        let mut short_ttft = Vec::new();
+        let mut short_tpot = Vec::new();
+        let mut max_gap: f64 = 0.0;
+        for t in short_threads {
+            let (s, gap) = t.join().unwrap();
+            short_ttft.push(s.ttft_ms);
+            short_tpot.push(s.tpot_ms);
+            max_gap = max_gap.max(gap);
+        }
+        let (chunks, preempts) = {
+            let m = metrics.lock().unwrap();
+            (m.prefill_chunks_executed, m.preemptions)
+        };
+        handle.shutdown();
+        let _ = join.join();
+
+        println!(
+            "serving[{mode:<10}] short TPOT p50 {:.2} ms p99 {:.2} ms | worst stall {:.1} ms | long TTFT {:.0} ms",
+            percentile(&short_tpot, 0.50),
+            percentile(&short_tpot, 0.99),
+            max_gap,
+            long_stats.ttft_ms
+        );
+        mode_rows.push(format!(
+            "{{\"mode\": \"{mode}\", \"prefill_chunk_tokens\": {chunk}, \
+             \"long_prompt_tokens\": {long_prompt_tokens}, \
+             \"short_prompt_tokens\": {short_prompt_tokens}, \
+             \"short_max_new\": {short_max_new}, \
+             \"short_ttft_ms\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"short_tpot_ms\": {{\"p50\": {:.3}, \"p99\": {:.3}}}, \
+             \"short_max_intertoken_gap_ms\": {:.2}, \
+             \"long_ttft_ms\": {:.2}, \"long_tpot_ms\": {:.3}, \
+             \"prefill_chunks_executed\": {chunks}, \"preemptions\": {preempts}}}",
+            percentile(&short_ttft, 0.50),
+            percentile(&short_ttft, 0.99),
+            percentile(&short_tpot, 0.50),
+            percentile(&short_tpot, 0.99),
+            max_gap,
+            long_stats.ttft_ms,
+            long_stats.tpot_ms,
+        ));
+    }
+    format!(
+        "{{\n  \"schema\": \"lychee-bench-serving-v1\",\n  \"smoke\": {},\n  \
+         \"engine\": \"sim\",\n  \"prefill_us_per_token\": {},\n  \"modes\": [\n    {}\n  ]\n}}\n",
+        smoke,
+        prefill_us_per_token,
+        mode_rows.join(",\n    ")
+    )
 }
 
 /// The perf-trajectory section: measures the scoring/select hot path and

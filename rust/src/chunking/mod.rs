@@ -34,9 +34,24 @@ impl Chunk {
 }
 
 /// A segmentation strategy over a byte/token stream.
+///
+/// All implementations are *greedy and prefix-stable*: each chunk's
+/// extent is decided left-to-right from its start position using at most
+/// [`Chunker::max_span`] bytes of lookahead (plus already-seen backward
+/// context), so chunking a longer prefix of the same text reproduces
+/// every span whose decision window was already complete. Incremental
+/// (streaming-prefill) index builds rely on this: a span is *stable* —
+/// guaranteed identical to the one a whole-text chunking would produce —
+/// once `span.start + max_span() <= seen_len`.
 pub trait Chunker: Send + Sync {
     /// Partition `bytes` into contiguous, non-overlapping, covering chunks.
     fn chunk(&self, bytes: &[u8]) -> Vec<Chunk>;
+
+    /// Upper bound on the lookahead window a single chunk decision reads,
+    /// measured from the chunk's start. Content-aware chunkers consult
+    /// [`boundary_level`], which peeks one byte past the candidate
+    /// position, so their bound is `max_len + 1` rather than `max_len`.
+    fn max_span(&self) -> usize;
 
     fn name(&self) -> &'static str;
 }
@@ -105,6 +120,13 @@ impl Chunker for StructureAwareChunker {
         out
     }
 
+    fn max_span(&self) -> usize {
+        // +1: `boundary_level` peeks at `bytes[i + 1]` (decimal/identifier
+        // disambiguation), so the last candidate inspects one byte past
+        // the window.
+        self.max_len + 1
+    }
+
     fn name(&self) -> &'static str {
         "structure-aware"
     }
@@ -133,6 +155,10 @@ impl Chunker for FixedSizeChunker {
             start += len;
         }
         out
+    }
+
+    fn max_span(&self) -> usize {
+        self.size
     }
 
     fn name(&self) -> &'static str {
@@ -173,6 +199,10 @@ impl Chunker for SentenceChunker {
             out.push(Chunk { start, len: bytes.len() - start });
         }
         out
+    }
+
+    fn max_span(&self) -> usize {
+        self.cap + 1 // +1 for `boundary_level`'s one-byte peek
     }
 
     fn name(&self) -> &'static str {
@@ -363,6 +393,48 @@ mod tests {
                     c.name(),
                     bytes.len()
                 );
+            }
+            Ok(())
+        });
+    }
+
+    /// The prefix-stability contract incremental index builds rest on:
+    /// spans whose decision window (`start + max_span()`) is fully
+    /// inside a prefix are identical between chunking that prefix and
+    /// chunking any longer prefix of the same text.
+    #[test]
+    fn prop_chunkers_are_prefix_stable() {
+        prop::check("chunker prefix stability", 60, |g| {
+            let n = 40 + g.usize_in(0..300);
+            let bytes: Vec<u8> = (0..n)
+                .map(|_| {
+                    // includes fence (`---`/`***`) and paragraph (`\n\n`)
+                    // material so backward-context reads are exercised
+                    let pool = b"abc123 ,.;:\n{}[]\t\"-*`";
+                    pool[g.usize_in(0..pool.len())]
+                })
+                .collect();
+            let chunkers: Vec<Box<dyn Chunker>> = vec![
+                Box::new(StructureAwareChunker::new(2 + g.usize_in(0..6), 8 + g.usize_in(0..16))),
+                Box::new(FixedSizeChunker::new(1 + g.usize_in(0..24))),
+                Box::new(SentenceChunker { cap: 4 + g.usize_in(0..32) }),
+            ];
+            for c in &chunkers {
+                let full = c.chunk(&bytes);
+                let cut = g.usize_in(1..n);
+                let prefix = c.chunk(&bytes[..cut]);
+                for (a, b) in full.iter().zip(&prefix) {
+                    if a.start + c.max_span() > cut {
+                        break; // decision window ran past the prefix
+                    }
+                    prop_assert!(
+                        a == b,
+                        "{}: prefix span {:?} != full span {:?} (cut {cut})",
+                        c.name(),
+                        b,
+                        a
+                    );
+                }
             }
             Ok(())
         });

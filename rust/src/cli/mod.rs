@@ -211,18 +211,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let addr = args.flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1:7711");
     let (handle, metrics, join) = crate::coordinator::spawn(cfg)?;
-    let server = crate::server::Server::start(addr, handle.clone())?;
+    let server =
+        crate::server::Server::start(addr, handle.clone(), Some(std::sync::Arc::clone(&metrics)))?;
     println!("lychee serving on {} (JSON-lines; Ctrl-C to stop)", server.addr);
     // block forever, reporting metrics periodically
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let m = metrics.lock().unwrap();
         println!(
-            "requests={} completed={} rejected={} tokens={} p50_tpot={:.1}ms",
+            "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} p50_tpot={:.1}ms",
             m.requests,
             m.completed,
             m.rejected,
             m.tokens_out,
+            m.prefill_chunks_executed,
+            m.preemptions,
+            m.queue_depth,
             m.tpot_us.quantile(0.5) / 1e3
         );
         drop(m);

@@ -131,6 +131,16 @@ pub struct ServingConfig {
     /// gather) per decode step; 0 = auto (one per logical core, capped at
     /// the batch size), 1 = serial.
     pub retrieval_threads: usize,
+    /// Tokens per streaming-prefill chunk: the scheduler runs one chunk
+    /// per tick, interleaved with a decode step for the running batch, so
+    /// a long prompt never stalls decode for more than one chunk's
+    /// compute. 0 = monolithic (the whole prompt in a single chunk).
+    pub prefill_chunk_tokens: usize,
+    /// Consecutive scheduler ticks the head-of-queue request may wait on
+    /// arena pressure before the coordinator preempts the lowest-priority
+    /// running sequence (pages released, prefill re-queued for
+    /// recompute). 0 disables preemption (wait-only backpressure).
+    pub preempt_after_waits: usize,
 }
 
 impl Default for ServingConfig {
@@ -143,6 +153,8 @@ impl Default for ServingConfig {
             max_prompt: 2048,
             kv_pool_mb: 1024,
             retrieval_threads: 0,
+            prefill_chunk_tokens: 256,
+            preempt_after_waits: 8,
         }
     }
 }
@@ -168,6 +180,8 @@ impl ServingConfig {
             "max_prompt" => self.max_prompt = u()?,
             "kv_pool_mb" => self.kv_pool_mb = u()?,
             "retrieval_threads" => self.retrieval_threads = u()?,
+            "prefill_chunk_tokens" => self.prefill_chunk_tokens = u()?,
+            "preempt_after_waits" => self.preempt_after_waits = u()?,
             _ => bail!("unknown serving config key '{key}'"),
         }
         Ok(())
@@ -298,6 +312,21 @@ mod tests {
         assert_eq!(cfg.seed, 99);
         assert!(cfg.apply_override("nope.x=1").is_err());
         assert!(cfg.apply_override("novalue").is_err());
+    }
+
+    #[test]
+    fn chunked_prefill_and_preemption_knobs() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.serving.prefill_chunk_tokens, 256);
+        assert_eq!(cfg.serving.preempt_after_waits, 8);
+        cfg.apply_override("serving.prefill_chunk_tokens=64").unwrap();
+        cfg.apply_override("serving.preempt_after_waits=0").unwrap();
+        assert_eq!(cfg.serving.prefill_chunk_tokens, 64);
+        assert_eq!(cfg.serving.preempt_after_waits, 0);
+        cfg.validate().unwrap();
+        // 0 chunk tokens = monolithic prefill, still valid
+        cfg.apply_override("serving.prefill_chunk_tokens=0").unwrap();
+        cfg.validate().unwrap();
     }
 
     #[test]

@@ -4,19 +4,29 @@
 //! Architecture (std threads; the offline registry has no tokio):
 //!
 //! ```text
-//! clients ──submit──> mpsc ──> scheduler thread (owns Engine)
-//!                                 │  admit prefills (queue_cap bound)
+//! clients ──submit──> mpsc ──> scheduler thread (owns an EngineCore)
+//!                                 │  admit prefills (arena-reservation bound)
+//!                                 │  run ONE prefill chunk per tick
 //!                                 │  form decode batches (bucket-sized)
 //!                                 │  step engine, stream tokens back
 //! clients <──Event::Token/Done── per-request mpsc
 //! ```
 //!
-//! Scheduling policy: FCFS admission, one prefill admitted per tick
-//! (prefill is the long pole; interleaving keeps decode TPOT stable),
-//! decode batch = all running sequences up to `max_batch`.
+//! Scheduling policy: FCFS admission into a `Prefilling` queue; each tick
+//! the head prefilling sequence advances by **one chunk**
+//! (`serving.prefill_chunk_tokens`) interleaved with **one decode step**
+//! for the running batch — a long prompt can never stall decode for more
+//! than one chunk's compute (the head-of-line TPOT spike the monolithic
+//! prefill used to cause at 16k–64k prompts). Under arena pressure the
+//! head-of-queue request waits; after `serving.preempt_after_waits`
+//! consecutive waits the lowest-priority (latest-submitted) running
+//! sequence is preempted: its pages are released back to the arena and
+//! its prompt + already-generated text re-queued for recompute-style
+//! resumption (already-streamed tokens are not re-sent), instead of
+//! rejecting or starving new work.
 
 use crate::config::Config;
-use crate::engine::{Engine, Sampling, Sequence};
+use crate::engine::{Engine, EngineCore, PrefillProgress, PrefillState, Sampling, Sequence};
 use crate::util::stats::LogHistogram;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -39,7 +49,8 @@ pub struct Request {
 pub struct FinishStats {
     /// Time to first token (prefill + first decode step), ms.
     pub ttft_ms: f64,
-    /// Mean time per output token over the decode phase, ms.
+    /// Mean time per output token over the decode phase, ms. For a
+    /// preempted-and-resumed request this includes the requeue gap.
     pub tpot_ms: f64,
     pub tokens: usize,
     pub e2e_ms: f64,
@@ -60,6 +71,7 @@ pub struct Metrics {
     pub completed: u64,
     pub rejected: u64,
     pub tokens_out: u64,
+    /// Time-to-first-token distribution (µs).
     pub ttft_us: LogHistogram,
     pub tpot_us: LogHistogram,
     /// Gauge: KV arena bytes leased by live sequences (refreshed on
@@ -68,6 +80,14 @@ pub struct Metrics {
     /// Scheduler ticks the head-of-queue prefill waited for arena pages
     /// to recycle (memory backpressure).
     pub admission_waits: u64,
+    /// Streaming-prefill chunks executed (each interleaved with a decode
+    /// step for the running batch).
+    pub prefill_chunks_executed: u64,
+    /// Running sequences preempted under arena pressure (pages released,
+    /// prefill re-queued for recompute).
+    pub preemptions: u64,
+    /// Gauge: requests queued or mid-prefill (not yet decoding).
+    pub queue_depth: u64,
 }
 
 impl Metrics {
@@ -76,15 +96,54 @@ impl Metrics {
     }
 }
 
-struct Running {
-    seq: Sequence,
+/// A validated request waiting for admission. `carried` is non-zero only
+/// for preempted sequences re-queued for recompute: tokens already
+/// streamed to the client before preemption (they are not re-sent, and
+/// they count toward `max_new_tokens`). `preempted` marks a request that
+/// has already been a preemption victim once — such sequences are exempt
+/// from further victimhood, which bounds total preemptions by the
+/// request count and makes mutual-preemption livelock impossible (two
+/// requests that each fit the arena alone but not together preempt each
+/// other at most once each, then run to completion in turn).
+struct QueuedReq {
+    req: Request,
     tx: Sender<Event>,
+    submitted: Instant,
+    carried: usize,
+    preempted: bool,
+    first_token: Option<Instant>,
+    decode_started: Option<Instant>,
+}
+
+/// A sequence mid-prefill: advanced one chunk per scheduler tick.
+struct PrefillJob {
+    st: PrefillState,
+    tx: Sender<Event>,
+    policy: String,
     max_new: usize,
+    carried: usize,
+    preempted: bool,
     submitted: Instant,
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
-    /// Arena bytes reserved at admission (estimate over prompt + clamped
-    /// max_new_tokens); released from the reservation total on retire.
+    /// Arena bytes reserved at admission (estimate over prompt + the
+    /// remaining output budget); released from the reservation total on
+    /// retire / preempt / error.
+    reserved_bytes: usize,
+}
+
+/// A decoding sequence.
+struct Running {
+    seq: Sequence,
+    tx: Sender<Event>,
+    policy: String,
+    max_new: usize,
+    carried: usize,
+    /// Already preempted once — exempt from further victimhood.
+    preempted: bool,
+    submitted: Instant,
+    first_token: Option<Instant>,
+    decode_started: Option<Instant>,
     reserved_bytes: usize,
 }
 
@@ -128,22 +187,37 @@ impl Handle {
     }
 }
 
-/// The coordinator. `run` consumes it on the scheduler thread; use
-/// [`spawn`] for the common thread-owning setup.
-pub struct Coordinator {
-    engine: Engine,
+/// The coordinator, generic over the engine backend: the PJRT [`Engine`]
+/// in production, [`crate::engine::sim::SimEngine`] in scheduler tests
+/// and benches. `run` consumes it on the scheduler thread; use [`spawn`]
+/// / [`spawn_with`] for the common thread-owning setup.
+pub struct Coordinator<E: EngineCore> {
+    engine: E,
     cfg: Config,
     rx: Receiver<Msg>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
 
-/// Start a coordinator on its own thread; returns the submit handle, the
-/// shared metrics, and the scheduler join handle.
-///
-/// The engine is constructed *inside* the scheduler thread: PJRT handles
-/// (`Rc`-backed client, raw buffer pointers) are not `Send`, so the
-/// engine must live and die on the thread that drives it.
+/// Start a coordinator over the PJRT engine on its own thread; returns
+/// the submit handle, the shared metrics, and the scheduler join handle.
 pub fn spawn(cfg: Config) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::JoinHandle<()>)> {
+    let engine_cfg = cfg.clone();
+    spawn_with(cfg, move || Engine::load(engine_cfg))
+}
+
+/// Start a coordinator over any [`EngineCore`] backend.
+///
+/// The engine is constructed *inside* the scheduler thread by `factory`:
+/// PJRT handles (`Rc`-backed client, raw buffer pointers) are not `Send`,
+/// so the engine must live and die on the thread that drives it.
+pub fn spawn_with<E, F>(
+    cfg: Config,
+    factory: F,
+) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::JoinHandle<()>)>
+where
+    E: EngineCore + 'static,
+    F: FnOnce() -> Result<E> + Send + 'static,
+{
     let (tx, rx) = channel();
     let metrics = Arc::new(Mutex::new(Metrics::default()));
     let m2 = Arc::clone(&metrics);
@@ -151,7 +225,7 @@ pub fn spawn(cfg: Config) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::J
     let join = std::thread::Builder::new()
         .name("lychee-coordinator".into())
         .spawn(move || {
-            let engine = match Engine::load(cfg.clone()) {
+            let engine = match factory() {
                 Ok(e) => {
                     let _ = ready_tx.send(Ok(()));
                     e
@@ -173,32 +247,29 @@ pub fn spawn(cfg: Config) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::J
 
 /// Per-tick admission decision over the head-of-queue request.
 enum Admission {
-    /// Nothing queued, or the running set is full.
+    /// Nothing queued, or the active set is full.
     Idle,
-    /// The request fits the KV arena — prefill it (footprint attached).
+    /// The request fits the KV arena — start prefilling it (footprint
+    /// attached).
     Admit(usize),
-    /// The arena is near capacity — leave it queued until pages recycle.
-    Wait,
+    /// The arena is near capacity — leave it queued until pages recycle
+    /// (or preemption frees them). Footprint attached.
+    Wait(usize),
     /// The request can never fit the arena (footprint in bytes attached).
     Reject(usize),
 }
 
-impl Coordinator {
+impl<E: EngineCore> Coordinator<E> {
     /// Validate + enqueue one submission (shared by the drain loop and
-    /// the idle path, which previously bypassed admission checks).
-    fn enqueue(
-        &self,
-        pending: &mut VecDeque<(Request, Sender<Event>)>,
-        mut req: Request,
-        tx: Sender<Event>,
-    ) {
+    /// the idle path).
+    fn enqueue(&self, pending: &mut VecDeque<QueuedReq>, mut req: Request, tx: Sender<Event>) {
         let err = if pending.len() >= self.cfg.serving.queue_cap {
             Some("queue full".to_string())
-        } else if req.prompt.len() > self.engine.rt.max_prompt() {
+        } else if req.prompt.len() > self.engine.max_prompt() {
             Some(format!(
                 "prompt too long ({} > {})",
                 req.prompt.len(),
-                self.engine.rt.max_prompt()
+                self.engine.max_prompt()
             ))
         } else if req.max_new_tokens == 0 {
             Some("max_new_tokens must be >= 1".to_string())
@@ -215,37 +286,53 @@ impl Coordinator {
                 // request cannot monopolize the batch (or the arena)
                 req.max_new_tokens = req.max_new_tokens.min(self.cfg.serving.max_new_tokens);
                 self.metrics.lock().unwrap().requests += 1;
-                pending.push_back((req, tx));
+                pending.push_back(QueuedReq {
+                    req,
+                    tx,
+                    submitted: Instant::now(),
+                    carried: 0,
+                    preempted: false,
+                    first_token: None,
+                    decode_started: None,
+                });
             }
         }
+    }
+
+    /// Estimated final arena footprint of a queued request: its prompt
+    /// (which, for a preempted re-queue, already contains the generated
+    /// prefix) plus the remaining output budget.
+    fn footprint(&self, q: &QueuedReq) -> usize {
+        let remaining = q.req.max_new_tokens.saturating_sub(q.carried);
+        self.engine.estimate_seq_bytes(q.req.prompt.len() + remaining)
     }
 
     /// KV-arena admission control for the head-of-queue request.
     ///
     /// Checks against `reserved_total` — the sum of *estimated final*
-    /// footprints of running sequences — not current leased bytes: a
-    /// just-admitted sequence has leased only its prompt pages so far
-    /// and grows during decode (acquire never refuses mid-step), so
-    /// admitting on live usage would overcommit a bounded pool.
+    /// footprints of active (prefilling + running) sequences — not
+    /// current leased bytes: a just-admitted sequence has leased only
+    /// its prefilled pages so far and grows during decode (acquire never
+    /// refuses mid-step), so admitting on live usage would overcommit a
+    /// bounded pool.
     fn admission(
         &self,
-        pending: &VecDeque<(Request, Sender<Event>)>,
-        running: usize,
+        pending: &VecDeque<QueuedReq>,
+        active: usize,
         reserved_total: usize,
     ) -> Admission {
-        if running >= self.cfg.serving.max_batch {
+        if active >= self.cfg.serving.max_batch {
             return Admission::Idle;
         }
         match pending.front() {
             None => Admission::Idle,
-            Some((req, _)) => {
-                let need =
-                    self.engine.estimate_seq_bytes(req.prompt.len() + req.max_new_tokens);
+            Some(q) => {
+                let need = self.footprint(q);
                 let cap = self.engine.pool().capacity_bytes();
                 if need > cap {
                     Admission::Reject(need)
                 } else if reserved_total.saturating_add(need) > cap {
-                    Admission::Wait
+                    Admission::Wait(need)
                 } else {
                     Admission::Admit(need)
                 }
@@ -253,19 +340,93 @@ impl Coordinator {
         }
     }
 
+    /// Preempt the lowest-priority (latest-submitted) running sequence
+    /// whose release lets the head-of-queue request fit: its pages go
+    /// back to the arena immediately and its prompt + generated text is
+    /// re-queued for recompute (vLLM-style recompute preemption; the
+    /// victim re-enters FCFS at the back of the queue). A sequence is
+    /// victimized at most once in its lifetime — resumed sequences are
+    /// exempt — so preemptions are bounded by the request count and two
+    /// requests contending for the same arena space cannot livelock by
+    /// preempting each other forever. Returns true if a victim was
+    /// preempted.
+    fn try_preempt(
+        &self,
+        running: &mut Vec<Running>,
+        pending: &mut VecDeque<QueuedReq>,
+        need: usize,
+        reserved_total: &mut usize,
+    ) -> bool {
+        let cap = self.engine.pool().capacity_bytes();
+        let victim_idx = running
+            .iter()
+            .enumerate()
+            // once preempted, a sequence runs to completion (anti-livelock)
+            .filter(|(_, r)| !r.preempted)
+            // recompute must fit the prefill path again
+            .filter(|(_, r)| r.seq.text.len() <= self.engine.max_prompt())
+            // releasing this victim must actually make the head fit
+            .filter(|(_, r)| {
+                reserved_total.saturating_sub(r.reserved_bytes).saturating_add(need) <= cap
+            })
+            .max_by_key(|(_, r)| r.submitted)
+            .map(|(i, _)| i);
+        let Some(i) = victim_idx else { return false };
+        let victim = running.remove(i);
+        *reserved_total = reserved_total.saturating_sub(victim.reserved_bytes);
+        let Running {
+            seq,
+            tx,
+            policy,
+            max_new,
+            carried,
+            submitted,
+            first_token,
+            decode_started,
+            ..
+        } = victim;
+        let requeued = QueuedReq {
+            req: Request {
+                id: seq.id,
+                prompt: seq.text.clone(), // prompt + generated prefix
+                max_new_tokens: max_new,
+                policy,
+            },
+            tx,
+            submitted,
+            carried: carried + seq.generated.len(),
+            preempted: true,
+            first_token,
+            decode_started,
+        };
+        drop(seq); // pages recycle to the arena here
+        // back of the queue: forward progress for the waiting head is the
+        // point of preempting; the victim re-enters FCFS behind it
+        pending.push_back(requeued);
+        let mut m = self.metrics.lock().unwrap();
+        m.preemptions += 1;
+        drop(m);
+        self.refresh_pool_gauge();
+        true
+    }
+
     fn refresh_pool_gauge(&self) {
         let in_use = self.engine.pool().bytes_in_use() as u64;
         self.metrics.lock().unwrap().kv_bytes_in_use = in_use;
     }
 
-    /// Scheduler loop: admit, decode, stream, repeat.
+    /// Scheduler loop: admit, advance one prefill chunk, decode, stream,
+    /// repeat.
     pub fn run(self) {
-        let mut pending: VecDeque<(Request, Sender<Event>)> = VecDeque::new();
+        let mut pending: VecDeque<QueuedReq> = VecDeque::new();
+        let mut prefilling: VecDeque<PrefillJob> = VecDeque::new();
         let mut running: Vec<Running> = Vec::new();
         let sampling = Sampling::default();
         let mut next_seq_id = 1u64;
-        // sum of running sequences' reserved (estimated final) footprints
+        // sum of active sequences' reserved (estimated final) footprints
         let mut reserved_total: usize = 0;
+        // consecutive ticks the current head-of-queue request has waited
+        let mut wait_ticks: usize = 0;
 
         loop {
             // ---- drain the submit queue --------------------------------
@@ -278,49 +439,109 @@ impl Coordinator {
                 }
             }
 
-            // ---- admit one prefill per tick (arena backpressure) ---------
-            match self.admission(&pending, running.len(), reserved_total) {
-                Admission::Idle => {}
-                Admission::Wait => {
+            // ---- admit one request per tick (arena backpressure) --------
+            let active = running.len() + prefilling.len();
+            match self.admission(&pending, active, reserved_total) {
+                Admission::Idle => wait_ticks = 0,
+                Admission::Wait(need) => {
                     self.metrics.lock().unwrap().admission_waits += 1;
+                    wait_ticks += 1;
+                    let threshold = self.cfg.serving.preempt_after_waits;
+                    if threshold > 0
+                        && wait_ticks >= threshold
+                        && self.try_preempt(&mut running, &mut pending, need, &mut reserved_total)
+                    {
+                        wait_ticks = 0;
+                    }
                 }
                 Admission::Reject(need) => {
-                    let (req, tx) = pending.pop_front().unwrap();
+                    wait_ticks = 0;
+                    let q = pending.pop_front().unwrap();
                     self.metrics.lock().unwrap().rejected += 1;
-                    let _ = tx.send(Event::Error(format!(
+                    let _ = q.tx.send(Event::Error(format!(
                         "request {} cannot fit the kv pool: needs {} bytes, pool capacity {} bytes",
-                        req.id,
+                        q.req.id,
                         need,
                         self.engine.pool().capacity_bytes()
                     )));
                 }
                 Admission::Admit(need) => {
-                    let (req, tx) = pending.pop_front().unwrap();
-                    let submitted = Instant::now();
-                    match self.engine.prefill(next_seq_id, &req.prompt, &req.policy) {
-                        Ok(seq) => {
+                    wait_ticks = 0;
+                    let q = pending.pop_front().unwrap();
+                    match self.engine.begin_prefill(next_seq_id, &q.req.prompt, &q.req.policy) {
+                        Ok(st) => {
                             next_seq_id += 1;
                             reserved_total += need;
-                            running.push(Running {
-                                seq,
-                                tx,
-                                max_new: req.max_new_tokens,
-                                submitted,
-                                first_token: None,
-                                decode_started: None,
+                            prefilling.push_back(PrefillJob {
+                                st,
+                                tx: q.tx,
+                                policy: q.req.policy,
+                                max_new: q.req.max_new_tokens,
+                                carried: q.carried,
+                                preempted: q.preempted,
+                                submitted: q.submitted,
+                                first_token: q.first_token,
+                                decode_started: q.decode_started,
                                 reserved_bytes: need,
                             });
-                            self.refresh_pool_gauge();
                         }
                         Err(e) => {
-                            let _ = tx.send(Event::Error(format!("prefill: {e}")));
+                            let _ = q.tx.send(Event::Error(format!("prefill: {e}")));
                         }
                     }
                 }
             }
 
+            // ---- one prefill chunk for the head prefilling sequence -----
+            // (interleaved with the decode step below: a long prompt
+            // costs the running batch at most one chunk of stall per
+            // generated token)
+            if let Some(job) = prefilling.front_mut() {
+                match self.engine.prefill_chunk(&mut job.st) {
+                    Ok(progress) => {
+                        self.metrics.lock().unwrap().prefill_chunks_executed += 1;
+                        // the chunk just leased pages; keep the gauge live
+                        // for the whole (possibly long) prefill window
+                        self.refresh_pool_gauge();
+                        if progress == PrefillProgress::Ready {
+                            let job = prefilling.pop_front().unwrap();
+                            match self.engine.finish_prefill(job.st) {
+                                Ok(seq) => {
+                                    running.push(Running {
+                                        seq,
+                                        tx: job.tx,
+                                        policy: job.policy,
+                                        max_new: job.max_new,
+                                        carried: job.carried,
+                                        preempted: job.preempted,
+                                        submitted: job.submitted,
+                                        first_token: job.first_token,
+                                        decode_started: job.decode_started,
+                                        reserved_bytes: job.reserved_bytes,
+                                    });
+                                }
+                                Err(e) => {
+                                    reserved_total =
+                                        reserved_total.saturating_sub(job.reserved_bytes);
+                                    let _ = job.tx.send(Event::Error(format!("prefill: {e}")));
+                                }
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        let job = prefilling.pop_front().unwrap();
+                        reserved_total = reserved_total.saturating_sub(job.reserved_bytes);
+                        let _ = job.tx.send(Event::Error(format!("prefill: {e}")));
+                        self.refresh_pool_gauge();
+                    }
+                }
+            }
+
+            self.metrics.lock().unwrap().queue_depth =
+                (pending.len() + prefilling.len()) as u64;
+
             if running.is_empty() {
-                if pending.is_empty() {
+                if pending.is_empty() && prefilling.is_empty() {
                     // idle: block briefly for new work
                     match self
                         .rx
@@ -337,7 +558,6 @@ impl Coordinator {
 
             // ---- one decode step over the running batch -----------------
             let batch_n = running.len().min(self.cfg.serving.max_batch);
-            let step_t = Instant::now();
             let toks = {
                 let mut refs: Vec<&mut Sequence> =
                     running[..batch_n].iter_mut().map(|r| &mut r.seq).collect();
@@ -347,13 +567,13 @@ impl Coordinator {
                         for r in running.drain(..) {
                             let _ = r.tx.send(Event::Error(format!("decode: {e}")));
                         }
-                        reserved_total = 0;
+                        // prefilling jobs still hold their reservations
+                        reserved_total = prefilling.iter().map(|j| j.reserved_bytes).sum();
                         self.refresh_pool_gauge();
                         continue;
                     }
                 }
             };
-            let _step_ms = step_t.elapsed().as_secs_f64() * 1e3;
 
             // ---- stream + retire ----------------------------------------
             let mut i = 0;
@@ -369,11 +589,12 @@ impl Coordinator {
                     let mut m = self.metrics.lock().unwrap();
                     m.tokens_out += 1;
                 }
-                if r.seq.generated.len() >= r.max_new {
+                let produced = r.carried + r.seq.generated.len();
+                if produced >= r.max_new {
                     let e2e = r.submitted.elapsed().as_secs_f64() * 1e3;
                     let ttft =
                         r.first_token.map(|t| (t - r.submitted).as_secs_f64() * 1e3).unwrap_or(e2e);
-                    let n = r.seq.generated.len();
+                    let n = produced;
                     let decode_ms = r
                         .decode_started
                         .map(|t| t.elapsed().as_secs_f64() * 1e3)
@@ -409,6 +630,7 @@ impl Coordinator {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::engine::sim::{SimConfig, SimEngine};
 
     fn test_config() -> Option<Config> {
         let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -418,6 +640,15 @@ mod tests {
         let mut cfg = Config::new();
         cfg.artifacts_dir = dir.to_str().unwrap().to_string();
         Some(cfg)
+    }
+
+    /// Spawn a coordinator over the artifact-free sim engine.
+    fn spawn_sim(
+        cfg: Config,
+        sim: SimConfig,
+    ) -> (Handle, Arc<Mutex<Metrics>>, std::thread::JoinHandle<()>) {
+        let engine_cfg = cfg.clone();
+        spawn_with(cfg, move || Ok(SimEngine::new(engine_cfg, sim))).unwrap()
     }
 
     #[test]
@@ -440,6 +671,7 @@ mod tests {
             let m = metrics.lock().unwrap();
             assert_eq!(m.completed, 1);
             assert_eq!(m.tokens_out, 5);
+            assert!(m.prefill_chunks_executed >= 1);
         }
         handle.shutdown();
         join.join().unwrap();
@@ -543,6 +775,7 @@ mod tests {
         // complete via admission backpressure + page recycling
         let Some(mut cfg) = test_config() else { return };
         cfg.serving.kv_pool_mb = 1;
+        cfg.serving.preempt_after_waits = 0; // pure wait-based backpressure
         let (handle, metrics, join) = spawn(cfg).unwrap();
         let mut rxs = Vec::new();
         for i in 0..8u64 {
@@ -594,6 +827,259 @@ mod tests {
         let (a, _) = handle.generate(req(1)).unwrap();
         let (b, _) = handle.generate(req(2)).unwrap();
         assert_eq!(a, b);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    // ---- sim-engine scheduler tests (no artifacts required) ------------
+
+    #[test]
+    fn sim_serves_mixed_requests_end_to_end() {
+        let mut cfg = Config::new();
+        cfg.serving.prefill_chunk_tokens = 128;
+        let (handle, metrics, join) = spawn_sim(cfg, SimConfig::default());
+        let mut rxs = Vec::new();
+        for i in 0..3u64 {
+            rxs.push(
+                handle
+                    .submit(Request {
+                        id: i,
+                        prompt: crate::workloads::trace::prompt_text(500 + 300 * i as usize, i),
+                        max_new_tokens: 5,
+                        policy: "lychee".into(),
+                    })
+                    .unwrap(),
+            );
+        }
+        for rx in rxs {
+            let mut done = false;
+            let mut toks = 0;
+            for ev in rx {
+                match ev {
+                    Event::Token(_) => toks += 1,
+                    Event::Done(s) => {
+                        assert_eq!(s.tokens, 5);
+                        done = true;
+                        break;
+                    }
+                    Event::Error(e) => panic!("sim serve error: {e}"),
+                }
+            }
+            assert!(done);
+            assert_eq!(toks, 5);
+        }
+        // give the scheduler one idle tick to settle the queue gauge
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.completed, 3);
+        // 500/128 + 800/128 + 1100/128 chunks = 4 + 7 + 9
+        assert_eq!(m.prefill_chunks_executed, 20);
+        assert_eq!(m.kv_bytes_in_use, 0);
+        assert_eq!(m.queue_depth, 0);
+        drop(m);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    /// The starvation acceptance test: a 32k prompt admitted mid-stream
+    /// must NOT stall decode of the running short sequences — tokens
+    /// keep flowing between its prefill chunks, and no inter-token gap
+    /// approaches the monolithic full-prompt stall.
+    #[test]
+    fn long_prefill_does_not_starve_running_decodes() {
+        let mut cfg = Config::new();
+        cfg.serving.prefill_chunk_tokens = 512;
+        cfg.serving.max_new_tokens = 512;
+        let sim = SimConfig {
+            // ~26ms per 512-token chunk; a monolithic 32k prefill would
+            // be a single ~1.6s decode stall
+            prefill_us_per_token: 50,
+            ..SimConfig::default()
+        };
+        let (handle, metrics, join) = spawn_sim(cfg, sim);
+
+        // 4 short sequences, decoding
+        let mut short_rxs = Vec::new();
+        for i in 0..4u64 {
+            short_rxs.push(
+                handle
+                    .submit(Request {
+                        id: i,
+                        prompt: crate::workloads::trace::prompt_text(256, i),
+                        max_new_tokens: 400,
+                        policy: "lychee".into(),
+                    })
+                    .unwrap(),
+            );
+        }
+        // wait until every short sequence has streamed a few tokens
+        let mut short_counts = [0usize; 4];
+        let warm_deadline = Instant::now() + std::time::Duration::from_secs(30);
+        while short_counts.iter().any(|&c| c < 5) {
+            assert!(Instant::now() < warm_deadline, "short sequences never started decoding");
+            for (i, rx) in short_rxs.iter().enumerate() {
+                while let Ok(ev) = rx.try_recv() {
+                    if matches!(ev, Event::Token(_)) {
+                        short_counts[i] += 1;
+                    }
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+
+        // admit the long prompt mid-stream
+        let long_rx = handle
+            .submit(Request {
+                id: 99,
+                prompt: crate::workloads::trace::prompt_text(32 * 1024, 99),
+                max_new_tokens: 3,
+                policy: "lychee".into(),
+            })
+            .unwrap();
+
+        // count short-sequence tokens (and their inter-arrival gaps)
+        // until the long request's FIRST token arrives
+        let mut tokens_during_prefill = [0usize; 4];
+        let mut long_first_token = false;
+        let mut last_arrival = Instant::now();
+        let mut max_gap = std::time::Duration::ZERO;
+        let deadline = Instant::now() + std::time::Duration::from_secs(60);
+        while !long_first_token && Instant::now() < deadline {
+            let mut got_any = false;
+            for (i, rx) in short_rxs.iter().enumerate() {
+                while let Ok(ev) = rx.try_recv() {
+                    if matches!(ev, Event::Token(_)) {
+                        tokens_during_prefill[i] += 1;
+                        got_any = true;
+                    }
+                }
+            }
+            if got_any {
+                max_gap = max_gap.max(last_arrival.elapsed());
+                last_arrival = Instant::now();
+            }
+            while let Ok(ev) = long_rx.try_recv() {
+                if matches!(ev, Event::Token(_)) {
+                    long_first_token = true;
+                }
+            }
+            std::thread::yield_now();
+        }
+        assert!(long_first_token, "long request never produced a token");
+        // decode kept running between prefill chunks: every short
+        // sequence made real progress during the 64-chunk prefill
+        for (i, &c) in tokens_during_prefill.iter().enumerate() {
+            assert!(
+                c >= 10,
+                "short seq {i} starved: only {c} tokens while the 32k prompt prefilled \
+                 (per-seq counts: {tokens_during_prefill:?})"
+            );
+        }
+        // per-step decode latency stayed bounded: no gap anywhere near
+        // the ~1.6s monolithic stall (one chunk is ~26ms of sim compute)
+        assert!(
+            max_gap < std::time::Duration::from_millis(800),
+            "decode stalled for {max_gap:?} during the chunked prefill"
+        );
+        let m = metrics.lock().unwrap();
+        assert!(
+            m.prefill_chunks_executed >= 64,
+            "expected >= 64 chunks for 32k @512, got {}",
+            m.prefill_chunks_executed
+        );
+        drop(m);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    /// Preemption: when the head-of-queue request cannot fit the arena,
+    /// the latest-submitted running sequence is preempted (pages
+    /// released, re-queued for recompute) instead of the new request
+    /// waiting forever — and the victim still completes with exactly its
+    /// requested token count.
+    #[test]
+    fn arena_pressure_preempts_and_resumes_victim() {
+        let mut cfg = Config::new();
+        cfg.serving.prefill_chunk_tokens = 256;
+        cfg.serving.max_new_tokens = 4096;
+        // deliberately aggressive: A and B may preempt each other, but
+        // only once each (victims are exempt afterwards), so the
+        // contention resolves instead of livelocking
+        cfg.serving.preempt_after_waits = 2;
+        // Pool sized so either sequence fits alone but not both at once:
+        // A's footprint (4096 prompt + 2000 new) and B's (4096 + 20) are
+        // ~1.6 MiB and ~1.1 MiB at the sim geometry; 2 MiB covers each
+        // but not their sum.
+        cfg.serving.kv_pool_mb = 2;
+        let sim = SimConfig::default();
+        let probe = SimEngine::new(Config::new(), sim.clone());
+        let fit_a = probe.estimate_seq_bytes(4096 + 2000);
+        let fit_b = probe.estimate_seq_bytes(4096 + 20);
+        let pool_bytes = cfg.serving.kv_pool_mb * 1024 * 1024;
+        assert!(
+            pool_bytes >= fit_a && pool_bytes >= fit_b && pool_bytes < fit_a + fit_b,
+            "pool sizing broke: pool {pool_bytes}, A {fit_a}, B {fit_b}"
+        );
+
+        let (handle, metrics, join) = spawn_sim(cfg, sim);
+        // A: long-running sequence that will get preempted
+        let a_rx = handle
+            .submit(Request {
+                id: 1,
+                prompt: crate::workloads::trace::prompt_text(4096, 1),
+                max_new_tokens: 2000,
+                policy: "lychee".into(),
+            })
+            .unwrap();
+        // let A start decoding
+        let mut a_tokens = 0usize;
+        let deadline = Instant::now() + std::time::Duration::from_secs(30);
+        while a_tokens < 5 && Instant::now() < deadline {
+            while let Ok(ev) = a_rx.try_recv() {
+                if matches!(ev, Event::Token(_)) {
+                    a_tokens += 1;
+                }
+            }
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        assert!(a_tokens >= 5, "victim never started decoding");
+
+        // B: arrives while A holds most of the pool; fits alone but not
+        // alongside A -> A must be preempted
+        let (b_out, b_stats) = handle
+            .generate(Request {
+                id: 2,
+                prompt: crate::workloads::trace::prompt_text(4096, 2),
+                max_new_tokens: 20,
+                policy: "lychee".into(),
+            })
+            .unwrap();
+        assert_eq!(b_out.len(), 20);
+        assert_eq!(b_stats.tokens, 20);
+
+        // A resumes after B frees the pool and still gets ALL its tokens
+        let mut a_done = None;
+        for ev in a_rx {
+            match ev {
+                Event::Token(_) => a_tokens += 1,
+                Event::Done(s) => {
+                    a_done = Some(s);
+                    break;
+                }
+                Event::Error(e) => panic!("victim errored: {e}"),
+            }
+        }
+        let a_done = a_done.expect("victim never finished");
+        assert_eq!(a_tokens, 2000, "victim lost or duplicated tokens across preemption");
+        assert_eq!(a_done.tokens, 2000);
+        let m = metrics.lock().unwrap();
+        assert!(m.preemptions >= 1, "no preemption happened");
+        // the once-per-sequence exemption bounds mutual preemption: at
+        // most one victimization of A and one of B, never a livelock
+        assert!(m.preemptions <= 2, "preemption ping-pong: {}", m.preemptions);
+        assert_eq!(m.completed, 2);
+        assert_eq!(m.kv_bytes_in_use, 0);
+        drop(m);
         handle.shutdown();
         join.join().unwrap();
     }

@@ -19,6 +19,8 @@
 //! literals) — per-step uploads are only the gathered active set, the
 //! tiny stage activations, and the masks.
 
+pub mod sim;
+
 use crate::config::Config;
 use crate::index::reps::KeySource;
 use crate::kvcache::{KvCache, PagePool};
@@ -119,6 +121,132 @@ impl Sequence {
     }
 }
 
+/// Resumable state of a chunked streaming prefill: the paged K/V
+/// accumulated so far plus the per-layer policy indexes under
+/// construction. Produced by [`EngineCore::begin_prefill`], advanced one
+/// chunk at a time by [`EngineCore::prefill_chunk`] (the scheduler
+/// interleaves these calls with decode steps), and converted into a
+/// decode-ready [`Sequence`] by [`EngineCore::finish_prefill`]. Dropping
+/// the state (e.g. on preemption) recycles every leased page.
+pub struct PrefillState {
+    pub(crate) id: u64,
+    pub(crate) prompt: Vec<u8>,
+    pub(crate) kv: KvCache,
+    pub(crate) policies: Vec<Box<dyn Policy>>,
+    /// Tokens prefilled + indexed so far (== next chunk's start).
+    pub(crate) done: usize,
+    /// Logits at the last prompt position (set by the final chunk).
+    pub(crate) last_logits: Option<Vec<f32>>,
+    pub(crate) chunks_executed: usize,
+}
+
+impl PrefillState {
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn prompt(&self) -> &[u8] {
+        &self.prompt
+    }
+
+    /// Tokens prefilled so far.
+    pub fn done(&self) -> usize {
+        self.done
+    }
+
+    pub fn total(&self) -> usize {
+        self.prompt.len()
+    }
+
+    pub fn is_ready(&self) -> bool {
+        self.done == self.prompt.len() && self.last_logits.is_some()
+    }
+
+    pub fn chunks_executed(&self) -> usize {
+        self.chunks_executed
+    }
+
+    /// Shared back half of `finish_prefill` (PJRT and sim engines).
+    pub(crate) fn into_sequence(self) -> Result<Sequence> {
+        let PrefillState { id, prompt, kv, policies, done, last_logits, .. } = self;
+        let Some(last_logits) = last_logits else {
+            bail!("finish_prefill before the final chunk ({done}/{} tokens)", prompt.len());
+        };
+        Ok(Sequence {
+            id,
+            pos: prompt.len(),
+            text: prompt,
+            kv,
+            policies,
+            last_logits,
+            generated: Vec::new(),
+            timer: PhaseTimer::new(),
+            scratch: SelectScratch::new(),
+            rng: Rng::new(id ^ 0x5EED),
+        })
+    }
+}
+
+/// Outcome of one [`EngineCore::prefill_chunk`] call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PrefillProgress {
+    /// More prompt remains; call `prefill_chunk` again.
+    Pending,
+    /// The whole prompt is prefilled; call `finish_prefill`.
+    Ready,
+}
+
+/// What the continuous-batching coordinator needs from an engine: the
+/// chunked-prefill state machine, batched decode, and arena accounting.
+/// Implemented by the PJRT-backed [`Engine`] and by the artifact-free
+/// [`sim::SimEngine`] (real policies/index/arena over synthetic K/V),
+/// which lets the scheduler be tested and benchmarked — including 32k+
+/// prompts beyond the compiled prefill buckets — without HLO artifacts.
+pub trait EngineCore {
+    /// Start a chunked prefill (validates the prompt, leases nothing yet).
+    fn begin_prefill(&self, id: u64, prompt: &[u8], policy_name: &str) -> Result<PrefillState>;
+
+    /// Process roughly `serving.prefill_chunk_tokens` further prompt
+    /// tokens (0 = the whole remaining prompt; bucketed engines advance
+    /// to the edge of the compute bucket the chunk already pays for):
+    /// append their K/V to the paged arena and absorb them into every
+    /// layer policy via [`Policy::extend`].
+    fn prefill_chunk(&self, st: &mut PrefillState) -> Result<PrefillProgress>;
+
+    /// Convert a `Ready` prefill state into a decode-ready sequence.
+    fn finish_prefill(&self, st: PrefillState) -> Result<Sequence>;
+
+    /// One decode step over a batch; returns the sampled token per
+    /// sequence.
+    fn decode_batch(&self, seqs: &mut [&mut Sequence], sampling: &Sampling) -> Result<Vec<u8>>;
+
+    /// Arena bytes a sequence of `n_tokens` will lease (admission
+    /// control's footprint estimate).
+    fn estimate_seq_bytes(&self, n_tokens: usize) -> usize;
+
+    /// The shared KV page arena.
+    fn pool(&self) -> &Arc<PagePool>;
+
+    /// Longest admissible prompt in tokens.
+    fn max_prompt(&self) -> usize;
+}
+
+/// Run `f` once per layer policy with that layer's key view — the shared
+/// build/extend loop of the prefill, synthetic-sequence, and sim paths.
+pub(crate) fn for_each_policy_ctx(
+    kv: &KvCache,
+    text: &[u8],
+    n: usize,
+    policies: &mut [Box<dyn Policy>],
+    mut f: impl FnMut(&mut dyn Policy, &Ctx),
+) {
+    for (l, p) in policies.iter_mut().enumerate() {
+        let keys = LayerKeys { cache: kv, layer: l, n };
+        let ctx = Ctx { keys: &keys, text, n };
+        f(p.as_mut(), &ctx);
+    }
+}
+
 /// The engine: runtime + weights + device-cached weight literals + the
 /// shared KV page arena every sequence leases from.
 pub struct Engine {
@@ -206,49 +334,15 @@ impl Engine {
             .collect()
     }
 
-    /// Prefill a prompt through the monolithic prefill program; returns a
-    /// ready-to-decode sequence (Algorithm 1, phase 1).
+    /// Prefill a whole prompt; returns a ready-to-decode sequence
+    /// (Algorithm 1, phase 1). Drive-to-completion wrapper over the
+    /// chunked state machine — the eval harness and examples use this;
+    /// the serving scheduler drives [`EngineCore::prefill_chunk`] itself
+    /// so decode steps interleave with the chunks.
     pub fn prefill(&self, id: u64, prompt: &[u8], policy_name: &str) -> Result<Sequence> {
-        if prompt.is_empty() {
-            bail!("empty prompt");
-        }
-        let dims = self.dims().clone();
-        let s_bucket = self.rt.prefill_bucket(prompt.len())?;
-        let mut tokens = vec![0i32; s_bucket];
-        for (i, &b) in prompt.iter().enumerate() {
-            tokens[i] = b as i32;
-        }
-        let tok_lit = lit_i32(&tokens, &[s_bucket])?;
-        let len_lit = Literal::scalar(prompt.len() as i32);
-        let mut args: Vec<&Literal> = self.wlits.iter().collect();
-        args.push(&tok_lit);
-        args.push(&len_lit);
-        let outs = self.rt.exec(&format!("prefill_s{s_bucket}"), &args)?;
-        let k_flat = to_f32_vec(&outs[0])?;
-        let v_flat = to_f32_vec(&outs[1])?;
-        let logits = to_f32_vec(&outs[3])?;
-
-        let mut kv =
-            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
-        kv.load_prefill(&k_flat, &v_flat, s_bucket, prompt.len())?;
-
-        let mut policies = self.make_policies(policy_name)?;
-        for (l, p) in policies.iter_mut().enumerate() {
-            let keys = LayerKeys { cache: &kv, layer: l, n: prompt.len() };
-            p.build(&Ctx { keys: &keys, text: prompt, n: prompt.len() });
-        }
-        Ok(Sequence {
-            id,
-            text: prompt.to_vec(),
-            kv,
-            policies,
-            pos: prompt.len(),
-            last_logits: logits,
-            generated: Vec::new(),
-            timer: PhaseTimer::new(),
-            scratch: SelectScratch::new(),
-            rng: Rng::new(id ^ 0x5EED),
-        })
+        let mut st = EngineCore::begin_prefill(self, id, prompt, policy_name)?;
+        while EngineCore::prefill_chunk(self, &mut st)? == PrefillProgress::Pending {}
+        EngineCore::finish_prefill(self, st)
     }
 
     /// Build a sequence with synthetic KV content of `n_tokens` (for the
@@ -277,10 +371,7 @@ impl Engine {
             kv.append_token(&kr, &vr)?;
         }
         let mut policies = self.make_policies(policy_name)?;
-        for (l, p) in policies.iter_mut().enumerate() {
-            let keys = LayerKeys { cache: &kv, layer: l, n: n_tokens };
-            p.build(&Ctx { keys: &keys, text: &text, n: n_tokens });
-        }
+        for_each_policy_ctx(&kv, &text, n_tokens, &mut policies, |p, ctx| p.build(ctx));
         Ok(Sequence {
             id,
             text,
@@ -506,6 +597,99 @@ impl Engine {
     }
 }
 
+impl EngineCore for Engine {
+    fn begin_prefill(&self, id: u64, prompt: &[u8], policy_name: &str) -> Result<PrefillState> {
+        if prompt.is_empty() {
+            bail!("empty prompt");
+        }
+        // fail before any pages are leased if no bucket covers the prompt
+        self.rt.prefill_bucket(prompt.len())?;
+        let dims = self.dims();
+        let kv =
+            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
+        let policies = self.make_policies(policy_name)?;
+        Ok(PrefillState {
+            id,
+            prompt: prompt.to_vec(),
+            kv,
+            policies,
+            done: 0,
+            last_logits: None,
+            chunks_executed: 0,
+        })
+    }
+
+    /// One streaming-prefill chunk. The compiled prefill programs are
+    /// self-contained (weights + token ids + valid length — no past-KV
+    /// input), so each chunk runs the *prefix* `[0, end)` through the
+    /// smallest bucket covering `end` and harvests only the new K/V rows
+    /// `[done, end)`: causal attention with exact padding masks makes a
+    /// prefix row independent of bucket size, and the final chunk runs
+    /// the very same program invocation as a monolithic prefill, so its
+    /// logits are bit-identical to the unchunked path.
+    fn prefill_chunk(&self, st: &mut PrefillState) -> Result<PrefillProgress> {
+        let total = st.prompt.len();
+        if st.done >= total {
+            return Ok(PrefillProgress::Ready);
+        }
+        let chunk = self.cfg.serving.prefill_chunk_tokens;
+        let target = if chunk == 0 { total } else { (st.done + chunk).min(total) };
+        // Fill the bucket we are already paying for: the chunk's program
+        // recomputes the whole prefix at `bucket(target)` regardless of
+        // how few new tokens it covers, so advancing to the bucket edge
+        // costs the same per-tick stall while minimizing total recompute
+        // (with the seed's coarse {128, 2048} buckets, a smaller step
+        // would multiply prefill FLOPs for zero latency benefit).
+        let s_bucket = self.rt.prefill_bucket(target)?;
+        let end = s_bucket.min(total);
+        let mut tokens = vec![0i32; s_bucket];
+        for (i, &b) in st.prompt[..end].iter().enumerate() {
+            tokens[i] = b as i32;
+        }
+        let tok_lit = lit_i32(&tokens, &[s_bucket])?;
+        let len_lit = Literal::scalar(end as i32);
+        let mut args: Vec<&Literal> = self.wlits.iter().collect();
+        args.push(&tok_lit);
+        args.push(&len_lit);
+        let outs = self.rt.exec(&format!("prefill_s{s_bucket}"), &args)?;
+        let k_flat = to_f32_vec(&outs[0])?;
+        let v_flat = to_f32_vec(&outs[1])?;
+        st.kv.load_prefill_range(&k_flat, &v_flat, s_bucket, st.done, end)?;
+        let from = st.done;
+        for_each_policy_ctx(&st.kv, &st.prompt, end, &mut st.policies, |p, ctx| {
+            p.extend(ctx, from..end)
+        });
+        st.done = end;
+        st.chunks_executed += 1;
+        if end == total {
+            st.last_logits = Some(to_f32_vec(&outs[3])?);
+            Ok(PrefillProgress::Ready)
+        } else {
+            Ok(PrefillProgress::Pending)
+        }
+    }
+
+    fn finish_prefill(&self, st: PrefillState) -> Result<Sequence> {
+        st.into_sequence()
+    }
+
+    fn decode_batch(&self, seqs: &mut [&mut Sequence], sampling: &Sampling) -> Result<Vec<u8>> {
+        Engine::decode_batch(self, seqs, sampling)
+    }
+
+    fn estimate_seq_bytes(&self, n_tokens: usize) -> usize {
+        Engine::estimate_seq_bytes(self, n_tokens)
+    }
+
+    fn pool(&self) -> &Arc<PagePool> {
+        Engine::pool(self)
+    }
+
+    fn max_prompt(&self) -> usize {
+        self.rt.max_prompt()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -592,6 +776,69 @@ mod tests {
         );
         assert!(seq.index_bytes() > 0);
         assert!(seq.kv_bytes() > 3000 * 128 * 4 * 2);
+    }
+
+    #[test]
+    fn chunked_prefill_matches_monolithic_decode() {
+        // The engine-level half of the streaming-prefill property: a
+        // prompt prefilled in small chunks must decode to the same
+        // tokens (and near-identical logits) as the monolithic path,
+        // for both a stateless and an index-building policy.
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        // > 128 tokens so the seed's {128, 2048} prefill buckets split
+        // the prompt into two genuine chunks (chunk advances to the
+        // bucket edge it is paying for)
+        let prompt: Vec<u8> = crate::workloads::trace::prompt_text(300, 17);
+        for policy in ["full", "lychee", "quest"] {
+            let mut mono_cfg = Config::new();
+            mono_cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+            mono_cfg.serving.prefill_chunk_tokens = 0; // monolithic
+            let mono_eng = Engine::load(mono_cfg).unwrap();
+            let mut mono = mono_eng.prefill(1, &prompt, policy).unwrap();
+            let mono_prefill_logits = mono.last_logits.clone();
+            let mono_toks = mono_eng.generate(&mut mono, 6).unwrap();
+
+            let mut chunk_cfg = Config::new();
+            chunk_cfg.artifacts_dir = dir.to_str().unwrap().to_string();
+            chunk_cfg.serving.prefill_chunk_tokens = 64;
+            let chunk_eng = Engine::load(chunk_cfg).unwrap();
+            let mut st = chunk_eng.begin_prefill(1, &prompt, policy).unwrap();
+            // chunk 1: target 64 -> bucket 128 -> done = 128
+            assert_eq!(chunk_eng.prefill_chunk(&mut st).unwrap(), PrefillProgress::Pending);
+            assert_eq!(st.done(), 128);
+            // chunk 2: target 192 -> bucket 2048 -> done = 300 (total)
+            assert_eq!(chunk_eng.prefill_chunk(&mut st).unwrap(), PrefillProgress::Ready);
+            assert_eq!(st.done(), 300);
+            assert_eq!(st.chunks_executed(), 2);
+            let mut seq = chunk_eng.finish_prefill(st).unwrap();
+            assert_eq!(seq.pos, prompt.len());
+            assert_eq!(seq.kv.len(), prompt.len());
+            // final-chunk logits come from the same program invocation as
+            // the monolithic prefill: bit-identical
+            assert_eq!(seq.last_logits, mono_prefill_logits, "policy {policy}");
+            let chunk_toks = chunk_eng.generate(&mut seq, 6).unwrap();
+            assert_eq!(chunk_toks, mono_toks, "policy {policy}: chunked decode diverged");
+        }
+    }
+
+    #[test]
+    fn finish_prefill_rejects_incomplete_state() {
+        let Some(eng) = engine() else { return };
+        let mut cfg2 = eng.cfg.clone();
+        cfg2.serving.prefill_chunk_tokens = 64;
+        let eng2 = Engine::load(cfg2).unwrap();
+        // 200 tokens: the first 64-token chunk advances to the 128 bucket
+        // edge, leaving the prefill mid-flight
+        let prompt = crate::workloads::trace::prompt_text(200, 3);
+        let mut st = eng2.begin_prefill(1, &prompt, "full").unwrap();
+        assert_eq!(eng2.prefill_chunk(&mut st).unwrap(), PrefillProgress::Pending);
+        assert!(!st.is_ready());
+        assert!(eng2.finish_prefill(st).is_err());
+        // empty prompts are rejected before any pages lease
+        assert!(eng2.begin_prefill(2, b"", "full").is_err());
     }
 
     #[test]

@@ -128,9 +128,31 @@ impl HierarchicalIndex {
     }
 
     /// Build the full pyramid from chunk spans over a key source
-    /// (prefill phase, Algorithm 1 lines 2–3).
+    /// (prefill phase, Algorithm 1 lines 2–3): pool a representative per
+    /// span, then cluster via [`Self::build_pooled`].
     pub fn build(keys: &dyn KeySource, spans: &[Chunk], params: IndexParams) -> Self {
         let d = keys.dim();
+        let mut reps = Vec::with_capacity(spans.len() * d);
+        for c in spans {
+            reps.extend_from_slice(&pool_rep(params.pooling, keys, c.start, c.len));
+        }
+        Self::build_pooled(d, params, spans, reps)
+    }
+
+    /// Build the pyramid from already-pooled representatives (row-major
+    /// `[spans.len(), d]`, unit norm). This is the shared back half of
+    /// [`Self::build`], the re-clustering path, and the chunked-prefill
+    /// incremental build — which stages spans + reps one prefill chunk at
+    /// a time and clusters once at the end, so a chunked build is
+    /// bit-identical to a monolithic one (same rep matrix, same seeded
+    /// k-means).
+    pub fn build_pooled(
+        d: usize,
+        params: IndexParams,
+        spans: &[Chunk],
+        reps: Vec<f32>,
+    ) -> Self {
+        assert_eq!(spans.len() * d, reps.len(), "rep matrix shape");
         let mut idx = HierarchicalIndex::empty(d, params);
         if spans.is_empty() {
             return idx;
@@ -138,10 +160,8 @@ impl HierarchicalIndex {
 
         // --- leaf tier: representatives straight into the SoA matrix ----
         let m = spans.len();
-        idx.chunk_reps.reserve(m * d);
+        idx.chunk_reps = reps;
         for c in spans {
-            let rep = pool_rep(idx.params.pooling, keys, c.start, c.len);
-            idx.chunk_reps.extend_from_slice(&rep);
             idx.chunk_starts.push(c.start);
             idx.chunk_lens.push(c.len);
             idx.chunk_clusters.push(0);

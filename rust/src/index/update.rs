@@ -223,47 +223,16 @@ impl HierarchicalIndex {
 
     /// Build from precomputed representatives (row-major `[spans.len(),
     /// d]`) — synthetic workloads + the re-clustering path, which must
-    /// not re-pool token keys.
+    /// not re-pool token keys. Thin alias of
+    /// [`HierarchicalIndex::build_pooled`] (which replaced the old
+    /// re-pool-through-a-fake-KeySource trick and is bit-exact).
     pub fn build_from_reps(
         d: usize,
         params: super::hierarchy::IndexParams,
         spans: &[Chunk],
         reps: Vec<f32>,
     ) -> HierarchicalIndex {
-        assert_eq!(spans.len() * d, reps.len());
-        struct RepSource {
-            flat: Vec<f32>,
-            d: usize,
-        }
-        impl KeySource for RepSource {
-            fn dim(&self) -> usize {
-                self.d
-            }
-            fn key(&self, token: usize) -> &[f32] {
-                &self.flat[token * self.d..(token + 1) * self.d]
-            }
-            fn len(&self) -> usize {
-                self.flat.len() / self.d
-            }
-            fn as_rows(&self) -> Option<&[f32]> {
-                Some(&self.flat)
-            }
-        }
-        // Trick: treat each chunk's rep as a single "token" so build()
-        // pools it back to itself (mean of one normalized vector).
-        let unit_spans: Vec<Chunk> = (0..spans.len()).map(|i| Chunk { start: i, len: 1 }).collect();
-        let mut idx = HierarchicalIndex::build(&RepSource { flat: reps, d }, &unit_spans, params);
-        // restore real token spans
-        for (i, s) in spans.iter().enumerate() {
-            idx.chunk_starts[i] = s.start;
-            idx.chunk_lens[i] = s.len;
-        }
-        // fix cached token counts
-        for fi in 0..idx.num_clusters() {
-            let tokens: usize = idx.fine_members[fi].iter().map(|&ci| idx.chunk_lens[ci]).sum();
-            idx.fine_token_counts[fi] = tokens;
-        }
-        idx
+        Self::build_pooled(d, params, spans, reps)
     }
 }
 

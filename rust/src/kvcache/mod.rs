@@ -337,6 +337,22 @@ impl KvCache {
         s_bucket: usize,
         n_tokens: usize,
     ) -> Result<()> {
+        self.load_prefill_range(k_flat, v_flat, s_bucket, 0, n_tokens)
+    }
+
+    /// Bulk-load rows `[from, to)` of a prefill result (chunked streaming
+    /// prefill: each chunk's program recomputes the whole prefix at its
+    /// bucket, but only the newly covered rows are appended — earlier
+    /// rows are already in the cache and must not move). `from` must
+    /// equal the current cache length.
+    pub fn load_prefill_range(
+        &mut self,
+        k_flat: &[f32],
+        v_flat: &[f32],
+        s_bucket: usize,
+        from: usize,
+        to: usize,
+    ) -> Result<()> {
         let row = self.row_dim();
         if k_flat.len() != self.layers * s_bucket * row {
             bail!(
@@ -347,7 +363,13 @@ impl KvCache {
                 row
             );
         }
-        for t in 0..n_tokens {
+        if from != self.len {
+            bail!("prefill range starts at {from}, cache has {} tokens", self.len);
+        }
+        if to > s_bucket || from > to {
+            bail!("prefill range [{from}, {to}) outside bucket {s_bucket}");
+        }
+        for t in from..to {
             for l in 0..self.layers {
                 let off = (l * s_bucket + t) * row;
                 self.k[l].append(&self.pool, &k_flat[off..off + row]);
@@ -583,6 +605,43 @@ mod tests {
     fn load_prefill_rejects_bad_size() {
         let mut c = mk(2);
         assert!(c.load_prefill(&[0.0; 7], &[0.0; 7], 4, 2).is_err());
+    }
+
+    #[test]
+    fn load_prefill_range_appends_incrementally() {
+        // chunked prefill: two range loads (with growing buckets, as the
+        // engine's bucket-per-chunk resolution produces) must equal one
+        // monolithic load
+        let layers = 2;
+        let row = 8;
+        let fill = |s: usize| {
+            let mut k = vec![0.0f32; layers * s * row];
+            for l in 0..layers {
+                for t in 0..s {
+                    for r in 0..row {
+                        k[(l * s + t) * row + r] = (l * 1000 + t * 10 + r) as f32;
+                    }
+                }
+            }
+            k
+        };
+        let mut mono = mk(2);
+        let flat6 = fill(6);
+        mono.load_prefill(&flat6, &flat6, 6, 5).unwrap();
+        let mut chunked = mk(2);
+        let flat4 = fill(4);
+        chunked.load_prefill_range(&flat4, &flat4, 4, 0, 3).unwrap();
+        chunked.load_prefill_range(&flat6, &flat6, 6, 3, 5).unwrap();
+        assert_eq!(chunked.len(), 5);
+        for l in 0..layers {
+            for t in 0..5 {
+                assert_eq!(chunked.key_row(l, t), mono.key_row(l, t), "layer {l} tok {t}");
+            }
+        }
+        // gaps and overlaps are rejected
+        assert!(chunked.load_prefill_range(&flat6, &flat6, 6, 6, 6).is_err());
+        assert!(chunked.load_prefill_range(&flat6, &flat6, 6, 4, 6).is_err());
+        assert!(chunked.load_prefill_range(&flat6, &flat6, 6, 5, 7).is_err());
     }
 
     #[test]

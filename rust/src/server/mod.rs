@@ -7,18 +7,22 @@
 //! <- {"token": "t"}            (streamed, one per generated token)
 //! <- {"done": true, "tokens": 32, "ttft_ms": ..., "tpot_ms": ...}
 //! or {"error": "..."}
+//!
+//! -> {"metrics": true}
+//! <- {"requests": ..., "completed": ..., "prefill_chunks_executed": ...,
+//!     "preemptions": ..., "queue_depth": ..., "ttft_p50_us": ..., ...}
 //! ```
 //!
 //! Thread-per-connection (serving CPU-bound decode, connection counts
 //! are small); the coordinator handle is cloneable and thread-safe.
 
-use crate::coordinator::{Event, Handle, Request};
+use crate::coordinator::{Event, Handle, Metrics, Request};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// A running TCP server; dropping stops accepting (in-flight requests
 /// finish on the coordinator).
@@ -30,8 +34,14 @@ pub struct Server {
 
 impl Server {
     /// Bind and start serving on `addr` (use port 0 for an OS-assigned
-    /// port; the bound address is in `server.addr`).
-    pub fn start(addr: &str, handle: Handle) -> Result<Server> {
+    /// port; the bound address is in `server.addr`). Pass the
+    /// coordinator's shared [`Metrics`] to enable the `{"metrics": true}`
+    /// scrape request.
+    pub fn start(
+        addr: &str,
+        handle: Handle,
+        metrics: Option<Arc<Mutex<Metrics>>>,
+    ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
@@ -46,8 +56,9 @@ impl Server {
                         Ok((stream, _)) => {
                             let h = handle.clone();
                             let ids = Arc::clone(&next_id);
+                            let m = metrics.clone();
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, h, &ids);
+                                let _ = handle_conn(stream, h, &ids, m);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -130,7 +141,33 @@ pub fn parse_request(j: &Json) -> std::result::Result<WireRequest, String> {
     Ok(WireRequest { prompt: prompt.as_bytes().to_vec(), max_new_tokens, policy })
 }
 
-fn handle_conn(stream: TcpStream, handle: Handle, ids: &AtomicU64) -> Result<()> {
+/// Render the serving metrics as one JSON reply line.
+fn metrics_json(m: &Metrics) -> Json {
+    Json::obj(vec![
+        ("requests", Json::num(m.requests as f64)),
+        ("completed", Json::num(m.completed as f64)),
+        ("rejected", Json::num(m.rejected as f64)),
+        ("tokens_out", Json::num(m.tokens_out as f64)),
+        ("kv_bytes_in_use", Json::num(m.kv_bytes_in_use as f64)),
+        ("admission_waits", Json::num(m.admission_waits as f64)),
+        ("prefill_chunks_executed", Json::num(m.prefill_chunks_executed as f64)),
+        ("preemptions", Json::num(m.preemptions as f64)),
+        ("queue_depth", Json::num(m.queue_depth as f64)),
+        ("ttft_p50_us", Json::num(m.ttft_us.quantile(0.5))),
+        ("ttft_p99_us", Json::num(m.ttft_us.quantile(0.99))),
+        ("ttft_mean_us", Json::num(m.ttft_us.mean())),
+        ("tpot_p50_us", Json::num(m.tpot_us.quantile(0.5))),
+        ("tpot_p99_us", Json::num(m.tpot_us.quantile(0.99))),
+        ("tpot_mean_us", Json::num(m.tpot_us.mean())),
+    ])
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    handle: Handle,
+    ids: &AtomicU64,
+    metrics: Option<Arc<Mutex<Metrics>>>,
+) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
     let reader = BufReader::new(stream);
@@ -151,6 +188,16 @@ fn handle_conn(stream: TcpStream, handle: Handle, ids: &AtomicU64) -> Result<()>
                 continue;
             }
         };
+        if parsed.get("metrics").as_bool() == Some(true) {
+            match &metrics {
+                Some(m) => {
+                    let j = metrics_json(&m.lock().unwrap());
+                    writeln!(writer, "{}", j.dump())?;
+                }
+                None => reply_err(&mut writer, "metrics not enabled on this server")?,
+            }
+            continue;
+        }
         let wire = match parse_request(&parsed) {
             Ok(w) => w,
             Err(msg) => {
@@ -244,6 +291,18 @@ impl Client {
         }
         anyhow::bail!("connection closed mid-stream")
     }
+
+    /// Scrape the server's metrics (`{"metrics": true}` request).
+    pub fn metrics(&mut self) -> Result<Json> {
+        writeln!(self.stream, "{}", Json::obj(vec![("metrics", Json::Bool(true))]).dump())?;
+        let mut line = String::new();
+        BufReader::new(self.stream.try_clone()?).read_line(&mut line)?;
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad metrics reply: {e}"))?;
+        if let Some(e) = j.get("error").as_str() {
+            anyhow::bail!("server error: {e}");
+        }
+        Ok(j)
+    }
 }
 
 #[cfg(test)]
@@ -266,8 +325,8 @@ mod tests {
     #[test]
     fn tcp_round_trip() {
         let Some(cfg) = test_config() else { return };
-        let (handle, _m, join) = spawn(cfg).unwrap();
-        let server = Server::start("127.0.0.1:0", handle.clone()).unwrap();
+        let (handle, m, join) = spawn(cfg).unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone(), Some(m)).unwrap();
         let addr = server.addr;
 
         let mut client = Client::connect(&addr).unwrap();
@@ -280,6 +339,53 @@ mod tests {
         let res2 = client.generate("another one.", 3, "full").unwrap();
         assert_eq!(res2.tokens, 3);
 
+        server.stop();
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    /// Server round-trip over the artifact-free sim coordinator: tokens
+    /// stream, and the metrics scrape reports the chunked-prefill
+    /// counters and latency histograms end to end.
+    #[test]
+    fn sim_round_trip_streams_and_scrapes_metrics() {
+        let mut cfg = crate::config::Config::new();
+        cfg.serving.prefill_chunk_tokens = 64;
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) = crate::coordinator::spawn_with(cfg, move || {
+            Ok(crate::engine::sim::SimEngine::new(
+                engine_cfg,
+                crate::engine::sim::SimConfig::default(),
+            ))
+        })
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone(), Some(metrics)).unwrap();
+
+        let mut client = Client::connect(&server.addr).unwrap();
+        let prompt = String::from_utf8(crate::workloads::trace::prompt_text(300, 3)).unwrap();
+        let res = client.generate(&prompt, 5, "lychee").unwrap();
+        assert_eq!(res.tokens, 5);
+        assert!(res.ttft_ms > 0.0);
+
+        // one idle scheduler tick so the queue gauge settles to 0
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let m = client.metrics().unwrap();
+        assert_eq!(m.get("completed").as_usize(), Some(1));
+        assert_eq!(m.get("tokens_out").as_usize(), Some(5));
+        // 300-token prompt at 64-token chunks = 5 chunks
+        assert_eq!(m.get("prefill_chunks_executed").as_usize(), Some(5));
+        assert_eq!(m.get("preemptions").as_usize(), Some(0));
+        assert_eq!(m.get("queue_depth").as_usize(), Some(0));
+        assert!(m.get("ttft_p50_us").as_f64().unwrap_or(0.0) > 0.0);
+        assert!(m.get("tpot_p50_us").as_f64().is_some());
+
+        // a server started without metrics answers the scrape with an error
+        let server2 = Server::start("127.0.0.1:0", handle.clone(), None).unwrap();
+        let mut client2 = Client::connect(&server2.addr).unwrap();
+        let err = client2.metrics().unwrap_err().to_string();
+        assert!(err.contains("metrics not enabled"), "{err}");
+
+        server2.stop();
         server.stop();
         handle.shutdown();
         join.join().unwrap();
@@ -333,7 +439,7 @@ mod tests {
     fn bad_request_gets_error_line() {
         let Some(cfg) = test_config() else { return };
         let (handle, _m, join) = spawn(cfg).unwrap();
-        let server = Server::start("127.0.0.1:0", handle.clone()).unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone(), None).unwrap();
         let mut stream = TcpStream::connect(server.addr).unwrap();
         writeln!(stream, "{{\"nope\": 1}}").unwrap();
         let mut line = String::new();

@@ -97,6 +97,34 @@ impl Policy for ArkVale {
         self.open_len = 0;
     }
 
+    /// Incremental build: ball summaries for complete `PAGE`-aligned
+    /// pages are computed as soon as their tokens are prefilled; the
+    /// final chunk seals the trailing partial page, landing on exactly
+    /// the monolithic pagination.
+    fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
+        if new.start == 0 {
+            self.d = ctx.keys.dim();
+            self.starts.clear();
+            self.lens.clear();
+            self.centroids.clear();
+            self.radii.clear();
+            self.open_start = None;
+            self.open_len = 0;
+        }
+        let mut f = self.starts.last().map_or(0, |s| s + self.lens.last().unwrap());
+        while f + PAGE <= new.end {
+            self.push_page(ctx.keys, f, PAGE);
+            f += PAGE;
+        }
+        if new.end >= ctx.text.len() {
+            if f < new.end {
+                self.push_page(ctx.keys, f, new.end - f);
+            }
+            self.open_start = None;
+            self.open_len = 0;
+        }
+    }
+
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {

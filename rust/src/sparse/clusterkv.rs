@@ -88,6 +88,41 @@ impl Policy for ClusterKv {
         self.cluster_all(ctx, ctx.n);
     }
 
+    /// Incremental build: intermediate chunks are absorbed by
+    /// nearest-centroid assignment (the same O(k·d)-per-token path
+    /// `on_token` uses); the final chunk runs the full global re-cluster
+    /// — ClusterKV's documented update cost for global methods — which
+    /// wipes the intermediate assignments and lands on exactly the
+    /// monolithic `build` state.
+    fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
+        if new.start == 0 {
+            self.centroids.clear();
+            self.members.clear();
+            self.n_indexed = 0;
+            self.stale = 0;
+        }
+        if new.end >= ctx.text.len() {
+            self.cluster_all(ctx, new.end);
+            return;
+        }
+        if self.centroids.is_empty() {
+            self.cluster_all(ctx, new.end);
+            return;
+        }
+        let k = self.members.len();
+        for t in new.clone() {
+            self.key_buf.clear();
+            self.key_buf.extend_from_slice(ctx.keys.key(t));
+            linalg::normalize(&mut self.key_buf);
+            self.score_buf.clear();
+            self.score_buf.resize(k, 0.0);
+            linalg::matvec(&self.centroids, self.d, &self.key_buf, &mut self.score_buf);
+            self.members[linalg::argmax(&self.score_buf)].push(t);
+        }
+        self.n_indexed = new.end;
+        self.stale += new.len();
+    }
+
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {
         let budget = self.cfg.budget;
         if pos <= budget {

@@ -18,12 +18,31 @@ pub struct LycheePolicy {
     /// SentenceKV-style flat mode: score chunks directly without the
     /// coarse/fine pyramid.
     flat: bool,
+    /// Chunked-prefill staging (the incremental build path): spans and
+    /// pooled representatives accumulated chunk-by-chunk; the pyramid is
+    /// clustered once when the final prefill chunk lands, so a chunked
+    /// build is bit-identical to a monolithic one.
+    staged_spans: Vec<crate::chunking::Chunk>,
+    staged_reps: Vec<f32>,
+    /// End of the last staged span (the chunker restarts here — spans are
+    /// self-synchronizing at their own boundaries).
+    staged_upto: usize,
 }
 
 impl LycheePolicy {
     pub fn new(cfg: LycheeConfig, chunker: Box<dyn Chunker>, pooling: Pooling) -> Self {
         let buffer = TokenBuffer::new(cfg.max_chunk, cfg.update_buffer);
-        LycheePolicy { cfg, chunker, pooling, index: None, buffer, flat: false }
+        LycheePolicy {
+            cfg,
+            chunker,
+            pooling,
+            index: None,
+            buffer,
+            flat: false,
+            staged_spans: Vec::new(),
+            staged_reps: Vec::new(),
+            staged_upto: 0,
+        }
     }
 
     /// Flat (non-hierarchical) variant used for the `sentencekv` baseline.
@@ -66,6 +85,59 @@ impl Policy for LycheePolicy {
         let spans = self.chunker.chunk(&ctx.text[..ctx.n.min(ctx.text.len())]);
         self.index = Some(HierarchicalIndex::build(ctx.keys, &spans, self.params()));
         self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
+        self.staged_spans.clear();
+        self.staged_reps.clear();
+        self.staged_upto = 0;
+    }
+
+    /// Incremental build: pool representatives for every span that has
+    /// become *stable* (no future text can change its boundaries — see
+    /// [`Chunker::max_span`]) and stage them; the final chunk stages the
+    /// genuine tail spans and runs the seeded k-means once over the
+    /// staged rep matrix. Per-chunk cost is O(chunk·d) pooling; the
+    /// clustering cost is paid exactly once, as in a monolithic build.
+    fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
+        use crate::index::reps::pool_rep;
+        if new.start == 0 {
+            self.index = None;
+            self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
+            self.staged_spans.clear();
+            self.staged_reps.clear();
+            self.staged_upto = 0;
+        }
+        let end = new.end.min(ctx.text.len());
+        let final_chunk = new.end >= ctx.text.len();
+        let lookahead = self.chunker.max_span();
+        // Re-chunk the whole prefix (boundary decisions read bounded
+        // backward context, so a suffix slice could diverge from the
+        // whole-text segmentation) and stage only the spans beyond the
+        // frontier; prefix stability guarantees the skipped leading
+        // spans are exactly the ones staged by earlier calls. The scan
+        // is O(end) byte inspections — trivial next to pooling.
+        for span in self.chunker.chunk(&ctx.text[..end]) {
+            if span.end() <= self.staged_upto {
+                continue; // staged by an earlier chunk
+            }
+            debug_assert_eq!(span.start, self.staged_upto, "chunker lost prefix stability");
+            if !final_chunk && span.start + lookahead > end {
+                break; // decision window may still change with more text
+            }
+            self.staged_reps
+                .extend_from_slice(&pool_rep(self.pooling, ctx.keys, span.start, span.len));
+            self.staged_spans.push(span);
+            self.staged_upto = span.end();
+        }
+        if final_chunk {
+            self.index = Some(HierarchicalIndex::build_pooled(
+                ctx.keys.dim(),
+                self.params(),
+                &self.staged_spans,
+                std::mem::take(&mut self.staged_reps),
+            ));
+            self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
+            self.staged_spans.clear();
+            self.staged_upto = 0;
+        }
     }
 
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {

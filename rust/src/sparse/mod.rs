@@ -86,10 +86,11 @@ impl SelectScratch {
 
 /// A KV retrieval/eviction policy for one attention layer.
 ///
-/// Call order per sequence: `build` once after prefill, then per decode
-/// step `select_into(q, pos, scratch)` (the active set used for attention
-/// at position `pos`) followed by `on_token(pos)` once that token's KV is
-/// cached.
+/// Call order per sequence: either `build` once after a monolithic
+/// prefill, or a series of `extend` calls as chunked prefill streams K/V
+/// into the cache; then per decode step `select_into(q, pos, scratch)`
+/// (the active set used for attention at position `pos`) followed by
+/// `on_token(pos)` once that token's KV is cached.
 ///
 /// `Send + Sync` so a decode batch can shard per-sequence retrieval onto
 /// scoped threads (each thread takes `&mut` of one sequence's policies;
@@ -99,6 +100,32 @@ pub trait Policy: Send + Sync {
 
     /// Index the prefill context (`ctx.n` tokens).
     fn build(&mut self, ctx: &Ctx);
+
+    /// Incrementally absorb newly prefilled tokens `new` into the index
+    /// under construction (the chunked-prefill path).
+    ///
+    /// Contract (the chunked-prefill property test pins it for every
+    /// policy in the registry):
+    /// - calls arrive with contiguous, monotonically increasing ranges
+    ///   starting at 0; `ctx.n == new.end` (keys exist for `0..new.end`);
+    /// - `ctx.text` is the *full* prompt, so `new.end == ctx.text.len()`
+    ///   identifies the final chunk;
+    /// - `new.start == 0` must reset any previous state (a preempted
+    ///   sequence re-prefills through a fresh pass);
+    /// - after the final call the policy must produce **byte-identical
+    ///   selections** to a monolithic `build` over the same context, no
+    ///   matter how the token stream was split into chunks.
+    ///
+    /// The default rebuilds from scratch on every call, which satisfies
+    /// the contract trivially; policies with real index structure
+    /// override it to absorb chunks in place (stable-frontier span
+    /// staging + one deferred clustering for lychee, direct page appends
+    /// for the page baselines, nearest-centroid assignment + final
+    /// re-cluster for clusterkv).
+    fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
+        debug_assert_eq!(ctx.n, new.end, "extend: ctx.n must equal new.end");
+        self.build(ctx);
+    }
 
     /// Allocation-free hot path: compute the active token set (sorted,
     /// deduped, `len <= budget`) for query `q` issued at position `pos`
@@ -312,6 +339,73 @@ mod tests {
                 reused.on_token(&ctx, pos);
             }
         }
+    }
+
+    /// The chunked-prefill semantics property (acceptance criterion of
+    /// the streaming-prefill refactor): for EVERY policy, building the
+    /// index by absorbing the prompt in arbitrary chunk splits via
+    /// `extend` must be indistinguishable — byte-identical token
+    /// selections, before and during decode — from (a) one whole-prompt
+    /// `extend` call (the monolithic wrapper path) and (b) a plain
+    /// `build` (the offline eval path).
+    #[test]
+    fn prop_chunked_extend_matches_monolithic_for_all_policies() {
+        crate::util::prop::check("chunked extend == monolithic", 12, |g| {
+            let d = 16;
+            let n = 400 + g.usize_in(0..600);
+            let steps = 6;
+            let mut cfg = LycheeConfig::default();
+            cfg.budget = 96 + g.usize_in(0..64);
+            cfg.sink = 8;
+            cfg.recent = 16;
+            let mut rng = Rng::new(g.usize_in(0..1_000_000) as u64);
+            let keys = rng.normal_vec((n + steps) * d);
+            let text: Vec<u8> = (0..n)
+                .map(|_| b"lorem ipsum, dolor. sit {x: 1}\n"[rng.range(0, 31)])
+                .collect();
+            let src = FlatKeys::new(&keys, d);
+
+            // random chunk split of [0, n)
+            let mut cuts = vec![0usize];
+            while *cuts.last().unwrap() < n {
+                let prev = *cuts.last().unwrap();
+                cuts.push((prev + 1 + g.usize_in(0..200)).min(n));
+            }
+
+            for &name in POLICY_NAMES {
+                let mut mono = make_policy(name, &cfg, 1, 4).unwrap();
+                let mut chunked = make_policy(name, &cfg, 1, 4).unwrap();
+                let mut built = make_policy(name, &cfg, 1, 4).unwrap();
+                mono.extend(&Ctx { keys: &src, text: &text, n }, 0..n);
+                for w in cuts.windows(2) {
+                    let ctx = Ctx { keys: &src, text: &text, n: w[1] };
+                    chunked.extend(&ctx, w[0]..w[1]);
+                }
+                built.build(&Ctx { keys: &src, text: &text, n });
+                // decode continuation: same engine ordering (the token's
+                // byte is in `text` before retrieval and on_token run)
+                let mut grow_text = text.clone();
+                for step in 0..steps {
+                    let pos = n + step;
+                    grow_text.push(b"ab. cd,\n"[step % 8]);
+                    let ctx = Ctx { keys: &src, text: &grow_text, n: pos };
+                    let q = rng.normal_vec(d);
+                    let a = mono.select(&ctx, &q, pos);
+                    let b = chunked.select(&ctx, &q, pos);
+                    let c = built.select(&ctx, &q, pos);
+                    crate::prop_assert!(
+                        a == b,
+                        "{name}: chunked != monolithic at step {step} (split {:?})",
+                        cuts
+                    );
+                    crate::prop_assert!(a == c, "{name}: extend path != build at step {step}");
+                    mono.on_token(&ctx, pos);
+                    chunked.on_token(&ctx, pos);
+                    built.on_token(&ctx, pos);
+                }
+            }
+            Ok(())
+        });
     }
 
     /// Shared contract test: every policy returns a sorted, deduped,

@@ -35,6 +35,10 @@ pub struct Quest {
     open_start: Option<usize>,
     open_len: usize,
     decode_page: usize,
+    /// Chunked-prefill frontier: end of the last page staged by `extend`
+    /// (the chunker restarts here — its spans self-synchronize at their
+    /// own boundaries).
+    staged_upto: usize,
 }
 
 impl Quest {
@@ -50,6 +54,7 @@ impl Quest {
             open_start: None,
             open_len: 0,
             decode_page: 48,
+            staged_upto: 0,
         }
     }
 
@@ -106,6 +111,47 @@ impl Policy for Quest {
         }
         self.open_start = None;
         self.open_len = 0;
+        self.staged_upto = 0;
+    }
+
+    /// Incremental build: append the AABB summary of every span that has
+    /// become stable (see [`Chunker::max_span`]) as soon as its tokens
+    /// are prefilled; the final chunk appends the genuine tail spans.
+    /// Page summaries are computed exactly once per page, so the chunked
+    /// build does the same total work as the monolithic one — just
+    /// spread across scheduler ticks.
+    fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
+        if new.start == 0 {
+            self.d = ctx.keys.dim();
+            self.starts.clear();
+            self.lens.clear();
+            self.sums.clear();
+            self.diffs.clear();
+            self.open_start = None;
+            self.open_len = 0;
+            self.staged_upto = 0;
+        }
+        let end = new.end.min(ctx.text.len());
+        let final_chunk = new.end >= ctx.text.len();
+        let lookahead = self.chunker.max_span();
+        // re-chunk the whole prefix and stage past the frontier (see
+        // LycheePolicy::extend for why a suffix slice would be wrong)
+        for span in self.chunker.chunk(&ctx.text[..end]) {
+            if span.end() <= self.staged_upto {
+                continue;
+            }
+            debug_assert_eq!(span.start, self.staged_upto, "chunker lost prefix stability");
+            if !final_chunk && span.start + lookahead > end {
+                break;
+            }
+            self.push_page(ctx.keys, span.start, span.len);
+            self.staged_upto = span.end();
+        }
+        if final_chunk {
+            self.open_start = None;
+            self.open_len = 0;
+            self.staged_upto = 0;
+        }
     }
 
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {

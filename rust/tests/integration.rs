@@ -145,11 +145,51 @@ fn engine_sparse_decode_close_to_full_at_long_context() {
 fn serving_stack_streams_tokens_over_tcp() {
     let Some(cfg) = engine_config() else { return };
     let (handle, metrics, join) = lychee::coordinator::spawn(cfg).unwrap();
-    let server = lychee::server::Server::start("127.0.0.1:0", handle.clone()).unwrap();
+    let server = lychee::server::Server::start(
+        "127.0.0.1:0",
+        handle.clone(),
+        Some(std::sync::Arc::clone(&metrics)),
+    )
+    .unwrap();
     let mut client = lychee::server::Client::connect(&server.addr).unwrap();
     let res = client.generate("integration over tcp, end to end.", 6, "lychee").unwrap();
     assert_eq!(res.tokens, 6);
     assert_eq!(metrics.lock().unwrap().completed, 1);
+    server.stop();
+    handle.shutdown();
+    join.join().unwrap();
+}
+
+#[test]
+fn chunked_prefill_serving_stack_without_artifacts() {
+    // The artifact-free serving integration anchor: sim engine ->
+    // coordinator (chunked prefill + continuous batching) -> TCP server,
+    // exercising the full streaming path a downstream user sees.
+    let mut cfg = Config::new();
+    cfg.serving.prefill_chunk_tokens = 128;
+    let engine_cfg = cfg.clone();
+    let (handle, metrics, join) = lychee::coordinator::spawn_with(cfg, move || {
+        Ok(lychee::engine::sim::SimEngine::new(
+            engine_cfg,
+            lychee::engine::sim::SimConfig::default(),
+        ))
+    })
+    .unwrap();
+    let server = lychee::server::Server::start(
+        "127.0.0.1:0",
+        handle.clone(),
+        Some(std::sync::Arc::clone(&metrics)),
+    )
+    .unwrap();
+    let mut client = lychee::server::Client::connect(&server.addr).unwrap();
+    let prompt =
+        String::from_utf8(lychee::workloads::trace::prompt_text(700, 42)).unwrap();
+    let res = client.generate(&prompt, 4, "lychee").unwrap();
+    assert_eq!(res.tokens, 4);
+    let m = client.metrics().unwrap();
+    // 700-token prompt at 128-token chunks = 6 chunks
+    assert_eq!(m.get("prefill_chunks_executed").as_usize(), Some(6));
+    assert_eq!(m.get("completed").as_usize(), Some(1));
     server.stop();
     handle.shutdown();
     join.join().unwrap();
