@@ -13,7 +13,11 @@
 //!   retrieval_json       — machine-readable BENCH_retrieval.json:
 //!                          ns/token select per policy per context size,
 //!                          SoA+SIMD vs seed-style scalar scoring at 32k,
-//!                          serial-vs-parallel batch retrieval
+//!                          serial-vs-parallel batch retrieval, and the
+//!                          mixed-precision sweep (select+gather per
+//!                          kv/index precision, gather GB/token, arena
+//!                          capacity at fixed kv_pool_mb;
+//!                          BENCH_PRECISION=f32|f16|i8 narrows it)
 //!   serving_json         — machine-readable BENCH_serving.json: mixed
 //!                          long+short load through the real coordinator
 //!                          (sim engine), chunked vs monolithic prefill —
@@ -530,6 +534,166 @@ fn serving_json_section() -> String {
     )
 }
 
+/// The mixed-precision sweep (EXPERIMENTS.md §Precision): per-policy
+/// select+gather latency and gather bytes-moved per decode token at each
+/// storage precision (`kv.precision` pages + `index.rep_precision`
+/// mirrors), plus arena capacity (max resident sequences) at the default
+/// `serving.kv_pool_mb`. `BENCH_PRECISION=f16` (etc.) narrows the sweep
+/// to one precision per CI matrix leg — f32 always runs as the baseline.
+fn precision_json_fragment() -> String {
+    use lychee::engine::LayerKeys;
+    use lychee::kvcache::{KvCache as Cache, PagePool};
+    use lychee::quant::Precision;
+    use lychee::sparse::Policy;
+    use std::sync::Arc;
+
+    let smoke = smoke();
+    let d = 64usize;
+    let contexts: &[usize] = if smoke { &[4 * 1024] } else { &[4 * 1024, 16 * 1024, 32 * 1024] };
+    let (warm, iters) = if smoke { (1, 5) } else { (2, 30) };
+    let policies = ["lychee", "quest", "clusterkv", "arkvale", "shadowkv"];
+    let mut precisions: Vec<Precision> = vec![Precision::F32];
+    match std::env::var("BENCH_PRECISION").ok().as_deref().and_then(Precision::parse) {
+        Some(Precision::F32) | None => {
+            precisions.push(Precision::F16);
+            precisions.push(Precision::I8);
+        }
+        Some(p) => precisions.push(p),
+    }
+
+    let mut sweep_rows = Vec::new();
+    // (precision, context, policy) -> combined µs, for the speedup rows
+    let mut combined: std::collections::BTreeMap<(String, usize, String), f64> =
+        std::collections::BTreeMap::new();
+    for &prec in &precisions {
+        for &n in contexts {
+            let mut rng = Rng::new(0x9EC1 ^ n as u64);
+            let mut cache =
+                Cache::with_pool_precision(1, 1, d, PagePool::unbounded(), prec);
+            for _ in 0..n {
+                let kr = rng.normal_vec(d);
+                cache.append_token(&[&kr], &[&kr]).unwrap();
+            }
+            let text = prompt_text(n, 2);
+            let mut cfg = LycheeConfig::default();
+            cfg.rep_precision = prec;
+            let m = 1024usize; // budget bucket for the gather buffers
+            let mut kb = vec![0.0f32; m * d];
+            let mut vb = vec![0.0f32; m * d];
+            let mut mb = vec![0.0f32; m];
+            for name in policies {
+                let mut p = make_policy(name, &cfg, 1, 4).unwrap();
+                {
+                    let keys = LayerKeys { cache: &cache, layer: 0, n };
+                    p.build(&Ctx { keys: &keys, text: &text, n });
+                }
+                let q = rng.normal_vec(d);
+                let mut scratch = SelectScratch::new();
+                let sel = {
+                    let keys = LayerKeys { cache: &cache, layer: 0, n };
+                    let ctx = Ctx { keys: &keys, text: &text, n };
+                    p.select_into(&ctx, &q, n, &mut scratch);
+                    std::mem::take(&mut scratch.out)
+                };
+                let select = bench_quiet(warm, iters, || {
+                    let keys = LayerKeys { cache: &cache, layer: 0, n };
+                    let ctx = Ctx { keys: &keys, text: &text, n };
+                    p.select_into(&ctx, &q, n, &mut scratch);
+                    std::hint::black_box(&scratch.out);
+                });
+                let gather = bench_quiet(warm, iters, || {
+                    cache.gather_into(0, &sel, &mut kb, &mut vb, &mut mb);
+                    std::hint::black_box(&kb);
+                });
+                let comb = select.mean + gather.mean;
+                // K+V code/element bytes streamed per decode token-step
+                let gather_gb = (2 * sel.len() * d * prec.bytes_per_elem()) as f64 / 1e9;
+                println!(
+                    "precision[{:>3}] {name:<10} @{:>2}k  select {:>8.1} µs  gather {:>8.1} µs  ({:.3} MB/tok)",
+                    prec.name(),
+                    n / 1024,
+                    select.mean,
+                    gather.mean,
+                    gather_gb * 1e3
+                );
+                combined.insert((prec.name().to_string(), n, name.to_string()), comb);
+                sweep_rows.push(format!(
+                    "{{\"precision\": \"{}\", \"context_tokens\": {n}, \"policy\": \"{name}\", \
+                     \"select_us\": {:.2}, \"gather_us\": {:.2}, \"combined_us\": {:.2}, \
+                     \"ns_per_ctx_token\": {:.3}, \"gather_gb_per_token\": {:.6}}}",
+                    prec.name(),
+                    select.mean,
+                    gather.mean,
+                    comb,
+                    comb * 1000.0 / n as f64,
+                    gather_gb
+                ));
+            }
+        }
+    }
+
+    // arena capacity at a fixed pool: how many 32k-token sequences fit a
+    // default-sized arena at each precision (serving-geometry estimate)
+    let pool_mb = lychee::config::ServingConfig::default().kv_pool_mb;
+    let pool_bytes = pool_mb * 1024 * 1024;
+    let seq_tokens = 32 * 1024;
+    let f32_est = Cache::estimate_bytes_at(8, 8, 64, seq_tokens, Precision::F32);
+    let mut arena_rows = Vec::new();
+    for &prec in &precisions {
+        let est = Cache::estimate_bytes_at(8, 8, 64, seq_tokens, prec);
+        arena_rows.push(format!(
+            "{{\"precision\": \"{}\", \"seq_tokens\": {seq_tokens}, \
+             \"bytes_per_seq\": {est}, \"max_resident_seqs\": {}, \
+             \"capacity_ratio_vs_f32\": {:.3}}}",
+            prec.name(),
+            pool_bytes / est.max(1),
+            f32_est as f64 / est.max(1) as f64
+        ));
+    }
+
+    // headline: combined select+gather speedup vs f32 at the largest
+    // measured context, averaged over the policy roster
+    let top_ctx = *contexts.last().unwrap();
+    let mut speedup_rows = Vec::new();
+    for &prec in &precisions {
+        if prec == Precision::F32 {
+            continue;
+        }
+        let mut ratios = Vec::new();
+        for name in policies {
+            let base = combined.get(&("f32".to_string(), top_ctx, name.to_string()));
+            let ours = combined.get(&(prec.name().to_string(), top_ctx, name.to_string()));
+            if let (Some(&b), Some(&o)) = (base, ours) {
+                if o > 0.0 {
+                    ratios.push(b / o);
+                }
+            }
+        }
+        let mean = if ratios.is_empty() {
+            0.0
+        } else {
+            ratios.iter().sum::<f64>() / ratios.len() as f64
+        };
+        println!(
+            "precision[{:>3}] combined select+gather speedup vs f32 @{}k: {mean:.2}x",
+            prec.name(),
+            top_ctx / 1024
+        );
+        speedup_rows.push(format!(
+            "{{\"precision\": \"{}\", \"context_tokens\": {top_ctx}, \"speedup\": {mean:.3}}}",
+            prec.name()
+        ));
+    }
+
+    format!(
+        "{{\n    \"kv_pool_mb\": {pool_mb},\n    \"sweep\": [\n      {}\n    ],\n    \
+         \"arena\": [\n      {}\n    ],\n    \"combined_speedup\": [\n      {}\n    ]\n  }}",
+        sweep_rows.join(",\n      "),
+        arena_rows.join(",\n      "),
+        speedup_rows.join(",\n      ")
+    )
+}
+
 /// The perf-trajectory section: measures the scoring/select hot path and
 /// renders `BENCH_retrieval.json` (schema documented in EXPERIMENTS.md
 /// §Perf). Returns the JSON text.
@@ -682,20 +846,26 @@ fn retrieval_json_section() -> String {
         ));
     }
 
+    // --- mixed-precision sweep (pages + rep mirrors) -------------------
+    let precision_fragment = precision_json_fragment();
+
     format!(
-        "{{\n  \"schema\": \"lychee-bench-retrieval-v1\",\n  \
-         \"backend\": \"{}\",\n  \"smoke\": {},\n  \"select_dim\": {},\n  \
+        "{{\n  \"schema\": \"lychee-bench-retrieval-v2\",\n  \
+         \"backend\": \"{}\",\n  \"f16c\": {},\n  \"smoke\": {},\n  \"select_dim\": {},\n  \
          \"select\": [\n    {}\n  ],\n  \
          \"score_32k\": {{\"rows\": {rows}, \"d\": {score_d}, \
          \"scalar_aos_us\": {:.2}, \"simd_soa_us\": {:.2}, \"speedup\": {:.2}}},\n  \
-         \"batch\": [\n    {}\n  ]\n}}\n",
+         \"batch\": [\n    {}\n  ],\n  \
+         \"precision\": {}\n}}\n",
         linalg::simd::backend().name(),
+        linalg::simd::f16c_available(),
         smoke,
         d,
         select_rows.join(",\n    "),
         scalar.mean,
         simd.mean,
         speedup,
-        batch_rows.join(",\n    ")
+        batch_rows.join(",\n    "),
+        precision_fragment
     )
 }

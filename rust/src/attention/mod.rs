@@ -6,7 +6,7 @@
 //! kernel in integration tests, (3) the scoring core that eviction
 //! baselines (H2O, RaaS) feed on.
 
-use crate::index::reps::KeySource;
+use crate::index::reps::{for_each_key, KeySource};
 use crate::linalg;
 
 /// Softmax attention weights of query `q` over keys `[0, n)` from a key
@@ -27,9 +27,9 @@ pub fn attention_weights_into(
     match keys.as_rows() {
         Some(rows) => linalg::matvec(&rows[..n * keys.dim()], keys.dim(), q, out),
         None => {
-            for (t, o) in out.iter_mut().enumerate() {
-                *o = linalg::dot(q, keys.key(t));
-            }
+            // paged (possibly quantized) source: per-row dots, widening
+            // through for_each_key's reused buffer when storage is not f32
+            for_each_key(keys, 0, n, |t, k| out[t] = linalg::dot(q, k));
         }
     }
     for s in out.iter_mut() {
@@ -57,7 +57,23 @@ pub fn sparse_attention_weights_into(
     out: &mut Vec<f32>,
 ) {
     out.clear();
-    out.extend(tokens.iter().map(|&t| linalg::dot(q, keys.key(t)) * scale));
+    // f32-backed sources stay allocation-free (zero-copy borrows); a
+    // quantized source widens each subset row through one buffer,
+    // allocated lazily on first non-borrowable row
+    let mut tmp: Vec<f32> = Vec::new();
+    for &t in tokens {
+        let s = match keys.try_key(t) {
+            Some(k) => linalg::dot(q, k),
+            None => {
+                if tmp.is_empty() {
+                    tmp.resize(keys.dim(), 0.0);
+                }
+                keys.key_into(t, &mut tmp);
+                linalg::dot(q, &tmp)
+            }
+        };
+        out.push(s * scale);
+    }
     linalg::softmax(out);
 }
 
@@ -91,9 +107,7 @@ pub fn full_attention_output(
 ) -> Vec<f32> {
     let w = attention_weights(q, keys, n, scale);
     let mut out = vec![0.0f32; values.dim()];
-    for (t, &wt) in w.iter().enumerate() {
-        linalg::axpy(&mut out, wt, values.key(t));
-    }
+    for_each_key(values, 0, n, |t, v| linalg::axpy(&mut out, w[t], v));
     out
 }
 
@@ -109,8 +123,19 @@ pub fn sparse_attention_output(
     if tokens.is_empty() {
         return out;
     }
+    // lazy dequant buffer: f32-backed value sources never allocate it
+    let mut tmp: Vec<f32> = Vec::new();
     for (t, w) in sparse_attention_weights(q, keys, tokens, scale) {
-        linalg::axpy(&mut out, w, values.key(t));
+        match values.try_key(t) {
+            Some(v) => linalg::axpy(&mut out, w, v),
+            None => {
+                if tmp.is_empty() {
+                    tmp.resize(values.dim(), 0.0);
+                }
+                values.key_into(t, &mut tmp);
+                linalg::axpy(&mut out, w, &tmp);
+            }
+        }
     }
     out
 }

@@ -219,7 +219,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_secs(10));
         let m = metrics.lock().unwrap();
         println!(
-            "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} p50_tpot={:.1}ms",
+            "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} \
+             kv[{}]={:.1}MiB free={:.1}MiB recycled={} reps[{}] p50_tpot={:.1}ms",
             m.requests,
             m.completed,
             m.rejected,
@@ -227,6 +228,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.prefill_chunks_executed,
             m.preemptions,
             m.queue_depth,
+            m.kv_precision,
+            m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
+            m.kv_bytes_free as f64 / (1024.0 * 1024.0),
+            m.kv_pages_recycled_total,
+            m.rep_precision,
             m.tpot_us.quantile(0.5) / 1e3
         );
         drop(m);

@@ -3,9 +3,16 @@
 //! validation. Every experiment harness takes one of these structs so
 //! runs are fully described by a config + seed.
 
+use crate::quant::Precision;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
+
+/// Parse a precision knob value (`"f32"` | `"f16"` | `"i8"`).
+fn parse_precision(v: &Json) -> Result<Precision> {
+    let s = v.as_str().context("expected precision string (f32|f16|i8)")?;
+    Precision::parse(s).ok_or_else(|| anyhow::anyhow!("bad precision '{s}' (f32|f16|i8)"))
+}
 
 /// LycheeCluster algorithm hyper-parameters (paper §4 + Appendix A).
 #[derive(Clone, Debug, PartialEq)]
@@ -39,6 +46,12 @@ pub struct LycheeConfig {
     pub full_attn_layers: usize,
     /// Mean (true) or max (false) pooling for chunk representatives.
     pub mean_pooling: bool,
+    /// Storage precision of the index representative mirrors used for
+    /// decode-time scoring (wire path `index.rep_precision`): `f32`
+    /// (bit-exact default) | `f16` | `i8`. At narrow precisions every
+    /// "score all rows" GEMV streams a quantized mirror and the final
+    /// top-k is re-ranked against the exact f32 rows.
+    pub rep_precision: Precision,
 }
 
 impl Default for LycheeConfig {
@@ -62,6 +75,7 @@ impl Default for LycheeConfig {
             recent: 64,
             full_attn_layers: 1,
             mean_pooling: true,
+            rep_precision: Precision::F32,
         }
     }
 }
@@ -102,6 +116,7 @@ impl LycheeConfig {
             "recent" => self.recent = u()?,
             "full_attn_layers" => self.full_attn_layers = u()?,
             "mean_pooling" => self.mean_pooling = v.as_bool().context("expected bool")?,
+            "rep_precision" => self.rep_precision = parse_precision(v)?,
             _ => bail!("unknown lychee config key '{key}'"),
         }
         Ok(())
@@ -188,11 +203,33 @@ impl ServingConfig {
     }
 }
 
+/// KV arena storage parameters (the mixed-precision memory plane).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvConfig {
+    /// Element type of the shared page arena (`kv.precision`): `f32`
+    /// (bit-exact default) | `f16` | `i8`. Narrow pages roughly double /
+    /// quadruple arena capacity at a fixed `serving.kv_pool_mb` and
+    /// halve / quarter the bytes every decode-step gather streams;
+    /// gathers widen back to f32 on the fly (fused dequant-gather).
+    pub precision: Precision,
+}
+
+impl KvConfig {
+    fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
+        match key {
+            "precision" => self.precision = parse_precision(v)?,
+            _ => bail!("unknown kv config key '{key}'"),
+        }
+        Ok(())
+    }
+}
+
 /// Top-level config bundle.
 #[derive(Clone, Debug, Default, PartialEq)]
 pub struct Config {
     pub lychee: LycheeConfig,
     pub serving: ServingConfig,
+    pub kv: KvConfig,
     /// Artifact directory (HLO programs, weights, manifest).
     pub artifacts_dir: String,
     /// Global experiment seed.
@@ -204,6 +241,7 @@ impl Config {
         Config {
             lychee: LycheeConfig::default(),
             serving: ServingConfig::default(),
+            kv: KvConfig::default(),
             artifacts_dir: "artifacts".to_string(),
             seed: 0,
         }
@@ -234,6 +272,21 @@ impl Config {
                         self.serving.apply(sk, sv)?;
                     }
                 }
+                "kv" => {
+                    for (kk, kv) in v.as_obj().context("kv must be object")? {
+                        self.kv.apply(kk, kv)?;
+                    }
+                }
+                "index" => {
+                    // index.* maps onto the lychee section's index knobs
+                    // (rep_precision lives there so policies see it)
+                    for (ik, iv) in v.as_obj().context("index must be object")? {
+                        match ik.as_str() {
+                            "rep_precision" => self.lychee.apply("rep_precision", iv)?,
+                            _ => bail!("unknown index config key '{ik}'"),
+                        }
+                    }
+                }
                 "artifacts_dir" => {
                     self.artifacts_dir = v.as_str().context("artifacts_dir string")?.to_string()
                 }
@@ -251,6 +304,8 @@ impl Config {
         match path.split_once('.') {
             Some(("lychee", key)) => self.lychee.apply(key, &json_v)?,
             Some(("serving", key)) => self.serving.apply(key, &json_v)?,
+            Some(("kv", key)) => self.kv.apply(key, &json_v)?,
+            Some(("index", "rep_precision")) => self.lychee.apply("rep_precision", &json_v)?,
             None if path == "seed" => self.seed = json_v.as_usize().context("seed")? as u64,
             None if path == "artifacts_dir" => {
                 self.artifacts_dir = json_v.as_str().unwrap_or(value).to_string()
@@ -347,6 +402,32 @@ mod tests {
         let mut bad = ServingConfig::default();
         bad.max_new_tokens = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn precision_knobs() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.kv.precision, Precision::F32);
+        assert_eq!(cfg.lychee.rep_precision, Precision::F32);
+        cfg.apply_override("kv.precision=f16").unwrap();
+        cfg.apply_override("index.rep_precision=i8").unwrap();
+        assert_eq!(cfg.kv.precision, Precision::F16);
+        assert_eq!(cfg.lychee.rep_precision, Precision::I8);
+        cfg.validate().unwrap();
+        // JSON sections: "kv" and "index" (the latter aliases onto lychee)
+        let mut cfg2 = Config::new();
+        let j =
+            Json::parse(r#"{"kv": {"precision": "i8"}, "index": {"rep_precision": "f16"}}"#)
+                .unwrap();
+        cfg2.apply_json(&j).unwrap();
+        assert_eq!(cfg2.kv.precision, Precision::I8);
+        assert_eq!(cfg2.lychee.rep_precision, Precision::F16);
+        // bad spellings are structured errors
+        assert!(cfg.apply_override("kv.precision=f64").is_err());
+        assert!(cfg.apply_override("index.rep_precision=4bit").is_err());
+        assert!(cfg.apply_override("kv.nope=1").is_err());
+        let bad = Json::parse(r#"{"index": {"nope": "f16"}}"#).unwrap();
+        assert!(Config::new().apply_json(&bad).is_err());
     }
 
     #[test]

@@ -77,6 +77,17 @@ pub struct Metrics {
     /// Gauge: KV arena bytes leased by live sequences (refreshed on
     /// admission and retirement).
     pub kv_bytes_in_use: u64,
+    /// Gauge: arena bytes parked on the free-list (recyclable).
+    pub kv_bytes_free: u64,
+    /// High-water mark of the free-list over the pool's lifetime.
+    pub kv_bytes_free_peak: u64,
+    /// Arena leases served from the free-list (vs fresh allocations).
+    pub kv_pages_recycled_total: u64,
+    /// Configured storage precision of the KV page arena (`kv.precision`).
+    pub kv_precision: String,
+    /// Configured storage precision of the index representative mirrors
+    /// (`index.rep_precision`).
+    pub rep_precision: String,
     /// Scheduler ticks the head-of-queue prefill waited for arena pages
     /// to recycle (memory backpressure).
     pub admission_waits: u64,
@@ -220,6 +231,13 @@ where
 {
     let (tx, rx) = channel();
     let metrics = Arc::new(Mutex::new(Metrics::default()));
+    {
+        // record the configured precisions once (the scrape exposes them
+        // so operators can tell what a pool gauge is denominated in)
+        let mut m = metrics.lock().unwrap();
+        m.kv_precision = cfg.kv.precision.name().to_string();
+        m.rep_precision = cfg.lychee.rep_precision.name().to_string();
+    }
     let m2 = Arc::clone(&metrics);
     let (ready_tx, ready_rx) = channel();
     let join = std::thread::Builder::new()
@@ -411,8 +429,12 @@ impl<E: EngineCore> Coordinator<E> {
     }
 
     fn refresh_pool_gauge(&self) {
-        let in_use = self.engine.pool().bytes_in_use() as u64;
-        self.metrics.lock().unwrap().kv_bytes_in_use = in_use;
+        let st = self.engine.pool().stats();
+        let mut m = self.metrics.lock().unwrap();
+        m.kv_bytes_in_use = st.bytes_in_use as u64;
+        m.kv_bytes_free = st.bytes_free as u64;
+        m.kv_bytes_free_peak = st.bytes_free_peak as u64;
+        m.kv_pages_recycled_total = st.pages_recycled_total;
     }
 
     /// Scheduler loop: admit, advance one prefill chunk, decode, stream,

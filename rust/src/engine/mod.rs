@@ -47,12 +47,16 @@ impl KeySource for LayerKeys<'_> {
         self.cache.row_dim()
     }
 
-    fn key(&self, token: usize) -> &[f32] {
-        self.cache.key_row(self.layer, token)
-    }
-
     fn len(&self) -> usize {
         self.n
+    }
+
+    fn key_into(&self, token: usize, out: &mut [f32]) {
+        self.cache.key_row_into(self.layer, token, out)
+    }
+
+    fn try_key(&self, token: usize) -> Option<&[f32]> {
+        self.cache.try_key_row(self.layer, token)
     }
 }
 
@@ -278,10 +282,18 @@ impl Engine {
     }
 
     /// Estimated arena bytes a sequence of `n_tokens` will lease — the
-    /// coordinator's admission-control footprint for a request.
+    /// coordinator's admission-control footprint for a request, in the
+    /// arena's real element size (`kv.precision`): narrow precisions
+    /// admit proportionally more resident sequences at a fixed pool.
     pub fn estimate_seq_bytes(&self, n_tokens: usize) -> usize {
         let dims = self.dims();
-        KvCache::estimate_bytes(dims.layers, dims.heads, dims.head_dim, n_tokens)
+        KvCache::estimate_bytes_at(
+            dims.layers,
+            dims.heads,
+            dims.head_dim,
+            n_tokens,
+            self.cfg.kv.precision,
+        )
     }
 
     /// Resolve retrieval parallelism for a decode batch of `batch`
@@ -357,8 +369,13 @@ impl Engine {
     ) -> Result<Sequence> {
         let dims = self.dims().clone();
         let mut rng = Rng::new(seed);
-        let mut kv =
-            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
+        let mut kv = KvCache::with_pool_precision(
+            dims.layers,
+            dims.heads,
+            dims.head_dim,
+            Arc::clone(&self.pool),
+            self.cfg.kv.precision,
+        );
         let row = dims.d_model;
         let text: Vec<u8> = (0..n_tokens)
             .map(|_| b"lorem ipsum, dolor sit. amet\n"[rng.range(0, 29)])
@@ -605,8 +622,13 @@ impl EngineCore for Engine {
         // fail before any pages are leased if no bucket covers the prompt
         self.rt.prefill_bucket(prompt.len())?;
         let dims = self.dims();
-        let kv =
-            KvCache::with_pool(dims.layers, dims.heads, dims.head_dim, Arc::clone(&self.pool));
+        let kv = KvCache::with_pool_precision(
+            dims.layers,
+            dims.heads,
+            dims.head_dim,
+            Arc::clone(&self.pool),
+            self.cfg.kv.precision,
+        );
         let policies = self.make_policies(policy_name)?;
         Ok(PrefillState {
             id,

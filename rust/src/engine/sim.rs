@@ -119,11 +119,12 @@ impl EngineCore for SimEngine {
         if prompt.len() > self.sim.max_prompt {
             bail!("prompt of {} tokens exceeds largest prefill bucket", prompt.len());
         }
-        let kv = KvCache::with_pool(
+        let kv = KvCache::with_pool_precision(
             self.sim.layers,
             self.sim.heads,
             self.sim.head_dim,
             Arc::clone(&self.pool),
+            self.cfg.kv.precision,
         );
         let policies = self.make_policies(policy_name)?;
         Ok(PrefillState {
@@ -216,7 +217,13 @@ impl EngineCore for SimEngine {
     }
 
     fn estimate_seq_bytes(&self, n_tokens: usize) -> usize {
-        KvCache::estimate_bytes(self.sim.layers, self.sim.heads, self.sim.head_dim, n_tokens)
+        KvCache::estimate_bytes_at(
+            self.sim.layers,
+            self.sim.heads,
+            self.sim.head_dim,
+            n_tokens,
+            self.cfg.kv.precision,
+        )
     }
 
     fn pool(&self) -> &Arc<PagePool> {
@@ -257,6 +264,40 @@ mod tests {
         assert!(eng.pool().bytes_in_use() > 0);
         drop(seq);
         assert_eq!(eng.pool().bytes_in_use(), 0);
+    }
+
+    #[test]
+    fn sim_decodes_over_quantized_arena() {
+        // End-to-end mixed-precision smoke: chunked prefill + decode with
+        // an f16/i8 page arena. Policies build their indexes through the
+        // widening KeySource path, gathers dequantize on the fly, and
+        // admission estimates shrink with the element size.
+        for prec in crate::quant::test_precisions() {
+            let mut cfg = Config::new();
+            cfg.kv.precision = prec;
+            cfg.serving.prefill_chunk_tokens = 64;
+            let eng = SimEngine::new(cfg, SimConfig::default());
+            let prompt: Vec<u8> = crate::workloads::trace::prompt_text(300, 5);
+            let mut st = eng.begin_prefill(1, &prompt, "lychee").unwrap();
+            while eng.prefill_chunk(&mut st).unwrap() == PrefillProgress::Pending {}
+            let mut seq = eng.finish_prefill(st).unwrap();
+            assert_eq!(seq.kv.precision(), prec);
+            let sampling = Sampling::default();
+            for _ in 0..4 {
+                let mut refs = [&mut seq];
+                eng.decode_batch(&mut refs, &sampling).unwrap();
+            }
+            assert_eq!(seq.pos, 304);
+            let est = eng.estimate_seq_bytes(300);
+            let f32_est = crate::kvcache::KvCache::estimate_bytes(2, 2, 8, 300);
+            match prec {
+                crate::quant::Precision::F32 => assert_eq!(est, f32_est),
+                _ => assert!(est < f32_est, "{prec:?} estimate {est} not smaller"),
+            }
+            assert!(eng.pool().bytes_in_use() > 0);
+            drop(seq);
+            assert_eq!(eng.pool().bytes_in_use(), 0);
+        }
     }
 
     #[test]

@@ -13,6 +13,7 @@ use super::kmeans::spherical_kmeans;
 use super::reps::{pool_rep, KeySource, Pooling};
 use crate::chunking::Chunk;
 use crate::linalg;
+use crate::quant::{Precision, QuantMat};
 use crate::sparse::SelectScratch;
 
 /// Construction parameters (defaults = paper Appendix A).
@@ -34,6 +35,13 @@ pub struct IndexParams {
     /// under topic drift during long generation — Appendix D's decay is
     /// the failure mode this prevents).
     pub sprout_threshold: f32,
+    /// Storage precision of the tier mirrors used for decode-time
+    /// scoring (`index.rep_precision`). At [`Precision::F32`] (default)
+    /// no mirrors exist and scoring is byte-identical to the
+    /// pre-mixed-precision index; at f16/i8 the big "score every row"
+    /// GEMVs stream the quantized mirrors and the surviving top-k is
+    /// re-ranked against the exact f32 rows.
+    pub rep_precision: Precision,
 }
 
 impl Default for IndexParams {
@@ -46,6 +54,7 @@ impl Default for IndexParams {
             pooling: Pooling::Mean,
             seed: 0,
             sprout_threshold: 0.6,
+            rep_precision: Precision::F32,
         }
     }
 }
@@ -89,6 +98,13 @@ pub struct HierarchicalIndex {
     pub graft_scores: Vec<f32>,
     /// Reusable centroid snapshot for the moving-average radius bound.
     pub graft_tmp: Vec<f32>,
+    /// Quantized mirror of `chunk_reps` (`index.rep_precision`; inert at
+    /// f32). Kept coherent through build, graft/sprout, and recluster.
+    pub chunk_reps_q: QuantMat,
+    /// Quantized mirror of `fine_centroids`.
+    pub fine_q: QuantMat,
+    /// Quantized mirror of `coarse_centroids`.
+    pub coarse_q: QuantMat,
 }
 
 /// Eqn. 2: `UB(q, u) = q·μ_u + ‖q‖ · r_u`.
@@ -107,9 +123,18 @@ fn by_score_desc(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
 impl HierarchicalIndex {
     /// An index with no content (the decode-time bootstrap state).
     pub fn empty(d: usize, params: IndexParams) -> Self {
+        let mut chunk_reps_q = QuantMat::new(params.rep_precision);
+        let mut fine_q = QuantMat::new(params.rep_precision);
+        let mut coarse_q = QuantMat::new(params.rep_precision);
+        chunk_reps_q.reset(d);
+        fine_q.reset(d);
+        coarse_q.reset(d);
         HierarchicalIndex {
             d,
             params,
+            chunk_reps_q,
+            fine_q,
+            coarse_q,
             chunk_reps: Vec::new(),
             chunk_starts: Vec::new(),
             chunk_lens: Vec::new(),
@@ -214,6 +239,15 @@ impl HierarchicalIndex {
                 idx.coarse_radii[u] = dist;
             }
         }
+
+        // --- quantized mirrors (index.rep_precision; inert at f32) ------
+        // Bulk rebuild: i8 per-channel scales are exact over each tier,
+        // so a built index carries a single quantization rounding.
+        if idx.chunk_reps_q.is_active() {
+            idx.chunk_reps_q.rebuild(&idx.chunk_reps, d);
+            idx.fine_q.rebuild(&idx.fine_centroids, d);
+            idx.coarse_q.rebuild(&idx.coarse_centroids, d);
+        }
         idx
     }
 
@@ -277,19 +311,56 @@ impl HierarchicalIndex {
         if p == 0 || kc == 0 {
             return;
         }
-        // coarse level: one GEMV over the unit centroid matrix
+        let quant = self.coarse_q.is_active();
+        // coarse level: one GEMV over the unit centroid matrix — the
+        // quantized mirror when `index.rep_precision` is narrow (half or
+        // a quarter of the bytes streamed), the f32 matrix otherwise
         scratch.scores.clear();
         scratch.scores.resize(p, 0.0);
-        linalg::matvec(&self.coarse_centroids, self.d, q, &mut scratch.scores);
+        if quant {
+            self.coarse_q.matvec_into(q, &mut scratch.scores);
+        } else {
+            linalg::matvec(&self.coarse_centroids, self.d, q, &mut scratch.scores);
+        }
         for (s, r) in scratch.scores.iter_mut().zip(&self.coarse_radii) {
             *s += q_norm * r;
         }
-        linalg::top_k_partial(&scratch.scores, kg, &mut scratch.order);
+        if quant {
+            // over-fetch by quantized UB, then f32 re-rank the survivors:
+            // the kept top-kg matches full precision unless a true
+            // winner fell below ~2·kg in the quantized order, and the
+            // f32 UB keeps Eqn. 2's triangle bound conservative
+            let fetch = (2 * kg + 4).min(p);
+            linalg::top_k_partial(&scratch.scores, fetch, &mut scratch.order);
+            let SelectScratch { scores, order, .. } = &mut *scratch;
+            for &u in order.iter() {
+                scores[u] = upper_bound(q, q_norm, self.coarse_centroid(u), self.coarse_radii[u]);
+            }
+            order.sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+            order.truncate(kg);
+        } else {
+            linalg::top_k_partial(&scratch.scores, kg, &mut scratch.order);
+        }
         // fine level within surviving units
         for &u in &scratch.order {
             for &f in &self.coarse_members[u] {
-                let ub = upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f]);
+                let ub = if quant {
+                    self.fine_q.dot_row(f, q) + q_norm * self.fine_radii[f]
+                } else {
+                    upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f])
+                };
                 scratch.cand.push((f, ub));
+            }
+        }
+        if quant {
+            // f32 re-rank of an over-fetched fine window before keeping kc
+            let fetch = (2 * kc + 8).min(scratch.cand.len());
+            if fetch < scratch.cand.len() {
+                scratch.cand.select_nth_unstable_by(fetch - 1, by_score_desc);
+                scratch.cand.truncate(fetch);
+            }
+            for c in scratch.cand.iter_mut() {
+                c.1 = upper_bound(q, q_norm, self.fine_centroid(c.0), self.fine_radii[c.0]);
             }
         }
         // partial selection: only the top-kc survive, so a full sort of
@@ -381,10 +452,23 @@ impl HierarchicalIndex {
         }
         scratch.scores.clear();
         scratch.scores.resize(m, 0.0);
-        linalg::matvec(&self.chunk_reps, self.d, q, &mut scratch.scores);
+        if self.chunk_reps_q.is_active() {
+            self.chunk_reps_q.matvec_into(q, &mut scratch.scores);
+        } else {
+            linalg::matvec(&self.chunk_reps, self.d, q, &mut scratch.scores);
+        }
         // full order: budget filling may skip over-size chunks arbitrarily
         // deep into the ranking, so this baseline keeps the full sort
         linalg::top_k_partial(&scratch.scores, m, &mut scratch.order);
+        if self.chunk_reps_q.is_active() {
+            // f32 re-rank of the window the budget fill can possibly
+            // consume (the shared margin formula all policies use)
+            let min_len = self.chunk_lens.iter().copied().min().unwrap_or(1);
+            let SelectScratch { scores, order, .. } = &mut *scratch;
+            crate::sparse::rerank_top_f32(budget, min_len, scores, order, |ci| {
+                linalg::dot(q, self.chunk_rep(ci))
+            });
+        }
         let SelectScratch { order, tokens, .. } = scratch;
         let mut remaining = budget;
         for &ci in order.iter() {
@@ -417,7 +501,8 @@ impl HierarchicalIndex {
         let meta = self.num_chunks() * (2 * 8 + 8)      // start/len/cluster
             + self.fine_members.iter().map(|f| f.len() * 8 + 24).sum::<usize>()
             + self.coarse_members.iter().map(|u| u.len() * 8 + 8).sum::<usize>();
-        f32s * 4 + meta
+        let mirrors = self.chunk_reps_q.bytes() + self.fine_q.bytes() + self.coarse_q.bytes();
+        f32s * 4 + meta + mirrors
     }
 
     /// Structural invariants (used by tests and debug builds):
@@ -440,6 +525,18 @@ impl HierarchicalIndex {
         }
         if self.coarse_centroids.len() != p * self.d || self.coarse_members.len() != p {
             return Err("coarse SoA arrays inconsistent".into());
+        }
+        let mirrors_ok = !self.chunk_reps_q.is_active()
+            || (self.chunk_reps_q.rows() == m
+                && self.fine_q.rows() == l
+                && self.coarse_q.rows() == p);
+        if !mirrors_ok {
+            return Err(format!(
+                "quantized mirrors out of sync: {}/{}/{} vs {m}/{l}/{p}",
+                self.chunk_reps_q.rows(),
+                self.fine_q.rows(),
+                self.coarse_q.rows()
+            ));
         }
         let mut seen = vec![false; m];
         for fi in 0..l {
@@ -685,6 +782,50 @@ mod tests {
         let (small, ..) = build_topic_index(8, 2, 16, 8);
         let (large, ..) = build_topic_index(8, 8, 32, 8);
         assert!(large.bytes() > small.bytes());
+    }
+
+    #[test]
+    fn quantized_mirrors_track_search_and_grafts() {
+        // Twin indexes over the same topic corpus, one per rep_precision:
+        // mirrors must stay structurally coherent through build + grafts
+        // (check_invariants pins the row counts) and quantized retrieval
+        // must keep finding the planted topic with near-f32 overlap.
+        use crate::quant::Precision;
+        for prec in crate::quant::test_precisions() {
+            if prec == Precision::F32 {
+                continue; // the f32 baseline is every other test
+            }
+            let mut rng = Rng::new(31);
+            let (keys, dirs) = topic_keys(&mut rng, 8, 32, 16, 0.15);
+            let spans = fixed_spans(8 * 32, 8);
+            let mut params = IndexParams::default();
+            params.rep_precision = prec;
+            let src = FlatKeys::new(&keys, 16);
+            let mut qidx = HierarchicalIndex::build(&src, &spans, params);
+            let fidx = HierarchicalIndex::build(&src, &spans, IndexParams::default());
+            qidx.check_invariants().unwrap();
+            assert!(qidx.bytes() > fidx.bytes(), "mirrors not accounted");
+            for (ti, dir) in dirs.iter().enumerate() {
+                let a = fidx.select_tokens(dir, 4, 16, 64);
+                let b = qidx.select_tokens(dir, 4, 16, 64);
+                let sa: std::collections::HashSet<usize> = a.iter().copied().collect();
+                let inter = b.iter().filter(|&t| sa.contains(t)).count();
+                assert!(
+                    inter * 10 >= a.len().max(b.len()) * 9,
+                    "{prec:?} topic {ti}: overlap {inter}/{} too low",
+                    a.len().max(b.len())
+                );
+                // flat scan agrees with itself across precisions too
+                let bf = qidx.select_tokens_flat(dir, 64);
+                assert!(!bf.is_empty());
+            }
+            // grafts and sprouts keep the mirrors in lock-step
+            let base = qidx.num_tokens();
+            for i in 0..40 {
+                qidx.graft_rep(Chunk { start: base + i * 4, len: 4 }, rng.unit_vec(16));
+                qidx.check_invariants().unwrap();
+            }
+        }
     }
 
     #[test]

@@ -8,23 +8,62 @@
 
 use crate::linalg;
 
-/// Abstract access to per-token key rows (head-merged, dim `d`).
-/// Implemented by the paged KV cache (one layer) and by flat arrays in
-/// the synthetic workloads.
+/// Abstract, precision-aware access to per-token key rows (head-merged,
+/// dim `d`). Implemented by the paged KV cache (one layer — possibly
+/// storing f16/i8 under `kv.precision`) and by flat f32 arrays in the
+/// synthetic workloads.
+///
+/// The contract mirrors the mixed-precision memory plane: every source
+/// can *widen* a row into a caller f32 buffer ([`KeySource::key_into`]);
+/// sources whose backing store is f32 additionally lend zero-copy
+/// borrows ([`KeySource::try_key`]), which consumers use as a fast path
+/// (see [`for_each_key`]).
 pub trait KeySource {
     fn dim(&self) -> usize;
-    fn key(&self, token: usize) -> &[f32];
     fn len(&self) -> usize;
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
+    /// Write token's key row, widened to f32, into `out` (`dim` floats).
+    fn key_into(&self, token: usize, out: &mut [f32]);
+    /// Borrowed row when the backing store is f32; `None` for quantized
+    /// sources (callers fall back to [`KeySource::key_into`]).
+    fn try_key(&self, _token: usize) -> Option<&[f32]> {
+        None
+    }
     /// The contiguous row-major `[len, d]` backing store, if this source
-    /// is flat — lets scorers run one blocked GEMV
+    /// is flat f32 — lets scorers run one blocked GEMV
     /// ([`crate::linalg::matvec`]) instead of `len` per-row dots. Paged
-    /// sources return `None` (the default) and fall back to per-row
-    /// scoring.
+    /// or quantized sources return `None` (the default) and fall back to
+    /// per-row scoring.
     fn as_rows(&self) -> Option<&[f32]> {
         None
+    }
+}
+
+/// Visit each key row in `[start, start+len)` in order: zero-copy for
+/// f32-backed sources, widened through one reused buffer otherwise. The
+/// shared iteration primitive of every per-token consumer (rep pooling,
+/// page summaries, attention oracles), so quantized KV caches plug into
+/// all of them without per-row allocation.
+pub fn for_each_key(
+    keys: &dyn KeySource,
+    start: usize,
+    len: usize,
+    mut f: impl FnMut(usize, &[f32]),
+) {
+    let mut tmp: Vec<f32> = Vec::new();
+    for t in start..start + len {
+        match keys.try_key(t) {
+            Some(row) => f(t, row),
+            None => {
+                if tmp.is_empty() {
+                    tmp.resize(keys.dim(), 0.0);
+                }
+                keys.key_into(t, &mut tmp);
+                f(t, &tmp);
+            }
+        }
     }
 }
 
@@ -39,6 +78,11 @@ impl<'a> FlatKeys<'a> {
         assert!(d > 0 && data.len() % d == 0);
         FlatKeys { data, d }
     }
+
+    /// Borrowed row (inherent — always available on a flat f32 matrix).
+    pub fn key(&self, token: usize) -> &[f32] {
+        &self.data[token * self.d..(token + 1) * self.d]
+    }
 }
 
 impl KeySource for FlatKeys<'_> {
@@ -46,12 +90,16 @@ impl KeySource for FlatKeys<'_> {
         self.d
     }
 
-    fn key(&self, token: usize) -> &[f32] {
-        &self.data[token * self.d..(token + 1) * self.d]
-    }
-
     fn len(&self) -> usize {
         self.data.len() / self.d
+    }
+
+    fn key_into(&self, token: usize, out: &mut [f32]) {
+        out.copy_from_slice(self.key(token));
+    }
+
+    fn try_key(&self, token: usize) -> Option<&[f32]> {
+        Some(self.key(token))
     }
 
     fn as_rows(&self) -> Option<&[f32]> {
@@ -71,9 +119,7 @@ pub fn mean_pool_rep(keys: &dyn KeySource, start: usize, len: usize) -> Vec<f32>
     assert!(len > 0);
     let d = keys.dim();
     let mut out = vec![0.0f32; d];
-    for t in start..start + len {
-        linalg::add_assign(&mut out, keys.key(t));
-    }
+    for_each_key(keys, start, len, |_, k| linalg::add_assign(&mut out, k));
     linalg::scale(&mut out, 1.0 / len as f32);
     linalg::normalize(&mut out);
     out
@@ -84,11 +130,11 @@ pub fn max_pool_rep(keys: &dyn KeySource, start: usize, len: usize) -> Vec<f32> 
     assert!(len > 0);
     let d = keys.dim();
     let mut out = vec![f32::NEG_INFINITY; d];
-    for t in start..start + len {
-        for (o, &x) in out.iter_mut().zip(keys.key(t)) {
+    for_each_key(keys, start, len, |_, k| {
+        for (o, &x) in out.iter_mut().zip(k) {
             *o = o.max(x);
         }
-    }
+    });
     linalg::normalize(&mut out);
     out
 }

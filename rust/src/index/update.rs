@@ -136,10 +136,12 @@ impl HierarchicalIndex {
             let ci = self.num_chunks();
             let fi = self.num_clusters();
             self.chunk_reps.extend_from_slice(&rep);
+            self.chunk_reps_q.push_row(&rep);
             self.chunk_starts.push(span.start);
             self.chunk_lens.push(span.len);
             self.chunk_clusters.push(fi);
             self.fine_centroids.extend_from_slice(&rep);
+            self.fine_q.push_row(&rep);
             self.fine_radii.push(0.0);
             self.fine_token_counts.push(span.len);
             self.fine_units.push(u_best);
@@ -155,6 +157,7 @@ impl HierarchicalIndex {
         // --- leaf insert: append a row to the rep matrix ----------------
         let ci = self.num_chunks();
         self.chunk_reps.extend_from_slice(&rep);
+        self.chunk_reps_q.push_row(&rep);
         self.chunk_starts.push(span.start);
         self.chunk_lens.push(span.len);
         self.chunk_clusters.push(f_best);
@@ -182,6 +185,14 @@ impl HierarchicalIndex {
         self.fine_radii[f_best] = (self.fine_radii[f_best] + shift).max(new_dist);
         self.fine_members[f_best].push(ci);
         self.fine_token_counts[f_best] += span.len;
+        // mirror the moved centroid row (graft_tmp is free again — the
+        // shift has been consumed)
+        if self.fine_q.is_active() {
+            let rr = f_best * self.d..(f_best + 1) * self.d;
+            self.graft_tmp.clear();
+            self.graft_tmp.extend_from_slice(&self.fine_centroids[rr]);
+            self.fine_q.set_row(f_best, &self.graft_tmp);
+        }
 
         // --- coarse unit: absorb the cluster's new centroid -------------
         let u = self.fine_units[f_best];
@@ -204,6 +215,9 @@ impl HierarchicalIndex {
         self.coarse_members.push(vec![0]);
         self.chunk_reps.extend_from_slice(&rep);
         self.fine_centroids.extend_from_slice(&rep);
+        self.chunk_reps_q.push_row(&rep);
+        self.fine_q.push_row(&rep);
+        self.coarse_q.push_row(&rep);
         self.coarse_centroids.extend(rep);
         (0, 0)
     }

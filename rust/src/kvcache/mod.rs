@@ -26,6 +26,7 @@
 //! globally) backs the paper's Fig. 8 comparison of KV bytes vs index
 //! bytes and the serving-side pool gauges.
 
+use crate::quant::{self, Precision};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -34,9 +35,19 @@ use std::sync::{Arc, Mutex};
 /// Tokens per page. 64 matches common GPU paged-attention block sizes.
 pub const PAGE_SIZE: usize = 64;
 
-/// One page leased from the pool: `PAGE_SIZE` rows of `row_dim` floats.
+/// Precision-tagged page storage (`kv.precision`): `PAGE_SIZE` rows of
+/// `row_dim` elements in the arena's configured element type. i8 pages
+/// carry per-page, per-channel f32 scales (`row_dim` of them) that grow
+/// geometrically as rows stream in — see `LayerStore::append`.
+enum PageBuf {
+    F32(Box<[f32]>),
+    F16(Box<[u16]>),
+    I8 { codes: Box<[i8]>, scales: Box<[f32]> },
+}
+
+/// One page leased from the pool.
 struct Page {
-    data: Box<[f32]>,
+    data: PageBuf,
     /// Monotonic lease id: a recycled buffer gets a fresh id, so two live
     /// leases never share an id (asserted by the arena tests).
     lease: u64,
@@ -50,6 +61,8 @@ pub struct PoolStats {
     pub bytes_in_use: usize,
     /// Bytes parked on the free-list, ready for reuse.
     pub bytes_free: usize,
+    /// High-water mark of `bytes_free` over the pool's lifetime.
+    pub bytes_free_peak: usize,
     /// Admission-control capacity (`usize::MAX` when unbounded).
     pub capacity_bytes: usize,
     pub pages_in_use: usize,
@@ -57,17 +70,23 @@ pub struct PoolStats {
     pub pages_allocated_total: u64,
     /// Leases served from the free-list over the pool's lifetime.
     pub pages_recycled_total: u64,
+    /// Buffers dropped at release because parking them would push the
+    /// arena's total footprint (leased + parked) past capacity.
+    pub pages_trimmed_total: u64,
 }
 
 struct PoolInner {
-    /// Free buffers keyed by row dimension (a pool normally serves one
-    /// model geometry, but keying keeps mixed-geometry use safe).
-    free: HashMap<usize, Vec<Box<[f32]>>>,
+    /// Free buffers keyed by (row dimension, precision): a pool normally
+    /// serves one model geometry at one `kv.precision`, but keying keeps
+    /// mixed use safe (buffers never change type across leases).
+    free: HashMap<(usize, Precision), Vec<PageBuf>>,
     bytes_in_use: usize,
     bytes_free: usize,
+    bytes_free_peak: usize,
     pages_in_use: usize,
     pages_allocated_total: u64,
     pages_recycled_total: u64,
+    pages_trimmed_total: u64,
 }
 
 /// Process-wide page arena shared by every sequence of an engine.
@@ -89,9 +108,11 @@ impl PagePool {
                 free: HashMap::new(),
                 bytes_in_use: 0,
                 bytes_free: 0,
+                bytes_free_peak: 0,
                 pages_in_use: 0,
                 pages_allocated_total: 0,
                 pages_recycled_total: 0,
+                pages_trimmed_total: 0,
             }),
             capacity_bytes: cap,
             next_lease: AtomicU64::new(1),
@@ -103,9 +124,23 @@ impl PagePool {
         Self::with_capacity(0)
     }
 
-    /// Bytes of one page at the given row dimension.
+    /// Bytes of one f32 page at the given row dimension (the historical
+    /// accounting unit; precision-aware callers use
+    /// [`PagePool::page_bytes_at`]).
     pub fn page_bytes(row_dim: usize) -> usize {
-        PAGE_SIZE * row_dim * 4
+        Self::page_bytes_at(row_dim, Precision::F32)
+    }
+
+    /// Bytes of one page at the given row dimension and storage
+    /// precision — the *real* element size, which is what admission
+    /// control and the arena gauges account in. i8 pages carry
+    /// `row_dim` f32 scales of per-page metadata.
+    pub fn page_bytes_at(row_dim: usize, precision: Precision) -> usize {
+        let elems = PAGE_SIZE * row_dim * precision.bytes_per_elem();
+        match precision {
+            Precision::I8 => elems + row_dim * 4,
+            _ => elems,
+        }
     }
 
     /// Lease a page, recycling a freed buffer when one fits. Leases are
@@ -113,11 +148,11 @@ impl PagePool {
     /// against *reserved* estimated-final footprints (its own ledger, vs
     /// [`PagePool::capacity_bytes`]), so decode-time growth of already
     /// admitted sequences never fails mid-step.
-    fn acquire(&self, row_dim: usize) -> Page {
-        let bytes = Self::page_bytes(row_dim);
+    fn acquire(&self, row_dim: usize, precision: Precision) -> Page {
+        let bytes = Self::page_bytes_at(row_dim, precision);
         let recycled = {
             let mut inner = self.inner.lock().unwrap();
-            let buf = inner.free.get_mut(&row_dim).and_then(|v| v.pop());
+            let buf = inner.free.get_mut(&(row_dim, precision)).and_then(|v| v.pop());
             if buf.is_some() {
                 inner.bytes_free -= bytes;
                 inner.pages_recycled_total += 1;
@@ -134,22 +169,53 @@ impl PagePool {
             // observable through an out-of-range read in release builds
             // (the in-range guard in `LayerStore::row` is debug-only).
             Some(mut buf) => {
-                buf.fill(0.0);
+                match &mut buf {
+                    PageBuf::F32(b) => b.fill(0.0),
+                    PageBuf::F16(b) => b.fill(0),
+                    PageBuf::I8 { codes, scales } => {
+                        codes.fill(0);
+                        scales.fill(0.0);
+                    }
+                }
                 buf
             }
-            None => vec![0.0f32; PAGE_SIZE * row_dim].into_boxed_slice(),
+            None => match precision {
+                Precision::F32 => {
+                    PageBuf::F32(vec![0.0f32; PAGE_SIZE * row_dim].into_boxed_slice())
+                }
+                Precision::F16 => {
+                    PageBuf::F16(vec![0u16; PAGE_SIZE * row_dim].into_boxed_slice())
+                }
+                Precision::I8 => PageBuf::I8 {
+                    codes: vec![0i8; PAGE_SIZE * row_dim].into_boxed_slice(),
+                    scales: vec![0.0f32; row_dim].into_boxed_slice(),
+                },
+            },
         };
         Page { data, lease: self.next_lease.fetch_add(1, Ordering::Relaxed), used: 0 }
     }
 
-    /// Return a page to the free-list (sequence teardown).
-    fn release(&self, page: Page, row_dim: usize) {
-        let bytes = Self::page_bytes(row_dim);
+    /// Return a page to the free-list (sequence teardown). The free-list
+    /// is bounded: a buffer whose parking would push the arena's total
+    /// footprint (leased + parked) past `capacity_bytes` is dropped to
+    /// the allocator instead — a burst of long sequences no longer pins
+    /// its peak memory forever.
+    fn release(&self, page: Page, row_dim: usize, precision: Precision) {
+        let bytes = Self::page_bytes_at(row_dim, precision);
         let mut inner = self.inner.lock().unwrap();
         inner.bytes_in_use -= bytes;
         inner.pages_in_use -= 1;
+        if self.capacity_bytes != usize::MAX
+            && inner.bytes_in_use + inner.bytes_free + bytes > self.capacity_bytes
+        {
+            inner.pages_trimmed_total += 1;
+            return; // dropped, not parked
+        }
         inner.bytes_free += bytes;
-        inner.free.entry(row_dim).or_default().push(page.data);
+        if inner.bytes_free > inner.bytes_free_peak {
+            inner.bytes_free_peak = inner.bytes_free;
+        }
+        inner.free.entry((row_dim, precision)).or_default().push(page.data);
     }
 
     pub fn bytes_in_use(&self) -> usize {
@@ -179,10 +245,12 @@ impl PagePool {
         PoolStats {
             bytes_in_use: inner.bytes_in_use,
             bytes_free: inner.bytes_free,
+            bytes_free_peak: inner.bytes_free_peak,
             capacity_bytes: self.capacity_bytes,
             pages_in_use: inner.pages_in_use,
             pages_allocated_total: inner.pages_allocated_total,
             pages_recycled_total: inner.pages_recycled_total,
+            pages_trimmed_total: inner.pages_trimmed_total,
         }
     }
 }
@@ -190,44 +258,88 @@ impl PagePool {
 /// Per-layer paged storage for one of K or V (page table over leases).
 struct LayerStore {
     row_dim: usize,
+    precision: Precision,
     pages: Vec<Page>,
 }
 
 impl LayerStore {
-    fn new(row_dim: usize) -> LayerStore {
-        LayerStore { row_dim, pages: Vec::new() }
+    fn new(row_dim: usize, precision: Precision) -> LayerStore {
+        LayerStore { row_dim, precision, pages: Vec::new() }
     }
 
     fn len(&self) -> usize {
         self.pages.last().map_or(0, |p| (self.pages.len() - 1) * PAGE_SIZE + p.used)
     }
 
+    /// Append one row, quantizing on write. i8 pages keep per-page,
+    /// per-channel scales: a channel whose new value exceeds its scale's
+    /// range grows geometrically and requantizes that channel's existing
+    /// codes within the page (`quant::grow_channel_for` — shared with
+    /// the index mirrors) — O(PAGE_SIZE) per growth, and the doubling
+    /// bounds how often growth can happen.
     fn append(&mut self, pool: &PagePool, row: &[f32]) {
         debug_assert_eq!(row.len(), self.row_dim);
         if self.pages.last().map_or(true, |p| p.used == PAGE_SIZE) {
-            self.pages.push(pool.acquire(self.row_dim));
+            self.pages.push(pool.acquire(self.row_dim, self.precision));
         }
         let page = self.pages.last_mut().unwrap();
-        let off = page.used * self.row_dim;
-        page.data[off..off + self.row_dim].copy_from_slice(row);
+        let rd = self.row_dim;
+        let off = page.used * rd;
+        match &mut page.data {
+            PageBuf::F32(b) => b[off..off + rd].copy_from_slice(row),
+            PageBuf::F16(b) => quant::narrow_f16_slice(row, &mut b[off..off + rd]),
+            PageBuf::I8 { codes, scales } => {
+                for (c, &x) in row.iter().enumerate() {
+                    quant::grow_channel_for(codes, scales, rd, page.used, c, x);
+                    codes[off + c] = quant::quantize_i8(x, scales[c]);
+                }
+            }
+        }
         page.used += 1;
     }
 
+    /// Borrowed row access — f32 storage only (the zero-copy path the
+    /// policies' `KeySource::try_key` fast path rides on).
     #[inline]
     fn row(&self, idx: usize) -> &[f32] {
+        self.try_row(idx)
+            .unwrap_or_else(|| panic!("borrowed row access on a {:?} store", self.precision))
+    }
+
+    #[inline]
+    fn try_row(&self, idx: usize) -> Option<&[f32]> {
         let (p, o) = (idx / PAGE_SIZE, idx % PAGE_SIZE);
         let page = &self.pages[p];
         debug_assert!(o < page.used, "token {idx} out of range");
-        &page.data[o * self.row_dim..(o + 1) * self.row_dim]
+        match &page.data {
+            PageBuf::F32(b) => Some(&b[o * self.row_dim..(o + 1) * self.row_dim]),
+            _ => None,
+        }
+    }
+
+    /// Fused dequant row copy: widen token `idx`'s row straight into the
+    /// caller's f32 slice (the gather hot path — one dispatch per row,
+    /// no intermediate buffer).
+    #[inline]
+    fn row_into(&self, idx: usize, out: &mut [f32]) {
+        let (p, o) = (idx / PAGE_SIZE, idx % PAGE_SIZE);
+        let page = &self.pages[p];
+        debug_assert!(o < page.used, "token {idx} out of range");
+        let span = o * self.row_dim..(o + 1) * self.row_dim;
+        match &page.data {
+            PageBuf::F32(b) => out.copy_from_slice(&b[span]),
+            PageBuf::F16(b) => crate::linalg::widen_f16(&b[span], out),
+            PageBuf::I8 { codes, scales } => crate::linalg::dequant_i8(&codes[span], scales, out),
+        }
     }
 
     fn bytes(&self) -> usize {
-        self.pages.len() * PagePool::page_bytes(self.row_dim)
+        self.pages.len() * PagePool::page_bytes_at(self.row_dim, self.precision)
     }
 
     fn release_all(&mut self, pool: &PagePool) {
         for p in self.pages.drain(..) {
-            pool.release(p, self.row_dim);
+            pool.release(p, self.row_dim, self.precision);
         }
     }
 }
@@ -238,6 +350,7 @@ pub struct KvCache {
     pub layers: usize,
     pub heads: usize,
     pub head_dim: usize,
+    precision: Precision,
     pool: Arc<PagePool>,
     k: Vec<LayerStore>,
     v: Vec<LayerStore>,
@@ -250,21 +363,35 @@ impl KvCache {
         Self::with_pool(layers, heads, head_dim, PagePool::unbounded())
     }
 
-    /// A cache leasing pages from a shared arena (the serving path).
+    /// A cache leasing f32 pages from a shared arena (the bit-exact
+    /// default path).
     pub fn with_pool(
         layers: usize,
         heads: usize,
         head_dim: usize,
         pool: Arc<PagePool>,
     ) -> KvCache {
+        Self::with_pool_precision(layers, heads, head_dim, pool, Precision::F32)
+    }
+
+    /// A cache leasing precision-tagged pages from a shared arena (the
+    /// serving path; `precision` comes from `kv.precision`).
+    pub fn with_pool_precision(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        pool: Arc<PagePool>,
+        precision: Precision,
+    ) -> KvCache {
         let row = heads * head_dim;
         KvCache {
             layers,
             heads,
             head_dim,
+            precision,
             pool,
-            k: (0..layers).map(|_| LayerStore::new(row)).collect(),
-            v: (0..layers).map(|_| LayerStore::new(row)).collect(),
+            k: (0..layers).map(|_| LayerStore::new(row, precision)).collect(),
+            v: (0..layers).map(|_| LayerStore::new(row, precision)).collect(),
             len: 0,
         }
     }
@@ -274,11 +401,32 @@ impl KvCache {
         &self.pool
     }
 
+    /// Storage precision of this cache's pages.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
     /// Arena bytes a sequence of `n_tokens` will lease at this geometry
-    /// (whole pages, K+V, all layers) — the admission-control estimate.
+    /// in f32 (whole pages, K+V, all layers). Precision-aware callers —
+    /// the engines' admission-control estimates — use
+    /// [`KvCache::estimate_bytes_at`].
     pub fn estimate_bytes(layers: usize, heads: usize, head_dim: usize, n_tokens: usize) -> usize {
+        Self::estimate_bytes_at(layers, heads, head_dim, n_tokens, Precision::F32)
+    }
+
+    /// Arena bytes a sequence of `n_tokens` will lease at this geometry
+    /// and storage precision — the admission-control estimate in the
+    /// *real* element size, which is what turns the precision knob into
+    /// extra resident sequences at a fixed `kv_pool_mb`.
+    pub fn estimate_bytes_at(
+        layers: usize,
+        heads: usize,
+        head_dim: usize,
+        n_tokens: usize,
+        precision: Precision,
+    ) -> usize {
         let pages_per_store = n_tokens.div_ceil(PAGE_SIZE);
-        pages_per_store * PagePool::page_bytes(heads * head_dim) * 2 * layers
+        pages_per_store * PagePool::page_bytes_at(heads * head_dim, precision) * 2 * layers
     }
 
     /// Number of cached tokens (identical across layers by construction).
@@ -381,6 +529,10 @@ impl KvCache {
     }
 
     /// Key row (RoPE'd, head-merged `[H*Dh]`) of a token at one layer.
+    /// Borrowed access requires f32 storage (panics otherwise) — callers
+    /// that must work at any precision use [`KvCache::try_key_row`] with
+    /// a [`KvCache::key_row_into`] fallback, which is exactly what the
+    /// engine's `LayerKeys` key source does.
     #[inline]
     pub fn key_row(&self, layer: usize, token: usize) -> &[f32] {
         self.k[layer].row(token)
@@ -391,8 +543,30 @@ impl KvCache {
         self.v[layer].row(token)
     }
 
+    /// Borrowed key row when storage is f32; `None` for quantized pages.
+    #[inline]
+    pub fn try_key_row(&self, layer: usize, token: usize) -> Option<&[f32]> {
+        self.k[layer].try_row(token)
+    }
+
+    /// Widen a token's key row into `out` at any storage precision.
+    #[inline]
+    pub fn key_row_into(&self, layer: usize, token: usize, out: &mut [f32]) {
+        self.k[layer].row_into(token, out)
+    }
+
+    /// Widen a token's value row into `out` at any storage precision.
+    #[inline]
+    pub fn value_row_into(&self, layer: usize, token: usize, out: &mut [f32]) {
+        self.v[layer].row_into(token, out)
+    }
+
     /// Gather `indices` into caller-provided dense `[M, H, Dh]` slices
     /// plus the `[M]` validity mask (`mask_out.len()` is the bucket).
+    /// This is a **fused dequant-gather**: quantized pages widen straight
+    /// into the caller's f32 slices (one SIMD-dispatched row kernel per
+    /// row, no intermediate buffer), so downstream attention always sees
+    /// f32 while the arena streams half or a quarter of the bytes.
     /// Lock-free and read-only over this sequence's pages, so gathers for
     /// different sequences of a batch run on parallel threads.
     pub fn gather_into(
@@ -412,8 +586,8 @@ impl KvCache {
         v_out.fill(0.0);
         mask_out.fill(0.0);
         for (i, &tok) in indices.iter().enumerate() {
-            k_out[i * row..(i + 1) * row].copy_from_slice(self.k[layer].row(tok));
-            v_out[i * row..(i + 1) * row].copy_from_slice(self.v[layer].row(tok));
+            self.k[layer].row_into(tok, &mut k_out[i * row..(i + 1) * row]);
+            self.v[layer].row_into(tok, &mut v_out[i * row..(i + 1) * row]);
             mask_out[i] = 1.0;
         }
     }
@@ -806,6 +980,116 @@ mod tests {
         assert_eq!(st.pages_in_use, 0);
         assert!(st.pages_recycled_total > 0, "arena reuse never happened");
         assert!(st.bytes_free > 0);
+    }
+
+    #[test]
+    fn quantized_pages_round_trip_within_bounds() {
+        // The mixed-precision arena's accuracy contract: a fused
+        // dequant-gather returns every stored row within the precision's
+        // error bound — f16: half-epsilon relative; i8: a small multiple
+        // of (per-page per-channel max-abs)/127, covering the geometric
+        // scale-growth requantization chain.
+        use crate::quant::Precision;
+        for prec in crate::quant::test_precisions() {
+            let mut c = KvCache::with_pool_precision(1, 1, 8, PagePool::unbounded(), prec);
+            assert_eq!(c.precision(), prec);
+            let mut rng = Rng::new(0xF16 + prec.bytes_per_elem() as u64);
+            let n = 3 * PAGE_SIZE + 17; // several pages + a partial tail
+            let mut truth: Vec<Vec<f32>> = Vec::new();
+            for i in 0..n {
+                // growing magnitudes force i8 per-channel scale growth
+                let g = 1.0 + (i % 70) as f32 * 0.2;
+                let r: Vec<f32> = rng.normal_vec(8).iter().map(|x| x * g).collect();
+                c.append_token(&[&r], &[&r]).unwrap();
+                truth.push(r);
+            }
+            let idx: Vec<usize> = (0..n).collect();
+            let (mut k, mut v, mut m) = (Vec::new(), Vec::new(), Vec::new());
+            c.gather(0, &idx, n.next_power_of_two(), &mut k, &mut v, &mut m);
+            for (t, want) in truth.iter().enumerate() {
+                let page = t / PAGE_SIZE;
+                for col in 0..8 {
+                    let x = want[col];
+                    let got = k[t * 8 + col];
+                    let bound = match prec {
+                        Precision::F32 => 0.0,
+                        Precision::F16 => x.abs() * 4.9e-4 + 1e-6,
+                        Precision::I8 => {
+                            // per-page per-channel max over the page's rows
+                            let lo = page * PAGE_SIZE;
+                            let hi = ((page + 1) * PAGE_SIZE).min(n);
+                            let mx =
+                                (lo..hi).map(|r| truth[r][col].abs()).fold(0.0f32, f32::max);
+                            3.0 * mx / 127.0 + 1e-6
+                        }
+                    };
+                    assert!(
+                        (got - x).abs() <= bound,
+                        "{prec:?} tok {t} col {col}: {got} vs {x} (bound {bound})"
+                    );
+                    assert_eq!(got, v[t * 8 + col], "K and V stores diverged");
+                }
+                // the same bound holds for the single-row widening path
+                let mut row = vec![0.0f32; 8];
+                c.key_row_into(0, t, &mut row);
+                assert_eq!(&row, &k[t * 8..(t + 1) * 8], "row_into != gather");
+            }
+            // borrowed access: available at f32, refused otherwise
+            if prec == Precision::F32 {
+                assert!(c.try_key_row(0, 0).is_some());
+            } else {
+                assert!(c.try_key_row(0, 0).is_none());
+            }
+            // accounting reflects the real element size
+            let expect_page = PagePool::page_bytes_at(8, prec);
+            assert_eq!(c.bytes(), 2 * 4 * expect_page); // K+V × 4 pages each
+        }
+    }
+
+    #[test]
+    fn estimate_bytes_at_multiplies_capacity() {
+        use crate::quant::Precision;
+        let f32b = KvCache::estimate_bytes_at(4, 2, 64, 32 * 1024, Precision::F32);
+        let f16b = KvCache::estimate_bytes_at(4, 2, 64, 32 * 1024, Precision::F16);
+        let i8b = KvCache::estimate_bytes_at(4, 2, 64, 32 * 1024, Precision::I8);
+        assert_eq!(f32b, KvCache::estimate_bytes(4, 2, 64, 32 * 1024));
+        // the acceptance floor: ≥ 1.9x resident sequences at f16, more at i8
+        assert!(f32b as f64 / f16b as f64 >= 1.9, "f16 ratio {}", f32b as f64 / f16b as f64);
+        assert!(f32b as f64 / i8b as f64 >= 3.5, "i8 ratio {}", f32b as f64 / i8b as f64);
+    }
+
+    #[test]
+    fn free_list_trims_against_capacity() {
+        // Overcommit a bounded pool (acquire never refuses — admission
+        // control lives in the coordinator), then release: buffers that
+        // would park the arena past capacity are dropped, the rest are
+        // recycled, and the high-water mark records the peak.
+        let page = PagePool::page_bytes(8);
+        let pool = PagePool::with_capacity(2 * page);
+        let mut a = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+        let mut b = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+        let row = vec![0.0f32; 8];
+        a.append_token(&[&row], &[&row]).unwrap(); // 2 pages (K+V)
+        b.append_token(&[&row], &[&row]).unwrap(); // 4 total: overcommitted
+        assert_eq!(pool.bytes_in_use(), 4 * page);
+        drop(b); // in_use 3p → parking would exceed 2p capacity: trimmed
+        let st = pool.stats();
+        assert_eq!(st.pages_trimmed_total, 2);
+        assert_eq!(st.bytes_free, 0);
+        drop(a); // now parking fits: both pages recycle
+        let st = pool.stats();
+        assert_eq!(st.pages_trimmed_total, 2);
+        assert_eq!(st.bytes_free, 2 * page);
+        assert_eq!(st.bytes_free_peak, 2 * page);
+        assert_eq!(st.bytes_in_use, 0);
+        // an unbounded pool never trims
+        let unb = PagePool::unbounded();
+        {
+            let mut c = KvCache::with_pool(1, 2, 4, Arc::clone(&unb));
+            c.append_token(&[&row], &[&row]).unwrap();
+        }
+        assert_eq!(unb.stats().pages_trimmed_total, 0);
+        assert_eq!(unb.stats().bytes_free, 2 * page);
     }
 
     #[test]

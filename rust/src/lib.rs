@@ -31,6 +31,7 @@ pub mod index;
 pub mod kvcache;
 pub mod linalg;
 pub mod model;
+pub mod quant;
 pub mod runtime;
 pub mod server;
 pub mod sparse;

@@ -32,6 +32,47 @@ pub fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
     simd::matvec(mat, d, q, out)
 }
 
+/// Widening dot over IEEE-half bits (SIMD-dispatched; F16C when
+/// available). The f16 quantized-mirror scoring primitive.
+#[inline]
+pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    simd::dot_f16(a, b)
+}
+
+/// Widening blocked GEMV over half-bit rows (SIMD-dispatched).
+#[inline]
+pub fn matvec_f16(mat: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+    simd::matvec_f16(mat, d, q, out)
+}
+
+/// Widening f16→f32 copy (SIMD-dispatched) — the fused dequant-gather's
+/// per-row kernel.
+#[inline]
+pub fn widen_f16(src: &[u16], dst: &mut [f32]) {
+    simd::widen_f16(src, dst)
+}
+
+/// Widening dot over i8 codes with per-channel scales
+/// (SIMD-dispatched): `Σ codes[j]·scales[j]·q[j]`.
+#[inline]
+pub fn dot_i8_scaled(codes: &[i8], scales: &[f32], q: &[f32]) -> f32 {
+    simd::dot_i8_scaled(codes, scales, q)
+}
+
+/// Widening blocked GEMV over i8 rows with a shared per-channel scale
+/// vector (SIMD-dispatched).
+#[inline]
+pub fn matvec_i8_scaled(codes: &[i8], d: usize, scales: &[f32], q: &[f32], out: &mut [f32]) {
+    simd::matvec_i8_scaled(codes, d, scales, q, out)
+}
+
+/// Dequantizing i8→f32 copy with per-channel scales (SIMD-dispatched) —
+/// the fused dequant-gather's per-row kernel.
+#[inline]
+pub fn dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
+    simd::dequant_i8(codes, scales, dst)
+}
+
 /// Euclidean distance.
 #[inline]
 pub fn dist(a: &[f32], b: &[f32]) -> f32 {

@@ -52,6 +52,25 @@ fn detect() -> Backend {
     Backend::Scalar
 }
 
+/// Whether the f16 widening kernels may use hardware half↔single
+/// conversion (F16C on top of the AVX2+FMA backend). Detected once, like
+/// [`backend`]; without it the f16 kernels fall back to the bit-twiddling
+/// scalar conversion in [`crate::quant`].
+pub fn f16c_available() -> bool {
+    static F16C: OnceLock<bool> = OnceLock::new();
+    *F16C.get_or_init(detect_f16c)
+}
+
+fn detect_f16c() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma && std::arch::is_x86_feature_detected!("f16c") {
+            return true;
+        }
+    }
+    false
+}
+
 // ---------------------------------------------------------------------------
 // scalar reference kernels
 // ---------------------------------------------------------------------------
@@ -93,6 +112,75 @@ pub fn scalar_matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
     debug_assert_eq!(mat.len(), out.len() * d);
     for (r, o) in out.iter_mut().enumerate() {
         *o = scalar_dot(&mat[r * d..(r + 1) * d], q);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// scalar widening kernels (f16 bits / i8 codes against f32 queries)
+// ---------------------------------------------------------------------------
+
+/// Scalar widening dot: `a` holds IEEE half bits, `b` is f32.
+pub fn scalar_dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = [0.0f32; 4];
+    let chunks = a.len() / 4;
+    for i in 0..chunks {
+        let j = i * 4;
+        acc[0] += crate::quant::f16_to_f32(a[j]) * b[j];
+        acc[1] += crate::quant::f16_to_f32(a[j + 1]) * b[j + 1];
+        acc[2] += crate::quant::f16_to_f32(a[j + 2]) * b[j + 2];
+        acc[3] += crate::quant::f16_to_f32(a[j + 3]) * b[j + 3];
+    }
+    let mut s = acc[0] + acc[1] + acc[2] + acc[3];
+    for i in chunks * 4..a.len() {
+        s += crate::quant::f16_to_f32(a[i]) * b[i];
+    }
+    s
+}
+
+/// Scalar widening GEMV over half-bit rows.
+pub fn scalar_matvec_f16(mat: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(mat.len(), out.len() * d);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = scalar_dot_f16(&mat[r * d..(r + 1) * d], q);
+    }
+}
+
+/// Scalar f16→f32 widening copy.
+pub fn scalar_widen_f16(src: &[u16], dst: &mut [f32]) {
+    crate::quant::widen_f16_slice(src, dst);
+}
+
+/// Scalar widening dot over i8 codes with per-channel scales:
+/// `Σ codes[j]·scales[j]·q[j]`.
+pub fn scalar_dot_i8_scaled(codes: &[i8], scales: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    debug_assert_eq!(scales.len(), q.len());
+    let mut s = 0.0f32;
+    for j in 0..codes.len() {
+        s += codes[j] as f32 * (scales[j] * q[j]);
+    }
+    s
+}
+
+/// Scalar widening GEMV over i8 rows: the per-channel scale vector is
+/// shared by every row (`scales.len() == d`).
+pub fn scalar_matvec_i8_scaled(codes: &[i8], d: usize, scales: &[f32], q: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(q.len(), d);
+    debug_assert_eq!(scales.len(), d);
+    debug_assert_eq!(codes.len(), out.len() * d);
+    for (r, o) in out.iter_mut().enumerate() {
+        *o = scalar_dot_i8_scaled(&codes[r * d..(r + 1) * d], scales, q);
+    }
+}
+
+/// Scalar i8→f32 dequantizing copy: `dst[j] = codes[j]·scales[j]`.
+pub fn scalar_dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
+    debug_assert_eq!(codes.len(), dst.len());
+    debug_assert_eq!(scales.len(), dst.len());
+    for j in 0..dst.len() {
+        dst[j] = codes[j] as f32 * scales[j];
     }
 }
 
@@ -229,6 +317,214 @@ mod avx2 {
             r += 1;
         }
     }
+
+    // ---- widening kernels: f16 bits via F16C ---------------------------
+
+    /// Load 8 half values and widen to a f32 register.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    unsafe fn load8_f16(p: *const u16) -> __m256 {
+        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA+F16C and `a.len() == b.len()`.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub unsafe fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+        let n = a.len();
+        let pa = a.as_ptr();
+        let pb = b.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc = _mm256_fmadd_ps(load8_f16(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            s += crate::quant::f16_to_f32(*pa.add(i)) * *pb.add(i);
+            i += 1;
+        }
+        s
+    }
+
+    /// Blocked widening GEMV over half-bit rows (4 rows share each query
+    /// load, like [`matvec`]).
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA+F16C, `q.len() == d` and
+    /// `mat.len() == out.len() * d`.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub unsafe fn matvec_f16(mat: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+        let rows = out.len();
+        let pq = q.as_ptr();
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let p0 = mat.as_ptr().add(r * d);
+            let p1 = mat.as_ptr().add((r + 1) * d);
+            let p2 = mat.as_ptr().add((r + 2) * d);
+            let p3 = mat.as_ptr().add((r + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut j = 0usize;
+            while j + 8 <= d {
+                let qv = _mm256_loadu_ps(pq.add(j));
+                a0 = _mm256_fmadd_ps(load8_f16(p0.add(j)), qv, a0);
+                a1 = _mm256_fmadd_ps(load8_f16(p1.add(j)), qv, a1);
+                a2 = _mm256_fmadd_ps(load8_f16(p2.add(j)), qv, a2);
+                a3 = _mm256_fmadd_ps(load8_f16(p3.add(j)), qv, a3);
+                j += 8;
+            }
+            let mut s0 = hsum256(a0);
+            let mut s1 = hsum256(a1);
+            let mut s2 = hsum256(a2);
+            let mut s3 = hsum256(a3);
+            while j < d {
+                let qj = *pq.add(j);
+                s0 += crate::quant::f16_to_f32(*p0.add(j)) * qj;
+                s1 += crate::quant::f16_to_f32(*p1.add(j)) * qj;
+                s2 += crate::quant::f16_to_f32(*p2.add(j)) * qj;
+                s3 += crate::quant::f16_to_f32(*p3.add(j)) * qj;
+                j += 1;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+            r += 4;
+        }
+        while r < rows {
+            out[r] = dot_f16(&mat[r * d..(r + 1) * d], q);
+            r += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA+F16C and `src.len() == dst.len()`.
+    #[target_feature(enable = "avx2,fma,f16c")]
+    pub unsafe fn widen_f16(src: &[u16], dst: &mut [f32]) {
+        let n = src.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), load8_f16(src.as_ptr().add(i)));
+            i += 8;
+        }
+        while i < n {
+            dst[i] = crate::quant::f16_to_f32(src[i]);
+            i += 1;
+        }
+    }
+
+    // ---- widening kernels: i8 codes with per-channel scales ------------
+
+    /// Load 8 i8 codes and widen to a f32 register.
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn load8_i8(p: *const i8) -> __m256 {
+        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA and equal lengths.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot_i8_scaled(codes: &[i8], scales: &[f32], q: &[f32]) -> f32 {
+        let n = codes.len();
+        let pc = codes.as_ptr();
+        let ps = scales.as_ptr();
+        let pq = q.as_ptr();
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let sq = _mm256_mul_ps(_mm256_loadu_ps(ps.add(i)), _mm256_loadu_ps(pq.add(i)));
+            acc = _mm256_fmadd_ps(load8_i8(pc.add(i)), sq, acc);
+            i += 8;
+        }
+        let mut s = hsum256(acc);
+        while i < n {
+            s += *pc.add(i) as f32 * (*ps.add(i) * *pq.add(i));
+            i += 1;
+        }
+        s
+    }
+
+    /// Blocked widening GEMV over i8 rows: the scaled query `s·q` is
+    /// formed once per 8-lane block and shared by 4 row streams.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA, `q.len() == scales.len() == d` and
+    /// `codes.len() == out.len() * d`.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn matvec_i8_scaled(
+        codes: &[i8],
+        d: usize,
+        scales: &[f32],
+        q: &[f32],
+        out: &mut [f32],
+    ) {
+        let rows = out.len();
+        let pq = q.as_ptr();
+        let ps = scales.as_ptr();
+        let mut r = 0usize;
+        while r + 4 <= rows {
+            let p0 = codes.as_ptr().add(r * d);
+            let p1 = codes.as_ptr().add((r + 1) * d);
+            let p2 = codes.as_ptr().add((r + 2) * d);
+            let p3 = codes.as_ptr().add((r + 3) * d);
+            let mut a0 = _mm256_setzero_ps();
+            let mut a1 = _mm256_setzero_ps();
+            let mut a2 = _mm256_setzero_ps();
+            let mut a3 = _mm256_setzero_ps();
+            let mut j = 0usize;
+            while j + 8 <= d {
+                let sq = _mm256_mul_ps(_mm256_loadu_ps(ps.add(j)), _mm256_loadu_ps(pq.add(j)));
+                a0 = _mm256_fmadd_ps(load8_i8(p0.add(j)), sq, a0);
+                a1 = _mm256_fmadd_ps(load8_i8(p1.add(j)), sq, a1);
+                a2 = _mm256_fmadd_ps(load8_i8(p2.add(j)), sq, a2);
+                a3 = _mm256_fmadd_ps(load8_i8(p3.add(j)), sq, a3);
+                j += 8;
+            }
+            let mut s0 = hsum256(a0);
+            let mut s1 = hsum256(a1);
+            let mut s2 = hsum256(a2);
+            let mut s3 = hsum256(a3);
+            while j < d {
+                let sq = *ps.add(j) * *pq.add(j);
+                s0 += *p0.add(j) as f32 * sq;
+                s1 += *p1.add(j) as f32 * sq;
+                s2 += *p2.add(j) as f32 * sq;
+                s3 += *p3.add(j) as f32 * sq;
+                j += 1;
+            }
+            out[r] = s0;
+            out[r + 1] = s1;
+            out[r + 2] = s2;
+            out[r + 3] = s3;
+            r += 4;
+        }
+        while r < rows {
+            out[r] = dot_i8_scaled(&codes[r * d..(r + 1) * d], scales, q);
+            r += 1;
+        }
+    }
+
+    /// # Safety
+    /// Caller must ensure AVX2+FMA and equal lengths.
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
+        let n = codes.len();
+        let pc = codes.as_ptr();
+        let ps = scales.as_ptr();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let v = _mm256_mul_ps(load8_i8(pc.add(i)), _mm256_loadu_ps(ps.add(i)));
+            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+            i += 8;
+        }
+        while i < n {
+            dst[i] = *pc.add(i) as f32 * *ps.add(i);
+            i += 1;
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -282,6 +578,112 @@ pub fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
         }
     }
     scalar_matvec(mat, d, q, out);
+}
+
+/// Widening dot over half bits on the selected backend (F16C required on
+/// top of AVX2+FMA; otherwise the scalar conversion path).
+#[inline]
+pub fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if f16c_available() {
+            // SAFETY: f16c_available() verified avx2+fma+f16c; lengths match.
+            return unsafe { avx2::dot_f16(a, b) };
+        }
+    }
+    scalar_dot_f16(a, b)
+}
+
+/// Widening GEMV over half-bit rows on the selected backend.
+#[inline]
+pub fn matvec_f16(mat: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+    assert_eq!(q.len(), d, "matvec_f16 query dim mismatch");
+    assert_eq!(mat.len(), out.len() * d, "matvec_f16 matrix shape mismatch");
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if f16c_available() {
+            // SAFETY: f16c_available() verified avx2+fma+f16c; shapes checked.
+            unsafe { avx2::matvec_f16(mat, d, q, out) };
+            return;
+        }
+    }
+    scalar_matvec_f16(mat, d, q, out)
+}
+
+/// Widening f16→f32 copy on the selected backend (the fused
+/// dequant-gather's row kernel).
+#[inline]
+pub fn widen_f16(src: &[u16], dst: &mut [f32]) {
+    assert_eq!(src.len(), dst.len(), "widen_f16 length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if f16c_available() {
+            // SAFETY: f16c_available() verified avx2+fma+f16c; lengths match.
+            unsafe { avx2::widen_f16(src, dst) };
+            return;
+        }
+    }
+    scalar_widen_f16(src, dst)
+}
+
+/// Widening dot over i8 codes with per-channel scales on the selected
+/// backend.
+#[inline]
+pub fn dot_i8_scaled(codes: &[i8], scales: &[f32], q: &[f32]) -> f32 {
+    debug_assert_eq!(codes.len(), q.len());
+    debug_assert_eq!(scales.len(), q.len());
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma; lengths match.
+            return unsafe { avx2::dot_i8_scaled(codes, scales, q) };
+        }
+    }
+    scalar_dot_i8_scaled(codes, scales, q)
+}
+
+/// Widening GEMV over i8 rows with per-channel scales on the selected
+/// backend.
+#[inline]
+pub fn matvec_i8_scaled(codes: &[i8], d: usize, scales: &[f32], q: &[f32], out: &mut [f32]) {
+    assert_eq!(q.len(), d, "matvec_i8 query dim mismatch");
+    assert_eq!(scales.len(), d, "matvec_i8 scale dim mismatch");
+    assert_eq!(codes.len(), out.len() * d, "matvec_i8 matrix shape mismatch");
+    if d == 0 {
+        out.fill(0.0);
+        return;
+    }
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma; shapes checked.
+            unsafe { avx2::matvec_i8_scaled(codes, d, scales, q, out) };
+            return;
+        }
+    }
+    scalar_matvec_i8_scaled(codes, d, scales, q, out)
+}
+
+/// Dequantizing i8→f32 copy on the selected backend (the fused
+/// dequant-gather's row kernel).
+#[inline]
+pub fn dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
+    assert_eq!(codes.len(), dst.len(), "dequant_i8 length mismatch");
+    assert_eq!(scales.len(), dst.len(), "dequant_i8 scale length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma; lengths match.
+            unsafe { avx2::dequant_i8(codes, scales, dst) };
+            return;
+        }
+    }
+    scalar_dequant_i8(codes, scales, dst)
 }
 
 #[cfg(test)]
@@ -378,5 +780,107 @@ mod tests {
         let mut out: Vec<f32> = Vec::new();
         matvec(&[], 4, &[0.0; 4], &mut out);
         assert!(out.is_empty());
+        assert_eq!(dot_f16(&[], &[]), 0.0);
+        assert_eq!(dot_i8_scaled(&[], &[], &[]), 0.0);
+        matvec_f16(&[], 4, &[0.0; 4], &mut out);
+        assert!(out.is_empty());
+        matvec_i8_scaled(&[], 4, &[0.0; 4], &[0.0; 4], &mut out);
+        assert!(out.is_empty());
+    }
+
+    #[test]
+    fn simd_matches_scalar_dot_f16() {
+        // widening dot across aligned (multiples of 8) and remainder
+        // lengths; the two paths widen identical bits, so they differ
+        // only by accumulation order
+        prop::check("simd dot_f16 == scalar", 200, |g| {
+            let n = g.usize_in(0..67);
+            let a: Vec<u16> = (0..n)
+                .map(|_| crate::quant::f16_from_f32(g.f32_in(-2.0, 2.0)))
+                .collect();
+            let b: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let want = scalar_dot_f16(&a, &b);
+            let got = dot_f16(&a, &b);
+            prop_assert!((got - want).abs() < tol(n), "dot_f16 {got} vs {want} (n={n})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_matches_scalar_matvec_f16() {
+        prop::check("simd matvec_f16 == scalar", 120, |g| {
+            let d = g.usize_in(1..40);
+            let rows = g.usize_in(0..13);
+            let mat: Vec<u16> = (0..rows * d)
+                .map(|_| crate::quant::f16_from_f32(g.f32_in(-2.0, 2.0)))
+                .collect();
+            let q: Vec<f32> = (0..d).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let mut want = vec![0.0f32; rows];
+            let mut got = vec![0.0f32; rows];
+            scalar_matvec_f16(&mat, d, &q, &mut want);
+            matvec_f16(&mat, d, &q, &mut got);
+            for r in 0..rows {
+                prop_assert!(
+                    (got[r] - want[r]).abs() < tol(d),
+                    "row {r}: {} vs {} (rows={rows}, d={d})",
+                    got[r],
+                    want[r]
+                );
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_widen_f16_is_exact() {
+        // widening is value-exact (every half is representable in f32),
+        // so SIMD and scalar must agree bit-for-bit
+        prop::check("simd widen_f16 exact", 100, |g| {
+            let n = g.usize_in(0..40);
+            let src: Vec<u16> = (0..n)
+                .map(|_| crate::quant::f16_from_f32(g.f32_in(-100.0, 100.0)))
+                .collect();
+            let mut a = vec![0.0f32; n];
+            let mut b = vec![0.0f32; n];
+            widen_f16(&src, &mut a);
+            scalar_widen_f16(&src, &mut b);
+            prop_assert!(a == b, "widen mismatch at n={n}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn simd_matches_scalar_i8_kernels() {
+        prop::check("simd i8 == scalar", 150, |g| {
+            let d = g.usize_in(1..40);
+            let rows = g.usize_in(0..13);
+            let codes: Vec<i8> = (0..rows * d).map(|_| g.usize_in(0..255) as i8).collect();
+            let scales: Vec<f32> = (0..d).map(|_| g.f32_in(0.0, 0.05)).collect();
+            let q: Vec<f32> = (0..d).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let mut want = vec![0.0f32; rows];
+            let mut got = vec![0.0f32; rows];
+            scalar_matvec_i8_scaled(&codes, d, &scales, &q, &mut want);
+            matvec_i8_scaled(&codes, d, &scales, &q, &mut got);
+            for r in 0..rows {
+                prop_assert!(
+                    (got[r] - want[r]).abs() < tol(d),
+                    "i8 row {r}: {} vs {} (rows={rows}, d={d})",
+                    got[r],
+                    want[r]
+                );
+            }
+            if rows > 0 {
+                let row = &codes[..d];
+                let a = dot_i8_scaled(row, &scales, &q);
+                let b = scalar_dot_i8_scaled(row, &scales, &q);
+                prop_assert!((a - b).abs() < tol(d), "i8 dot {a} vs {b}");
+                let mut da = vec![0.0f32; d];
+                let mut db = vec![0.0f32; d];
+                dequant_i8(row, &scales, &mut da);
+                scalar_dequant_i8(row, &scales, &mut db);
+                prop_assert!(da == db, "i8 dequant mismatch (d={d})");
+            }
+            Ok(())
+        });
     }
 }

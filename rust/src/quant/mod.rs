@@ -1,0 +1,643 @@
+//! Mixed-precision substrate for the memory plane: the [`Precision`]
+//! tag shared by the KV page arena (`kv.precision`) and the index
+//! representative mirrors (`index.rep_precision`), bit-level f32 ↔ f16
+//! conversion (no external crates — the build is offline/vendored), i8
+//! quantization with per-channel scales, and [`QuantMat`] — the quantized
+//! mirror of a row-major `[rows, d]` scoring matrix.
+//!
+//! Design rules:
+//!
+//! - **f32 is the bit-exact default.** Every quantized structure is a
+//!   no-op at [`Precision::F32`]; the f32 code paths are byte-identical
+//!   to the pre-mixed-precision stack, so all bit-exactness tests keep
+//!   passing unchanged.
+//! - **Quantize on write, widen on read.** Storage holds f16 bits or i8
+//!   codes; every consumer-facing read widens straight into caller f32
+//!   buffers (the fused dequant-gather in `kvcache`, the widening GEMVs
+//!   in `linalg`). Nothing downstream ever sees a narrow type.
+//! - **Per-channel i8 scales with monotonic doubling growth.** A channel
+//!   whose running max-abs outgrows its scale gets `scale = max(needed,
+//!   2·old)` and its existing codes requantized; the geometric growth
+//!   bounds the accumulated requantization error by ~2·scale (the
+//!   round-trip property test in `kvcache` pins the bound).
+
+/// Storage precision of a KV page or an index representative mirror.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum Precision {
+    /// IEEE 754 single — the bit-exact default.
+    #[default]
+    F32,
+    /// IEEE 754 half, stored as raw `u16` bits (2 bytes/elem).
+    F16,
+    /// Signed 8-bit codes with per-channel f32 scales (1 byte/elem +
+    /// 4 bytes/channel of scale metadata per page or mirror).
+    I8,
+}
+
+impl Precision {
+    /// Bytes per stored element (i8 scale metadata accounted separately).
+    pub fn bytes_per_elem(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F16 => 2,
+            Precision::I8 => 1,
+        }
+    }
+
+    /// Canonical config/wire spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::F16 => "f16",
+            Precision::I8 => "i8",
+        }
+    }
+
+    /// Parse the config spelling (`f32` | `f16` | `i8`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" => Some(Precision::F32),
+            "f16" => Some(Precision::F16),
+            "i8" => Some(Precision::I8),
+            _ => None,
+        }
+    }
+
+    /// All supported precisions (config docs, benches, test sweeps).
+    pub const ALL: [Precision; 3] = [Precision::F32, Precision::F16, Precision::I8];
+}
+
+/// Precisions the property suites exercise: honors the CI matrix's
+/// `LYCHEE_TEST_PRECISION` env var (`f32` | `f16` | `i8`) so each matrix
+/// leg focuses on one storage type; defaults to all three.
+pub fn test_precisions() -> Vec<Precision> {
+    match std::env::var("LYCHEE_TEST_PRECISION") {
+        Ok(s) => match Precision::parse(s.trim()) {
+            Some(p) => vec![p],
+            None => Precision::ALL.to_vec(),
+        },
+        Err(_) => Precision::ALL.to_vec(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// f16 bit conversion (round-to-nearest-even; subnormals, inf, NaN exact)
+// ---------------------------------------------------------------------------
+
+/// Convert f32 to IEEE 754 half bits, round-to-nearest-even. Overflow
+/// saturates to ±inf; NaN payloads keep their top mantissa bits (and a
+/// quiet bit, so a NaN never collapses to inf).
+pub fn f16_from_f32(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x007F_FFFF;
+    if exp == 0xFF {
+        // inf / NaN: preserve NaN-ness explicitly
+        return if man == 0 {
+            sign | 0x7C00
+        } else {
+            sign | 0x7C00 | 0x0200 | ((man >> 13) as u16 & 0x03FF)
+        };
+    }
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → ±inf
+    }
+    if e <= 0 {
+        if e < -10 {
+            return sign; // underflows even the smallest subnormal
+        }
+        // subnormal half: shift the (implicit-1) mantissa into place
+        let man = man | 0x0080_0000;
+        let shift = (14 - e) as u32; // 14..=24
+        let half = man >> shift;
+        let rem = man & ((1u32 << shift) - 1);
+        let midpoint = 1u32 << (shift - 1);
+        let rounded = if rem > midpoint || (rem == midpoint && (half & 1) == 1) {
+            half + 1 // may carry into the exponent field — correct bitwise
+        } else {
+            half
+        };
+        return sign | rounded as u16;
+    }
+    let half = ((e as u32) << 10) | (man >> 13);
+    let rem = man & 0x1FFF;
+    let rounded = if rem > 0x1000 || (rem == 0x1000 && (half & 1) == 1) {
+        half + 1 // carry may bump the exponent, up to and including inf
+    } else {
+        half
+    };
+    sign | rounded as u16
+}
+
+/// Convert IEEE 754 half bits back to f32 (exact — every f16 value is
+/// representable in f32).
+pub fn f16_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x03FF) as u32;
+    let bits = if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else if exp == 0 {
+        if man == 0 {
+            sign // ±0
+        } else {
+            // subnormal: value = man · 2⁻²⁴; normalize into f32 form
+            let p = 31 - man.leading_zeros(); // highest set bit, 0..=9
+            let exp32 = p + 103; // (p − 24) + 127
+            let man32 = (man << (23 - p)) & 0x007F_FFFF;
+            sign | (exp32 << 23) | man32
+        }
+    } else {
+        sign | ((exp + 112) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Largest finite half value.
+pub const F16_MAX: f32 = 65504.0;
+
+/// Storage-path conversion: like [`f16_from_f32`] but **saturating** —
+/// finite values beyond the half range clamp to ±[`F16_MAX`] instead of
+/// becoming ±inf. One out-of-range KV element must degrade the gather
+/// by a bounded amount, not poison downstream attention with inf/NaN.
+/// (Genuine inf/NaN inputs pass through unchanged — they were already
+/// poison in f32.)
+#[inline]
+pub fn f16_from_f32_sat(x: f32) -> u16 {
+    if x.is_finite() {
+        f16_from_f32(x.clamp(-F16_MAX, F16_MAX))
+    } else {
+        f16_from_f32(x)
+    }
+}
+
+/// Widen a slice of f16 bits into f32 (scalar reference; the hot gather
+/// path dispatches to the F16C kernel via [`crate::linalg::widen_f16`]).
+pub fn widen_f16_slice(src: &[u16], dst: &mut [f32]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_to_f32(s);
+    }
+}
+
+/// Narrow a slice of f32 into f16 bits (the quantize-on-write path;
+/// saturating — see [`f16_from_f32_sat`]).
+pub fn narrow_f16_slice(src: &[f32], dst: &mut [u16]) {
+    debug_assert_eq!(src.len(), dst.len());
+    for (d, &s) in dst.iter_mut().zip(src) {
+        *d = f16_from_f32_sat(s);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// i8 quantization
+// ---------------------------------------------------------------------------
+
+/// Quantize one value at a given scale: `round(x / scale)` clamped to
+/// `[-127, 127]`. A zero scale encodes an all-zero channel.
+#[inline]
+pub fn quantize_i8(x: f32, scale: f32) -> i8 {
+    if scale <= 0.0 {
+        0
+    } else {
+        (x / scale).round().clamp(-127.0, 127.0) as i8
+    }
+}
+
+/// Grow a channel scale to cover `needed` (= max-abs / 127): geometric
+/// doubling so the requantization chain's accumulated rounding error is
+/// bounded by a constant multiple of the final scale.
+#[inline]
+pub fn grown_scale(old: f32, needed: f32) -> f32 {
+    needed.max(2.0 * old)
+}
+
+/// Grow channel `c`'s per-channel scale to cover `x`, requantizing the
+/// channel's existing codes in place (`rows` rows of stride `d` in
+/// `codes`). The single implementation behind both i8 storage paths —
+/// KV pages (`kvcache::LayerStore::append`) and index mirrors
+/// ([`QuantMat`]) — so the growth/requantization invariant can never
+/// diverge between them.
+///
+/// Non-finite `x` (inf/NaN) must NOT grow the scale: an infinite
+/// `needed` would zero the requantization ratio and silently wipe every
+/// existing code in the channel. The caller's subsequent
+/// [`quantize_i8`] clamps ±inf to ±127 at the current scale and maps
+/// NaN to 0, confining the damage to the poisoned element — the same
+/// bounded-degradation rule the f16 path enforces with
+/// [`f16_from_f32_sat`].
+#[inline]
+pub fn grow_channel_for(
+    codes: &mut [i8],
+    scales: &mut [f32],
+    d: usize,
+    rows: usize,
+    c: usize,
+    x: f32,
+) {
+    let needed = x.abs() / 127.0;
+    if needed <= scales[c] || !needed.is_finite() {
+        return;
+    }
+    let new_scale = grown_scale(scales[c], needed);
+    if scales[c] > 0.0 {
+        let ratio = scales[c] / new_scale;
+        for r in 0..rows {
+            let old = codes[r * d + c] as f32;
+            codes[r * d + c] = (old * ratio).round() as i8;
+        }
+    }
+    scales[c] = new_scale;
+}
+
+/// Quantized mirror of a row-major `[rows, d]` f32 scoring matrix
+/// (`index.rep_precision`). The f32 matrix stays the source of truth —
+/// the mirror exists so the decode-time "score every row" GEMV streams
+/// half or a quarter of the bytes; the final top-k is re-ranked against
+/// the f32 rows, so ranking precision is preserved where it matters.
+///
+/// At [`Precision::F32`] the mirror stores nothing and every method is a
+/// no-op (`is_active()` is false) — the bit-exact default.
+#[derive(Clone, Debug, Default)]
+pub struct QuantMat {
+    precision: Precision,
+    d: usize,
+    rows: usize,
+    f16: Vec<u16>,
+    codes: Vec<i8>,
+    /// Per-channel scales (`d` entries; [`Precision::I8`] only).
+    scales: Vec<f32>,
+}
+
+impl QuantMat {
+    pub fn new(precision: Precision) -> QuantMat {
+        QuantMat { precision, ..QuantMat::default() }
+    }
+
+    /// True when a quantized mirror is actually maintained.
+    pub fn is_active(&self) -> bool {
+        self.precision != Precision::F32
+    }
+
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Drop all rows and fix the row dimension (start of a build).
+    pub fn reset(&mut self, d: usize) {
+        self.d = d;
+        self.rows = 0;
+        self.f16.clear();
+        self.codes.clear();
+        self.scales.clear();
+        if self.precision == Precision::I8 {
+            self.scales.resize(d, 0.0);
+        }
+    }
+
+    /// Re-mirror a whole matrix (build path): i8 scales are computed
+    /// exactly per channel over all rows, so bulk builds carry a single
+    /// quantization rounding, never a requantization chain.
+    pub fn rebuild(&mut self, mat: &[f32], d: usize) {
+        if !self.is_active() {
+            return;
+        }
+        assert!(d > 0 && mat.len() % d == 0, "quant mirror shape");
+        self.reset(d);
+        self.rows = mat.len() / d;
+        match self.precision {
+            Precision::F32 => {}
+            Precision::F16 => {
+                self.f16.resize(mat.len(), 0);
+                narrow_f16_slice(mat, &mut self.f16);
+            }
+            Precision::I8 => {
+                for (c, s) in self.scales.iter_mut().enumerate() {
+                    let mut mx = 0.0f32;
+                    for r in 0..self.rows {
+                        mx = mx.max(mat[r * d + c].abs());
+                    }
+                    *s = mx / 127.0;
+                }
+                self.codes.reserve(mat.len());
+                for (j, &x) in mat.iter().enumerate() {
+                    self.codes.push(quantize_i8(x, self.scales[j % d]));
+                }
+            }
+        }
+    }
+
+    /// Append one row (graft / page-seal path). i8 channels whose scale
+    /// no longer covers the new row grow geometrically, requantizing the
+    /// existing column codes in place.
+    pub fn push_row(&mut self, row: &[f32]) {
+        if !self.is_active() {
+            return;
+        }
+        debug_assert_eq!(row.len(), self.d, "quant mirror row dim");
+        match self.precision {
+            Precision::F32 => {}
+            Precision::F16 => {
+                self.f16.extend(row.iter().map(|&x| f16_from_f32_sat(x)));
+            }
+            Precision::I8 => {
+                for (c, &x) in row.iter().enumerate() {
+                    self.grow_channel(c, x);
+                    self.codes.push(quantize_i8(x, self.scales[c]));
+                }
+            }
+        }
+        self.rows += 1;
+    }
+
+    /// Rewrite one row in place (a centroid moved by the lazy update).
+    pub fn set_row(&mut self, r: usize, row: &[f32]) {
+        if !self.is_active() {
+            return;
+        }
+        debug_assert!(r < self.rows, "quant mirror row index");
+        debug_assert_eq!(row.len(), self.d, "quant mirror row dim");
+        let off = r * self.d;
+        match self.precision {
+            Precision::F32 => {}
+            Precision::F16 => {
+                narrow_f16_slice(row, &mut self.f16[off..off + self.d]);
+            }
+            Precision::I8 => {
+                for (c, &x) in row.iter().enumerate() {
+                    self.grow_channel(c, x);
+                    self.codes[off + c] = quantize_i8(x, self.scales[c]);
+                }
+            }
+        }
+    }
+
+    /// Grow channel `c`'s scale to cover `x`, requantizing existing codes
+    /// (shared implementation with the KV pages — see
+    /// [`grow_channel_for`]).
+    fn grow_channel(&mut self, c: usize, x: f32) {
+        grow_channel_for(&mut self.codes, &mut self.scales, self.d, self.rows, c, x);
+    }
+
+    /// Score every mirrored row against `q`: `out[r] = row_r · q` in
+    /// dequantized semantics, via the widening GEMV kernels. Panics at
+    /// f32 — callers gate on [`QuantMat::is_active`] and run the plain
+    /// [`crate::linalg::matvec`] over the f32 matrix instead.
+    pub fn matvec_into(&self, q: &[f32], out: &mut [f32]) {
+        assert_eq!(out.len(), self.rows, "quant matvec shape");
+        match self.precision {
+            Precision::F32 => panic!("matvec_into on an inactive (f32) quant mirror"),
+            Precision::F16 => crate::linalg::matvec_f16(&self.f16, self.d, q, out),
+            Precision::I8 => {
+                crate::linalg::matvec_i8_scaled(&self.codes, self.d, &self.scales, q, out)
+            }
+        }
+    }
+
+    /// Dequantized dot of one mirrored row against `q`.
+    pub fn dot_row(&self, r: usize, q: &[f32]) -> f32 {
+        debug_assert!(r < self.rows);
+        let off = r * self.d;
+        match self.precision {
+            Precision::F32 => panic!("dot_row on an inactive (f32) quant mirror"),
+            Precision::F16 => crate::linalg::dot_f16(&self.f16[off..off + self.d], q),
+            Precision::I8 => {
+                crate::linalg::dot_i8_scaled(&self.codes[off..off + self.d], &self.scales, q)
+            }
+        }
+    }
+
+    /// Widen one mirrored row into `out` (tests, diagnostics).
+    pub fn row_into(&self, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(out.len(), self.d);
+        let off = r * self.d;
+        match self.precision {
+            Precision::F32 => panic!("row_into on an inactive (f32) quant mirror"),
+            Precision::F16 => widen_f16_slice(&self.f16[off..off + self.d], out),
+            Precision::I8 => {
+                for (j, o) in out.iter_mut().enumerate() {
+                    *o = self.codes[off + j] as f32 * self.scales[j];
+                }
+            }
+        }
+    }
+
+    /// Mirror memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        self.f16.len() * 2 + self.codes.len() + self.scales.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn precision_basics() {
+        assert_eq!(Precision::F32.bytes_per_elem(), 4);
+        assert_eq!(Precision::F16.bytes_per_elem(), 2);
+        assert_eq!(Precision::I8.bytes_per_elem(), 1);
+        for p in Precision::ALL {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("f64"), None);
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn f16_exact_values_round_trip() {
+        // includes the smallest normal (2⁻¹⁴) and subnormal (2⁻²⁴) halves
+        // and the nearest half to 0.1 (bits 0x2E66)
+        for &x in &[
+            0.0f32,
+            -0.0,
+            1.0,
+            -1.0,
+            0.5,
+            2.0,
+            -2.25,
+            65504.0,
+            -65504.0,
+            f16_to_f32(0x2E66),
+            2f32.powi(-14),
+            2f32.powi(-24),
+        ] {
+            let h = f16_from_f32(x);
+            assert_eq!(f16_to_f32(h), x, "{x} did not round-trip");
+        }
+        assert_eq!(f16_to_f32(f16_from_f32(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f16_from_f32(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        assert!(f16_to_f32(f16_from_f32(f32::NAN)).is_nan());
+        // IEEE conversion overflows to inf; tiny values flush to zero
+        assert_eq!(f16_to_f32(f16_from_f32(1e6)), f32::INFINITY);
+        assert_eq!(f16_to_f32(f16_from_f32(1e-9)), 0.0);
+        assert_eq!(f16_to_f32(f16_from_f32(-1e-9)), -0.0);
+        // ...but the storage path saturates: one out-of-range KV element
+        // must never widen back as inf and poison attention with NaN
+        assert_eq!(f16_to_f32(f16_from_f32_sat(1e6)), F16_MAX);
+        assert_eq!(f16_to_f32(f16_from_f32_sat(-1e6)), -F16_MAX);
+        assert_eq!(f16_to_f32(f16_from_f32_sat(1.5)), 1.5);
+        assert_eq!(f16_to_f32(f16_from_f32_sat(f32::INFINITY)), f32::INFINITY);
+        assert!(f16_to_f32(f16_from_f32_sat(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_round_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between 1.0 and the next half (1 + 2^-10):
+        // round-to-even keeps 1.0; anything above the midpoint rounds up.
+        let midpoint = 1.0 + 2f32.powi(-11);
+        assert_eq!(f16_to_f32(f16_from_f32(midpoint)), 1.0);
+        let above = 1.0 + 2f32.powi(-11) + 2f32.powi(-14);
+        assert_eq!(f16_to_f32(f16_from_f32(above)), 1.0 + 2f32.powi(-10));
+    }
+
+    #[test]
+    fn prop_f16_round_trip_error_bound() {
+        prop::check("f16 round trip", 300, |g| {
+            let x = g.f32_in(-100.0, 100.0);
+            let rt = f16_to_f32(f16_from_f32(x));
+            // half precision: relative error ≤ 2⁻¹¹ in the normal range,
+            // absolute ≤ 2⁻²⁵ around zero (subnormal spacing)
+            let bound = (x.abs() * 4.9e-4).max(3.0e-8);
+            prop_assert!((rt - x).abs() <= bound, "x={x} rt={rt}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn quantize_i8_clamps_and_rounds() {
+        assert_eq!(quantize_i8(0.0, 0.0), 0);
+        assert_eq!(quantize_i8(1.0, 1.0 / 127.0), 127);
+        assert_eq!(quantize_i8(-1.0, 1.0 / 127.0), -127);
+        assert_eq!(quantize_i8(10.0, 1.0 / 127.0), 127); // clamped
+        assert_eq!(quantize_i8(0.5, 1.0), 1); // round half away handled by f32 round
+    }
+
+    #[test]
+    fn quantmat_f32_is_inert() {
+        let mut m = QuantMat::new(Precision::F32);
+        assert!(!m.is_active());
+        m.reset(8);
+        m.rebuild(&[1.0; 16], 8);
+        m.push_row(&[1.0; 8]);
+        assert_eq!(m.bytes(), 0);
+    }
+
+    #[test]
+    fn quantmat_rebuild_round_trips_within_bounds() {
+        let mut rng = Rng::new(7);
+        let d = 16;
+        let rows = 40;
+        let mat = rng.normal_vec(rows * d);
+        for prec in [Precision::F16, Precision::I8] {
+            let mut m = QuantMat::new(prec);
+            m.rebuild(&mat, d);
+            assert_eq!(m.rows(), rows);
+            let mut out = vec![0.0f32; d];
+            for r in 0..rows {
+                m.row_into(r, &mut out);
+                for c in 0..d {
+                    let x = mat[r * d + c];
+                    let bound = match prec {
+                        Precision::F16 => x.abs() * 4.9e-4 + 1e-6,
+                        // bulk rebuild: a single rounding at the exact
+                        // per-channel scale
+                        Precision::I8 => {
+                            let mut mx = 0.0f32;
+                            for rr in 0..rows {
+                                mx = mx.max(mat[rr * d + c].abs());
+                            }
+                            0.51 * mx / 127.0 + 1e-6
+                        }
+                        Precision::F32 => unreachable!(),
+                    };
+                    assert!(
+                        (out[c] - x).abs() <= bound,
+                        "{prec:?} row {r} col {c}: {} vs {x}",
+                        out[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantmat_push_and_set_stay_coherent() {
+        let mut rng = Rng::new(9);
+        let d = 8;
+        for prec in [Precision::F16, Precision::I8] {
+            let mut m = QuantMat::new(prec);
+            m.reset(d);
+            let mut truth: Vec<Vec<f32>> = Vec::new();
+            for i in 0..50 {
+                // growing magnitudes force i8 scale growth + requantization
+                let row: Vec<f32> = rng.normal_vec(d).iter().map(|x| x * (1.0 + i as f32)).collect();
+                m.push_row(&row);
+                truth.push(row);
+            }
+            let replacement = rng.normal_vec(d);
+            m.set_row(3, &replacement);
+            truth[3] = replacement;
+            let mut out = vec![0.0f32; d];
+            for (r, want) in truth.iter().enumerate() {
+                m.row_into(r, &mut out);
+                for c in 0..d {
+                    let mx = truth.iter().map(|t| t[c].abs()).fold(0.0f32, f32::max);
+                    let bound = match prec {
+                        Precision::F16 => want[c].abs() * 4.9e-4 + 1e-6,
+                        // streaming appends: doubling growth bounds the
+                        // requantization chain at ~2 final scales, and the
+                        // final scale overshoots max-abs/127 by ≤ 2×
+                        Precision::I8 => 3.0 * mx / 127.0 + 1e-6,
+                        Precision::F32 => unreachable!(),
+                    };
+                    assert!(
+                        (out[c] - want[c]).abs() <= bound,
+                        "{prec:?} row {r} col {c}: {} vs {} (bound {bound})",
+                        out[c],
+                        want[c]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn quantmat_matvec_matches_dequantized_rows() {
+        let mut rng = Rng::new(11);
+        let d = 24;
+        let rows = 13;
+        let mat = rng.normal_vec(rows * d);
+        let q = rng.normal_vec(d);
+        for prec in [Precision::F16, Precision::I8] {
+            let mut m = QuantMat::new(prec);
+            m.rebuild(&mat, d);
+            let mut scores = vec![0.0f32; rows];
+            m.matvec_into(&q, &mut scores);
+            let mut row = vec![0.0f32; d];
+            for r in 0..rows {
+                m.row_into(r, &mut row);
+                let want = crate::linalg::dot(&row, &q);
+                assert!(
+                    (scores[r] - want).abs() < 1e-3,
+                    "{prec:?} row {r}: {} vs {want}",
+                    scores[r]
+                );
+                assert!((scores[r] - m.dot_row(r, &q)).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -149,6 +149,11 @@ fn metrics_json(m: &Metrics) -> Json {
         ("rejected", Json::num(m.rejected as f64)),
         ("tokens_out", Json::num(m.tokens_out as f64)),
         ("kv_bytes_in_use", Json::num(m.kv_bytes_in_use as f64)),
+        ("kv_bytes_free", Json::num(m.kv_bytes_free as f64)),
+        ("kv_bytes_free_peak", Json::num(m.kv_bytes_free_peak as f64)),
+        ("kv_pages_recycled_total", Json::num(m.kv_pages_recycled_total as f64)),
+        ("kv_precision", Json::str(&m.kv_precision)),
+        ("rep_precision", Json::str(&m.rep_precision)),
         ("admission_waits", Json::num(m.admission_waits as f64)),
         ("prefill_chunks_executed", Json::num(m.prefill_chunks_executed as f64)),
         ("preemptions", Json::num(m.preemptions as f64)),
@@ -378,6 +383,12 @@ mod tests {
         assert_eq!(m.get("queue_depth").as_usize(), Some(0));
         assert!(m.get("ttft_p50_us").as_f64().unwrap_or(0.0) > 0.0);
         assert!(m.get("tpot_p50_us").as_f64().is_some());
+        // pool/precision gauges ride the same scrape
+        assert_eq!(m.get("kv_precision").as_str(), Some("f32"));
+        assert_eq!(m.get("rep_precision").as_str(), Some("f32"));
+        assert!(m.get("kv_bytes_free").as_f64().is_some());
+        assert!(m.get("kv_bytes_free_peak").as_f64().is_some());
+        assert!(m.get("kv_pages_recycled_total").as_f64().is_some());
 
         // a server started without metrics answers the scrape with an error
         let server2 = Server::start("127.0.0.1:0", handle.clone(), None).unwrap();

@@ -10,10 +10,11 @@
 //! pages with one blocked GEMV plus a radius fixup (the same Eqn. 2 ball
 //! bound the hierarchical index uses, at page granularity).
 
-use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
+use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
+use crate::quant::QuantMat;
 
 const PAGE: usize = 128; // 32 BPE tokens ~= 128 bytes
 
@@ -26,6 +27,8 @@ pub struct ArkVale {
     lens: Vec<usize>,
     /// Page centroids, row-major `[P, d]`.
     centroids: Vec<f32>,
+    /// Quantized centroid mirror (`index.rep_precision`; inert at f32).
+    centroids_q: QuantMat,
     /// Ball radius per page.
     radii: Vec<f32>,
     open_start: Option<usize>,
@@ -34,12 +37,14 @@ pub struct ArkVale {
 
 impl ArkVale {
     pub fn new(cfg: LycheeConfig) -> ArkVale {
+        let prec = cfg.rep_precision;
         ArkVale {
             cfg,
             d: 0,
             starts: Vec::new(),
             lens: Vec::new(),
             centroids: Vec::new(),
+            centroids_q: QuantMat::new(prec),
             radii: Vec::new(),
             open_start: None,
             open_len: 0,
@@ -61,17 +66,19 @@ impl ArkVale {
     fn push_page(&mut self, keys: &dyn KeySource, start: usize, len: usize) {
         let d = self.d;
         let mut c = vec![0.0f32; d];
-        for t in start..start + len {
-            linalg::add_assign(&mut c, keys.key(t));
-        }
+        crate::index::reps::for_each_key(keys, start, len, |_, k| linalg::add_assign(&mut c, k));
         linalg::scale(&mut c, 1.0 / len as f32);
         let mut r = 0.0f32;
-        for t in start..start + len {
-            r = r.max(linalg::dist(keys.key(t), &c));
-        }
+        crate::index::reps::for_each_key(keys, start, len, |_, k| r = r.max(linalg::dist(k, &c)));
         self.starts.push(start);
         self.lens.push(len);
         self.centroids.extend_from_slice(&c);
+        if self.centroids_q.is_active() {
+            if self.centroids_q.dim() != d {
+                self.centroids_q.reset(d);
+            }
+            self.centroids_q.push_row(&c);
+        }
         self.radii.push(r);
     }
 }
@@ -86,6 +93,7 @@ impl Policy for ArkVale {
         self.starts.clear();
         self.lens.clear();
         self.centroids.clear();
+        self.centroids_q.reset(self.d);
         self.radii.clear();
         let mut s = 0;
         while s < ctx.n {
@@ -107,6 +115,7 @@ impl Policy for ArkVale {
             self.starts.clear();
             self.lens.clear();
             self.centroids.clear();
+            self.centroids_q.reset(self.d);
             self.radii.clear();
             self.open_start = None;
             self.open_len = 0;
@@ -142,15 +151,30 @@ impl Policy for ArkVale {
         scratch.tokens.clear();
         let np = self.num_pages();
         if np > 0 {
-            // ball upper bound for every page: one GEMV + radius fixup
+            // ball upper bound for every page: one GEMV + radius fixup —
+            // over the quantized mirror when the precision is narrow
+            let quant = self.centroids_q.is_active();
             let qn = linalg::norm(q);
             scratch.scores.clear();
             scratch.scores.resize(np, 0.0);
-            linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            if quant {
+                self.centroids_q.matvec_into(q, &mut scratch.scores);
+            } else {
+                linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            }
             for (s, r) in scratch.scores.iter_mut().zip(&self.radii) {
                 *s += qn * r;
             }
             linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+            if quant {
+                // f32 re-rank of the window the budget fill can consume
+                let min_len = self.lens.iter().copied().min().unwrap_or(1);
+                let SelectScratch { scores, order, .. } = &mut *scratch;
+                rerank_top_f32(remaining, min_len, scores, order, |pi| {
+                    let row = &self.centroids[pi * self.d..(pi + 1) * self.d];
+                    linalg::dot(row, q) + qn * self.radii[pi]
+                });
+            }
             let mut left = remaining;
             let SelectScratch { order, tokens, .. } = &mut *scratch;
             for &pi in order.iter() {
@@ -188,7 +212,7 @@ impl Policy for ArkVale {
     }
 
     fn index_bytes(&self) -> usize {
-        self.centroids.len() * 4 + self.num_pages() * 20
+        self.centroids.len() * 4 + self.num_pages() * 20 + self.centroids_q.bytes()
     }
 }
 

@@ -99,10 +99,9 @@ impl Policy for H2O {
         // mass on average) and keep sink+recent verbatim.
         self.retained = (0..ctx.n).collect();
         self.acc.clear();
-        for t in 0..ctx.n {
-            let k = ctx.keys.key(t);
+        crate::index::reps::for_each_key(ctx.keys, 0, ctx.n, |t, k| {
             self.acc.insert(t, crate::linalg::norm(k) as f64 * 1e-3);
-        }
+        });
         self.evict_to_budget(ctx.n);
     }
 

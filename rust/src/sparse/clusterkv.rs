@@ -8,10 +8,11 @@
 //! assigned to the nearest centroid; a periodic full re-clustering (the
 //! "high update overhead" of global methods) refreshes the index.
 
-use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
+use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::kmeans::spherical_kmeans;
 use crate::linalg;
+use crate::quant::QuantMat;
 
 pub struct ClusterKv {
     cfg: LycheeConfig,
@@ -19,6 +20,11 @@ pub struct ClusterKv {
     /// Cluster centroids, row-major `[k, d]` (already SoA — retrieval
     /// scores them with one blocked GEMV).
     centroids: Vec<f32>,
+    /// Quantized centroid mirror (`index.rep_precision`; inert at f32).
+    /// Retrieval scoring streams it (with an f32 re-rank of the drained
+    /// window); nearest-centroid *assignment* stays f32-exact so the
+    /// cluster membership state never drifts from full precision.
+    centroids_q: QuantMat,
     members: Vec<Vec<usize>>,
     /// Tokens since the last full re-clustering.
     stale: usize,
@@ -35,10 +41,12 @@ pub struct ClusterKv {
 
 impl ClusterKv {
     pub fn new(cfg: LycheeConfig) -> ClusterKv {
+        let prec = cfg.rep_precision;
         ClusterKv {
             cfg,
             d: 0,
             centroids: Vec::new(),
+            centroids_q: QuantMat::new(prec),
             members: Vec::new(),
             stale: 0,
             recluster_every: 512,
@@ -57,18 +65,20 @@ impl ClusterKv {
         self.d = ctx.keys.dim();
         if n == 0 {
             self.centroids.clear();
+            self.centroids_q.reset(self.d);
             self.members.clear();
             self.n_indexed = 0;
             return;
         }
         let mut pts = Vec::with_capacity(n * self.d);
-        for t in 0..n {
-            let mut k = ctx.keys.key(t).to_vec();
-            linalg::normalize(&mut k);
-            pts.extend_from_slice(&k);
-        }
+        crate::index::reps::for_each_key(ctx.keys, 0, n, |_, k| {
+            let base = pts.len();
+            pts.extend_from_slice(k);
+            linalg::normalize(&mut pts[base..]);
+        });
         let res = spherical_kmeans(&pts, self.d, self.k_for(n), 5, 0xC1A5);
         self.centroids = res.centroids.clone();
+        self.centroids_q.rebuild(&self.centroids, self.d);
         self.members = res.members();
         self.n_indexed = n;
         self.stale = 0;
@@ -97,6 +107,7 @@ impl Policy for ClusterKv {
     fn extend(&mut self, ctx: &Ctx, new: std::ops::Range<usize>) {
         if new.start == 0 {
             self.centroids.clear();
+            self.centroids_q.reset(ctx.keys.dim());
             self.members.clear();
             self.n_indexed = 0;
             self.stale = 0;
@@ -111,11 +122,15 @@ impl Policy for ClusterKv {
         }
         let k = self.members.len();
         for t in new.clone() {
-            self.key_buf.clear();
-            self.key_buf.extend_from_slice(ctx.keys.key(t));
+            self.key_buf.resize(self.d, 0.0);
+            ctx.keys.key_into(t, &mut self.key_buf);
             linalg::normalize(&mut self.key_buf);
             self.score_buf.clear();
             self.score_buf.resize(k, 0.0);
+            // assignment stays f32-exact: a quantized argmax could park a
+            // token in a different cluster than full precision would,
+            // and that index drift compounds (the select side is where
+            // the mirror pays — protected there by the f32 re-rank)
             linalg::matvec(&self.centroids, self.d, &self.key_buf, &mut self.score_buf);
             self.members[linalg::argmax(&self.score_buf)].push(t);
         }
@@ -135,10 +150,23 @@ impl Policy for ClusterKv {
         let k = self.members.len();
         scratch.tokens.clear();
         if k > 0 {
+            let quant = self.centroids_q.is_active();
             scratch.scores.clear();
             scratch.scores.resize(k, 0.0);
-            linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            if quant {
+                self.centroids_q.matvec_into(q, &mut scratch.scores);
+            } else {
+                linalg::matvec(&self.centroids, self.d, q, &mut scratch.scores);
+            }
             linalg::top_k_partial(&scratch.scores, k, &mut scratch.order);
+            if quant {
+                // f32 re-rank of the cluster window the budget can drain
+                let min_len = self.members.iter().map(|m| m.len()).min().unwrap_or(1);
+                let SelectScratch { scores, order, .. } = &mut *scratch;
+                rerank_top_f32(remaining, min_len, scores, order, |c| {
+                    linalg::dot(&self.centroids[c * self.d..(c + 1) * self.d], q)
+                });
+            }
             let mut left = remaining;
             let SelectScratch { order, tokens, .. } = &mut *scratch;
             'outer: for &c in order.iter() {
@@ -163,11 +191,13 @@ impl Policy for ClusterKv {
             return;
         }
         let k = self.members.len();
-        self.key_buf.clear();
-        self.key_buf.extend_from_slice(ctx.keys.key(pos));
+        self.key_buf.resize(self.d, 0.0);
+        ctx.keys.key_into(pos, &mut self.key_buf);
         linalg::normalize(&mut self.key_buf);
         self.score_buf.clear();
         self.score_buf.resize(k, 0.0);
+        // f32-exact assignment — see `extend` for why the mirror is not
+        // used on the assignment path
         linalg::matvec(&self.centroids, self.d, &self.key_buf, &mut self.score_buf);
         let best = linalg::argmax(&self.score_buf);
         self.members[best].push(pos);
@@ -179,7 +209,9 @@ impl Policy for ClusterKv {
     }
 
     fn index_bytes(&self) -> usize {
-        self.centroids.len() * 4 + self.members.iter().map(|m| m.len() * 8).sum::<usize>()
+        self.centroids.len() * 4
+            + self.members.iter().map(|m| m.len() * 8).sum::<usize>()
+            + self.centroids_q.bytes()
     }
 }
 

@@ -60,6 +60,7 @@ impl LycheePolicy {
             kmeans_iters: self.cfg.kmeans_iters,
             pooling: self.pooling,
             seed: 0x17C4EE,
+            rep_precision: self.cfg.rep_precision,
             ..IndexParams::default()
         }
     }

@@ -169,6 +169,38 @@ pub fn always_active_into(out: &mut Vec<usize>, n: usize, sink: usize, recent: u
     out.extend(n.saturating_sub(recent).max(sink_end)..n);
 }
 
+/// Re-rank window for quantized page/cluster scoring: how deep into the
+/// quantized ranking a policy re-scores with exact f32 rows before the
+/// budget fill consumes it. Four times the worst-case number of spans
+/// the remaining budget can absorb (smallest span as the divisor) plus
+/// slack, capped at the span count — generous enough that the final fill
+/// order matches full precision unless a true winner fell implausibly
+/// deep in the quantized order (the registry-wide overlap property test
+/// pins ≥ 0.99).
+pub(crate) fn rerank_window(budget_remaining: usize, min_span_len: usize, n: usize) -> usize {
+    (4 * budget_remaining.div_ceil(min_span_len.max(1)) + 16).min(n)
+}
+
+/// The f32 re-rank every quantized scorer applies after its mirror GEMV:
+/// re-score the top [`rerank_window`] entries of `order` with the exact
+/// f32 expression and re-sort them (descending score, ties to the
+/// smaller index — the same order `top_k_partial` produces). One shared
+/// implementation so the window formula and tiebreak can never diverge
+/// across policies.
+pub(crate) fn rerank_top_f32(
+    budget_remaining: usize,
+    min_span_len: usize,
+    scores: &mut [f32],
+    order: &mut [usize],
+    mut exact: impl FnMut(usize) -> f32,
+) {
+    let w = rerank_window(budget_remaining, min_span_len, order.len());
+    for &i in order[..w].iter() {
+        scores[i] = exact(i);
+    }
+    order[..w].sort_unstable_by(|&a, &b| scores[b].total_cmp(&scores[a]).then(a.cmp(&b)));
+}
+
 /// Merge candidate tokens with the always-active set under a budget:
 /// always-active first, then candidates in given order until full.
 pub fn merge_with_budget(always: Vec<usize>, candidates: &[usize], budget: usize) -> Vec<usize> {
@@ -406,6 +438,62 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    /// The mixed-precision acceptance property: for EVERY policy in the
+    /// registry, selections computed over quantized representative
+    /// mirrors (`index.rep_precision` = f16/i8, with the f32 re-rank)
+    /// must overlap the full-precision selections at ≥ 0.99 token-level
+    /// Jaccard, and the f32 configuration must stay **byte-identical**
+    /// to a plain f32 policy — the quantized code path must not engage.
+    #[test]
+    fn quantized_reps_match_f32_selections_for_all_policies() {
+        use crate::quant::Precision;
+        let d = 16;
+        let n = 900;
+        let steps = 8;
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 128;
+        cfg.sink = 8;
+        cfg.recent = 16;
+        let mut rng = Rng::new(0xCAFE);
+        let keys = rng.normal_vec((n + steps) * d);
+        let text: Vec<u8> =
+            (0..n + steps).map(|_| b"the quick, brown. fox\n"[rng.range(0, 22)]).collect();
+        let src = FlatKeys::new(&keys, d);
+
+        for prec in crate::quant::test_precisions() {
+            let mut qcfg = cfg.clone();
+            qcfg.rep_precision = prec;
+            for &name in POLICY_NAMES {
+                let mut base = make_policy(name, &cfg, 1, 4).unwrap();
+                let mut quant = make_policy(name, &qcfg, 1, 4).unwrap();
+                base.build(&Ctx { keys: &src, text: &text, n });
+                quant.build(&Ctx { keys: &src, text: &text, n });
+                let (mut inter, mut union) = (0usize, 0usize);
+                for step in 0..steps {
+                    let pos = n + step;
+                    let ctx = Ctx { keys: &src, text: &text, n: pos };
+                    let q = rng.normal_vec(d);
+                    let a = base.select(&ctx, &q, pos);
+                    let b = quant.select(&ctx, &q, pos);
+                    if prec == Precision::F32 {
+                        assert_eq!(a, b, "{name}: f32 'mirror' config diverged at step {step}");
+                    }
+                    let sa: std::collections::HashSet<usize> = a.iter().copied().collect();
+                    let both = b.iter().filter(|&t| sa.contains(t)).count();
+                    inter += both;
+                    union += a.len() + b.len() - both;
+                    base.on_token(&ctx, pos);
+                    quant.on_token(&ctx, pos);
+                }
+                let overlap = if union == 0 { 1.0 } else { inter as f64 / union as f64 };
+                assert!(
+                    overlap >= 0.99,
+                    "{name} @ {prec:?}: quantized-vs-f32 overlap {overlap:.4} < 0.99"
+                );
+            }
+        }
     }
 
     /// Shared contract test: every policy returns a sorted, deduped,

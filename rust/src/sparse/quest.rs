@@ -13,11 +13,12 @@
 //! can swap fixed 16-token pages for structure-aware chunks while
 //! keeping the scoring identical (`quest-chunks`).
 
-use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
+use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
 use crate::chunking::Chunker;
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
+use crate::quant::QuantMat;
 
 pub struct Quest {
     cfg: LycheeConfig,
@@ -31,6 +32,11 @@ pub struct Quest {
     sums: Vec<f32>,
     /// `max - min` rows (elementwise non-negative), row-major `[P, d]`.
     diffs: Vec<f32>,
+    /// Quantized mirrors of `sums`/`diffs` (`index.rep_precision`; inert
+    /// at f32): the two scoring GEMVs stream these, with an f32 re-rank
+    /// of the window the budget fill consumes.
+    sums_q: QuantMat,
+    diffs_q: QuantMat,
     /// Decode-side accumulation (fixed page size like the paper's system).
     open_start: Option<usize>,
     open_len: usize,
@@ -43,6 +49,7 @@ pub struct Quest {
 
 impl Quest {
     pub fn new(cfg: LycheeConfig, chunker: Box<dyn Chunker>) -> Quest {
+        let prec = cfg.rep_precision;
         Quest {
             cfg,
             chunker,
@@ -51,6 +58,8 @@ impl Quest {
             lens: Vec::new(),
             sums: Vec::new(),
             diffs: Vec::new(),
+            sums_q: QuantMat::new(prec),
+            diffs_q: QuantMat::new(prec),
             open_start: None,
             open_len: 0,
             decode_page: 48,
@@ -67,16 +76,24 @@ impl Quest {
         let d = self.d;
         let mut mn = vec![f32::INFINITY; d];
         let mut mx = vec![f32::NEG_INFINITY; d];
-        for t in start..start + len {
-            for (j, &x) in keys.key(t).iter().enumerate() {
+        crate::index::reps::for_each_key(keys, start, len, |_, k| {
+            for (j, &x) in k.iter().enumerate() {
                 mn[j] = mn[j].min(x);
                 mx[j] = mx[j].max(x);
             }
-        }
+        });
         self.starts.push(start);
         self.lens.push(len);
         self.sums.extend(mn.iter().zip(&mx).map(|(a, b)| a + b));
         self.diffs.extend(mn.iter().zip(&mx).map(|(a, b)| b - a));
+        if self.sums_q.is_active() {
+            if self.sums_q.dim() != d {
+                self.sums_q.reset(d);
+                self.diffs_q.reset(d);
+            }
+            self.sums_q.push_row(&self.sums[self.sums.len() - d..]);
+            self.diffs_q.push_row(&self.diffs[self.diffs.len() - d..]);
+        }
     }
 
     /// Quest's AABB upper bound of `q·k` over page `i` (scalar reference
@@ -105,6 +122,8 @@ impl Policy for Quest {
         self.lens.clear();
         self.sums.clear();
         self.diffs.clear();
+        self.sums_q.reset(self.d);
+        self.diffs_q.reset(self.d);
         let spans = self.chunker.chunk(&ctx.text[..ctx.n.min(ctx.text.len())]);
         for s in spans {
             self.push_page(ctx.keys, s.start, s.len);
@@ -127,6 +146,8 @@ impl Policy for Quest {
             self.lens.clear();
             self.sums.clear();
             self.diffs.clear();
+            self.sums_q.reset(self.d);
+            self.diffs_q.reset(self.d);
             self.open_start = None;
             self.open_len = 0;
             self.staged_upto = 0;
@@ -175,20 +196,38 @@ impl Policy for Quest {
             merge_into(out, tokens, budget);
             return;
         }
-        // score every page with two GEMVs: sums·q + diffs·|q|
+        // score every page with two GEMVs: sums·q + diffs·|q| — over the
+        // quantized mirrors when `index.rep_precision` is narrow
+        let quant = self.sums_q.is_active();
         scratch.qbuf.clear();
         scratch.qbuf.extend(q.iter().map(|x| x.abs()));
         scratch.scores.clear();
         scratch.scores.resize(np, 0.0);
         scratch.scores2.clear();
         scratch.scores2.resize(np, 0.0);
-        linalg::matvec(&self.sums, self.d, q, &mut scratch.scores);
-        linalg::matvec(&self.diffs, self.d, &scratch.qbuf, &mut scratch.scores2);
+        if quant {
+            self.sums_q.matvec_into(q, &mut scratch.scores);
+            self.diffs_q.matvec_into(&scratch.qbuf, &mut scratch.scores2);
+        } else {
+            linalg::matvec(&self.sums, self.d, q, &mut scratch.scores);
+            linalg::matvec(&self.diffs, self.d, &scratch.qbuf, &mut scratch.scores2);
+        }
         for (s, s2) in scratch.scores.iter_mut().zip(&scratch.scores2) {
             *s = 0.5 * (*s + s2);
         }
         // rank pages, take whole pages until the budget fills
         linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+        if quant {
+            // f32 re-rank of the window the budget fill can consume
+            let min_len = self.lens.iter().copied().min().unwrap_or(1);
+            let SelectScratch { scores, order, qbuf, .. } = &mut *scratch;
+            rerank_top_f32(remaining, min_len, scores, order, |pi| {
+                let row = pi * self.d..(pi + 1) * self.d;
+                let s = linalg::dot(&self.sums[row.clone()], q);
+                let d2 = linalg::dot(&self.diffs[row], qbuf);
+                0.5 * (s + d2)
+            });
+        }
         let SelectScratch { out, order, tokens, .. } = scratch;
         let mut left = remaining;
         for &pi in order.iter() {
@@ -224,7 +263,10 @@ impl Policy for Quest {
     }
 
     fn index_bytes(&self) -> usize {
-        (self.sums.len() + self.diffs.len()) * 4 + self.num_pages() * 16
+        (self.sums.len() + self.diffs.len()) * 4
+            + self.num_pages() * 16
+            + self.sums_q.bytes()
+            + self.diffs_q.bytes()
     }
 }
 

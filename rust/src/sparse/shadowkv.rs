@@ -10,10 +10,11 @@
 //! parallel deviation/start/len arrays — so a query scores all pages
 //! with a single blocked GEMV.
 
-use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
+use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
+use crate::quant::QuantMat;
 
 const PAGE: usize = 32; // 8 BPE tokens ~= 32 bytes
 /// Fraction of pages kept resident as outliers.
@@ -28,6 +29,8 @@ pub struct ShadowKv {
     lens: Vec<usize>,
     /// Landmark (mean-key) rows, row-major `[P, d]`.
     means: Vec<f32>,
+    /// Quantized landmark mirror (`index.rep_precision`; inert at f32).
+    means_q: QuantMat,
     /// Max deviation of a member key from the landmark, per page.
     deviations: Vec<f32>,
     outliers: Vec<usize>, // page indices always active
@@ -37,12 +40,14 @@ pub struct ShadowKv {
 
 impl ShadowKv {
     pub fn new(cfg: LycheeConfig) -> ShadowKv {
+        let prec = cfg.rep_precision;
         ShadowKv {
             cfg,
             d: 0,
             starts: Vec::new(),
             lens: Vec::new(),
             means: Vec::new(),
+            means_q: QuantMat::new(prec),
             deviations: Vec::new(),
             outliers: Vec::new(),
             open_start: None,
@@ -58,17 +63,23 @@ impl ShadowKv {
     fn push_page(&mut self, keys: &dyn KeySource, start: usize, len: usize) {
         let d = self.d;
         let mut mean = vec![0.0f32; d];
-        for t in start..start + len {
-            linalg::add_assign(&mut mean, keys.key(t));
-        }
+        crate::index::reps::for_each_key(keys, start, len, |_, k| {
+            linalg::add_assign(&mut mean, k)
+        });
         linalg::scale(&mut mean, 1.0 / len as f32);
         let mut dev = 0.0f32;
-        for t in start..start + len {
-            dev = dev.max(linalg::dist(keys.key(t), &mean));
-        }
+        crate::index::reps::for_each_key(keys, start, len, |_, k| {
+            dev = dev.max(linalg::dist(k, &mean))
+        });
         self.starts.push(start);
         self.lens.push(len);
         self.means.extend_from_slice(&mean);
+        if self.means_q.is_active() {
+            if self.means_q.dim() != d {
+                self.means_q.reset(d);
+            }
+            self.means_q.push_row(&mean);
+        }
         self.deviations.push(dev);
     }
 
@@ -88,6 +99,7 @@ impl Policy for ShadowKv {
         self.starts.clear();
         self.lens.clear();
         self.means.clear();
+        self.means_q.reset(self.d);
         self.deviations.clear();
         let mut s = 0;
         while s < ctx.n {
@@ -110,6 +122,7 @@ impl Policy for ShadowKv {
             self.starts.clear();
             self.lens.clear();
             self.means.clear();
+            self.means_q.reset(self.d);
             self.deviations.clear();
             self.outliers.clear();
             self.open_start = None;
@@ -155,11 +168,24 @@ impl Policy for ShadowKv {
             // landmark scoring: plain mean-key dot as one GEMV (no radius
             // slack — this is ShadowKV's approximation; its recall deficit
             // vs ball/UB methods on scattered topics is visible in Table
-            // 1's reproduction)
+            // 1's reproduction) — over the quantized mirror when narrow
+            let quant = self.means_q.is_active();
             scratch.scores.clear();
             scratch.scores.resize(np, 0.0);
-            linalg::matvec(&self.means, self.d, q, &mut scratch.scores);
+            if quant {
+                self.means_q.matvec_into(q, &mut scratch.scores);
+            } else {
+                linalg::matvec(&self.means, self.d, q, &mut scratch.scores);
+            }
             linalg::top_k_partial(&scratch.scores, np, &mut scratch.order);
+            if quant {
+                // f32 re-rank of the window the budget fill can consume
+                let min_len = self.lens.iter().copied().min().unwrap_or(1);
+                let SelectScratch { scores, order, .. } = &mut *scratch;
+                rerank_top_f32(remaining, min_len, scores, order, |pi| {
+                    linalg::dot(&self.means[pi * self.d..(pi + 1) * self.d], q)
+                });
+            }
             let mut left = remaining;
             let SelectScratch { order, tokens, .. } = &mut *scratch;
             for &pi in order.iter() {
@@ -198,7 +224,10 @@ impl Policy for ShadowKv {
     }
 
     fn index_bytes(&self) -> usize {
-        self.means.len() * 4 + self.num_pages() * 20 + self.outliers.len() * 8
+        self.means.len() * 4
+            + self.num_pages() * 20
+            + self.outliers.len() * 8
+            + self.means_q.bytes()
     }
 }
 
