@@ -22,7 +22,11 @@
 //!                          long+short load through the real coordinator
 //!                          (sim engine), chunked vs monolithic prefill —
 //!                          TTFT/TPOT p50+p99 per class and the worst
-//!                          decode stall the short sequences observed
+//!                          decode stall the short sequences observed —
+//!                          plus the prefix_reuse section (multiturn
+//!                          workload, radix-on vs radix-off at 8/32/128
+//!                          sessions: later-turn TTFT, prefill chunks,
+//!                          hit-rate, shared-bytes dedup ratio)
 //!   fig4_tpot            — end-to-end decode TPOT (engine + PJRT)
 //!   serving_throughput   — batched coordinator throughput
 //!
@@ -525,12 +529,148 @@ fn serving_json_section() -> String {
             long_stats.tpot_ms,
         ));
     }
+    let prefix_fragment = prefix_reuse_fragment();
     format!(
-        "{{\n  \"schema\": \"lychee-bench-serving-v1\",\n  \"smoke\": {},\n  \
-         \"engine\": \"sim\",\n  \"prefill_us_per_token\": {},\n  \"modes\": [\n    {}\n  ]\n}}\n",
+        "{{\n  \"schema\": \"lychee-bench-serving-v2\",\n  \"smoke\": {},\n  \
+         \"engine\": \"sim\",\n  \"prefill_us_per_token\": {},\n  \"modes\": [\n    {}\n  ],\n  \
+         \"prefix_reuse\": {}\n}}\n",
         smoke,
         prefill_us_per_token,
-        mode_rows.join(",\n    ")
+        mode_rows.join(",\n    "),
+        prefix_fragment
+    )
+}
+
+/// The shared-prefix radix trajectory: the multiturn workload (shared
+/// system prompt + session-chained turns) through the real coordinator
+/// over SimEngine, radix-on vs radix-off, at several session counts.
+/// Reports first-turn and later-turn ("short-turn") TTFT, prefill chunks
+/// executed, radix hit-rate, and the shared-bytes dedup ratio.
+fn prefix_reuse_fragment() -> String {
+    use lychee::coordinator::{spawn_with, Request};
+    use lychee::engine::sim::{SimConfig, SimEngine};
+    use lychee::util::stats::percentile;
+    use lychee::workloads::multiturn::{generate, MultiTurnParams};
+    use std::collections::HashMap;
+
+    let smoke = smoke();
+    let session_counts: &[usize] = if smoke { &[8, 32] } else { &[8, 32, 128] };
+    let turns = if smoke { 2 } else { 3 };
+    let system_prompt_len = if smoke { 512 } else { 1024 };
+    let prefill_us_per_token: u64 = if smoke { 5 } else { 20 };
+
+    let mut rows = Vec::new();
+    for &sessions in session_counts {
+        for radix_on in [true, false] {
+            let mut cfg = Config::new();
+            cfg.kv.prefix_cache_mb = if radix_on { 256 } else { 0 };
+            cfg.serving.prefill_chunk_tokens = 256;
+            cfg.serving.max_batch = 16;
+            cfg.serving.max_new_tokens = 64;
+            cfg.serving.queue_cap = 4096;
+            let sim = SimConfig { prefill_us_per_token, ..SimConfig::default() };
+            let engine_cfg = cfg.clone();
+            let (handle, metrics, join) =
+                spawn_with(cfg, move || Ok(SimEngine::new(engine_cfg, sim))).unwrap();
+
+            let p = MultiTurnParams {
+                sessions,
+                turns,
+                branch: 1,
+                system_prompt_len,
+                turn_len_min: 96,
+                turn_len_max: 160,
+                reply_tokens: 8,
+            };
+            let plan = generate(&p, 7);
+            // drive round-by-round: all paths' turn t in parallel, then
+            // chain each path's accumulated text (prompt + real reply)
+            let mut acc: HashMap<String, Vec<u8>> = HashMap::new();
+            let mut first_ttft = Vec::new();
+            let mut later_ttft = Vec::new();
+            let mut total_bytes_touched = 0usize;
+            for round in 0..turns {
+                let round_turns: Vec<_> =
+                    plan.iter().filter(|t| t.turn == round).cloned().collect();
+                let mut workers = Vec::new();
+                for t in round_turns {
+                    let base = match &t.fork_of {
+                        Some(trunk) => acc.get(trunk).cloned().unwrap_or_default(),
+                        None => acc.get(&t.session).cloned().unwrap_or_default(),
+                    };
+                    let mut prompt = base;
+                    prompt.extend_from_slice(&t.text);
+                    let h = handle.clone();
+                    workers.push(std::thread::spawn(move || {
+                        let (out, stats) = h
+                            .generate(Request {
+                                id: 0,
+                                prompt: prompt.clone(),
+                                max_new_tokens: t.max_new_tokens,
+                                policy: "lychee".into(),
+                            })
+                            .expect("multiturn request failed");
+                        let mut next = prompt;
+                        next.extend_from_slice(&out);
+                        (t.session, t.turn, stats.ttft_ms, next)
+                    }));
+                }
+                for w in workers {
+                    let (session, turn, ttft, next) = w.join().unwrap();
+                    total_bytes_touched += lychee::kvcache::KvCache::estimate_bytes(
+                        2,
+                        2,
+                        8,
+                        next.len(),
+                    );
+                    if turn == 0 {
+                        first_ttft.push(ttft);
+                    } else {
+                        later_ttft.push(ttft);
+                    }
+                    acc.insert(session, next);
+                }
+            }
+            let (chunks, hits, reqs, shared, evictions) = {
+                let m = metrics.lock().unwrap();
+                (
+                    m.prefill_chunks_executed,
+                    m.prefix_hits,
+                    m.completed.max(1),
+                    m.kv_bytes_shared,
+                    m.prefix_evictions,
+                )
+            };
+            handle.shutdown();
+            let _ = join.join();
+            let hit_rate = hits as f64 / reqs as f64;
+            let shared_ratio = shared as f64 / (total_bytes_touched.max(1) as f64);
+            println!(
+                "prefix_reuse[{:>3} sessions, radix {:>3}] later-turn TTFT p50 {:>7.1} ms \
+                 p99 {:>7.1} ms | chunks {chunks:>5} | hit-rate {hit_rate:.2} | shared-ratio {shared_ratio:.3}",
+                sessions,
+                if radix_on { "on" } else { "off" },
+                percentile(&later_ttft, 0.50),
+                percentile(&later_ttft, 0.99),
+            );
+            rows.push(format!(
+                "{{\"sessions\": {sessions}, \"radix\": {radix_on}, \"turns\": {turns}, \
+                 \"system_prompt_len\": {system_prompt_len}, \
+                 \"first_turn_ttft_ms\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+                 \"later_turn_ttft_ms\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+                 \"prefill_chunks_executed\": {chunks}, \"prefix_hit_rate\": {hit_rate:.4}, \
+                 \"kv_bytes_shared\": {shared}, \"shared_bytes_ratio\": {shared_ratio:.4}, \
+                 \"prefix_evictions\": {evictions}}}",
+                percentile(&first_ttft, 0.50),
+                percentile(&first_ttft, 0.99),
+                percentile(&later_ttft, 0.50),
+                percentile(&later_ttft, 0.99),
+            ));
+        }
+    }
+    format!(
+        "{{\n    \"prefill_us_per_token\": {prefill_us_per_token},\n    \"runs\": [\n      {}\n    ]\n  }}",
+        rows.join(",\n      ")
     )
 }
 

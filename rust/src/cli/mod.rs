@@ -220,7 +220,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let m = metrics.lock().unwrap();
         println!(
             "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} \
-             kv[{}]={:.1}MiB free={:.1}MiB recycled={} reps[{}] p50_tpot={:.1}ms",
+             kv[{}]={:.1}MiB shared={:.1}MiB free={:.1}MiB recycled={} \
+             prefix={}hit/{}tok evict={} reps[{}] p50_tpot={:.1}ms",
             m.requests,
             m.completed,
             m.rejected,
@@ -230,8 +231,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.queue_depth,
             m.kv_precision,
             m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
+            m.kv_bytes_shared as f64 / (1024.0 * 1024.0),
             m.kv_bytes_free as f64 / (1024.0 * 1024.0),
             m.kv_pages_recycled_total,
+            m.prefix_hits,
+            m.prefix_tokens_reused,
+            m.prefix_evictions,
             m.rep_precision,
             m.tpot_us.quantile(0.5) / 1e3
         );

@@ -203,8 +203,9 @@ impl ServingConfig {
     }
 }
 
-/// KV arena storage parameters (the mixed-precision memory plane).
-#[derive(Clone, Debug, Default, PartialEq)]
+/// KV arena storage parameters (the mixed-precision memory plane and
+/// the shared-prefix radix cache).
+#[derive(Clone, Debug, PartialEq)]
 pub struct KvConfig {
     /// Element type of the shared page arena (`kv.precision`): `f32`
     /// (bit-exact default) | `f16` | `i8`. Narrow pages roughly double /
@@ -212,12 +213,30 @@ pub struct KvConfig {
     /// halve / quarter the bytes every decode-step gather streams;
     /// gathers widen back to f32 on the fly (fused dequant-gather).
     pub precision: Precision,
+    /// Capacity of the shared-prefix radix cache in MiB
+    /// (`kv.prefix_cache_mb`): sealed prompt-prefix KV pages + frozen
+    /// index segments kept for cross-request reuse (longest-prefix match
+    /// skips their prefill entirely). Counted against the same arena as
+    /// `serving.kv_pool_mb` (shared bytes appear once in the pool's
+    /// `bytes_shared` gauge), LRU-evicted at refcount 0, and shed
+    /// automatically under admission pressure. 0 disables the cache
+    /// (radix-off).
+    pub prefix_cache_mb: usize,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig { precision: Precision::default(), prefix_cache_mb: 128 }
+    }
 }
 
 impl KvConfig {
     fn apply(&mut self, key: &str, v: &Json) -> Result<()> {
         match key {
             "precision" => self.precision = parse_precision(v)?,
+            "prefix_cache_mb" => {
+                self.prefix_cache_mb = v.as_usize().context("expected number")?
+            }
             _ => bail!("unknown kv config key '{key}'"),
         }
         Ok(())
@@ -428,6 +447,19 @@ mod tests {
         assert!(cfg.apply_override("kv.nope=1").is_err());
         let bad = Json::parse(r#"{"index": {"nope": "f16"}}"#).unwrap();
         assert!(Config::new().apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn prefix_cache_knob() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.kv.prefix_cache_mb, 128, "radix cache on by default");
+        cfg.apply_override("kv.prefix_cache_mb=0").unwrap(); // radix-off
+        assert_eq!(cfg.kv.prefix_cache_mb, 0);
+        cfg.validate().unwrap();
+        let j = Json::parse(r#"{"kv": {"prefix_cache_mb": 512}}"#).unwrap();
+        cfg.apply_json(&j).unwrap();
+        assert_eq!(cfg.kv.prefix_cache_mb, 512);
+        assert!(cfg.apply_override("kv.prefix_cache_mb=lots").is_err());
     }
 
     #[test]

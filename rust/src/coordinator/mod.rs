@@ -75,8 +75,22 @@ pub struct Metrics {
     pub ttft_us: LogHistogram,
     pub tpot_us: LogHistogram,
     /// Gauge: KV arena bytes leased by live sequences (refreshed on
-    /// admission and retirement).
+    /// admission and retirement; excludes shared prefix pages).
     pub kv_bytes_in_use: u64,
+    /// Gauge: bytes held by sealed shared prefix pages, counted once no
+    /// matter how many sequences borrow them.
+    pub kv_bytes_shared: u64,
+    /// Requests whose prefill adopted a radix-cache prefix.
+    pub prefix_hits: u64,
+    /// Total prompt tokens adopted from the radix cache (their prefill
+    /// chunks were skipped entirely).
+    pub prefix_tokens_reused: u64,
+    /// Radix-cache entries evicted (LRU at refcount 0, or shed under
+    /// arena pressure).
+    pub prefix_evictions: u64,
+    /// Times a policy's select ran before its first build (degraded to
+    /// the always-active fallback instead of panicking a worker).
+    pub selects_before_build: u64,
     /// Gauge: arena bytes parked on the free-list (recyclable).
     pub kv_bytes_free: u64,
     /// High-water mark of the free-list over the pool's lifetime.
@@ -138,9 +152,14 @@ struct PrefillJob {
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
     /// Arena bytes reserved at admission (estimate over prompt + the
-    /// remaining output budget); released from the reservation total on
-    /// retire / preempt / error.
+    /// remaining output budget, net of borrowed shared prefix bytes —
+    /// those are accounted once globally in the pool's shared gauge);
+    /// released from the reservation total on retire / preempt / error.
     reserved_bytes: usize,
+    /// Shared prefix bytes this sequence borrows (adopted at admission,
+    /// grown by the seal-back at prefill finish). Tracked so reservation
+    /// updates stay incremental and exact.
+    shared_bytes: usize,
 }
 
 /// A decoding sequence.
@@ -267,11 +286,16 @@ where
 enum Admission {
     /// Nothing queued, or the active set is full.
     Idle,
-    /// The request fits the KV arena — start prefilling it (footprint
-    /// attached).
+    /// The request fits the KV arena — start prefilling it (gross
+    /// footprint attached; the reservation is trimmed by the actually
+    /// adopted shared bytes right after `begin_prefill`).
     Admit(usize),
     /// The arena is near capacity — leave it queued until pages recycle
-    /// (or preemption frees them). Footprint attached.
+    /// (or preemption frees them). The attached footprint is **net of
+    /// the radix prefix the request would adopt** (those bytes already
+    /// sit in the pool's shared gauge — counting them again would both
+    /// double-count and tempt the pressure path into evicting the very
+    /// prefix the request is about to reuse).
     Wait(usize),
     /// The request can never fit the arena (footprint in bytes attached).
     Reject(usize),
@@ -328,11 +352,14 @@ impl<E: EngineCore> Coordinator<E> {
     /// KV-arena admission control for the head-of-queue request.
     ///
     /// Checks against `reserved_total` — the sum of *estimated final*
-    /// footprints of active (prefilling + running) sequences — not
-    /// current leased bytes: a just-admitted sequence has leased only
-    /// its prefilled pages so far and grows during decode (acquire never
+    /// footprints of active (prefilling + running) sequences, net of
+    /// the shared prefix bytes they borrow — plus the arena's shared
+    /// bytes (sealed prefix pages are real arena residents, counted
+    /// exactly once here): a just-admitted sequence has leased only its
+    /// prefilled pages so far and grows during decode (acquire never
     /// refuses mid-step), so admitting on live usage would overcommit a
-    /// bounded pool.
+    /// bounded pool. When shared pages are what blocks admission, the
+    /// Wait path first sheds cold (refcount-0) radix entries.
     fn admission(
         &self,
         pending: &VecDeque<QueuedReq>,
@@ -348,9 +375,25 @@ impl<E: EngineCore> Coordinator<E> {
                 let need = self.footprint(q);
                 let cap = self.engine.pool().capacity_bytes();
                 if need > cap {
-                    Admission::Reject(need)
-                } else if reserved_total.saturating_add(need) > cap {
-                    Admission::Wait(need)
+                    return Admission::Reject(need);
+                }
+                if cap == usize::MAX {
+                    return Admission::Admit(need);
+                }
+                let shared = self.engine.pool().bytes_shared();
+                // Net out the radix prefix this request would adopt: its
+                // bytes are already resident in `shared`, and the probe
+                // warms the prefix's LRU slot so pressure eviction sheds
+                // colder entries first.
+                let adoptable = self.engine.prefix_cache().map_or(0, |pc| {
+                    let max_pages =
+                        q.req.prompt.len().saturating_sub(1) / crate::kvcache::PAGE_SIZE;
+                    let tokens = pc.probe_tokens(&q.req.prompt, max_pages);
+                    self.engine.estimate_seq_bytes(tokens)
+                });
+                let need_net = need.saturating_sub(adoptable);
+                if reserved_total.saturating_add(shared).saturating_add(need_net) > cap {
+                    Admission::Wait(need_net)
                 } else {
                     Admission::Admit(need)
                 }
@@ -359,10 +402,16 @@ impl<E: EngineCore> Coordinator<E> {
     }
 
     /// Preempt the lowest-priority (latest-submitted) running sequence
-    /// whose release lets the head-of-queue request fit: its pages go
-    /// back to the arena immediately and its prompt + generated text is
-    /// re-queued for recompute (vLLM-style recompute preemption; the
-    /// victim re-enters FCFS at the back of the queue). A sequence is
+    /// whose release of *reserved private* bytes lets the head-of-queue
+    /// request fit: its pages go back to the arena immediately and its
+    /// prompt + generated text is re-queued for recompute (vLLM-style
+    /// recompute preemption; the victim re-enters FCFS at the back of
+    /// the queue). The fit check deliberately ignores `bytes_shared`:
+    /// shared prefix pages pinned by running borrowers become evictable
+    /// as those borrowers are preempted, and the Wait path sheds
+    /// refcount-0 entries *before* each preemption attempt — so when
+    /// shared bytes are what blocks the head, the preempt → unpin →
+    /// evict cycle converges instead of waiting forever. A sequence is
     /// victimized at most once in its lifetime — resumed sequences are
     /// exempt — so preemptions are bounded by the request count and two
     /// requests contending for the same arena space cannot livelock by
@@ -430,11 +479,15 @@ impl<E: EngineCore> Coordinator<E> {
 
     fn refresh_pool_gauge(&self) {
         let st = self.engine.pool().stats();
+        let prefix_evictions = self.engine.prefix_cache().map_or(0, |c| c.stats().evictions);
         let mut m = self.metrics.lock().unwrap();
         m.kv_bytes_in_use = st.bytes_in_use as u64;
+        m.kv_bytes_shared = st.bytes_shared as u64;
         m.kv_bytes_free = st.bytes_free as u64;
         m.kv_bytes_free_peak = st.bytes_free_peak as u64;
         m.kv_pages_recycled_total = st.pages_recycled_total;
+        m.prefix_evictions = prefix_evictions;
+        m.selects_before_build = crate::sparse::selects_before_build();
     }
 
     /// Scheduler loop: admit, advance one prefill chunk, decode, stream,
@@ -466,6 +519,25 @@ impl<E: EngineCore> Coordinator<E> {
             match self.admission(&pending, active, reserved_total) {
                 Admission::Idle => wait_ticks = 0,
                 Admission::Wait(need) => {
+                    // Shared prefix pages occupy the same arena: before
+                    // counting a wait tick, shed cold (refcount-0) radix
+                    // entries to cover the shortfall — adopted prefixes
+                    // are never touched. If anything was freed, retry
+                    // admission on the next tick instead of waiting.
+                    let cap = self.engine.pool().capacity_bytes();
+                    let shared = self.engine.pool().bytes_shared();
+                    let over = reserved_total
+                        .saturating_add(shared)
+                        .saturating_add(need)
+                        .saturating_sub(cap);
+                    if over > 0 {
+                        if let Some(pc) = self.engine.prefix_cache() {
+                            if pc.evict_bytes(over) > 0 {
+                                self.refresh_pool_gauge();
+                                continue;
+                            }
+                        }
+                    }
                     self.metrics.lock().unwrap().admission_waits += 1;
                     wait_ticks += 1;
                     let threshold = self.cfg.serving.preempt_after_waits;
@@ -493,7 +565,19 @@ impl<E: EngineCore> Coordinator<E> {
                     match self.engine.begin_prefill(next_seq_id, &q.req.prompt, &q.req.policy) {
                         Ok(st) => {
                             next_seq_id += 1;
-                            reserved_total += need;
+                            // a radix hit borrowed shared pages: those
+                            // bytes are accounted once globally (the
+                            // pool's shared gauge), so this sequence's
+                            // reservation covers only its private share
+                            let adopted = st.kv.shared_bytes();
+                            let reused = st.prefix_tokens_reused();
+                            if reused > 0 {
+                                let mut m = self.metrics.lock().unwrap();
+                                m.prefix_hits += 1;
+                                m.prefix_tokens_reused += reused as u64;
+                            }
+                            let reserved = need.saturating_sub(adopted);
+                            reserved_total += reserved;
                             prefilling.push_back(PrefillJob {
                                 st,
                                 tx: q.tx,
@@ -504,7 +588,8 @@ impl<E: EngineCore> Coordinator<E> {
                                 submitted: q.submitted,
                                 first_token: q.first_token,
                                 decode_started: q.decode_started,
-                                reserved_bytes: need,
+                                reserved_bytes: reserved,
+                                shared_bytes: adopted,
                             });
                         }
                         Err(e) => {
@@ -529,6 +614,15 @@ impl<E: EngineCore> Coordinator<E> {
                             let job = prefilling.pop_front().unwrap();
                             match self.engine.finish_prefill(job.st) {
                                 Ok(seq) => {
+                                    // seal-back moved the prompt's full
+                                    // pages to the shared gauge: shrink
+                                    // this sequence's reservation by the
+                                    // newly shared bytes (counted once
+                                    // globally now, not per sequence)
+                                    let sealed_extra =
+                                        seq.kv.shared_bytes().saturating_sub(job.shared_bytes);
+                                    let release = sealed_extra.min(job.reserved_bytes);
+                                    reserved_total = reserved_total.saturating_sub(release);
                                     running.push(Running {
                                         seq,
                                         tx: job.tx,
@@ -539,7 +633,7 @@ impl<E: EngineCore> Coordinator<E> {
                                         submitted: job.submitted,
                                         first_token: job.first_token,
                                         decode_started: job.decode_started,
-                                        reserved_bytes: job.reserved_bytes,
+                                        reserved_bytes: job.reserved_bytes - release,
                                     });
                                 }
                                 Err(e) => {
@@ -1008,6 +1102,44 @@ mod tests {
             m.prefill_chunks_executed >= 64,
             "expected >= 64 chunks for 32k @512, got {}",
             m.prefill_chunks_executed
+        );
+        drop(m);
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
+    /// Session churn over the radix cache: requests sharing a prompt
+    /// prefix must register radix hits, and after everything retires the
+    /// arena accounting must be exact — zero private bytes, shared bytes
+    /// bounded by the prefix-cache capacity, no leak.
+    #[test]
+    fn radix_session_churn_keeps_accounting_exact() {
+        let mut cfg = Config::new();
+        cfg.serving.prefill_chunk_tokens = 128;
+        cfg.serving.kv_pool_mb = 4;
+        cfg.kv.prefix_cache_mb = 1;
+        let (handle, metrics, join) = spawn_sim(cfg, SimConfig::default());
+        let shared_prefix = crate::workloads::trace::prompt_text(300, 77);
+        for i in 0..10u64 {
+            let mut prompt = shared_prefix.clone();
+            prompt.extend(crate::workloads::trace::prompt_text(100, 1000 + i));
+            let (out, _) = handle
+                .generate(Request { id: i, prompt, max_new_tokens: 3, policy: "lychee".into() })
+                .unwrap();
+            assert_eq!(out.len(), 3);
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.completed, 10);
+        // every request after the first matches the shared 300-token
+        // prefix's sealed pages (4 full pages = 256 tokens)
+        assert!(m.prefix_hits >= 9, "hits {}", m.prefix_hits);
+        assert!(m.prefix_tokens_reused >= 9 * 256, "reused {}", m.prefix_tokens_reused);
+        assert_eq!(m.kv_bytes_in_use, 0, "private bytes leaked after churn");
+        assert!(
+            m.kv_bytes_shared <= 1024 * 1024,
+            "shared bytes {} exceed the prefix-cache capacity",
+            m.kv_bytes_shared
         );
         drop(m);
         handle.shutdown();

@@ -23,7 +23,7 @@ pub mod sim;
 
 use crate::config::Config;
 use crate::index::reps::KeySource;
-use crate::kvcache::{KvCache, PagePool};
+use crate::kvcache::{KvCache, PagePool, PrefixCache, PAGE_SIZE};
 use crate::model::{Manifest, Weights};
 use crate::runtime::{lit_f32, lit_i32, to_f32_vec, Runtime};
 use crate::sparse::{make_policy, Ctx, Policy, SelectScratch};
@@ -89,6 +89,12 @@ pub struct Sequence {
     /// policies — steady-state decode allocates nothing on the select
     /// path (buffers keep their high-water capacity across tokens).
     pub scratch: SelectScratch,
+    /// Sim-engine cache of the rolling content hash over `text` (a pure
+    /// function of the text; `None` until the first sim decode step).
+    /// Keeps the content-seeded synthetic K/V O(1) per generated token
+    /// instead of rescanning the whole history. Unused by the PJRT
+    /// engine.
+    pub(crate) content_seed: Option<u64>,
     rng: Rng,
 }
 
@@ -135,10 +141,16 @@ impl Sequence {
 pub struct PrefillState {
     pub(crate) id: u64,
     pub(crate) prompt: Vec<u8>,
+    /// Retrieval policy name this request runs (keys the radix cache's
+    /// frozen index segments).
+    pub(crate) policy: String,
     pub(crate) kv: KvCache,
     pub(crate) policies: Vec<Box<dyn Policy>>,
     /// Tokens prefilled + indexed so far (== next chunk's start).
     pub(crate) done: usize,
+    /// Tokens adopted from the shared-prefix radix cache (their prefill
+    /// chunks were skipped entirely).
+    pub(crate) prefix_reused: usize,
     /// Logits at the last prompt position (set by the final chunk).
     pub(crate) last_logits: Option<Vec<f32>>,
     pub(crate) chunks_executed: usize,
@@ -156,6 +168,12 @@ impl PrefillState {
     /// Tokens prefilled so far.
     pub fn done(&self) -> usize {
         self.done
+    }
+
+    /// Tokens adopted from the shared-prefix radix cache at
+    /// `begin_prefill` (0 on a cold start / radix-off).
+    pub fn prefix_tokens_reused(&self) -> usize {
+        self.prefix_reused
     }
 
     pub fn total(&self) -> usize {
@@ -186,6 +204,7 @@ impl PrefillState {
             generated: Vec::new(),
             timer: PhaseTimer::new(),
             scratch: SelectScratch::new(),
+            content_seed: None,
             rng: Rng::new(id ^ 0x5EED),
         })
     }
@@ -231,8 +250,73 @@ pub trait EngineCore {
     /// The shared KV page arena.
     fn pool(&self) -> &Arc<PagePool>;
 
+    /// The shared-prefix radix cache, when this engine maintains one
+    /// (`kv.prefix_cache_mb > 0`). The coordinator reads its stats for
+    /// the metrics scrape and sheds cold entries under arena pressure.
+    fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        None
+    }
+
     /// Longest admissible prompt in tokens.
     fn max_prompt(&self) -> usize;
+}
+
+/// Radix-match `st.prompt` against the shared-prefix cache and adopt the
+/// hit into the freshly begun prefill state: borrow the sealed K/V pages
+/// into the page table, seed each layer policy with its frozen segment
+/// (or backfill its index through the normal `extend` path over the
+/// adopted keys), and advance the chunked-prefill frontier past the
+/// matched tokens — those chunks are skipped entirely. The match is
+/// capped one token short of the prompt so the final chunk (which
+/// produces the last-position logits) always runs. Shared helper of the
+/// PJRT and sim engines' `begin_prefill`.
+pub(crate) fn adopt_prefix_into(cache: &PrefixCache, st: &mut PrefillState) -> usize {
+    if !cache.enabled() {
+        return 0;
+    }
+    let max_pages = st.prompt.len().saturating_sub(1) / PAGE_SIZE;
+    let Some(m) = cache.lookup(&st.prompt, max_pages, &st.policy) else { return 0 };
+    let PrefillState { kv, policies, prompt, .. } = &mut *st;
+    let Ok(tokens) = kv.adopt_prefix(&m.pages) else { return 0 };
+    for (l, policy) in policies.iter_mut().enumerate() {
+        let adopted = m
+            .segments
+            .as_ref()
+            .and_then(|v| v.get(l))
+            .and_then(|o| o.as_ref())
+            .map_or(false, |seg| policy.adopt_segment(seg));
+        if !adopted {
+            // No frozen segment for this layer/policy: absorb the
+            // adopted tokens through the normal incremental-build path
+            // (key rows read straight from the adopted shared pages),
+            // which the chunked-extend property pins as byte-exact.
+            let keys = LayerKeys { cache: kv, layer: l, n: tokens };
+            let ctx = Ctx { keys: &keys, text: prompt, n: tokens };
+            policy.extend(&ctx, 0..tokens);
+        }
+    }
+    st.done = tokens;
+    st.prefix_reused = tokens;
+    tokens
+}
+
+/// Seal-back half of the radix lifecycle, shared by both engines'
+/// `finish_prefill`: seal the prompt's full pages into shared pages,
+/// export each layer policy's frozen segment, and insert the prefix into
+/// the radix cache (existing nodes win; LRU eviction keeps the cache
+/// within `kv.prefix_cache_mb`).
+pub(crate) fn seal_prefix_back(cache: &PrefixCache, st: &mut PrefillState) {
+    if !cache.enabled() {
+        return;
+    }
+    let sealable = (st.prompt.len() / PAGE_SIZE) * PAGE_SIZE;
+    if sealable == 0 {
+        return;
+    }
+    let pages = st.kv.seal_prefix(sealable);
+    let segments: Vec<Option<crate::sparse::PolicySegment>> =
+        st.policies.iter().map(|p| p.export_segment(sealable)).collect();
+    cache.insert(&st.prompt[..sealable], pages, &st.policy, segments);
 }
 
 /// Run `f` once per layer policy with that layer's key view — the shared
@@ -261,6 +345,9 @@ pub struct Engine {
     wlits: Vec<Literal>,
     /// Shared KV page arena (capacity from `serving.kv_pool_mb`).
     pool: Arc<PagePool>,
+    /// Shared-prefix radix cache (capacity from `kv.prefix_cache_mb`;
+    /// disabled at 0).
+    prefix: Arc<PrefixCache>,
 }
 
 impl Engine {
@@ -273,7 +360,8 @@ impl Engine {
             wlits.push(lit_f32(data, shape)?);
         }
         let pool = PagePool::with_capacity(cfg.serving.kv_pool_mb.saturating_mul(1024 * 1024));
-        Ok(Engine { rt, weights, cfg, wlits, pool })
+        let prefix = PrefixCache::new(cfg.kv.prefix_cache_mb);
+        Ok(Engine { rt, weights, cfg, wlits, pool, prefix })
     }
 
     /// The shared KV page arena (admission control reads its accounting).
@@ -399,6 +487,7 @@ impl Engine {
             generated: Vec::new(),
             timer: PhaseTimer::new(),
             scratch: SelectScratch::new(),
+            content_seed: None,
             rng: Rng::new(seed ^ 0xABCD),
         })
     }
@@ -630,15 +719,19 @@ impl EngineCore for Engine {
             self.cfg.kv.precision,
         );
         let policies = self.make_policies(policy_name)?;
-        Ok(PrefillState {
+        let mut st = PrefillState {
             id,
             prompt: prompt.to_vec(),
+            policy: policy_name.to_string(),
             kv,
             policies,
             done: 0,
+            prefix_reused: 0,
             last_logits: None,
             chunks_executed: 0,
-        })
+        };
+        adopt_prefix_into(&self.prefix, &mut st);
+        Ok(st)
     }
 
     /// One streaming-prefill chunk. The compiled prefill programs are
@@ -691,7 +784,8 @@ impl EngineCore for Engine {
         }
     }
 
-    fn finish_prefill(&self, st: PrefillState) -> Result<Sequence> {
+    fn finish_prefill(&self, mut st: PrefillState) -> Result<Sequence> {
+        seal_prefix_back(&self.prefix, &mut st);
         st.into_sequence()
     }
 
@@ -705,6 +799,10 @@ impl EngineCore for Engine {
 
     fn pool(&self) -> &Arc<PagePool> {
         Engine::pool(self)
+    }
+
+    fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        Some(&self.prefix)
     }
 
     fn max_prompt(&self) -> usize {

@@ -14,14 +14,29 @@
 //! experiments have a realistic long pole.
 
 use super::{
-    for_each_policy_ctx, EngineCore, LayerKeys, PrefillProgress, PrefillState, Sampling, Sequence,
+    adopt_prefix_into, for_each_policy_ctx, seal_prefix_back, EngineCore, LayerKeys,
+    PrefillProgress, PrefillState, Sampling, Sequence,
 };
 use crate::config::Config;
-use crate::kvcache::{KvCache, PagePool};
+use crate::kvcache::{KvCache, PagePool, PrefixCache};
 use crate::sparse::{make_policy, Ctx, Policy};
 use crate::util::rng::Rng;
 use anyhow::{bail, Result};
 use std::sync::Arc;
+
+/// FNV-1a over a byte prefix — the *content seed* for synthetic K/V.
+fn fnv(text: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in text {
+        h = fnv_step(h, b);
+    }
+    h
+}
+
+#[inline]
+fn fnv_step(h: u64, b: u8) -> u64 {
+    (h ^ b as u64).wrapping_mul(0x0000_0100_0000_01B3)
+}
 
 /// Shape + synthetic-compute parameters of a [`SimEngine`].
 #[derive(Clone, Debug)]
@@ -61,23 +76,31 @@ pub struct SimEngine {
     cfg: Config,
     sim: SimConfig,
     pool: Arc<PagePool>,
+    prefix: Arc<PrefixCache>,
 }
 
 impl SimEngine {
     pub fn new(cfg: Config, sim: SimConfig) -> SimEngine {
         let pool = PagePool::with_capacity(cfg.serving.kv_pool_mb.saturating_mul(1024 * 1024));
-        SimEngine { cfg, sim, pool }
+        let prefix = PrefixCache::new(cfg.kv.prefix_cache_mb);
+        SimEngine { cfg, sim, pool, prefix }
     }
 
     fn row_dim(&self) -> usize {
         self.sim.heads * self.sim.head_dim
     }
 
-    /// Deterministic synthetic row for (sequence, position, layer, kind).
-    fn synth_row(&self, id: u64, pos: usize, layer: usize, kind: u64) -> Vec<f32> {
-        let seed = id
+    /// Deterministic synthetic row, seeded by the **content hash** of
+    /// the text prefix up to and including the row's token (plus layer
+    /// and K/V/query kind). Like a real model's K/V, the row is a pure
+    /// function of the prefix *content* — never of the sequence id — so
+    /// two sequences sharing a prompt prefix have byte-identical rows
+    /// for it. This is the property the shared-prefix radix cache
+    /// adopts pages under, and what makes radix-hit prefill byte-exact
+    /// vs a cold one.
+    fn synth_row(&self, content_seed: u64, layer: usize, kind: u64) -> Vec<f32> {
+        let seed = content_seed
             .wrapping_mul(0x9E37_79B9_7F4A_7C15)
-            .wrapping_add((pos as u64).wrapping_mul(0xBF58_476D_1CE4_E5B9))
             .wrapping_add((layer as u64).wrapping_mul(0x94D0_49BB_1331_11EB))
             ^ kind;
         Rng::new(seed).normal_vec(self.row_dim())
@@ -127,15 +150,19 @@ impl EngineCore for SimEngine {
             self.cfg.kv.precision,
         );
         let policies = self.make_policies(policy_name)?;
-        Ok(PrefillState {
+        let mut st = PrefillState {
             id,
             prompt: prompt.to_vec(),
+            policy: policy_name.to_string(),
             kv,
             policies,
             done: 0,
+            prefix_reused: 0,
             last_logits: None,
             chunks_executed: 0,
-        })
+        };
+        adopt_prefix_into(&self.prefix, &mut st);
+        Ok(st)
     }
 
     fn prefill_chunk(&self, st: &mut PrefillState) -> Result<PrefillProgress> {
@@ -145,11 +172,13 @@ impl EngineCore for SimEngine {
         }
         let chunk = self.cfg.serving.prefill_chunk_tokens;
         let end = if chunk == 0 { total } else { (st.done + chunk).min(total) };
+        let mut h = fnv(&st.prompt[..st.done]);
         for t in st.done..end {
+            h = fnv_step(h, st.prompt[t]);
             let k_rows: Vec<Vec<f32>> =
-                (0..self.sim.layers).map(|l| self.synth_row(st.id, t, l, 0xA0)).collect();
+                (0..self.sim.layers).map(|l| self.synth_row(h, l, 0xA0)).collect();
             let v_rows: Vec<Vec<f32>> =
-                (0..self.sim.layers).map(|l| self.synth_row(st.id, t, l, 0xB0)).collect();
+                (0..self.sim.layers).map(|l| self.synth_row(h, l, 0xB0)).collect();
             let kr: Vec<&[f32]> = k_rows.iter().map(|r| r.as_slice()).collect();
             let vr: Vec<&[f32]> = v_rows.iter().map(|r| r.as_slice()).collect();
             st.kv.append_token(&kr, &vr)?;
@@ -169,7 +198,8 @@ impl EngineCore for SimEngine {
         }
     }
 
-    fn finish_prefill(&self, st: PrefillState) -> Result<Sequence> {
+    fn finish_prefill(&self, mut st: PrefillState) -> Result<Sequence> {
+        seal_prefix_back(&self.prefix, &mut st);
         st.into_sequence()
     }
 
@@ -187,13 +217,21 @@ impl EngineCore for SimEngine {
             s.text.push(t);
             s.generated.push(t);
             toks.push(t);
+            // content seed over text[0..=pos] (the just-pushed token's
+            // prefix): rows depend only on content, never the seq id.
+            // The rolling hash is cached on the sequence — the first
+            // step pays one O(text) scan, every later step is O(1).
+            let h = match s.content_seed {
+                Some(prev) => fnv_step(prev, t),
+                None => fnv(&s.text[..s.pos + 1]),
+            };
+            s.content_seed = Some(h);
             for l in 0..layers {
-                let kr = self.synth_row(s.id, s.pos, l, 0xA0);
-                let vr = self.synth_row(s.id, s.pos, l, 0xB0);
+                let kr = self.synth_row(h, l, 0xA0);
+                let vr = self.synth_row(h, l, 0xB0);
                 s.kv.append_row(l, &kr, &vr);
             }
-            let queries: Vec<Vec<f32>> =
-                (0..layers).map(|l| self.synth_row(s.id, s.pos, l, 0xC0)).collect();
+            let queries: Vec<Vec<f32>> = (0..layers).map(|l| self.synth_row(h, l, 0xC0)).collect();
             let Sequence { kv, policies, text, pos, scratch, .. } = &mut *s;
             for (l, q) in queries.iter().enumerate() {
                 let keys = LayerKeys { cache: kv, layer: l, n: *pos + 1 };
@@ -228,6 +266,10 @@ impl EngineCore for SimEngine {
 
     fn pool(&self) -> &Arc<PagePool> {
         &self.pool
+    }
+
+    fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
+        Some(&self.prefix)
     }
 
     fn max_prompt(&self) -> usize {
@@ -298,6 +340,149 @@ mod tests {
             drop(seq);
             assert_eq!(eng.pool().bytes_in_use(), 0);
         }
+    }
+
+    /// Prefill + probe + decode one request; returns everything that
+    /// must match between radix-hit and cold runs: the tokens adopted,
+    /// the prefill chunks executed, per-layer retrieval selections for
+    /// deterministic probe queries (before and after decode), index
+    /// bytes, and the decoded tokens.
+    #[allow(clippy::type_complexity)]
+    fn run_and_probe(
+        eng: &SimEngine,
+        prompt: &[u8],
+        policy: &str,
+        id: u64,
+    ) -> (usize, usize, Vec<Vec<usize>>, usize, Vec<u8>) {
+        let mut st = eng.begin_prefill(id, prompt, policy).unwrap();
+        let reused = st.prefix_tokens_reused();
+        while eng.prefill_chunk(&mut st).unwrap() == PrefillProgress::Pending {}
+        let chunks = st.chunks_executed();
+        let mut seq = eng.finish_prefill(st).unwrap();
+        let probe = |seq: &mut Sequence| {
+            let n = seq.pos;
+            let mut out = Vec::new();
+            let Sequence { kv, policies, text, .. } = seq;
+            for pi in 0..3u64 {
+                let q = Rng::new(0x9_0B0 + pi).normal_vec(kv.row_dim());
+                for (l, p) in policies.iter_mut().enumerate() {
+                    let keys = LayerKeys { cache: kv, layer: l, n };
+                    let ctx = Ctx { keys: &keys, text, n };
+                    out.push(p.select(&ctx, &q, n));
+                }
+            }
+            out
+        };
+        let mut sels = probe(&mut seq);
+        let sampling = Sampling::default();
+        let mut decoded = Vec::new();
+        for _ in 0..3 {
+            let mut refs = [&mut seq];
+            decoded.extend(eng.decode_batch(&mut refs, &sampling).unwrap());
+        }
+        sels.extend(probe(&mut seq));
+        let bytes = seq.index_bytes();
+        (reused, chunks, sels, bytes, decoded)
+    }
+
+    /// The tentpole acceptance property: a radix-hit prefill must be
+    /// **byte-identical** to a cold one — same retrieval selections
+    /// (before and during decode), same index footprint, same decode
+    /// stream — across every registered policy, at f32 and over the
+    /// quantized-mirror legs, while actually skipping the matched
+    /// chunks.
+    #[test]
+    fn radix_hit_prefill_is_byte_identical_to_cold() {
+        let prompt = crate::workloads::trace::prompt_text(520, 11);
+        let expect_reuse = (prompt.len() - 1) / crate::kvcache::PAGE_SIZE
+            * crate::kvcache::PAGE_SIZE;
+        for prec in crate::quant::test_precisions() {
+            // full registry on the f32 leg; the quantized legs focus on
+            // the policies with real index structure (the rest share
+            // the default rebuild path already covered at f32)
+            let roster: Vec<&str> = if prec == crate::quant::Precision::F32 {
+                crate::sparse::POLICY_NAMES.to_vec()
+            } else {
+                vec!["lychee", "sentencekv", "quest", "arkvale", "shadowkv", "clusterkv"]
+            };
+            for policy in roster {
+                let mut cfg = Config::new();
+                cfg.kv.prefix_cache_mb = 64;
+                cfg.lychee.rep_precision = prec;
+                cfg.lychee.budget = 192;
+                cfg.lychee.sink = 8;
+                cfg.lychee.recent = 16;
+                cfg.serving.prefill_chunk_tokens = 96;
+                let eng = SimEngine::new(cfg.clone(), SimConfig::default());
+                let mut off_cfg = cfg.clone();
+                off_cfg.kv.prefix_cache_mb = 0;
+                let eng_off = SimEngine::new(off_cfg, SimConfig::default());
+
+                let cold = run_and_probe(&eng, &prompt, policy, 1);
+                let hit = run_and_probe(&eng, &prompt, policy, 2);
+                let reference = run_and_probe(&eng_off, &prompt, policy, 3);
+
+                assert_eq!(cold.0, 0, "{policy}@{prec:?}: first run must be cold");
+                assert_eq!(
+                    hit.0, expect_reuse,
+                    "{policy}@{prec:?}: second run must adopt the sealed prefix"
+                );
+                assert!(
+                    hit.1 < cold.1,
+                    "{policy}@{prec:?}: radix hit did not skip chunks ({} vs {})",
+                    hit.1,
+                    cold.1
+                );
+                assert_eq!(cold.2, hit.2, "{policy}@{prec:?}: selections diverged on hit");
+                assert_eq!(cold.2, reference.2, "{policy}@{prec:?}: radix-on cold != radix-off");
+                assert_eq!(cold.3, hit.3, "{policy}@{prec:?}: index bytes diverged");
+                assert_eq!(cold.4, hit.4, "{policy}@{prec:?}: decode stream diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn radix_chained_turns_reuse_grows_with_history() {
+        // multi-turn shape: each turn's prompt extends the previous
+        // turn's prompt + decoded reply; reuse should cover everything
+        // but the newest turn's tail
+        let mut cfg = Config::new();
+        cfg.kv.prefix_cache_mb = 64;
+        cfg.serving.prefill_chunk_tokens = 64;
+        let eng = SimEngine::new(cfg, SimConfig::default());
+        let sampling = Sampling::default();
+        let mut history = crate::workloads::trace::prompt_text(400, 3);
+        let mut last_reuse = 0usize;
+        for turn in 0..3 {
+            let mut st = eng.begin_prefill(10 + turn, &history, "lychee").unwrap();
+            let reused = st.prefix_tokens_reused();
+            if turn > 0 {
+                assert!(reused > last_reuse, "turn {turn}: reuse did not grow ({reused})");
+                assert_eq!(reused % crate::kvcache::PAGE_SIZE, 0, "reuse not page-aligned");
+            }
+            last_reuse = reused;
+            while eng.prefill_chunk(&mut st).unwrap() == PrefillProgress::Pending {}
+            let mut seq = eng.finish_prefill(st).unwrap();
+            for _ in 0..5 {
+                let mut refs = [&mut seq];
+                eng.decode_batch(&mut refs, &sampling).unwrap();
+            }
+            history = seq.text.clone(); // prompt + reply becomes next prefix
+            history.extend(crate::workloads::trace::prompt_text(150, 40 + turn));
+            drop(seq);
+        }
+        assert_eq!(eng.pool().bytes_in_use(), 0, "private pages leaked across turns");
+        let st = eng.prefix_cache().unwrap().stats();
+        assert!(st.hits >= 2 && st.tokens_reused_total > 0);
+        assert_eq!(eng.pool().bytes_shared(), {
+            // every shared byte is attributable to the radix cache once
+            // all sequences have dropped
+            let cache_pages_bytes: usize = st.nodes
+                * 2 // K+V
+                * 2 // layers
+                * crate::kvcache::PagePool::page_bytes(16);
+            cache_pages_bytes
+        });
     }
 
     #[test]

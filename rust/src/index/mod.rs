@@ -18,7 +18,9 @@
 pub mod hierarchy;
 pub mod kmeans;
 pub mod reps;
+pub mod segment;
 pub mod update;
 
 pub use hierarchy::{HierarchicalIndex, IndexParams};
 pub use reps::{max_pool_rep, mean_pool_rep, KeySource, Pooling};
+pub use segment::SharedSegment;

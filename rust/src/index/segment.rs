@@ -1,0 +1,113 @@
+//! Frozen shared index segments for the shared-prefix radix cache.
+//!
+//! A [`SharedSegment`] freezes the *leaf tier* of a hierarchical index —
+//! the chunk spans and their pooled representatives — for a sealed
+//! prompt prefix. This is the O(n·d) part of an index build (pooling
+//! reads every token key once); the upper tiers (seeded k-means over the
+//! M ≈ n/48 representative rows) are deliberately **not** frozen: they
+//! are a global function of all representatives, so rebuilding them per
+//! sequence over segment + overlay rows is what keeps a radix-hit build
+//! byte-identical to a cold build, and it costs O(M·d) — negligible next
+//! to the pooling and prefill compute the segment saves.
+//!
+//! Segments are cut at the chunker's stability frontier (see
+//! [`crate::chunking::Chunker::max_span`]): only spans whose boundary
+//! decision window lies entirely inside the sealed prefix are included,
+//! so the frozen spans equal the monolithic chunking of *any* text that
+//! extends the prefix — the property the byte-exactness acceptance test
+//! pins across the policy registry.
+
+use crate::chunking::Chunk;
+use crate::index::hierarchy::HierarchicalIndex;
+
+/// The frozen leaf tier of a [`HierarchicalIndex`] over a sealed prefix.
+#[derive(Clone, Debug)]
+pub struct SharedSegment {
+    pub d: usize,
+    /// Staged frontier: one past the last frozen span's end. The
+    /// adopting sequence's incremental build resumes here.
+    pub upto: usize,
+    /// Frozen chunk spans, contiguous from token 0.
+    pub spans: Vec<Chunk>,
+    /// Pooled unit-norm representatives, row-major `[spans.len(), d]`.
+    pub reps: Vec<f32>,
+}
+
+impl SharedSegment {
+    /// Approximate footprint (prefix-cache budgeting).
+    pub fn bytes(&self) -> usize {
+        self.reps.len() * 4 + self.spans.len() * 16 + 32
+    }
+
+    /// Extract the frozen leaf tier from a built index: the longest run
+    /// of chunks that is contiguous from token 0, ends at or before
+    /// `upto`, and whose spans' decision windows (`start + lookahead`)
+    /// lie inside `[0, upto)`. Returns `None` when no span qualifies.
+    pub fn from_index(
+        idx: &HierarchicalIndex,
+        upto: usize,
+        lookahead: usize,
+    ) -> Option<SharedSegment> {
+        let d = idx.d;
+        let mut spans = Vec::new();
+        let mut reps = Vec::new();
+        let mut next = 0usize;
+        for ci in 0..idx.num_chunks() {
+            let (start, end) = (idx.chunk_starts[ci], idx.chunk_end(ci));
+            if start != next || end > upto || start + lookahead > upto {
+                break;
+            }
+            spans.push(Chunk { start, len: idx.chunk_lens[ci] });
+            reps.extend_from_slice(idx.chunk_rep(ci));
+            next = end;
+        }
+        if spans.is_empty() {
+            return None;
+        }
+        Some(SharedSegment { d, upto: next, spans, reps })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::Chunker;
+    use crate::index::hierarchy::IndexParams;
+    use crate::index::reps::FlatKeys;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn from_index_respects_frontier_and_contiguity() {
+        let d = 8;
+        let n = 400;
+        let mut rng = Rng::new(3);
+        let keys = rng.normal_vec(n * d);
+        let chunker = crate::chunking::StructureAwareChunker::new(8, 24);
+        let text: Vec<u8> =
+            (0..n).map(|_| b"lorem ipsum, dolor. sit\n"[rng.range(0, 24)]).collect();
+        let spans = chunker.chunk(&text);
+        let idx =
+            HierarchicalIndex::build(&FlatKeys::new(&keys, d), &spans, IndexParams::default());
+        let lookahead = chunker.max_span();
+        let upto = 256;
+        let seg = SharedSegment::from_index(&idx, upto, lookahead).unwrap();
+        assert!(seg.upto <= upto);
+        assert_eq!(seg.reps.len(), seg.spans.len() * d);
+        // contiguous from 0, frontier rule applied span-by-span
+        let mut next = 0;
+        for s in &seg.spans {
+            assert_eq!(s.start, next);
+            assert!(s.end() <= upto);
+            assert!(s.start + lookahead <= upto, "span past the stability frontier");
+            next = s.end();
+        }
+        assert_eq!(seg.upto, next);
+        // frozen reps are byte-identical to the built index's rows
+        for (i, s) in seg.spans.iter().enumerate() {
+            assert_eq!(spans[i].start, s.start);
+            assert_eq!(&seg.reps[i * d..(i + 1) * d], idx.chunk_rep(i));
+        }
+        // a frontier before the first span's window yields nothing
+        assert!(SharedSegment::from_index(&idx, 1, lookahead).is_none());
+    }
+}

@@ -26,6 +26,10 @@
 //! globally) backs the paper's Fig. 8 comparison of KV bytes vs index
 //! bytes and the serving-side pool gauges.
 
+pub mod prefix;
+
+pub use prefix::{PrefixCache, PrefixMatch, PrefixPage, PrefixStats};
+
 use crate::quant::{self, Precision};
 use anyhow::{bail, Result};
 use std::collections::HashMap;
@@ -45,6 +49,14 @@ enum PageBuf {
     I8 { codes: Box<[i8]>, scales: Box<[f32]> },
 }
 
+impl PageBuf {
+    /// A zero-length placeholder (used when moving a buffer out of a
+    /// slot that is about to be overwritten).
+    fn empty() -> PageBuf {
+        PageBuf::F32(Vec::new().into_boxed_slice())
+    }
+}
+
 /// One page leased from the pool.
 struct Page {
     data: PageBuf,
@@ -54,11 +66,98 @@ struct Page {
     used: usize,
 }
 
+/// A sealed, immutable, reference-counted page shared across sequences
+/// (the unit the shared-prefix radix cache stores). Sealed pages are
+/// always full (`PAGE_SIZE` rows) — sealing happens at page granularity
+/// only — and are never written again; borrowing sequences read them
+/// lock-free through their page tables. The pool accounts shared pages
+/// **once** (in `bytes_shared`), no matter how many sequences borrow
+/// them; when the last reference drops (every borrower gone *and* the
+/// radix cache evicted its entry) the buffer is parked back on the
+/// pool's free-list.
+pub struct SharedPage {
+    data: PageBuf,
+    row_dim: usize,
+    precision: Precision,
+    lease: u64,
+    pool: Arc<PagePool>,
+}
+
+impl SharedPage {
+    /// Footprint of this page in bytes (real element size).
+    pub fn bytes(&self) -> usize {
+        PagePool::page_bytes_at(self.row_dim, self.precision)
+    }
+
+    pub fn lease(&self) -> u64 {
+        self.lease
+    }
+
+    /// Live reference count: the radix cache plus every borrowing
+    /// sequence (refcount 1 = cached only, eligible for LRU eviction).
+    pub fn refcount(this: &Arc<SharedPage>) -> usize {
+        Arc::strong_count(this)
+    }
+}
+
+impl Drop for SharedPage {
+    fn drop(&mut self) {
+        let data = std::mem::replace(&mut self.data, PageBuf::empty());
+        self.pool.release_shared(data, self.row_dim, self.precision);
+    }
+}
+
+/// One entry of a sequence's per-layer page table: either a privately
+/// owned (mutable) page or a borrowed sealed page. This is the
+/// copy-on-write mechanism: sealed pages are always full, so the first
+/// append past a shared page allocates a fresh private tail page — a
+/// sequence never mutates shared state.
+enum PageSlot {
+    Owned(Page),
+    Shared(Arc<SharedPage>),
+}
+
+impl PageSlot {
+    #[inline]
+    fn used(&self) -> usize {
+        match self {
+            PageSlot::Owned(p) => p.used,
+            PageSlot::Shared(_) => PAGE_SIZE,
+        }
+    }
+
+    #[inline]
+    fn lease(&self) -> u64 {
+        match self {
+            PageSlot::Owned(p) => p.lease,
+            PageSlot::Shared(s) => s.lease,
+        }
+    }
+
+    #[inline]
+    fn buf(&self) -> &PageBuf {
+        match self {
+            PageSlot::Owned(p) => &p.data,
+            PageSlot::Shared(s) => &s.data,
+        }
+    }
+
+    #[inline]
+    fn is_shared(&self) -> bool {
+        matches!(self, PageSlot::Shared(_))
+    }
+}
+
 /// Snapshot of the arena's global accounting.
 #[derive(Clone, Debug, Default)]
 pub struct PoolStats {
-    /// Bytes currently leased to live sequences.
+    /// Bytes currently leased to live sequences (private pages only).
     pub bytes_in_use: usize,
+    /// Bytes held by sealed shared pages, counted **once** regardless of
+    /// how many sequences borrow them (the radix cache + borrowers).
+    pub bytes_shared: usize,
+    /// Sealed shared pages currently alive.
+    pub pages_shared: usize,
     /// Bytes parked on the free-list, ready for reuse.
     pub bytes_free: usize,
     /// High-water mark of `bytes_free` over the pool's lifetime.
@@ -81,6 +180,8 @@ struct PoolInner {
     /// mixed use safe (buffers never change type across leases).
     free: HashMap<(usize, Precision), Vec<PageBuf>>,
     bytes_in_use: usize,
+    bytes_shared: usize,
+    pages_shared: usize,
     bytes_free: usize,
     bytes_free_peak: usize,
     pages_in_use: usize,
@@ -107,6 +208,8 @@ impl PagePool {
             inner: Mutex::new(PoolInner {
                 free: HashMap::new(),
                 bytes_in_use: 0,
+                bytes_shared: 0,
+                pages_shared: 0,
                 bytes_free: 0,
                 bytes_free_peak: 0,
                 pages_in_use: 0,
@@ -205,8 +308,17 @@ impl PagePool {
         let mut inner = self.inner.lock().unwrap();
         inner.bytes_in_use -= bytes;
         inner.pages_in_use -= 1;
+        self.park(&mut inner, page.data, row_dim, precision);
+    }
+
+    /// Park a returned buffer on the free-list, or drop it when parking
+    /// would push the arena's total footprint (leased + shared + parked)
+    /// past capacity.
+    fn park(&self, inner: &mut PoolInner, data: PageBuf, row_dim: usize, precision: Precision) {
+        let bytes = Self::page_bytes_at(row_dim, precision);
         if self.capacity_bytes != usize::MAX
-            && inner.bytes_in_use + inner.bytes_free + bytes > self.capacity_bytes
+            && inner.bytes_in_use + inner.bytes_shared + inner.bytes_free + bytes
+                > self.capacity_bytes
         {
             inner.pages_trimmed_total += 1;
             return; // dropped, not parked
@@ -215,11 +327,49 @@ impl PagePool {
         if inner.bytes_free > inner.bytes_free_peak {
             inner.bytes_free_peak = inner.bytes_free;
         }
-        inner.free.entry((row_dim, precision)).or_default().push(page.data);
+        inner.free.entry((row_dim, precision)).or_default().push(data);
+    }
+
+    /// Convert an owned full page into a sealed shared page: the bytes
+    /// move from the private gauge (`bytes_in_use`) to the shared gauge
+    /// (`bytes_shared`), where they are counted exactly once no matter
+    /// how many sequences later borrow the page.
+    fn seal_page(
+        pool: &Arc<PagePool>,
+        data: PageBuf,
+        lease: u64,
+        row_dim: usize,
+        precision: Precision,
+    ) -> Arc<SharedPage> {
+        let bytes = Self::page_bytes_at(row_dim, precision);
+        {
+            let mut inner = pool.inner.lock().unwrap();
+            inner.bytes_in_use -= bytes;
+            inner.pages_in_use -= 1;
+            inner.bytes_shared += bytes;
+            inner.pages_shared += 1;
+        }
+        Arc::new(SharedPage { data, row_dim, precision, lease, pool: Arc::clone(pool) })
+    }
+
+    /// Called by `SharedPage::drop` when the last reference to a sealed
+    /// page goes away: shared accounting shrinks and the buffer is
+    /// parked for recycling (subject to the capacity trim).
+    fn release_shared(&self, data: PageBuf, row_dim: usize, precision: Precision) {
+        let bytes = Self::page_bytes_at(row_dim, precision);
+        let mut inner = self.inner.lock().unwrap();
+        inner.bytes_shared -= bytes;
+        inner.pages_shared -= 1;
+        self.park(&mut inner, data, row_dim, precision);
     }
 
     pub fn bytes_in_use(&self) -> usize {
         self.inner.lock().unwrap().bytes_in_use
+    }
+
+    /// Bytes held by sealed shared pages (counted once).
+    pub fn bytes_shared(&self) -> usize {
+        self.inner.lock().unwrap().bytes_shared
     }
 
     /// Admission-control capacity (`usize::MAX` when unbounded).
@@ -237,13 +387,20 @@ impl PagePool {
     /// sequences keep growing after admission — the coordinator admits
     /// against its ledger of reserved estimated-final footprints instead.
     pub fn fits(&self, extra: usize) -> bool {
-        !self.is_bounded() || self.bytes_in_use().saturating_add(extra) <= self.capacity_bytes
+        if !self.is_bounded() {
+            return true;
+        }
+        let inner = self.inner.lock().unwrap();
+        inner.bytes_in_use.saturating_add(inner.bytes_shared).saturating_add(extra)
+            <= self.capacity_bytes
     }
 
     pub fn stats(&self) -> PoolStats {
         let inner = self.inner.lock().unwrap();
         PoolStats {
             bytes_in_use: inner.bytes_in_use,
+            bytes_shared: inner.bytes_shared,
+            pages_shared: inner.pages_shared,
             bytes_free: inner.bytes_free,
             bytes_free_peak: inner.bytes_free_peak,
             capacity_bytes: self.capacity_bytes,
@@ -255,11 +412,12 @@ impl PagePool {
     }
 }
 
-/// Per-layer paged storage for one of K or V (page table over leases).
+/// Per-layer paged storage for one of K or V: a copy-on-write page table
+/// over private leases and borrowed sealed pages.
 struct LayerStore {
     row_dim: usize,
     precision: Precision,
-    pages: Vec<Page>,
+    pages: Vec<PageSlot>,
 }
 
 impl LayerStore {
@@ -268,7 +426,7 @@ impl LayerStore {
     }
 
     fn len(&self) -> usize {
-        self.pages.last().map_or(0, |p| (self.pages.len() - 1) * PAGE_SIZE + p.used)
+        self.pages.last().map_or(0, |p| (self.pages.len() - 1) * PAGE_SIZE + p.used())
     }
 
     /// Append one row, quantizing on write. i8 pages keep per-page,
@@ -279,10 +437,15 @@ impl LayerStore {
     /// bounds how often growth can happen.
     fn append(&mut self, pool: &PagePool, row: &[f32]) {
         debug_assert_eq!(row.len(), self.row_dim);
-        if self.pages.last().map_or(true, |p| p.used == PAGE_SIZE) {
-            self.pages.push(pool.acquire(self.row_dim, self.precision));
+        // COW fork point: a sealed shared page is always full, so the
+        // first append past one allocates a fresh private tail page —
+        // shared state is never written.
+        if self.pages.last().map_or(true, |p| p.used() == PAGE_SIZE) {
+            self.pages.push(PageSlot::Owned(pool.acquire(self.row_dim, self.precision)));
         }
-        let page = self.pages.last_mut().unwrap();
+        let PageSlot::Owned(page) = self.pages.last_mut().unwrap() else {
+            unreachable!("append into a sealed shared page");
+        };
         let rd = self.row_dim;
         let off = page.used * rd;
         match &mut page.data {
@@ -310,8 +473,8 @@ impl LayerStore {
     fn try_row(&self, idx: usize) -> Option<&[f32]> {
         let (p, o) = (idx / PAGE_SIZE, idx % PAGE_SIZE);
         let page = &self.pages[p];
-        debug_assert!(o < page.used, "token {idx} out of range");
-        match &page.data {
+        debug_assert!(o < page.used(), "token {idx} out of range");
+        match page.buf() {
             PageBuf::F32(b) => Some(&b[o * self.row_dim..(o + 1) * self.row_dim]),
             _ => None,
         }
@@ -324,9 +487,9 @@ impl LayerStore {
     fn row_into(&self, idx: usize, out: &mut [f32]) {
         let (p, o) = (idx / PAGE_SIZE, idx % PAGE_SIZE);
         let page = &self.pages[p];
-        debug_assert!(o < page.used, "token {idx} out of range");
+        debug_assert!(o < page.used(), "token {idx} out of range");
         let span = o * self.row_dim..(o + 1) * self.row_dim;
-        match &page.data {
+        match page.buf() {
             PageBuf::F32(b) => out.copy_from_slice(&b[span]),
             PageBuf::F16(b) => crate::linalg::widen_f16(&b[span], out),
             PageBuf::I8 { codes, scales } => crate::linalg::dequant_i8(&codes[span], scales, out),
@@ -337,9 +500,50 @@ impl LayerStore {
         self.pages.len() * PagePool::page_bytes_at(self.row_dim, self.precision)
     }
 
+    /// Bytes of privately owned pages (what a teardown/preemption frees).
+    fn private_bytes(&self) -> usize {
+        let owned = self.pages.iter().filter(|p| !p.is_shared()).count();
+        owned * PagePool::page_bytes_at(self.row_dim, self.precision)
+    }
+
+    /// Adopt sealed shared pages as this (empty) store's prefix.
+    fn adopt(&mut self, pages: &[Arc<SharedPage>]) {
+        debug_assert!(self.pages.is_empty(), "adopt into a non-empty store");
+        for p in pages {
+            debug_assert_eq!(p.row_dim, self.row_dim);
+            debug_assert_eq!(p.precision, self.precision);
+            self.pages.push(PageSlot::Shared(Arc::clone(p)));
+        }
+    }
+
+    /// Seal the first `n_pages` (all full) into shared pages, replacing
+    /// the owned slots with borrowed references; returns one `Arc` per
+    /// sealed page (already-shared slots are cloned, not re-sealed).
+    fn seal_full_pages(&mut self, pool: &Arc<PagePool>, n_pages: usize) -> Vec<Arc<SharedPage>> {
+        let mut out = Vec::with_capacity(n_pages);
+        for i in 0..n_pages {
+            if let PageSlot::Shared(a) = &self.pages[i] {
+                out.push(Arc::clone(a));
+                continue;
+            }
+            let PageSlot::Owned(page) = &mut self.pages[i] else { unreachable!() };
+            assert_eq!(page.used, PAGE_SIZE, "sealing a partial page");
+            let data = std::mem::replace(&mut page.data, PageBuf::empty());
+            let arc = PagePool::seal_page(pool, data, page.lease, self.row_dim, self.precision);
+            self.pages[i] = PageSlot::Shared(Arc::clone(&arc));
+            out.push(arc);
+        }
+        out
+    }
+
     fn release_all(&mut self, pool: &PagePool) {
-        for p in self.pages.drain(..) {
-            pool.release(p, self.row_dim, self.precision);
+        for slot in self.pages.drain(..) {
+            match slot {
+                PageSlot::Owned(p) => pool.release(p, self.row_dim, self.precision),
+                // shared pages just drop their reference; the last
+                // holder's drop returns the bytes through release_shared
+                PageSlot::Shared(_) => {}
+            }
         }
     }
 }
@@ -612,10 +816,90 @@ impl KvCache {
         self.gather_into(layer, indices, k_out, v_out, mask_out);
     }
 
-    /// Total bytes leased by K+V pages (allocated, incl. partial pages).
+    /// Total bytes leased by K+V pages (allocated, incl. partial pages
+    /// and borrowed shared pages — this sequence's *view* of its KV).
     pub fn bytes(&self) -> usize {
         self.k.iter().map(|s| s.bytes()).sum::<usize>()
             + self.v.iter().map(|s| s.bytes()).sum::<usize>()
+    }
+
+    /// Bytes of privately owned pages — what dropping this sequence
+    /// actually returns to the arena (shared pages stay, counted once
+    /// globally).
+    pub fn private_bytes(&self) -> usize {
+        self.k.iter().map(|s| s.private_bytes()).sum::<usize>()
+            + self.v.iter().map(|s| s.private_bytes()).sum::<usize>()
+    }
+
+    /// Bytes of borrowed sealed pages in this sequence's page tables.
+    pub fn shared_bytes(&self) -> usize {
+        self.bytes() - self.private_bytes()
+    }
+
+    /// Adopt a matched radix prefix: borrow `pages` (one [`PrefixPage`]
+    /// per sealed page span, each carrying per-layer K and V pages) as
+    /// this empty cache's leading page-table entries. Returns the number
+    /// of adopted tokens (`pages.len() * PAGE_SIZE`). Validates geometry
+    /// before mutating, so a mismatch leaves the cache untouched.
+    pub fn adopt_prefix(&mut self, pages: &[prefix::PrefixPage]) -> Result<usize> {
+        if self.len != 0 {
+            bail!("adopt_prefix into a non-empty cache ({} tokens)", self.len);
+        }
+        let row = self.row_dim();
+        for p in pages {
+            if p.k.len() != self.layers || p.v.len() != self.layers {
+                bail!(
+                    "prefix page has {}/{} layers, cache has {}",
+                    p.k.len(),
+                    p.v.len(),
+                    self.layers
+                );
+            }
+            for sp in p.k.iter().chain(p.v.iter()) {
+                if sp.row_dim != row || sp.precision != self.precision {
+                    bail!(
+                        "prefix page geometry {}x{:?} != cache {}x{:?}",
+                        sp.row_dim,
+                        sp.precision,
+                        row,
+                        self.precision
+                    );
+                }
+            }
+        }
+        for (l, store) in self.k.iter_mut().enumerate() {
+            let layer: Vec<Arc<SharedPage>> = pages.iter().map(|p| Arc::clone(&p.k[l])).collect();
+            store.adopt(&layer);
+        }
+        for (l, store) in self.v.iter_mut().enumerate() {
+            let layer: Vec<Arc<SharedPage>> = pages.iter().map(|p| Arc::clone(&p.v[l])).collect();
+            store.adopt(&layer);
+        }
+        self.len = pages.len() * PAGE_SIZE;
+        Ok(self.len)
+    }
+
+    /// Seal the first `upto_tokens` (a multiple of [`PAGE_SIZE`], at most
+    /// `len`) into shared pages across every layer's K and V stores —
+    /// the radix "seal-back" step. The sequence keeps reading the sealed
+    /// pages through its page table; the returned [`PrefixPage`]s go
+    /// into the radix cache. Bytes move from the private gauge to the
+    /// shared gauge exactly once per page.
+    pub fn seal_prefix(&mut self, upto_tokens: usize) -> Vec<prefix::PrefixPage> {
+        assert!(upto_tokens % PAGE_SIZE == 0, "seal at page granularity");
+        assert!(upto_tokens <= self.len, "sealing beyond cached tokens");
+        let n_pages = upto_tokens / PAGE_SIZE;
+        let pool = Arc::clone(&self.pool);
+        let k_sealed: Vec<Vec<Arc<SharedPage>>> =
+            self.k.iter_mut().map(|s| s.seal_full_pages(&pool, n_pages)).collect();
+        let v_sealed: Vec<Vec<Arc<SharedPage>>> =
+            self.v.iter_mut().map(|s| s.seal_full_pages(&pool, n_pages)).collect();
+        (0..n_pages)
+            .map(|p| prefix::PrefixPage {
+                k: k_sealed.iter().map(|l| Arc::clone(&l[p])).collect(),
+                v: v_sealed.iter().map(|l| Arc::clone(&l[p])).collect(),
+            })
+            .collect()
     }
 
     /// Number of leased pages across layers (both K and V).
@@ -629,7 +913,7 @@ impl KvCache {
         self.k
             .iter()
             .chain(self.v.iter())
-            .flat_map(|s| s.pages.iter().map(|p| p.lease))
+            .flat_map(|s| s.pages.iter().map(|p| p.lease()))
             .collect()
     }
 }

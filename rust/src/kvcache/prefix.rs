@@ -1,0 +1,644 @@
+//! Shared-prefix radix cache: a process-wide trie of sealed prompt
+//! prefixes at page granularity.
+//!
+//! Every node below the root covers exactly one [`PAGE_SIZE`]-token span
+//! and is keyed by that span's token bytes, so walking the trie with a
+//! new prompt performs a longest-prefix match page by page. A node holds
+//! the sealed K/V pages ([`PrefixPage`]) for its span plus, at terminal
+//! nodes, the frozen per-layer index segments
+//! ([`crate::sparse::PolicySegment`]) keyed by policy name. Lifecycle:
+//!
+//! ```text
+//! match      begin_prefill walks the trie (longest prefix, capped one
+//!            token short of the prompt so the final chunk still runs)
+//! adopt      matched pages borrow into the new sequence's page table;
+//!            frozen segments seed the per-layer policies
+//! COW fork   the sequence appends past the shared pages into private
+//!            tail pages (see `kvcache::PageSlot`)
+//! seal-back  finish_prefill seals the prompt's full pages and inserts
+//!            them (plus exported segments) back into the trie
+//! ```
+//!
+//! Eviction: LRU over *evictable* leaves — nodes with no children whose
+//! pages are referenced only by the cache itself (refcount 1; no live
+//! borrower). Capacity comes from the `kv.prefix_cache_mb` knob; the
+//! coordinator additionally sheds cold entries under arena pressure via
+//! [`PrefixCache::evict_bytes`]. Every touch gets a unique monotonic
+//! tick, so eviction order is fully deterministic.
+
+use super::{SharedPage, PAGE_SIZE};
+use crate::sparse::PolicySegment;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// One sealed page span: per-layer K and V shared pages.
+pub struct PrefixPage {
+    /// One sealed K page per layer.
+    pub k: Vec<Arc<SharedPage>>,
+    /// One sealed V page per layer.
+    pub v: Vec<Arc<SharedPage>>,
+}
+
+impl PrefixPage {
+    /// KV bytes of this span across all layers (counted once globally).
+    pub fn bytes(&self) -> usize {
+        self.k.iter().chain(self.v.iter()).map(|p| p.bytes()).sum()
+    }
+
+    fn clone_refs(&self) -> PrefixPage {
+        PrefixPage {
+            k: self.k.iter().map(Arc::clone).collect(),
+            v: self.v.iter().map(Arc::clone).collect(),
+        }
+    }
+
+    /// True when no live sequence borrows any of this span's pages
+    /// (every Arc is held only by the cache + this temporary view).
+    fn unreferenced(&self) -> bool {
+        self.k.iter().chain(self.v.iter()).all(|p| Arc::strong_count(p) == 1)
+    }
+}
+
+/// Result of a longest-prefix radix match.
+pub struct PrefixMatch {
+    /// Matched tokens (`pages.len() * PAGE_SIZE`).
+    pub tokens: usize,
+    /// Borrowable sealed pages, one per matched span, in prefix order.
+    pub pages: Vec<PrefixPage>,
+    /// Frozen per-layer index segments for the requested policy, present
+    /// only when the match landed exactly on a node where a sequence of
+    /// that policy sealed its segments.
+    pub segments: Option<Arc<Vec<Option<PolicySegment>>>>,
+}
+
+/// Cache-wide counters (metrics scrape + tests).
+#[derive(Clone, Debug, Default)]
+pub struct PrefixStats {
+    /// Nodes currently in the trie.
+    pub nodes: usize,
+    /// Approximate resident bytes (KV pages + segment payloads).
+    pub bytes: usize,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    pub evictions: u64,
+    /// Total tokens adopted from the cache over its lifetime.
+    pub tokens_reused_total: u64,
+}
+
+struct Node {
+    children: HashMap<Box<[u8]>, Node>,
+    /// Sealed pages for this node's span (`None` only at the root).
+    page: Option<PrefixPage>,
+    /// Frozen per-layer segments by policy name, covering the prefix
+    /// that *ends* at this node.
+    segments: HashMap<String, Arc<Vec<Option<PolicySegment>>>>,
+    last_used: u64,
+    /// Bytes attributed to this node (its page + its segments).
+    bytes: usize,
+}
+
+impl Node {
+    fn new() -> Node {
+        Node {
+            children: HashMap::new(),
+            page: None,
+            segments: HashMap::new(),
+            last_used: 0,
+            bytes: 0,
+        }
+    }
+
+    fn evictable(&self) -> bool {
+        self.children.is_empty()
+            && self.page.as_ref().map_or(true, |p| p.unreferenced())
+    }
+}
+
+struct PrefixInner {
+    root: Node,
+    tick: u64,
+    bytes: usize,
+    nodes: usize,
+    hits: u64,
+    misses: u64,
+    insertions: u64,
+    evictions: u64,
+    tokens_reused_total: u64,
+}
+
+/// The process-wide radix cache. `new(0)` builds a disabled cache whose
+/// lookup always misses and whose insert is a no-op (the radix-off
+/// configuration the serving bench compares against).
+pub struct PrefixCache {
+    inner: Mutex<PrefixInner>,
+    capacity_bytes: usize,
+    enabled: bool,
+}
+
+impl PrefixCache {
+    /// Capacity in MiB (`kv.prefix_cache_mb`); 0 disables the cache.
+    pub fn new(capacity_mb: usize) -> Arc<PrefixCache> {
+        Self::with_capacity_bytes(capacity_mb.saturating_mul(1024 * 1024))
+    }
+
+    /// Byte-granular constructor (tests); 0 disables the cache.
+    pub fn with_capacity_bytes(capacity_bytes: usize) -> Arc<PrefixCache> {
+        Arc::new(PrefixCache {
+            inner: Mutex::new(PrefixInner {
+                root: Node::new(),
+                tick: 0,
+                bytes: 0,
+                nodes: 0,
+                hits: 0,
+                misses: 0,
+                insertions: 0,
+                evictions: 0,
+                tokens_reused_total: 0,
+            }),
+            capacity_bytes,
+            enabled: capacity_bytes > 0,
+        })
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    /// Longest-prefix match over `prompt`, capped at `max_pages` spans.
+    /// Touches every node on the match path (LRU recency) and clones
+    /// page references for adoption.
+    pub fn lookup(&self, prompt: &[u8], max_pages: usize, policy: &str) -> Option<PrefixMatch> {
+        if !self.enabled || max_pages == 0 || prompt.len() < PAGE_SIZE {
+            return None;
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let PrefixInner { root, tick, hits, misses, tokens_reused_total, .. } = &mut *guard;
+        let mut node = root;
+        let mut pages = Vec::new();
+        let mut depth = 0usize;
+        while depth < max_pages && (depth + 1) * PAGE_SIZE <= prompt.len() {
+            let key = &prompt[depth * PAGE_SIZE..(depth + 1) * PAGE_SIZE];
+            let Some(child) = node.children.get_mut(key) else { break };
+            *tick += 1;
+            child.last_used = *tick;
+            pages.push(child.page.as_ref().expect("non-root node without a page").clone_refs());
+            node = child;
+            depth += 1;
+        }
+        if depth == 0 {
+            *misses += 1;
+            return None;
+        }
+        *hits += 1;
+        *tokens_reused_total += (depth * PAGE_SIZE) as u64;
+        let segments = node.segments.get(policy).cloned();
+        Some(PrefixMatch { tokens: depth * PAGE_SIZE, pages, segments })
+    }
+
+    /// Read-only admission probe: how many tokens a [`PrefixCache::lookup`]
+    /// for `prompt` would currently adopt, without cloning page
+    /// references or touching the hit/miss counters. The probed path's
+    /// recency *is* refreshed, deliberately: a request waiting on
+    /// admission keeps the prefix it is about to adopt at the warm end
+    /// of the LRU, so pressure eviction sheds other entries first.
+    pub fn probe_tokens(&self, prompt: &[u8], max_pages: usize) -> usize {
+        if !self.enabled || max_pages == 0 || prompt.len() < PAGE_SIZE {
+            return 0;
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let PrefixInner { root, tick, .. } = &mut *guard;
+        let mut node = root;
+        let mut depth = 0usize;
+        while depth < max_pages && (depth + 1) * PAGE_SIZE <= prompt.len() {
+            let key = &prompt[depth * PAGE_SIZE..(depth + 1) * PAGE_SIZE];
+            let Some(child) = node.children.get_mut(key) else { break };
+            *tick += 1;
+            child.last_used = *tick;
+            node = child;
+            depth += 1;
+        }
+        depth * PAGE_SIZE
+    }
+
+    /// Seal-back: insert `pages` (covering `prompt_prefix`, whose length
+    /// must be `pages.len() * PAGE_SIZE`) and the exporting policy's
+    /// per-layer segments at the terminal node. Existing nodes win — a
+    /// concurrent sequence that sealed the same content keeps its own
+    /// pages until it retires, and the cache's copy stays canonical.
+    /// Evicts LRU refcount-0 leaves if the insert pushed past capacity.
+    pub fn insert(
+        &self,
+        prompt_prefix: &[u8],
+        pages: Vec<PrefixPage>,
+        policy: &str,
+        segments: Vec<Option<PolicySegment>>,
+    ) {
+        if !self.enabled || pages.is_empty() {
+            return;
+        }
+        assert_eq!(prompt_prefix.len(), pages.len() * PAGE_SIZE, "seal at page granularity");
+        let mut guard = self.inner.lock().unwrap();
+        {
+            let PrefixInner { root, tick, bytes, nodes, insertions, .. } = &mut *guard;
+            let mut node = root;
+            for (depth, page) in pages.into_iter().enumerate() {
+                let key: Box<[u8]> =
+                    prompt_prefix[depth * PAGE_SIZE..(depth + 1) * PAGE_SIZE].into();
+                *tick += 1;
+                let t = *tick;
+                let child = node.children.entry(key).or_insert_with(|| {
+                    *nodes += 1;
+                    Node::new()
+                });
+                child.last_used = t;
+                if child.page.is_none() {
+                    let b = page.bytes();
+                    child.page = Some(page);
+                    child.bytes += b;
+                    *bytes += b;
+                }
+                node = child;
+            }
+            if !node.segments.contains_key(policy) {
+                let seg_bytes: usize =
+                    segments.iter().flatten().map(|s| s.bytes()).sum::<usize>() + 64;
+                node.bytes += seg_bytes;
+                *bytes += seg_bytes;
+                node.segments.insert(policy.to_string(), Arc::new(segments));
+            }
+            *insertions += 1;
+        }
+        if self.capacity_bytes != usize::MAX {
+            Self::evict_locked(&mut guard, self.capacity_bytes, usize::MAX);
+        }
+    }
+
+    /// Evict LRU refcount-0 leaves until at least `want` bytes were
+    /// freed (or nothing evictable remains). Returns the bytes freed.
+    /// Used by the coordinator to shed cold prefixes under arena
+    /// pressure — adopted (refcount > 1) prefixes are never touched.
+    pub fn evict_bytes(&self, want: usize) -> usize {
+        if !self.enabled || want == 0 {
+            return 0;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.bytes;
+        let target = inner.bytes.saturating_sub(want);
+        Self::evict_locked(&mut inner, target, usize::MAX);
+        before - inner.bytes
+    }
+
+    /// Drop every evictable entry (tests / shutdown).
+    pub fn clear(&self) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        Self::evict_locked(&mut inner, 0, usize::MAX);
+    }
+
+    /// Evict LRU evictable leaves until `inner.bytes <= target_bytes`,
+    /// at most `max_evictions` of them.
+    fn evict_locked(inner: &mut PrefixInner, target_bytes: usize, max_evictions: usize) {
+        let mut done = 0usize;
+        while inner.bytes > target_bytes && done < max_evictions {
+            let mut path = Vec::new();
+            let mut best: Option<(u64, Vec<Box<[u8]>>)> = None;
+            Self::find_lru(&inner.root, &mut path, &mut best);
+            let Some((_, path)) = best else { break };
+            // walk to the parent of the victim and remove it
+            let mut node = &mut inner.root;
+            for key in &path[..path.len() - 1] {
+                node = node.children.get_mut(key).unwrap();
+            }
+            let victim = node.children.remove(path.last().unwrap()).unwrap();
+            inner.bytes -= victim.bytes;
+            inner.nodes -= 1;
+            inner.evictions += 1;
+            done += 1;
+            // dropping `victim` drops its page Arcs: refcount was 1, so
+            // the pages return to the pool (bytes_shared shrinks)
+        }
+    }
+
+    /// Depth-first scan for the least-recently-used evictable leaf;
+    /// ticks are unique, so the minimum is unambiguous and eviction
+    /// order is deterministic regardless of hash-map iteration order.
+    fn find_lru(
+        node: &Node,
+        path: &mut Vec<Box<[u8]>>,
+        best: &mut Option<(u64, Vec<Box<[u8]>>)>,
+    ) {
+        for (key, child) in &node.children {
+            path.push(key.clone());
+            if child.children.is_empty() {
+                if child.evictable()
+                    && best.as_ref().map_or(true, |(t, _)| child.last_used < *t)
+                {
+                    *best = Some((child.last_used, path.clone()));
+                }
+            } else {
+                Self::find_lru(child, path, best);
+            }
+            path.pop();
+        }
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        let inner = self.inner.lock().unwrap();
+        PrefixStats {
+            nodes: inner.nodes,
+            bytes: inner.bytes,
+            hits: inner.hits,
+            misses: inner.misses,
+            insertions: inner.insertions,
+            evictions: inner.evictions,
+            tokens_reused_total: inner.tokens_reused_total,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kvcache::{KvCache, PagePool};
+    use crate::util::rng::Rng;
+    use std::sync::Arc;
+
+    const D: usize = 8; // heads * head_dim = 2 * 4
+
+    /// Build a cache over `pool` holding `n` deterministic tokens.
+    fn filled_cache(pool: &Arc<PagePool>, n: usize, seed: u64) -> KvCache {
+        let mut c = KvCache::with_pool(1, 2, 4, Arc::clone(pool));
+        let mut rng = Rng::new(seed);
+        for _ in 0..n {
+            let k = rng.normal_vec(D);
+            let v = rng.normal_vec(D);
+            c.append_token(&[&k], &[&v]).unwrap();
+        }
+        c
+    }
+
+    #[test]
+    fn seal_adopt_round_trip_and_accounting() {
+        let pool = PagePool::unbounded();
+        let page = PagePool::page_bytes(D);
+        let n = 2 * PAGE_SIZE + 10; // 2 sealable pages + a private tail
+        let mut a = filled_cache(&pool, n, 1);
+        let truth: Vec<Vec<f32>> = (0..n).map(|t| a.key_row(0, t).to_vec()).collect();
+        assert_eq!(pool.bytes_in_use(), 2 * 3 * page); // K+V x 3 pages
+        assert_eq!(a.private_bytes(), a.bytes());
+
+        let pages = a.seal_prefix(2 * PAGE_SIZE);
+        assert_eq!(pages.len(), 2);
+        // 2 pages x (K+V) moved to the shared gauge, counted once
+        assert_eq!(pool.bytes_shared(), 4 * page);
+        assert_eq!(pool.bytes_in_use(), 2 * page); // the two partial tails
+        assert_eq!(a.shared_bytes(), 4 * page);
+        assert_eq!(a.bytes(), 6 * page, "sequence view unchanged by sealing");
+        // sealed rows still readable through A's table
+        assert_eq!(a.key_row(0, 3), truth[3].as_slice());
+
+        // adopt into B: shared bytes do NOT grow (counted once)
+        let mut b = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+        assert_eq!(b.adopt_prefix(&pages).unwrap(), 2 * PAGE_SIZE);
+        assert_eq!(pool.bytes_shared(), 4 * page);
+        assert_eq!(b.private_bytes(), 0);
+        for t in [0, 5, PAGE_SIZE, 2 * PAGE_SIZE - 1] {
+            assert_eq!(b.key_row(0, t), truth[t].as_slice(), "adopted row {t}");
+        }
+        // COW fork: appending to B allocates a private tail page
+        let row = vec![7.0f32; D];
+        b.append_token(&[&row], &[&row]).unwrap();
+        assert_eq!(b.len(), 2 * PAGE_SIZE + 1);
+        assert_eq!(b.private_bytes(), 2 * page);
+        assert_eq!(b.key_row(0, 2 * PAGE_SIZE), &row[..]);
+        // A's view of the same token position is untouched (A has its
+        // own private tail there)
+        assert_eq!(a.key_row(0, 2 * PAGE_SIZE), truth[2 * PAGE_SIZE].as_slice());
+
+        // teardown order: A, B, then the last PrefixPage refs
+        drop(a);
+        drop(b);
+        assert_eq!(pool.bytes_in_use(), 0, "private pages recycled");
+        assert_eq!(pool.bytes_shared(), 4 * page, "cache refs keep pages alive");
+        drop(pages);
+        assert_eq!(pool.bytes_shared(), 0, "last ref returns shared bytes");
+        assert!(pool.stats().bytes_free > 0, "buffers parked for reuse");
+    }
+
+    #[test]
+    fn adopt_rejects_geometry_mismatch() {
+        let pool = PagePool::unbounded();
+        let mut a = filled_cache(&pool, PAGE_SIZE, 2);
+        let pages = a.seal_prefix(PAGE_SIZE);
+        // wrong layer count
+        let mut b = KvCache::with_pool(2, 2, 4, Arc::clone(&pool));
+        assert!(b.adopt_prefix(&pages).is_err());
+        assert_eq!(b.len(), 0, "failed adopt left the cache untouched");
+        // wrong row dim
+        let mut c = KvCache::with_pool(1, 2, 8, Arc::clone(&pool));
+        assert!(c.adopt_prefix(&pages).is_err());
+        // non-empty target
+        let mut d = filled_cache(&pool, 3, 3);
+        assert!(d.adopt_prefix(&pages).is_err());
+    }
+
+    /// Insert a `n_pages`-page prefix with the given content seed and
+    /// prompt bytes; returns the backing cache (kept alive by caller).
+    fn insert_prefix(cache: &PrefixCache, pool: &Arc<PagePool>, prompt: &[u8], seed: u64) {
+        let n_pages = prompt.len() / PAGE_SIZE;
+        let mut c = filled_cache(pool, n_pages * PAGE_SIZE, seed);
+        let pages = c.seal_prefix(n_pages * PAGE_SIZE);
+        cache.insert(&prompt[..n_pages * PAGE_SIZE], pages, "lychee", vec![None]);
+        // c drops here: pages survive through the cache's refs
+    }
+
+    fn prompt_with(first: u8, pages: usize) -> Vec<u8> {
+        let mut p = vec![first; PAGE_SIZE];
+        for i in 1..pages {
+            p.extend(vec![first.wrapping_add(i as u8); PAGE_SIZE]);
+        }
+        p
+    }
+
+    #[test]
+    fn radix_longest_prefix_match() {
+        let pool = PagePool::unbounded();
+        let cache = PrefixCache::with_capacity_bytes(64 * 1024 * 1024);
+        let prompt = prompt_with(b'a', 3);
+        insert_prefix(&cache, &pool, &prompt, 7);
+        assert_eq!(cache.stats().nodes, 3);
+
+        // full-depth match (capped below the prompt length); scoped so
+        // the borrowed pages release before the final clear
+        {
+            let m = cache.lookup(&prompt, 3, "lychee").unwrap();
+            assert_eq!(m.tokens, 3 * PAGE_SIZE);
+            assert!(m.segments.is_some(), "terminal node carries segments");
+        }
+        // divergent second page: only depth 1 matches
+        {
+            let mut div = prompt.clone();
+            div[PAGE_SIZE + 1] = b'!';
+            let m = cache.lookup(&div, 3, "lychee").unwrap();
+            assert_eq!(m.tokens, PAGE_SIZE);
+            assert!(m.segments.is_none(), "mid-path node has no segments");
+        }
+        // different policy at the terminal: pages match, segments don't
+        {
+            let m = cache.lookup(&prompt, 3, "quest").unwrap();
+            assert_eq!(m.tokens, 3 * PAGE_SIZE);
+            assert!(m.segments.is_none());
+        }
+        // admission probe: same match depth, but no page clones and no
+        // hit/miss counter skew
+        {
+            let before = cache.stats();
+            assert_eq!(cache.probe_tokens(&prompt, 3), 3 * PAGE_SIZE);
+            assert_eq!(cache.probe_tokens(&prompt_with(b'z', 2), 2), 0);
+            let after = cache.stats();
+            assert_eq!(after.hits, before.hits);
+            assert_eq!(after.misses, before.misses);
+        }
+        // no shared first page: miss
+        assert!(cache.lookup(&prompt_with(b'z', 2), 2, "lychee").is_none());
+        let st = cache.stats();
+        assert_eq!(st.hits, 3);
+        assert_eq!(st.misses, 1);
+        assert_eq!(st.tokens_reused_total, (3 + 1 + 3) as u64 * PAGE_SIZE as u64);
+
+        cache.clear();
+        assert_eq!(cache.stats().nodes, 0);
+        assert_eq!(pool.bytes_shared(), 0, "clear returned every page");
+    }
+
+    #[test]
+    fn lru_eviction_is_deterministic_and_skips_referenced() {
+        let pool = PagePool::unbounded();
+        let page = PagePool::page_bytes(D);
+        let node_bytes = 2 * page; // K+V, 1 layer, 1 page
+        // room for ~2 nodes' pages (+ segment slack)
+        let cache = PrefixCache::with_capacity_bytes(2 * node_bytes + 200);
+        let (pa, pb, pc) = (prompt_with(b'a', 1), prompt_with(b'b', 1), prompt_with(b'c', 1));
+        insert_prefix(&cache, &pool, &pa, 1);
+        insert_prefix(&cache, &pool, &pb, 2);
+        assert_eq!(cache.stats().nodes, 2);
+        // touch A so B is the LRU leaf
+        let hold_a = cache.lookup(&pa, 1, "lychee").unwrap();
+        insert_prefix(&cache, &pool, &pc, 3); // over capacity -> evict B
+        let st = cache.stats();
+        assert_eq!(st.evictions, 1);
+        assert!(cache.lookup(&pb, 1, "lychee").is_none(), "B evicted (LRU)");
+        assert!(cache.lookup(&pc, 1, "lychee").is_some(), "C resident");
+
+        // A's pages are borrowed by `hold_a`: evict_bytes must skip them
+        // and only reclaim C (the sole refcount-0 leaf)
+        let freed = cache.evict_bytes(usize::MAX / 2);
+        assert!(freed >= node_bytes, "freed {freed}");
+        assert!(cache.lookup(&pa, 1, "lychee").is_some(), "referenced A survives");
+        assert!(cache.lookup(&pc, 1, "lychee").is_none(), "cold C evicted");
+        drop(hold_a);
+        cache.clear();
+        assert_eq!(pool.bytes_shared(), 0);
+    }
+
+    /// COW hammer: concurrent sequences fork one hot sealed prefix,
+    /// append private tails with per-thread fill patterns, verify every
+    /// gathered row, and race drops against LRU eviction. Afterwards the
+    /// arena accounting must be exact: no private bytes leaked, shared
+    /// bytes equal to what the cache still holds, and zero after clear.
+    #[test]
+    fn cow_hammer_concurrent_forks_and_eviction() {
+        let pool = PagePool::unbounded();
+        let cache = PrefixCache::with_capacity_bytes(64 * 1024 * 1024);
+        let hot_pages = 3usize;
+        let hot_tokens = hot_pages * PAGE_SIZE;
+        let prompt = prompt_with(b'h', hot_pages);
+        // seal the hot prefix once; remember its truth rows
+        let truth: Vec<Vec<f32>> = {
+            let mut c = filled_cache(&pool, hot_tokens, 99);
+            let rows = (0..hot_tokens).map(|t| c.key_row(0, t).to_vec()).collect();
+            let pages = c.seal_prefix(hot_tokens);
+            cache.insert(&prompt, pages, "lychee", vec![None]);
+            rows
+        };
+        // anchor reference: keeps the hot prefix referenced (hence
+        // unevictable) while forks race drops against evict_bytes
+        let anchor = cache.lookup(&prompt, hot_pages, "lychee").unwrap();
+        let threads = 4usize;
+        let rounds = 5usize;
+        std::thread::scope(|scope| {
+            for t in 0..threads {
+                let pool = Arc::clone(&pool);
+                let cache = Arc::clone(&cache);
+                let truth = &truth;
+                let prompt = &prompt;
+                scope.spawn(move || {
+                    for r in 0..rounds {
+                        let m = cache.lookup(prompt, hot_pages, "lychee").unwrap();
+                        let mut kv = KvCache::with_pool(1, 2, 4, Arc::clone(&pool));
+                        assert_eq!(kv.adopt_prefix(&m.pages).unwrap(), hot_tokens);
+                        drop(m);
+                        // private COW tail with a thread/round pattern
+                        let tail = 10 + t * 7 + r;
+                        for i in 0..tail {
+                            let row: Vec<f32> =
+                                (0..D).map(|c| (t * 1000 + r * 100 + i * 10 + c) as f32).collect();
+                            kv.append_token(&[&row], &[&row]).unwrap();
+                        }
+                        // gather across the shared/private boundary
+                        let idx: Vec<usize> = (0..hot_tokens + tail).step_by(17).collect();
+                        let bucket = idx.len().next_power_of_two();
+                        let (mut k, mut v, mut msk) = (Vec::new(), Vec::new(), Vec::new());
+                        kv.gather(0, &idx, bucket, &mut k, &mut v, &mut msk);
+                        for (i, &tok) in idx.iter().enumerate() {
+                            let got = &k[i * D..(i + 1) * D];
+                            if tok < hot_tokens {
+                                assert_eq!(got, truth[tok].as_slice(), "shared row {tok}");
+                            } else {
+                                let j = tok - hot_tokens;
+                                let want: Vec<f32> = (0..D)
+                                    .map(|c| (t * 1000 + r * 100 + j * 10 + c) as f32)
+                                    .collect();
+                                assert_eq!(got, want.as_slice(), "private row {tok}");
+                            }
+                        }
+                        // eviction racing live borrowers must be a no-op
+                        // for this (referenced) prefix
+                        cache.evict_bytes(usize::MAX / 2);
+                        assert_eq!(kv.key_row(0, 1), truth[1].as_slice());
+                        drop(kv);
+                    }
+                });
+            }
+        });
+        drop(anchor);
+        // every fork dropped: only the cache holds the hot prefix
+        assert_eq!(pool.bytes_in_use(), 0, "private bytes leaked");
+        let page = PagePool::page_bytes(D);
+        assert_eq!(pool.bytes_shared(), hot_pages * 2 * page);
+        assert_eq!(cache.stats().nodes, hot_pages);
+        cache.clear();
+        assert_eq!(pool.bytes_shared(), 0, "leak after cache clear");
+        assert_eq!(cache.stats().evictions, hot_pages as u64);
+    }
+
+    #[test]
+    fn disabled_cache_is_inert() {
+        let pool = PagePool::unbounded();
+        let cache = PrefixCache::new(0);
+        assert!(!cache.enabled());
+        let prompt = prompt_with(b'x', 1);
+        let mut c = filled_cache(&pool, PAGE_SIZE, 5);
+        let pages = c.seal_prefix(PAGE_SIZE);
+        cache.insert(&prompt, pages, "lychee", vec![None]);
+        assert!(cache.lookup(&prompt, 1, "lychee").is_none());
+        assert_eq!(cache.stats().nodes, 0);
+    }
+}

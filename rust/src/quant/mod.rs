@@ -337,6 +337,25 @@ impl QuantMat {
         }
     }
 
+    /// Rebuild the mirror by **replaying** `push_row` over a row-major
+    /// `[rows, d]` f32 matrix. Unlike [`QuantMat::rebuild`] (exact bulk
+    /// scales), this reproduces the incremental push chain — including
+    /// the i8 geometric scale growth and in-place requantization — so
+    /// the result is byte-identical to a mirror that was built one
+    /// `push_row` at a time. The shared-prefix radix cache's segment
+    /// adoption uses this so a radix-hit mirror matches a cold
+    /// incremental build bit-for-bit.
+    pub fn replay_rows(&mut self, mat: &[f32], d: usize) {
+        if !self.is_active() {
+            return;
+        }
+        assert!(d > 0 && mat.len() % d == 0, "quant mirror shape");
+        self.reset(d);
+        for row in mat.chunks_exact(d) {
+            self.push_row(row);
+        }
+    }
+
     /// Append one row (graft / page-seal path). i8 channels whose scale
     /// no longer covers the new row grow geometrically, requantizing the
     /// existing column codes in place.

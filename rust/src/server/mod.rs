@@ -5,13 +5,24 @@
 //! ```text
 //! -> {"prompt": "...", "max_new_tokens": 32, "policy": "lychee"}
 //! <- {"token": "t"}            (streamed, one per generated token)
-//! <- {"done": true, "tokens": 32, "ttft_ms": ..., "tpot_ms": ...}
+//! <- {"done": true, "request_id": 7, "tokens": 32, "ttft_ms": ...,
+//!     "tpot_ms": ...}
 //! or {"error": "..."}
 //!
 //! -> {"metrics": true}
 //! <- {"requests": ..., "completed": ..., "prefill_chunks_executed": ...,
-//!     "preemptions": ..., "queue_depth": ..., "ttft_p50_us": ..., ...}
+//!     "preemptions": ..., "prefix_hits": ..., "queue_depth": ..., ...}
 //! ```
+//!
+//! Multi-turn sessions: a request may carry `"session_id": "s1"` and
+//! (after the first turn) `"parent": <request_id of the previous turn>`.
+//! The server keeps each session's accumulated text (prompt + generated
+//! replies) and prepends it to the new turn's `prompt`, so chained
+//! clients send only the incremental turn while the engine sees the full
+//! conversation — whose prefix the radix cache then reuses. A `parent`
+//! that does not match the session's last request id is rejected (the
+//! client raced another turn). Anonymous requests (no `session_id`)
+//! still benefit from content-based radix matching.
 //!
 //! Thread-per-connection (serving CPU-bound decode, connection counts
 //! are small); the coordinator handle is cloneable and thread-safe.
@@ -19,10 +30,64 @@
 use crate::coordinator::{Event, Handle, Metrics, Request};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
+
+/// Per-session chaining state: the accumulated conversation text and the
+/// request id of the last completed turn (what the next `parent` must
+/// reference).
+struct SessionState {
+    last_id: u64,
+    text: Vec<u8>,
+    /// Monotonic touch tick for LRU eviction.
+    touched: u64,
+}
+
+/// Sessions retained before the store evicts the least-recently-used
+/// one. Bounds server memory under session churn: a stale session can
+/// always be resumed as a fresh one (the first turn of a session never
+/// carries `parent`), and the radix cache still content-matches the
+/// resent history.
+const SESSION_CAP: usize = 1024;
+
+/// Server-wide session store, shared across connections so a session can
+/// reconnect. LRU-bounded at [`SESSION_CAP`] entries.
+#[derive(Default)]
+struct SessionStore {
+    map: HashMap<String, SessionState>,
+    tick: u64,
+}
+
+impl SessionStore {
+    /// Accumulated text + last request id for a session, refreshing its
+    /// LRU slot.
+    fn touch(&mut self, sid: &str) -> Option<(u64, Vec<u8>)> {
+        self.tick += 1;
+        let tick = self.tick;
+        let st = self.map.get_mut(sid)?;
+        st.touched = tick;
+        Some((st.last_id, st.text.clone()))
+    }
+
+    /// Record a completed turn, evicting the LRU session past the cap.
+    fn update(&mut self, sid: &str, last_id: u64, text: Vec<u8>) {
+        self.tick += 1;
+        let touched = self.tick;
+        self.map.insert(sid.to_string(), SessionState { last_id, text, touched });
+        if self.map.len() > SESSION_CAP {
+            if let Some(oldest) =
+                self.map.iter().min_by_key(|(_, s)| s.touched).map(|(k, _)| k.clone())
+            {
+                self.map.remove(&oldest);
+            }
+        }
+    }
+}
+
+type Sessions = Arc<Mutex<SessionStore>>;
 
 /// A running TCP server; dropping stops accepting (in-flight requests
 /// finish on the coordinator).
@@ -48,6 +113,7 @@ impl Server {
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = Arc::clone(&stop);
         let next_id = Arc::new(AtomicU64::new(1));
+        let sessions: Sessions = Arc::new(Mutex::new(SessionStore::default()));
         let accept_thread = std::thread::Builder::new()
             .name("lychee-accept".into())
             .spawn(move || {
@@ -57,8 +123,9 @@ impl Server {
                             let h = handle.clone();
                             let ids = Arc::clone(&next_id);
                             let m = metrics.clone();
+                            let s = Arc::clone(&sessions);
                             std::thread::spawn(move || {
-                                let _ = handle_conn(stream, h, &ids, m);
+                                let _ = handle_conn(stream, h, &ids, m, s);
                             });
                         }
                         Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -98,6 +165,12 @@ pub struct WireRequest {
     pub prompt: Vec<u8>,
     pub max_new_tokens: Option<usize>,
     pub policy: String,
+    /// Multi-turn session key: the server prepends the session's
+    /// accumulated text to `prompt` (see module docs).
+    pub session_id: Option<String>,
+    /// Request id of the session's previous turn; validated against the
+    /// session head when present.
+    pub parent: Option<u64>,
 }
 
 /// Validate a wire request before it reaches the scheduler: a missing
@@ -138,7 +211,36 @@ pub fn parse_request(j: &Json) -> std::result::Result<WireRequest, String> {
             None => return Err("'policy' must be a string".to_string()),
         },
     };
-    Ok(WireRequest { prompt: prompt.as_bytes().to_vec(), max_new_tokens, policy })
+    let session_id = match j.get("session_id") {
+        Json::Null => None,
+        v => match v.as_str() {
+            Some(s) if !s.is_empty() => Some(s.to_string()),
+            Some(_) => return Err("'session_id' must be non-empty".to_string()),
+            None => return Err("'session_id' must be a string".to_string()),
+        },
+    };
+    let parent = match j.get("parent") {
+        Json::Null => None,
+        v => {
+            let Some(n) = v.as_f64() else {
+                return Err("'parent' must be a request id".to_string());
+            };
+            if n.fract() != 0.0 || n < 0.0 {
+                return Err("'parent' must be a request id".to_string());
+            }
+            if session_id.is_none() {
+                return Err("'parent' requires 'session_id'".to_string());
+            }
+            Some(n as u64)
+        }
+    };
+    Ok(WireRequest {
+        prompt: prompt.as_bytes().to_vec(),
+        max_new_tokens,
+        policy,
+        session_id,
+        parent,
+    })
 }
 
 /// Render the serving metrics as one JSON reply line.
@@ -157,6 +259,11 @@ fn metrics_json(m: &Metrics) -> Json {
         ("admission_waits", Json::num(m.admission_waits as f64)),
         ("prefill_chunks_executed", Json::num(m.prefill_chunks_executed as f64)),
         ("preemptions", Json::num(m.preemptions as f64)),
+        ("prefix_hits", Json::num(m.prefix_hits as f64)),
+        ("prefix_tokens_reused", Json::num(m.prefix_tokens_reused as f64)),
+        ("prefix_evictions", Json::num(m.prefix_evictions as f64)),
+        ("kv_bytes_shared", Json::num(m.kv_bytes_shared as f64)),
+        ("selects_before_build", Json::num(m.selects_before_build as f64)),
         ("queue_depth", Json::num(m.queue_depth as f64)),
         ("ttft_p50_us", Json::num(m.ttft_us.quantile(0.5))),
         ("ttft_p99_us", Json::num(m.ttft_us.quantile(0.99))),
@@ -172,6 +279,7 @@ fn handle_conn(
     handle: Handle,
     ids: &AtomicU64,
     metrics: Option<Arc<Mutex<Metrics>>>,
+    sessions: Sessions,
 ) -> Result<()> {
     let peer = stream.peer_addr().ok();
     let mut writer = stream.try_clone()?;
@@ -210,9 +318,47 @@ fn handle_conn(
                 continue;
             }
         };
+        // session chaining: prepend the session's accumulated text so
+        // the engine sees the full conversation (whose sealed prefix the
+        // radix cache reuses); validate `parent` against the session head
+        let full_prompt = match &wire.session_id {
+            None => wire.prompt.clone(),
+            Some(sid) => {
+                let state = sessions.lock().unwrap().touch(sid);
+                match state {
+                    Some((head, text)) => {
+                        if let Some(parent) = wire.parent {
+                            if parent != head {
+                                reply_err(
+                                    &mut writer,
+                                    &format!(
+                                        "parent {parent} does not match session '{sid}' head {head}"
+                                    ),
+                                )?;
+                                continue;
+                            }
+                        }
+                        let mut p = text;
+                        p.extend_from_slice(&wire.prompt);
+                        p
+                    }
+                    None => {
+                        if wire.parent.is_some() {
+                            reply_err(
+                                &mut writer,
+                                &format!("'parent' given but session '{sid}' has no prior turn"),
+                            )?;
+                            continue;
+                        }
+                        wire.prompt.clone()
+                    }
+                }
+            }
+        };
+        let req_id = ids.fetch_add(1, Ordering::Relaxed);
         let req = Request {
-            id: ids.fetch_add(1, Ordering::Relaxed),
-            prompt: wire.prompt,
+            id: req_id,
+            prompt: full_prompt.clone(),
             max_new_tokens: wire.max_new_tokens.unwrap_or(DEFAULT_MAX_NEW_TOKENS),
             policy: wire.policy,
         };
@@ -223,16 +369,25 @@ fn handle_conn(
                 continue;
             }
         };
+        let mut generated: Vec<u8> = Vec::new();
         for ev in rx {
             match ev {
                 Event::Token(t) => {
+                    generated.push(t);
                     let s = String::from_utf8_lossy(&[t]).into_owned();
                     let j = Json::obj(vec![("token", Json::str(&s))]);
                     writeln!(writer, "{}", j.dump())?;
                 }
                 Event::Done(stats) => {
+                    if let Some(sid) = &wire.session_id {
+                        // next turn's prefix = this turn's prompt + reply
+                        let mut text = full_prompt.clone();
+                        text.extend_from_slice(&generated);
+                        sessions.lock().unwrap().update(sid, req_id, text);
+                    }
                     let j = Json::obj(vec![
                         ("done", Json::Bool(true)),
+                        ("request_id", Json::num(req_id as f64)),
                         ("tokens", Json::num(stats.tokens as f64)),
                         ("ttft_ms", Json::num(stats.ttft_ms)),
                         ("tpot_ms", Json::num(stats.tpot_ms)),
@@ -264,6 +419,8 @@ pub struct ClientResult {
     pub tokens: usize,
     pub ttft_ms: f64,
     pub tpot_ms: f64,
+    /// Server-assigned request id (`parent` for the session's next turn).
+    pub request_id: u64,
 }
 
 impl Client {
@@ -272,11 +429,43 @@ impl Client {
     }
 
     pub fn generate(&mut self, prompt: &str, max_new_tokens: usize, policy: &str) -> Result<ClientResult> {
-        let req = Json::obj(vec![
+        self.request(prompt, max_new_tokens, policy, None, None)
+    }
+
+    /// Session-chained turn: the server prepends the session's
+    /// accumulated text; pass the previous turn's `request_id` as
+    /// `parent` to assert correct chaining.
+    pub fn generate_in_session(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        policy: &str,
+        session_id: &str,
+        parent: Option<u64>,
+    ) -> Result<ClientResult> {
+        self.request(prompt, max_new_tokens, policy, Some(session_id), parent)
+    }
+
+    fn request(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        policy: &str,
+        session_id: Option<&str>,
+        parent: Option<u64>,
+    ) -> Result<ClientResult> {
+        let mut fields = vec![
             ("prompt", Json::str(prompt)),
             ("max_new_tokens", Json::num(max_new_tokens as f64)),
             ("policy", Json::str(policy)),
-        ]);
+        ];
+        if let Some(sid) = session_id {
+            fields.push(("session_id", Json::str(sid)));
+        }
+        if let Some(p) = parent {
+            fields.push(("parent", Json::num(p as f64)));
+        }
+        let req = Json::obj(fields);
         writeln!(self.stream, "{}", req.dump())?;
         let mut out = ClientResult::default();
         let reader = BufReader::new(self.stream.try_clone()?);
@@ -289,6 +478,7 @@ impl Client {
                 out.tokens = j.get("tokens").as_usize().unwrap_or(0);
                 out.ttft_ms = j.get("ttft_ms").as_f64().unwrap_or(0.0);
                 out.tpot_ms = j.get("tpot_ms").as_f64().unwrap_or(0.0);
+                out.request_id = j.get("request_id").as_usize().unwrap_or(0) as u64;
                 return Ok(out);
             } else if let Some(e) = j.get("error").as_str() {
                 anyhow::bail!("server error: {e}");
@@ -402,8 +592,94 @@ mod tests {
         join.join().unwrap();
     }
 
+    /// Session-chained turns over the sim coordinator: the server must
+    /// concatenate turn prompts, validate `parent`, and the radix cache
+    /// must register hits on the chained prefixes.
+    #[test]
+    fn sim_session_chaining_round_trip() {
+        let mut cfg = crate::config::Config::new();
+        cfg.serving.prefill_chunk_tokens = 64;
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) = crate::coordinator::spawn_with(cfg, move || {
+            Ok(crate::engine::sim::SimEngine::new(
+                engine_cfg,
+                crate::engine::sim::SimConfig::default(),
+            ))
+        })
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone(), Some(metrics)).unwrap();
+        let mut client = Client::connect(&server.addr).unwrap();
+
+        let turn1 = String::from_utf8(crate::workloads::trace::prompt_text(400, 21)).unwrap();
+        let r1 = client.generate_in_session(&turn1, 4, "lychee", "s1", None).unwrap();
+        assert_eq!(r1.tokens, 4);
+        assert!(r1.request_id > 0);
+        // wrong parent is rejected with a structured error
+        let err = client
+            .generate_in_session("next", 2, "lychee", "s1", Some(r1.request_id + 999))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("does not match session"), "{err}");
+        // parent on an unknown session is rejected
+        let err =
+            client.generate_in_session("x", 2, "lychee", "nope", Some(1)).unwrap_err().to_string();
+        assert!(err.contains("no prior turn"), "{err}");
+        // correct chaining: turn 2's engine prompt = turn1 + reply + turn2
+        let turn2 = String::from_utf8(crate::workloads::trace::prompt_text(150, 22)).unwrap();
+        let r2 = client
+            .generate_in_session(&turn2, 4, "lychee", "s1", Some(r1.request_id))
+            .unwrap();
+        assert_eq!(r2.tokens, 4);
+
+        std::thread::sleep(std::time::Duration::from_millis(100));
+        let m = client.metrics().unwrap();
+        // turn 2's 554-token prompt shares turn 1's sealed 384-token
+        // prefix -> at least one radix hit with >= 6 pages reused
+        assert!(m.get("prefix_hits").as_usize().unwrap_or(0) >= 1, "no radix hit: {m:?}");
+        assert!(m.get("prefix_tokens_reused").as_usize().unwrap_or(0) >= 384);
+        assert!(m.get("kv_bytes_shared").as_f64().is_some());
+        assert!(m.get("prefix_evictions").as_f64().is_some());
+        assert!(m.get("selects_before_build").as_f64().is_some());
+        server.stop();
+        handle.shutdown();
+        join.join().unwrap();
+    }
+
     fn parse(s: &str) -> std::result::Result<WireRequest, String> {
         parse_request(&Json::parse(s).unwrap())
+    }
+
+    #[test]
+    fn session_store_is_lru_bounded() {
+        let mut s = SessionStore::default();
+        for i in 0..(SESSION_CAP + 10) {
+            s.update(&format!("s{i}"), i as u64, vec![b'x']);
+        }
+        assert_eq!(s.map.len(), SESSION_CAP, "store not bounded");
+        assert!(s.touch("s0").is_none(), "oldest session survived");
+        assert!(s.touch(&format!("s{}", SESSION_CAP + 9)).is_some(), "newest session lost");
+    }
+
+    #[test]
+    fn parse_request_session_fields() {
+        let w = parse(r#"{"prompt": "hi", "session_id": "s9"}"#).unwrap();
+        assert_eq!(w.session_id.as_deref(), Some("s9"));
+        assert_eq!(w.parent, None);
+        let w = parse(r#"{"prompt": "hi", "session_id": "s9", "parent": 12}"#).unwrap();
+        assert_eq!(w.parent, Some(12));
+        // anonymous requests parse with no session
+        let w = parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(w.session_id, None);
+        // malformed session fields get structured errors
+        assert!(parse(r#"{"prompt": "x", "session_id": 3}"#).unwrap_err().contains("string"));
+        assert!(parse(r#"{"prompt": "x", "session_id": ""}"#).unwrap_err().contains("non-empty"));
+        assert!(parse(r#"{"prompt": "x", "parent": 1}"#)
+            .unwrap_err()
+            .contains("requires 'session_id'"));
+        let e = parse(r#"{"prompt": "x", "session_id": "s", "parent": -2}"#).unwrap_err();
+        assert!(e.contains("request id"), "{e}");
+        let e = parse(r#"{"prompt": "x", "session_id": "s", "parent": 1.5}"#).unwrap_err();
+        assert!(e.contains("request id"), "{e}");
     }
 
     #[test]

@@ -10,13 +10,26 @@
 //! pages with one blocked GEMV plus a radius fixup (the same Eqn. 2 ball
 //! bound the hierarchical index uses, at page granularity).
 
-use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
+use super::{
+    always_active_into, merge_into, rerank_top_f32, Ctx, Policy, PolicySegment, SelectScratch,
+};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
 use crate::quant::QuantMat;
 
 const PAGE: usize = 128; // 32 BPE tokens ~= 128 bytes
+
+/// Frozen ball-summary pages for the shared-prefix radix cache: only
+/// complete `PAGE`-aligned pages (text-extension-invariant by
+/// construction — fixed-size pagination has no decision window).
+struct ArkSegment {
+    d: usize,
+    starts: Vec<usize>,
+    lens: Vec<usize>,
+    centroids: Vec<f32>,
+    radii: Vec<f32>,
+}
 
 pub struct ArkVale {
     cfg: LycheeConfig,
@@ -132,6 +145,48 @@ impl Policy for ArkVale {
             self.open_start = None;
             self.open_len = 0;
         }
+    }
+
+    /// Freeze the complete `PAGE`-aligned ball summaries within
+    /// `[0, upto)`; the trailing partial page (sealed only by a final
+    /// chunk) is excluded so the adopter's pagination matches a cold
+    /// build of any extending text.
+    fn export_segment(&self, upto: usize) -> Option<PolicySegment> {
+        let d = self.d;
+        let mut k = 0usize;
+        while k < self.num_pages()
+            && self.lens[k] == PAGE
+            && self.starts[k] + self.lens[k] <= upto
+        {
+            k += 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        let seg = ArkSegment {
+            d,
+            starts: self.starts[..k].to_vec(),
+            lens: self.lens[..k].to_vec(),
+            centroids: self.centroids[..k * d].to_vec(),
+            radii: self.radii[..k].to_vec(),
+        };
+        let bytes = seg.centroids.len() * 4 + k * 20 + 32;
+        Some(PolicySegment::new(seg, bytes))
+    }
+
+    fn adopt_segment(&mut self, seg: &PolicySegment) -> bool {
+        let Some(s) = seg.downcast::<ArkSegment>() else { return false };
+        self.d = s.d;
+        self.starts = s.starts.clone();
+        self.lens = s.lens.clone();
+        self.centroids = s.centroids.clone();
+        self.radii = s.radii.clone();
+        // replay (not bulk-rebuild) so the i8 scale chain matches a
+        // cold incremental build byte-for-byte
+        self.centroids_q.replay_rows(&self.centroids, self.d);
+        self.open_start = None;
+        self.open_len = 0;
+        true
     }
 
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {

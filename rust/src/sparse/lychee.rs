@@ -2,11 +2,12 @@
 //! chunking + hierarchical UB-pruned retrieval + lazy updates, glued to
 //! the [`Policy`] trait the engine drives.
 
-use super::{always_active_into, merge_into, Ctx, Policy, SelectScratch};
+use super::{always_active_into, merge_into, Ctx, Policy, PolicySegment, SelectScratch};
 use crate::chunking::Chunker;
 use crate::config::LycheeConfig;
 use crate::index::hierarchy::{HierarchicalIndex, IndexParams};
 use crate::index::reps::Pooling;
+use crate::index::segment::SharedSegment;
 use crate::index::update::TokenBuffer;
 
 pub struct LycheePolicy {
@@ -158,7 +159,15 @@ impl Policy for LycheePolicy {
             scratch.out.dedup();
         }
         let remaining = budget.saturating_sub(scratch.out.len());
-        let idx = self.index.as_ref().expect("select before build");
+        // A request racing ahead of its first build must not kill a
+        // serving worker: degrade to the always-active (sink + recent +
+        // pending) set — the empty retrieval — and count the occurrence.
+        // Grafts rebuild an index on the next on_token, so the gap is
+        // one step at most.
+        let Some(idx) = self.index.as_ref() else {
+            super::note_select_before_build();
+            return;
+        };
         if self.flat {
             idx.select_tokens_flat_into(q, remaining, scratch);
         } else {
@@ -166,6 +175,32 @@ impl Policy for LycheePolicy {
         }
         let SelectScratch { out, tokens, .. } = scratch;
         merge_into(out, tokens, budget);
+    }
+
+    /// Freeze the leaf tier (spans + pooled reps) of the built index up
+    /// to the stability frontier inside `[0, upto)`. The upper tiers are
+    /// rebuilt per adopting sequence by the final `build_pooled`, which
+    /// is exactly what keeps radix-hit builds byte-identical to cold
+    /// ones (the pyramid is a global function of all representatives).
+    fn export_segment(&self, upto: usize) -> Option<PolicySegment> {
+        let idx = self.index.as_ref()?;
+        let seg = SharedSegment::from_index(idx, upto, self.chunker.max_span())?;
+        let bytes = seg.bytes();
+        Some(PolicySegment::new(seg, bytes))
+    }
+
+    /// Adopt a frozen leaf tier as this policy's staged prefix state:
+    /// identical to what a cold chunked build would have staged by the
+    /// same frontier, so the continuing `extend` calls and the final
+    /// clustering land on the same index bit-for-bit.
+    fn adopt_segment(&mut self, seg: &PolicySegment) -> bool {
+        let Some(s) = seg.downcast::<SharedSegment>() else { return false };
+        self.index = None;
+        self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
+        self.staged_spans = s.spans.clone();
+        self.staged_reps = s.reps.clone();
+        self.staged_upto = s.upto;
+        true
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {
@@ -308,6 +343,60 @@ mod tests {
         p.build(&ctx);
         let sel = p.select(&ctx, &rng.normal_vec(8), 300);
         assert!(sel.len() <= 48 && !sel.is_empty());
+    }
+
+    #[test]
+    fn select_before_build_degrades_instead_of_panicking() {
+        // satellite bugfix: a request racing ahead of its first build
+        // must get the bounded always-active fallback, not a panic
+        let mut p = mk(64);
+        let mut rng = Rng::new(9);
+        let (keys, text) = mk_ctx(&mut rng, 400, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let ctx = Ctx { keys: &src, text: &text, n: 400 };
+        let before = crate::sparse::selects_before_build();
+        let q = rng.normal_vec(8);
+        let sel = p.select(&ctx, &q, 400); // no build/extend ever ran
+        assert!(crate::sparse::selects_before_build() > before, "counter did not move");
+        assert!(!sel.is_empty() && sel.len() <= 64);
+        for t in [0, 1, 2, 3, 392, 399] {
+            assert!(sel.contains(&t), "fallback missing always-active {t}");
+        }
+    }
+
+    #[test]
+    fn export_adopt_round_trip_matches_cold_build() {
+        // adopt(export(cold prefix)) + continued extends must produce an
+        // index byte-identical to the cold chunked build
+        let mut rng = Rng::new(17);
+        let n = 520;
+        let (keys, text) = mk_ctx(&mut rng, n, 8);
+        let src = FlatKeys::new(&keys, 8);
+        let mut cold = mk(64);
+        for s in (0..n).step_by(130) {
+            let end = (s + 130).min(n);
+            cold.extend(&Ctx { keys: &src, text: &text, n: end }, s..end);
+        }
+        let adopted_tokens = 320; // page-aligned match depth
+        let seg = cold.export_segment(adopted_tokens).expect("exportable segment");
+        let mut warm = mk(64);
+        assert!(warm.adopt_segment(&seg));
+        // engine behavior after a radix hit: extends resume at the match
+        let mut s = adopted_tokens;
+        while s < n {
+            let end = (s + 97).min(n);
+            warm.extend(&Ctx { keys: &src, text: &text, n: end }, s..end);
+            s = end;
+        }
+        let (ic, iw) = (cold.index().unwrap(), warm.index().unwrap());
+        assert_eq!(ic.chunk_starts, iw.chunk_starts);
+        assert_eq!(ic.chunk_reps, iw.chunk_reps, "rep matrix diverged");
+        assert_eq!(ic.fine_centroids, iw.fine_centroids, "pyramid diverged");
+        for _ in 0..10 {
+            let q = rng.normal_vec(8);
+            let ctx = Ctx { keys: &src, text: &text, n };
+            assert_eq!(cold.select(&ctx, &q, n), warm.select(&ctx, &q, n));
+        }
     }
 
     #[test]

@@ -38,6 +38,57 @@ pub use shadowkv::ShadowKv;
 
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Serving-worker guard counter: number of times a policy's `select` ran
+/// before its first build/extend (a request racing ahead of its index).
+/// The policies degrade to their always-active fallback instead of
+/// panicking; the coordinator surfaces this through the metrics scrape.
+static SELECTS_BEFORE_BUILD: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide select-before-build counter.
+pub fn selects_before_build() -> u64 {
+    SELECTS_BEFORE_BUILD.load(Ordering::Relaxed)
+}
+
+/// Record one select-before-build occurrence (called by policies).
+pub(crate) fn note_select_before_build() {
+    SELECTS_BEFORE_BUILD.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Frozen, policy-specific index state for a sealed prompt prefix,
+/// stored in a radix-cache node and adopted by later sequences sharing
+/// that prefix. The payload is policy-private (each policy downcasts its
+/// own segment type); `bytes` is the payload's approximate footprint so
+/// the prefix cache can budget segments alongside KV pages.
+///
+/// Segments are built from the *stability frontier* (the same
+/// [`crate::chunking::Chunker::max_span`] rule the chunked-prefill
+/// staging uses): only spans/pages whose boundary decision window lies
+/// entirely inside the sealed prefix are frozen, so the frozen state is
+/// invariant under both chunk splits and text extension — which is what
+/// makes a radix-hit build byte-identical to a cold build.
+#[derive(Clone)]
+pub struct PolicySegment {
+    state: std::sync::Arc<dyn std::any::Any + Send + Sync>,
+    bytes: usize,
+}
+
+impl PolicySegment {
+    pub fn new<T: std::any::Any + Send + Sync>(state: T, bytes: usize) -> PolicySegment {
+        PolicySegment { state: std::sync::Arc::new(state), bytes }
+    }
+
+    /// Downcast to the owning policy's segment type.
+    pub fn downcast<T: std::any::Any>(&self) -> Option<&T> {
+        self.state.downcast_ref::<T>()
+    }
+
+    /// Approximate payload footprint (prefix-cache accounting).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
 
 /// Everything a policy may consult: the (layer's) key rows and the raw
 /// byte/token stream (for structure-aware segmentation). `n` is the
@@ -144,6 +195,26 @@ pub trait Policy: Send + Sync {
 
     /// Register the newly generated token at `pos`.
     fn on_token(&mut self, ctx: &Ctx, pos: usize);
+
+    /// Freeze this policy's prefix-stable index state covering (a
+    /// stability-frontier-truncated portion of) token prefix `[0, upto)`
+    /// for the shared-prefix radix cache. Called at `finish_prefill`,
+    /// before any decode-time state exists. Policies without reusable
+    /// prefix structure return `None` (the default) — a later radix hit
+    /// then backfills their index through the normal `extend` path.
+    fn export_segment(&self, _upto: usize) -> Option<PolicySegment> {
+        None
+    }
+
+    /// Seed a freshly constructed policy with a frozen segment adopted
+    /// from the radix cache. On `true`, subsequent `extend` calls begin
+    /// at the segment's staged frontier instead of 0 (amending the
+    /// start-at-0 contract above for adopted sequences); on `false`
+    /// (default, or an incompatible payload) the engine backfills with
+    /// `extend(ctx, 0..adopted)` over the adopted KV pages instead.
+    fn adopt_segment(&mut self, _seg: &PolicySegment) -> bool {
+        false
+    }
 
     /// Auxiliary index memory (Fig. 8). Zero for stateless policies.
     fn index_bytes(&self) -> usize {

@@ -13,7 +13,9 @@
 //! can swap fixed 16-token pages for structure-aware chunks while
 //! keeping the scoring identical (`quest-chunks`).
 
-use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
+use super::{
+    always_active_into, merge_into, rerank_top_f32, Ctx, Policy, PolicySegment, SelectScratch,
+};
 use crate::chunking::Chunker;
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
@@ -45,6 +47,18 @@ pub struct Quest {
     /// (the chunker restarts here — its spans self-synchronize at their
     /// own boundaries).
     staged_upto: usize,
+}
+
+/// Frozen AABB page state for the shared-prefix radix cache (f32 rows
+/// only; quantized mirrors are replayed on adopt so the i8 scale-growth
+/// chain stays byte-identical to a cold incremental build).
+struct QuestSegment {
+    d: usize,
+    upto: usize,
+    starts: Vec<usize>,
+    lens: Vec<usize>,
+    sums: Vec<f32>,
+    diffs: Vec<f32>,
 }
 
 impl Quest {
@@ -242,6 +256,51 @@ impl Policy for Quest {
             }
         }
         merge_into(out, tokens, budget);
+    }
+
+    /// Freeze the AABB pages whose spans lie inside the stability
+    /// frontier of `[0, upto)` (same rule the chunked staging applies).
+    fn export_segment(&self, upto: usize) -> Option<PolicySegment> {
+        let d = self.d;
+        let lookahead = self.chunker.max_span();
+        let mut k = 0usize;
+        let mut next = 0usize;
+        while k < self.num_pages() {
+            let (start, len) = (self.starts[k], self.lens[k]);
+            if start != next || start + len > upto || start + lookahead > upto {
+                break;
+            }
+            next = start + len;
+            k += 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        let seg = QuestSegment {
+            d,
+            upto: next,
+            starts: self.starts[..k].to_vec(),
+            lens: self.lens[..k].to_vec(),
+            sums: self.sums[..k * d].to_vec(),
+            diffs: self.diffs[..k * d].to_vec(),
+        };
+        let bytes = (seg.sums.len() + seg.diffs.len()) * 4 + k * 16 + 32;
+        Some(PolicySegment::new(seg, bytes))
+    }
+
+    fn adopt_segment(&mut self, seg: &PolicySegment) -> bool {
+        let Some(s) = seg.downcast::<QuestSegment>() else { return false };
+        self.d = s.d;
+        self.starts = s.starts.clone();
+        self.lens = s.lens.clone();
+        self.sums = s.sums.clone();
+        self.diffs = s.diffs.clone();
+        self.sums_q.replay_rows(&self.sums, self.d);
+        self.diffs_q.replay_rows(&self.diffs, self.d);
+        self.open_start = None;
+        self.open_len = 0;
+        self.staged_upto = s.upto;
+        true
     }
 
     fn on_token(&mut self, ctx: &Ctx, pos: usize) {

@@ -10,7 +10,9 @@
 //! parallel deviation/start/len arrays — so a query scores all pages
 //! with a single blocked GEMV.
 
-use super::{always_active_into, merge_into, rerank_top_f32, Ctx, Policy, SelectScratch};
+use super::{
+    always_active_into, merge_into, rerank_top_f32, Ctx, Policy, PolicySegment, SelectScratch,
+};
 use crate::config::LycheeConfig;
 use crate::index::reps::KeySource;
 use crate::linalg;
@@ -19,6 +21,19 @@ use crate::quant::QuantMat;
 const PAGE: usize = 32; // 8 BPE tokens ~= 32 bytes
 /// Fraction of pages kept resident as outliers.
 const OUTLIER_FRAC: f64 = 0.02;
+
+/// Frozen landmark pages for the shared-prefix radix cache: complete
+/// `PAGE`-aligned pages only (fixed pagination has no decision window,
+/// so they are invariant under text extension). Outliers are a global
+/// top-k over deviations and are recomputed by the adopter's final
+/// `extend`, exactly like a cold chunked build.
+struct ShadowSegment {
+    d: usize,
+    starts: Vec<usize>,
+    lens: Vec<usize>,
+    means: Vec<f32>,
+    deviations: Vec<f32>,
+}
 
 pub struct ShadowKv {
     cfg: LycheeConfig,
@@ -141,6 +156,45 @@ impl Policy for ShadowKv {
             self.open_start = None;
             self.open_len = 0;
         }
+    }
+
+    fn export_segment(&self, upto: usize) -> Option<PolicySegment> {
+        let d = self.d;
+        let mut k = 0usize;
+        while k < self.num_pages()
+            && self.lens[k] == PAGE
+            && self.starts[k] + self.lens[k] <= upto
+        {
+            k += 1;
+        }
+        if k == 0 {
+            return None;
+        }
+        let seg = ShadowSegment {
+            d,
+            starts: self.starts[..k].to_vec(),
+            lens: self.lens[..k].to_vec(),
+            means: self.means[..k * d].to_vec(),
+            deviations: self.deviations[..k].to_vec(),
+        };
+        let bytes = seg.means.len() * 4 + k * 20 + 32;
+        Some(PolicySegment::new(seg, bytes))
+    }
+
+    fn adopt_segment(&mut self, seg: &PolicySegment) -> bool {
+        let Some(s) = seg.downcast::<ShadowSegment>() else { return false };
+        self.d = s.d;
+        self.starts = s.starts.clone();
+        self.lens = s.lens.clone();
+        self.means = s.means.clone();
+        self.deviations = s.deviations.clone();
+        // replay (not bulk-rebuild) so the i8 scale chain matches a
+        // cold incremental build byte-for-byte
+        self.means_q.replay_rows(&self.means, self.d);
+        self.outliers.clear(); // recomputed by the adopter's final extend
+        self.open_start = None;
+        self.open_len = 0;
+        true
     }
 
     fn select_into(&mut self, _ctx: &Ctx, q: &[f32], pos: usize, scratch: &mut SelectScratch) {

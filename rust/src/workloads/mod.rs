@@ -13,6 +13,7 @@
 
 pub mod longbench;
 pub mod mathcot;
+pub mod multiturn;
 pub mod ruler;
 pub mod structext;
 pub mod textgen;

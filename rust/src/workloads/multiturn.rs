@@ -1,0 +1,174 @@
+//! Multi-turn conversation workload: a shared system prompt + per-user
+//! conversation trees with configurable branch factor and turn lengths,
+//! emitting session-chained requests — the workload that actually
+//! exercises the shared-prefix radix cache.
+//!
+//! Structure: every session path opens with the **same** system prompt
+//! (cross-session sharing — the cache's highest-value prefix), followed
+//! by per-session user turns. With `branch > 1` each session forks
+//! `branch - 1` extra continuations after turn 0, so the fork paths
+//! share the trunk's turn-0 history (within-user tree sharing).
+//!
+//! Turns are emitted round-by-round across all paths (every path's turn
+//! 0, then every turn 1, ...) — the adversarial interleaving for the
+//! radix cache, since other sessions' turns land between a session's
+//! own turns. A driver chains them: keep per-path accumulated text
+//! (prompt + actual replies), snapshot the parent's accumulated text
+//! when a fork's first turn appears, and submit `accumulated + text` as
+//! the engine prompt (or send just `text` with `session_id`/`parent`
+//! through the server wire protocol, which does the same chaining
+//! server-side).
+
+use crate::util::rng::Rng;
+
+/// Generator parameters.
+#[derive(Clone, Debug)]
+pub struct MultiTurnParams {
+    /// Independent user sessions.
+    pub sessions: usize,
+    /// Turns per conversation path (including turn 0).
+    pub turns: usize,
+    /// Conversation-tree branch factor: paths per session sharing the
+    /// turn-0 history (1 = linear conversations).
+    pub branch: usize,
+    /// Bytes of the system prompt shared by every session.
+    pub system_prompt_len: usize,
+    /// Per-turn user text length range (inclusive min, exclusive max).
+    pub turn_len_min: usize,
+    pub turn_len_max: usize,
+    /// Reply budget per turn (`max_new_tokens`).
+    pub reply_tokens: usize,
+}
+
+impl Default for MultiTurnParams {
+    fn default() -> Self {
+        MultiTurnParams {
+            sessions: 8,
+            turns: 3,
+            branch: 1,
+            system_prompt_len: 1024,
+            turn_len_min: 96,
+            turn_len_max: 192,
+            reply_tokens: 8,
+        }
+    }
+}
+
+/// One emitted turn request.
+#[derive(Clone, Debug)]
+pub struct Turn {
+    /// Session path key (`"s3"`, or `"s3.f1"` for a fork).
+    pub session: String,
+    /// Turn index within the path (0-based).
+    pub turn: usize,
+    /// For a fork's first emitted turn (turn 1): the trunk path whose
+    /// accumulated turn-0 history this path continues from.
+    pub fork_of: Option<String>,
+    /// The new text this turn appends (system prompt included in turn 0).
+    pub text: Vec<u8>,
+    pub max_new_tokens: usize,
+}
+
+/// The system prompt every session opens with (deterministic per seed).
+pub fn system_prompt(p: &MultiTurnParams, seed: u64) -> Vec<u8> {
+    super::trace::prompt_text(p.system_prompt_len, seed ^ 0x5157E4)
+}
+
+/// Generate the full request plan, round-ordered across session paths.
+pub fn generate(p: &MultiTurnParams, seed: u64) -> Vec<Turn> {
+    assert!(p.sessions > 0 && p.turns > 0 && p.branch > 0);
+    assert!(p.turn_len_min > 0 && p.turn_len_max > p.turn_len_min);
+    let system = system_prompt(p, seed);
+    let mut rng = Rng::new(seed ^ 0x4A17);
+    // path table: (key, fork_of) — trunks first, then forks per session
+    let mut paths: Vec<(String, Option<String>)> = Vec::new();
+    for s in 0..p.sessions {
+        paths.push((format!("s{s}"), None));
+        for f in 1..p.branch {
+            paths.push((format!("s{s}.f{f}"), Some(format!("s{s}"))));
+        }
+    }
+    let mut out = Vec::new();
+    for turn in 0..p.turns {
+        for (key, fork_of) in &paths {
+            // forks share the trunk's turn 0; they start emitting at 1
+            if turn == 0 && fork_of.is_some() {
+                continue;
+            }
+            let len = p.turn_len_min + rng.range(0, p.turn_len_max - p.turn_len_min);
+            // per-path unique seed so turn texts differ across paths
+            let tseed = seed
+                ^ (turn as u64).wrapping_mul(0x9E37_79B9)
+                ^ (out.len() as u64).wrapping_mul(0x85EB_CA6B);
+            let mut text = Vec::new();
+            if turn == 0 {
+                text.extend_from_slice(&system);
+            }
+            text.extend_from_slice(&super::trace::prompt_text(len, tseed));
+            out.push(Turn {
+                session: key.clone(),
+                turn,
+                fork_of: if turn == 1 { fork_of.clone() } else { None },
+                text,
+                max_new_tokens: p.reply_tokens,
+            });
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shared_system_prompt_and_round_order() {
+        let p = MultiTurnParams { sessions: 3, turns: 2, ..Default::default() };
+        let plan = generate(&p, 5);
+        assert_eq!(plan.len(), 3 * 2);
+        let sys = system_prompt(&p, 5);
+        let turn0: Vec<&Turn> = plan.iter().filter(|t| t.turn == 0).collect();
+        assert_eq!(turn0.len(), 3);
+        for t in &turn0 {
+            assert!(t.text.len() > sys.len());
+            assert_eq!(&t.text[..sys.len()], &sys[..], "system prompt not shared");
+            assert!(t.fork_of.is_none());
+        }
+        // distinct user turns after the shared prefix
+        assert_ne!(turn0[0].text[sys.len()..], turn0[1].text[sys.len()..]);
+        // round ordering: all turn-0 entries precede all turn-1 entries
+        let first_t1 = plan.iter().position(|t| t.turn == 1).unwrap();
+        assert!(plan[..first_t1].iter().all(|t| t.turn == 0));
+        assert!(plan[first_t1..].iter().all(|t| t.turn == 1));
+        // determinism
+        let again = generate(&p, 5);
+        assert_eq!(plan.len(), again.len());
+        for (a, b) in plan.iter().zip(&again) {
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.session, b.session);
+        }
+    }
+
+    #[test]
+    fn branching_forks_share_trunk_turn_zero() {
+        let p = MultiTurnParams { sessions: 2, turns: 3, branch: 3, ..Default::default() };
+        let plan = generate(&p, 9);
+        // 2 trunks at turn 0; 6 paths at turns 1 and 2
+        assert_eq!(plan.iter().filter(|t| t.turn == 0).count(), 2);
+        assert_eq!(plan.iter().filter(|t| t.turn == 1).count(), 6);
+        assert_eq!(plan.iter().filter(|t| t.turn == 2).count(), 6);
+        for t in plan.iter().filter(|t| t.turn == 1) {
+            if t.session.contains(".f") {
+                let trunk = t.fork_of.as_ref().expect("fork without parent");
+                assert_eq!(trunk, &t.session[..t.session.find('.').unwrap()]);
+            } else {
+                assert!(t.fork_of.is_none());
+            }
+        }
+        // turn lengths respect bounds (turn 0 adds the system prompt)
+        for t in &plan {
+            let body = if t.turn == 0 { t.text.len() - p.system_prompt_len } else { t.text.len() };
+            assert!(body >= p.turn_len_min && body < p.turn_len_max);
+        }
+    }
+}

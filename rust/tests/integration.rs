@@ -190,6 +190,17 @@ fn chunked_prefill_serving_stack_without_artifacts() {
     // 700-token prompt at 128-token chunks = 6 chunks
     assert_eq!(m.get("prefill_chunks_executed").as_usize(), Some(6));
     assert_eq!(m.get("completed").as_usize(), Some(1));
+
+    // anonymous content-based radix reuse: the same prompt again (no
+    // session fields) matches the sealed prefix — most chunks skipped
+    let res2 = client.generate(&prompt, 4, "lychee").unwrap();
+    assert_eq!(res2.tokens, 4);
+    std::thread::sleep(std::time::Duration::from_millis(100));
+    let m = client.metrics().unwrap();
+    assert_eq!(m.get("prefix_hits").as_usize(), Some(1), "{m:?}");
+    // 640 of 700 tokens adopted -> one chunk covers the remainder
+    assert_eq!(m.get("prefix_tokens_reused").as_usize(), Some(640));
+    assert_eq!(m.get("prefill_chunks_executed").as_usize(), Some(7));
     server.stop();
     handle.shutdown();
     join.join().unwrap();
