@@ -1,0 +1,41 @@
+//! `lychee-lint` CLI — walks `rust/src` (or the paths given as
+//! arguments) and exits non-zero on any project-rule violation.
+//! See `lychee::lint` for the rule set and `rust/README.md`
+//! § Correctness plane for the conventions it enforces.
+#![forbid(unsafe_code)]
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let roots: Vec<PathBuf> = if args.is_empty() {
+        vec![PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/src"))]
+    } else {
+        args.iter().map(PathBuf::from).collect()
+    };
+    let mut files = 0usize;
+    let mut violations = Vec::new();
+    for root in &roots {
+        match lychee::lint::check_tree(root) {
+            Ok(report) => {
+                files += report.files;
+                violations.extend(report.violations);
+            }
+            Err(e) => {
+                eprintln!("lychee-lint: cannot walk {}: {e}", root.display());
+                return ExitCode::from(2);
+            }
+        }
+    }
+    for v in &violations {
+        println!("{v}");
+    }
+    if violations.is_empty() {
+        eprintln!("lychee-lint: {files} files clean");
+        ExitCode::SUCCESS
+    } else {
+        eprintln!("lychee-lint: {} violation(s) across {files} files", violations.len());
+        ExitCode::FAILURE
+    }
+}

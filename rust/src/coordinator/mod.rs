@@ -27,6 +27,7 @@
 
 use crate::config::Config;
 use crate::engine::{Engine, EngineCore, PrefillProgress, PrefillState, Sampling, Sequence};
+use crate::util::lock_recover;
 use crate::util::stats::LogHistogram;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -253,7 +254,7 @@ where
     {
         // record the configured precisions once (the scrape exposes them
         // so operators can tell what a pool gauge is denominated in)
-        let mut m = metrics.lock().unwrap();
+        let mut m = lock_recover(&metrics);
         m.kv_precision = cfg.kv.precision.name().to_string();
         m.rep_precision = cfg.lychee.rep_precision.name().to_string();
     }
@@ -273,8 +274,7 @@ where
                 }
             };
             Coordinator { engine, cfg, rx, metrics: m2 }.run();
-        })
-        .expect("spawn coordinator");
+        })?;
     match ready_rx.recv() {
         Ok(Ok(())) => Ok((Handle { tx }, metrics, join)),
         Ok(Err(e)) => anyhow::bail!("engine init failed: {e}"),
@@ -320,14 +320,14 @@ impl<E: EngineCore> Coordinator<E> {
         };
         match err {
             Some(msg) => {
-                self.metrics.lock().unwrap().rejected += 1;
+                lock_recover(&self.metrics).rejected += 1;
                 let _ = tx.send(Event::Error(msg));
             }
             None => {
                 // clamp to the configured per-request output cap so one
                 // request cannot monopolize the batch (or the arena)
                 req.max_new_tokens = req.max_new_tokens.min(self.cfg.serving.max_new_tokens);
-                self.metrics.lock().unwrap().requests += 1;
+                lock_recover(&self.metrics).requests += 1;
                 pending.push_back(QueuedReq {
                     req,
                     tx,
@@ -470,7 +470,7 @@ impl<E: EngineCore> Coordinator<E> {
         // back of the queue: forward progress for the waiting head is the
         // point of preempting; the victim re-enters FCFS behind it
         pending.push_back(requeued);
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_recover(&self.metrics);
         m.preemptions += 1;
         drop(m);
         self.refresh_pool_gauge();
@@ -480,7 +480,7 @@ impl<E: EngineCore> Coordinator<E> {
     fn refresh_pool_gauge(&self) {
         let st = self.engine.pool().stats();
         let prefix_evictions = self.engine.prefix_cache().map_or(0, |c| c.stats().evictions);
-        let mut m = self.metrics.lock().unwrap();
+        let mut m = lock_recover(&self.metrics);
         m.kv_bytes_in_use = st.bytes_in_use as u64;
         m.kv_bytes_shared = st.bytes_shared as u64;
         m.kv_bytes_free = st.bytes_free as u64;
@@ -538,7 +538,7 @@ impl<E: EngineCore> Coordinator<E> {
                             }
                         }
                     }
-                    self.metrics.lock().unwrap().admission_waits += 1;
+                    lock_recover(&self.metrics).admission_waits += 1;
                     wait_ticks += 1;
                     let threshold = self.cfg.serving.preempt_after_waits;
                     if threshold > 0
@@ -550,8 +550,13 @@ impl<E: EngineCore> Coordinator<E> {
                 }
                 Admission::Reject(need) => {
                     wait_ticks = 0;
-                    let q = pending.pop_front().unwrap();
-                    self.metrics.lock().unwrap().rejected += 1;
+                    // admission only returns Reject for a head-of-queue
+                    // request; a missing head would be a scheduler bug —
+                    // skip the tick instead of panicking the server
+                    let Some(q) = pending.pop_front() else {
+                        continue;
+                    };
+                    lock_recover(&self.metrics).rejected += 1;
                     let _ = q.tx.send(Event::Error(format!(
                         "request {} cannot fit the kv pool: needs {} bytes, pool capacity {} bytes",
                         q.req.id,
@@ -561,7 +566,10 @@ impl<E: EngineCore> Coordinator<E> {
                 }
                 Admission::Admit(need) => {
                     wait_ticks = 0;
-                    let q = pending.pop_front().unwrap();
+                    // same invariant as the Reject arm above
+                    let Some(q) = pending.pop_front() else {
+                        continue;
+                    };
                     match self.engine.begin_prefill(next_seq_id, &q.req.prompt, &q.req.policy) {
                         Ok(st) => {
                             next_seq_id += 1;
@@ -572,7 +580,7 @@ impl<E: EngineCore> Coordinator<E> {
                             let adopted = st.kv.shared_bytes();
                             let reused = st.prefix_tokens_reused();
                             if reused > 0 {
-                                let mut m = self.metrics.lock().unwrap();
+                                let mut m = lock_recover(&self.metrics);
                                 m.prefix_hits += 1;
                                 m.prefix_tokens_reused += reused as u64;
                             }
@@ -606,12 +614,16 @@ impl<E: EngineCore> Coordinator<E> {
             if let Some(job) = prefilling.front_mut() {
                 match self.engine.prefill_chunk(&mut job.st) {
                     Ok(progress) => {
-                        self.metrics.lock().unwrap().prefill_chunks_executed += 1;
+                        lock_recover(&self.metrics).prefill_chunks_executed += 1;
                         // the chunk just leased pages; keep the gauge live
                         // for the whole (possibly long) prefill window
                         self.refresh_pool_gauge();
                         if progress == PrefillProgress::Ready {
-                            let job = prefilling.pop_front().unwrap();
+                            // front_mut() yielded this job just above;
+                            // nothing drained the queue since
+                            let Some(job) = prefilling.pop_front() else {
+                                continue;
+                            };
                             match self.engine.finish_prefill(job.st) {
                                 Ok(seq) => {
                                     // seal-back moved the prompt's full
@@ -645,7 +657,10 @@ impl<E: EngineCore> Coordinator<E> {
                         }
                     }
                     Err(e) => {
-                        let job = prefilling.pop_front().unwrap();
+                        // same invariant as the Ready branch above
+                        let Some(job) = prefilling.pop_front() else {
+                            continue;
+                        };
                         reserved_total = reserved_total.saturating_sub(job.reserved_bytes);
                         let _ = job.tx.send(Event::Error(format!("prefill: {e}")));
                         self.refresh_pool_gauge();
@@ -653,8 +668,7 @@ impl<E: EngineCore> Coordinator<E> {
                 }
             }
 
-            self.metrics.lock().unwrap().queue_depth =
-                (pending.len() + prefilling.len()) as u64;
+            lock_recover(&self.metrics).queue_depth = (pending.len() + prefilling.len()) as u64;
 
             if running.is_empty() {
                 if pending.is_empty() && prefilling.is_empty() {
@@ -702,7 +716,7 @@ impl<E: EngineCore> Coordinator<E> {
                 }
                 let _ = r.tx.send(Event::Token(tok));
                 {
-                    let mut m = self.metrics.lock().unwrap();
+                    let mut m = lock_recover(&self.metrics);
                     m.tokens_out += 1;
                 }
                 let produced = r.carried + r.seq.generated.len();
@@ -717,7 +731,7 @@ impl<E: EngineCore> Coordinator<E> {
                         .unwrap_or(0.0);
                     let tpot = if n > 1 { decode_ms / (n - 1) as f64 } else { decode_ms };
                     {
-                        let mut m = self.metrics.lock().unwrap();
+                        let mut m = lock_recover(&self.metrics);
                         m.completed += 1;
                         m.ttft_us.record(ttft * 1e3);
                         m.tpot_us.record(tpot * 1e3);

@@ -413,8 +413,11 @@ impl Engine {
 
     fn layer_lit(&self, l: usize, t: &str) -> &Literal {
         // canonical order: 8 tensors per layer, then ln_f, emb
-        let idx = l * 8 + crate::model::LAYER_TENSORS.iter().position(|&x| x == t).unwrap();
-        &self.wlits[idx]
+        let pos = crate::model::LAYER_TENSORS
+            .iter()
+            .position(|&x| x == t)
+            .unwrap_or_else(|| panic!("unknown layer tensor {t}"));
+        &self.wlits[l * 8 + pos]
     }
 
     /// Per-layer policy roster: the first `full_attn_layers` keep full
@@ -591,7 +594,7 @@ impl Engine {
             });
 
             // ---- gather + attention -------------------------------------
-            let max_active = selections.iter().map(|s| s.len()).max().unwrap();
+            let max_active = selections.iter().map(|s| s.len()).max().unwrap_or(0);
             let m = self.rt.attn_bucket(b, max_active)?;
             let t2 = std::time::Instant::now();
             let row = d;

@@ -31,6 +31,7 @@ pub mod prefix;
 pub use prefix::{PrefixCache, PrefixMatch, PrefixPage, PrefixStats};
 
 use crate::quant::{self, Precision};
+use crate::util::lock_recover;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -254,7 +255,7 @@ impl PagePool {
     fn acquire(&self, row_dim: usize, precision: Precision) -> Page {
         let bytes = Self::page_bytes_at(row_dim, precision);
         let recycled = {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock_recover(&self.inner);
             let buf = inner.free.get_mut(&(row_dim, precision)).and_then(|v| v.pop());
             if buf.is_some() {
                 inner.bytes_free -= bytes;
@@ -295,6 +296,9 @@ impl PagePool {
                 },
             },
         };
+        // Relaxed: lease ids only need process-wide uniqueness (fetch_add
+        // is atomic regardless of ordering); no other memory is published
+        // through this counter.
         Page { data, lease: self.next_lease.fetch_add(1, Ordering::Relaxed), used: 0 }
     }
 
@@ -305,7 +309,7 @@ impl PagePool {
     /// its peak memory forever.
     fn release(&self, page: Page, row_dim: usize, precision: Precision) {
         let bytes = Self::page_bytes_at(row_dim, precision);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         inner.bytes_in_use -= bytes;
         inner.pages_in_use -= 1;
         self.park(&mut inner, page.data, row_dim, precision);
@@ -343,7 +347,7 @@ impl PagePool {
     ) -> Arc<SharedPage> {
         let bytes = Self::page_bytes_at(row_dim, precision);
         {
-            let mut inner = pool.inner.lock().unwrap();
+            let mut inner = lock_recover(&pool.inner);
             inner.bytes_in_use -= bytes;
             inner.pages_in_use -= 1;
             inner.bytes_shared += bytes;
@@ -357,19 +361,19 @@ impl PagePool {
     /// parked for recycling (subject to the capacity trim).
     fn release_shared(&self, data: PageBuf, row_dim: usize, precision: Precision) {
         let bytes = Self::page_bytes_at(row_dim, precision);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         inner.bytes_shared -= bytes;
         inner.pages_shared -= 1;
         self.park(&mut inner, data, row_dim, precision);
     }
 
     pub fn bytes_in_use(&self) -> usize {
-        self.inner.lock().unwrap().bytes_in_use
+        lock_recover(&self.inner).bytes_in_use
     }
 
     /// Bytes held by sealed shared pages (counted once).
     pub fn bytes_shared(&self) -> usize {
-        self.inner.lock().unwrap().bytes_shared
+        lock_recover(&self.inner).bytes_shared
     }
 
     /// Admission-control capacity (`usize::MAX` when unbounded).
@@ -390,13 +394,13 @@ impl PagePool {
         if !self.is_bounded() {
             return true;
         }
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         inner.bytes_in_use.saturating_add(inner.bytes_shared).saturating_add(extra)
             <= self.capacity_bytes
     }
 
     pub fn stats(&self) -> PoolStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         PoolStats {
             bytes_in_use: inner.bytes_in_use,
             bytes_shared: inner.bytes_shared,
@@ -443,7 +447,7 @@ impl LayerStore {
         if self.pages.last().map_or(true, |p| p.used() == PAGE_SIZE) {
             self.pages.push(PageSlot::Owned(pool.acquire(self.row_dim, self.precision)));
         }
-        let PageSlot::Owned(page) = self.pages.last_mut().unwrap() else {
+        let Some(PageSlot::Owned(page)) = self.pages.last_mut() else {
             unreachable!("append into a sealed shared page");
         };
         let rd = self.row_dim;
@@ -1204,6 +1208,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // thread-heavy hammer; the TSan CI lane covers it
     fn arena_concurrent_append_gather_recycle() {
         // Hammer one shared arena from several concurrent sequences:
         // every gathered row must carry its own sequence's fill pattern —

@@ -28,6 +28,7 @@
 
 use super::{SharedPage, PAGE_SIZE};
 use crate::sparse::PolicySegment;
+use crate::util::lock_recover;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
@@ -176,7 +177,7 @@ impl PrefixCache {
         if !self.enabled || max_pages == 0 || prompt.len() < PAGE_SIZE {
             return None;
         }
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_recover(&self.inner);
         let PrefixInner { root, tick, hits, misses, tokens_reused_total, .. } = &mut *guard;
         let mut node = root;
         let mut pages = Vec::new();
@@ -186,7 +187,10 @@ impl PrefixCache {
             let Some(child) = node.children.get_mut(key) else { break };
             *tick += 1;
             child.last_used = *tick;
-            pages.push(child.page.as_ref().expect("non-root node without a page").clone_refs());
+            // non-root nodes always carry a page; treat a malformed node
+            // as the end of the match rather than panicking the server
+            let Some(page) = child.page.as_ref() else { break };
+            pages.push(page.clone_refs());
             node = child;
             depth += 1;
         }
@@ -210,7 +214,7 @@ impl PrefixCache {
         if !self.enabled || max_pages == 0 || prompt.len() < PAGE_SIZE {
             return 0;
         }
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_recover(&self.inner);
         let PrefixInner { root, tick, .. } = &mut *guard;
         let mut node = root;
         let mut depth = 0usize;
@@ -242,7 +246,7 @@ impl PrefixCache {
             return;
         }
         assert_eq!(prompt_prefix.len(), pages.len() * PAGE_SIZE, "seal at page granularity");
-        let mut guard = self.inner.lock().unwrap();
+        let mut guard = lock_recover(&self.inner);
         {
             let PrefixInner { root, tick, bytes, nodes, insertions, .. } = &mut *guard;
             let mut node = root;
@@ -286,7 +290,7 @@ impl PrefixCache {
         if !self.enabled || want == 0 {
             return 0;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         let before = inner.bytes;
         let target = inner.bytes.saturating_sub(want);
         Self::evict_locked(&mut inner, target, usize::MAX);
@@ -298,7 +302,7 @@ impl PrefixCache {
         if !self.enabled {
             return;
         }
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock_recover(&self.inner);
         Self::evict_locked(&mut inner, 0, usize::MAX);
     }
 
@@ -311,12 +315,23 @@ impl PrefixCache {
             let mut best: Option<(u64, Vec<Box<[u8]>>)> = None;
             Self::find_lru(&inner.root, &mut path, &mut best);
             let Some((_, path)) = best else { break };
-            // walk to the parent of the victim and remove it
+            let Some((last, parents)) = path.split_last() else { break };
+            // walk to the parent of the victim and remove it; a stale
+            // path (impossible while the lock is held, but cheap to
+            // guard) ends the eviction sweep instead of panicking
             let mut node = &mut inner.root;
-            for key in &path[..path.len() - 1] {
-                node = node.children.get_mut(key).unwrap();
+            let mut missing = false;
+            for key in parents {
+                let Some(next) = node.children.get_mut(key) else {
+                    missing = true;
+                    break;
+                };
+                node = next;
             }
-            let victim = node.children.remove(path.last().unwrap()).unwrap();
+            if missing {
+                break;
+            }
+            let Some(victim) = node.children.remove(last) else { break };
             inner.bytes -= victim.bytes;
             inner.nodes -= 1;
             inner.evictions += 1;
@@ -350,7 +365,7 @@ impl PrefixCache {
     }
 
     pub fn stats(&self) -> PrefixStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock_recover(&self.inner);
         PrefixStats {
             nodes: inner.nodes,
             bytes: inner.bytes,
@@ -554,6 +569,7 @@ mod tests {
     /// arena accounting must be exact: no private bytes leaked, shared
     /// bytes equal to what the cache still holds, and zero after clear.
     #[test]
+    #[cfg_attr(miri, ignore)] // thread-heavy hammer; the TSan CI lane covers it
     fn cow_hammer_concurrent_forks_and_eviction() {
         let pool = PagePool::unbounded();
         let cache = PrefixCache::with_capacity_bytes(64 * 1024 * 1024);

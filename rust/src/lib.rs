@@ -20,6 +20,12 @@
 //! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for the
 //! reproduced tables/figures.
 
+// Correctness plane (see README § Correctness plane): every unsafe
+// operation needs its own `unsafe {}` block even inside `unsafe fn`, so
+// each block can carry a site-specific `// SAFETY:` justification that
+// `lychee-lint` verifies.
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod attention;
 pub mod chunking;
 pub mod cli;
@@ -30,6 +36,7 @@ pub mod eval;
 pub mod index;
 pub mod kvcache;
 pub mod linalg;
+pub mod lint;
 pub mod model;
 pub mod quant;
 pub mod runtime;

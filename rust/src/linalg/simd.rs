@@ -41,6 +41,12 @@ pub fn backend() -> Backend {
 }
 
 fn detect() -> Backend {
+    // Miri interprets MIR and cannot execute vendor intrinsics; the CI
+    // miri lane relies on every kernel routing through the scalar
+    // reference implementations.
+    if cfg!(miri) {
+        return Backend::Scalar;
+    }
     #[cfg(target_arch = "x86_64")]
     {
         if std::arch::is_x86_feature_detected!("avx2")
@@ -193,76 +199,102 @@ mod avx2 {
     use std::arch::x86_64::*;
 
     /// Horizontal sum of an 8-lane f32 register.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available (register-only ops; no
+    /// memory precondition).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn hsum256(v: __m256) -> f32 {
-        let hi = _mm256_extractf128_ps(v, 1);
-        let lo = _mm256_castps256_ps128(v);
-        let s4 = _mm_add_ps(hi, lo);
-        let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
-        let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0x55));
-        _mm_cvtss_f32(s1)
+        // SAFETY: register-only shuffle/add intrinsics; the caller's
+        // contract guarantees the AVX2 feature. The block is redundant on
+        // toolchains where value intrinsics are safe inside
+        // target_feature fns, hence the allow.
+        #[allow(unused_unsafe)]
+        unsafe {
+            let hi = _mm256_extractf128_ps(v, 1);
+            let lo = _mm256_castps256_ps128(v);
+            let s4 = _mm_add_ps(hi, lo);
+            let s2 = _mm_add_ps(s4, _mm_movehl_ps(s4, s4));
+            let s1 = _mm_add_ss(s2, _mm_shuffle_ps(s2, s2, 0x55));
+            _mm_cvtss_f32(s1)
+        }
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`.
+    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`
+    /// (the pointer loads below read up to `a.len()` elements from both).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
         let n = a.len();
         let pa = a.as_ptr();
         let pb = b.as_ptr();
-        let mut acc0 = _mm256_setzero_ps();
-        let mut acc1 = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 16 <= n {
-            acc0 = _mm256_fmadd_ps(
-                _mm256_loadu_ps(pa.add(i)),
-                _mm256_loadu_ps(pb.add(i)),
-                acc0,
-            );
-            acc1 = _mm256_fmadd_ps(
-                _mm256_loadu_ps(pa.add(i + 8)),
-                _mm256_loadu_ps(pb.add(i + 8)),
-                acc1,
-            );
-            i += 16;
+        // SAFETY: every `pa.add(..)`/`pb.add(..)` below is bounded by the
+        // loop conditions (`i + 16 <= n`, `i + 8 <= n`, `i < n`), so all
+        // loads stay inside the two `n`-element slices; the caller's
+        // contract supplies the AVX2+FMA feature for the intrinsics.
+        unsafe {
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 16 <= n {
+                acc0 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(pa.add(i)),
+                    _mm256_loadu_ps(pb.add(i)),
+                    acc0,
+                );
+                acc1 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(pa.add(i + 8)),
+                    _mm256_loadu_ps(pb.add(i + 8)),
+                    acc1,
+                );
+                i += 16;
+            }
+            if i + 8 <= n {
+                acc0 = _mm256_fmadd_ps(
+                    _mm256_loadu_ps(pa.add(i)),
+                    _mm256_loadu_ps(pb.add(i)),
+                    acc0,
+                );
+                i += 8;
+            }
+            let mut s = hsum256(_mm256_add_ps(acc0, acc1));
+            while i < n {
+                s += *pa.add(i) * *pb.add(i);
+                i += 1;
+            }
+            s
         }
-        if i + 8 <= n {
-            acc0 = _mm256_fmadd_ps(
-                _mm256_loadu_ps(pa.add(i)),
-                _mm256_loadu_ps(pb.add(i)),
-                acc0,
-            );
-            i += 8;
-        }
-        let mut s = hsum256(_mm256_add_ps(acc0, acc1));
-        while i < n {
-            s += *pa.add(i) * *pb.add(i);
-            i += 1;
-        }
-        s
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`.
+    /// Caller must ensure AVX2+FMA are available and `a.len() == b.len()`
+    /// (the pointer loads below read up to `a.len()` elements from both).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dist_sq(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
         let n = a.len();
         let pa = a.as_ptr();
         let pb = b.as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
-            acc = _mm256_fmadd_ps(d, d, acc);
-            i += 8;
+        // SAFETY: loads at `i` are guarded by `i + 8 <= n` (vector) and
+        // `i < n` (tail), so they stay inside the `n`-element slices; the
+        // caller's contract supplies AVX2+FMA.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let d = _mm256_sub_ps(_mm256_loadu_ps(pa.add(i)), _mm256_loadu_ps(pb.add(i)));
+                acc = _mm256_fmadd_ps(d, d, acc);
+                i += 8;
+            }
+            let mut s = hsum256(acc);
+            while i < n {
+                let d = *pa.add(i) - *pb.add(i);
+                s += d * d;
+                i += 1;
+            }
+            s
         }
-        let mut s = hsum256(acc);
-        while i < n {
-            let d = *pa.add(i) - *pb.add(i);
-            s += d * d;
-            i += 1;
-        }
-        s
     }
 
     /// Blocked GEMV: 4 rows share each query load (the query stays in
@@ -270,81 +302,106 @@ mod avx2 {
     ///
     /// # Safety
     /// Caller must ensure AVX2+FMA are available, `q.len() == d` and
-    /// `mat.len() == out.len() * d`.
+    /// `mat.len() == out.len() * d` (row pointers are formed as
+    /// `mat + r*d` and read `d` elements each).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn matvec(mat: &[f32], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(mat.len(), out.len() * d);
         let rows = out.len();
         let pq = q.as_ptr();
         let mut r = 0usize;
-        while r + 4 <= rows {
-            let p0 = mat.as_ptr().add(r * d);
-            let p1 = mat.as_ptr().add((r + 1) * d);
-            let p2 = mat.as_ptr().add((r + 2) * d);
-            let p3 = mat.as_ptr().add((r + 3) * d);
-            let mut a0 = _mm256_setzero_ps();
-            let mut a1 = _mm256_setzero_ps();
-            let mut a2 = _mm256_setzero_ps();
-            let mut a3 = _mm256_setzero_ps();
-            let mut j = 0usize;
-            while j + 8 <= d {
-                let qv = _mm256_loadu_ps(pq.add(j));
-                a0 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(j)), qv, a0);
-                a1 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(j)), qv, a1);
-                a2 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(j)), qv, a2);
-                a3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(j)), qv, a3);
-                j += 8;
+        // SAFETY: `r + 4 <= rows` keeps every row base `mat + (r+k)*d`
+        // inside `mat` (whose length is `rows * d` per the contract);
+        // inner loads at `j` are guarded by `j + 8 <= d` / `j < d`, so
+        // each row stream and the query (`q.len() == d`) stay in bounds.
+        // The tail call to `dot` passes equal-length subslices. The
+        // caller's contract supplies AVX2+FMA.
+        unsafe {
+            while r + 4 <= rows {
+                let p0 = mat.as_ptr().add(r * d);
+                let p1 = mat.as_ptr().add((r + 1) * d);
+                let p2 = mat.as_ptr().add((r + 2) * d);
+                let p3 = mat.as_ptr().add((r + 3) * d);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                let mut j = 0usize;
+                while j + 8 <= d {
+                    let qv = _mm256_loadu_ps(pq.add(j));
+                    a0 = _mm256_fmadd_ps(_mm256_loadu_ps(p0.add(j)), qv, a0);
+                    a1 = _mm256_fmadd_ps(_mm256_loadu_ps(p1.add(j)), qv, a1);
+                    a2 = _mm256_fmadd_ps(_mm256_loadu_ps(p2.add(j)), qv, a2);
+                    a3 = _mm256_fmadd_ps(_mm256_loadu_ps(p3.add(j)), qv, a3);
+                    j += 8;
+                }
+                let mut s0 = hsum256(a0);
+                let mut s1 = hsum256(a1);
+                let mut s2 = hsum256(a2);
+                let mut s3 = hsum256(a3);
+                while j < d {
+                    let qj = *pq.add(j);
+                    s0 += *p0.add(j) * qj;
+                    s1 += *p1.add(j) * qj;
+                    s2 += *p2.add(j) * qj;
+                    s3 += *p3.add(j) * qj;
+                    j += 1;
+                }
+                out[r] = s0;
+                out[r + 1] = s1;
+                out[r + 2] = s2;
+                out[r + 3] = s3;
+                r += 4;
             }
-            let mut s0 = hsum256(a0);
-            let mut s1 = hsum256(a1);
-            let mut s2 = hsum256(a2);
-            let mut s3 = hsum256(a3);
-            while j < d {
-                let qj = *pq.add(j);
-                s0 += *p0.add(j) * qj;
-                s1 += *p1.add(j) * qj;
-                s2 += *p2.add(j) * qj;
-                s3 += *p3.add(j) * qj;
-                j += 1;
+            while r < rows {
+                out[r] = dot(&mat[r * d..(r + 1) * d], q);
+                r += 1;
             }
-            out[r] = s0;
-            out[r + 1] = s1;
-            out[r + 2] = s2;
-            out[r + 3] = s3;
-            r += 4;
-        }
-        while r < rows {
-            out[r] = dot(&mat[r * d..(r + 1) * d], q);
-            r += 1;
         }
     }
 
     // ---- widening kernels: f16 bits via F16C ---------------------------
 
     /// Load 8 half values and widen to a f32 register.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA+F16C and that `p` is valid for reads
+    /// of 8 `u16` (the load reads a full 128-bit lane).
     #[target_feature(enable = "avx2,fma,f16c")]
     unsafe fn load8_f16(p: *const u16) -> __m256 {
-        _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i))
+        // SAFETY: the caller's contract makes `p..p+8` readable; the
+        // unaligned load has no alignment requirement.
+        unsafe { _mm256_cvtph_ps(_mm_loadu_si128(p as *const __m128i)) }
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA+F16C and `a.len() == b.len()`.
+    /// Caller must ensure AVX2+FMA+F16C and `a.len() == b.len()` (loads
+    /// read up to `a.len()` elements from both slices).
     #[target_feature(enable = "avx2,fma,f16c")]
     pub unsafe fn dot_f16(a: &[u16], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
         let n = a.len();
         let pa = a.as_ptr();
         let pb = b.as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            acc = _mm256_fmadd_ps(load8_f16(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc);
-            i += 8;
+        // SAFETY: `i + 8 <= n` bounds each 8-wide load (satisfying
+        // `load8_f16`'s 8-element precondition) and `i < n` bounds the
+        // tail reads; both slices hold `n` elements per the contract,
+        // which also supplies AVX2+FMA+F16C.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                acc = _mm256_fmadd_ps(load8_f16(pa.add(i)), _mm256_loadu_ps(pb.add(i)), acc);
+                i += 8;
+            }
+            let mut s = hsum256(acc);
+            while i < n {
+                s += crate::quant::f16_to_f32(*pa.add(i)) * *pb.add(i);
+                i += 1;
+            }
+            s
         }
-        let mut s = hsum256(acc);
-        while i < n {
-            s += crate::quant::f16_to_f32(*pa.add(i)) * *pb.add(i);
-            i += 1;
-        }
-        s
     }
 
     /// Blocked widening GEMV over half-bit rows (4 rows share each query
@@ -352,63 +409,82 @@ mod avx2 {
     ///
     /// # Safety
     /// Caller must ensure AVX2+FMA+F16C, `q.len() == d` and
-    /// `mat.len() == out.len() * d`.
+    /// `mat.len() == out.len() * d` (row pointers are formed as
+    /// `mat + r*d` and read `d` elements each).
     #[target_feature(enable = "avx2,fma,f16c")]
     pub unsafe fn matvec_f16(mat: &[u16], d: usize, q: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(mat.len(), out.len() * d);
         let rows = out.len();
         let pq = q.as_ptr();
         let mut r = 0usize;
-        while r + 4 <= rows {
-            let p0 = mat.as_ptr().add(r * d);
-            let p1 = mat.as_ptr().add((r + 1) * d);
-            let p2 = mat.as_ptr().add((r + 2) * d);
-            let p3 = mat.as_ptr().add((r + 3) * d);
-            let mut a0 = _mm256_setzero_ps();
-            let mut a1 = _mm256_setzero_ps();
-            let mut a2 = _mm256_setzero_ps();
-            let mut a3 = _mm256_setzero_ps();
-            let mut j = 0usize;
-            while j + 8 <= d {
-                let qv = _mm256_loadu_ps(pq.add(j));
-                a0 = _mm256_fmadd_ps(load8_f16(p0.add(j)), qv, a0);
-                a1 = _mm256_fmadd_ps(load8_f16(p1.add(j)), qv, a1);
-                a2 = _mm256_fmadd_ps(load8_f16(p2.add(j)), qv, a2);
-                a3 = _mm256_fmadd_ps(load8_f16(p3.add(j)), qv, a3);
-                j += 8;
+        // SAFETY: same bound argument as [`matvec`]: `r + 4 <= rows`
+        // keeps the four row bases inside `mat` (`rows * d` halves) and
+        // `j + 8 <= d` / `j < d` keep every row/query access in bounds
+        // (8-wide loads satisfy `load8_f16`'s precondition); the tail
+        // call passes equal-length subslices. The caller's contract
+        // supplies AVX2+FMA+F16C.
+        unsafe {
+            while r + 4 <= rows {
+                let p0 = mat.as_ptr().add(r * d);
+                let p1 = mat.as_ptr().add((r + 1) * d);
+                let p2 = mat.as_ptr().add((r + 2) * d);
+                let p3 = mat.as_ptr().add((r + 3) * d);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                let mut j = 0usize;
+                while j + 8 <= d {
+                    let qv = _mm256_loadu_ps(pq.add(j));
+                    a0 = _mm256_fmadd_ps(load8_f16(p0.add(j)), qv, a0);
+                    a1 = _mm256_fmadd_ps(load8_f16(p1.add(j)), qv, a1);
+                    a2 = _mm256_fmadd_ps(load8_f16(p2.add(j)), qv, a2);
+                    a3 = _mm256_fmadd_ps(load8_f16(p3.add(j)), qv, a3);
+                    j += 8;
+                }
+                let mut s0 = hsum256(a0);
+                let mut s1 = hsum256(a1);
+                let mut s2 = hsum256(a2);
+                let mut s3 = hsum256(a3);
+                while j < d {
+                    let qj = *pq.add(j);
+                    s0 += crate::quant::f16_to_f32(*p0.add(j)) * qj;
+                    s1 += crate::quant::f16_to_f32(*p1.add(j)) * qj;
+                    s2 += crate::quant::f16_to_f32(*p2.add(j)) * qj;
+                    s3 += crate::quant::f16_to_f32(*p3.add(j)) * qj;
+                    j += 1;
+                }
+                out[r] = s0;
+                out[r + 1] = s1;
+                out[r + 2] = s2;
+                out[r + 3] = s3;
+                r += 4;
             }
-            let mut s0 = hsum256(a0);
-            let mut s1 = hsum256(a1);
-            let mut s2 = hsum256(a2);
-            let mut s3 = hsum256(a3);
-            while j < d {
-                let qj = *pq.add(j);
-                s0 += crate::quant::f16_to_f32(*p0.add(j)) * qj;
-                s1 += crate::quant::f16_to_f32(*p1.add(j)) * qj;
-                s2 += crate::quant::f16_to_f32(*p2.add(j)) * qj;
-                s3 += crate::quant::f16_to_f32(*p3.add(j)) * qj;
-                j += 1;
+            while r < rows {
+                out[r] = dot_f16(&mat[r * d..(r + 1) * d], q);
+                r += 1;
             }
-            out[r] = s0;
-            out[r + 1] = s1;
-            out[r + 2] = s2;
-            out[r + 3] = s3;
-            r += 4;
-        }
-        while r < rows {
-            out[r] = dot_f16(&mat[r * d..(r + 1) * d], q);
-            r += 1;
         }
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA+F16C and `src.len() == dst.len()`.
+    /// Caller must ensure AVX2+FMA+F16C and `src.len() == dst.len()`
+    /// (each 8-wide step reads 8 halves and writes 8 floats at `i`).
     #[target_feature(enable = "avx2,fma,f16c")]
     pub unsafe fn widen_f16(src: &[u16], dst: &mut [f32]) {
+        debug_assert_eq!(src.len(), dst.len());
         let n = src.len();
         let mut i = 0usize;
-        while i + 8 <= n {
-            _mm256_storeu_ps(dst.as_mut_ptr().add(i), load8_f16(src.as_ptr().add(i)));
-            i += 8;
+        // SAFETY: `i + 8 <= n` bounds the 8-wide read (satisfying
+        // `load8_f16`'s precondition) and the 8-wide store; both slices
+        // hold `n` elements per the contract, which also supplies
+        // AVX2+FMA+F16C. The scalar tail uses checked indexing.
+        unsafe {
+            while i + 8 <= n {
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), load8_f16(src.as_ptr().add(i)));
+                i += 8;
+            }
         }
         while i < n {
             dst[i] = crate::quant::f16_to_f32(src[i]);
@@ -419,32 +495,48 @@ mod avx2 {
     // ---- widening kernels: i8 codes with per-channel scales ------------
 
     /// Load 8 i8 codes and widen to a f32 register.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA and that `p` is valid for reads of
+    /// 8 `i8` (the load reads a full 64-bit lane).
     #[target_feature(enable = "avx2,fma")]
     unsafe fn load8_i8(p: *const i8) -> __m256 {
-        _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i)))
+        // SAFETY: the caller's contract makes `p..p+8` readable; the
+        // 64-bit lane load has no alignment requirement.
+        unsafe { _mm256_cvtepi32_ps(_mm256_cvtepi8_epi32(_mm_loadl_epi64(p as *const __m128i))) }
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA and equal lengths.
+    /// Caller must ensure AVX2+FMA and
+    /// `codes.len() == scales.len() == q.len()` (loads read up to
+    /// `codes.len()` elements from all three).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dot_i8_scaled(codes: &[i8], scales: &[f32], q: &[f32]) -> f32 {
+        debug_assert_eq!(codes.len(), q.len());
+        debug_assert_eq!(scales.len(), q.len());
         let n = codes.len();
         let pc = codes.as_ptr();
         let ps = scales.as_ptr();
         let pq = q.as_ptr();
-        let mut acc = _mm256_setzero_ps();
-        let mut i = 0usize;
-        while i + 8 <= n {
-            let sq = _mm256_mul_ps(_mm256_loadu_ps(ps.add(i)), _mm256_loadu_ps(pq.add(i)));
-            acc = _mm256_fmadd_ps(load8_i8(pc.add(i)), sq, acc);
-            i += 8;
+        // SAFETY: `i + 8 <= n` bounds every 8-wide load (satisfying
+        // `load8_i8`'s precondition) and `i < n` the tail reads; all
+        // three slices hold `n` elements per the contract, which also
+        // supplies AVX2+FMA.
+        unsafe {
+            let mut acc = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let sq = _mm256_mul_ps(_mm256_loadu_ps(ps.add(i)), _mm256_loadu_ps(pq.add(i)));
+                acc = _mm256_fmadd_ps(load8_i8(pc.add(i)), sq, acc);
+                i += 8;
+            }
+            let mut s = hsum256(acc);
+            while i < n {
+                s += *pc.add(i) as f32 * (*ps.add(i) * *pq.add(i));
+                i += 1;
+            }
+            s
         }
-        let mut s = hsum256(acc);
-        while i < n {
-            s += *pc.add(i) as f32 * (*ps.add(i) * *pq.add(i));
-            i += 1;
-        }
-        s
     }
 
     /// Blocked widening GEMV over i8 rows: the scaled query `s·q` is
@@ -452,7 +544,8 @@ mod avx2 {
     ///
     /// # Safety
     /// Caller must ensure AVX2+FMA, `q.len() == scales.len() == d` and
-    /// `codes.len() == out.len() * d`.
+    /// `codes.len() == out.len() * d` (row pointers are formed as
+    /// `codes + r*d` and read `d` elements each).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn matvec_i8_scaled(
         codes: &[i8],
@@ -461,68 +554,90 @@ mod avx2 {
         q: &[f32],
         out: &mut [f32],
     ) {
+        debug_assert_eq!(q.len(), d);
+        debug_assert_eq!(scales.len(), d);
+        debug_assert_eq!(codes.len(), out.len() * d);
         let rows = out.len();
         let pq = q.as_ptr();
         let ps = scales.as_ptr();
         let mut r = 0usize;
-        while r + 4 <= rows {
-            let p0 = codes.as_ptr().add(r * d);
-            let p1 = codes.as_ptr().add((r + 1) * d);
-            let p2 = codes.as_ptr().add((r + 2) * d);
-            let p3 = codes.as_ptr().add((r + 3) * d);
-            let mut a0 = _mm256_setzero_ps();
-            let mut a1 = _mm256_setzero_ps();
-            let mut a2 = _mm256_setzero_ps();
-            let mut a3 = _mm256_setzero_ps();
-            let mut j = 0usize;
-            while j + 8 <= d {
-                let sq = _mm256_mul_ps(_mm256_loadu_ps(ps.add(j)), _mm256_loadu_ps(pq.add(j)));
-                a0 = _mm256_fmadd_ps(load8_i8(p0.add(j)), sq, a0);
-                a1 = _mm256_fmadd_ps(load8_i8(p1.add(j)), sq, a1);
-                a2 = _mm256_fmadd_ps(load8_i8(p2.add(j)), sq, a2);
-                a3 = _mm256_fmadd_ps(load8_i8(p3.add(j)), sq, a3);
-                j += 8;
+        // SAFETY: same bound argument as [`matvec`]: `r + 4 <= rows`
+        // keeps the four row bases inside `codes` (`rows * d` bytes) and
+        // `j + 8 <= d` / `j < d` keep every row/scale/query access in
+        // bounds (8-wide loads satisfy `load8_i8`'s precondition); the
+        // tail call passes equal-length subslices. The caller's contract
+        // supplies AVX2+FMA.
+        unsafe {
+            while r + 4 <= rows {
+                let p0 = codes.as_ptr().add(r * d);
+                let p1 = codes.as_ptr().add((r + 1) * d);
+                let p2 = codes.as_ptr().add((r + 2) * d);
+                let p3 = codes.as_ptr().add((r + 3) * d);
+                let mut a0 = _mm256_setzero_ps();
+                let mut a1 = _mm256_setzero_ps();
+                let mut a2 = _mm256_setzero_ps();
+                let mut a3 = _mm256_setzero_ps();
+                let mut j = 0usize;
+                while j + 8 <= d {
+                    let sq =
+                        _mm256_mul_ps(_mm256_loadu_ps(ps.add(j)), _mm256_loadu_ps(pq.add(j)));
+                    a0 = _mm256_fmadd_ps(load8_i8(p0.add(j)), sq, a0);
+                    a1 = _mm256_fmadd_ps(load8_i8(p1.add(j)), sq, a1);
+                    a2 = _mm256_fmadd_ps(load8_i8(p2.add(j)), sq, a2);
+                    a3 = _mm256_fmadd_ps(load8_i8(p3.add(j)), sq, a3);
+                    j += 8;
+                }
+                let mut s0 = hsum256(a0);
+                let mut s1 = hsum256(a1);
+                let mut s2 = hsum256(a2);
+                let mut s3 = hsum256(a3);
+                while j < d {
+                    let sq = *ps.add(j) * *pq.add(j);
+                    s0 += *p0.add(j) as f32 * sq;
+                    s1 += *p1.add(j) as f32 * sq;
+                    s2 += *p2.add(j) as f32 * sq;
+                    s3 += *p3.add(j) as f32 * sq;
+                    j += 1;
+                }
+                out[r] = s0;
+                out[r + 1] = s1;
+                out[r + 2] = s2;
+                out[r + 3] = s3;
+                r += 4;
             }
-            let mut s0 = hsum256(a0);
-            let mut s1 = hsum256(a1);
-            let mut s2 = hsum256(a2);
-            let mut s3 = hsum256(a3);
-            while j < d {
-                let sq = *ps.add(j) * *pq.add(j);
-                s0 += *p0.add(j) as f32 * sq;
-                s1 += *p1.add(j) as f32 * sq;
-                s2 += *p2.add(j) as f32 * sq;
-                s3 += *p3.add(j) as f32 * sq;
-                j += 1;
+            while r < rows {
+                out[r] = dot_i8_scaled(&codes[r * d..(r + 1) * d], scales, q);
+                r += 1;
             }
-            out[r] = s0;
-            out[r + 1] = s1;
-            out[r + 2] = s2;
-            out[r + 3] = s3;
-            r += 4;
-        }
-        while r < rows {
-            out[r] = dot_i8_scaled(&codes[r * d..(r + 1) * d], scales, q);
-            r += 1;
         }
     }
 
     /// # Safety
-    /// Caller must ensure AVX2+FMA and equal lengths.
+    /// Caller must ensure AVX2+FMA and
+    /// `codes.len() == scales.len() == dst.len()` (each 8-wide step
+    /// reads 8 codes + 8 scales and writes 8 floats at `i`).
     #[target_feature(enable = "avx2,fma")]
     pub unsafe fn dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
+        debug_assert_eq!(codes.len(), dst.len());
+        debug_assert_eq!(scales.len(), dst.len());
         let n = codes.len();
         let pc = codes.as_ptr();
         let ps = scales.as_ptr();
         let mut i = 0usize;
-        while i + 8 <= n {
-            let v = _mm256_mul_ps(load8_i8(pc.add(i)), _mm256_loadu_ps(ps.add(i)));
-            _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
-            i += 8;
-        }
-        while i < n {
-            dst[i] = *pc.add(i) as f32 * *ps.add(i);
-            i += 1;
+        // SAFETY: `i + 8 <= n` bounds the 8-wide reads (satisfying
+        // `load8_i8`'s precondition) and the 8-wide store; all three
+        // slices hold `n` elements per the contract, which also supplies
+        // AVX2+FMA. The scalar tail's reads are bounded by `i < n`.
+        unsafe {
+            while i + 8 <= n {
+                let v = _mm256_mul_ps(load8_i8(pc.add(i)), _mm256_loadu_ps(ps.add(i)));
+                _mm256_storeu_ps(dst.as_mut_ptr().add(i), v);
+                i += 8;
+            }
+            while i < n {
+                dst[i] = *pc.add(i) as f32 * *ps.add(i);
+                i += 1;
+            }
         }
     }
 }
@@ -703,6 +818,15 @@ mod tests {
     fn backend_is_stable() {
         assert_eq!(backend(), backend());
         assert!(!backend().name().is_empty());
+    }
+
+    /// The miri CI lane interprets every kernel through the scalar
+    /// reference path; vendor intrinsics must never be reached.
+    #[cfg(miri)]
+    #[test]
+    fn backend_is_scalar_under_miri() {
+        assert_eq!(backend(), Backend::Scalar);
+        assert!(!f16c_available());
     }
 
     #[test]

@@ -1,0 +1,813 @@
+//! `lychee-lint` — repo-native static analysis for the project's
+//! correctness conventions (see `rust/README.md` § Correctness plane).
+//!
+//! Dependency-free by design (the offline registry has no `syn`): a small
+//! character-level lexer strips comments and string literals so the rule
+//! passes run over *code text* only, with the comment text kept per line
+//! for the `// SAFETY:` / `# Safety` / `// Relaxed:` checks.
+//!
+//! Rules:
+//! 1. `safety-comment` — every `unsafe { .. }` block must be immediately
+//!    preceded by (or share a line with) a `// SAFETY:` comment
+//!    justifying why its preconditions hold at the call site.
+//! 2. `safety-doc` — every `pub unsafe fn` must carry a `# Safety`
+//!    section in its doc comment stating the caller's obligations.
+//! 3. `request-path-unwrap` — `.unwrap()` / `.expect(` are banned in
+//!    non-test code of the request-path modules (`server`,
+//!    `coordinator`, `kvcache`, `engine`); return structured errors.
+//! 4. `partial-cmp` — scoring modules (`sparse`, `index`, `linalg`,
+//!    `attention`) must order floats with `total_cmp`, never
+//!    `.partial_cmp(..).unwrap()` (the NaN-total ordering rule).
+//! 5. `relaxed-ordering` — `Ordering::Relaxed` on the refcount /
+//!    byte-accounting atomics in `kvcache` / `coordinator` needs a
+//!    `// Relaxed: <why>` justification comment.
+//!
+//! Escape hatch: a `lint:allow(<rule>)` comment on the same line or the
+//! comment block directly above suppresses that rule for that site.
+
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// Rule identifiers (stable strings used in reports and `lint:allow`).
+pub const RULE_SAFETY_COMMENT: &str = "safety-comment";
+pub const RULE_SAFETY_DOC: &str = "safety-doc";
+pub const RULE_UNWRAP: &str = "request-path-unwrap";
+pub const RULE_PARTIAL_CMP: &str = "partial-cmp";
+pub const RULE_RELAXED: &str = "relaxed-ordering";
+
+/// Modules where `.unwrap()` / `.expect(` are banned outside tests.
+const REQUEST_PATH_MODULES: &[&str] = &["server", "coordinator", "kvcache", "engine"];
+/// Modules where float ordering must go through `total_cmp`.
+const SCORING_MODULES: &[&str] = &["sparse", "index", "linalg", "attention"];
+/// Modules whose atomics carry refcount / byte accounting.
+const ACCOUNTING_MODULES: &[&str] = &["kvcache", "coordinator"];
+
+/// One rule violation at a source location.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    pub file: String,
+    pub line: usize,
+    pub rule: &'static str,
+    pub msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Result of walking a source tree.
+pub struct Report {
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+/// Walk `root` recursively, lint every `.rs` file, and report.
+pub fn check_tree(root: &Path) -> io::Result<Report> {
+    let mut files = Vec::new();
+    collect_rs(root, &mut files)?;
+    files.sort();
+    let mut violations = Vec::new();
+    for f in &files {
+        let src = fs::read_to_string(f)?;
+        violations.extend(check_source(&f.display().to_string(), &src));
+    }
+    Ok(Report {
+        files: files.len(),
+        violations,
+    })
+}
+
+fn collect_rs(dir: &Path, out: &mut Vec<PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a single source text. `path` selects which module-scoped rules
+/// apply (matched against its `/`-separated components).
+pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
+    let lex = strip(src);
+    let in_test = test_mask(&lex.code);
+    let request_path = path_in(path, REQUEST_PATH_MODULES);
+    let scoring = path_in(path, SCORING_MODULES);
+    let accounting = path_in(path, ACCOUNTING_MODULES);
+    let mut out = Vec::new();
+    for idx in 0..lex.code.len() {
+        check_unsafe_rules(path, &lex, idx, &mut out);
+        if in_test[idx] {
+            continue;
+        }
+        if request_path {
+            check_unwrap(path, &lex, idx, &mut out);
+        }
+        if scoring {
+            check_partial_cmp(path, &lex, idx, &mut out);
+        }
+        if accounting {
+            check_relaxed(path, &lex, idx, &mut out);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------- rules
+
+fn violation(path: &str, idx: usize, rule: &'static str, msg: &str) -> Violation {
+    Violation {
+        file: path.to_string(),
+        line: idx + 1,
+        rule,
+        msg: msg.to_string(),
+    }
+}
+
+fn check_unsafe_rules(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation>) {
+    let line = &lex.code[idx];
+    for pos in word_positions(line, "unsafe") {
+        match token_after(&lex.code, idx, pos + "unsafe".len()).as_deref() {
+            Some("{") => {
+                // skip_attrs: `#[allow(..)]` may sit between the SAFETY
+                // comment and the block it justifies
+                if has_marker(lex, idx, "SAFETY:", true) {
+                    continue;
+                }
+                if allowed(lex, idx, RULE_SAFETY_COMMENT) {
+                    continue;
+                }
+                out.push(violation(
+                    path,
+                    idx,
+                    RULE_SAFETY_COMMENT,
+                    "unsafe block without an immediately preceding `// SAFETY:` comment",
+                ));
+            }
+            Some("fn") => {
+                let is_pub = word_positions(line, "pub").first().is_some_and(|p| *p < pos);
+                if !is_pub || doc_has_safety(lex, idx) {
+                    continue;
+                }
+                if allowed(lex, idx, RULE_SAFETY_DOC) {
+                    continue;
+                }
+                out.push(violation(
+                    path,
+                    idx,
+                    RULE_SAFETY_DOC,
+                    "pub unsafe fn without a `# Safety` doc section",
+                ));
+            }
+            // `unsafe impl` / `unsafe trait` / `unsafe extern`: no check
+            _ => {}
+        }
+    }
+}
+
+fn check_unwrap(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation>) {
+    let line = &lex.code[idx];
+    if !line.contains(".unwrap()") && !line.contains(".expect(") {
+        return;
+    }
+    if allowed(lex, idx, RULE_UNWRAP) {
+        return;
+    }
+    out.push(violation(
+        path,
+        idx,
+        RULE_UNWRAP,
+        "unwrap()/expect() in request-path code; return a structured error instead",
+    ));
+}
+
+fn check_partial_cmp(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation>) {
+    if !lex.code[idx].contains(".partial_cmp(") {
+        return;
+    }
+    if allowed(lex, idx, RULE_PARTIAL_CMP) {
+        return;
+    }
+    out.push(violation(
+        path,
+        idx,
+        RULE_PARTIAL_CMP,
+        "partial_cmp in scoring code; use total_cmp (NaN-total float ordering)",
+    ));
+}
+
+fn check_relaxed(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation>) {
+    if !lex.code[idx].contains("Ordering::Relaxed") {
+        return;
+    }
+    if has_marker(lex, idx, "Relaxed:", false) {
+        return;
+    }
+    if allowed(lex, idx, RULE_RELAXED) {
+        return;
+    }
+    out.push(violation(
+        path,
+        idx,
+        RULE_RELAXED,
+        "Ordering::Relaxed on accounting atomics needs a `// Relaxed: <why>` comment",
+    ));
+}
+
+// -------------------------------------------------------------- helpers
+
+fn path_in(path: &str, names: &[&str]) -> bool {
+    path.split(['/', '\\']).any(|comp| {
+        let stem = comp.strip_suffix(".rs").unwrap_or(comp);
+        names.contains(&stem)
+    })
+}
+
+/// True when `needle` appears in the comment on this line or in the
+/// contiguous comment block directly above (no blank line in between).
+fn has_marker(lex: &Stripped, idx: usize, needle: &str, skip_attrs: bool) -> bool {
+    if lex.comments[idx].contains(needle) {
+        return true;
+    }
+    preceding_comments(lex, idx, skip_attrs).iter().any(|c| c.contains(needle))
+}
+
+fn doc_has_safety(lex: &Stripped, idx: usize) -> bool {
+    preceding_comments(lex, idx, true).iter().any(|c| c.contains("# Safety"))
+}
+
+fn allowed(lex: &Stripped, idx: usize, rule: &str) -> bool {
+    has_marker(lex, idx, &format!("lint:allow({rule})"), true)
+}
+
+/// Comment text of the lines directly above `idx` (comment-only lines;
+/// optionally skipping over attribute lines such as `#[inline]`).
+fn preceding_comments<'a>(lex: &'a Stripped, idx: usize, skip_attrs: bool) -> Vec<&'a str> {
+    let mut out = Vec::new();
+    let mut k = idx;
+    while k > 0 {
+        k -= 1;
+        let code = lex.code[k].trim();
+        let comment = lex.comments[k].trim();
+        if code.is_empty() && !comment.is_empty() {
+            out.push(comment);
+        } else if skip_attrs && (code.starts_with("#[") || code.starts_with("#!")) {
+            // attributes may sit between a doc comment and its item
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Byte offsets of whole-word occurrences of `word` in `line`.
+fn word_positions(line: &str, word: &str) -> Vec<usize> {
+    let bytes = line.as_bytes();
+    let mut out = Vec::new();
+    let mut start = 0;
+    while let Some(p) = line[start..].find(word) {
+        let at = start + p;
+        let end = at + word.len();
+        let before_ok = at == 0 || !is_ident_byte(bytes[at - 1]);
+        let after_ok = end >= bytes.len() || !is_ident_byte(bytes[end]);
+        if before_ok && after_ok {
+            out.push(at);
+        }
+        start = end;
+    }
+    out
+}
+
+fn is_ident_byte(b: u8) -> bool {
+    b == b'_' || b.is_ascii_alphanumeric()
+}
+
+/// The next non-whitespace token at or after `(start_line, start_col)`.
+fn token_after(code: &[String], start_line: usize, start_col: usize) -> Option<String> {
+    let mut col = start_col;
+    let mut li = start_line;
+    while li < code.len() {
+        let line = &code[li];
+        if col <= line.len() {
+            let rest = &line[col..];
+            if let Some((off, ch)) = rest.char_indices().find(|(_, c)| !c.is_whitespace()) {
+                if ch == '{' {
+                    return Some("{".to_string());
+                }
+                let word: String = rest[off..]
+                    .chars()
+                    .take_while(|c| c.is_alphanumeric() || *c == '_')
+                    .collect();
+                if word.is_empty() {
+                    return Some(ch.to_string());
+                }
+                return Some(word);
+            }
+        }
+        li += 1;
+        col = 0;
+    }
+    None
+}
+
+/// Per-line flags marking `#[cfg(test)] mod { .. }` regions (tracked by
+/// brace depth so the unwrap rule exempts test code).
+fn test_mask(code: &[String]) -> Vec<bool> {
+    let mut mask = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if let Some(j) = test_mod_start(code, i) {
+            // mark from the attribute through the matching close brace
+            for m in mask.iter_mut().take(j).skip(i) {
+                *m = true;
+            }
+            let mut depth = 0i32;
+            let mut opened = false;
+            let mut k = j;
+            while k < code.len() {
+                mask[k] = true;
+                for &b in code[k].as_bytes() {
+                    match b {
+                        b'{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        b'}' => depth -= 1,
+                        _ => {}
+                    }
+                }
+                if opened && depth <= 0 {
+                    break;
+                }
+                k += 1;
+            }
+            i = k;
+        }
+        i += 1;
+    }
+    mask
+}
+
+/// If line `i` is a `#[cfg(test)]` attribute guarding a `mod`, return
+/// the line index of that `mod` item.
+fn test_mod_start(code: &[String], i: usize) -> Option<usize> {
+    let rest = code[i].trim().strip_prefix("#[cfg(test)]")?;
+    if !word_positions(rest, "mod").is_empty() {
+        return Some(i); // `#[cfg(test)] mod t { .. }` on one line
+    }
+    let mut j = i + 1;
+    while j < code.len() {
+        let tj = code[j].trim();
+        if tj.is_empty() || tj.starts_with("#[") {
+            j += 1;
+            continue;
+        }
+        if word_positions(tj, "mod").is_empty() {
+            return None; // guards a non-mod item (`use`, fn, ...)
+        }
+        return Some(j);
+    }
+    None
+}
+
+// ---------------------------------------------------------------- lexer
+
+/// Source text split into aligned per-line `code` (comments and literal
+/// contents blanked to spaces) and `comments` (everything else blanked).
+struct Stripped {
+    code: Vec<String>,
+    comments: Vec<String>,
+}
+
+/// The two aligned output buffers the lexer writes into.
+struct Bufs {
+    code: String,
+    comments: String,
+}
+
+impl Bufs {
+    /// Blank one literal character in both buffers, keeping lines.
+    fn blank(&mut self, c: char) {
+        if c == '\n' {
+            self.code.push('\n');
+            self.comments.push('\n');
+        } else {
+            self.code.push(' ');
+            self.comments.push(' ');
+        }
+    }
+
+    /// Record one comment character (blanked on the code side).
+    fn comment(&mut self, c: char) {
+        if c == '\n' {
+            self.code.push('\n');
+            self.comments.push('\n');
+        } else {
+            self.code.push(' ');
+            self.comments.push(c);
+        }
+    }
+
+    /// Record one code character (blanked on the comment side).
+    fn code(&mut self, c: char) {
+        if c == '\n' {
+            self.code.push('\n');
+            self.comments.push('\n');
+        } else {
+            self.code.push(c);
+            self.comments.push(' ');
+        }
+    }
+}
+
+fn strip(src: &str) -> Stripped {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let mut b = Bufs {
+        code: String::with_capacity(src.len()),
+        comments: String::with_capacity(src.len()),
+    };
+    let mut i = 0;
+    while i < n {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '/' && next == Some('/') {
+            while i < n && chars[i] != '\n' {
+                b.comment(chars[i]);
+                i += 1;
+            }
+        } else if c == '/' && next == Some('*') {
+            i = skip_block_comment(&chars, i, &mut b);
+        } else if (c == 'r' || c == 'b') && is_raw_string_start(&chars, i) {
+            i = skip_raw_string(&chars, i, &mut b);
+        } else if c == '"' || (c == 'b' && next == Some('"') && !prev_is_ident(&chars, i)) {
+            i = skip_string(&chars, i, &mut b);
+        } else if c == '\'' {
+            i = skip_quote(&chars, i, &mut b);
+        } else {
+            b.code(c);
+            i += 1;
+        }
+    }
+    Stripped {
+        code: b.code.lines().map(str::to_string).collect(),
+        comments: b.comments.lines().map(str::to_string).collect(),
+    }
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1] == '_' || chars[i - 1].is_alphanumeric())
+}
+
+fn skip_block_comment(chars: &[char], mut i: usize, b: &mut Bufs) -> usize {
+    let mut depth = 1usize;
+    b.comment('/');
+    b.comment('*');
+    i += 2;
+    while i < chars.len() && depth > 0 {
+        let next = chars.get(i + 1).copied();
+        if chars[i] == '/' && next == Some('*') {
+            depth += 1;
+            b.comment('/');
+            b.comment('*');
+            i += 2;
+        } else if chars[i] == '*' && next == Some('/') {
+            depth -= 1;
+            b.comment('*');
+            b.comment('/');
+            i += 2;
+        } else {
+            b.comment(chars[i]);
+            i += 1;
+        }
+    }
+    i
+}
+
+/// `r"…"`, `r#"…"#`, `br##"…"##` — any number of hashes.
+fn is_raw_string_start(chars: &[char], i: usize) -> bool {
+    if prev_is_ident(chars, i) {
+        return false;
+    }
+    let mut j = i;
+    if chars[j] == 'b' {
+        j += 1;
+    }
+    if j >= chars.len() || chars[j] != 'r' {
+        return false;
+    }
+    j += 1;
+    while j < chars.len() && chars[j] == '#' {
+        j += 1;
+    }
+    j < chars.len() && chars[j] == '"'
+}
+
+fn skip_raw_string(chars: &[char], mut i: usize, b: &mut Bufs) -> usize {
+    if chars[i] == 'b' {
+        b.blank(chars[i]);
+        i += 1;
+    }
+    b.blank(chars[i]); // 'r'
+    i += 1;
+    let mut hashes = 0usize;
+    while chars[i] == '#' {
+        hashes += 1;
+        b.blank(chars[i]);
+        i += 1;
+    }
+    b.blank(chars[i]); // opening quote
+    i += 1;
+    while i < chars.len() {
+        if chars[i] == '"' && (0..hashes).all(|h| chars.get(i + 1 + h) == Some(&'#')) {
+            for _ in 0..=hashes {
+                b.blank(chars[i]);
+                i += 1;
+            }
+            return i;
+        }
+        b.blank(chars[i]);
+        i += 1;
+    }
+    i
+}
+
+fn skip_string(chars: &[char], mut i: usize, b: &mut Bufs) -> usize {
+    if chars[i] == 'b' {
+        b.blank(chars[i]);
+        i += 1;
+    }
+    b.blank(chars[i]); // opening quote
+    i += 1;
+    while i < chars.len() {
+        if chars[i] == '\\' && i + 1 < chars.len() {
+            b.blank(chars[i]);
+            b.blank(chars[i + 1]);
+            i += 2;
+        } else if chars[i] == '"' {
+            b.blank(chars[i]);
+            return i + 1;
+        } else {
+            b.blank(chars[i]);
+            i += 1;
+        }
+    }
+    i
+}
+
+/// A `'` is either a lifetime (`'a`) or a char literal (`'x'`, `'\n'`).
+fn skip_quote(chars: &[char], mut i: usize, b: &mut Bufs) -> usize {
+    let c1 = chars.get(i + 1).copied();
+    let c2 = chars.get(i + 2).copied();
+    let ident_next = matches!(c1, Some(a) if a == '_' || a.is_alphabetic());
+    if ident_next && c2 != Some('\'') {
+        b.code('\'');
+        return i + 1;
+    }
+    b.blank(chars[i]); // opening quote
+    i += 1;
+    while i < chars.len() {
+        if chars[i] == '\\' && i + 1 < chars.len() {
+            b.blank(chars[i]);
+            b.blank(chars[i + 1]);
+            i += 2;
+        } else if chars[i] == '\'' {
+            b.blank(chars[i]);
+            return i + 1;
+        } else {
+            b.blank(chars[i]);
+            i += 1;
+        }
+    }
+    i
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules_of(path: &str, src: &str) -> Vec<&'static str> {
+        check_source(path, src).iter().map(|v| v.rule).collect()
+    }
+
+    // ----- rule fixtures: one violating + one conforming per rule -----
+
+    #[test]
+    fn unsafe_block_requires_safety_comment() {
+        let bad = r##"
+fn read(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+"##;
+        assert_eq!(rules_of("src/linalg/x.rs", bad), vec![RULE_SAFETY_COMMENT]);
+        let good = r##"
+fn read(p: *const u8) -> u8 {
+    // SAFETY: the caller guarantees `p` is valid for reads.
+    unsafe { *p }
+}
+"##;
+        assert!(rules_of("src/linalg/x.rs", good).is_empty());
+    }
+
+    #[test]
+    fn pub_unsafe_fn_requires_safety_doc() {
+        let bad = r##"
+/// Reads a byte.
+pub unsafe fn read(p: *const u8) -> u8 {
+    // SAFETY: the caller's contract (precondition on `p`).
+    unsafe { *p }
+}
+"##;
+        assert_eq!(rules_of("src/linalg/x.rs", bad), vec![RULE_SAFETY_DOC]);
+        let good = r##"
+/// Reads a byte.
+///
+/// # Safety
+/// `p` must be valid for reads.
+#[inline]
+pub unsafe fn read(p: *const u8) -> u8 {
+    // SAFETY: the caller's contract (precondition on `p`).
+    unsafe { *p }
+}
+"##;
+        assert!(rules_of("src/linalg/x.rs", good).is_empty());
+        // private unsafe fns are exempt from the doc rule
+        let private = r##"
+unsafe fn read(p: *const u8) -> u8 {
+    // SAFETY: the caller's contract (precondition on `p`).
+    unsafe { *p }
+}
+"##;
+        assert!(rules_of("src/linalg/x.rs", private).is_empty());
+    }
+
+    #[test]
+    fn unwrap_banned_in_request_path_non_test_code() {
+        let bad = r##"
+pub fn first(v: &[u32]) -> u32 {
+    v.first().copied().unwrap()
+}
+"##;
+        assert_eq!(rules_of("src/kvcache/mod.rs", bad), vec![RULE_UNWRAP]);
+        // same text outside the request-path modules is fine
+        assert!(rules_of("src/util/stats.rs", bad).is_empty());
+        // expect( is the same rule
+        let expected = r##"
+pub fn first(v: &[u32]) -> u32 {
+    v.first().copied().expect("empty")
+}
+"##;
+        assert_eq!(rules_of("src/coordinator/mod.rs", expected), vec![RULE_UNWRAP]);
+        let good = r##"
+pub fn first(v: &[u32]) -> Option<u32> {
+    v.first().copied()
+}
+"##;
+        assert!(rules_of("src/kvcache/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn test_mods_are_exempt_from_unwrap_rule() {
+        let src = r##"
+pub fn run() {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn t() {
+        assert_eq!(Some(1).unwrap(), 1);
+    }
+}
+"##;
+        assert!(rules_of("src/server/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn partial_cmp_banned_in_scoring_modules() {
+        let bad = r##"
+pub fn sort_scores(v: &mut [f32]) {
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}
+"##;
+        assert_eq!(rules_of("src/sparse/mod.rs", bad), vec![RULE_PARTIAL_CMP]);
+        // out of scope for non-scoring modules
+        assert!(rules_of("src/workloads/x.rs", bad).is_empty());
+        let good = r##"
+pub fn sort_scores(v: &mut [f32]) {
+    v.sort_by(|a, b| a.total_cmp(b));
+}
+"##;
+        assert!(rules_of("src/sparse/mod.rs", good).is_empty());
+        // a PartialOrd impl delegating to Ord is not a method call
+        let impl_ok = r##"
+impl PartialOrd for Entry {
+    fn partial_cmp(&self, o: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(o))
+    }
+}
+"##;
+        assert!(rules_of("src/linalg/mod.rs", impl_ok).is_empty());
+    }
+
+    #[test]
+    fn relaxed_ordering_needs_justification_comment() {
+        let bad = r##"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) -> u64 {
+    c.fetch_add(1, Ordering::Relaxed)
+}
+"##;
+        assert_eq!(rules_of("src/kvcache/mod.rs", bad), vec![RULE_RELAXED]);
+        // out of scope elsewhere
+        assert!(rules_of("src/server/mod.rs", bad).is_empty());
+        let good = r##"
+use std::sync::atomic::{AtomicU64, Ordering};
+pub fn bump(c: &AtomicU64) -> u64 {
+    // Relaxed: monotonic id allocation; only uniqueness matters.
+    c.fetch_add(1, Ordering::Relaxed)
+}
+"##;
+        assert!(rules_of("src/kvcache/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn lint_allow_marker_suppresses_a_rule() {
+        let src = r##"
+pub fn first(v: &[u32]) -> u32 {
+    // lint:allow(request-path-unwrap) startup-only path, cannot race
+    v.first().copied().unwrap()
+}
+"##;
+        assert!(rules_of("src/engine/mod.rs", src).is_empty());
+    }
+
+    // ----- lexer behavior -----
+
+    #[test]
+    fn strings_and_comments_are_not_scanned() {
+        let src = "let a = \"unsafe { no }\"; // unsafe { in comment }\nlet b = 1;\n";
+        assert!(rules_of("src/kvcache/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn raw_strings_and_lifetimes_do_not_derail_the_lexer() {
+        let src = r##"
+fn f<'a>(s: &'a str) -> &'a str { s }
+const T: &str = r#"unsafe { *p } .partial_cmp("#;
+"##;
+        assert!(rules_of("src/sparse/mod.rs", src).is_empty());
+    }
+
+    #[test]
+    fn char_literals_do_not_swallow_code() {
+        let src = "fn f() -> char { '\\'' }\nfn g() -> u32 { Some(1).unwrap() }\n";
+        let v = check_source("src/kvcache/x.rs", src);
+        assert_eq!(v.len(), 1);
+        assert_eq!(v[0].rule, RULE_UNWRAP);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn nested_block_comments_close_correctly() {
+        let src = "/* outer /* inner */ still comment: unsafe { */\nfn ok() {}\n";
+        assert!(rules_of("src/linalg/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_keyword_in_identifiers_is_ignored() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\nfn ok() {}\n";
+        assert!(rules_of("src/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn violation_display_is_grep_friendly() {
+        let v = Violation {
+            file: "src/x.rs".to_string(),
+            line: 7,
+            rule: RULE_UNWRAP,
+            msg: "boom".to_string(),
+        };
+        assert_eq!(v.to_string(), "src/x.rs:7: [request-path-unwrap] boom");
+    }
+
+    // ----- the gate: the repo's own tree must be clean -----
+
+    #[test]
+    #[cfg_attr(miri, ignore)] // walks the on-disk tree; covered natively + by the CI gate
+    fn repo_tree_is_lint_clean() {
+        let root = Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/src"));
+        let report = check_tree(root).expect("walk rust/src");
+        assert!(report.files > 25, "walked only {} files", report.files);
+        let msgs: Vec<String> = report.violations.iter().map(|v| v.to_string()).collect();
+        assert!(msgs.is_empty(), "lint violations:\n{}", msgs.join("\n"));
+    }
+}

@@ -29,6 +29,7 @@
 
 use crate::coordinator::{Event, Handle, Metrics, Request};
 use crate::util::json::Json;
+use crate::util::lock_recover;
 use anyhow::{Context, Result};
 use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
@@ -304,7 +305,7 @@ fn handle_conn(
         if parsed.get("metrics").as_bool() == Some(true) {
             match &metrics {
                 Some(m) => {
-                    let j = metrics_json(&m.lock().unwrap());
+                    let j = metrics_json(&lock_recover(m));
                     writeln!(writer, "{}", j.dump())?;
                 }
                 None => reply_err(&mut writer, "metrics not enabled on this server")?,
@@ -324,7 +325,7 @@ fn handle_conn(
         let full_prompt = match &wire.session_id {
             None => wire.prompt.clone(),
             Some(sid) => {
-                let state = sessions.lock().unwrap().touch(sid);
+                let state = lock_recover(&sessions).touch(sid);
                 match state {
                     Some((head, text)) => {
                         if let Some(parent) = wire.parent {
@@ -383,7 +384,7 @@ fn handle_conn(
                         // next turn's prefix = this turn's prompt + reply
                         let mut text = full_prompt.clone();
                         text.extend_from_slice(&generated);
-                        sessions.lock().unwrap().update(sid, req_id, text);
+                        lock_recover(&sessions).update(sid, req_id, text);
                     }
                     let j = Json::obj(vec![
                         ("done", Json::Bool(true)),

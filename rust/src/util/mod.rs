@@ -14,3 +14,21 @@ pub mod timer;
 
 pub use rng::Rng;
 pub use timer::Stopwatch;
+
+use std::sync::{Mutex, MutexGuard};
+
+/// Lock a mutex, recovering the guard when a previous holder panicked.
+///
+/// The request-path state behind these locks (metrics counters, arena
+/// accounting, session tables, the radix trie) is mutated with short
+/// self-contained critical sections, so a poisoned lock carries no torn
+/// multi-step invariant worth propagating a panic for; recovering keeps
+/// one panicked worker from wedging every subsequent request. Prefer
+/// this over `.lock().unwrap()` anywhere on the serving path (the
+/// `request-path-unwrap` lint rule enforces it).
+pub fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    }
+}

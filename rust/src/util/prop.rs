@@ -59,12 +59,22 @@ impl Gen {
 /// Outcome of a single property case.
 pub type CaseResult = Result<(), String>;
 
+/// Case budget under Miri: interpretation runs ~3 orders of magnitude
+/// slower than native, so the miri CI lane runs a thin slice of each
+/// property suite (memory-model coverage, not statistical coverage).
+const MIRI_MAX_CASES: usize = 4;
+
 /// Run `cases` generated cases of `property`. Panics (test failure) with
 /// the reproducing seed + shrink info on the first violated case.
 pub fn check<F>(name: &str, cases: usize, mut property: F)
 where
     F: FnMut(&mut Gen) -> CaseResult,
 {
+    let cases = if cfg!(miri) {
+        cases.min(MIRI_MAX_CASES)
+    } else {
+        cases
+    };
     let base_seed = 0xC0FFEE ^ fxhash(name);
     for i in 0..cases {
         let seed = base_seed.wrapping_add(i as u64);
@@ -131,7 +141,12 @@ mod tests {
             prop_assert!(v.len() < 10, "len {}", v.len());
             Ok(())
         });
-        assert_eq!(count, 50);
+        let want = if cfg!(miri) {
+            MIRI_MAX_CASES.min(50)
+        } else {
+            50
+        };
+        assert_eq!(count, want);
     }
 
     #[test]

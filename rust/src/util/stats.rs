@@ -25,7 +25,7 @@ impl Summary {
         let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
             / n.max(1) as f64;
         let mut sorted = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sorted.sort_by(|a, b| a.total_cmp(b));
         Summary {
             n,
             mean,
@@ -56,7 +56,7 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// Percentile over an unsorted slice.
 pub fn percentile(samples: &[f64], q: f64) -> f64 {
     let mut s = samples.to_vec();
-    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s.sort_by(|a, b| a.total_cmp(b));
     percentile_sorted(&s, q)
 }
 

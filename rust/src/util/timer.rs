@@ -89,7 +89,7 @@ impl PhaseTimer {
                 (k, us, us / total)
             })
             .collect();
-        rows.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+        rows.sort_by(|a, b| b.1.total_cmp(&a.1));
         rows
     }
 

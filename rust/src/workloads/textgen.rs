@@ -18,10 +18,8 @@ const ADJS: &[&str] = &[
     "adaptive", "stale", "fresh",
 ];
 
-fn word(rng: &mut Rng, pool: &[&str]) -> &'static str {
-    let s: &&str = &pool[rng.range(0, pool.len())];
-    // the pools are 'static
-    unsafe { std::mem::transmute::<&str, &'static str>(*s) }
+fn word(rng: &mut Rng, pool: &'static [&'static str]) -> &'static str {
+    pool[rng.range(0, pool.len())]
 }
 
 fn ident(rng: &mut Rng) -> String {
