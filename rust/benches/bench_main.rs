@@ -382,6 +382,7 @@ fn main() {
                         prompt: prompt_text(256, i),
                         max_new_tokens: 16,
                         policy: "lychee".into(),
+                        deadline_ms: None,
                     })
                     .unwrap(),
             );
@@ -448,6 +449,7 @@ fn serving_json_section() -> String {
                     prompt: prompt_text(short_prompt_tokens, i),
                     max_new_tokens: short_max_new,
                     policy: "lychee".into(),
+                    deadline_ms: None,
                 })
                 .unwrap();
             short_threads.push(std::thread::spawn(move || {
@@ -470,6 +472,9 @@ fn serving_json_section() -> String {
                             break;
                         }
                         Event::Error(e) => panic!("short request failed: {e}"),
+                        Event::Cancelled(k) => {
+                            panic!("short request cancelled: {}", k.as_str())
+                        }
                     }
                 }
                 (stats.expect("short ended without Done"), max_gap_ms)
@@ -484,6 +489,7 @@ fn serving_json_section() -> String {
                 prompt: prompt_text(long_prompt_tokens, 99),
                 max_new_tokens: 8,
                 policy: "lychee".into(),
+                deadline_ms: None,
             })
             .unwrap();
 
@@ -608,6 +614,7 @@ fn prefix_reuse_fragment() -> String {
                                 prompt: prompt.clone(),
                                 max_new_tokens: t.max_new_tokens,
                                 policy: "lychee".into(),
+                                deadline_ms: None,
                             })
                             .expect("multiturn request failed");
                         let mut next = prompt;

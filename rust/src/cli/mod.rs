@@ -220,6 +220,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let m = metrics.lock().unwrap();
         println!(
             "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} \
+             inflight={} cancel={} deadline={} drain={} faults={} panics={} \
              kv[{}]={:.1}MiB shared={:.1}MiB free={:.1}MiB recycled={} \
              prefix={}hit/{}tok evict={} reps[{}] p50_tpot={:.1}ms",
             m.requests,
@@ -229,6 +230,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.prefill_chunks_executed,
             m.preemptions,
             m.queue_depth,
+            m.requests_in_flight,
+            m.cancellations,
+            m.deadline_exceeded,
+            m.drain_state,
+            m.faults_injected_total,
+            m.sequence_panics,
             m.kv_precision,
             m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
             m.kv_bytes_shared as f64 / (1024.0 * 1024.0),
@@ -265,6 +272,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         prompt: prompt.into_bytes(),
         max_new_tokens: tokens,
         policy,
+        deadline_ms: None,
     })?;
     println!("{}", String::from_utf8_lossy(&out));
     println!(
@@ -302,6 +310,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 prompt,
                 max_new_tokens: r.max_new_tokens,
                 policy: pol,
+                deadline_ms: None,
             })
         }));
     }

@@ -156,6 +156,13 @@ pub struct ServingConfig {
     /// running sequence (pages released, prefill re-queued for
     /// recompute). 0 disables preemption (wait-only backpressure).
     pub preempt_after_waits: usize,
+    /// Default per-request deadline in milliseconds, applied when a
+    /// request carries no `deadline_ms` wire field. The scheduler sweeps
+    /// deadlines every tick and terminates expired requests — in any
+    /// state — with a structured `deadline_exceeded` line, returning
+    /// their pages and reservations. 0 disables the default (requests
+    /// without an explicit deadline run unbounded).
+    pub default_deadline_ms: u64,
 }
 
 impl Default for ServingConfig {
@@ -170,6 +177,7 @@ impl Default for ServingConfig {
             retrieval_threads: 0,
             prefill_chunk_tokens: 256,
             preempt_after_waits: 8,
+            default_deadline_ms: 0,
         }
     }
 }
@@ -197,6 +205,7 @@ impl ServingConfig {
             "retrieval_threads" => self.retrieval_threads = u()?,
             "prefill_chunk_tokens" => self.prefill_chunk_tokens = u()?,
             "preempt_after_waits" => self.preempt_after_waits = u()?,
+            "default_deadline_ms" => self.default_deadline_ms = u()? as u64,
             _ => bail!("unknown serving config key '{key}'"),
         }
         Ok(())
@@ -400,6 +409,18 @@ mod tests {
         cfg.validate().unwrap();
         // 0 chunk tokens = monolithic prefill, still valid
         cfg.apply_override("serving.prefill_chunk_tokens=0").unwrap();
+        cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn deadline_knob() {
+        let mut cfg = Config::new();
+        // off by default: existing deployments see no behavior change
+        assert_eq!(cfg.serving.default_deadline_ms, 0);
+        cfg.apply_override("serving.default_deadline_ms=1500").unwrap();
+        assert_eq!(cfg.serving.default_deadline_ms, 1500);
+        cfg.validate().unwrap();
+        cfg.apply_override("serving.default_deadline_ms=0").unwrap();
         cfg.validate().unwrap();
     }
 

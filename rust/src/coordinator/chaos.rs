@@ -1,0 +1,520 @@
+//! Chaos suite for the request-lifecycle robustness plane.
+//!
+//! Each test drives the *real* coordinator (the production tick loop,
+//! admission ledger, preemption, and radix cache) over [`SimEngine`]
+//! with a seeded [`FaultPlan`], plus adversarial clients: explicit
+//! cancels, dropped receivers (mid-stream disconnects), and millisecond
+//! deadlines. The global invariants asserted after every storm:
+//!
+//! 1. every observed submission yields **exactly one** terminal event
+//!    (`Done` / `Cancelled` / `Error`), with no tokens after it;
+//! 2. the arena's `bytes_in_use`/`pages_in_use` return to zero once the
+//!    drain completes (no leak on any teardown path);
+//! 3. after force-evicting the radix cache, `bytes_shared` is zero too —
+//!    i.e. every shared page's refcount unwound exactly.
+//!
+//! Determinism contract: fault *schedules* are pure functions of
+//! `(seed, sequence id, per-sequence progress)`, so which chunk stalls
+//! or which step panics is bit-identical across runs (pinned by
+//! `fault_schedule_is_bit_deterministic_across_runs`). Outcomes that
+//! race wall-clock time (deadline expiry, preemption timing) are
+//! checked through the invariants above rather than exact transcripts.
+
+#[cfg(test)]
+mod tests {
+    use crate::config::Config;
+    use crate::coordinator::{spawn_with, Event, Handle, Request};
+    use crate::engine::sim::{SimConfig, SimEngine};
+    use crate::engine::EngineCore;
+    use crate::util::fault::{FaultConfig, FaultPlan, FaultSpec};
+    use crate::workloads::trace::prompt_text;
+    use std::collections::BTreeMap;
+    use std::sync::Arc;
+
+    const N_REQUESTS: u64 = 18;
+    const SHARED_PREFIX_TOKENS: usize = 192;
+
+    fn storm_cfg(pool_mb: usize) -> Config {
+        let mut cfg = Config::new();
+        cfg.serving.max_batch = 4;
+        cfg.serving.prefill_chunk_tokens = 64;
+        cfg.serving.max_new_tokens = 32;
+        cfg.serving.kv_pool_mb = pool_mb;
+        cfg.serving.preempt_after_waits = 2;
+        cfg.serving.idle_tick_us = 50;
+        cfg.kv.prefix_cache_mb = 1;
+        cfg
+    }
+
+    fn storm_prompt(i: u64) -> Vec<u8> {
+        // shared prefix (exercises radix adoption/seal-back) + a
+        // divergent tail of varying length
+        let mut p = vec![b'p'; SHARED_PREFIX_TOKENS];
+        p.extend(prompt_text(64 + (i as usize % 5) * 37, i));
+        p
+    }
+
+    fn storm_max_new(i: u64) -> usize {
+        6 + (i as usize % 7)
+    }
+
+    struct StormReport {
+        /// request id -> terminal outcome name, for every rx we kept
+        outcomes: BTreeMap<u64, &'static str>,
+        cancellations: u64,
+        deadline_exceeded: u64,
+        sequence_panics: u64,
+        drain_state: u64,
+        requests_in_flight: u64,
+        kv_bytes_in_use: u64,
+        pool_bytes_in_use: usize,
+        pool_pages_in_use: usize,
+        shared_bytes_after_evict: usize,
+        shared_pages_after_evict: usize,
+    }
+
+    /// Submit `N_REQUESTS` storm requests, optionally with adversarial
+    /// clients (1 ms deadlines on every 5th, explicit cancels on every
+    /// 6th, dropped receivers on every 7th), read every kept stream to
+    /// its terminal event, drain, join, and snapshot the accounting.
+    fn run_storm(spec: Option<FaultSpec>, pool_mb: usize, chaos_clients: bool) -> StormReport {
+        let cfg = storm_cfg(pool_mb);
+        let sim = SimConfig { faults: spec, ..SimConfig::default() };
+        let engine = SimEngine::new(cfg.clone(), sim);
+        let pool = Arc::clone(engine.pool());
+        let prefix = engine.prefix_cache().map(Arc::clone).unwrap();
+        let (handle, metrics, join) = spawn_with(cfg, move || Ok(engine)).unwrap();
+
+        let mut rxs = Vec::new();
+        for i in 0..N_REQUESTS {
+            let deadline_ms = if chaos_clients && i % 5 == 4 { Some(1) } else { None };
+            let rx = handle
+                .submit(Request {
+                    id: i,
+                    prompt: storm_prompt(i),
+                    max_new_tokens: storm_max_new(i),
+                    policy: "lychee".into(),
+                    deadline_ms,
+                })
+                .unwrap();
+            if chaos_clients && i % 6 == 3 {
+                handle.cancel(i);
+            }
+            if chaos_clients && i % 7 == 5 {
+                // mid-stream disconnect: the coordinator notices on its
+                // next failed token write and tears the sequence down
+                drop(rx);
+            } else {
+                rxs.push((i, rx));
+            }
+        }
+
+        let mut outcomes = BTreeMap::new();
+        for (i, rx) in rxs {
+            let mut terminal: Option<&'static str> = None;
+            for ev in rx {
+                match ev {
+                    Event::Token(_) => {
+                        assert!(terminal.is_none(), "req {i}: token after terminal event");
+                    }
+                    Event::Done(_) => {
+                        assert!(terminal.is_none(), "req {i}: second terminal event");
+                        terminal = Some("done");
+                    }
+                    Event::Cancelled(kind) => {
+                        assert!(terminal.is_none(), "req {i}: second terminal event");
+                        terminal = Some(kind.as_str());
+                    }
+                    Event::Error(_) => {
+                        assert!(terminal.is_none(), "req {i}: second terminal event");
+                        terminal = Some("failed");
+                    }
+                }
+            }
+            let t = terminal.unwrap_or_else(|| panic!("req {i}: stream ended without terminal"));
+            outcomes.insert(i, t);
+        }
+
+        handle.drain();
+        join.join().unwrap();
+
+        let (
+            cancellations,
+            deadline_exceeded,
+            sequence_panics,
+            drain_state,
+            requests_in_flight,
+            kv_bytes_in_use,
+        ) = {
+            let m = metrics.lock().unwrap();
+            (
+                m.cancellations,
+                m.deadline_exceeded,
+                m.sequence_panics,
+                m.drain_state,
+                m.requests_in_flight,
+                m.kv_bytes_in_use,
+            )
+        };
+        let st = pool.stats();
+        // force-evict every refcount-0 radix entry: whatever shared
+        // bytes remain would mean a leaked borrower refcount
+        prefix.evict_bytes(usize::MAX);
+        let after = pool.stats();
+        StormReport {
+            outcomes,
+            cancellations,
+            deadline_exceeded,
+            sequence_panics,
+            drain_state,
+            requests_in_flight,
+            kv_bytes_in_use,
+            pool_bytes_in_use: st.bytes_in_use,
+            pool_pages_in_use: st.pages_in_use,
+            shared_bytes_after_evict: after.bytes_shared,
+            shared_pages_after_evict: after.pages_shared,
+        }
+    }
+
+    fn assert_accounting_baseline(r: &StormReport) {
+        assert_eq!(r.drain_state, 2, "drain did not complete");
+        assert_eq!(r.requests_in_flight, 0);
+        assert_eq!(r.kv_bytes_in_use, 0, "metrics gauge not back to baseline");
+        assert_eq!(r.pool_bytes_in_use, 0, "arena leaked private bytes");
+        assert_eq!(r.pool_pages_in_use, 0, "arena leaked private pages");
+        assert_eq!(r.shared_bytes_after_evict, 0, "radix refcount leak: shared bytes pinned");
+        assert_eq!(r.shared_pages_after_evict, 0, "radix refcount leak: shared pages pinned");
+    }
+
+    #[test]
+    fn chaos_clean_storm_completes_everything() {
+        let r = run_storm(None, 64, false);
+        assert_eq!(r.outcomes.len(), N_REQUESTS as usize);
+        for (i, outcome) in &r.outcomes {
+            assert_eq!(*outcome, "done", "req {i} under no faults");
+        }
+        assert_eq!(r.cancellations, 0);
+        assert_eq!(r.deadline_exceeded, 0);
+        assert_eq!(r.sequence_panics, 0);
+        assert_accounting_baseline(&r);
+    }
+
+    #[test]
+    fn chaos_alloc_failures_leak_nothing() {
+        let spec = FaultSpec {
+            seed: 11,
+            cfg: FaultConfig { alloc_fail_permille: 120, ..FaultConfig::default() },
+        };
+        // big pool (no preemption noise): outcomes depend only on the
+        // deterministic page-index schedule
+        let r = run_storm(Some(spec.clone()), 64, false);
+        assert_eq!(r.outcomes.len(), N_REQUESTS as usize);
+        // the schedule is a pure function: probe it to learn whether any
+        // page index a storm request can reach is scheduled to fail.
+        // Reachable = 0..=6: request 0 runs cold through index 4
+        // (256-token prompt + 6 decode steps), and the longest prompts
+        // (404 tokens + <=10 decode steps) cross the 384-token boundary
+        // (index 6) but never reach 448. Indices past 6 are unreachable,
+        // so a failure scheduled only there must not be demanded below.
+        let probe = FaultPlan::new(spec);
+        let reachable_failure = (0..=6u64).any(|p| probe.alloc_should_fail(p));
+        if reachable_failure {
+            assert!(
+                r.outcomes.values().any(|o| *o == "failed"),
+                "plan schedules an alloc failure but nothing failed: {:?}",
+                r.outcomes
+            );
+        } else {
+            assert!(r.outcomes.values().all(|o| *o == "done"));
+        }
+        assert_accounting_baseline(&r);
+    }
+
+    #[test]
+    fn chaos_stalled_chunks_and_steps_still_terminate() {
+        let spec = FaultSpec {
+            seed: 23,
+            cfg: FaultConfig {
+                stall_chunk_permille: 250,
+                stall_decode_permille: 250,
+                stall_us: 200,
+                ..FaultConfig::default()
+            },
+        };
+        let r = run_storm(Some(spec), 64, false);
+        for (i, outcome) in &r.outcomes {
+            assert_eq!(*outcome, "done", "req {i}: stalls must slow, never fail");
+        }
+        assert_accounting_baseline(&r);
+    }
+
+    #[test]
+    fn chaos_engine_panics_are_isolated_to_the_batch() {
+        let spec = FaultSpec {
+            seed: 5,
+            cfg: FaultConfig { panic_step_permille: 30, ..FaultConfig::default() },
+        };
+        let r = run_storm(Some(spec.clone()), 64, false);
+        // probe the deterministic schedule over every (id, decode-pos)
+        // pair a storm sequence actually visits: sequence ids are
+        // assigned 1..=N in FCFS admission order (no preemption at this
+        // pool size), decode runs from prompt_len to prompt_len+max_new
+        let probe = FaultPlan::new(spec);
+        let mut scheduled = false;
+        for i in 0..N_REQUESTS {
+            let seq_id = i + 1;
+            let start = storm_prompt(i).len() as u64;
+            let end = start + storm_max_new(i) as u64;
+            if (start..end).any(|pos| probe.panic_at_step(seq_id, pos)) {
+                scheduled = true;
+            }
+        }
+        if scheduled {
+            assert!(r.sequence_panics >= 1, "scheduled panic never isolated");
+            assert!(
+                r.outcomes.values().any(|o| *o == "failed"),
+                "a panic fired but no request failed: {:?}",
+                r.outcomes
+            );
+        } else {
+            assert_eq!(r.sequence_panics, 0);
+            assert!(r.outcomes.values().all(|o| *o == "done"));
+        }
+        // the process survived (we are here) and nothing leaked
+        assert_accounting_baseline(&r);
+    }
+
+    #[test]
+    fn chaos_deadline_storm_cancels_and_disconnects_keep_accounting_exact() {
+        // small pool: cancellation races radix adoption, seal-back, LRU
+        // eviction, AND preemption
+        let r = run_storm(None, 2, true);
+        for (i, outcome) in &r.outcomes {
+            assert!(
+                ["done", "cancelled", "deadline_exceeded", "failed"].contains(outcome),
+                "req {i}: unexpected outcome {outcome}"
+            );
+        }
+        // every explicitly cancelled id we still observe must not be
+        // "done-after-cancel": its outcome is whatever the race produced,
+        // but the counters must cover all teardown paths
+        assert!(
+            r.cancellations + r.deadline_exceeded > 0,
+            "adversarial clients produced no lifecycle terminations"
+        );
+        assert_accounting_baseline(&r);
+    }
+
+    #[test]
+    fn chaos_drain_rejects_new_work_with_structured_error() {
+        let cfg = storm_cfg(64);
+        let engine = SimEngine::new(cfg.clone(), SimConfig::default());
+        let (handle, metrics, join) = spawn_with(cfg, move || Ok(engine)).unwrap();
+
+        let rx_before = handle
+            .submit(Request {
+                id: 1,
+                prompt: storm_prompt(1),
+                max_new_tokens: 4,
+                policy: "lychee".into(),
+                deadline_ms: None,
+            })
+            .unwrap();
+        handle.drain();
+        // submitted after the drain message: must be rejected, not run
+        let rx_after = handle
+            .submit(Request {
+                id: 2,
+                prompt: storm_prompt(2),
+                max_new_tokens: 4,
+                policy: "lychee".into(),
+                deadline_ms: None,
+            })
+            .unwrap();
+
+        // in-flight work finishes or is shed with a structured outcome
+        let mut before_terminal = None;
+        for ev in rx_before {
+            match ev {
+                Event::Done(_) => before_terminal = Some("done"),
+                Event::Cancelled(k) => before_terminal = Some(k.as_str()),
+                Event::Error(_) => before_terminal = Some("failed"),
+                Event::Token(_) => {}
+            }
+        }
+        assert!(before_terminal.is_some(), "pre-drain request got no terminal outcome");
+
+        let mut rejected = false;
+        for ev in rx_after {
+            if let Event::Error(e) = ev {
+                assert!(e.contains("draining"), "wrong reject reason: {e}");
+                rejected = true;
+            }
+        }
+        assert!(rejected, "post-drain submission was not rejected");
+
+        join.join().unwrap();
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.drain_state, 2);
+        assert_eq!(m.requests_in_flight, 0);
+    }
+
+    #[test]
+    fn chaos_cancel_in_every_state_frees_reservations() {
+        // cancel while queued: submit more than the batch can start
+        let cfg = storm_cfg(64);
+        let engine = SimEngine::new(cfg.clone(), SimConfig::default());
+        let pool = Arc::clone(engine.pool());
+        let (handle, metrics, join) = spawn_with(cfg, move || Ok(engine)).unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..8u64 {
+            rxs.push((
+                i,
+                handle
+                    .submit(Request {
+                        id: i,
+                        prompt: storm_prompt(i),
+                        max_new_tokens: 8,
+                        policy: "lychee".into(),
+                        deadline_ms: None,
+                    })
+                    .unwrap(),
+            ));
+            handle.cancel(i); // lands while queued, prefilling, or decoding
+        }
+        let mut cancelled_seen = 0;
+        for (i, rx) in rxs {
+            let mut terminal = None;
+            for ev in rx {
+                match ev {
+                    Event::Done(_) => terminal = Some("done"),
+                    Event::Cancelled(k) => {
+                        terminal = Some(k.as_str());
+                        cancelled_seen += 1;
+                    }
+                    Event::Error(e) => panic!("req {i}: unexpected error {e}"),
+                    Event::Token(_) => {}
+                }
+            }
+            assert!(terminal.is_some(), "req {i}: no terminal event");
+        }
+        // cancels are sent right after submit, before the scheduler can
+        // finish the request: expect at least one to land
+        assert!(cancelled_seen > 0, "no cancellation ever landed");
+        handle.drain();
+        join.join().unwrap();
+        assert_eq!(pool.stats().bytes_in_use, 0);
+        assert_eq!(metrics.lock().unwrap().cancellations as usize, cancelled_seen);
+    }
+
+    /// Satellite: the cancel hammer — threads racing cancels and
+    /// dropped receivers against radix adoption, seal-back, LRU
+    /// eviction, and preemption on a tiny pool, then byte-exactness
+    /// asserts. Runs under the TSan lane (`coordinator::` filter).
+    #[test]
+    fn cancel_hammer_races_radix_and_preemption_accounting_stays_exact() {
+        // ~1.3k-token prompts against a 1 MB pool: at most ~2 sequences
+        // fit, so cancels race admission waits, preemption, radix
+        // adoption/seal-back, and pressure eviction all at once
+        let mut cfg = storm_cfg(1);
+        cfg.kv.prefix_cache_mb = 1;
+        fn hammer_prompt(id: u64) -> Vec<u8> {
+            let mut p = vec![b'p'; SHARED_PREFIX_TOKENS];
+            p.extend(prompt_text(1200 + (id as usize % 5) * 160, id));
+            p
+        }
+        let engine = SimEngine::new(cfg.clone(), SimConfig::default());
+        let pool = Arc::clone(engine.pool());
+        let prefix = engine.prefix_cache().map(Arc::clone).unwrap();
+        let (handle, metrics, join) = spawn_with(cfg, move || Ok(engine)).unwrap();
+
+        let threads: Vec<_> = (0..3u64)
+            .map(|t| {
+                let h: Handle = handle.clone();
+                std::thread::spawn(move || {
+                    for k in 0..8u64 {
+                        let id = t * 100 + k;
+                        let rx = h
+                            .submit(Request {
+                                id,
+                                prompt: hammer_prompt(id),
+                                max_new_tokens: 6,
+                                policy: "lychee".into(),
+                                deadline_ms: None,
+                            })
+                            .unwrap();
+                        match k % 3 {
+                            0 => h.cancel(id), // explicit cancel, then read to terminal
+                            1 => {
+                                drop(rx); // disconnect mid-flight
+                                continue;
+                            }
+                            _ => {}
+                        }
+                        for ev in rx {
+                            if matches!(
+                                ev,
+                                Event::Done(_) | Event::Cancelled(_) | Event::Error(_)
+                            ) {
+                                break;
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        handle.drain();
+        join.join().unwrap();
+
+        let st = pool.stats();
+        assert_eq!(st.bytes_in_use, 0, "private bytes leaked under the hammer");
+        assert_eq!(st.pages_in_use, 0, "private pages leaked under the hammer");
+        prefix.evict_bytes(usize::MAX);
+        let after = pool.stats();
+        assert_eq!(after.bytes_shared, 0, "shared-page refcount leaked under the hammer");
+        assert_eq!(after.pages_shared, 0);
+        let m = metrics.lock().unwrap();
+        assert_eq!(m.drain_state, 2);
+        assert_eq!(m.kv_bytes_in_use, 0);
+    }
+
+    /// Determinism contract: with a fixed seed, the engine-level fault
+    /// schedule is bit-identical across runs — same chunk errors, same
+    /// messages — independent of wall-clock time.
+    #[test]
+    fn fault_schedule_is_bit_deterministic_across_runs() {
+        let spec = FaultSpec {
+            seed: 77,
+            cfg: FaultConfig { alloc_fail_permille: 150, ..FaultConfig::default() },
+        };
+        let run_once = || -> Vec<(usize, String)> {
+            let mut cfg = Config::new();
+            cfg.serving.prefill_chunk_tokens = 64;
+            let sim = SimConfig { faults: Some(spec.clone()), ..SimConfig::default() };
+            let engine = SimEngine::new(cfg, sim);
+            let mut failures = Vec::new();
+            for i in 0..6u64 {
+                let prompt = storm_prompt(i);
+                let mut st = engine.begin_prefill(i + 1, &prompt, "lychee").unwrap();
+                let mut chunk = 0usize;
+                loop {
+                    match engine.prefill_chunk(&mut st) {
+                        Ok(crate::engine::PrefillProgress::Ready) => break,
+                        Ok(_) => chunk += 1,
+                        Err(e) => {
+                            failures.push((chunk, format!("{e}")));
+                            break;
+                        }
+                    }
+                }
+            }
+            failures
+        };
+        let a = run_once();
+        let b = run_once();
+        assert_eq!(a, b, "fault schedule diverged across identical runs");
+    }
+}

@@ -25,6 +25,10 @@
 //! resumption (already-streamed tokens are not re-sent), instead of
 //! rejecting or starving new work.
 
+/// Chaos suite: the real scheduler over `SimEngine` under deterministic
+/// fault plans (contents are entirely `#[cfg(test)]`).
+mod chaos;
+
 use crate::config::Config;
 use crate::engine::{Engine, EngineCore, PrefillProgress, PrefillState, Sampling, Sequence};
 use crate::util::lock_recover;
@@ -36,6 +40,10 @@ use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// A generation request.
+///
+/// Lifecycle operations ([`Handle::cancel`], deadline expiry) key on
+/// `id`, so callers using them must keep ids unique among in-flight
+/// requests (the TCP server allocates from a process-wide counter).
 #[derive(Clone, Debug)]
 pub struct Request {
     pub id: u64,
@@ -43,6 +51,11 @@ pub struct Request {
     pub max_new_tokens: usize,
     /// Retrieval policy name ("lychee", "full", "quest", ...).
     pub policy: String,
+    /// Wall-clock budget from submission, milliseconds. `None` falls
+    /// back to `serving.default_deadline_ms` (0 there = no deadline).
+    /// Expiry terminates the request in whatever state it is in with a
+    /// `deadline_exceeded` outcome.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Completion statistics for one request.
@@ -57,11 +70,35 @@ pub struct FinishStats {
     pub e2e_ms: f64,
 }
 
-/// Streamed to the requester.
+/// Why a request terminated without completing.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CancelKind {
+    /// Explicit `{"cancel": id}`, client disconnect, or shutdown while
+    /// the request was still in flight.
+    Cancelled,
+    /// The request's wall-clock deadline passed.
+    DeadlineExceeded,
+}
+
+impl CancelKind {
+    /// Wire name of the outcome (`cancelled` / `deadline_exceeded`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CancelKind::Cancelled => "cancelled",
+            CancelKind::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+}
+
+/// Streamed to the requester. Every submission ends with exactly one
+/// terminal event: `Done`, `Cancelled`, or `Error`.
 #[derive(Clone, Debug)]
 pub enum Event {
     Token(u8),
     Done(FinishStats),
+    /// Terminated without completing; pages were freed, adopted shared
+    /// refs dropped, and admission reservations returned.
+    Cancelled(CancelKind),
     Error(String),
 }
 
@@ -114,6 +151,24 @@ pub struct Metrics {
     pub preemptions: u64,
     /// Gauge: requests queued or mid-prefill (not yet decoding).
     pub queue_depth: u64,
+    /// Gauge: every request the coordinator currently owns (queued +
+    /// prefilling + decoding).
+    pub requests_in_flight: u64,
+    /// Requests terminated by explicit cancel, client disconnect, or
+    /// shutdown while in flight.
+    pub cancellations: u64,
+    /// Requests terminated by deadline expiry (`deadline_ms` /
+    /// `serving.default_deadline_ms`).
+    pub deadline_exceeded: u64,
+    /// Engine panics the tick loop isolated via `catch_unwind` (each
+    /// fails the affected sequence(s) with a structured line instead of
+    /// killing the process).
+    pub sequence_panics: u64,
+    /// Faults fired by the engine's installed fault plan (chaos builds
+    /// only; always 0 otherwise).
+    pub faults_injected_total: u64,
+    /// Lifecycle gauge: 0 = serving, 1 = draining, 2 = drained.
+    pub drain_state: u64,
 }
 
 impl Metrics {
@@ -139,11 +194,17 @@ struct QueuedReq {
     preempted: bool,
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
+    /// Absolute expiry computed once at submission; preemption requeues
+    /// carry it unchanged (the clock never restarts).
+    deadline: Option<Instant>,
 }
 
 /// A sequence mid-prefill: advanced one chunk per scheduler tick.
 struct PrefillJob {
     st: PrefillState,
+    /// The submitting [`Request::id`] — cancellation and deadline
+    /// teardown key on this, not the internal sequence id.
+    req_id: u64,
     tx: Sender<Event>,
     policy: String,
     max_new: usize,
@@ -152,6 +213,7 @@ struct PrefillJob {
     submitted: Instant,
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
+    deadline: Option<Instant>,
     /// Arena bytes reserved at admission (estimate over prompt + the
     /// remaining output budget, net of borrowed shared prefix bytes —
     /// those are accounted once globally in the pool's shared gauge);
@@ -166,6 +228,8 @@ struct PrefillJob {
 /// A decoding sequence.
 struct Running {
     seq: Sequence,
+    /// See [`PrefillJob::req_id`].
+    req_id: u64,
     tx: Sender<Event>,
     policy: String,
     max_new: usize,
@@ -175,11 +239,17 @@ struct Running {
     submitted: Instant,
     first_token: Option<Instant>,
     decode_started: Option<Instant>,
+    deadline: Option<Instant>,
     reserved_bytes: usize,
 }
 
 enum Msg {
     Submit(Request, Sender<Event>),
+    /// Cancel the request with this [`Request::id`], in any state.
+    Cancel(u64),
+    /// Graceful drain: stop admission, finish in-flight work, exit.
+    Drain,
+    /// Immediate stop: in-flight work is flushed with `Cancelled` lines.
     Shutdown,
 }
 
@@ -207,12 +277,35 @@ impl Handle {
             match ev {
                 Event::Token(t) => out.push(t),
                 Event::Done(stats) => return Ok((out, stats)),
+                Event::Cancelled(kind) => anyhow::bail!("request {}", kind.as_str()),
                 Event::Error(e) => anyhow::bail!("request failed: {e}"),
             }
         }
         anyhow::bail!("stream ended without Done")
     }
 
+    /// Cancel a request by [`Request::id`], in whatever state it is in
+    /// (queued, prefilling, decoding, preempt-requeued). Fire-and-forget
+    /// and idempotent: unknown or already-finished ids are ignored. A
+    /// hit frees the sequence's private pages, drops its adopted
+    /// shared-page refs, returns its admission reservation, and emits
+    /// one `Event::Cancelled(CancelKind::Cancelled)` terminal event.
+    pub fn cancel(&self, request_id: u64) {
+        let _ = self.tx.send(Msg::Cancel(request_id));
+    }
+
+    /// Begin a graceful drain: new submissions are rejected with a
+    /// structured error, queued-but-unstarted requests get structured
+    /// rejects, and in-flight sequences run to completion (bounded by
+    /// their deadlines, if any). The scheduler thread exits — and the
+    /// [`spawn`] join handle returns — once everything has terminated;
+    /// `drain_state` in [`Metrics`] tracks 0 → 1 → 2.
+    pub fn drain(&self) {
+        let _ = self.tx.send(Msg::Drain);
+    }
+
+    /// Immediate stop: anything still in flight is flushed with a
+    /// terminal `Cancelled` event before the scheduler thread exits.
     pub fn shutdown(&self) {
         let _ = self.tx.send(Msg::Shutdown);
     }
@@ -262,18 +355,17 @@ where
     let (ready_tx, ready_rx) = channel();
     let join = std::thread::Builder::new()
         .name("lychee-coordinator".into())
-        .spawn(move || {
-            let engine = match factory() {
-                Ok(e) => {
-                    let _ = ready_tx.send(Ok(()));
-                    e
-                }
-                Err(e) => {
-                    let _ = ready_tx.send(Err(format!("{e:#}")));
-                    return;
-                }
-            };
-            Coordinator { engine, cfg, rx, metrics: m2 }.run();
+        .spawn(move || match factory() {
+            Ok(engine) => {
+                let _ = ready_tx.send(Ok(()));
+                Coordinator { engine, cfg, rx, metrics: m2 }.run();
+            }
+            // init failed before the tick loop started: nothing is in
+            // flight, so there are no outcomes to flush — the caller
+            // gets the error through the ready channel
+            Err(e) => {
+                let _ = ready_tx.send(Err(format!("{e:#}")));
+            }
         })?;
     match ready_rx.recv() {
         Ok(Ok(())) => Ok((Handle { tx }, metrics, join)),
@@ -302,10 +394,19 @@ enum Admission {
 }
 
 impl<E: EngineCore> Coordinator<E> {
-    /// Validate + enqueue one submission (shared by the drain loop and
-    /// the idle path).
-    fn enqueue(&self, pending: &mut VecDeque<QueuedReq>, mut req: Request, tx: Sender<Event>) {
-        let err = if pending.len() >= self.cfg.serving.queue_cap {
+    /// Validate + enqueue one submission (shared by the message-drain
+    /// loop and the idle path). While draining, every new submission is
+    /// rejected with a structured error.
+    fn enqueue(
+        &self,
+        pending: &mut VecDeque<QueuedReq>,
+        draining: bool,
+        mut req: Request,
+        tx: Sender<Event>,
+    ) {
+        let err = if draining {
+            Some("rejected: server is draining".to_string())
+        } else if pending.len() >= self.cfg.serving.queue_cap {
             Some("queue full".to_string())
         } else if req.prompt.len() > self.engine.max_prompt() {
             Some(format!(
@@ -328,6 +429,10 @@ impl<E: EngineCore> Coordinator<E> {
                 // request cannot monopolize the batch (or the arena)
                 req.max_new_tokens = req.max_new_tokens.min(self.cfg.serving.max_new_tokens);
                 lock_recover(&self.metrics).requests += 1;
+                let deadline_ms =
+                    req.deadline_ms.unwrap_or(self.cfg.serving.default_deadline_ms);
+                let deadline = (deadline_ms > 0)
+                    .then(|| Instant::now() + std::time::Duration::from_millis(deadline_ms));
                 pending.push_back(QueuedReq {
                     req,
                     tx,
@@ -336,6 +441,7 @@ impl<E: EngineCore> Coordinator<E> {
                     preempted: false,
                     first_token: None,
                     decode_started: None,
+                    deadline,
                 });
             }
         }
@@ -443,6 +549,7 @@ impl<E: EngineCore> Coordinator<E> {
         *reserved_total = reserved_total.saturating_sub(victim.reserved_bytes);
         let Running {
             seq,
+            req_id,
             tx,
             policy,
             max_new,
@@ -450,14 +557,18 @@ impl<E: EngineCore> Coordinator<E> {
             submitted,
             first_token,
             decode_started,
+            deadline,
             ..
         } = victim;
         let requeued = QueuedReq {
             req: Request {
-                id: seq.id,
+                id: req_id,
                 prompt: seq.text.clone(), // prompt + generated prefix
                 max_new_tokens: max_new,
                 policy,
+                // the absolute deadline below survives the requeue; the
+                // wire-level budget must not restart the clock
+                deadline_ms: None,
             },
             tx,
             submitted,
@@ -465,6 +576,7 @@ impl<E: EngineCore> Coordinator<E> {
             preempted: true,
             first_token,
             decode_started,
+            deadline,
         };
         drop(seq); // pages recycle to the arena here
         // back of the queue: forward progress for the waiting head is the
@@ -480,6 +592,7 @@ impl<E: EngineCore> Coordinator<E> {
     fn refresh_pool_gauge(&self) {
         let st = self.engine.pool().stats();
         let prefix_evictions = self.engine.prefix_cache().map_or(0, |c| c.stats().evictions);
+        let faults = self.engine.faults_injected();
         let mut m = lock_recover(&self.metrics);
         m.kv_bytes_in_use = st.bytes_in_use as u64;
         m.kv_bytes_shared = st.bytes_shared as u64;
@@ -488,10 +601,164 @@ impl<E: EngineCore> Coordinator<E> {
         m.kv_pages_recycled_total = st.pages_recycled_total;
         m.prefix_evictions = prefix_evictions;
         m.selects_before_build = crate::sparse::selects_before_build();
+        m.faults_injected_total = faults;
     }
 
-    /// Scheduler loop: admit, advance one prefill chunk, decode, stream,
-    /// repeat.
+    /// Tear down one request wherever it lives — queued (including
+    /// preempt-requeued), mid-prefill, or decoding. Frees its private
+    /// pages, drops its adopted shared-page refs (a partial prefill
+    /// seals nothing back), returns its admission reservation, emits the
+    /// structured terminal event, and bumps the matching counter.
+    /// Idempotent: unknown ids (finished, never existed, already
+    /// cancelled) return false and change nothing.
+    fn cancel_request(
+        &self,
+        pending: &mut VecDeque<QueuedReq>,
+        prefilling: &mut VecDeque<PrefillJob>,
+        running: &mut Vec<Running>,
+        reserved_total: &mut usize,
+        request_id: u64,
+        kind: CancelKind,
+    ) -> bool {
+        let ev = Event::Cancelled(kind);
+        let hit = if let Some(i) = pending.iter().position(|q| q.req.id == request_id) {
+            // queued requests hold no reservation yet
+            if let Some(q) = pending.remove(i) {
+                let _ = q.tx.send(ev);
+            }
+            true
+        } else if let Some(i) = prefilling.iter().position(|j| j.req_id == request_id) {
+            if let Some(job) = prefilling.remove(i) {
+                *reserved_total = reserved_total.saturating_sub(job.reserved_bytes);
+                let _ = job.tx.send(ev);
+                // dropping `job.st` recycles the partial prefill's
+                // private pages and unwinds its adopted shared refs
+            }
+            true
+        } else if let Some(i) = running.iter().position(|r| r.req_id == request_id) {
+            let r = running.remove(i);
+            *reserved_total = reserved_total.saturating_sub(r.reserved_bytes);
+            let _ = r.tx.send(ev);
+            true
+        } else {
+            false
+        };
+        if hit {
+            let mut m = lock_recover(&self.metrics);
+            match kind {
+                CancelKind::Cancelled => m.cancellations += 1,
+                CancelKind::DeadlineExceeded => m.deadline_exceeded += 1,
+            }
+            drop(m);
+            self.refresh_pool_gauge();
+        }
+        hit
+    }
+
+    /// Expire every request whose deadline has passed, in any state.
+    /// Runs once per tick, so enforcement granularity is one tick.
+    fn sweep_deadlines(
+        &self,
+        pending: &mut VecDeque<QueuedReq>,
+        prefilling: &mut VecDeque<PrefillJob>,
+        running: &mut Vec<Running>,
+        reserved_total: &mut usize,
+    ) {
+        let now = Instant::now();
+        loop {
+            let expired = pending
+                .iter()
+                .find(|q| q.deadline.is_some_and(|d| d <= now))
+                .map(|q| q.req.id)
+                .or_else(|| {
+                    prefilling
+                        .iter()
+                        .find(|j| j.deadline.is_some_and(|d| d <= now))
+                        .map(|j| j.req_id)
+                })
+                .or_else(|| {
+                    running
+                        .iter()
+                        .find(|r| r.deadline.is_some_and(|d| d <= now))
+                        .map(|r| r.req_id)
+                });
+            match expired {
+                Some(id) => {
+                    self.cancel_request(
+                        pending,
+                        prefilling,
+                        running,
+                        reserved_total,
+                        id,
+                        CancelKind::DeadlineExceeded,
+                    );
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Enter drain mode (idempotent): reject every queued request that
+    /// has not yet been admitted with a structured error. Preempt-
+    /// requeued entries are *admitted work mid-flight* — they stay
+    /// queued and run to completion. New submissions are rejected by
+    /// `enqueue` from here on; the tick loop exits once all three
+    /// queues are empty.
+    fn begin_drain(&self, draining: &mut bool, pending: &mut VecDeque<QueuedReq>) {
+        if !*draining {
+            *draining = true;
+            let mut shed = 0u64;
+            pending.retain(|q| {
+                let admitted_before = q.preempted || q.carried > 0;
+                if !admitted_before {
+                    let _ = q.tx.send(Event::Error("rejected: server is draining".to_string()));
+                    shed += 1;
+                }
+                admitted_before
+            });
+            let mut m = lock_recover(&self.metrics);
+            m.rejected += shed;
+            m.drain_state = 1;
+        }
+    }
+
+    /// Post-loop teardown: flush one structured terminal event for
+    /// anything still in flight (non-empty only on `Shutdown` — a
+    /// completed drain left the queues empty), recycle its pages, zero
+    /// the gauges, and mark the drain finished.
+    fn finish(
+        &self,
+        pending: VecDeque<QueuedReq>,
+        prefilling: VecDeque<PrefillJob>,
+        running: Vec<Running>,
+    ) {
+        let mut aborted = 0u64;
+        for q in pending {
+            let _ = q.tx.send(Event::Cancelled(CancelKind::Cancelled));
+            aborted += 1;
+        }
+        for job in prefilling {
+            let _ = job.tx.send(Event::Cancelled(CancelKind::Cancelled));
+            aborted += 1; // dropping the job recycles its pages
+        }
+        for r in running {
+            let _ = r.tx.send(Event::Cancelled(CancelKind::Cancelled));
+            aborted += 1;
+        }
+        {
+            let mut m = lock_recover(&self.metrics);
+            m.cancellations += aborted;
+            m.queue_depth = 0;
+            m.requests_in_flight = 0;
+            m.drain_state = 2;
+        }
+        self.refresh_pool_gauge();
+    }
+
+    /// Scheduler loop: admit, sweep deadlines, advance one prefill
+    /// chunk, decode, stream, repeat — until shutdown or a completed
+    /// drain. Every exit path runs [`Coordinator::finish`], so every
+    /// request the loop ever owned gets exactly one terminal event.
     pub fn run(self) {
         let mut pending: VecDeque<QueuedReq> = VecDeque::new();
         let mut prefilling: VecDeque<PrefillJob> = VecDeque::new();
@@ -502,16 +769,43 @@ impl<E: EngineCore> Coordinator<E> {
         let mut reserved_total: usize = 0;
         // consecutive ticks the current head-of-queue request has waited
         let mut wait_ticks: usize = 0;
+        // graceful-drain mode: admission closed, in-flight work finishes
+        let mut draining = false;
 
-        loop {
-            // ---- drain the submit queue --------------------------------
+        'ticks: loop {
+            // ---- drain the message queue -------------------------------
             loop {
                 match self.rx.try_recv() {
-                    Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, req, tx),
-                    Ok(Msg::Shutdown) => return,
+                    Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, draining, req, tx),
+                    Ok(Msg::Cancel(id)) => {
+                        self.cancel_request(
+                            &mut pending,
+                            &mut prefilling,
+                            &mut running,
+                            &mut reserved_total,
+                            id,
+                            CancelKind::Cancelled,
+                        );
+                    }
+                    Ok(Msg::Drain) => self.begin_drain(&mut draining, &mut pending),
+                    Ok(Msg::Shutdown) => break 'ticks,
                     Err(TryRecvError::Empty) => break,
-                    Err(TryRecvError::Disconnected) => return,
+                    Err(TryRecvError::Disconnected) => {
+                        // every Handle is gone: no new work can ever
+                        // arrive. Finish what is in flight, then stop —
+                        // the old bare `return` here abandoned running
+                        // sequences without a terminal event.
+                        self.begin_drain(&mut draining, &mut pending);
+                        break;
+                    }
                 }
+            }
+
+            // ---- deadline sweep (one-tick enforcement granularity) ------
+            self.sweep_deadlines(&mut pending, &mut prefilling, &mut running, &mut reserved_total);
+
+            if draining && pending.is_empty() && prefilling.is_empty() && running.is_empty() {
+                break 'ticks; // drain complete: nothing left to finish
             }
 
             // ---- admit one request per tick (arena backpressure) --------
@@ -588,6 +882,7 @@ impl<E: EngineCore> Coordinator<E> {
                             reserved_total += reserved;
                             prefilling.push_back(PrefillJob {
                                 st,
+                                req_id: q.req.id,
                                 tx: q.tx,
                                 policy: q.req.policy,
                                 max_new: q.req.max_new_tokens,
@@ -596,6 +891,7 @@ impl<E: EngineCore> Coordinator<E> {
                                 submitted: q.submitted,
                                 first_token: q.first_token,
                                 decode_started: q.decode_started,
+                                deadline: q.deadline,
                                 reserved_bytes: reserved,
                                 shared_bytes: adopted,
                             });
@@ -612,8 +908,18 @@ impl<E: EngineCore> Coordinator<E> {
             // costs the running batch at most one chunk of stall per
             // generated token)
             if let Some(job) = prefilling.front_mut() {
-                match self.engine.prefill_chunk(&mut job.st) {
-                    Ok(progress) => {
+                // Panic isolation: an engine panic mid-chunk fails only
+                // this job — structured terminal line, reservation
+                // returned, pages recycled — and the scheduler (plus
+                // every other sequence) keeps going; `lock_recover`
+                // un-poisons any shared lock the panic crossed.
+                // AssertUnwindSafe: on panic the job's state is dropped
+                // wholesale below, never observed again.
+                let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    self.engine.prefill_chunk(&mut job.st)
+                }));
+                match stepped {
+                    Ok(Ok(progress)) => {
                         lock_recover(&self.metrics).prefill_chunks_executed += 1;
                         // the chunk just leased pages; keep the gauge live
                         // for the whole (possibly long) prefill window
@@ -637,6 +943,7 @@ impl<E: EngineCore> Coordinator<E> {
                                     reserved_total = reserved_total.saturating_sub(release);
                                     running.push(Running {
                                         seq,
+                                        req_id: job.req_id,
                                         tx: job.tx,
                                         policy: job.policy,
                                         max_new: job.max_new,
@@ -645,6 +952,7 @@ impl<E: EngineCore> Coordinator<E> {
                                         submitted: job.submitted,
                                         first_token: job.first_token,
                                         decode_started: job.decode_started,
+                                        deadline: job.deadline,
                                         reserved_bytes: job.reserved_bytes - release,
                                     });
                                 }
@@ -656,7 +964,7 @@ impl<E: EngineCore> Coordinator<E> {
                             }
                         }
                     }
-                    Err(e) => {
+                    Ok(Err(e)) => {
                         // same invariant as the Ready branch above
                         let Some(job) = prefilling.pop_front() else {
                             continue;
@@ -665,43 +973,95 @@ impl<E: EngineCore> Coordinator<E> {
                         let _ = job.tx.send(Event::Error(format!("prefill: {e}")));
                         self.refresh_pool_gauge();
                     }
+                    Err(panic) => {
+                        // same invariant as the Ready branch above
+                        let Some(job) = prefilling.pop_front() else {
+                            continue;
+                        };
+                        reserved_total = reserved_total.saturating_sub(job.reserved_bytes);
+                        lock_recover(&self.metrics).sequence_panics += 1;
+                        let _ = job.tx.send(Event::Error(format!(
+                            "prefill: engine panicked: {}",
+                            panic_message(panic.as_ref())
+                        )));
+                        self.refresh_pool_gauge();
+                    }
                 }
             }
 
-            lock_recover(&self.metrics).queue_depth = (pending.len() + prefilling.len()) as u64;
+            {
+                let mut m = lock_recover(&self.metrics);
+                m.queue_depth = (pending.len() + prefilling.len()) as u64;
+                m.requests_in_flight =
+                    (pending.len() + prefilling.len() + running.len()) as u64;
+            }
 
             if running.is_empty() {
                 if pending.is_empty() && prefilling.is_empty() {
-                    // idle: block briefly for new work
+                    // idle: block briefly for new work (a draining
+                    // coordinator with empty queues exited above)
                     match self
                         .rx
                         .recv_timeout(std::time::Duration::from_micros(self.cfg.serving.idle_tick_us))
                     {
-                        Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, req, tx),
-                        Ok(Msg::Shutdown) => return,
+                        Ok(Msg::Submit(req, tx)) => self.enqueue(&mut pending, draining, req, tx),
+                        Ok(Msg::Cancel(id)) => {
+                            self.cancel_request(
+                                &mut pending,
+                                &mut prefilling,
+                                &mut running,
+                                &mut reserved_total,
+                                id,
+                                CancelKind::Cancelled,
+                            );
+                        }
+                        Ok(Msg::Drain) => self.begin_drain(&mut draining, &mut pending),
+                        Ok(Msg::Shutdown) => break 'ticks,
                         Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {}
-                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => return,
+                        Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                            // see the try_recv Disconnected arm above
+                            self.begin_drain(&mut draining, &mut pending);
+                        }
                     }
                 }
                 continue;
             }
 
             // ---- one decode step over the running batch -----------------
+            // Panic isolation is batch-granular here: the engine panicked
+            // with an unknown subset of the batch already stepped, so
+            // per-sequence attribution is impossible — every member gets
+            // a structured terminal line and its pages recycle, while
+            // prefilling and queued work continue. AssertUnwindSafe: the
+            // batch's sequences are drained and dropped on panic.
             let batch_n = running.len().min(self.cfg.serving.max_batch);
-            let toks = {
+            let stepped = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
                 let mut refs: Vec<&mut Sequence> =
                     running[..batch_n].iter_mut().map(|r| &mut r.seq).collect();
-                match self.engine.decode_batch(&mut refs, &sampling) {
-                    Ok(t) => t,
-                    Err(e) => {
-                        for r in running.drain(..) {
-                            let _ = r.tx.send(Event::Error(format!("decode: {e}")));
-                        }
-                        // prefilling jobs still hold their reservations
-                        reserved_total = prefilling.iter().map(|j| j.reserved_bytes).sum();
-                        self.refresh_pool_gauge();
-                        continue;
+                self.engine.decode_batch(&mut refs, &sampling)
+            }));
+            let toks = match stepped {
+                Ok(Ok(t)) => t,
+                Ok(Err(e)) => {
+                    for r in running.drain(..) {
+                        let _ = r.tx.send(Event::Error(format!("decode: {e}")));
                     }
+                    // prefilling jobs still hold their reservations
+                    reserved_total = prefilling.iter().map(|j| j.reserved_bytes).sum();
+                    self.refresh_pool_gauge();
+                    continue;
+                }
+                Err(panic) => {
+                    lock_recover(&self.metrics).sequence_panics += 1;
+                    let msg =
+                        format!("decode: engine panicked: {}", panic_message(panic.as_ref()));
+                    for r in running.drain(..) {
+                        let _ = r.tx.send(Event::Error(msg.clone()));
+                    }
+                    // prefilling jobs still hold their reservations
+                    reserved_total = prefilling.iter().map(|j| j.reserved_bytes).sum();
+                    self.refresh_pool_gauge();
+                    continue;
                 }
             };
 
@@ -714,7 +1074,18 @@ impl<E: EngineCore> Coordinator<E> {
                     r.first_token = Some(Instant::now());
                     r.decode_started = Some(Instant::now());
                 }
-                let _ = r.tx.send(Event::Token(tok));
+                if r.tx.send(Event::Token(tok)).is_err() {
+                    // the receiver is gone — the client dropped its
+                    // stream. Decoding for a dead socket wastes arena
+                    // space and a batch slot: tear the sequence down as
+                    // a cancellation (no terminal event possible, the
+                    // other end no longer exists).
+                    let dead = running.remove(i);
+                    reserved_total = reserved_total.saturating_sub(dead.reserved_bytes);
+                    lock_recover(&self.metrics).cancellations += 1;
+                    finished_any = true;
+                    continue; // do not advance i: next element shifted in
+                }
                 {
                     let mut m = lock_recover(&self.metrics);
                     m.tokens_out += 1;
@@ -754,6 +1125,20 @@ impl<E: EngineCore> Coordinator<E> {
                 self.refresh_pool_gauge();
             }
         }
+
+        self.finish(pending, prefilling, running);
+    }
+}
+
+/// Best-effort text of a caught panic payload (panics raised with a
+/// string literal or `format!` message; anything else gets a marker).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> &str {
+    if let Some(s) = payload.downcast_ref::<&'static str>() {
+        s
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.as_str()
+    } else {
+        "non-string panic payload"
     }
 }
 
@@ -791,6 +1176,7 @@ mod tests {
                 prompt: b"hello coordinator".to_vec(),
                 max_new_tokens: 5,
                 policy: "lychee".into(),
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(out.len(), 5);
@@ -819,6 +1205,7 @@ mod tests {
                     prompt: format!("request number {i} with some text.").into_bytes(),
                     max_new_tokens: 4,
                     policy: "lychee".into(),
+                    deadline_ms: None,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -834,6 +1221,7 @@ mod tests {
                         done = true;
                         break;
                     }
+                    Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("error: {e}"),
                 }
             }
@@ -855,6 +1243,7 @@ mod tests {
                 prompt: vec![b'a'; 100_000],
                 max_new_tokens: 1,
                 policy: "full".into(),
+                deadline_ms: None,
             })
             .unwrap();
         match rx.recv().unwrap() {
@@ -877,6 +1266,7 @@ mod tests {
                 prompt: b"zero tokens requested".to_vec(),
                 max_new_tokens: 0,
                 policy: "full".into(),
+                deadline_ms: None,
             })
             .unwrap();
         match rx.recv().unwrap() {
@@ -890,6 +1280,7 @@ mod tests {
                 prompt: b"clamp me".to_vec(),
                 max_new_tokens: 10_000,
                 policy: "full".into(),
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(out.len(), 4);
@@ -916,6 +1307,7 @@ mod tests {
                         prompt: format!("backpressure request {i}").into_bytes(),
                         max_new_tokens: 3,
                         policy: "full".into(),
+                        deadline_ms: None,
                     })
                     .unwrap(),
             );
@@ -929,6 +1321,7 @@ mod tests {
                         done = true;
                         break;
                     }
+                    Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("unexpected error: {e}"),
                     Event::Token(_) => {}
                 }
@@ -953,6 +1346,7 @@ mod tests {
             prompt: b"determinism check prompt".to_vec(),
             max_new_tokens: 6,
             policy: "full".into(),
+            deadline_ms: None,
         };
         let (a, _) = handle.generate(req(1)).unwrap();
         let (b, _) = handle.generate(req(2)).unwrap();
@@ -977,6 +1371,7 @@ mod tests {
                         prompt: crate::workloads::trace::prompt_text(500 + 300 * i as usize, i),
                         max_new_tokens: 5,
                         policy: "lychee".into(),
+                        deadline_ms: None,
                     })
                     .unwrap(),
             );
@@ -992,6 +1387,7 @@ mod tests {
                         done = true;
                         break;
                     }
+                    Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("sim serve error: {e}"),
                 }
             }
@@ -1038,6 +1434,7 @@ mod tests {
                         prompt: crate::workloads::trace::prompt_text(256, i),
                         max_new_tokens: 400,
                         policy: "lychee".into(),
+                        deadline_ms: None,
                     })
                     .unwrap(),
             );
@@ -1064,6 +1461,7 @@ mod tests {
                 prompt: crate::workloads::trace::prompt_text(32 * 1024, 99),
                 max_new_tokens: 3,
                 policy: "lychee".into(),
+                deadline_ms: None,
             })
             .unwrap();
 
@@ -1138,7 +1536,7 @@ mod tests {
             let mut prompt = shared_prefix.clone();
             prompt.extend(crate::workloads::trace::prompt_text(100, 1000 + i));
             let (out, _) = handle
-                .generate(Request { id: i, prompt, max_new_tokens: 3, policy: "lychee".into() })
+                .generate(Request { id: i, prompt, max_new_tokens: 3, policy: "lychee".into(), deadline_ms: None })
                 .unwrap();
             assert_eq!(out.len(), 3);
         }
@@ -1197,6 +1595,7 @@ mod tests {
                 prompt: crate::workloads::trace::prompt_text(4096, 1),
                 max_new_tokens: 2000,
                 policy: "lychee".into(),
+                deadline_ms: None,
             })
             .unwrap();
         // let A start decoding
@@ -1220,6 +1619,7 @@ mod tests {
                 prompt: crate::workloads::trace::prompt_text(4096, 2),
                 max_new_tokens: 20,
                 policy: "lychee".into(),
+                deadline_ms: None,
             })
             .unwrap();
         assert_eq!(b_out.len(), 20);
@@ -1234,6 +1634,7 @@ mod tests {
                     a_done = Some(s);
                     break;
                 }
+                Event::Cancelled(k) => panic!("victim cancelled: {}", k.as_str()),
                 Event::Error(e) => panic!("victim errored: {e}"),
             }
         }

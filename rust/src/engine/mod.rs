@@ -259,6 +259,13 @@ pub trait EngineCore {
 
     /// Longest admissible prompt in tokens.
     fn max_prompt(&self) -> usize;
+
+    /// Total faults this engine's fault plan has fired (chaos builds
+    /// only; engines without an installed plan report 0). Surfaced as
+    /// `faults_injected_total` in the metrics scrape.
+    fn faults_injected(&self) -> u64 {
+        0
+    }
 }
 
 /// Radix-match `st.prompt` against the shared-prefix cache and adopt the

@@ -53,6 +53,12 @@ pub struct SimConfig {
     pub prefill_us_per_token: u64,
     /// Spin-wait per decode step, emulating the HLO decode cost.
     pub decode_us_per_step: u64,
+    /// Deterministic fault plan for chaos tests (seed + per-site rates);
+    /// `None` = no injection. Chaos builds only — construct with
+    /// struct-update syntax (`..SimConfig::default()`) so plain builds
+    /// never name the field.
+    #[cfg(any(test, feature = "failpoints"))]
+    pub faults: Option<crate::util::fault::FaultSpec>,
 }
 
 impl Default for SimConfig {
@@ -65,6 +71,8 @@ impl Default for SimConfig {
             max_prompt: 256 * 1024,
             prefill_us_per_token: 0,
             decode_us_per_step: 0,
+            #[cfg(any(test, feature = "failpoints"))]
+            faults: None,
         }
     }
 }
@@ -77,13 +85,30 @@ pub struct SimEngine {
     sim: SimConfig,
     pool: Arc<PagePool>,
     prefix: Arc<PrefixCache>,
+    /// Built from `SimConfig::faults` and also installed on the pool
+    /// (page-lease refusals), so one seed drives every injection site.
+    #[cfg(any(test, feature = "failpoints"))]
+    fault: Option<Arc<crate::util::fault::FaultPlan>>,
 }
 
 impl SimEngine {
     pub fn new(cfg: Config, sim: SimConfig) -> SimEngine {
         let pool = PagePool::with_capacity(cfg.serving.kv_pool_mb.saturating_mul(1024 * 1024));
         let prefix = PrefixCache::new(cfg.kv.prefix_cache_mb);
-        SimEngine { cfg, sim, pool, prefix }
+        #[cfg(any(test, feature = "failpoints"))]
+        let fault = sim.faults.clone().map(|spec| {
+            let plan = Arc::new(crate::util::fault::FaultPlan::new(spec));
+            pool.set_fault_plan(Arc::clone(&plan));
+            plan
+        });
+        SimEngine {
+            cfg,
+            sim,
+            pool,
+            prefix,
+            #[cfg(any(test, feature = "failpoints"))]
+            fault,
+        }
     }
 
     fn row_dim(&self) -> usize {
@@ -172,6 +197,15 @@ impl EngineCore for SimEngine {
         }
         let chunk = self.cfg.serving.prefill_chunk_tokens;
         let end = if chunk == 0 { total } else { (st.done + chunk).min(total) };
+        // Fault site (chaos builds): a stalled chunk spins before any
+        // work, keyed by the sequence's own chunk counter so the
+        // schedule is interleaving-independent.
+        #[cfg(any(test, feature = "failpoints"))]
+        if let Some(us) =
+            self.fault.as_ref().and_then(|p| p.prefill_stall_us(st.id, st.chunks_executed as u64))
+        {
+            self.busy(us);
+        }
         let mut h = fnv(&st.prompt[..st.done]);
         for t in st.done..end {
             h = fnv_step(h, st.prompt[t]);
@@ -213,6 +247,19 @@ impl EngineCore for SimEngine {
         let (mut kbuf, mut vbuf, mut mbuf) = (Vec::new(), Vec::new(), Vec::new());
         for s in seqs.iter_mut() {
             let s: &mut Sequence = &mut **s;
+            // Fault sites (chaos builds): a panicking step fires BEFORE
+            // this sequence mutates anything, so earlier batch members
+            // are fully stepped and later ones untouched; a stalled
+            // step spins first.
+            #[cfg(any(test, feature = "failpoints"))]
+            if let Some(plan) = self.fault.as_ref() {
+                if plan.panic_at_step(s.id, s.pos as u64) {
+                    panic!("injected fault: engine panic at seq {} pos {}", s.id, s.pos);
+                }
+                if let Some(us) = plan.decode_stall_us(s.id, s.pos as u64) {
+                    self.busy(us);
+                }
+            }
             let t = s.sample(sampling);
             s.text.push(t);
             s.generated.push(t);
@@ -266,6 +313,11 @@ impl EngineCore for SimEngine {
 
     fn pool(&self) -> &Arc<PagePool> {
         &self.pool
+    }
+
+    #[cfg(any(test, feature = "failpoints"))]
+    fn faults_injected(&self) -> u64 {
+        self.fault.as_ref().map_or(0, |p| p.injected_total())
     }
 
     fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {

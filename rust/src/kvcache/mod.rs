@@ -173,6 +173,10 @@ pub struct PoolStats {
     /// Buffers dropped at release because parking them would push the
     /// arena's total footprint (leased + parked) past capacity.
     pub pages_trimmed_total: u64,
+    /// Page leases refused by an installed fault plan. Only ever nonzero
+    /// in test / `failpoints` builds; plain release builds compile the
+    /// hook out entirely.
+    pub faults_injected: u64,
 }
 
 struct PoolInner {
@@ -197,6 +201,12 @@ pub struct PagePool {
     /// `usize::MAX` = unbounded (no admission control).
     capacity_bytes: usize,
     next_lease: AtomicU64,
+    /// Installed fault plan (chaos builds only): consulted at page-
+    /// boundary leases on the fallible append path.
+    #[cfg(any(test, feature = "failpoints"))]
+    fault_plan: Mutex<Option<Arc<crate::util::fault::FaultPlan>>>,
+    #[cfg(any(test, feature = "failpoints"))]
+    alloc_faults: AtomicU64,
 }
 
 impl PagePool {
@@ -220,7 +230,34 @@ impl PagePool {
             }),
             capacity_bytes: cap,
             next_lease: AtomicU64::new(1),
+            #[cfg(any(test, feature = "failpoints"))]
+            fault_plan: Mutex::new(None),
+            #[cfg(any(test, feature = "failpoints"))]
+            alloc_faults: AtomicU64::new(0),
         })
+    }
+
+    /// Install a deterministic fault plan; page-boundary leases on the
+    /// fallible append path ([`KvCache::append_token`]) consult it from
+    /// then on. Chaos builds only.
+    #[cfg(any(test, feature = "failpoints"))]
+    pub fn set_fault_plan(&self, plan: Arc<crate::util::fault::FaultPlan>) {
+        *lock_recover(&self.fault_plan) = Some(plan);
+    }
+
+    /// Does the installed plan (if any) refuse the lease of
+    /// `page_index`? Counts refusals for [`PoolStats::faults_injected`].
+    #[cfg(any(test, feature = "failpoints"))]
+    pub(crate) fn alloc_fault(&self, page_index: u64) -> bool {
+        let refuse = lock_recover(&self.fault_plan)
+            .as_ref()
+            .is_some_and(|p| p.alloc_should_fail(page_index));
+        if refuse {
+            // Relaxed: standalone scrape-only counter; no other memory
+            // depends on its ordering.
+            self.alloc_faults.fetch_add(1, Ordering::Relaxed);
+        }
+        refuse
     }
 
     /// A pool with no capacity bound (tests, offline eval).
@@ -401,7 +438,9 @@ impl PagePool {
 
     pub fn stats(&self) -> PoolStats {
         let inner = lock_recover(&self.inner);
-        PoolStats {
+        // `mut` only used by the chaos-build block below.
+        #[allow(unused_mut)]
+        let mut s = PoolStats {
             bytes_in_use: inner.bytes_in_use,
             bytes_shared: inner.bytes_shared,
             pages_shared: inner.pages_shared,
@@ -412,7 +451,14 @@ impl PagePool {
             pages_allocated_total: inner.pages_allocated_total,
             pages_recycled_total: inner.pages_recycled_total,
             pages_trimmed_total: inner.pages_trimmed_total,
+            faults_injected: 0,
+        };
+        #[cfg(any(test, feature = "failpoints"))]
+        {
+            // Relaxed: scrape-only counter (see `alloc_fault`).
+            s.faults_injected = self.alloc_faults.load(Ordering::Relaxed);
         }
+        s
     }
 }
 
@@ -655,6 +701,14 @@ impl KvCache {
     pub fn append_token(&mut self, k_rows: &[&[f32]], v_rows: &[&[f32]]) -> Result<usize> {
         if k_rows.len() != self.layers || v_rows.len() != self.layers {
             bail!("expected {} layers, got {}/{}", self.layers, k_rows.len(), v_rows.len());
+        }
+        // Fault site (chaos builds): this append is the *fallible* KV
+        // growth path (prefill), so an injected lease refusal at a page
+        // boundary surfaces here as a structured error the coordinator
+        // turns into a `failed` terminal line.
+        #[cfg(any(test, feature = "failpoints"))]
+        if self.len % PAGE_SIZE == 0 && self.pool.alloc_fault((self.len / PAGE_SIZE) as u64) {
+            bail!("injected fault: kv page {} allocation refused", self.len / PAGE_SIZE);
         }
         for l in 0..self.layers {
             self.k[l].append(&self.pool, k_rows[l]);

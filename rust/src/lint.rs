@@ -21,6 +21,10 @@
 //! 5. `relaxed-ordering` — `Ordering::Relaxed` on the refcount /
 //!    byte-accounting atomics in `kvcache` / `coordinator` needs a
 //!    `// Relaxed: <why>` justification comment.
+//! 6. `terminal-outcome` — bare `return;` is banned in non-test
+//!    `coordinator` code: every scheduler exit path must flush a
+//!    structured terminal event per in-flight request (drain/finish),
+//!    never silently abandon them.
 //!
 //! Escape hatch: a `lint:allow(<rule>)` comment on the same line or the
 //! comment block directly above suppresses that rule for that site.
@@ -36,6 +40,7 @@ pub const RULE_SAFETY_DOC: &str = "safety-doc";
 pub const RULE_UNWRAP: &str = "request-path-unwrap";
 pub const RULE_PARTIAL_CMP: &str = "partial-cmp";
 pub const RULE_RELAXED: &str = "relaxed-ordering";
+pub const RULE_TERMINAL_OUTCOME: &str = "terminal-outcome";
 
 /// Modules where `.unwrap()` / `.expect(` are banned outside tests.
 const REQUEST_PATH_MODULES: &[&str] = &["server", "coordinator", "kvcache", "engine"];
@@ -43,6 +48,8 @@ const REQUEST_PATH_MODULES: &[&str] = &["server", "coordinator", "kvcache", "eng
 const SCORING_MODULES: &[&str] = &["sparse", "index", "linalg", "attention"];
 /// Modules whose atomics carry refcount / byte accounting.
 const ACCOUNTING_MODULES: &[&str] = &["kvcache", "coordinator"];
+/// Modules whose exit paths must emit structured terminal outcomes.
+const TERMINAL_MODULES: &[&str] = &["coordinator"];
 
 /// One rule violation at a source location.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -101,6 +108,7 @@ pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
     let request_path = path_in(path, REQUEST_PATH_MODULES);
     let scoring = path_in(path, SCORING_MODULES);
     let accounting = path_in(path, ACCOUNTING_MODULES);
+    let terminal = path_in(path, TERMINAL_MODULES);
     let mut out = Vec::new();
     for idx in 0..lex.code.len() {
         check_unsafe_rules(path, &lex, idx, &mut out);
@@ -115,6 +123,9 @@ pub fn check_source(path: &str, src: &str) -> Vec<Violation> {
         }
         if accounting {
             check_relaxed(path, &lex, idx, &mut out);
+        }
+        if terminal {
+            check_bare_return(path, &lex, idx, &mut out);
         }
     }
     out
@@ -219,6 +230,25 @@ fn check_relaxed(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation
         RULE_RELAXED,
         "Ordering::Relaxed on accounting atomics needs a `// Relaxed: <why>` comment",
     ));
+}
+
+fn check_bare_return(path: &str, lex: &Stripped, idx: usize, out: &mut Vec<Violation>) {
+    let line = &lex.code[idx];
+    for pos in word_positions(line, "return") {
+        if token_after(&lex.code, idx, pos + "return".len()).as_deref() != Some(";") {
+            continue; // `return expr;` carries a value; only bare exits ban
+        }
+        if allowed(lex, idx, RULE_TERMINAL_OUTCOME) {
+            continue;
+        }
+        out.push(violation(
+            path,
+            idx,
+            RULE_TERMINAL_OUTCOME,
+            "bare `return;` in coordinator code; exit through drain/finish so every \
+             in-flight request gets a structured terminal event",
+        ));
+    }
 }
 
 // -------------------------------------------------------------- helpers
@@ -737,6 +767,40 @@ pub fn bump(c: &AtomicU64) -> u64 {
 }
 "##;
         assert!(rules_of("src/kvcache/mod.rs", good).is_empty());
+    }
+
+    #[test]
+    fn bare_return_banned_in_coordinator_code() {
+        let bad = r##"
+pub fn tick(stop: bool) {
+    if stop {
+        return;
+    }
+}
+"##;
+        assert_eq!(rules_of("src/coordinator/mod.rs", bad), vec![RULE_TERMINAL_OUTCOME]);
+        // out of scope for other modules
+        assert!(rules_of("src/server/mod.rs", bad).is_empty());
+        // value-carrying returns are fine: the value is the outcome
+        let value = r##"
+pub fn pick(v: &[u32]) -> Option<u32> {
+    if v.is_empty() {
+        return None;
+    }
+    v.first().copied()
+}
+"##;
+        assert!(rules_of("src/coordinator/mod.rs", value).is_empty());
+        // the escape hatch documents why no terminal event is owed
+        let allowed = r##"
+pub fn tick(stop: bool) {
+    if stop {
+        // lint:allow(terminal-outcome) nothing admitted yet, nothing owed
+        return;
+    }
+}
+"##;
+        assert!(rules_of("src/coordinator/mod.rs", allowed).is_empty());
     }
 
     #[test]

@@ -12,7 +12,24 @@
 //! -> {"metrics": true}
 //! <- {"requests": ..., "completed": ..., "prefill_chunks_executed": ...,
 //!     "preemptions": ..., "prefix_hits": ..., "queue_depth": ..., ...}
+//!
+//! -> {"cancel": 7}          (best-effort: ack means delivered, not found)
+//! <- {"ok": true, "cancel": 7}
+//!
+//! -> {"drain": true}        (admin: stop admission, finish running work)
+//! <- {"ok": true, "drain": true}
 //! ```
+//!
+//! A request may carry `"deadline_ms": <n>` — a per-request wall-clock
+//! budget enforced by the scheduler every tick (0 disables the
+//! configured `serving.default_deadline_ms`). A request that is
+//! cancelled or deadline-expired terminates with
+//! `{"cancelled": true, "request_id": N, "reason": "cancelled" |
+//! "deadline_exceeded"}` instead of a `done` line. If a stream write
+//! fails (client disconnected mid-stream), the server cancels the
+//! request coordinator-side so it stops consuming KV pages, and — for
+//! session turns — does **not** record the turn the client never
+//! received.
 //!
 //! Multi-turn sessions: a request may carry `"session_id": "s1"` and
 //! (after the first turn) `"parent": <request_id of the previous turn>`.
@@ -172,6 +189,10 @@ pub struct WireRequest {
     /// Request id of the session's previous turn; validated against the
     /// session head when present.
     pub parent: Option<u64>,
+    /// Per-request deadline in milliseconds, enforced by the scheduler.
+    /// `Some(0)` explicitly disables `serving.default_deadline_ms`;
+    /// `None` inherits it.
+    pub deadline_ms: Option<u64>,
 }
 
 /// Validate a wire request before it reaches the scheduler: a missing
@@ -235,12 +256,25 @@ pub fn parse_request(j: &Json) -> std::result::Result<WireRequest, String> {
             Some(n as u64)
         }
     };
+    let deadline_ms = match j.get("deadline_ms") {
+        Json::Null => None,
+        v => {
+            let Some(n) = v.as_f64() else {
+                return Err("'deadline_ms' must be a non-negative integer".to_string());
+            };
+            if n.fract() != 0.0 || n < 0.0 {
+                return Err("'deadline_ms' must be a non-negative integer".to_string());
+            }
+            Some(n as u64)
+        }
+    };
     Ok(WireRequest {
         prompt: prompt.as_bytes().to_vec(),
         max_new_tokens,
         policy,
         session_id,
         parent,
+        deadline_ms,
     })
 }
 
@@ -266,6 +300,12 @@ fn metrics_json(m: &Metrics) -> Json {
         ("kv_bytes_shared", Json::num(m.kv_bytes_shared as f64)),
         ("selects_before_build", Json::num(m.selects_before_build as f64)),
         ("queue_depth", Json::num(m.queue_depth as f64)),
+        ("requests_in_flight", Json::num(m.requests_in_flight as f64)),
+        ("cancellations", Json::num(m.cancellations as f64)),
+        ("deadline_exceeded", Json::num(m.deadline_exceeded as f64)),
+        ("sequence_panics", Json::num(m.sequence_panics as f64)),
+        ("faults_injected_total", Json::num(m.faults_injected_total as f64)),
+        ("drain_state", Json::num(m.drain_state as f64)),
         ("ttft_p50_us", Json::num(m.ttft_us.quantile(0.5))),
         ("ttft_p99_us", Json::num(m.ttft_us.quantile(0.99))),
         ("ttft_mean_us", Json::num(m.ttft_us.mean())),
@@ -302,6 +342,27 @@ fn handle_conn(
                 continue;
             }
         };
+        match parsed.get("cancel") {
+            Json::Null => {}
+            v => {
+                let Some(n) = v.as_f64().filter(|n| n.fract() == 0.0 && *n >= 0.0) else {
+                    reply_err(&mut writer, "'cancel' must be a request id")?;
+                    continue;
+                };
+                // best-effort: the ack means the cancel was delivered to
+                // the scheduler, not that the request was found
+                handle.cancel(n as u64);
+                let j = Json::obj(vec![("ok", Json::Bool(true)), ("cancel", Json::num(n))]);
+                writeln!(writer, "{}", j.dump())?;
+                continue;
+            }
+        }
+        if parsed.get("drain").as_bool() == Some(true) {
+            handle.drain();
+            let j = Json::obj(vec![("ok", Json::Bool(true)), ("drain", Json::Bool(true))]);
+            writeln!(writer, "{}", j.dump())?;
+            continue;
+        }
         if parsed.get("metrics").as_bool() == Some(true) {
             match &metrics {
                 Some(m) => {
@@ -362,6 +423,7 @@ fn handle_conn(
             prompt: full_prompt.clone(),
             max_new_tokens: wire.max_new_tokens.unwrap_or(DEFAULT_MAX_NEW_TOKENS),
             policy: wire.policy,
+            deadline_ms: wire.deadline_ms,
         };
         let rx = match handle.submit(req) {
             Ok(rx) => rx,
@@ -377,15 +439,17 @@ fn handle_conn(
                     generated.push(t);
                     let s = String::from_utf8_lossy(&[t]).into_owned();
                     let j = Json::obj(vec![("token", Json::str(&s))]);
-                    writeln!(writer, "{}", j.dump())?;
+                    // a failed stream write means the client is gone:
+                    // cancel coordinator-side so the sequence stops
+                    // burning KV pages and decode steps (TCP may only
+                    // surface the disconnect after a buffer's worth of
+                    // writes; the cancel is still exact once it does)
+                    if writeln!(writer, "{}", j.dump()).is_err() {
+                        handle.cancel(req_id);
+                        return Ok(());
+                    }
                 }
                 Event::Done(stats) => {
-                    if let Some(sid) = &wire.session_id {
-                        // next turn's prefix = this turn's prompt + reply
-                        let mut text = full_prompt.clone();
-                        text.extend_from_slice(&generated);
-                        lock_recover(&sessions).update(sid, req_id, text);
-                    }
                     let j = Json::obj(vec![
                         ("done", Json::Bool(true)),
                         ("request_id", Json::num(req_id as f64)),
@@ -393,6 +457,28 @@ fn handle_conn(
                         ("ttft_ms", Json::num(stats.ttft_ms)),
                         ("tpot_ms", Json::num(stats.tpot_ms)),
                         ("e2e_ms", Json::num(stats.e2e_ms)),
+                    ]);
+                    // write the done line *before* recording the turn:
+                    // a turn the client never received must not become
+                    // the session head (the client will retry it, and a
+                    // phantom head would reject the retry's `parent`)
+                    if writeln!(writer, "{}", j.dump()).is_err() {
+                        return Ok(());
+                    }
+                    if let Some(sid) = &wire.session_id {
+                        // next turn's prefix = this turn's prompt + reply
+                        let mut text = full_prompt.clone();
+                        text.extend_from_slice(&generated);
+                        lock_recover(&sessions).update(sid, req_id, text);
+                    }
+                    break;
+                }
+                Event::Cancelled(kind) => {
+                    // no session update: a cancelled turn has no reply
+                    let j = Json::obj(vec![
+                        ("cancelled", Json::Bool(true)),
+                        ("request_id", Json::num(req_id as f64)),
+                        ("reason", Json::str(kind.as_str())),
                     ]);
                     writeln!(writer, "{}", j.dump())?;
                     break;
@@ -430,7 +516,19 @@ impl Client {
     }
 
     pub fn generate(&mut self, prompt: &str, max_new_tokens: usize, policy: &str) -> Result<ClientResult> {
-        self.request(prompt, max_new_tokens, policy, None, None)
+        self.request(prompt, max_new_tokens, policy, None, None, None)
+    }
+
+    /// Like [`Client::generate`] with a per-request wall-clock deadline
+    /// in milliseconds (0 disables the server's configured default).
+    pub fn generate_with_deadline(
+        &mut self,
+        prompt: &str,
+        max_new_tokens: usize,
+        policy: &str,
+        deadline_ms: u64,
+    ) -> Result<ClientResult> {
+        self.request(prompt, max_new_tokens, policy, None, None, Some(deadline_ms))
     }
 
     /// Session-chained turn: the server prepends the session's
@@ -444,7 +542,7 @@ impl Client {
         session_id: &str,
         parent: Option<u64>,
     ) -> Result<ClientResult> {
-        self.request(prompt, max_new_tokens, policy, Some(session_id), parent)
+        self.request(prompt, max_new_tokens, policy, Some(session_id), parent, None)
     }
 
     fn request(
@@ -454,6 +552,7 @@ impl Client {
         policy: &str,
         session_id: Option<&str>,
         parent: Option<u64>,
+        deadline_ms: Option<u64>,
     ) -> Result<ClientResult> {
         let mut fields = vec![
             ("prompt", Json::str(prompt)),
@@ -465,6 +564,9 @@ impl Client {
         }
         if let Some(p) = parent {
             fields.push(("parent", Json::num(p as f64)));
+        }
+        if let Some(d) = deadline_ms {
+            fields.push(("deadline_ms", Json::num(d as f64)));
         }
         let req = Json::obj(fields);
         writeln!(self.stream, "{}", req.dump())?;
@@ -481,11 +583,45 @@ impl Client {
                 out.tpot_ms = j.get("tpot_ms").as_f64().unwrap_or(0.0);
                 out.request_id = j.get("request_id").as_usize().unwrap_or(0) as u64;
                 return Ok(out);
+            } else if j.get("cancelled").as_bool() == Some(true) {
+                let reason = j.get("reason").as_str().unwrap_or("cancelled").to_string();
+                let id = j.get("request_id").as_usize().unwrap_or(0);
+                anyhow::bail!("request {id}: {reason}");
             } else if let Some(e) = j.get("error").as_str() {
                 anyhow::bail!("server error: {e}");
             }
         }
         anyhow::bail!("connection closed mid-stream")
+    }
+
+    /// Best-effort cancel of a running request by server-assigned id.
+    /// The ack means the cancel was delivered, not that it matched.
+    pub fn cancel(&mut self, request_id: u64) -> Result<()> {
+        writeln!(
+            self.stream,
+            "{}",
+            Json::obj(vec![("cancel", Json::num(request_id as f64))]).dump()
+        )?;
+        let mut line = String::new();
+        BufReader::new(self.stream.try_clone()?).read_line(&mut line)?;
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad cancel reply: {e}"))?;
+        if let Some(e) = j.get("error").as_str() {
+            anyhow::bail!("server error: {e}");
+        }
+        Ok(())
+    }
+
+    /// Ask the server's coordinator to drain: stop admitting work,
+    /// finish (or deadline out) what is running, then exit its loop.
+    pub fn drain(&mut self) -> Result<()> {
+        writeln!(self.stream, "{}", Json::obj(vec![("drain", Json::Bool(true))]).dump())?;
+        let mut line = String::new();
+        BufReader::new(self.stream.try_clone()?).read_line(&mut line)?;
+        let j = Json::parse(&line).map_err(|e| anyhow::anyhow!("bad drain reply: {e}"))?;
+        if let Some(e) = j.get("error").as_str() {
+            anyhow::bail!("server error: {e}");
+        }
+        Ok(())
     }
 
     /// Scrape the server's metrics (`{"metrics": true}` request).
@@ -580,6 +716,13 @@ mod tests {
         assert!(m.get("kv_bytes_free").as_f64().is_some());
         assert!(m.get("kv_bytes_free_peak").as_f64().is_some());
         assert!(m.get("kv_pages_recycled_total").as_f64().is_some());
+        // lifecycle counters ride the same scrape, all quiet here
+        assert_eq!(m.get("requests_in_flight").as_usize(), Some(0));
+        assert_eq!(m.get("cancellations").as_usize(), Some(0));
+        assert_eq!(m.get("deadline_exceeded").as_usize(), Some(0));
+        assert_eq!(m.get("sequence_panics").as_usize(), Some(0));
+        assert_eq!(m.get("faults_injected_total").as_usize(), Some(0));
+        assert_eq!(m.get("drain_state").as_usize(), Some(0));
 
         // a server started without metrics answers the scrape with an error
         let server2 = Server::start("127.0.0.1:0", handle.clone(), None).unwrap();
@@ -708,6 +851,105 @@ mod tests {
         // huge values are accepted here; the coordinator clamps them
         let w = parse(r#"{"prompt": "x", "max_new_tokens": 1000000}"#).unwrap();
         assert_eq!(w.max_new_tokens, Some(1_000_000));
+    }
+
+    #[test]
+    fn parse_request_validates_deadline() {
+        let w = parse(r#"{"prompt": "hi", "deadline_ms": 250}"#).unwrap();
+        assert_eq!(w.deadline_ms, Some(250));
+        // 0 is valid: it explicitly disables the configured default
+        let w = parse(r#"{"prompt": "hi", "deadline_ms": 0}"#).unwrap();
+        assert_eq!(w.deadline_ms, Some(0));
+        let w = parse(r#"{"prompt": "hi"}"#).unwrap();
+        assert_eq!(w.deadline_ms, None);
+        let e = parse(r#"{"prompt": "x", "deadline_ms": -5}"#).unwrap_err();
+        assert!(e.contains("non-negative integer"), "{e}");
+        let e = parse(r#"{"prompt": "x", "deadline_ms": 1.5}"#).unwrap_err();
+        assert!(e.contains("non-negative integer"), "{e}");
+        let e = parse(r#"{"prompt": "x", "deadline_ms": "soon"}"#).unwrap_err();
+        assert!(e.contains("non-negative integer"), "{e}");
+    }
+
+    /// Cancellation, deadlines, and drain over the wire: each lifecycle
+    /// terminal gets a structured line, and the scrape accounts for all
+    /// of them. Wall-clock-dependent (which chunk a cancel lands on),
+    /// so assertions are on outcomes and counters, not transcripts.
+    #[test]
+    fn sim_lifecycle_cancel_deadline_drain_over_the_wire() {
+        let mut cfg = crate::config::Config::new();
+        cfg.serving.prefill_chunk_tokens = 32;
+        cfg.serving.max_batch = 2;
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) = crate::coordinator::spawn_with(cfg, move || {
+            Ok(crate::engine::sim::SimEngine::new(
+                engine_cfg,
+                crate::engine::sim::SimConfig::default(),
+            ))
+        })
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", handle.clone(), Some(metrics)).unwrap();
+        let addr = server.addr;
+        let mut admin = Client::connect(&addr).unwrap();
+
+        let scrape = |c: &mut Client, key: &str| -> usize {
+            c.metrics().unwrap().get(key).as_usize().unwrap_or(0)
+        };
+        let long_prompt =
+            String::from_utf8(crate::workloads::trace::prompt_text(1500, 91)).unwrap();
+
+        // ---- cancel: request 1 starts prefilling, admin cancels it ----
+        let p1 = long_prompt.clone();
+        let t1 = std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.generate(&p1, 48, "lychee").unwrap_err().to_string()
+        });
+        // wait until it is actually executing (1500 tokens / 32-token
+        // chunks: many ticks of runway before it could finish)
+        while scrape(&mut admin, "prefill_chunks_executed") < 1 {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        admin.cancel(1).unwrap();
+        let err = t1.join().unwrap();
+        assert!(err.contains("request 1: cancelled"), "{err}");
+
+        // ---- deadline: 1ms budget on a 1500-token prompt ----
+        let err = admin
+            .generate_with_deadline(&long_prompt, 48, "lychee", 1)
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("deadline_exceeded"), "{err}");
+
+        // ---- drain: request 3 is in flight, then admission closes ----
+        let chunks_before = scrape(&mut admin, "prefill_chunks_executed");
+        let p3 = long_prompt.clone();
+        let t3 = std::thread::spawn(move || {
+            let mut c = Client::connect(&addr).unwrap();
+            c.generate(&p3, 8, "lychee").map(|r| r.tokens)
+        });
+        while scrape(&mut admin, "prefill_chunks_executed") <= chunks_before {
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        admin.drain().unwrap();
+        // same connection as the drain, so the coordinator sees Drain
+        // before this Submit: structured reject, not a hang
+        let err = admin.generate("too late", 4, "lychee").unwrap_err().to_string();
+        assert!(err.contains("draining"), "{err}");
+        // in-flight work still finishes under drain
+        assert_eq!(t3.join().unwrap().unwrap(), 8);
+        // the scheduler thread exits once drained
+        join.join().unwrap();
+
+        let m = admin.metrics().unwrap();
+        assert_eq!(m.get("cancellations").as_usize(), Some(1), "{m:?}");
+        assert_eq!(m.get("deadline_exceeded").as_usize(), Some(1), "{m:?}");
+        assert_eq!(m.get("drain_state").as_usize(), Some(2), "{m:?}");
+        assert_eq!(m.get("requests_in_flight").as_usize(), Some(0), "{m:?}");
+        // private pages are all returned; only radix-sealed shared pages
+        // (request 3's prefix) may remain resident in the pool gauge
+        let in_use = m.get("kv_bytes_in_use").as_usize().unwrap_or(usize::MAX);
+        let shared = m.get("kv_bytes_shared").as_usize().unwrap_or(0);
+        assert_eq!(in_use, shared, "{m:?}");
+        server.stop();
     }
 
     #[test]

@@ -1,0 +1,199 @@
+//! Deterministic fault injection for the chaos suite.
+//!
+//! A [`FaultPlan`] is a pure function from `(seed, site, sequence
+//! progress)` to "inject here?" decisions, in the same spirit as
+//! [`crate::util::prop`]: every decision is a hash of *stable* keys —
+//! the sequence id and its own progress counter (chunk index, decode
+//! position, page index) — never of wall-clock time or global call
+//! order. Two runs with the same seed and the same per-sequence work
+//! therefore fire the exact same faults no matter how the scheduler
+//! interleaves sequences, which is what lets the chaos tests pin their
+//! outcomes under fixed seeds.
+//!
+//! The module (and every hook that consults it) is compiled only under
+//! `#[cfg(any(test, feature = "failpoints"))]`, so release builds
+//! without the feature carry zero code and zero branches for it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Injection sites, mixed into the decision hash so the same progress
+/// key rolls independently per site.
+const SITE_ALLOC: u64 = 0xA110C;
+const SITE_PREFILL_STALL: u64 = 0x57A11;
+const SITE_DECODE_STALL: u64 = 0xDEC0D;
+const SITE_PANIC: u64 = 0x9A21C;
+
+/// Per-site fire rates in permille (0 = site disabled) plus the stall
+/// duration used by the slow-path sites.
+#[derive(Clone, Debug, Default)]
+pub struct FaultConfig {
+    /// Chance a KV page lease is refused (surfaces as a structured
+    /// `append_token` error → a `failed` terminal line).
+    pub alloc_fail_permille: u32,
+    /// Chance a prefill chunk stalls for `stall_us` before running.
+    pub stall_chunk_permille: u32,
+    /// Chance a decode step stalls for `stall_us` before running.
+    pub stall_decode_permille: u32,
+    /// Chance a decode step panics mid-engine (exercises the
+    /// coordinator's `catch_unwind` isolation).
+    pub panic_step_permille: u32,
+    /// Stall duration for the slow-path sites, microseconds.
+    pub stall_us: u64,
+}
+
+/// Seed + config for building a [`FaultPlan`]; carried through
+/// `SimConfig` so test harnesses can describe a whole plan as data.
+#[derive(Clone, Debug, Default)]
+pub struct FaultSpec {
+    pub seed: u64,
+    pub cfg: FaultConfig,
+}
+
+/// A seeded, deterministic fault schedule. Decision methods are pure in
+/// their arguments; the only mutable state is the fired-fault counter
+/// surfaced as `faults_injected_total` in the metrics scrape.
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    cfg: FaultConfig,
+    injected: AtomicU64,
+}
+
+/// splitmix64 finalizer: full-avalanche mix of the decision key.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec) -> Self {
+        FaultPlan {
+            seed: spec.seed,
+            cfg: spec.cfg,
+            injected: AtomicU64::new(0),
+        }
+    }
+
+    /// Roll the die for `(site, a, b)`: a stable permille in 0..1000.
+    fn roll(&self, site: u64, a: u64, b: u64) -> u32 {
+        let key = mix(self.seed ^ mix(site) ^ mix(a.wrapping_mul(0x517c_c1b7_2722_0a95)) ^ b);
+        (key % 1000) as u32
+    }
+
+    fn fire(&self, permille: u32, site: u64, a: u64, b: u64) -> bool {
+        if permille == 0 || self.roll(site, a, b) >= permille {
+            return false;
+        }
+        // Relaxed: standalone event counter read only for the metrics
+        // scrape; no other memory depends on its ordering.
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Should the lease of page `page_index` of a sequence's KV cache
+    /// fail? Keyed by the page index alone — a sequence's page
+    /// trajectory is a pure function of its own token count, so the
+    /// schedule is interleaving-independent.
+    pub fn alloc_should_fail(&self, page_index: u64) -> bool {
+        self.fire(self.cfg.alloc_fail_permille, SITE_ALLOC, page_index, 0)
+    }
+
+    /// Stall duration (µs) to impose before prefill chunk
+    /// `chunk_index` of sequence `seq_id`, if any.
+    pub fn prefill_stall_us(&self, seq_id: u64, chunk_index: u64) -> Option<u64> {
+        self.fire(self.cfg.stall_chunk_permille, SITE_PREFILL_STALL, seq_id, chunk_index)
+            .then_some(self.cfg.stall_us)
+    }
+
+    /// Stall duration (µs) to impose before the decode step at
+    /// position `pos` of sequence `seq_id`, if any.
+    pub fn decode_stall_us(&self, seq_id: u64, pos: u64) -> Option<u64> {
+        self.fire(self.cfg.stall_decode_permille, SITE_DECODE_STALL, seq_id, pos)
+            .then_some(self.cfg.stall_us)
+    }
+
+    /// Should the decode step at position `pos` of sequence `seq_id`
+    /// panic?
+    pub fn panic_at_step(&self, seq_id: u64, pos: u64) -> bool {
+        self.fire(self.cfg.panic_step_permille, SITE_PANIC, seq_id, pos)
+    }
+
+    /// Total faults fired so far (all sites).
+    pub fn injected_total(&self) -> u64 {
+        // Relaxed: see `fire` — scrape-only counter.
+        self.injected.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy_spec(seed: u64) -> FaultSpec {
+        FaultSpec {
+            seed,
+            cfg: FaultConfig {
+                alloc_fail_permille: 100,
+                stall_chunk_permille: 200,
+                stall_decode_permille: 200,
+                panic_step_permille: 50,
+                stall_us: 10,
+            },
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::new(noisy_spec(42));
+        let b = FaultPlan::new(noisy_spec(42));
+        for seq in 0..8u64 {
+            for step in 0..200u64 {
+                assert_eq!(a.alloc_should_fail(step), b.alloc_should_fail(step));
+                assert_eq!(a.prefill_stall_us(seq, step), b.prefill_stall_us(seq, step));
+                assert_eq!(a.decode_stall_us(seq, step), b.decode_stall_us(seq, step));
+                assert_eq!(a.panic_at_step(seq, step), b.panic_at_step(seq, step));
+            }
+        }
+        assert_eq!(a.injected_total(), b.injected_total());
+        assert!(a.injected_total() > 0, "noisy plan never fired");
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let a = FaultPlan::new(noisy_spec(1));
+        let b = FaultPlan::new(noisy_spec(2));
+        let mut diverged = false;
+        for seq in 0..8u64 {
+            for step in 0..200u64 {
+                if a.panic_at_step(seq, step) != b.panic_at_step(seq, step)
+                    || a.prefill_stall_us(seq, step) != b.prefill_stall_us(seq, step)
+                {
+                    diverged = true;
+                }
+            }
+        }
+        assert!(diverged, "seeds 1 and 2 produced identical schedules");
+    }
+
+    #[test]
+    fn zero_config_never_fires() {
+        let plan = FaultPlan::new(FaultSpec::default());
+        for step in 0..500u64 {
+            assert!(!plan.alloc_should_fail(step));
+            assert!(plan.prefill_stall_us(0, step).is_none());
+            assert!(plan.decode_stall_us(0, step).is_none());
+            assert!(!plan.panic_at_step(0, step));
+        }
+        assert_eq!(plan.injected_total(), 0);
+    }
+
+    #[test]
+    fn rates_are_roughly_calibrated() {
+        let plan = FaultPlan::new(noisy_spec(7));
+        let fired = (0..10_000u64).filter(|&p| plan.alloc_should_fail(p)).count();
+        // 100‰ over 10k rolls: expect ~1000, allow a wide deterministic band
+        assert!((600..1400).contains(&fired), "alloc fired {fired}/10000 at 100 permille");
+    }
+}

@@ -5,6 +5,8 @@
 //! helpers.
 
 pub mod binfmt;
+#[cfg(any(test, feature = "failpoints"))]
+pub mod fault;
 pub mod json;
 pub mod prop;
 pub mod rng;
