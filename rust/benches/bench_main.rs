@@ -17,7 +17,10 @@
 //!                          mixed-precision sweep (select+gather per
 //!                          kv/index precision, gather GB/token, arena
 //!                          capacity at fixed kv_pool_mb;
-//!                          BENCH_PRECISION=f32|f16|i8 narrows it)
+//!                          BENCH_PRECISION=f32|f16|i8 narrows it),
+//!                          and the dense-vs-blockmax select sweep
+//!                          (32k->1M tokens: per-path µs, blocks-scanned
+//!                          fraction, fitted growth exponent)
 //!   serving_json         — machine-readable BENCH_serving.json: mixed
 //!                          long+short load through the real coordinator
 //!                          (sim engine), chunked vs monolithic prefill —
@@ -36,7 +39,7 @@
 //! `*_json` sections write their files (defaults: `BENCH_retrieval.json`
 //! / `BENCH_serving.json` in the current directory).
 
-use lychee::chunking::{Chunker, FixedSizeChunker, StructureAwareChunker};
+use lychee::chunking::{Chunk, Chunker, FixedSizeChunker, StructureAwareChunker};
 use lychee::config::{Config, LycheeConfig};
 use lychee::index::hierarchy::{HierarchicalIndex, IndexParams};
 use lychee::index::kmeans::spherical_kmeans;
@@ -841,6 +844,172 @@ fn precision_json_fragment() -> String {
     )
 }
 
+/// Log-log least-squares slope: the fitted exponent `b` in
+/// `select_us ≈ a · rows^b`.
+fn fit_exponent(rows: &[f64], us: &[f64]) -> f64 {
+    if rows.len() < 2 {
+        return 0.0;
+    }
+    let n = rows.len() as f64;
+    let xs: Vec<f64> = rows.iter().map(|r| r.ln()).collect();
+    let ys: Vec<f64> = us.iter().map(|t| t.max(1e-3).ln()).collect();
+    let mx = xs.iter().sum::<f64>() / n;
+    let my = ys.iter().sum::<f64>() / n;
+    let num: f64 = xs.iter().zip(&ys).map(|(x, y)| (x - mx) * (y - my)).sum();
+    let den: f64 = xs.iter().map(|x| (x - mx) * (x - mx)).sum();
+    if den > 0.0 {
+        num / den
+    } else {
+        0.0
+    }
+}
+
+/// Dense vs block-max select at growing context lengths (32k → 1M
+/// tokens; `BENCH_SMOKE=1` stops at 128k): per-path select µs, the
+/// fraction of 64-row blocks actually scanned, a byte-identity spot
+/// check, and the fitted growth exponent per backend (the acceptance
+/// gate wants blockmax sub-linear — exponent < 1 with a falling
+/// scanned fraction — while dense stays ~linear). Indexes are built
+/// from topic-structured representatives (M = tokens/48 rows, ~256
+/// contiguous rows per topic) so block bounds see realistic score skew;
+/// `BENCH_PRECISION` selects the mirror precision (default f32).
+fn blockmax_json_fragment() -> String {
+    use lychee::index::ScoringBackend;
+    use lychee::quant::Precision;
+    use lychee::sparse::{blocks_pruned_total, blocks_scanned_total};
+
+    let smoke = smoke();
+    let d = 32usize;
+    let span = 48usize;
+    let budget = 1024usize;
+    let contexts: &[usize] = if smoke {
+        &[32 * 1024, 128 * 1024]
+    } else {
+        &[32 * 1024, 128 * 1024, 512 * 1024, 1024 * 1024]
+    };
+    let (warm, iters) = if smoke { (1, 3) } else { (2, 20) };
+    let prec = std::env::var("BENCH_PRECISION")
+        .ok()
+        .as_deref()
+        .and_then(Precision::parse)
+        .unwrap_or(Precision::F32);
+
+    let mut ctx_rows = Vec::new();
+    // per path: (rows, dense_us, blockmax_us) series for the exponent fit
+    let mut series: Vec<(&str, Vec<(f64, f64, f64)>)> =
+        vec![("flat", Vec::new()), ("hier", Vec::new())];
+    for &n in contexts {
+        let rows = n / span;
+        let mut rng = Rng::new(0xB10C ^ n as u64);
+        let topics = (rows / 256).max(4);
+        let dirs: Vec<Vec<f32>> = (0..topics).map(|_| rng.unit_vec(d)).collect();
+        let mut reps = Vec::with_capacity(rows * d);
+        for r in 0..rows {
+            let dir = &dirs[(r / 256) % topics];
+            for &dj in dir.iter() {
+                reps.push(dj + 0.15 * rng.normal());
+            }
+        }
+        let spans: Vec<Chunk> =
+            (0..rows).map(|i| Chunk { start: i * span, len: span }).collect();
+        let mut params = IndexParams::default();
+        params.rep_precision = prec;
+        // build cost is not the measurand here; fewer k-means iterations
+        // keep the 512k/1M builds tractable without touching select
+        params.kmeans_iters = 4;
+        let dense = HierarchicalIndex::build_from_reps(d, params.clone(), &spans, reps.clone());
+        params.scoring_backend = ScoringBackend::Blockmax;
+        let mut bm = HierarchicalIndex::build_from_reps(d, params, &spans, reps);
+        bm.ensure_blockmax();
+
+        // topic-leaning query: realistic skew (a fully random query still
+        // pins identity but exercises little pruning)
+        let mut q = dirs[topics / 2].clone();
+        for x in q.iter_mut() {
+            *x += 0.25 * rng.normal();
+        }
+
+        for (pi, (path, kgkc)) in
+            [("flat", None), ("hier", Some((8usize, 64usize)))].into_iter().enumerate()
+        {
+            let mut scratch = SelectScratch::new();
+            let dn = bench(
+                &format!("{path} dense    select @{}k", n / 1024),
+                warm,
+                iters,
+                || {
+                    match kgkc {
+                        Some((kg, kc)) => dense.select_tokens_into(&q, kg, kc, budget, &mut scratch),
+                        None => dense.select_tokens_flat_into(&q, budget, &mut scratch),
+                    }
+                    std::hint::black_box(&scratch.tokens);
+                },
+            );
+            // byte-identity spot check before the counter window
+            let same = match kgkc {
+                Some((kg, kc)) => {
+                    dense.select_tokens(&q, kg, kc, budget) == bm.select_tokens(&q, kg, kc, budget)
+                }
+                None => dense.select_tokens_flat(&q, budget) == bm.select_tokens_flat(&q, budget),
+            };
+            if !same {
+                println!("WARNING: blockmax selection diverged from dense ({path} @{n})");
+            }
+            let (s0, p0) = (blocks_scanned_total(), blocks_pruned_total());
+            let bn = bench(
+                &format!("{path} blockmax select @{}k", n / 1024),
+                warm,
+                iters,
+                || {
+                    match kgkc {
+                        Some((kg, kc)) => bm.select_tokens_into(&q, kg, kc, budget, &mut scratch),
+                        None => bm.select_tokens_flat_into(&q, budget, &mut scratch),
+                    }
+                    std::hint::black_box(&scratch.tokens);
+                },
+            );
+            let scanned = (blocks_scanned_total() - s0) as f64;
+            let pruned = (blocks_pruned_total() - p0) as f64;
+            let frac =
+                if scanned + pruned > 0.0 { scanned / (scanned + pruned) } else { 1.0 };
+            println!(
+                "blockmax[{path}] @{}k rows={rows}: {:.2}x vs dense, {:.0}% blocks scanned",
+                n / 1024,
+                if bn.mean > 0.0 { dn.mean / bn.mean } else { 0.0 },
+                frac * 100.0
+            );
+            ctx_rows.push(format!(
+                "{{\"context_tokens\": {n}, \"rows\": {rows}, \"path\": \"{path}\", \
+                 \"dense_us\": {:.2}, \"blockmax_us\": {:.2}, \
+                 \"blocks_scanned_frac\": {frac:.4}, \"identical\": {same}}}",
+                dn.mean, bn.mean
+            ));
+            series[pi].1.push((rows as f64, dn.mean, bn.mean));
+        }
+    }
+
+    let mut exp_rows = Vec::new();
+    for (path, pts) in &series {
+        let rs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+        let du: Vec<f64> = pts.iter().map(|p| p.1).collect();
+        let bu: Vec<f64> = pts.iter().map(|p| p.2).collect();
+        let de = fit_exponent(&rs, &du);
+        let be = fit_exponent(&rs, &bu);
+        println!("blockmax[{path}] growth exponent: dense {de:.2}, blockmax {be:.2}");
+        exp_rows.push(format!(
+            "{{\"path\": \"{path}\", \"dense\": {de:.3}, \"blockmax\": {be:.3}}}"
+        ));
+    }
+
+    format!(
+        "{{\"precision\": \"{}\", \"budget\": {budget}, \"span\": {span}, \
+         \"contexts\": [\n    {}\n  ], \"growth_exponent\": [\n    {}\n  ]}}",
+        prec.name(),
+        ctx_rows.join(",\n    "),
+        exp_rows.join(",\n    ")
+    )
+}
+
 /// The perf-trajectory section: measures the scoring/select hot path and
 /// renders `BENCH_retrieval.json` (schema documented in EXPERIMENTS.md
 /// §Perf). Returns the JSON text.
@@ -996,14 +1165,18 @@ fn retrieval_json_section() -> String {
     // --- mixed-precision sweep (pages + rep mirrors) -------------------
     let precision_fragment = precision_json_fragment();
 
+    // --- dense vs block-max select, 32k -> 1M --------------------------
+    let blockmax_fragment = blockmax_json_fragment();
+
     format!(
-        "{{\n  \"schema\": \"lychee-bench-retrieval-v2\",\n  \
+        "{{\n  \"schema\": \"lychee-bench-retrieval-v3\",\n  \
          \"backend\": \"{}\",\n  \"f16c\": {},\n  \"smoke\": {},\n  \"select_dim\": {},\n  \
          \"select\": [\n    {}\n  ],\n  \
          \"score_32k\": {{\"rows\": {rows}, \"d\": {score_d}, \
          \"scalar_aos_us\": {:.2}, \"simd_soa_us\": {:.2}, \"speedup\": {:.2}}},\n  \
          \"batch\": [\n    {}\n  ],\n  \
-         \"precision\": {}\n}}\n",
+         \"precision\": {},\n  \
+         \"blockmax\": {}\n}}\n",
         linalg::simd::backend().name(),
         linalg::simd::f16c_available(),
         smoke,
@@ -1013,6 +1186,7 @@ fn retrieval_json_section() -> String {
         simd.mean,
         speedup,
         batch_rows.join(",\n    "),
-        precision_fragment
+        precision_fragment,
+        blockmax_fragment
     )
 }

@@ -222,7 +222,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} \
              inflight={} cancel={} deadline={} drain={} faults={} panics={} \
              kv[{}]={:.1}MiB shared={:.1}MiB free={:.1}MiB recycled={} \
-             prefix={}hit/{}tok evict={} reps[{}] p50_tpot={:.1}ms",
+             prefix={}hit/{}tok evict={} reps[{}] blocks={}scan/{}prune p50_tpot={:.1}ms",
             m.requests,
             m.completed,
             m.rejected,
@@ -245,6 +245,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.prefix_tokens_reused,
             m.prefix_evictions,
             m.rep_precision,
+            m.blocks_scanned_total,
+            m.blocks_pruned_total,
             m.tpot_us.quantile(0.5) / 1e3
         );
         drop(m);

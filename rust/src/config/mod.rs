@@ -3,6 +3,7 @@
 //! validation. Every experiment harness takes one of these structs so
 //! runs are fully described by a config + seed.
 
+use crate::index::inverted::ScoringBackend;
 use crate::quant::Precision;
 use crate::util::json::Json;
 use anyhow::{bail, Context, Result};
@@ -12,6 +13,13 @@ use std::path::Path;
 fn parse_precision(v: &Json) -> Result<Precision> {
     let s = v.as_str().context("expected precision string (f32|f16|i8)")?;
     Precision::parse(s).ok_or_else(|| anyhow::anyhow!("bad precision '{s}' (f32|f16|i8)"))
+}
+
+/// Parse a scoring-backend knob value (`"dense"` | `"blockmax"`).
+fn parse_backend(v: &Json) -> Result<ScoringBackend> {
+    let s = v.as_str().context("expected backend string (dense|blockmax)")?;
+    ScoringBackend::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("bad scoring backend '{s}' (dense|blockmax)"))
 }
 
 /// LycheeCluster algorithm hyper-parameters (paper §4 + Appendix A).
@@ -52,6 +60,13 @@ pub struct LycheeConfig {
     /// "score all rows" GEMV streams a quantized mirror and the final
     /// top-k is re-ranked against the exact f32 rows.
     pub rep_precision: Precision,
+    /// Page-selection scoring backend (wire path
+    /// `index.scoring_backend`): `dense` (score every representative row
+    /// per query, bit-exact default) | `blockmax` (block-max inverted
+    /// plane — whole 64-row blocks whose score upper bound cannot reach
+    /// the running top-k threshold are skipped; survivors are scored by
+    /// the same kernels, so selections stay byte-identical to dense).
+    pub scoring_backend: ScoringBackend,
 }
 
 impl Default for LycheeConfig {
@@ -76,6 +91,7 @@ impl Default for LycheeConfig {
             full_attn_layers: 1,
             mean_pooling: true,
             rep_precision: Precision::F32,
+            scoring_backend: ScoringBackend::Dense,
         }
     }
 }
@@ -117,6 +133,7 @@ impl LycheeConfig {
             "full_attn_layers" => self.full_attn_layers = u()?,
             "mean_pooling" => self.mean_pooling = v.as_bool().context("expected bool")?,
             "rep_precision" => self.rep_precision = parse_precision(v)?,
+            "scoring_backend" => self.scoring_backend = parse_backend(v)?,
             _ => bail!("unknown lychee config key '{key}'"),
         }
         Ok(())
@@ -311,6 +328,7 @@ impl Config {
                     for (ik, iv) in v.as_obj().context("index must be object")? {
                         match ik.as_str() {
                             "rep_precision" => self.lychee.apply("rep_precision", iv)?,
+                            "scoring_backend" => self.lychee.apply("scoring_backend", iv)?,
                             _ => bail!("unknown index config key '{ik}'"),
                         }
                     }
@@ -334,6 +352,9 @@ impl Config {
             Some(("serving", key)) => self.serving.apply(key, &json_v)?,
             Some(("kv", key)) => self.kv.apply(key, &json_v)?,
             Some(("index", "rep_precision")) => self.lychee.apply("rep_precision", &json_v)?,
+            Some(("index", "scoring_backend")) => {
+                self.lychee.apply("scoring_backend", &json_v)?
+            }
             None if path == "seed" => self.seed = json_v.as_usize().context("seed")? as u64,
             None if path == "artifacts_dir" => {
                 self.artifacts_dir = json_v.as_str().unwrap_or(value).to_string()
@@ -468,6 +489,25 @@ mod tests {
         assert!(cfg.apply_override("kv.nope=1").is_err());
         let bad = Json::parse(r#"{"index": {"nope": "f16"}}"#).unwrap();
         assert!(Config::new().apply_json(&bad).is_err());
+    }
+
+    #[test]
+    fn scoring_backend_knob() {
+        let mut cfg = Config::new();
+        assert_eq!(cfg.lychee.scoring_backend, ScoringBackend::Dense, "dense by default");
+        cfg.apply_override("index.scoring_backend=blockmax").unwrap();
+        assert_eq!(cfg.lychee.scoring_backend, ScoringBackend::Blockmax);
+        cfg.validate().unwrap();
+        // JSON form under both the "index" alias and the lychee section
+        let mut cfg2 = Config::new();
+        let j = Json::parse(r#"{"index": {"scoring_backend": "blockmax"}}"#).unwrap();
+        cfg2.apply_json(&j).unwrap();
+        assert_eq!(cfg2.lychee.scoring_backend, ScoringBackend::Blockmax);
+        cfg2.apply_override("lychee.scoring_backend=dense").unwrap();
+        assert_eq!(cfg2.lychee.scoring_backend, ScoringBackend::Dense);
+        // bad spellings are structured errors
+        assert!(cfg.apply_override("index.scoring_backend=sparse").is_err());
+        assert!(cfg.apply_override("index.scoring_backend=1").is_err());
     }
 
     #[test]

@@ -129,6 +129,12 @@ pub struct Metrics {
     /// Times a policy's select ran before its first build (degraded to
     /// the always-active fallback instead of panicking a worker).
     pub selects_before_build: u64,
+    /// Representative blocks the block-max backend scored (rows touched
+    /// in 64-row tiles). Always 0 under the dense backend.
+    pub blocks_scanned_total: u64,
+    /// Representative blocks the block-max backend skipped because their
+    /// score upper bound could not reach the running top-k threshold.
+    pub blocks_pruned_total: u64,
     /// Gauge: arena bytes parked on the free-list (recyclable).
     pub kv_bytes_free: u64,
     /// High-water mark of the free-list over the pool's lifetime.
@@ -601,6 +607,8 @@ impl<E: EngineCore> Coordinator<E> {
         m.kv_pages_recycled_total = st.pages_recycled_total;
         m.prefix_evictions = prefix_evictions;
         m.selects_before_build = crate::sparse::selects_before_build();
+        m.blocks_scanned_total = crate::sparse::blocks_scanned_total();
+        m.blocks_pruned_total = crate::sparse::blocks_pruned_total();
         m.faults_injected_total = faults;
     }
 

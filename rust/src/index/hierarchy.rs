@@ -9,6 +9,7 @@
 //! hot entry points (`search_clusters_into`, `select_tokens_into`) write
 //! into a caller-owned [`SelectScratch`] and perform no heap allocation.
 
+use super::inverted::{BlockPlane, FrozenBlocks, ScoringBackend};
 use super::kmeans::spherical_kmeans;
 use super::reps::{pool_rep, KeySource, Pooling};
 use crate::chunking::Chunk;
@@ -42,6 +43,13 @@ pub struct IndexParams {
     /// GEMVs stream the quantized mirrors and the surviving top-k is
     /// re-ranked against the exact f32 rows.
     pub rep_precision: Precision,
+    /// Page-selection backend (`index.scoring_backend`). At
+    /// [`ScoringBackend::Dense`] (default) the big tiers are scored by
+    /// one GEMV over every row; at [`ScoringBackend::Blockmax`] the
+    /// inverted plane ([`super::inverted`]) skips whole 64-row blocks
+    /// whose upper bound cannot reach the running top-k threshold —
+    /// byte-identical selections, sub-linear row touches.
+    pub scoring_backend: ScoringBackend,
 }
 
 impl Default for IndexParams {
@@ -55,6 +63,7 @@ impl Default for IndexParams {
             seed: 0,
             sprout_threshold: 0.6,
             rep_precision: Precision::F32,
+            scoring_backend: ScoringBackend::Dense,
         }
     }
 }
@@ -105,6 +114,14 @@ pub struct HierarchicalIndex {
     pub fine_q: QuantMat,
     /// Quantized mirror of `coarse_centroids`.
     pub coarse_q: QuantMat,
+    /// Block-max summaries over the leaf rep matrix (the flat-scan
+    /// backend's pruning plane). `None` unless
+    /// `params.scoring_backend == Blockmax`; kept coherent lazily by
+    /// [`Self::ensure_blockmax`].
+    pub leaf_bm: Option<BlockPlane>,
+    /// Block-max summaries over the fine-centroid matrix (with per-row
+    /// radii and owning-unit masks), pruning the hierarchical fine stage.
+    pub fine_bm: Option<BlockPlane>,
 }
 
 /// Eqn. 2: `UB(q, u) = q·μ_u + ‖q‖ · r_u`.
@@ -116,7 +133,7 @@ pub fn upper_bound(q: &[f32], q_norm: f32, centroid: &[f32], radius: f32) -> f32
 /// Descending-score, ascending-index comparator for (id, score) pairs;
 /// `total_cmp` so a degenerate (NaN) score cannot panic mid-request.
 #[inline]
-fn by_score_desc(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
+pub(crate) fn by_score_desc(a: &(usize, f32), b: &(usize, f32)) -> std::cmp::Ordering {
     b.1.total_cmp(&a.1).then(a.0.cmp(&b.0))
 }
 
@@ -149,6 +166,8 @@ impl HierarchicalIndex {
             coarse_members: Vec::new(),
             graft_scores: Vec::new(),
             graft_tmp: Vec::new(),
+            leaf_bm: None,
+            fine_bm: None,
         }
     }
 
@@ -248,6 +267,20 @@ impl HierarchicalIndex {
             idx.fine_q.rebuild(&idx.fine_centroids, d);
             idx.coarse_q.rebuild(&idx.coarse_centroids, d);
         }
+
+        // --- inverted-plane block layout (summaries computed lazily) ----
+        // The layout (row→block tiling) is fixed here; the per-channel
+        // summaries are filled by the first `ensure_blockmax` — or seeded
+        // from a radix segment's frozen blocks, which skips that work for
+        // adopted shared prefixes.
+        if idx.params.scoring_backend == ScoringBackend::Blockmax {
+            let mut leaf = BlockPlane::new(d);
+            leaf.sync_rows(idx.num_chunks());
+            idx.leaf_bm = Some(leaf);
+            let mut fine = BlockPlane::new(d);
+            fine.sync_rows(idx.num_clusters());
+            idx.fine_bm = Some(fine);
+        }
         idx
     }
 
@@ -290,6 +323,69 @@ impl HierarchicalIndex {
     #[inline]
     pub fn coarse_centroid(&self, ui: usize) -> &[f32] {
         &self.coarse_centroids[ui * self.d..(ui + 1) * self.d]
+    }
+
+    /// Bring the inverted plane up to date with the current tiers: sync
+    /// row counts (appends from graft/sprout dirty the covering blocks),
+    /// watch the i8 mirrors' scale-growth counters (a growth silently
+    /// requantizes whole channels), and recompute every dirty block's
+    /// summaries from the **scoring representation** — the dequantized
+    /// mirror rows when a mirror is active, the f32 rows otherwise.
+    ///
+    /// Called by the policy layer (`&mut self`) before the `&self`
+    /// select entry points; a no-op at `ScoringBackend::Dense`. Select
+    /// paths silently fall back to the dense scan whenever the plane is
+    /// missing, dirty, or out of row-sync, so direct callers that never
+    /// ensure stay correct — just linear.
+    pub fn ensure_blockmax(&mut self) {
+        if self.params.scoring_backend != ScoringBackend::Blockmax {
+            return;
+        }
+        let quant = self.chunk_reps_q.is_active();
+        // leaf plane: no radii, no owners
+        let mut plane = self.leaf_bm.take().unwrap_or_else(|| BlockPlane::new(self.d));
+        plane.sync_rows(self.num_chunks());
+        plane.note_growths(self.chunk_reps_q.growths());
+        plane.ensure(
+            |r, out| {
+                if quant {
+                    self.chunk_reps_q.row_into(r, out);
+                } else {
+                    out.copy_from_slice(&self.chunk_reps[r * self.d..(r + 1) * self.d]);
+                }
+            },
+            &[],
+            &[],
+        );
+        self.leaf_bm = Some(plane);
+        // fine plane: covering radii + owning-unit masks
+        let mut plane = self.fine_bm.take().unwrap_or_else(|| BlockPlane::new(self.d));
+        plane.sync_rows(self.num_clusters());
+        plane.note_growths(self.fine_q.growths());
+        plane.ensure(
+            |r, out| {
+                if quant {
+                    self.fine_q.row_into(r, out);
+                } else {
+                    out.copy_from_slice(&self.fine_centroids[r * self.d..(r + 1) * self.d]);
+                }
+            },
+            &self.fine_radii,
+            &self.fine_units,
+        );
+        self.fine_bm = Some(plane);
+    }
+
+    /// Seed the leaf plane's leading blocks from a radix segment's
+    /// frozen summaries (see [`FrozenBlocks`]) — the adopted prefix's
+    /// blocks start clean, so the first `ensure_blockmax` only computes
+    /// the overlay's blocks. Returns `false` (harmless no-op, the blocks
+    /// just rebuild) on any shape/precision mismatch.
+    pub fn seed_frozen_blocks(&mut self, fb: &FrozenBlocks) -> bool {
+        let Some(plane) = self.leaf_bm.as_mut() else {
+            return false;
+        };
+        plane.seed_frozen(fb, self.params.rep_precision)
     }
 
     /// Top-down pruned search (Algorithm 1 steps 1–2), allocation-free:
@@ -341,24 +437,63 @@ impl HierarchicalIndex {
         } else {
             linalg::top_k_partial(&scratch.scores, kg, &mut scratch.order);
         }
-        // fine level within surviving units
-        for &u in &scratch.order {
-            for &f in &self.coarse_members[u] {
-                let ub = if quant {
-                    self.fine_q.dot_row(f, q) + q_norm * self.fine_radii[f]
-                } else {
-                    upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f])
-                };
-                scratch.cand.push((f, ub));
+        // fine level within surviving units. The block-max plane prunes
+        // whole 64-row blocks of the fine matrix whose bound (or owner
+        // mask) rules them out; it keeps exactly the same top set the
+        // dense member walk below keeps, so everything downstream —
+        // including the quantized legs' f32 re-rank — is shared.
+        let use_bm = self.params.scoring_backend == ScoringBackend::Blockmax
+            && self
+                .fine_bm
+                .as_ref()
+                .is_some_and(|p| !p.any_dirty() && p.rows() == self.num_clusters());
+        if use_bm {
+            let plane = self.fine_bm.as_ref().unwrap();
+            let total: usize = scratch.order.iter().map(|&u| self.coarse_members[u].len()).sum();
+            // the same keep-depth the dense walk ends up with: the
+            // over-fetch window at quant, kc directly at f32
+            let want = if quant { (2 * kc + 8).min(total) } else { kc.min(total) };
+            let SelectScratch { order, cand, members, .. } = &mut *scratch;
+            crate::sparse::blockmax::fine_topk_into(
+                plane,
+                q,
+                q_norm,
+                want,
+                order,
+                &self.fine_units,
+                |f| {
+                    if quant {
+                        self.fine_q.dot_row(f, q) + q_norm * self.fine_radii[f]
+                    } else {
+                        upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f])
+                    }
+                },
+                members,
+                cand,
+            );
+        } else {
+            for &u in &scratch.order {
+                for &f in &self.coarse_members[u] {
+                    let ub = if quant {
+                        self.fine_q.dot_row(f, q) + q_norm * self.fine_radii[f]
+                    } else {
+                        upper_bound(q, q_norm, self.fine_centroid(f), self.fine_radii[f])
+                    };
+                    scratch.cand.push((f, ub));
+                }
+            }
+            if quant {
+                // keep the over-fetched fine window before the f32 re-rank
+                let fetch = (2 * kc + 8).min(scratch.cand.len());
+                if fetch < scratch.cand.len() {
+                    scratch.cand.select_nth_unstable_by(fetch - 1, by_score_desc);
+                    scratch.cand.truncate(fetch);
+                }
             }
         }
         if quant {
-            // f32 re-rank of an over-fetched fine window before keeping kc
-            let fetch = (2 * kc + 8).min(scratch.cand.len());
-            if fetch < scratch.cand.len() {
-                scratch.cand.select_nth_unstable_by(fetch - 1, by_score_desc);
-                scratch.cand.truncate(fetch);
-            }
+            // f32 re-rank of the kept window (both backends land here
+            // with the same set, so the final ranking cannot diverge)
             for c in scratch.cand.iter_mut() {
                 c.1 = upper_bound(q, q_norm, self.fine_centroid(c.0), self.fine_radii[c.0]);
             }
@@ -450,9 +585,63 @@ impl HierarchicalIndex {
         if m == 0 {
             return;
         }
+        let quant = self.chunk_reps_q.is_active();
+        let min_len = self.chunk_lens.iter().copied().min().unwrap_or(1);
+        let use_bm = self.params.scoring_backend == ScoringBackend::Blockmax
+            && self.leaf_bm.as_ref().is_some_and(|p| !p.any_dirty() && p.rows() == m);
+        if use_bm {
+            // Block-max scan: compute exactly the dense ranking's top-k
+            // prefix — k is the re-rank window, the deepest rank the
+            // budget fill below can possibly consume — touching only
+            // blocks whose upper bound reaches the running threshold.
+            // Survivor blocks are scored by the *same* GEMV kernels on
+            // 4-aligned row ranges, so every computed score is
+            // bit-identical to the dense scan's.
+            let k = crate::sparse::rerank_window(budget, min_len, m);
+            let plane = self.leaf_bm.as_ref().unwrap();
+            {
+                let SelectScratch { scores, order, cand, members, .. } = &mut *scratch;
+                crate::sparse::blockmax::flat_topk_into(
+                    plane,
+                    q,
+                    linalg::norm(q),
+                    k,
+                    |r0, r1, out| {
+                        if quant {
+                            self.chunk_reps_q.matvec_range_into(r0, r1, q, out);
+                        } else {
+                            linalg::matvec(
+                                &self.chunk_reps[r0 * self.d..r1 * self.d],
+                                self.d,
+                                q,
+                                out,
+                            );
+                        }
+                    },
+                    scores,
+                    members,
+                    cand,
+                    order,
+                );
+                if quant {
+                    crate::sparse::rerank_top_f32(budget, min_len, scores, order, |ci| {
+                        linalg::dot(q, self.chunk_rep(ci))
+                    });
+                }
+            }
+            let remaining = self.fill_tokens_by_order(budget, scratch);
+            if remaining == 0 || k == m {
+                scratch.tokens.sort_unstable();
+                return;
+            }
+            // Rare: the whole ranked prefix was consumed or skipped with
+            // budget left — the dense scan could fill from deeper ranks.
+            // Recompute the exact dense path (byte-identity over speed).
+            scratch.tokens.clear();
+        }
         scratch.scores.clear();
         scratch.scores.resize(m, 0.0);
-        if self.chunk_reps_q.is_active() {
+        if quant {
             self.chunk_reps_q.matvec_into(q, &mut scratch.scores);
         } else {
             linalg::matvec(&self.chunk_reps, self.d, q, &mut scratch.scores);
@@ -460,15 +649,23 @@ impl HierarchicalIndex {
         // full order: budget filling may skip over-size chunks arbitrarily
         // deep into the ranking, so this baseline keeps the full sort
         linalg::top_k_partial(&scratch.scores, m, &mut scratch.order);
-        if self.chunk_reps_q.is_active() {
+        if quant {
             // f32 re-rank of the window the budget fill can possibly
             // consume (the shared margin formula all policies use)
-            let min_len = self.chunk_lens.iter().copied().min().unwrap_or(1);
             let SelectScratch { scores, order, .. } = &mut *scratch;
             crate::sparse::rerank_top_f32(budget, min_len, scores, order, |ci| {
                 linalg::dot(q, self.chunk_rep(ci))
             });
         }
+        self.fill_tokens_by_order(budget, scratch);
+        scratch.tokens.sort_unstable();
+    }
+
+    /// Budget fill over `scratch.order` (the flat paths' shared back
+    /// half): consume ranked chunks in order, skipping any larger than
+    /// the remaining budget; returns the unconsumed budget so the
+    /// block-max path can detect a prefix that ran dry.
+    fn fill_tokens_by_order(&self, budget: usize, scratch: &mut SelectScratch) -> usize {
         let SelectScratch { order, tokens, .. } = scratch;
         let mut remaining = budget;
         for &ci in order.iter() {
@@ -482,7 +679,7 @@ impl HierarchicalIndex {
                 break;
             }
         }
-        tokens.sort_unstable();
+        remaining
     }
 
     /// Allocating wrapper over [`Self::select_tokens_flat_into`].
@@ -502,7 +699,9 @@ impl HierarchicalIndex {
             + self.fine_members.iter().map(|f| f.len() * 8 + 24).sum::<usize>()
             + self.coarse_members.iter().map(|u| u.len() * 8 + 8).sum::<usize>();
         let mirrors = self.chunk_reps_q.bytes() + self.fine_q.bytes() + self.coarse_q.bytes();
-        f32s * 4 + meta + mirrors
+        let planes = self.leaf_bm.as_ref().map_or(0, |p| p.bytes())
+            + self.fine_bm.as_ref().map_or(0, |p| p.bytes());
+        f32s * 4 + meta + mirrors + planes
     }
 
     /// Structural invariants (used by tests and debug builds):
@@ -589,6 +788,48 @@ impl HierarchicalIndex {
         }
         if !fseen.iter().all(|&s| s) {
             return Err("orphan cluster".into());
+        }
+        // Inverted-plane coherence: every block's summaries must dominate
+        // the current scoring rows. Planes that are row-stale or carry
+        // any dirty block are exempt wholesale — selects never consult
+        // them (an i8 scale growth can stale still-clean blocks, but it
+        // always leaves a dirty mark or a row desync behind, so the
+        // select gate and this gate agree); `ensure_blockmax` brings
+        // them back before the next pruned scan.
+        let quant = self.chunk_reps_q.is_active();
+        if let Some(plane) = &self.leaf_bm {
+            if plane.rows() == m && !plane.any_dirty() {
+                plane
+                    .verify(
+                        |r, out| {
+                            if quant {
+                                self.chunk_reps_q.row_into(r, out);
+                            } else {
+                                out.copy_from_slice(self.chunk_rep(r));
+                            }
+                        },
+                        &[],
+                        &[],
+                    )
+                    .map_err(|e| format!("leaf block plane: {e}"))?;
+            }
+        }
+        if let Some(plane) = &self.fine_bm {
+            if plane.rows() == l && !plane.any_dirty() {
+                plane
+                    .verify(
+                        |r, out| {
+                            if quant {
+                                self.fine_q.row_into(r, out);
+                            } else {
+                                out.copy_from_slice(self.fine_centroid(r));
+                            }
+                        },
+                        &self.fine_radii,
+                        &self.fine_units,
+                    )
+                    .map_err(|e| format!("fine block plane: {e}"))?;
+            }
         }
         Ok(())
     }

@@ -1,0 +1,603 @@
+//! The inverted retrieval plane: fixed-size row blocks with per-block,
+//! per-channel max/min summaries over the *scoring representation* of an
+//! index tier, plus the machinery to keep them coherent under the lazy
+//! update path. This is ROADMAP item 4 (seismic-style block-max
+//! pruning): `sparse::blockmax` drives selection with the per-block
+//! upper bound from [`BlockPlane::bound`] and skips whole blocks that
+//! cannot reach the running top-k threshold — without ever touching
+//! their rows — while the survivors are scored by the exact same kernels
+//! the dense backend runs, so selections stay byte-identical.
+//!
+//! Invariants the plane maintains (pinned by
+//! `HierarchicalIndex::check_invariants` and the property suites):
+//!
+//! - A **clean** block's `chan_max/chan_min` dominate the scoring value
+//!   of every channel of every row in the block — where "scoring value"
+//!   means the f32 row at `rep_precision = f32` and the *dequantized
+//!   mirror* value at f16/i8 (what [`crate::quant::QuantMat::dot_row`] /
+//!   the widening GEMVs actually multiply). Summaries are therefore
+//!   rebuilt from [`crate::quant::QuantMat::row_into`], never from the
+//!   f32 source rows, so quantization round-up can never poke above the
+//!   recorded maximum.
+//! - `radius_max` dominates every member's covering radius and
+//!   `owner_mask` has the (saturated) owner bit of every member set, so
+//!   a block-level skip can never drop a row a dense scan would keep.
+//! - Any mutation that can change a row's scoring value marks the
+//!   covering block dirty: appends via [`BlockPlane::sync_rows`],
+//!   in-place centroid rewrites via [`BlockPlane::mark_row_dirty`], and
+//!   i8 scale growth — which silently requantizes *every* row in a
+//!   channel — via [`BlockPlane::note_growths`] watching the mirror's
+//!   monotonic growth counter. Dirty blocks are recomputed lazily by
+//!   [`BlockPlane::ensure`] and are never consulted for pruning.
+
+use crate::linalg;
+use crate::quant::Precision;
+
+/// Rows per block. 64 keeps per-block summaries one cache line per
+/// 16 channels AND preserves GEMV bit-identity: the AVX2 GEMVs
+/// accumulate rows in groups of 4 from the slice start, so a block
+/// whose start is a multiple of 4 and whose length is a multiple of 4
+/// (or which runs to the matrix end — the short final tile does)
+/// reproduces the full scan's per-row instruction sequence exactly
+/// (see `QuantMat::matvec_range_into`).
+pub const BLOCK_ROWS: usize = 64;
+
+/// Relative float-summation slack on the block bound: the summary dot is
+/// accumulated in a different association order than the row GEMV, so
+/// the bound is padded by this fraction of the absolute-magnitude budget
+/// before comparing against exact row scores. Conservative (same scale
+/// as the repo-wide SIMD-vs-scalar tolerance `1e-4·√n`); an over-tight
+/// bound is a correctness bug, not a perf win.
+const BOUND_SLACK_REL: f32 = 1e-4;
+/// Absolute slack floor (covers the all-zero-magnitude corner).
+const BOUND_SLACK_ABS: f32 = 1e-6;
+
+/// Which scoring backend drives page selection (`index.scoring_backend`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ScoringBackend {
+    /// Dense GEMV over every representative row — the bit-exact
+    /// baseline, linear in pages.
+    #[default]
+    Dense,
+    /// Block-max pruned scan over the inverted plane — byte-identical
+    /// selections, sub-linear block touches once contexts are long
+    /// enough for the bound to bite.
+    Blockmax,
+}
+
+impl ScoringBackend {
+    /// Canonical config/wire spelling.
+    pub fn name(self) -> &'static str {
+        match self {
+            ScoringBackend::Dense => "dense",
+            ScoringBackend::Blockmax => "blockmax",
+        }
+    }
+
+    /// Parse the config spelling (`dense` | `blockmax`).
+    pub fn parse(s: &str) -> Option<ScoringBackend> {
+        match s {
+            "dense" => Some(ScoringBackend::Dense),
+            "blockmax" => Some(ScoringBackend::Blockmax),
+            _ => None,
+        }
+    }
+
+    /// All supported backends (config docs, benches, test sweeps).
+    pub const ALL: [ScoringBackend; 2] = [ScoringBackend::Dense, ScoringBackend::Blockmax];
+}
+
+/// Per-block summaries of one tier's scoring rows (see module docs).
+#[derive(Clone, Debug)]
+pub struct BlockPlane {
+    d: usize,
+    rows: usize,
+    /// Per-channel maxima, row-major `[num_blocks, d]`.
+    chan_max: Vec<f32>,
+    /// Per-channel minima, row-major `[num_blocks, d]`.
+    chan_min: Vec<f32>,
+    /// Max covering radius over member rows (0 for radius-free tiers).
+    radius_max: Vec<f32>,
+    /// Union of member owner bits (`1 << min(owner, 63)`; saturated, so
+    /// the mask is conservative when there are more than 64 owners).
+    owner_mask: Vec<u64>,
+    dirty: Vec<bool>,
+    dirty_count: usize,
+    /// Last-seen i8 scale-growth counter of the mirrored `QuantMat`.
+    seen_growths: u64,
+    /// Reusable row fetch buffer (`d` wide) for summary rebuilds.
+    tmp: Vec<f32>,
+}
+
+impl BlockPlane {
+    pub fn new(d: usize) -> BlockPlane {
+        BlockPlane {
+            d,
+            rows: 0,
+            chan_max: Vec::new(),
+            chan_min: Vec::new(),
+            radius_max: Vec::new(),
+            owner_mask: Vec::new(),
+            dirty: Vec::new(),
+            dirty_count: 0,
+            seen_growths: 0,
+            tmp: vec![0.0; d],
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn num_blocks(&self) -> usize {
+        self.dirty.len()
+    }
+
+    /// True while any block's summary is stale (pruning must not run).
+    pub fn any_dirty(&self) -> bool {
+        self.dirty_count > 0
+    }
+
+    /// Row range `[r0, r1)` covered by block `b`. Plain tiling: middle
+    /// blocks are exactly [`BLOCK_ROWS`] rows, and the final block (the
+    /// only one allowed to be short) ends at the matrix end — so every
+    /// block either has a 4-multiple length or runs to the end, which is
+    /// exactly the range-GEMV bit-identity contract (see [`BLOCK_ROWS`]).
+    #[inline]
+    pub fn block_range(&self, b: usize) -> (usize, usize) {
+        (b * BLOCK_ROWS, ((b + 1) * BLOCK_ROWS).min(self.rows))
+    }
+
+    /// Grow (or shrink) to `rows` total rows, marking every block that
+    /// covers a new row dirty. Shrinking (a rebuilt tier) resets the
+    /// whole plane — summaries of removed rows are meaningless.
+    pub fn sync_rows(&mut self, rows: usize) {
+        if rows < self.rows {
+            *self = BlockPlane::new(self.d);
+        }
+        if rows == self.rows {
+            return;
+        }
+        let first_new = self.rows / BLOCK_ROWS;
+        self.rows = rows;
+        let nb = rows.div_ceil(BLOCK_ROWS);
+        self.chan_max.resize(nb * self.d, f32::NEG_INFINITY);
+        self.chan_min.resize(nb * self.d, f32::INFINITY);
+        self.radius_max.resize(nb, 0.0);
+        self.owner_mask.resize(nb, 0);
+        self.dirty.resize(nb, true);
+        for b in first_new..nb {
+            self.mark_block_dirty(b);
+        }
+    }
+
+    #[inline]
+    fn mark_block_dirty(&mut self, b: usize) {
+        if !self.dirty[b] {
+            self.dirty[b] = true;
+        }
+        // resize() may have created the block already-dirty without the
+        // count knowing; recount lazily via the invariant below instead
+        // of trusting the flag's previous value
+        self.dirty_count = self.dirty.iter().filter(|&&x| x).count();
+    }
+
+    /// Mark the block covering row `r` dirty (in-place row rewrite).
+    pub fn mark_row_dirty(&mut self, r: usize) {
+        if r < self.rows {
+            let b = r / BLOCK_ROWS;
+            self.mark_block_dirty(b);
+        }
+    }
+
+    /// Invalidate every block (wholesale representation change).
+    pub fn mark_all_dirty(&mut self) {
+        for f in self.dirty.iter_mut() {
+            *f = true;
+        }
+        self.dirty_count = self.dirty.len();
+    }
+
+    /// Compare the mirrored matrix's monotonic i8 scale-growth counter
+    /// against the last-seen value; on mismatch every dequantized row
+    /// value may have changed, so all summaries are invalidated.
+    pub fn note_growths(&mut self, growths: u64) {
+        if growths != self.seen_growths {
+            self.seen_growths = growths;
+            self.mark_all_dirty();
+        }
+    }
+
+    /// Rebuild every dirty block's summaries. `fetch` writes row `r`'s
+    /// scoring representation (f32 row or dequantized mirror row) into
+    /// the provided `d`-wide buffer; `radii` is empty for radius-free
+    /// tiers; `owners` is empty for owner-free tiers.
+    pub fn ensure(
+        &mut self,
+        mut fetch: impl FnMut(usize, &mut [f32]),
+        radii: &[f32],
+        owners: &[usize],
+    ) {
+        if self.dirty_count == 0 {
+            return;
+        }
+        for b in 0..self.dirty.len() {
+            if !self.dirty[b] {
+                continue;
+            }
+            let (r0, r1) = self.block_range(b);
+            let mx = &mut self.chan_max[b * self.d..(b + 1) * self.d];
+            let mn = &mut self.chan_min[b * self.d..(b + 1) * self.d];
+            mx.fill(f32::NEG_INFINITY);
+            mn.fill(f32::INFINITY);
+            let mut rad = 0.0f32;
+            let mut mask = 0u64;
+            for r in r0..r1 {
+                fetch(r, &mut self.tmp);
+                for (j, &x) in self.tmp.iter().enumerate() {
+                    if x.is_finite() {
+                        mx[j] = mx[j].max(x);
+                        mn[j] = mn[j].min(x);
+                    } else {
+                        // poison (NaN/±∞ would be *swallowed* by
+                        // max/min): widen to ±∞ so the block bound
+                        // degrades to +∞ and the block is always
+                        // scanned — dense ranks NaN scores first under
+                        // total_cmp, so it must never be pruned
+                        mx[j] = f32::INFINITY;
+                        mn[j] = f32::NEG_INFINITY;
+                    }
+                }
+                if let Some(&rr) = radii.get(r) {
+                    rad = rad.max(rr);
+                }
+                if let Some(&o) = owners.get(r) {
+                    mask |= 1u64 << o.min(63);
+                }
+            }
+            self.radius_max[b] = rad;
+            self.owner_mask[b] = mask;
+            self.dirty[b] = false;
+        }
+        self.dirty_count = 0;
+    }
+
+    /// Conservative upper bound on `row·q + q_norm·radius[row]` over
+    /// every row of block `b`, padded for float-summation reassociation
+    /// (the [`crate::linalg::bound_dot`] kernel's magnitude budget). A
+    /// non-finite bound degrades to `+∞` — the block is scanned, never
+    /// wrongly skipped.
+    #[inline]
+    pub fn bound(&self, b: usize, q: &[f32], q_norm: f32) -> f32 {
+        let (ub, abs) = linalg::bound_dot(
+            &self.chan_max[b * self.d..(b + 1) * self.d],
+            &self.chan_min[b * self.d..(b + 1) * self.d],
+            q,
+        );
+        let rad = q_norm * self.radius_max[b];
+        let bound = ub + rad + (abs + rad.abs()) * BOUND_SLACK_REL + BOUND_SLACK_ABS;
+        if bound.is_finite() {
+            bound
+        } else {
+            f32::INFINITY
+        }
+    }
+
+    /// Whether block `b` can contain a row owned by any unit in the
+    /// saturated bit set `unit_bits` (conservative: bit 63 aggregates
+    /// every owner ≥ 63).
+    #[inline]
+    pub fn owner_hits(&self, b: usize, unit_bits: u64) -> bool {
+        self.owner_mask[b] & unit_bits != 0
+    }
+
+    /// Export the longest prefix of clean **full** blocks whose rows lie
+    /// entirely below `row_limit` — the summaries a frozen radix segment
+    /// carries so adopted prefixes skip the rebuild. Only valid at
+    /// f32/f16, where a row's scoring value is a deterministic function
+    /// of the row alone; at i8 the adopting mirror's bulk-rebuild scales
+    /// cover *all* of its rows, so the exporter's summaries do not
+    /// transfer (callers gate on precision).
+    pub fn export_frozen(&self, precision: Precision, row_limit: usize) -> Option<FrozenBlocks> {
+        if precision == Precision::I8 {
+            return None;
+        }
+        let mut nb = 0;
+        while nb < self.num_blocks()
+            && !self.dirty[nb]
+            && (nb + 1) * BLOCK_ROWS <= row_limit
+            && (nb + 1) * BLOCK_ROWS <= self.rows
+            // a middle block summarizes exactly BLOCK_ROWS rows only if
+            // it is not also the (short-tailed) final block
+            && self.block_range(nb).1 == (nb + 1) * BLOCK_ROWS
+        {
+            nb += 1;
+        }
+        if nb == 0 {
+            return None;
+        }
+        Some(FrozenBlocks {
+            d: self.d,
+            rows: nb * BLOCK_ROWS,
+            precision,
+            chan_max: self.chan_max[..nb * self.d].to_vec(),
+            chan_min: self.chan_min[..nb * self.d].to_vec(),
+        })
+    }
+
+    /// Adopt exported summaries for the leading blocks, marking them
+    /// clean (the pure perf carry of radix-segment adoption — the values
+    /// are identical to what a rebuild would compute). Returns `false`
+    /// (a no-op) when the shapes don't line up or the seeded blocks
+    /// would not be full blocks of this plane.
+    pub fn seed_frozen(&mut self, fb: &FrozenBlocks, precision: Precision) -> bool {
+        let nb = fb.rows / BLOCK_ROWS;
+        let shape_ok = fb.d == self.d
+            && fb.precision == precision
+            && precision != Precision::I8
+            && fb.rows % BLOCK_ROWS == 0
+            && fb.rows <= self.rows
+            && fb.chan_max.len() == nb * self.d
+            && fb.chan_min.len() == nb * self.d
+            // every seeded block must be a full block here too (the last
+            // plane block may be the short tail)
+            && (0..nb).all(|b| self.block_range(b).1 == (b + 1) * BLOCK_ROWS);
+        if !shape_ok {
+            return false;
+        }
+        self.chan_max[..nb * self.d].copy_from_slice(&fb.chan_max);
+        self.chan_min[..nb * self.d].copy_from_slice(&fb.chan_min);
+        for b in 0..nb {
+            // leaf-tier summaries: no radii, no owners
+            self.radius_max[b] = 0.0;
+            self.owner_mask[b] = 0;
+            self.dirty[b] = false;
+        }
+        self.dirty_count = self.dirty.iter().filter(|&&x| x).count();
+        true
+    }
+
+    /// Check that every **clean** block's summaries dominate the current
+    /// scoring rows (`check_invariants` extension). Dirty blocks are
+    /// exempt — they are never consulted for pruning.
+    pub fn verify(
+        &self,
+        mut fetch: impl FnMut(usize, &mut [f32]),
+        radii: &[f32],
+        owners: &[usize],
+    ) -> Result<(), String> {
+        let mut row = vec![0.0; self.d];
+        for b in 0..self.num_blocks() {
+            if self.dirty[b] {
+                continue;
+            }
+            let (r0, r1) = self.block_range(b);
+            let mx = &self.chan_max[b * self.d..(b + 1) * self.d];
+            let mn = &self.chan_min[b * self.d..(b + 1) * self.d];
+            for r in r0..r1 {
+                fetch(r, &mut row);
+                for (j, &x) in row.iter().enumerate() {
+                    if x > mx[j] || x < mn[j] {
+                        return Err(format!(
+                            "block {b} channel {j}: row {r} value {x} outside [{}, {}]",
+                            mn[j], mx[j]
+                        ));
+                    }
+                }
+                if let Some(&rr) = radii.get(r) {
+                    if rr > self.radius_max[b] {
+                        return Err(format!(
+                            "block {b}: row {r} radius {rr} > summary {}",
+                            self.radius_max[b]
+                        ));
+                    }
+                }
+                if let Some(&o) = owners.get(r) {
+                    if self.owner_mask[b] & (1u64 << o.min(63)) == 0 {
+                        return Err(format!("block {b}: row {r} owner {o} bit missing"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Plane memory footprint in bytes.
+    pub fn bytes(&self) -> usize {
+        (self.chan_max.len() + self.chan_min.len() + self.radius_max.len() + self.tmp.len()) * 4
+            + self.owner_mask.len() * 8
+            + self.dirty.len()
+    }
+}
+
+/// Clean leading-block summaries exported with a frozen radix segment
+/// (`SharedSegment::blocks`), so an adopted shared prefix carries its
+/// inverted-plane summaries instead of recomputing them. f32/f16 only —
+/// see [`BlockPlane::export_frozen`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct FrozenBlocks {
+    pub d: usize,
+    /// Summarized row count (a multiple of [`BLOCK_ROWS`]).
+    pub rows: usize,
+    /// Scoring precision the summaries were computed under; adoption
+    /// requires an exact match.
+    pub precision: Precision,
+    pub chan_max: Vec<f32>,
+    pub chan_min: Vec<f32>,
+}
+
+impl FrozenBlocks {
+    /// Serialized footprint in bytes (segment accounting).
+    pub fn bytes(&self) -> usize {
+        (self.chan_max.len() + self.chan_min.len()) * 4 + 32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill_rows(rng: &mut Rng, rows: usize, d: usize) -> Vec<f32> {
+        rng.normal_vec(rows * d)
+    }
+
+    fn built_plane(mat: &[f32], d: usize, radii: &[f32], owners: &[usize]) -> BlockPlane {
+        let mut p = BlockPlane::new(d);
+        p.sync_rows(mat.len() / d);
+        p.ensure(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), radii, owners);
+        p
+    }
+
+    #[test]
+    fn backend_parse_round_trips() {
+        for b in ScoringBackend::ALL {
+            assert_eq!(ScoringBackend::parse(b.name()), Some(b));
+        }
+        assert_eq!(ScoringBackend::parse("sparse"), None);
+        assert_eq!(ScoringBackend::default(), ScoringBackend::Dense);
+    }
+
+    #[test]
+    fn block_ranges_tile_the_rows() {
+        let mut p = BlockPlane::new(4);
+        for rows in [0usize, 1, 63, 64, 65, 128, 150, 193] {
+            p.sync_rows(rows.max(p.rows())); // grow-only sequence
+        }
+        let mut covered = 0;
+        for b in 0..p.num_blocks() {
+            let (r0, r1) = p.block_range(b);
+            assert_eq!(r0, covered);
+            assert!(r1 > r0);
+            // middle blocks are exactly BLOCK_ROWS; block starts stay
+            // 4-aligned (the GEMV bit-identity contract)
+            assert_eq!(r0 % 4, 0);
+            if b + 1 < p.num_blocks() {
+                assert_eq!(r1 - r0, BLOCK_ROWS);
+            }
+            covered = r1;
+        }
+        assert_eq!(covered, p.rows());
+    }
+
+    #[test]
+    fn summaries_dominate_rows_and_bound_dominates_scores() {
+        let mut rng = Rng::new(3);
+        let d = 16;
+        let rows = 150;
+        let mat = fill_rows(&mut rng, rows, d);
+        let radii: Vec<f32> = (0..rows).map(|_| rng.normal().abs() * 0.1).collect();
+        let owners: Vec<usize> = (0..rows).map(|i| i % 7).collect();
+        let p = built_plane(&mat, d, &radii, &owners);
+        assert!(!p.any_dirty());
+        p.verify(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &radii, &owners)
+            .unwrap();
+        for _ in 0..20 {
+            let q = rng.normal_vec(d);
+            let qn = crate::linalg::norm(&q);
+            for b in 0..p.num_blocks() {
+                let bound = p.bound(b, &q, qn);
+                let (r0, r1) = p.block_range(b);
+                for r in r0..r1 {
+                    let s = crate::linalg::dot(&mat[r * d..(r + 1) * d], &q) + qn * radii[r];
+                    assert!(s <= bound, "row {r}: score {s} above block bound {bound}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dirty_tracking_follows_mutations() {
+        let mut rng = Rng::new(5);
+        let d = 8;
+        let mut mat = fill_rows(&mut rng, 100, d);
+        let mut p = built_plane(&mat, d, &[], &[]);
+        assert!(!p.any_dirty());
+        // in-place rewrite dirties exactly the covering block
+        mat[70 * d] += 10.0;
+        p.mark_row_dirty(70);
+        assert!(p.any_dirty());
+        assert!(p
+            .verify(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[])
+            .is_ok()); // dirty block exempt
+        p.ensure(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]);
+        assert!(!p.any_dirty());
+        // appends dirty the partially-filled tail block
+        mat.extend_from_slice(&fill_rows(&mut rng, 30, d));
+        p.sync_rows(130);
+        assert!(p.any_dirty());
+        p.ensure(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]);
+        p.verify(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]).unwrap();
+        // growth-counter change invalidates everything
+        p.note_growths(1);
+        assert_eq!(p.num_blocks(), p.dirty.iter().filter(|&&x| x).count());
+        // same counter again is a no-op
+        p.ensure(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]);
+        p.note_growths(1);
+        assert!(!p.any_dirty());
+        // shrink resets wholesale
+        p.sync_rows(10);
+        assert_eq!(p.rows(), 10);
+        assert!(p.any_dirty());
+    }
+
+    #[test]
+    fn frozen_blocks_round_trip_and_reject_mismatches() {
+        let mut rng = Rng::new(9);
+        let d = 8;
+        let rows = 150; // two full blocks + a 22-row tail
+        let mat = fill_rows(&mut rng, rows, d);
+        let p = built_plane(&mat, d, &[], &[]);
+        // i8 summaries never export
+        assert!(p.export_frozen(Precision::I8, rows).is_none());
+        let fb = p.export_frozen(Precision::F32, rows).unwrap();
+        assert_eq!(fb.rows, 2 * BLOCK_ROWS);
+        assert!(fb.bytes() > 0);
+        // a row limit below one full block exports nothing
+        assert!(p.export_frozen(Precision::F32, BLOCK_ROWS - 1).is_none());
+
+        // seed into a fresh plane over the same leading rows
+        let mut q = BlockPlane::new(d);
+        q.sync_rows(rows);
+        assert!(q.seed_frozen(&fb, Precision::F32));
+        // seeded blocks are clean and identical; the tail is still dirty
+        assert!(q.any_dirty());
+        q.ensure(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]);
+        q.verify(|r, out| out.copy_from_slice(&mat[r * d..(r + 1) * d]), &[], &[]).unwrap();
+        assert_eq!(q.chan_max, p.chan_max);
+        assert_eq!(q.chan_min, p.chan_min);
+
+        // mismatches refuse to seed
+        let mut other = BlockPlane::new(d + 1);
+        other.sync_rows(rows);
+        assert!(!other.seed_frozen(&fb, Precision::F32));
+        let mut short = BlockPlane::new(d);
+        short.sync_rows(BLOCK_ROWS); // fewer rows than the export
+        assert!(!short.seed_frozen(&fb, Precision::F32));
+        let mut wrong_prec = BlockPlane::new(d);
+        wrong_prec.sync_rows(rows);
+        assert!(!wrong_prec.seed_frozen(&fb, Precision::F16));
+    }
+
+    #[test]
+    fn bound_degrades_to_infinity_on_poison() {
+        let d = 4;
+        let mut mat = vec![0.5f32; 2 * BLOCK_ROWS * d];
+        mat[3] = f32::NAN;
+        let p = built_plane(&mat, d, &[], &[]);
+        let q = vec![1.0f32; d];
+        assert_eq!(p.bound(0, &q, 1.0), f32::INFINITY);
+        assert!(p.bound(1, &q, 1.0).is_finite());
+    }
+
+    #[test]
+    fn owner_mask_saturates_at_bit_63() {
+        let d = 4;
+        let mat = vec![0.0f32; BLOCK_ROWS * d];
+        let owners: Vec<usize> = (0..BLOCK_ROWS).map(|i| i + 40).collect(); // 40..104
+        let p = built_plane(&mat, d, &[], &owners);
+        assert!(p.owner_hits(0, 1u64 << 40));
+        assert!(p.owner_hits(0, 1u64 << 63)); // owners >= 63 aggregate
+        assert!(!p.owner_hits(0, 1u64 << 5));
+    }
+}

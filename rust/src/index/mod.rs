@@ -16,11 +16,13 @@
 //! monotonic radius expansion).
 
 pub mod hierarchy;
+pub mod inverted;
 pub mod kmeans;
 pub mod reps;
 pub mod segment;
 pub mod update;
 
 pub use hierarchy::{HierarchicalIndex, IndexParams};
+pub use inverted::{BlockPlane, FrozenBlocks, ScoringBackend, BLOCK_ROWS};
 pub use reps::{max_pool_rep, mean_pool_rep, KeySource, Pooling};
 pub use segment::SharedSegment;

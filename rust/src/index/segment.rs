@@ -19,6 +19,7 @@
 
 use crate::chunking::Chunk;
 use crate::index::hierarchy::HierarchicalIndex;
+use crate::index::inverted::FrozenBlocks;
 
 /// The frozen leaf tier of a [`HierarchicalIndex`] over a sealed prefix.
 #[derive(Clone, Debug)]
@@ -31,12 +32,20 @@ pub struct SharedSegment {
     pub spans: Vec<Chunk>,
     /// Pooled unit-norm representatives, row-major `[spans.len(), d]`.
     pub reps: Vec<f32>,
+    /// Block-max summaries over the frozen leading rep blocks (f32/f16
+    /// only, `None` at i8 or when the exporter ran the dense backend) —
+    /// seeds the adopting index's inverted plane so the shared prefix
+    /// skips its first summary rebuild.
+    pub blocks: Option<FrozenBlocks>,
 }
 
 impl SharedSegment {
     /// Approximate footprint (prefix-cache budgeting).
     pub fn bytes(&self) -> usize {
-        self.reps.len() * 4 + self.spans.len() * 16 + 32
+        self.reps.len() * 4
+            + self.spans.len() * 16
+            + 32
+            + self.blocks.as_ref().map_or(0, |b| b.bytes())
     }
 
     /// Extract the frozen leaf tier from a built index: the longest run
@@ -64,7 +73,14 @@ impl SharedSegment {
         if spans.is_empty() {
             return None;
         }
-        Some(SharedSegment { d, upto: next, spans, reps })
+        // carry the clean leading block summaries (the adopted reps are
+        // exactly rows [0, spans.len()) of the exporter's leaf matrix,
+        // so its plane's full clean prefix blocks transfer verbatim)
+        let blocks = idx
+            .leaf_bm
+            .as_ref()
+            .and_then(|p| p.export_frozen(idx.params.rep_precision, spans.len()));
+        Some(SharedSegment { d, upto: next, spans, reps, blocks })
     }
 }
 

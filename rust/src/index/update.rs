@@ -193,6 +193,13 @@ impl HierarchicalIndex {
             self.graft_tmp.extend_from_slice(&self.fine_centroids[rr]);
             self.fine_q.set_row(f_best, &self.graft_tmp);
         }
+        // The in-place centroid rewrite + radius expansion stale the
+        // covering block-max summaries. Appends are caught by the plane's
+        // row-count sync in `ensure_blockmax`; this rewrite is the one
+        // leaf/fine mutation that keeps the row count unchanged.
+        if let Some(plane) = self.fine_bm.as_mut() {
+            plane.mark_row_dirty(f_best);
+        }
 
         // --- coarse unit: absorb the cluster's new centroid -------------
         let u = self.fine_units[f_best];

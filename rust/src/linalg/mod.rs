@@ -73,6 +73,19 @@ pub fn dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
     simd::dequant_i8(codes, scales, dst)
 }
 
+/// Fused block-bound kernel (SIMD-dispatched): given a block's
+/// per-channel maxima/minima and a query, returns
+/// `(Σ_j max(q_j,0)·maxs_j + min(q_j,0)·mins_j, Σ_j |q_j|·max(|maxs_j|,
+/// |mins_j|))` in one pass. The first component is the tightest
+/// per-channel upper bound on `row · q` over every row summarized by
+/// `(maxs, mins)`; the second is the magnitude budget the caller scales
+/// into a float-summation slack so the bound stays conservative under
+/// reassociated SIMD sums (see `index::inverted`).
+#[inline]
+pub fn bound_dot(maxs: &[f32], mins: &[f32], q: &[f32]) -> (f32, f32) {
+    simd::bound_dot(maxs, mins, q)
+}
+
 /// Euclidean distance.
 #[inline]
 pub fn dist(a: &[f32], b: &[f32]) -> f32 {
@@ -193,6 +206,12 @@ pub fn top_k(scores: &[f32], k: usize) -> Vec<usize> {
 /// order [`top_k`] produces). Uses `select_nth_unstable` — O(n + k log k)
 /// instead of a full sort — which is what makes decode-time candidate
 /// ranking cheap when only the top-`k` survive.
+///
+/// Contract at the boundary: when `k >= scores.len()` the result is the
+/// **full** index set, still fully sorted — never an unsorted or
+/// truncated prefix. The block-max pruning loop leans on this: when
+/// fewer candidates than `k` survive, the threshold floor is read off a
+/// well-ordered complete set, so callers need no clamp of their own.
 pub fn top_k_partial(scores: &[f32], k: usize, order: &mut Vec<usize>) {
     order.clear();
     let k = k.min(scores.len());
@@ -313,6 +332,22 @@ mod tests {
         assert!(buf.is_empty());
         top_k_partial(&s, 99, &mut buf);
         assert_eq!(buf.len(), 5);
+    }
+
+    #[test]
+    fn top_k_partial_k_at_or_past_len_returns_sorted_full_set() {
+        // the top-k floor contract the blockmax threshold logic relies
+        // on: k >= len yields the complete index set, fully sorted
+        let s = [0.2, 0.9, 0.9, 0.1, 0.5];
+        for k in [5, 6, 99] {
+            let mut buf = vec![7usize; 3];
+            top_k_partial(&s, k, &mut buf);
+            assert_eq!(buf, vec![1, 2, 4, 0, 3], "k={k}");
+        }
+        // empty input stays empty at any k
+        let mut buf = vec![1usize];
+        top_k_partial(&[], 4, &mut buf);
+        assert!(buf.is_empty());
     }
 
     #[test]

@@ -181,6 +181,26 @@ pub fn scalar_matvec_i8_scaled(codes: &[i8], d: usize, scales: &[f32], q: &[f32]
     }
 }
 
+/// Scalar fused block-bound kernel: returns
+/// `(Σ_j max(q_j,0)·maxs_j + min(q_j,0)·mins_j,
+///   Σ_j |q_j|·max(|maxs_j|, |mins_j|))`.
+///
+/// The first component is the per-channel interval upper bound on
+/// `row · q` over any row with `mins_j <= row_j <= maxs_j`; the second
+/// is the magnitude budget used to pad the bound against float-summation
+/// reassociation (the block-max plane in `index::inverted`).
+pub fn scalar_bound_dot(maxs: &[f32], mins: &[f32], q: &[f32]) -> (f32, f32) {
+    debug_assert_eq!(maxs.len(), q.len());
+    debug_assert_eq!(mins.len(), q.len());
+    let mut ub = 0.0f32;
+    let mut abs = 0.0f32;
+    for j in 0..q.len() {
+        ub += q[j].max(0.0) * maxs[j] + q[j].min(0.0) * mins[j];
+        abs += q[j].abs() * maxs[j].abs().max(mins[j].abs());
+    }
+    (ub, abs)
+}
+
 /// Scalar i8→f32 dequantizing copy: `dst[j] = codes[j]·scales[j]`.
 pub fn scalar_dequant_i8(codes: &[i8], scales: &[f32], dst: &mut [f32]) {
     debug_assert_eq!(codes.len(), dst.len());
@@ -612,6 +632,60 @@ mod avx2 {
         }
     }
 
+    /// Fused block-bound kernel: one pass over `(maxs, mins, q)`
+    /// accumulating both the signed interval upper bound and the
+    /// absolute-magnitude budget (see `scalar_bound_dot` for the exact
+    /// sums). Sign selection is branch-free: `max(q,0)`/`min(q,0)` pick
+    /// which summary each lane multiplies.
+    ///
+    /// # Safety
+    /// Caller must ensure AVX2+FMA are available and
+    /// `maxs.len() == mins.len() == q.len()` (loads read up to `q.len()`
+    /// elements from all three slices).
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn bound_dot(maxs: &[f32], mins: &[f32], q: &[f32]) -> (f32, f32) {
+        debug_assert_eq!(maxs.len(), q.len());
+        debug_assert_eq!(mins.len(), q.len());
+        let n = q.len();
+        let px = maxs.as_ptr();
+        let pn = mins.as_ptr();
+        let pq = q.as_ptr();
+        // SAFETY: 8-wide loads at `i` are guarded by `i + 8 <= n` and the
+        // scalar tail reads by `i < n`, so every access stays inside the
+        // three `n`-element slices; the caller's contract supplies
+        // AVX2+FMA for the intrinsics.
+        unsafe {
+            let zero = _mm256_setzero_ps();
+            // clears the IEEE sign bit: |x| = x & !sign
+            let sign = _mm256_set1_ps(-0.0);
+            let mut acc_ub = _mm256_setzero_ps();
+            let mut acc_abs = _mm256_setzero_ps();
+            let mut i = 0usize;
+            while i + 8 <= n {
+                let qv = _mm256_loadu_ps(pq.add(i));
+                let xv = _mm256_loadu_ps(px.add(i));
+                let nv = _mm256_loadu_ps(pn.add(i));
+                let qp = _mm256_max_ps(qv, zero);
+                let qn = _mm256_min_ps(qv, zero);
+                acc_ub = _mm256_fmadd_ps(qp, xv, acc_ub);
+                acc_ub = _mm256_fmadd_ps(qn, nv, acc_ub);
+                let qa = _mm256_andnot_ps(sign, qv);
+                let ma = _mm256_max_ps(_mm256_andnot_ps(sign, xv), _mm256_andnot_ps(sign, nv));
+                acc_abs = _mm256_fmadd_ps(qa, ma, acc_abs);
+                i += 8;
+            }
+            let mut ub = hsum256(acc_ub);
+            let mut abs = hsum256(acc_abs);
+            while i < n {
+                let qj = *pq.add(i);
+                ub += qj.max(0.0) * *px.add(i) + qj.min(0.0) * *pn.add(i);
+                abs += qj.abs() * (*px.add(i)).abs().max((*pn.add(i)).abs());
+                i += 1;
+            }
+            (ub, abs)
+        }
+    }
+
     /// # Safety
     /// Caller must ensure AVX2+FMA and
     /// `codes.len() == scales.len() == dst.len()` (each 8-wide step
@@ -782,6 +856,25 @@ pub fn matvec_i8_scaled(codes: &[i8], d: usize, scales: &[f32], q: &[f32], out: 
         }
     }
     scalar_matvec_i8_scaled(codes, d, scales, q, out)
+}
+
+/// Fused block-bound kernel on the selected backend (see
+/// [`scalar_bound_dot`] for the two sums). Unlike the GEMV family this
+/// result feeds a *pruning* decision, not a score: callers only rely on
+/// conservativeness after padding with the returned magnitude budget, so
+/// scalar/SIMD accumulation-order differences are acceptable here.
+#[inline]
+pub fn bound_dot(maxs: &[f32], mins: &[f32], q: &[f32]) -> (f32, f32) {
+    assert_eq!(maxs.len(), q.len(), "bound_dot max length mismatch");
+    assert_eq!(mins.len(), q.len(), "bound_dot min length mismatch");
+    #[cfg(target_arch = "x86_64")]
+    {
+        if backend() == Backend::Avx2Fma {
+            // SAFETY: backend() verified avx2+fma at startup; lengths match.
+            return unsafe { avx2::bound_dot(maxs, mins, q) };
+        }
+    }
+    scalar_bound_dot(maxs, mins, q)
 }
 
 /// Dequantizing i8→f32 copy on the selected backend (the fused
@@ -971,6 +1064,60 @@ mod tests {
             prop_assert!(a == b, "widen mismatch at n={n}");
             Ok(())
         });
+    }
+
+    #[test]
+    fn simd_matches_scalar_bound_dot() {
+        prop::check("simd bound_dot == scalar", 200, |g| {
+            let n = g.usize_in(0..67);
+            let mut maxs = Vec::with_capacity(n);
+            let mut mins = Vec::with_capacity(n);
+            for _ in 0..n {
+                let a = g.f32_in(-2.0, 2.0);
+                let b = g.f32_in(-2.0, 2.0);
+                maxs.push(a.max(b));
+                mins.push(a.min(b));
+            }
+            let q: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let (ub_w, abs_w) = scalar_bound_dot(&maxs, &mins, &q);
+            let (ub_g, abs_g) = bound_dot(&maxs, &mins, &q);
+            prop_assert!((ub_g - ub_w).abs() < tol(n), "ub {ub_g} vs {ub_w} (n={n})");
+            prop_assert!((abs_g - abs_w).abs() < tol(n), "abs {abs_g} vs {abs_w} (n={n})");
+            prop_assert!(abs_g >= -tol(n), "abs budget must be non-negative: {abs_g}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bound_dot_upper_bounds_every_in_interval_dot() {
+        // the property the pruning plane rests on: for any row with
+        // mins <= row <= maxs per channel, row·q <= ub (+ slack for the
+        // reassociated SIMD sum, covered by the abs budget)
+        prop::check("bound_dot dominates member dots", 150, |g| {
+            let n = g.usize_in(1..50);
+            let mut maxs = Vec::with_capacity(n);
+            let mut mins = Vec::with_capacity(n);
+            let mut row = Vec::with_capacity(n);
+            for _ in 0..n {
+                let a = g.f32_in(-2.0, 2.0);
+                let b = g.f32_in(-2.0, 2.0);
+                let (lo, hi) = (a.min(b), a.max(b));
+                mins.push(lo);
+                maxs.push(hi);
+                row.push(g.f32_in(lo, hi).clamp(lo, hi));
+            }
+            let q: Vec<f32> = (0..n).map(|_| g.f32_in(-2.0, 2.0)).collect();
+            let (ub, abs) = bound_dot(&maxs, &mins, &q);
+            let s = dot(&row, &q);
+            let slack = abs * 1e-5 + 1e-6;
+            prop_assert!(s <= ub + slack, "dot {s} exceeds bound {ub} (slack {slack})");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn bound_dot_empty_is_zero() {
+        assert_eq!(bound_dot(&[], &[], &[]), (0.0, 0.0));
     }
 
     #[test]

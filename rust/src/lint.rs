@@ -749,6 +749,26 @@ impl PartialOrd for Entry {
     }
 
     #[test]
+    fn scoring_rules_cover_blockmax_modules() {
+        // the inverted retrieval plane is scoring code: the partial-cmp
+        // ban (NaN-total ordering) must apply to both new modules, and
+        // the SIMD bound kernel home keeps its unsafe coverage
+        let bad = r##"
+pub fn best(v: &mut [(usize, f32)]) {
+    v.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+}
+"##;
+        assert_eq!(rules_of("src/sparse/blockmax.rs", bad), vec![RULE_PARTIAL_CMP]);
+        assert_eq!(rules_of("src/index/inverted.rs", bad), vec![RULE_PARTIAL_CMP]);
+        let raw_unsafe = r##"
+pub fn bound(p: *const f32) -> f32 {
+    unsafe { *p }
+}
+"##;
+        assert_eq!(rules_of("src/linalg/simd.rs", raw_unsafe), vec![RULE_SAFETY_COMMENT]);
+    }
+
+    #[test]
     fn relaxed_ordering_needs_justification_comment() {
         let bad = r##"
 use std::sync::atomic::{AtomicU64, Ordering};

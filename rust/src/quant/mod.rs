@@ -269,6 +269,13 @@ pub struct QuantMat {
     codes: Vec<i8>,
     /// Per-channel scales (`d` entries; [`Precision::I8`] only).
     scales: Vec<f32>,
+    /// Monotonic count of i8 scale growths. A growth requantizes every
+    /// existing code in the channel, so dequantized values of rows that
+    /// were *not* touched by the triggering write still change —
+    /// derived structures (the block-max summaries in
+    /// `index::inverted`) watch this counter to know when their cached
+    /// per-channel bounds went stale wholesale.
+    growths: u64,
 }
 
 impl QuantMat {
@@ -403,9 +410,22 @@ impl QuantMat {
 
     /// Grow channel `c`'s scale to cover `x`, requantizing existing codes
     /// (shared implementation with the KV pages — see
-    /// [`grow_channel_for`]).
+    /// [`grow_channel_for`]). Bumps [`QuantMat::growths`] when the scale
+    /// actually changed.
     fn grow_channel(&mut self, c: usize, x: f32) {
+        let before = self.scales[c];
         grow_channel_for(&mut self.codes, &mut self.scales, self.d, self.rows, c, x);
+        if self.scales[c] != before {
+            self.growths += 1;
+        }
+    }
+
+    /// Monotonic count of i8 per-channel scale growths over this
+    /// mirror's lifetime (never reset — a consumer caching per-row
+    /// dequantized summaries compares its last-seen value and
+    /// invalidates wholesale on mismatch). Always 0 at f32/f16.
+    pub fn growths(&self) -> u64 {
+        self.growths
     }
 
     /// Score every mirrored row against `q`: `out[r] = row_r · q` in
@@ -419,6 +439,29 @@ impl QuantMat {
             Precision::F16 => crate::linalg::matvec_f16(&self.f16, self.d, q, out),
             Precision::I8 => {
                 crate::linalg::matvec_i8_scaled(&self.codes, self.d, &self.scales, q, out)
+            }
+        }
+    }
+
+    /// Score the row range `[r0, r1)` against `q` via the widening GEMV
+    /// kernels (`out[i] = row_{r0+i} · q`). Bit-identical to the same
+    /// rows of [`QuantMat::matvec_into`] **iff** `r0 % 4 == 0` and
+    /// either `r1 - r0` is a multiple of 4 or `r1 == rows`: the AVX2
+    /// GEMVs accumulate rows in groups of 4 from the slice start and
+    /// fall back to the dual-accumulator dot kernel for a short tail, so
+    /// a range call reproduces the full call's per-row instruction
+    /// sequence exactly when its group boundaries line up (the block-max
+    /// plane uses 64-row blocks with the final block extended to the
+    /// matrix end). Panics at f32 like [`QuantMat::matvec_into`].
+    pub fn matvec_range_into(&self, r0: usize, r1: usize, q: &[f32], out: &mut [f32]) {
+        assert!(r0 <= r1 && r1 <= self.rows, "quant range matvec bounds");
+        assert_eq!(out.len(), r1 - r0, "quant range matvec shape");
+        let (a, b) = (r0 * self.d, r1 * self.d);
+        match self.precision {
+            Precision::F32 => panic!("matvec_range_into on an inactive (f32) quant mirror"),
+            Precision::F16 => crate::linalg::matvec_f16(&self.f16[a..b], self.d, q, out),
+            Precision::I8 => {
+                crate::linalg::matvec_i8_scaled(&self.codes[a..b], self.d, &self.scales, q, out)
             }
         }
     }
@@ -630,6 +673,60 @@ mod tests {
                         want[c]
                     );
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn quantmat_growth_counter_tracks_scale_changes() {
+        let d = 4;
+        let mut m = QuantMat::new(Precision::I8);
+        m.reset(d);
+        assert_eq!(m.growths(), 0);
+        m.push_row(&[1.0, 1.0, 1.0, 1.0]);
+        let after_first = m.growths();
+        assert!(after_first >= 1, "first row must seed the scales");
+        // a row inside the covered range must not bump the counter
+        m.push_row(&[0.5, 0.5, 0.5, 0.5]);
+        assert_eq!(m.growths(), after_first);
+        // an outgrowing row requantizes the channel and bumps it
+        m.push_row(&[100.0, 0.1, 0.1, 0.1]);
+        assert!(m.growths() > after_first);
+        // f16 mirrors never grow scales
+        let mut h = QuantMat::new(Precision::F16);
+        h.reset(d);
+        h.push_row(&[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(h.growths(), 0);
+    }
+
+    #[test]
+    fn quantmat_matvec_range_matches_full_on_aligned_blocks() {
+        let mut rng = Rng::new(21);
+        let d = 24;
+        let rows = 150; // not a multiple of the 64-row block
+        let mat = rng.normal_vec(rows * d);
+        let q = rng.normal_vec(d);
+        for prec in [Precision::F16, Precision::I8] {
+            let mut m = QuantMat::new(prec);
+            m.rebuild(&mat, d);
+            let mut full = vec![0.0f32; rows];
+            m.matvec_into(&q, &mut full);
+            // 64-row blocks with the final block running to the end: the
+            // alignment contract under which range == full bit-for-bit
+            let mut r0 = 0;
+            while r0 < rows {
+                let r1 = if r0 + 64 >= rows { rows } else { r0 + 64 };
+                let mut part = vec![0.0f32; r1 - r0];
+                m.matvec_range_into(r0, r1, &q, &mut part);
+                for (i, &p) in part.iter().enumerate() {
+                    assert_eq!(
+                        p.to_bits(),
+                        full[r0 + i].to_bits(),
+                        "{prec:?} row {} differs between range and full GEMV",
+                        r0 + i
+                    );
+                }
+                r0 = r1;
             }
         }
     }

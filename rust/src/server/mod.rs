@@ -299,6 +299,8 @@ fn metrics_json(m: &Metrics) -> Json {
         ("prefix_evictions", Json::num(m.prefix_evictions as f64)),
         ("kv_bytes_shared", Json::num(m.kv_bytes_shared as f64)),
         ("selects_before_build", Json::num(m.selects_before_build as f64)),
+        ("blocks_scanned_total", Json::num(m.blocks_scanned_total as f64)),
+        ("blocks_pruned_total", Json::num(m.blocks_pruned_total as f64)),
         ("queue_depth", Json::num(m.queue_depth as f64)),
         ("requests_in_flight", Json::num(m.requests_in_flight as f64)),
         ("cancellations", Json::num(m.cancellations as f64)),
@@ -784,6 +786,8 @@ mod tests {
         assert!(m.get("kv_bytes_shared").as_f64().is_some());
         assert!(m.get("prefix_evictions").as_f64().is_some());
         assert!(m.get("selects_before_build").as_f64().is_some());
+        assert!(m.get("blocks_scanned_total").as_f64().is_some());
+        assert!(m.get("blocks_pruned_total").as_f64().is_some());
         server.stop();
         handle.shutdown();
         join.join().unwrap();

@@ -1,0 +1,415 @@
+//! Block-max pruned top-k drivers over the inverted retrieval plane
+//! ([`crate::index::inverted`]) — the scoring side of the
+//! `index.scoring_backend = blockmax` knob.
+//!
+//! Both drivers compute **exactly** the set the dense scan's
+//! select-then-truncate pipeline keeps, under the same total order
+//! (score descending, index ascending — [`by_score_desc`]): blocks are
+//! visited in descending upper-bound order and the scan stops only when
+//! a block's bound falls *strictly* below the current k-th best score —
+//! a tie must still be scanned, because a tied row with a smaller index
+//! outranks the incumbent. Scores for scanned rows come from the same
+//! kernels the dense path runs (range GEMVs on 4-aligned blocks for the
+//! flat path, the per-row dot for the fine tier), so every kept score is
+//! bit-identical and selections cannot diverge. A non-finite bound
+//! degrades to `+∞` inside the plane, which sorts first and is always
+//! scanned — degenerate inputs cost speed, never correctness.
+
+use crate::index::hierarchy::by_score_desc;
+use crate::index::inverted::BlockPlane;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide count of blocks whose rows were actually scored by a
+/// block-max scan (scrape counter `blocks_scanned_total`).
+static BLOCKS_SCANNED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Process-wide count of blocks skipped without touching a row — by the
+/// bound threshold or the owner mask (scrape counter
+/// `blocks_pruned_total`).
+static BLOCKS_PRUNED_TOTAL: AtomicU64 = AtomicU64::new(0);
+
+/// Read the process-wide scanned-block counter.
+pub fn blocks_scanned_total() -> u64 {
+    BLOCKS_SCANNED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Read the process-wide pruned-block counter.
+pub fn blocks_pruned_total() -> u64 {
+    BLOCKS_PRUNED_TOTAL.load(Ordering::Relaxed)
+}
+
+/// Exact pruned top-`k` over a flat row matrix: leaves the top-`k` row
+/// indices of the scores `score_range` would produce, ordered by
+/// [`by_score_desc`], in `order` — byte-identical to the first `k`
+/// entries of the dense path's full `top_k_partial` ranking. `scores[r]`
+/// is written for every scanned row (the caller's f32 re-rank reads it);
+/// un-scanned rows keep stale values but never appear in `order`.
+///
+/// `score_range(r0, r1, out)` must write `out[i] = score(r0 + i)` using
+/// the same kernel the dense full scan uses (see
+/// [`crate::quant::QuantMat::matvec_range_into`] for the alignment
+/// contract that makes that bit-exact).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn flat_topk_into(
+    plane: &BlockPlane,
+    q: &[f32],
+    q_norm: f32,
+    k: usize,
+    mut score_range: impl FnMut(usize, usize, &mut [f32]),
+    scores: &mut Vec<f32>,
+    blocks: &mut Vec<(usize, f32)>,
+    cand: &mut Vec<(usize, f32)>,
+    order: &mut Vec<usize>,
+) {
+    let m = plane.rows();
+    order.clear();
+    scores.clear();
+    scores.resize(m, 0.0);
+    if m == 0 || k == 0 {
+        return;
+    }
+    blocks.clear();
+    for b in 0..plane.num_blocks() {
+        blocks.push((b, plane.bound(b, q, q_norm)));
+    }
+    blocks.sort_unstable_by(by_score_desc);
+    let (mut scanned, mut pruned) = (0u64, 0u64);
+    cand.clear();
+    for i in 0..blocks.len() {
+        let (b, bound) = blocks[i];
+        // strict <: a bound tied with the k-th best score can still hide
+        // a tied row with a smaller index, which outranks the incumbent
+        if cand.len() >= k && bound < cand[k - 1].1 {
+            pruned += (blocks.len() - i) as u64;
+            break;
+        }
+        let (r0, r1) = plane.block_range(b);
+        score_range(r0, r1, &mut scores[r0..r1]);
+        scanned += 1;
+        for r in r0..r1 {
+            cand.push((r, scores[r]));
+        }
+        if cand.len() >= k {
+            // keep exactly the top-k under the total order; cand[k-1] is
+            // then the running threshold
+            cand.select_nth_unstable_by(k - 1, by_score_desc);
+            cand.truncate(k);
+        }
+    }
+    cand.sort_unstable_by(by_score_desc);
+    order.extend(cand.iter().map(|&(r, _)| r));
+    BLOCKS_SCANNED_TOTAL.fetch_add(scanned, Ordering::Relaxed);
+    BLOCKS_PRUNED_TOTAL.fetch_add(pruned, Ordering::Relaxed);
+}
+
+/// Exact pruned top-`want` over the fine-centroid matrix, restricted to
+/// rows owned by a surviving coarse unit: leaves the same `(row, score)`
+/// **set** in `cand` that the dense member walk + select-truncate keeps
+/// (the caller's shared tail re-ranks and sorts it, so only the set must
+/// match). Blocks are additionally skipped by the plane's owner mask —
+/// a block containing no row of any surviving unit is never touched.
+///
+/// `score_row(f)` must compute the same per-row upper bound the dense
+/// walk computes (quantized dot + radius term, or the f32 Eqn. 2 bound).
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn fine_topk_into(
+    plane: &BlockPlane,
+    q: &[f32],
+    q_norm: f32,
+    want: usize,
+    units: &[usize],
+    owners: &[usize],
+    mut score_row: impl FnMut(usize) -> f32,
+    blocks: &mut Vec<(usize, f32)>,
+    cand: &mut Vec<(usize, f32)>,
+) {
+    cand.clear();
+    if plane.rows() == 0 || want == 0 || units.is_empty() {
+        return;
+    }
+    let unit_bits = units.iter().fold(0u64, |m, &u| m | (1u64 << u.min(63)));
+    blocks.clear();
+    for b in 0..plane.num_blocks() {
+        blocks.push((b, plane.bound(b, q, q_norm)));
+    }
+    blocks.sort_unstable_by(by_score_desc);
+    let (mut scanned, mut pruned) = (0u64, 0u64);
+    for i in 0..blocks.len() {
+        let (b, bound) = blocks[i];
+        if cand.len() >= want && bound < cand[want - 1].1 {
+            pruned += (blocks.len() - i) as u64;
+            break;
+        }
+        if !plane.owner_hits(b, unit_bits) {
+            // conservative mask: a miss proves no member row is inside
+            pruned += 1;
+            continue;
+        }
+        scanned += 1;
+        let (r0, r1) = plane.block_range(b);
+        for f in r0..r1 {
+            // saturated mask bits can collide, so membership is checked
+            // exactly per row (units is at most top_kg entries — tiny)
+            if !units.contains(&owners[f]) {
+                continue;
+            }
+            cand.push((f, score_row(f)));
+        }
+        if cand.len() >= want {
+            cand.select_nth_unstable_by(want - 1, by_score_desc);
+            cand.truncate(want);
+        }
+    }
+    BLOCKS_SCANNED_TOTAL.fetch_add(scanned, Ordering::Relaxed);
+    BLOCKS_PRUNED_TOTAL.fetch_add(pruned, Ordering::Relaxed);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::chunking::Chunk;
+    use crate::config::LycheeConfig;
+    use crate::index::hierarchy::{HierarchicalIndex, IndexParams};
+    use crate::index::inverted::ScoringBackend;
+    use crate::index::reps::FlatKeys;
+    use crate::index::segment::SharedSegment;
+    use crate::sparse::{make_policy, Ctx, POLICY_NAMES};
+    use crate::util::rng::Rng;
+
+    /// Topic-contiguous unit-norm reps: `groups` runs of `per` rows each
+    /// near one random direction — contiguous rows land in the same
+    /// block, which is what makes block bounds tight enough to prune.
+    fn topic_reps(rng: &mut Rng, groups: usize, per: usize, d: usize) -> (Vec<f32>, Vec<Vec<f32>>) {
+        let dirs: Vec<Vec<f32>> = (0..groups).map(|_| rng.unit_vec(d)).collect();
+        let mut reps = Vec::new();
+        for dir in &dirs {
+            for _ in 0..per {
+                let mut r = dir.clone();
+                for x in r.iter_mut() {
+                    *x += 0.1 * rng.normal();
+                }
+                crate::linalg::normalize(&mut r);
+                reps.extend_from_slice(&r);
+            }
+        }
+        (reps, dirs)
+    }
+
+    fn spans_for(m: usize, len: usize) -> Vec<Chunk> {
+        (0..m).map(|i| Chunk { start: i * len, len }).collect()
+    }
+
+    fn params(prec: crate::quant::Precision, backend: ScoringBackend) -> IndexParams {
+        let mut p = IndexParams::default();
+        p.rep_precision = prec;
+        p.scoring_backend = backend;
+        p
+    }
+
+    /// The tentpole acceptance property at index level: for both select
+    /// entry points, every precision, and a spread of budgets including
+    /// degenerate ones, the blockmax backend must return byte-identical
+    /// token sets to the dense backend — and with topic-structured data
+    /// it must actually skip blocks while doing so.
+    #[test]
+    fn blockmax_index_selections_byte_identical_to_dense_and_prune() {
+        let d = 24;
+        let (groups, per) = (10, 64); // 640 reps = 10 full leaf blocks
+        for prec in crate::quant::test_precisions() {
+            let mut rng = Rng::new(0xB10C + prec as u64);
+            let (reps, dirs) = topic_reps(&mut rng, groups, per, d);
+            let spans = spans_for(groups * per, 4);
+            let dense =
+                HierarchicalIndex::build_from_reps(d, params(prec, ScoringBackend::Dense), &spans, reps.clone());
+            let mut bm =
+                HierarchicalIndex::build_from_reps(d, params(prec, ScoringBackend::Blockmax), &spans, reps);
+            bm.ensure_blockmax();
+            bm.check_invariants().unwrap();
+            let (s0, p0) = (blocks_scanned_total(), blocks_pruned_total());
+            let mut queries: Vec<Vec<f32>> = dirs.iter().cloned().collect();
+            for _ in 0..6 {
+                queries.push(rng.normal_vec(d));
+            }
+            for q in &queries {
+                for budget in [0usize, 16, 64, 257, 10_000] {
+                    assert_eq!(
+                        dense.select_tokens_flat(q, budget),
+                        bm.select_tokens_flat(q, budget),
+                        "flat diverged @ {prec:?} budget {budget}"
+                    );
+                    assert_eq!(
+                        dense.select_tokens(q, 4, 16, budget),
+                        bm.select_tokens(q, 4, 16, budget),
+                        "hier diverged @ {prec:?} budget {budget}"
+                    );
+                }
+            }
+            assert!(blocks_scanned_total() > s0, "{prec:?}: blockmax path never engaged");
+            assert!(
+                blocks_pruned_total() > p0,
+                "{prec:?}: no block ever pruned on topic-structured data"
+            );
+        }
+    }
+
+    /// Coherence through the lazy-update path: grafts and sprouts mutate
+    /// the tiers in place / append rows; selections must stay identical
+    /// to a dense twin fed the same stream — both mid-stream (dirty
+    /// plane → silent dense fallback) and after every `ensure_blockmax`.
+    #[test]
+    fn blockmax_stays_identical_through_grafts_and_sprouts() {
+        let d = 16;
+        for prec in crate::quant::test_precisions() {
+            let mut rng = Rng::new(77 + prec as u64);
+            let (reps, _) = topic_reps(&mut rng, 4, 40, d);
+            let spans = spans_for(160, 4);
+            let mut dense =
+                HierarchicalIndex::build_from_reps(d, params(prec, ScoringBackend::Dense), &spans, reps.clone());
+            let mut bm =
+                HierarchicalIndex::build_from_reps(d, params(prec, ScoringBackend::Blockmax), &spans, reps);
+            let base = 160 * 4;
+            let mut topic = rng.unit_vec(d);
+            for i in 0..120 {
+                // drifting stream: mostly grafts, occasional far hops
+                // that sprout fresh clusters
+                for (t, x) in topic.iter_mut().zip(rng.normal_vec(d)) {
+                    *t += if i % 17 == 0 { 1.5 } else { 0.05 } * x;
+                }
+                crate::linalg::normalize(&mut topic);
+                let span = Chunk { start: base + i * 4, len: 4 };
+                dense.graft_rep(span, topic.clone());
+                bm.graft_rep(span, topic.clone());
+                let q = rng.normal_vec(d);
+                // dirty plane: blockmax must silently fall back, not drift
+                assert_eq!(dense.select_tokens_flat(&q, 48), bm.select_tokens_flat(&q, 48));
+                if i % 10 == 9 {
+                    bm.ensure_blockmax();
+                    bm.check_invariants().unwrap();
+                    let q2 = rng.normal_vec(d);
+                    assert_eq!(
+                        dense.select_tokens(&q2, 4, 16, 64),
+                        bm.select_tokens(&q2, 4, 16, 64),
+                        "{prec:?}: diverged after ensure at graft {i}"
+                    );
+                }
+            }
+        }
+    }
+
+    /// The registry-wide acceptance property: for EVERY policy and every
+    /// precision leg, flipping `index.scoring_backend` to blockmax must
+    /// leave every selection byte-identical — through build, decode
+    /// steps, and the graft traffic `on_token` generates.
+    #[test]
+    fn blockmax_selections_byte_identical_across_policy_registry() {
+        let d = 16;
+        let n = 1600;
+        let steps = 6;
+        let mut cfg = LycheeConfig::default();
+        cfg.budget = 128;
+        cfg.sink = 8;
+        cfg.recent = 16;
+        // small spans -> hundreds of chunks -> a multi-block plane
+        cfg.min_chunk = 2;
+        cfg.max_chunk = 8;
+        let mut rng = Rng::new(0x51EC7);
+        let keys = rng.normal_vec((n + steps) * d);
+        let text: Vec<u8> =
+            (0..n + steps).map(|_| b"the quick, brown. fox\n"[rng.range(0, 22)]).collect();
+        let src = FlatKeys::new(&keys, d);
+        let s0 = blocks_scanned_total();
+        for prec in crate::quant::test_precisions() {
+            let mut dense_cfg = cfg.clone();
+            dense_cfg.rep_precision = prec;
+            let mut bm_cfg = dense_cfg.clone();
+            bm_cfg.scoring_backend = ScoringBackend::Blockmax;
+            for &name in POLICY_NAMES {
+                let mut a = make_policy(name, &dense_cfg, 1, 4).unwrap();
+                let mut b = make_policy(name, &bm_cfg, 1, 4).unwrap();
+                a.build(&Ctx { keys: &src, text: &text, n });
+                b.build(&Ctx { keys: &src, text: &text, n });
+                for step in 0..steps {
+                    let pos = n + step;
+                    let ctx = Ctx { keys: &src, text: &text, n: pos };
+                    let q = rng.normal_vec(d);
+                    assert_eq!(
+                        a.select(&ctx, &q, pos),
+                        b.select(&ctx, &q, pos),
+                        "{name} @ {prec:?}: backends diverged at step {step}"
+                    );
+                    a.on_token(&ctx, pos);
+                    b.on_token(&ctx, pos);
+                }
+            }
+        }
+        assert!(blocks_scanned_total() > s0, "blockmax never engaged across the registry");
+    }
+
+    /// Radix-segment round trip: frozen block summaries exported with a
+    /// shared prefix must seed the adopting index's plane (f32/f16), and
+    /// the adopted policy's blockmax selections must stay byte-identical
+    /// to both a cold blockmax build and a dense twin.
+    #[test]
+    fn blockmax_segment_adoption_stays_coherent() {
+        use crate::quant::Precision;
+        let d = 16;
+        let n = 900;
+        for prec in crate::quant::test_precisions() {
+            let mut cfg = LycheeConfig::default();
+            cfg.budget = 96;
+            cfg.sink = 4;
+            cfg.recent = 8;
+            cfg.min_chunk = 2;
+            cfg.max_chunk = 8;
+            cfg.rep_precision = prec;
+            let mut bm_cfg = cfg.clone();
+            bm_cfg.scoring_backend = ScoringBackend::Blockmax;
+            let mut rng = Rng::new(0x5E6 + prec as u64);
+            let keys = rng.normal_vec(n * d);
+            let text: Vec<u8> =
+                (0..n).map(|_| b"lorem ipsum, dolor. sit\n"[rng.range(0, 24)]).collect();
+            let src = FlatKeys::new(&keys, d);
+
+            let mut cold = make_policy("lychee", &bm_cfg, 1, 4).unwrap();
+            let mut dense = make_policy("lychee", &cfg, 1, 4).unwrap();
+            for s in (0..n).step_by(300) {
+                let end = (s + 300).min(n);
+                cold.extend(&Ctx { keys: &src, text: &text, n: end }, s..end);
+                dense.extend(&Ctx { keys: &src, text: &text, n: end }, s..end);
+            }
+            // a select runs ensure_blockmax, making blocks exportable
+            let q0 = rng.normal_vec(d);
+            assert_eq!(cold.select(&Ctx { keys: &src, text: &text, n }, &q0, n), {
+                dense.select(&Ctx { keys: &src, text: &text, n }, &q0, n)
+            });
+
+            let upto = 600;
+            let seg = cold.export_segment(upto).expect("exportable segment");
+            let shared = seg.downcast::<SharedSegment>().unwrap();
+            if prec == Precision::I8 {
+                // i8 bulk-rebuild scales differ per adopter: never export
+                assert!(shared.blocks.is_none(), "i8 summaries must not freeze");
+            } else {
+                let fb = shared.blocks.as_ref().expect("frozen blocks at f32/f16");
+                assert!(fb.rows >= crate::index::inverted::BLOCK_ROWS);
+                assert_eq!(fb.precision, prec);
+            }
+
+            let mut warm = make_policy("lychee", &bm_cfg, 1, 4).unwrap();
+            assert!(warm.adopt_segment(&seg));
+            let mut s = shared.upto;
+            while s < n {
+                let end = (s + 217).min(n);
+                warm.extend(&Ctx { keys: &src, text: &text, n: end }, s..end);
+                s = end;
+            }
+            for _ in 0..8 {
+                let q = rng.normal_vec(d);
+                let ctx = Ctx { keys: &src, text: &text, n };
+                let want = cold.select(&ctx, &q, n);
+                assert_eq!(want, warm.select(&ctx, &q, n), "{prec:?}: adopted selections diverged");
+                assert_eq!(want, dense.select(&ctx, &q, n), "{prec:?}: backend diverged post-adopt");
+            }
+        }
+    }
+}

@@ -28,6 +28,10 @@ pub struct LycheePolicy {
     /// End of the last staged span (the chunker restarts here — spans are
     /// self-synchronizing at their own boundaries).
     staged_upto: usize,
+    /// Frozen block-max summaries adopted with a radix segment; seeded
+    /// into the index's inverted plane right after the final clustering,
+    /// so the adopted prefix's blocks skip their first rebuild.
+    staged_blocks: Option<crate::index::inverted::FrozenBlocks>,
 }
 
 impl LycheePolicy {
@@ -43,6 +47,7 @@ impl LycheePolicy {
             staged_spans: Vec::new(),
             staged_reps: Vec::new(),
             staged_upto: 0,
+            staged_blocks: None,
         }
     }
 
@@ -62,6 +67,7 @@ impl LycheePolicy {
             pooling: self.pooling,
             seed: 0x17C4EE,
             rep_precision: self.cfg.rep_precision,
+            scoring_backend: self.cfg.scoring_backend,
             ..IndexParams::default()
         }
     }
@@ -90,6 +96,7 @@ impl Policy for LycheePolicy {
         self.staged_spans.clear();
         self.staged_reps.clear();
         self.staged_upto = 0;
+        self.staged_blocks = None;
     }
 
     /// Incremental build: pool representatives for every span that has
@@ -106,6 +113,7 @@ impl Policy for LycheePolicy {
             self.staged_spans.clear();
             self.staged_reps.clear();
             self.staged_upto = 0;
+            self.staged_blocks = None;
         }
         let end = new.end.min(ctx.text.len());
         let final_chunk = new.end >= ctx.text.len();
@@ -130,12 +138,19 @@ impl Policy for LycheePolicy {
             self.staged_upto = span.end();
         }
         if final_chunk {
-            self.index = Some(HierarchicalIndex::build_pooled(
+            let mut idx = HierarchicalIndex::build_pooled(
                 ctx.keys.dim(),
                 self.params(),
                 &self.staged_spans,
                 std::mem::take(&mut self.staged_reps),
-            ));
+            );
+            // seed the inverted plane with the adopted prefix's frozen
+            // summaries — identical to what a rebuild would compute, so
+            // this is purely the perf carry of the radix hit
+            if let Some(fb) = self.staged_blocks.take() {
+                idx.seed_frozen_blocks(&fb);
+            }
+            self.index = Some(idx);
             self.buffer = TokenBuffer::new(self.cfg.max_chunk, self.cfg.update_buffer);
             self.staged_spans.clear();
             self.staged_upto = 0;
@@ -164,6 +179,12 @@ impl Policy for LycheePolicy {
         // pending) set — the empty retrieval — and count the occurrence.
         // Grafts rebuild an index on the next on_token, so the gap is
         // one step at most.
+        // Bring the inverted plane up to date before the &self selects
+        // (a no-op at the dense backend; dirty planes would otherwise
+        // silently fall back to the linear scan).
+        if let Some(idx) = self.index.as_mut() {
+            idx.ensure_blockmax();
+        }
         let Some(idx) = self.index.as_ref() else {
             super::note_select_before_build();
             return;
@@ -200,6 +221,7 @@ impl Policy for LycheePolicy {
         self.staged_spans = s.spans.clone();
         self.staged_reps = s.reps.clone();
         self.staged_upto = s.upto;
+        self.staged_blocks = s.blocks.clone();
         true
     }
 

@@ -22,6 +22,7 @@
 
 mod arkvale;
 mod baselines;
+pub(crate) mod blockmax;
 mod clusterkv;
 mod full;
 mod lychee;
@@ -29,6 +30,7 @@ mod quest;
 mod shadowkv;
 
 pub use arkvale::ArkVale;
+pub use blockmax::{blocks_pruned_total, blocks_scanned_total};
 pub use baselines::{RaaS, RazorAttention, StreamingLlm, H2O};
 pub use clusterkv::ClusterKv;
 pub use full::FullAttention;
