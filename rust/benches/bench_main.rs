@@ -30,6 +30,12 @@
 //!                          workload, radix-on vs radix-off at 8/32/128
 //!                          sessions: later-turn TTFT, prefill chunks,
 //!                          hit-rate, shared-bytes dedup ratio)
+//!                          and the cluster section (1/2/4-shard sweep
+//!                          over the sharded serving tier: TTFT/TPOT,
+//!                          throughput, radix hit-rate vs shard count;
+//!                          with `--features failpoints` also a seeded
+//!                          shard-kill failover run reporting the worst
+//!                          client-visible stall as recovery latency)
 //!   fig4_tpot            — end-to-end decode TPOT (engine + PJRT)
 //!   serving_throughput   — batched coordinator throughput
 //!
@@ -386,6 +392,7 @@ fn main() {
                         max_new_tokens: 16,
                         policy: "lychee".into(),
                         deadline_ms: None,
+                        carried_tokens: 0,
                     })
                     .unwrap(),
             );
@@ -453,6 +460,7 @@ fn serving_json_section() -> String {
                     max_new_tokens: short_max_new,
                     policy: "lychee".into(),
                     deadline_ms: None,
+                    carried_tokens: 0,
                 })
                 .unwrap();
             short_threads.push(std::thread::spawn(move || {
@@ -478,6 +486,7 @@ fn serving_json_section() -> String {
                         Event::Cancelled(k) => {
                             panic!("short request cancelled: {}", k.as_str())
                         }
+                        Event::Shed => panic!("short request shed with no watermark"),
                     }
                 }
                 (stats.expect("short ended without Done"), max_gap_ms)
@@ -493,6 +502,7 @@ fn serving_json_section() -> String {
                 max_new_tokens: 8,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
 
@@ -539,15 +549,236 @@ fn serving_json_section() -> String {
         ));
     }
     let prefix_fragment = prefix_reuse_fragment();
+    let cluster_fragment = cluster_json_fragment();
     format!(
-        "{{\n  \"schema\": \"lychee-bench-serving-v2\",\n  \"smoke\": {},\n  \
+        "{{\n  \"schema\": \"lychee-bench-serving-v3\",\n  \"smoke\": {},\n  \
          \"engine\": \"sim\",\n  \"prefill_us_per_token\": {},\n  \"modes\": [\n    {}\n  ],\n  \
-         \"prefix_reuse\": {}\n}}\n",
+         \"prefix_reuse\": {},\n  \"cluster\": {}\n}}\n",
         smoke,
         prefill_us_per_token,
         mode_rows.join(",\n    "),
-        prefix_fragment
+        prefix_fragment,
+        cluster_fragment
     )
+}
+
+/// The sharded-tier trajectory (EXPERIMENTS.md §Cluster): a session-
+/// chained workload swept over 1/2/4 shards — TTFT/TPOT p50+p99,
+/// throughput, and the radix hit-rate (consistent-hash routing should
+/// keep sessions shard-local, so the hit-rate must not degrade as the
+/// shard count grows) — plus a seeded shard-kill run on 2 shards
+/// reporting the worst client-visible stall (detection + re-route +
+/// recompute: the failover recovery latency) and the failover count.
+fn cluster_json_fragment() -> String {
+    use lychee::coordinator::cluster::{spawn_cluster_with, Cluster};
+    use lychee::coordinator::Request;
+    use lychee::engine::sim::{SimConfig, SimEngine};
+    use lychee::util::stats::percentile;
+    use std::collections::HashMap;
+
+    let smoke = smoke();
+    let sessions: usize = if smoke { 8 } else { 24 };
+    let turns: usize = if smoke { 2 } else { 3 };
+    let turn_tokens: usize = 192;
+    let max_new: usize = if smoke { 8 } else { 16 };
+    let prefill_us_per_token: u64 = if smoke { 5 } else { 20 };
+
+    let mk_cluster = |shards: usize| -> Cluster {
+        let mut cfg = Config::new();
+        cfg.serving.shards = shards;
+        cfg.serving.prefill_chunk_tokens = 256;
+        cfg.serving.max_batch = 8;
+        cfg.serving.max_new_tokens = 64;
+        cfg.serving.queue_cap = 4096;
+        cfg.kv.prefix_cache_mb = 64;
+        spawn_cluster_with(cfg, move |_shard, engine_cfg| {
+            Ok(SimEngine::new(
+                engine_cfg,
+                SimConfig { prefill_us_per_token, ..SimConfig::default() },
+            ))
+        })
+        .unwrap()
+    };
+    let req = |id: u64, prompt: Vec<u8>, max_new: usize| Request {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        policy: "lychee".into(),
+        deadline_ms: None,
+        carried_tokens: 0,
+    };
+
+    // --- shard sweep: the same session-chained load at 1/2/4 shards ----
+    let mut sweep_rows = Vec::new();
+    for shards in [1usize, 2, 4] {
+        let cluster = mk_cluster(shards, None);
+        let mut acc: HashMap<usize, Vec<u8>> = HashMap::new();
+        let mut ttft = Vec::new();
+        let mut tpot = Vec::new();
+        let mut next_id = 0u64;
+        let t0 = std::time::Instant::now();
+        for round in 0..turns {
+            let mut workers = Vec::new();
+            for s in 0..sessions {
+                let mut prompt = acc.remove(&s).unwrap_or_default();
+                prompt.extend_from_slice(&prompt_text(
+                    turn_tokens,
+                    (s * 100 + round) as u64,
+                ));
+                let c = cluster.clone();
+                let r = req(next_id, prompt.clone(), max_new);
+                next_id += 1;
+                workers.push(std::thread::spawn(move || {
+                    let (out, stats) = c.generate(r).expect("cluster sweep request failed");
+                    let mut next = prompt;
+                    next.extend_from_slice(&out);
+                    (s, stats, next)
+                }));
+            }
+            for w in workers {
+                let (s, stats, next) = w.join().unwrap();
+                ttft.push(stats.ttft_ms);
+                tpot.push(stats.tpot_ms);
+                acc.insert(s, next);
+            }
+        }
+        let elapsed = t0.elapsed().as_secs_f64();
+        let agg = cluster.aggregate_metrics();
+        let hit_rate = agg.prefix_hits as f64 / agg.completed.max(1) as f64;
+        println!(
+            "cluster[{shards} shard] {} reqs in {elapsed:.2}s | ttft p50 {:.1} ms | \
+             tpot p50 {:.2} ms | radix hit-rate {hit_rate:.2}",
+            sessions * turns,
+            percentile(&ttft, 0.50),
+            percentile(&tpot, 0.50),
+        );
+        sweep_rows.push(format!(
+            "{{\"shards\": {shards}, \"sessions\": {sessions}, \"turns\": {turns}, \
+             \"ttft_ms\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"tpot_ms\": {{\"p50\": {:.3}, \"p99\": {:.3}}}, \
+             \"throughput_tok_s\": {:.1}, \"prefix_hit_rate\": {hit_rate:.4}}}",
+            percentile(&ttft, 0.50),
+            percentile(&ttft, 0.99),
+            percentile(&tpot, 0.50),
+            percentile(&tpot, 0.99),
+            agg.tokens_out as f64 / elapsed.max(1e-9),
+        ));
+        cluster.drain();
+        cluster.join();
+    }
+
+    format!(
+        "{{\n    \"shard_sweep\": [\n      {}\n    ],\n    \"failover\": {}\n  }}",
+        sweep_rows.join(",\n      "),
+        failover_json_row()
+    )
+}
+
+/// Failover recovery bench: a seeded shard kill on a 2-shard cluster
+/// mid-decode. The kill site only compiles under the `failpoints`
+/// feature (`cargo bench --features failpoints`); plain builds emit
+/// `null` for this section.
+#[cfg(not(feature = "failpoints"))]
+fn failover_json_row() -> String {
+    "null".to_string()
+}
+
+#[cfg(feature = "failpoints")]
+fn failover_json_row() -> String {
+    use lychee::coordinator::cluster::spawn_cluster_with;
+    use lychee::coordinator::{Event, Request};
+    use lychee::engine::sim::{SimConfig, SimEngine};
+    use lychee::util::fault::{FaultConfig, FaultSpec};
+
+    // The worst inter-token gap any client saw spans the whole recovery:
+    // crash detection, re-route, and prompt+streamed-prefix recompute.
+    let smoke = smoke();
+    let prefill_us_per_token: u64 = if smoke { 5 } else { 20 };
+    let n_req = 8u64;
+    let fo_max_new: usize = if smoke { 24 } else { 48 };
+    let spec = FaultSpec {
+        seed: 42,
+        cfg: FaultConfig { kill_shard: Some((0, 10)), ..FaultConfig::default() },
+    };
+    let mut cfg = Config::new();
+    cfg.serving.shards = 2;
+    cfg.serving.prefill_chunk_tokens = 256;
+    cfg.serving.max_batch = 8;
+    cfg.serving.max_new_tokens = 64;
+    cfg.serving.queue_cap = 4096;
+    cfg.kv.prefix_cache_mb = 64;
+    let cluster = spawn_cluster_with(cfg, move |_shard, engine_cfg| {
+        Ok(SimEngine::new(
+            engine_cfg,
+            SimConfig {
+                prefill_us_per_token,
+                faults: Some(spec.clone()),
+                ..SimConfig::default()
+            },
+        ))
+    })
+    .unwrap();
+
+    let mut workers = Vec::new();
+    for i in 0..n_req {
+        let rx = cluster
+            .submit(Request {
+                id: i,
+                prompt: prompt_text(320, 9000 + i),
+                max_new_tokens: fo_max_new,
+                policy: "lychee".into(),
+                deadline_ms: None,
+                carried_tokens: 0,
+            })
+            .unwrap();
+        workers.push(std::thread::spawn(move || {
+            let mut last: Option<std::time::Instant> = None;
+            let mut max_gap_ms = 0.0f64;
+            let mut tokens = 0usize;
+            let mut done = false;
+            for ev in rx {
+                match ev {
+                    Event::Token(_) => {
+                        if let Some(l) = last {
+                            max_gap_ms = max_gap_ms.max(l.elapsed().as_secs_f64() * 1e3);
+                        }
+                        last = Some(std::time::Instant::now());
+                        tokens += 1;
+                    }
+                    Event::Done(_) => {
+                        done = true;
+                        break;
+                    }
+                    Event::Error(e) => panic!("failover bench request failed: {e}"),
+                    Event::Cancelled(k) => {
+                        panic!("failover bench request cancelled: {}", k.as_str())
+                    }
+                    Event::Shed => panic!("failover bench request shed"),
+                }
+            }
+            assert!(done && tokens == fo_max_new, "lost tokens across failover");
+            max_gap_ms
+        }));
+    }
+    let mut worst_gap: f64 = 0.0;
+    for w in workers {
+        worst_gap = worst_gap.max(w.join().unwrap());
+    }
+    let snap = cluster.router_snapshot();
+    println!(
+        "cluster[failover] {} reqs over a shard kill: {} failovers, worst stall {worst_gap:.1} ms",
+        n_req, snap.failovers_total
+    );
+    let row = format!(
+        "{{\"shards\": 2, \"requests\": {n_req}, \"max_new\": {fo_max_new}, \
+         \"failovers\": {}, \"shard0_alive\": {}, \
+         \"recovery_worst_stall_ms\": {worst_gap:.2}}}",
+        snap.failovers_total,
+        cluster.shard_alive(0)
+    );
+    cluster.drain();
+    cluster.join();
+    row
 }
 
 /// The shared-prefix radix trajectory: the multiturn workload (shared
@@ -618,6 +849,7 @@ fn prefix_reuse_fragment() -> String {
                                 max_new_tokens: t.max_new_tokens,
                                 policy: "lychee".into(),
                                 deadline_ms: None,
+                                carried_tokens: 0,
                             })
                             .expect("multiturn request failed");
                         let mut next = prompt;

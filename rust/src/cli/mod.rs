@@ -210,9 +210,17 @@ fn cmd_info(args: &Args) -> Result<()> {
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let addr = args.flags.get("addr").map(|s| s.as_str()).unwrap_or("127.0.0.1:7711");
+    if cfg.serving.shards > 1 {
+        return cmd_serve_cluster(addr, cfg);
+    }
+    let session_cap = cfg.serving.session_store_cap;
     let (handle, metrics, join) = crate::coordinator::spawn(cfg)?;
-    let server =
-        crate::server::Server::start(addr, handle.clone(), Some(std::sync::Arc::clone(&metrics)))?;
+    let server = crate::server::Server::start_single(
+        addr,
+        handle.clone(),
+        Some(std::sync::Arc::clone(&metrics)),
+        session_cap,
+    )?;
     println!("lychee serving on {} (JSON-lines; Ctrl-C to stop)", server.addr);
     // block forever, reporting metrics periodically
     loop {
@@ -263,6 +271,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 }
 
+/// `serve` with `serving.shards > 1`: routing front + N engine-worker
+/// shards, each with its own KV arena and radix cache.
+fn cmd_serve_cluster(addr: &str, cfg: Config) -> Result<()> {
+    let session_cap = cfg.serving.session_store_cap;
+    let shards = cfg.serving.shards;
+    let cluster = crate::coordinator::cluster::spawn_cluster(cfg)?;
+    let server = crate::server::Server::start_cluster(addr, cluster.clone(), session_cap)?;
+    println!(
+        "lychee serving on {} ({} shards, JSON-lines; Ctrl-C to stop)",
+        server.addr, shards
+    );
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(10));
+        let m = cluster.aggregate_metrics();
+        let alive = (0..cluster.shard_count()).filter(|&i| cluster.shard_alive(i)).count();
+        let r = cluster.router_snapshot();
+        println!(
+            "shards={alive}/{} routed={} failover={} shed_retry={} | requests={} completed={} \
+             tokens={} inflight={} sheds={} kv={:.1}MiB p50_tpot={:.1}ms",
+            cluster.shard_count(),
+            r.routed_total,
+            r.failovers_total,
+            r.shed_retries_total,
+            m.requests,
+            m.completed,
+            m.tokens_out,
+            m.requests_in_flight,
+            m.sheds,
+            m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
+            m.tpot_us.quantile(0.5) / 1e3
+        );
+        if false {
+            break;
+        }
+    }
+    #[allow(unreachable_code)]
+    {
+        server.stop();
+        cluster.shutdown();
+        cluster.join();
+        Ok(())
+    }
+}
+
 fn cmd_generate(args: &Args) -> Result<()> {
     let cfg = build_config(args)?;
     let prompt = args.flags.get("prompt").context("--prompt required")?.clone();
@@ -275,6 +327,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
         max_new_tokens: tokens,
         policy,
         deadline_ms: None,
+        carried_tokens: 0,
     })?;
     println!("{}", String::from_utf8_lossy(&out));
     println!(
@@ -313,6 +366,7 @@ fn cmd_bench_serve(args: &Args) -> Result<()> {
                 max_new_tokens: r.max_new_tokens,
                 policy: pol,
                 deadline_ms: None,
+                carried_tokens: 0,
             })
         }));
     }
@@ -351,6 +405,7 @@ USAGE:
 OPTIONS:
   --config file.json                 config overrides
   -o section.key=value               inline override (repeatable)
+  -o serving.shards=N                serve in cluster mode (N worker shards)
   --quick                            CI-sized runs";
 
 #[cfg(test)]

@@ -180,6 +180,29 @@ pub struct ServingConfig {
     /// their pages and reservations. 0 disables the default (requests
     /// without an explicit deadline run unbounded).
     pub default_deadline_ms: u64,
+    /// Worker shard count for cluster mode. 1 (the default) keeps the
+    /// plain single-coordinator path — byte-identical to pre-cluster
+    /// behavior. N > 1 runs a routing front over N scheduler threads,
+    /// each with its own engine, KV page pool (`kv_pool_mb` is
+    /// per-shard), and radix prefix cache.
+    pub shards: usize,
+    /// Cluster load shedding: a shard whose pending queue depth reaches
+    /// this watermark bounces *cold* requests back to the router, which
+    /// retries them on the next-least-loaded live shard with bounded
+    /// backoff. Warm failover resubmissions are never shed. 0 (default)
+    /// disables shedding.
+    pub shed_watermark: usize,
+    /// Cluster health: if a shard's scheduler heartbeat is older than
+    /// this many milliseconds, the router quarantines the shard (sticky)
+    /// and fails its in-flight requests over to surviving shards. 0
+    /// (default) disables stall detection — crash detection via the
+    /// thread boundary stays on regardless.
+    pub heartbeat_timeout_ms: u64,
+    /// Maximum sessions the TCP server's LRU session store retains for
+    /// `{"session": ...}` chaining; the least-recently-touched session
+    /// is evicted past the cap (a later turn against it gets a
+    /// retryable `session_unknown` error).
+    pub session_store_cap: usize,
 }
 
 impl Default for ServingConfig {
@@ -195,6 +218,10 @@ impl Default for ServingConfig {
             prefill_chunk_tokens: 256,
             preempt_after_waits: 8,
             default_deadline_ms: 0,
+            shards: 1,
+            shed_watermark: 0,
+            heartbeat_timeout_ms: 0,
+            session_store_cap: 1024,
         }
     }
 }
@@ -206,6 +233,12 @@ impl ServingConfig {
         }
         if self.max_new_tokens == 0 {
             bail!("max_new_tokens cap must be >= 1");
+        }
+        if self.shards == 0 {
+            bail!("serving.shards must be >= 1");
+        }
+        if self.session_store_cap == 0 {
+            bail!("serving.session_store_cap must be >= 1");
         }
         Ok(())
     }
@@ -223,6 +256,10 @@ impl ServingConfig {
             "prefill_chunk_tokens" => self.prefill_chunk_tokens = u()?,
             "preempt_after_waits" => self.preempt_after_waits = u()?,
             "default_deadline_ms" => self.default_deadline_ms = u()? as u64,
+            "shards" => self.shards = u()?,
+            "shed_watermark" => self.shed_watermark = u()?,
+            "heartbeat_timeout_ms" => self.heartbeat_timeout_ms = u()? as u64,
+            "session_store_cap" => self.session_store_cap = u()?,
             _ => bail!("unknown serving config key '{key}'"),
         }
         Ok(())
@@ -443,6 +480,39 @@ mod tests {
         cfg.validate().unwrap();
         cfg.apply_override("serving.default_deadline_ms=0").unwrap();
         cfg.validate().unwrap();
+    }
+
+    #[test]
+    fn cluster_knobs() {
+        let mut cfg = Config::new();
+        // single-shard, no shedding, no stall detection by default:
+        // existing deployments see no behavior change
+        assert_eq!(cfg.serving.shards, 1);
+        assert_eq!(cfg.serving.shed_watermark, 0);
+        assert_eq!(cfg.serving.heartbeat_timeout_ms, 0);
+        assert_eq!(cfg.serving.session_store_cap, 1024);
+        cfg.apply_override("serving.shards=4").unwrap();
+        cfg.apply_override("serving.shed_watermark=8").unwrap();
+        cfg.apply_override("serving.heartbeat_timeout_ms=250").unwrap();
+        cfg.apply_override("serving.session_store_cap=64").unwrap();
+        assert_eq!(cfg.serving.shards, 4);
+        assert_eq!(cfg.serving.shed_watermark, 8);
+        assert_eq!(cfg.serving.heartbeat_timeout_ms, 250);
+        assert_eq!(cfg.serving.session_store_cap, 64);
+        cfg.validate().unwrap();
+        // JSON form
+        let mut cfg2 = Config::new();
+        let j = Json::parse(r#"{"serving": {"shards": 2, "shed_watermark": 3}}"#).unwrap();
+        cfg2.apply_json(&j).unwrap();
+        assert_eq!(cfg2.serving.shards, 2);
+        assert_eq!(cfg2.serving.shed_watermark, 3);
+        // zero shards / zero session cap are structural errors
+        let mut bad = ServingConfig::default();
+        bad.shards = 0;
+        assert!(bad.validate().is_err());
+        let mut bad2 = ServingConfig::default();
+        bad2.session_store_cap = 0;
+        assert!(bad2.validate().is_err());
     }
 
     #[test]

@@ -95,6 +95,7 @@ mod tests {
                     max_new_tokens: storm_max_new(i),
                     policy: "lychee".into(),
                     deadline_ms,
+                    carried_tokens: 0,
                 })
                 .unwrap();
             if chaos_clients && i % 6 == 3 {
@@ -128,6 +129,9 @@ mod tests {
                     Event::Error(_) => {
                         assert!(terminal.is_none(), "req {i}: second terminal event");
                         terminal = Some("failed");
+                    }
+                    Event::Shed => {
+                        panic!("req {i}: shed with no watermark configured")
                     }
                 }
             }
@@ -318,6 +322,7 @@ mod tests {
                 max_new_tokens: 4,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         handle.drain();
@@ -329,6 +334,7 @@ mod tests {
                 max_new_tokens: 4,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
 
@@ -340,6 +346,7 @@ mod tests {
                 Event::Cancelled(k) => before_terminal = Some(k.as_str()),
                 Event::Error(_) => before_terminal = Some("failed"),
                 Event::Token(_) => {}
+                Event::Shed => panic!("shed with no watermark configured"),
             }
         }
         assert!(before_terminal.is_some(), "pre-drain request got no terminal outcome");
@@ -377,6 +384,7 @@ mod tests {
                         max_new_tokens: 8,
                         policy: "lychee".into(),
                         deadline_ms: None,
+                        carried_tokens: 0,
                     })
                     .unwrap(),
             ));
@@ -394,6 +402,7 @@ mod tests {
                     }
                     Event::Error(e) => panic!("req {i}: unexpected error {e}"),
                     Event::Token(_) => {}
+                    Event::Shed => panic!("req {i}: shed with no watermark configured"),
                 }
             }
             assert!(terminal.is_some(), "req {i}: no terminal event");
@@ -441,6 +450,7 @@ mod tests {
                                 max_new_tokens: 6,
                                 policy: "lychee".into(),
                                 deadline_ms: None,
+                                carried_tokens: 0,
                             })
                             .unwrap();
                         match k % 3 {
@@ -516,5 +526,356 @@ mod tests {
         let a = run_once();
         let b = run_once();
         assert_eq!(a, b, "fault schedule diverged across identical runs");
+    }
+}
+
+/// Cluster-level chaos: storms against the sharded serving tier (router
+/// + N engine-worker shards), exercising consistent-hash routing,
+/// queue-depth shedding with router retry, heartbeat-stall quarantine,
+/// and shard-kill failover. The invariants mirror the single-node suite
+/// but hold *across* shard deaths:
+///
+/// 1. every request streams **exactly** its full token count — no
+///    duplicated tokens across a failover resubmission, no dropped ones;
+/// 2. every request gets exactly one terminal event, whichever shard
+///    (or how many shards) served it;
+/// 3. survivor-shard gauges return to baseline after drain;
+/// 4. client-visible outcomes are bit-deterministic for a fixed seed.
+///
+/// CI runs this module on the f32 leg via the
+/// `coordinator::chaos::cluster` filter (the TSan lane's broader
+/// `coordinator::` filter covers it too).
+#[cfg(test)]
+mod cluster {
+    use crate::config::Config;
+    use crate::coordinator::cluster::{
+        build_ring, ring_route, route_key, spawn_cluster_with, Cluster,
+    };
+    use crate::coordinator::{spawn_with, Event, FinishStats, Request};
+    use crate::engine::sim::{SimConfig, SimEngine};
+    use crate::util::fault::{FaultConfig, FaultSpec};
+    use crate::workloads::trace::prompt_text;
+    use std::sync::mpsc::Receiver;
+
+    fn cluster_cfg(shards: usize) -> Config {
+        let mut cfg = Config::new();
+        cfg.serving.shards = shards;
+        cfg.serving.max_batch = 4;
+        cfg.serving.prefill_chunk_tokens = 64;
+        cfg.serving.max_new_tokens = 32;
+        cfg.serving.kv_pool_mb = 64;
+        cfg.serving.idle_tick_us = 50;
+        cfg.kv.prefix_cache_mb = 1;
+        cfg
+    }
+
+    /// A cluster of [`SimEngine`] shards, every shard seeded with the
+    /// same fault spec (shard-keyed sites pick their victim by id).
+    fn sim_cluster(cfg: Config, faults: Option<FaultSpec>) -> Cluster {
+        spawn_cluster_with(cfg, move |_shard, engine_cfg| {
+            Ok(SimEngine::new(
+                engine_cfg,
+                SimConfig { faults: faults.clone(), ..SimConfig::default() },
+            ))
+        })
+        .unwrap()
+    }
+
+    fn creq(id: u64, prompt: Vec<u8>, max_new: usize) -> Request {
+        Request {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            policy: "lychee".into(),
+            deadline_ms: None,
+            carried_tokens: 0,
+        }
+    }
+
+    /// Probe the (pure, deterministic) routing plane for `want` distinct
+    /// prompts that the live ring sends to shard `target` — so tests
+    /// place work on a chosen victim/survivor without racing anything.
+    fn prompts_landing_on(target: usize, n_shards: usize, want: usize, salt: u64) -> Vec<Vec<u8>> {
+        let ring = build_ring(n_shards);
+        let alive = vec![true; n_shards];
+        let mut out = Vec::new();
+        let mut seed = salt;
+        while out.len() < want {
+            let p = prompt_text(180 + (seed % 3) as usize * 40, seed);
+            if ring_route(&ring, route_key(&p), &alive) == Some(target) {
+                out.push(p);
+            }
+            seed += 1;
+        }
+        out
+    }
+
+    /// Read one stream to its end: (tokens, terminal, Done stats).
+    /// Asserts exactly one terminal and no tokens after it. `Shed` must
+    /// never escape the router to a client stream.
+    fn read_stream(rx: Receiver<Event>) -> (Vec<u8>, String, Option<FinishStats>) {
+        let mut toks = Vec::new();
+        let mut terminal: Option<String> = None;
+        let mut stats = None;
+        for ev in rx {
+            match ev {
+                Event::Token(t) => {
+                    assert!(terminal.is_none(), "token after terminal event");
+                    toks.push(t);
+                }
+                Event::Done(s) => {
+                    assert!(terminal.is_none(), "second terminal event");
+                    stats = Some(s);
+                    terminal = Some("done".to_string());
+                }
+                Event::Cancelled(k) => {
+                    assert!(terminal.is_none(), "second terminal event");
+                    terminal = Some(k.as_str().to_string());
+                }
+                Event::Error(e) => {
+                    assert!(terminal.is_none(), "second terminal event");
+                    terminal = Some(format!("failed: {e}"));
+                }
+                Event::Shed => panic!("raw Shed escaped the router to a client stream"),
+            }
+        }
+        let t = terminal.expect("stream ended without a terminal event");
+        (toks, t, stats)
+    }
+
+    /// The flagship storm: 2 shards, 3 requests pinned to each by the
+    /// routing probe, and an injected shard kill on shard 0 at decode
+    /// step 3 — mid-stream for its whole batch. Returns the sorted
+    /// client-visible outcomes plus the cluster for extra assertions.
+    fn kill_storm() -> (Vec<(u64, String, Vec<u8>, usize)>, Cluster) {
+        let cfg = cluster_cfg(2);
+        let spec = FaultSpec {
+            seed: 9,
+            cfg: FaultConfig { kill_shard: Some((0, 3)), ..FaultConfig::default() },
+        };
+        let cluster = sim_cluster(cfg, Some(spec));
+        let mut reqs: Vec<(u64, Vec<u8>)> = Vec::new();
+        for (i, p) in prompts_landing_on(0, 2, 3, 1000).into_iter().enumerate() {
+            reqs.push((i as u64, p));
+        }
+        for (i, p) in prompts_landing_on(1, 2, 3, 2000).into_iter().enumerate() {
+            reqs.push((3 + i as u64, p));
+        }
+        let rxs: Vec<(u64, Receiver<Event>)> = reqs
+            .into_iter()
+            .map(|(id, p)| (id, cluster.submit(creq(id, p, 12)).unwrap()))
+            .collect();
+        let mut out = Vec::new();
+        for (id, rx) in rxs {
+            let (toks, term, stats) = read_stream(rx);
+            out.push((id, term, toks, stats.map(|s| s.tokens).unwrap_or(0)));
+        }
+        out.sort_by_key(|(id, ..)| *id);
+        (out, cluster)
+    }
+
+    /// Acceptance pin: a seeded shard kill mid-stream, and every
+    /// in-flight sequence completes via failover with the exact
+    /// remaining token count — no duplicated or dropped tokens, one
+    /// terminal per request — while the survivor's gauges return to
+    /// baseline after drain.
+    #[test]
+    fn shard_kill_mid_stream_fails_over_with_exact_token_counts() {
+        let (outcomes, cluster) = kill_storm();
+        assert_eq!(outcomes.len(), 6);
+        for (id, term, toks, done_tokens) in &outcomes {
+            assert_eq!(term, "done", "req {id}: must complete despite the kill");
+            assert_eq!(toks.len(), 12, "req {id}: exact token count across failover");
+            assert_eq!(*done_tokens, 12, "req {id}: Done.tokens reports the full total");
+        }
+        assert!(!cluster.shard_alive(0), "the killed shard must be marked dead");
+        assert!(cluster.shard_alive(1), "the survivor must stay live");
+        let snap = cluster.router_snapshot();
+        assert_eq!(
+            snap.failovers_total, 3,
+            "each shard-0 request fails over exactly once: {snap:?}"
+        );
+        assert_eq!(snap.stall_quarantines_total, 0);
+
+        cluster.drain();
+        cluster.join();
+        let m1 = cluster.shard_metrics(1);
+        let m1 = m1.lock().unwrap();
+        assert_eq!(m1.drain_state, 2, "survivor did not finish draining");
+        assert_eq!(m1.requests_in_flight, 0, "survivor gauge not back to baseline");
+        assert_eq!(m1.kv_bytes_in_use, 0, "survivor leaked KV bytes");
+        assert_eq!(m1.completed, 6, "3 native + 3 failed-over completions on the survivor");
+    }
+
+    /// Determinism pin: the same seeded kill storm twice produces
+    /// bit-identical client-visible outcomes — same terminals, same
+    /// token bytes, same counts.
+    #[test]
+    fn seeded_kill_storm_outcomes_are_bit_deterministic() {
+        let (a, ca) = kill_storm();
+        let (b, cb) = kill_storm();
+        assert_eq!(a, b, "cluster chaos outcomes diverged across identical seeded runs");
+        ca.shutdown();
+        ca.join();
+        cb.shutdown();
+        cb.join();
+    }
+
+    /// Load shedding: a hot shard over its `shed_watermark` bounces cold
+    /// requests back and the router retries them on the least-loaded
+    /// live shard; a request shed by *every* live shard ends with one
+    /// structured error, never a hang.
+    #[test]
+    fn hot_shard_sheds_and_router_retries_on_least_loaded() {
+        let mut cfg = cluster_cfg(2);
+        cfg.serving.shed_watermark = 1;
+        cfg.serving.prefill_chunk_tokens = 32;
+        let cluster = sim_cluster(cfg, None);
+        // all 8 prompts hash to shard 0: the probe makes the hot spot,
+        // not timing luck
+        let rxs: Vec<(u64, Receiver<Event>)> = prompts_landing_on(0, 2, 8, 3000)
+            .into_iter()
+            .enumerate()
+            .map(|(i, p)| (i as u64, cluster.submit(creq(i as u64, p, 4)).unwrap()))
+            .collect();
+        let mut done = 0usize;
+        let mut refused = 0usize;
+        for (id, rx) in rxs {
+            let (toks, term, _) = read_stream(rx);
+            if term == "done" {
+                assert_eq!(toks.len(), 4, "req {id}");
+                done += 1;
+            } else {
+                assert!(
+                    term.contains("no live shard accepted"),
+                    "req {id}: unexpected outcome {term}"
+                );
+                refused += 1;
+            }
+        }
+        assert_eq!(done + refused, 8, "every request got exactly one terminal");
+        // the first request on each shard always beats the watermark
+        assert!(done >= 2, "only {done}/8 completed");
+        let snap = cluster.router_snapshot();
+        assert!(snap.shed_retries_total >= 1, "router never retried a shed: {snap:?}");
+        let m0 = cluster.shard_metrics(0);
+        assert!(m0.lock().unwrap().sheds >= 1, "hot shard never shed");
+        let m1 = cluster.shard_metrics(1);
+        assert!(
+            m1.lock().unwrap().completed >= 1,
+            "no shed request ever completed on the cold shard"
+        );
+        cluster.drain();
+        cluster.join();
+    }
+
+    /// Heartbeat-stall detection: a shard that stops ticking past
+    /// `serving.heartbeat_timeout_ms` (but has not crashed) is
+    /// quarantined sticky, its in-flight work fails over with exact
+    /// token counts, and the stalled shard still drains cleanly once it
+    /// wakes.
+    #[test]
+    fn heartbeat_stall_quarantines_the_shard_and_fails_over() {
+        let mut cfg = cluster_cfg(2);
+        cfg.serving.heartbeat_timeout_ms = 150;
+        let spec = FaultSpec {
+            seed: 3,
+            cfg: FaultConfig {
+                stall_shard: Some((0, 2)),
+                stall_us: 600_000,
+                ..FaultConfig::default()
+            },
+        };
+        let cluster = sim_cluster(cfg, Some(spec));
+        let mut reqs: Vec<(u64, Vec<u8>)> = Vec::new();
+        for (i, p) in prompts_landing_on(0, 2, 2, 4000).into_iter().enumerate() {
+            reqs.push((i as u64, p));
+        }
+        for (i, p) in prompts_landing_on(1, 2, 2, 5000).into_iter().enumerate() {
+            reqs.push((2 + i as u64, p));
+        }
+        let rxs: Vec<(u64, Receiver<Event>)> = reqs
+            .into_iter()
+            .map(|(id, p)| (id, cluster.submit(creq(id, p, 10)).unwrap()))
+            .collect();
+        for (id, rx) in rxs {
+            let (toks, term, _) = read_stream(rx);
+            assert_eq!(term, "done", "req {id}: must complete despite the stall");
+            assert_eq!(toks.len(), 10, "req {id}: exact token count across the stall failover");
+        }
+        assert!(!cluster.shard_alive(0), "stalled shard must be quarantined");
+        assert!(cluster.shard_alive(1));
+        let snap = cluster.router_snapshot();
+        assert!(snap.stall_quarantines_total >= 1, "{snap:?}");
+        assert!(snap.failovers_total >= 2, "both stalled-shard requests fail over: {snap:?}");
+
+        // the stalled shard is quarantined, not dead: once it wakes it
+        // still processes its cancel backlog and drains to completion
+        cluster.drain();
+        cluster.join();
+        for i in 0..2 {
+            let m = cluster.shard_metrics(i);
+            let m = m.lock().unwrap();
+            assert_eq!(m.drain_state, 2, "shard {i} did not drain");
+            assert_eq!(m.requests_in_flight, 0, "shard {i} gauge not at baseline");
+            assert_eq!(m.kv_bytes_in_use, 0, "shard {i} leaked KV bytes");
+        }
+    }
+
+    /// Graceful cluster drain: admission closes on every shard,
+    /// in-flight work completes, and both per-shard and aggregate
+    /// `drain_state` report fully drained.
+    #[test]
+    fn cluster_drain_quiesces_every_shard() {
+        let cluster = sim_cluster(cluster_cfg(2), None);
+        let mut rxs = Vec::new();
+        for (i, p) in prompts_landing_on(0, 2, 2, 6000).into_iter().enumerate() {
+            rxs.push((i as u64, cluster.submit(creq(i as u64, p, 6)).unwrap()));
+        }
+        for (i, p) in prompts_landing_on(1, 2, 2, 7000).into_iter().enumerate() {
+            let id = 2 + i as u64;
+            rxs.push((id, cluster.submit(creq(id, p, 6)).unwrap()));
+        }
+        for (id, rx) in rxs {
+            let (toks, term, _) = read_stream(rx);
+            assert_eq!(term, "done", "req {id}");
+            assert_eq!(toks.len(), 6, "req {id}");
+        }
+        cluster.drain();
+        cluster.join();
+        for i in 0..2 {
+            let m = cluster.shard_metrics(i);
+            assert_eq!(m.lock().unwrap().drain_state, 2, "shard {i} did not drain");
+        }
+        let agg = cluster.aggregate_metrics();
+        assert_eq!(agg.drain_state, 2, "aggregate drain_state is the least-drained shard");
+        assert_eq!(agg.completed, 4);
+        assert_eq!(agg.requests_in_flight, 0);
+        assert_eq!(agg.kv_bytes_in_use, 0);
+    }
+
+    /// `serving.shards = 1` parity: a single-shard cluster streams
+    /// byte-identical tokens to the plain (pre-cluster) coordinator for
+    /// the same requests — the routing tier adds nothing but plumbing.
+    #[test]
+    fn single_shard_cluster_matches_plain_coordinator_byte_for_byte() {
+        let cfg = cluster_cfg(1);
+        let engine_cfg = cfg.clone();
+        let (handle, _m, join) = spawn_with(cfg.clone(), move || {
+            Ok(SimEngine::new(engine_cfg, SimConfig::default()))
+        })
+        .unwrap();
+        let cluster = sim_cluster(cfg, None);
+        for i in 0..5u64 {
+            let p = prompt_text(150 + (i as usize % 4) * 30, 500 + i);
+            let (plain_toks, plain_stats) = handle.generate(creq(i, p.clone(), 7)).unwrap();
+            let (clu_toks, clu_stats) = cluster.generate(creq(i, p, 7)).unwrap();
+            assert_eq!(plain_toks, clu_toks, "req {i}: streams must be byte-identical");
+            assert_eq!(plain_stats.tokens, clu_stats.tokens, "req {i}");
+        }
+        handle.drain();
+        join.join().unwrap();
+        cluster.drain();
+        cluster.join();
     }
 }

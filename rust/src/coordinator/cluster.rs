@@ -1,0 +1,671 @@
+//! Cluster mode: a routing front over N engine-worker shards.
+//!
+//! ```text
+//! clients ──submit──> Cluster (router)
+//!                       │ consistent-hash route on prompt content
+//!                       │ one relay thread per request
+//!                       ▼
+//!         ┌─────────────┼─────────────┐
+//!      shard 0       shard 1       shard N-1      (each: own PagePool,
+//!      scheduler     scheduler     scheduler       radix PrefixCache,
+//!      thread        thread        thread          EngineCore)
+//! ```
+//!
+//! Each shard is a full [`super::Coordinator`] on its own thread, owning
+//! its own KV arena and radix cache; the router never touches KV state.
+//! Three mechanisms tie the shards into one serving tier:
+//!
+//! - **Routing**: requests hash on their prompt prefix (first
+//!   [`ROUTE_PREFIX_BYTES`] bytes) onto a consistent-hash ring with
+//!   [`VNODES`] virtual nodes per shard. Session turns share a prompt
+//!   prefix (the server prepends the accumulated session text), so a
+//!   session's turns land on the same shard and its radix-cache hits
+//!   stay shard-local. When a shard dies, only *its* keys remap — the
+//!   ring walk skips dead shards, and every other key keeps its shard.
+//!
+//! - **Load shedding**: a shard whose pending queue is over
+//!   `serving.shed_watermark` bounces cold requests back as
+//!   [`Event::Shed`]; the relay retries on the next-least-loaded live
+//!   shard with bounded backoff (one pass over the live set, then a
+//!   structured error). Warm requests — failover resubmissions with
+//!   `carried_tokens > 0` — are never shed.
+//!
+//! - **Failover**: each shard heartbeats once per scheduler tick; a
+//!   panic that escapes the per-job isolation marks the shard dead at
+//!   the thread boundary ([`super::spawn_shard`]). A relay that sees its
+//!   shard die (dead flag, channel close without a terminal event, or a
+//!   heartbeat older than `serving.heartbeat_timeout_ms`) rebuilds the
+//!   request recompute-style — prompt + already-streamed text, with
+//!   `carried_tokens` marking the streamed prefix so it is never
+//!   re-emitted — and re-routes it with the *remaining* deadline budget.
+//!   The client stream is seamless: no duplicated tokens, no dropped
+//!   tokens, exactly one terminal event.
+
+use super::{CancelKind, Event, Handle, Metrics, Request};
+use crate::config::Config;
+use crate::engine::{Engine, EngineCore};
+use crate::util::lock_recover;
+use anyhow::Result;
+use std::collections::HashSet;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Virtual nodes per shard on the routing ring: enough that key ranges
+/// stay balanced at small shard counts without making the ring large.
+const VNODES: u64 = 32;
+/// Prompt bytes hashed for routing. A prefix (not the whole prompt) so
+/// that session turns — same accumulated history, different tail — hash
+/// identically and stay on the shard that holds their radix prefix.
+const ROUTE_PREFIX_BYTES: usize = 256;
+/// How long a relay polls for the crash flag after its event channel
+/// closed without a terminal, before failing over regardless.
+const CRASH_FLAG_GRACE: Duration = Duration::from_millis(500);
+/// Relay receive poll granularity (also the health-check cadence).
+const RELAY_POLL: Duration = Duration::from_millis(1);
+
+/// Liveness cell shared between one worker shard and the router.
+///
+/// The scheduler thread bumps `beat` once per tick; the boundary handler
+/// in [`super::spawn_shard`] sets `dead` if the tick loop unwinds. All
+/// accesses are Relaxed: the flags are advisory signals polled by relay
+/// loops (failover correctness rests on the event channel, which carries
+/// its own synchronization), so atomicity suffices and no other memory
+/// is ordered against them.
+pub struct ShardHealth {
+    epoch: Instant,
+    dead: AtomicBool,
+    ticks: AtomicU64,
+    last_beat_us: AtomicU64,
+}
+
+impl ShardHealth {
+    fn new() -> Self {
+        ShardHealth {
+            epoch: Instant::now(),
+            dead: AtomicBool::new(false),
+            ticks: AtomicU64::new(0),
+            last_beat_us: AtomicU64::new(0),
+        }
+    }
+
+    /// One scheduler tick happened (called by the shard thread).
+    pub(crate) fn beat(&self) {
+        // Relaxed: see the struct doc — advisory polled signals.
+        self.ticks.fetch_add(1, Ordering::Relaxed);
+        self.last_beat_us
+            .store(self.epoch.elapsed().as_micros() as u64, Ordering::Relaxed);
+    }
+
+    /// Mark the shard crashed/quarantined. Sticky: there is no revival —
+    /// a dead shard's keys remap and stay remapped.
+    pub(crate) fn mark_dead(&self) {
+        // Relaxed: see the struct doc.
+        self.dead.store(true, Ordering::Relaxed);
+    }
+
+    pub fn is_dead(&self) -> bool {
+        // Relaxed: see the struct doc.
+        self.dead.load(Ordering::Relaxed)
+    }
+
+    /// Scheduler ticks since spawn (the scrape's per-shard liveness
+    /// counter).
+    pub fn heartbeat_ticks(&self) -> u64 {
+        // Relaxed: see the struct doc.
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    /// Milliseconds since the last scheduler tick.
+    pub fn beat_age_ms(&self) -> u64 {
+        // Relaxed: see the struct doc.
+        let last = self.last_beat_us.load(Ordering::Relaxed);
+        (self.epoch.elapsed().as_micros() as u64).saturating_sub(last) / 1000
+    }
+}
+
+/// Shard identity handed to [`super::spawn_shard`]: the scheduler thread
+/// heartbeats through `health` and the boundary handler flags it dead.
+pub(crate) struct ShardCtx {
+    pub(crate) id: u64,
+    pub(crate) health: Arc<ShardHealth>,
+}
+
+/// Router-side counters, surfaced in the cluster metrics scrape.
+struct RouterCounters {
+    routed: AtomicU64,
+    failovers: AtomicU64,
+    shed_retries: AtomicU64,
+    stall_quarantines: AtomicU64,
+}
+
+/// Snapshot of the router counters for the scrape.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct RouterSnapshot {
+    /// Submissions dispatched to shards (failover/shed resubmissions
+    /// count again — this is dispatch volume, not client requests).
+    pub routed_total: u64,
+    /// In-flight requests reconstructed and re-routed off a dead shard.
+    pub failovers_total: u64,
+    /// Shed bounces retried on another shard.
+    pub shed_retries_total: u64,
+    /// Shards quarantined for missing their heartbeat timeout.
+    pub stall_quarantines_total: u64,
+}
+
+struct ShardSlot {
+    handle: Handle,
+    metrics: Arc<Mutex<Metrics>>,
+    health: Arc<ShardHealth>,
+}
+
+struct RouterInner {
+    cfg: Config,
+    shards: Vec<ShardSlot>,
+    /// Sorted (hash, shard) points; lookups walk clockwise skipping dead
+    /// shards, so one shard's death remaps only that shard's arcs.
+    ring: Vec<(u64, usize)>,
+    /// Requests cancelled while possibly between shards (mid-failover):
+    /// relays check this before every resubmission so a cancel can never
+    /// race into a lost update, and remove their id on exit.
+    cancelled: Mutex<HashSet<u64>>,
+    counters: RouterCounters,
+}
+
+/// The sharded serving tier: routing front + worker shards. The cluster
+/// analog of [`super::Handle`] (submit/cancel/drain/shutdown), plus
+/// per-shard and aggregate metrics access for the scrape. Cheap to
+/// clone, like `Handle` — clones share the router and the shard set.
+#[derive(Clone)]
+pub struct Cluster {
+    inner: Arc<RouterInner>,
+    joins: Arc<Mutex<Vec<std::thread::JoinHandle<()>>>>,
+}
+
+/// FNV-1a over the routing prefix of a prompt.
+pub(crate) fn route_key(prompt: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in prompt.iter().take(ROUTE_PREFIX_BYTES) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// splitmix64 finalizer for ring point placement.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+pub(crate) fn build_ring(shards: usize) -> Vec<(u64, usize)> {
+    let mut ring: Vec<(u64, usize)> = (0..shards as u64)
+        .flat_map(|s| (0..VNODES).map(move |v| (mix(s * VNODES * 2 + v + 1), s as usize)))
+        .collect();
+    ring.sort_unstable();
+    ring
+}
+
+/// Clockwise ring walk from `key`, skipping dead shards. Pure in the
+/// ring and the aliveness view, which is what makes routing testable and
+/// deterministic: identical (ring, key, alive) always yields the same
+/// shard.
+pub(crate) fn ring_route(ring: &[(u64, usize)], key: u64, alive: &[bool]) -> Option<usize> {
+    if ring.is_empty() {
+        return None;
+    }
+    let start = ring.partition_point(|&(h, _)| h < key);
+    for off in 0..ring.len() {
+        let (_, s) = ring[(start + off) % ring.len()];
+        if alive.get(s).copied().unwrap_or(false) {
+            return Some(s);
+        }
+    }
+    None
+}
+
+impl RouterInner {
+    fn alive_view(&self) -> Vec<bool> {
+        self.shards.iter().map(|s| !s.health.is_dead()).collect()
+    }
+
+    /// Target for the next (re)submission: the ring primary on a fresh
+    /// placement pass, else (shed retry) the least-loaded live shard not
+    /// yet tried this pass.
+    fn pick_target(&self, key: u64, tried: &[bool]) -> Option<usize> {
+        if tried.iter().all(|&t| !t) {
+            return ring_route(&self.ring, key, &self.alive_view());
+        }
+        self.shards
+            .iter()
+            .enumerate()
+            .filter(|(i, s)| !tried[*i] && !s.health.is_dead())
+            .min_by_key(|(_, s)| lock_recover(&s.metrics).requests_in_flight)
+            .map(|(i, _)| i)
+    }
+}
+
+/// Per-request relay: owns the client's event stream for the request's
+/// whole life, across sheds and failovers. Exactly one terminal event
+/// reaches the client, whatever the shards do.
+fn relay(inner: Arc<RouterInner>, req: Request, client: Sender<Event>) {
+    let hb_timeout_ms = inner.cfg.serving.heartbeat_timeout_ms;
+    // Absolute deadline fixed once at the router: failover resubmissions
+    // carry the *remaining* budget, never a restarted clock.
+    let eff_deadline_ms = req
+        .deadline_ms
+        .unwrap_or(inner.cfg.serving.default_deadline_ms);
+    let abs_deadline =
+        (eff_deadline_ms > 0).then(|| Instant::now() + Duration::from_millis(eff_deadline_ms));
+    // Tokens already forwarded to the client, across all shard
+    // incarnations: the recompute prefix for failover resubmission.
+    let mut streamed: Vec<u8> = Vec::new();
+    let key = route_key(&req.prompt);
+    let mut tried = vec![false; inner.shards.len()];
+    let mut shed_backoffs: u32 = 0;
+
+    'submits: loop {
+        // a cancel that landed while the request was between shards
+        // must still terminate it exactly once
+        if lock_recover(&inner.cancelled).contains(&req.id) {
+            let _ = client.send(Event::Cancelled(CancelKind::Cancelled));
+            break 'submits;
+        }
+        if abs_deadline.is_some_and(|d| Instant::now() >= d) {
+            let _ = client.send(Event::Cancelled(CancelKind::DeadlineExceeded));
+            break 'submits;
+        }
+        let Some(target) = inner.pick_target(key, &tried) else {
+            let _ = client.send(Event::Error(
+                "no live shard accepted the request (all dead or shedding)".to_string(),
+            ));
+            break 'submits;
+        };
+        tried[target] = true;
+        let sub = Request {
+            id: req.id,
+            prompt: if streamed.is_empty() {
+                req.prompt.clone()
+            } else {
+                let mut p = req.prompt.clone();
+                p.extend_from_slice(&streamed);
+                p
+            },
+            max_new_tokens: req.max_new_tokens,
+            policy: req.policy.clone(),
+            deadline_ms: if streamed.is_empty() && shed_backoffs == 0 {
+                // first placement: pass the wire budget through verbatim
+                req.deadline_ms
+            } else {
+                abs_deadline.map(|d| {
+                    (d.saturating_duration_since(Instant::now()).as_millis() as u64).max(1)
+                })
+            },
+            carried_tokens: streamed.len(),
+        };
+        // Relaxed: scrape-only counters (here and below).
+        inner.counters.routed.fetch_add(1, Ordering::Relaxed);
+        let rx = match inner.shards[target].handle.submit(sub) {
+            Ok(rx) => rx,
+            Err(_) => {
+                // the shard's message channel is gone: its thread exited.
+                // Treat as a death and re-route.
+                inner.shards[target].health.mark_dead();
+                inner.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                tried = vec![false; inner.shards.len()];
+                continue 'submits;
+            }
+        };
+        loop {
+            match rx.recv_timeout(RELAY_POLL) {
+                Ok(Event::Token(t)) => {
+                    streamed.push(t);
+                    if client.send(Event::Token(t)).is_err() {
+                        // client hung up: stop the shard-side decode too
+                        inner.shards[target].handle.cancel(req.id);
+                        break 'submits;
+                    }
+                }
+                Ok(Event::Shed) => {
+                    inner.counters.shed_retries.fetch_add(1, Ordering::Relaxed);
+                    shed_backoffs += 1;
+                    // bounded backoff: one pass over the live set, with a
+                    // linearly growing pause between attempts
+                    std::thread::sleep(Duration::from_micros(200 * shed_backoffs as u64));
+                    continue 'submits;
+                }
+                Ok(ev) => {
+                    // Done / Cancelled / Error: the one terminal event
+                    let _ = client.send(ev);
+                    break 'submits;
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    let h = &inner.shards[target].health;
+                    if h.is_dead() {
+                        inner.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                        tried = vec![false; inner.shards.len()];
+                        continue 'submits;
+                    }
+                    if hb_timeout_ms > 0 && h.beat_age_ms() > hb_timeout_ms {
+                        // Stalled, not crashed: quarantine it (sticky) so
+                        // routing stops feeding it, cancel our sequence
+                        // there (it may wake later and decode for a
+                        // receiver that left), and fail over.
+                        h.mark_dead();
+                        inner
+                            .counters
+                            .stall_quarantines
+                            .fetch_add(1, Ordering::Relaxed);
+                        inner.shards[target].handle.cancel(req.id);
+                        inner.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                        tried = vec![false; inner.shards.len()];
+                        continue 'submits;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    // Channel closed without a terminal event. Every
+                    // normal exit path flushes a terminal first, so this
+                    // is a crash signature; give the thread-boundary
+                    // handler a moment to raise the flag, then fail over
+                    // regardless.
+                    let h = &inner.shards[target].health;
+                    let grace = Instant::now() + CRASH_FLAG_GRACE;
+                    while !h.is_dead() && Instant::now() < grace {
+                        std::thread::sleep(RELAY_POLL);
+                    }
+                    h.mark_dead();
+                    inner.counters.failovers.fetch_add(1, Ordering::Relaxed);
+                    tried = vec![false; inner.shards.len()];
+                    continue 'submits;
+                }
+            }
+        }
+    }
+    lock_recover(&inner.cancelled).remove(&req.id);
+}
+
+/// Start a sharded cluster over the PJRT [`Engine`] (one engine per
+/// shard, each constructed inside its own scheduler thread).
+pub fn spawn_cluster(cfg: Config) -> Result<Cluster> {
+    spawn_cluster_with(cfg, |_shard, engine_cfg| Engine::load(engine_cfg))
+}
+
+/// Start a sharded cluster over any [`EngineCore`] backend.
+///
+/// `serving.shards` controls the shard count; each shard gets its own
+/// engine from `factory(shard_id, cfg)` — and with it its own `PagePool`
+/// and radix `PrefixCache` (`serving.kv_pool_mb` is a *per-shard*
+/// budget). Like [`super::spawn_with`], engines are constructed inside
+/// their scheduler threads.
+pub fn spawn_cluster_with<E, F>(cfg: Config, factory: F) -> Result<Cluster>
+where
+    E: EngineCore + 'static,
+    F: Fn(u64, Config) -> Result<E> + Send + Sync + 'static,
+{
+    let n = cfg.serving.shards.max(1);
+    let factory = Arc::new(factory);
+    let mut shards = Vec::with_capacity(n);
+    let mut joins = Vec::with_capacity(n);
+    for id in 0..n as u64 {
+        let health = Arc::new(ShardHealth::new());
+        let ctx = ShardCtx { id, health: Arc::clone(&health) };
+        let f = Arc::clone(&factory);
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) =
+            super::spawn_shard(cfg.clone(), Some(ctx), move || f(id, engine_cfg))?;
+        shards.push(ShardSlot { handle, metrics, health });
+        joins.push(join);
+    }
+    let inner = Arc::new(RouterInner {
+        cfg,
+        ring: build_ring(shards.len()),
+        shards,
+        cancelled: Mutex::new(HashSet::new()),
+        counters: RouterCounters {
+            routed: AtomicU64::new(0),
+            failovers: AtomicU64::new(0),
+            shed_retries: AtomicU64::new(0),
+            stall_quarantines: AtomicU64::new(0),
+        },
+    });
+    Ok(Cluster { inner, joins: Arc::new(Mutex::new(joins)) })
+}
+
+impl Cluster {
+    /// Submit a request; events stream on the returned receiver with the
+    /// same contract as [`Handle::submit`] — routing, shedding, and
+    /// failover are invisible apart from latency.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        let (tx, rx) = std::sync::mpsc::channel();
+        let inner = Arc::clone(&self.inner);
+        std::thread::Builder::new()
+            .name("lychee-relay".into())
+            .spawn(move || relay(inner, req, tx))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: run a request to completion (cluster analog
+    /// of [`Handle::generate`]).
+    pub fn generate(&self, req: Request) -> Result<(Vec<u8>, super::FinishStats)> {
+        let rx = self.submit(req)?;
+        let mut out = Vec::new();
+        for ev in rx {
+            match ev {
+                Event::Token(t) => out.push(t),
+                Event::Done(stats) => return Ok((out, stats)),
+                Event::Cancelled(kind) => anyhow::bail!("request {}", kind.as_str()),
+                Event::Error(e) => anyhow::bail!("request failed: {e}"),
+                Event::Shed => anyhow::bail!("request shed: queue over watermark"),
+            }
+        }
+        anyhow::bail!("stream ended without Done")
+    }
+
+    /// Cancel a request cluster-wide, in whatever state it is in —
+    /// including mid-failover, between shards: the id is recorded first,
+    /// so a relay about to resubmit sees it and terminates the request
+    /// instead (exactly one `Cancelled` terminal either way).
+    pub fn cancel(&self, request_id: u64) {
+        lock_recover(&self.inner.cancelled).insert(request_id);
+        for s in &self.inner.shards {
+            s.handle.cancel(request_id);
+        }
+    }
+
+    /// Begin a graceful drain on every shard: admission closes
+    /// cluster-wide, in-flight work completes, every request still gets
+    /// exactly one terminal event. Aggregate `drain_state` reaches 2
+    /// once the *slowest* shard finishes.
+    pub fn drain(&self) {
+        for s in &self.inner.shards {
+            s.handle.drain();
+        }
+    }
+
+    /// Immediate stop on every shard (in-flight work is flushed with
+    /// `Cancelled` terminals by each shard's teardown).
+    pub fn shutdown(&self) {
+        for s in &self.inner.shards {
+            s.handle.shutdown();
+        }
+    }
+
+    /// Join all shard scheduler threads (call after [`Self::drain`] or
+    /// [`Self::shutdown`]; idempotent across clones — the handles are
+    /// taken by whichever caller gets there first). Crashed shards
+    /// already unwound through the boundary handler, so their joins
+    /// return normally too.
+    pub fn join(&self) {
+        let joins = std::mem::take(&mut *lock_recover(&self.joins));
+        for j in joins {
+            let _ = j.join();
+        }
+    }
+
+    pub fn shard_count(&self) -> usize {
+        self.inner.shards.len()
+    }
+
+    /// The shared metrics cell of shard `i` (panics on out-of-range `i`,
+    /// like slice indexing).
+    pub fn shard_metrics(&self, i: usize) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.inner.shards[i].metrics)
+    }
+
+    pub fn shard_alive(&self, i: usize) -> bool {
+        !self.inner.shards[i].health.is_dead()
+    }
+
+    pub fn shard_heartbeat_ticks(&self, i: usize) -> u64 {
+        self.inner.shards[i].health.heartbeat_ticks()
+    }
+
+    pub fn router_snapshot(&self) -> RouterSnapshot {
+        // Relaxed: scrape-only counters.
+        let c = &self.inner.counters;
+        RouterSnapshot {
+            routed_total: c.routed.load(Ordering::Relaxed),
+            failovers_total: c.failovers.load(Ordering::Relaxed),
+            shed_retries_total: c.shed_retries.load(Ordering::Relaxed),
+            stall_quarantines_total: c.stall_quarantines.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Cluster-wide metrics: counters summed, latency histograms merged,
+    /// gauges summed — except the process-global sparse-index mirrors
+    /// (`selects_before_build`, `blocks_*_total`), where every shard
+    /// mirrors the same global counter and the aggregate takes the max
+    /// instead of multiply-counting, and `drain_state`, which reports
+    /// the *least* drained shard (the cluster is only as drained as its
+    /// slowest member).
+    pub fn aggregate_metrics(&self) -> Metrics {
+        let mut agg = Metrics::default();
+        agg.drain_state = 2;
+        for (i, s) in self.inner.shards.iter().enumerate() {
+            let m = lock_recover(&s.metrics);
+            agg.requests += m.requests;
+            agg.completed += m.completed;
+            agg.rejected += m.rejected;
+            agg.tokens_out += m.tokens_out;
+            agg.ttft_us.merge(&m.ttft_us);
+            agg.tpot_us.merge(&m.tpot_us);
+            agg.kv_bytes_in_use += m.kv_bytes_in_use;
+            agg.kv_bytes_shared += m.kv_bytes_shared;
+            agg.prefix_hits += m.prefix_hits;
+            agg.prefix_tokens_reused += m.prefix_tokens_reused;
+            agg.prefix_evictions += m.prefix_evictions;
+            agg.selects_before_build = agg.selects_before_build.max(m.selects_before_build);
+            agg.blocks_scanned_total = agg.blocks_scanned_total.max(m.blocks_scanned_total);
+            agg.blocks_pruned_total = agg.blocks_pruned_total.max(m.blocks_pruned_total);
+            agg.kv_bytes_free += m.kv_bytes_free;
+            agg.kv_bytes_free_peak += m.kv_bytes_free_peak;
+            agg.kv_pages_recycled_total += m.kv_pages_recycled_total;
+            agg.admission_waits += m.admission_waits;
+            agg.prefill_chunks_executed += m.prefill_chunks_executed;
+            agg.preemptions += m.preemptions;
+            agg.queue_depth += m.queue_depth;
+            agg.requests_in_flight += m.requests_in_flight;
+            agg.cancellations += m.cancellations;
+            agg.deadline_exceeded += m.deadline_exceeded;
+            agg.sequence_panics += m.sequence_panics;
+            agg.faults_injected_total += m.faults_injected_total;
+            agg.sheds += m.sheds;
+            agg.drain_state = agg.drain_state.min(m.drain_state);
+            if i == 0 {
+                agg.kv_precision = m.kv_precision.clone();
+                agg.rep_precision = m.rep_precision.clone();
+            }
+        }
+        agg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn route_key_is_a_prefix_hash() {
+        let a = route_key(b"shared session history | turn tail A");
+        let b = route_key(b"shared session history | turn tail A");
+        assert_eq!(a, b, "same bytes must hash identically");
+        // beyond the routing prefix, the tail no longer matters
+        let mut long_a = vec![b'x'; ROUTE_PREFIX_BYTES];
+        let mut long_b = long_a.clone();
+        long_a.extend_from_slice(b"tail one");
+        long_b.extend_from_slice(b"completely different tail");
+        assert_eq!(route_key(&long_a), route_key(&long_b));
+        // within the prefix it does
+        assert_ne!(route_key(b"prompt A"), route_key(b"prompt B"));
+    }
+
+    #[test]
+    fn ring_balances_and_is_deterministic() {
+        let ring = build_ring(4);
+        assert_eq!(ring.len(), 4 * VNODES as usize);
+        assert_eq!(ring, build_ring(4), "ring construction must be deterministic");
+        let alive = vec![true; 4];
+        let mut counts = [0usize; 4];
+        for i in 0..4000u64 {
+            let key = route_key(format!("prompt number {i}").as_bytes());
+            let s = ring_route(&ring, key, &alive).expect("live ring routes everything");
+            counts[s] += 1;
+        }
+        for (s, &c) in counts.iter().enumerate() {
+            assert!(
+                (400..=2200).contains(&c),
+                "shard {s} got {c}/4000 keys — ring badly unbalanced: {counts:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn dead_shard_remaps_only_its_own_keys() {
+        let ring = build_ring(4);
+        let all_alive = vec![true; 4];
+        let mut one_dead = all_alive.clone();
+        one_dead[2] = false;
+        let mut remapped = 0usize;
+        let mut total = 0usize;
+        for i in 0..4000u64 {
+            let key = route_key(format!("prompt number {i}").as_bytes());
+            let before = ring_route(&ring, key, &all_alive).unwrap();
+            let after = ring_route(&ring, key, &one_dead).unwrap();
+            assert_ne!(after, 2, "routed to the dead shard");
+            total += 1;
+            if before != after {
+                remapped += 1;
+                assert_eq!(before, 2, "a key moved off a LIVE shard when shard 2 died");
+            }
+        }
+        assert!(remapped > 0, "shard 2 owned no keys at all");
+        assert!(
+            remapped < total / 2,
+            "losing 1 of 4 shards remapped {remapped}/{total} keys"
+        );
+    }
+
+    #[test]
+    fn ring_route_with_everything_dead_is_none() {
+        let ring = build_ring(2);
+        assert_eq!(ring_route(&ring, 12345, &[false, false]), None);
+        assert_eq!(ring_route(&[], 12345, &[]), None);
+    }
+
+    #[test]
+    fn shard_health_beat_and_death() {
+        let h = ShardHealth::new();
+        assert!(!h.is_dead());
+        assert_eq!(h.heartbeat_ticks(), 0);
+        h.beat();
+        h.beat();
+        assert_eq!(h.heartbeat_ticks(), 2);
+        // a fresh beat has ~zero age
+        assert!(h.beat_age_ms() < 1000);
+        h.mark_dead();
+        assert!(h.is_dead(), "mark_dead is sticky");
+    }
+}

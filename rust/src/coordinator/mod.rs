@@ -28,6 +28,10 @@
 /// Chaos suite: the real scheduler over `SimEngine` under deterministic
 /// fault plans (contents are entirely `#[cfg(test)]`).
 mod chaos;
+/// Cluster mode: routing front + N engine-worker shards (consistent-hash
+/// routing, cross-shard load shedding, heartbeat health, shard-loss
+/// failover).
+pub mod cluster;
 
 use crate::config::Config;
 use crate::engine::{Engine, EngineCore, PrefillProgress, PrefillState, Sampling, Sequence};
@@ -56,6 +60,14 @@ pub struct Request {
     /// Expiry terminates the request in whatever state it is in with a
     /// `deadline_exceeded` outcome.
     pub deadline_ms: Option<u64>,
+    /// Tokens already streamed to the client by a previous incarnation
+    /// of this request (shard-loss failover resubmission: the router
+    /// rebuilds the prompt as original + streamed text and sets this so
+    /// the new shard neither re-emits those tokens nor re-counts them —
+    /// `Done.tokens` still reports the full total). Always 0 for fresh
+    /// submissions. Non-zero marks the request *warm*: warm requests are
+    /// exempt from queue-depth load shedding.
+    pub carried_tokens: usize,
 }
 
 /// Completion statistics for one request.
@@ -100,6 +112,13 @@ pub enum Event {
     /// refs dropped, and admission reservations returned.
     Cancelled(CancelKind),
     Error(String),
+    /// Load-shed terminal (cluster mode): the shard's pending queue is
+    /// over `serving.shed_watermark` and this request is cold, so the
+    /// shard bounced it back to the router, which retries it on the
+    /// next-least-loaded shard. Clients never see this through the
+    /// router; a direct single-coordinator caller should treat it as a
+    /// retryable rejection.
+    Shed,
 }
 
 /// Aggregate serving metrics (shared with the metrics endpoint / CLI).
@@ -175,6 +194,10 @@ pub struct Metrics {
     pub faults_injected_total: u64,
     /// Lifecycle gauge: 0 = serving, 1 = draining, 2 = drained.
     pub drain_state: u64,
+    /// Cold requests bounced back to the router because the pending
+    /// queue was over `serving.shed_watermark` (cluster mode; always 0
+    /// with shedding disabled).
+    pub sheds: u64,
 }
 
 impl Metrics {
@@ -285,6 +308,7 @@ impl Handle {
                 Event::Done(stats) => return Ok((out, stats)),
                 Event::Cancelled(kind) => anyhow::bail!("request {}", kind.as_str()),
                 Event::Error(e) => anyhow::bail!("request failed: {e}"),
+                Event::Shed => anyhow::bail!("request shed: queue over watermark"),
             }
         }
         anyhow::bail!("stream ended without Done")
@@ -326,6 +350,11 @@ pub struct Coordinator<E: EngineCore> {
     cfg: Config,
     rx: Receiver<Msg>,
     pub metrics: Arc<Mutex<Metrics>>,
+    /// Cluster identity: present only when this coordinator runs as one
+    /// worker shard behind the [`cluster`] router (heartbeats, shard
+    /// fault sites). `None` for the plain single-coordinator path, which
+    /// stays byte-identical to pre-cluster behavior.
+    shard: Option<cluster::ShardCtx>,
 }
 
 /// Start a coordinator over the PJRT engine on its own thread; returns
@@ -348,6 +377,24 @@ where
     E: EngineCore + 'static,
     F: FnOnce() -> Result<E> + Send + 'static,
 {
+    spawn_shard(cfg, None, factory)
+}
+
+/// [`spawn_with`] plus an optional shard identity: when `shard` is
+/// `Some`, the scheduler thread heartbeats through the shard's health
+/// cell each tick and a panic that escapes the per-job isolation (a real
+/// scheduler crash, or an injected shard-kill fault) marks the shard
+/// dead instead of vanishing silently — the router's relays detect the
+/// flag and fail the shard's in-flight work over.
+pub(crate) fn spawn_shard<E, F>(
+    cfg: Config,
+    shard: Option<cluster::ShardCtx>,
+    factory: F,
+) -> Result<(Handle, Arc<Mutex<Metrics>>, std::thread::JoinHandle<()>)>
+where
+    E: EngineCore + 'static,
+    F: FnOnce() -> Result<E> + Send + 'static,
+{
     let (tx, rx) = channel();
     let metrics = Arc::new(Mutex::new(Metrics::default()));
     {
@@ -359,12 +406,38 @@ where
     }
     let m2 = Arc::clone(&metrics);
     let (ready_tx, ready_rx) = channel();
+    let thread_name = match &shard {
+        Some(s) => format!("lychee-shard-{}", s.id),
+        None => "lychee-coordinator".to_string(),
+    };
     let join = std::thread::Builder::new()
-        .name("lychee-coordinator".into())
+        .name(thread_name)
         .spawn(move || match factory() {
             Ok(engine) => {
                 let _ = ready_tx.send(Ok(()));
-                Coordinator { engine, cfg, rx, metrics: m2 }.run();
+                let health = shard.as_ref().map(|s| Arc::clone(&s.health));
+                let coord = Coordinator { engine, cfg, rx, metrics: m2, shard };
+                match health {
+                    None => coord.run(),
+                    Some(h) => {
+                        // Shard mode: a panic that unwinds out of the tick
+                        // loop (past the per-job isolation) is a shard
+                        // crash. Catch it at the thread boundary and mark
+                        // the shard dead so the router fails its in-flight
+                        // work over instead of losing the thread silently.
+                        // AssertUnwindSafe: the coordinator and engine are
+                        // consumed here and never observed after a panic;
+                        // shared state (metrics, pool ledger) is guarded
+                        // by `lock_recover`-style poison recovery.
+                        let crashed = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                            move || coord.run(),
+                        ))
+                        .is_err();
+                        if crashed {
+                            h.mark_dead();
+                        }
+                    }
+                }
             }
             // init failed before the tick loop started: nothing is in
             // flight, so there are no outcomes to flush — the caller
@@ -430,6 +503,20 @@ impl<E: EngineCore> Coordinator<E> {
                 lock_recover(&self.metrics).rejected += 1;
                 let _ = tx.send(Event::Error(msg));
             }
+            // Cross-shard load shedding (cluster mode): a cold request
+            // landing on a shard whose pending queue is over the
+            // watermark bounces back to the router as a retryable `Shed`
+            // terminal instead of queueing behind a hot spot. Warm
+            // requests (failover resubmissions, `carried_tokens > 0`)
+            // are exempt — their streamed prefix makes a bounce strictly
+            // worse than queueing, and exempting them bounds retry churn.
+            None if self.cfg.serving.shed_watermark > 0
+                && req.carried_tokens == 0
+                && pending.len() >= self.cfg.serving.shed_watermark =>
+            {
+                lock_recover(&self.metrics).sheds += 1;
+                let _ = tx.send(Event::Shed);
+            }
             None => {
                 // clamp to the configured per-request output cap so one
                 // request cannot monopolize the batch (or the arena)
@@ -439,11 +526,16 @@ impl<E: EngineCore> Coordinator<E> {
                     req.deadline_ms.unwrap_or(self.cfg.serving.default_deadline_ms);
                 let deadline = (deadline_ms > 0)
                     .then(|| Instant::now() + std::time::Duration::from_millis(deadline_ms));
+                // a failover resubmission arrives with its already-
+                // streamed tokens folded into the prompt; `carried`
+                // makes the shard skip re-emitting them, exactly like a
+                // local preemption requeue
+                let carried = req.carried_tokens;
                 pending.push_back(QueuedReq {
                     req,
                     tx,
                     submitted: Instant::now(),
-                    carried: 0,
+                    carried,
                     preempted: false,
                     first_token: None,
                     decode_started: None,
@@ -575,6 +667,7 @@ impl<E: EngineCore> Coordinator<E> {
                 // the absolute deadline below survives the requeue; the
                 // wire-level budget must not restart the clock
                 deadline_ms: None,
+                carried_tokens: carried + seq.generated.len(),
             },
             tx,
             submitted,
@@ -779,8 +872,20 @@ impl<E: EngineCore> Coordinator<E> {
         let mut wait_ticks: usize = 0;
         // graceful-drain mode: admission closed, in-flight work finishes
         let mut draining = false;
+        // cumulative decode batches executed: the progress key for the
+        // injected shard-kill/stall sites (work progress, not wall clock,
+        // so chaos schedules are stable across interleavings)
+        let mut decode_steps: u64 = 0;
 
         'ticks: loop {
+            // ---- shard heartbeat (cluster mode) ------------------------
+            // Each tick bumps the shard's beat so the router's relays can
+            // tell a live-but-busy shard from a hung one. The plain
+            // single-coordinator path has no shard identity and skips it.
+            if let Some(shard) = &self.shard {
+                shard.health.beat();
+            }
+
             // ---- drain the message queue -------------------------------
             loop {
                 match self.rx.try_recv() {
@@ -1035,6 +1140,34 @@ impl<E: EngineCore> Coordinator<E> {
                 continue;
             }
 
+            // ---- injected shard faults (chaos builds only) --------------
+            // Checked once per decode step, right before it runs, keyed on
+            // the cumulative step counter: a configured `(shard, step)`
+            // pair fires exactly once no matter how ticks interleave with
+            // idle waits.
+            #[cfg(any(test, feature = "failpoints"))]
+            if let Some(shard) = &self.shard {
+                if let Some(plan) = self.engine.fault_plan() {
+                    if let Some(us) = plan.shard_stall_us(shard.id, decode_steps) {
+                        // heartbeat stall: sleep without beating, so the
+                        // router sees the beat age past its timeout while
+                        // the shard is in fact still alive
+                        std::thread::sleep(std::time::Duration::from_micros(us));
+                    }
+                    if plan.shard_kill_now(shard.id, decode_steps) {
+                        // deliberately OUTSIDE the per-batch catch_unwind
+                        // below: this unwinds the whole scheduler thread
+                        // (a shard crash) and is caught only by
+                        // `spawn_shard`'s boundary handler, which marks
+                        // the shard dead for the router's failover path
+                        panic!(
+                            "injected shard kill: shard {} at decode step {}",
+                            shard.id, decode_steps
+                        );
+                    }
+                }
+            }
+
             // ---- one decode step over the running batch -----------------
             // Panic isolation is batch-granular here: the engine panicked
             // with an unknown subset of the batch already stepped, so
@@ -1048,6 +1181,7 @@ impl<E: EngineCore> Coordinator<E> {
                     running[..batch_n].iter_mut().map(|r| &mut r.seq).collect();
                 self.engine.decode_batch(&mut refs, &sampling)
             }));
+            decode_steps += 1;
             let toks = match stepped {
                 Ok(Ok(t)) => t,
                 Ok(Err(e)) => {
@@ -1185,6 +1319,7 @@ mod tests {
                 max_new_tokens: 5,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         assert_eq!(out.len(), 5);
@@ -1214,6 +1349,7 @@ mod tests {
                     max_new_tokens: 4,
                     policy: "lychee".into(),
                     deadline_ms: None,
+                    carried_tokens: 0,
                 })
                 .unwrap();
             rxs.push(rx);
@@ -1231,6 +1367,7 @@ mod tests {
                     }
                     Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("error: {e}"),
+                    Event::Shed => panic!("shed with no watermark configured"),
                 }
             }
             assert!(done);
@@ -1252,6 +1389,7 @@ mod tests {
                 max_new_tokens: 1,
                 policy: "full".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         match rx.recv().unwrap() {
@@ -1275,6 +1413,7 @@ mod tests {
                 max_new_tokens: 0,
                 policy: "full".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         match rx.recv().unwrap() {
@@ -1289,6 +1428,7 @@ mod tests {
                 max_new_tokens: 10_000,
                 policy: "full".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         assert_eq!(out.len(), 4);
@@ -1316,6 +1456,7 @@ mod tests {
                         max_new_tokens: 3,
                         policy: "full".into(),
                         deadline_ms: None,
+                        carried_tokens: 0,
                     })
                     .unwrap(),
             );
@@ -1332,6 +1473,7 @@ mod tests {
                     Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("unexpected error: {e}"),
                     Event::Token(_) => {}
+                    Event::Shed => panic!("shed with no watermark configured"),
                 }
             }
             assert!(done);
@@ -1355,6 +1497,7 @@ mod tests {
             max_new_tokens: 6,
             policy: "full".into(),
             deadline_ms: None,
+            carried_tokens: 0,
         };
         let (a, _) = handle.generate(req(1)).unwrap();
         let (b, _) = handle.generate(req(2)).unwrap();
@@ -1380,6 +1523,7 @@ mod tests {
                         max_new_tokens: 5,
                         policy: "lychee".into(),
                         deadline_ms: None,
+                        carried_tokens: 0,
                     })
                     .unwrap(),
             );
@@ -1397,6 +1541,7 @@ mod tests {
                     }
                     Event::Cancelled(k) => panic!("unexpected cancel: {}", k.as_str()),
                     Event::Error(e) => panic!("sim serve error: {e}"),
+                    Event::Shed => panic!("shed with no watermark configured"),
                 }
             }
             assert!(done);
@@ -1443,6 +1588,7 @@ mod tests {
                         max_new_tokens: 400,
                         policy: "lychee".into(),
                         deadline_ms: None,
+                        carried_tokens: 0,
                     })
                     .unwrap(),
             );
@@ -1470,6 +1616,7 @@ mod tests {
                 max_new_tokens: 3,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
 
@@ -1544,7 +1691,14 @@ mod tests {
             let mut prompt = shared_prefix.clone();
             prompt.extend(crate::workloads::trace::prompt_text(100, 1000 + i));
             let (out, _) = handle
-                .generate(Request { id: i, prompt, max_new_tokens: 3, policy: "lychee".into(), deadline_ms: None })
+                .generate(Request {
+                    id: i,
+                    prompt,
+                    max_new_tokens: 3,
+                    policy: "lychee".into(),
+                    deadline_ms: None,
+                    carried_tokens: 0,
+                })
                 .unwrap();
             assert_eq!(out.len(), 3);
         }
@@ -1604,6 +1758,7 @@ mod tests {
                 max_new_tokens: 2000,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         // let A start decoding
@@ -1628,6 +1783,7 @@ mod tests {
                 max_new_tokens: 20,
                 policy: "lychee".into(),
                 deadline_ms: None,
+                carried_tokens: 0,
             })
             .unwrap();
         assert_eq!(b_out.len(), 20);
@@ -1644,6 +1800,7 @@ mod tests {
                 }
                 Event::Cancelled(k) => panic!("victim cancelled: {}", k.as_str()),
                 Event::Error(e) => panic!("victim errored: {e}"),
+                Event::Shed => panic!("shed with no watermark configured"),
             }
         }
         let a_done = a_done.expect("victim never finished");

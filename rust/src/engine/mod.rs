@@ -266,6 +266,16 @@ pub trait EngineCore {
     fn faults_injected(&self) -> u64 {
         0
     }
+
+    /// The engine's installed fault plan, when one exists (chaos builds
+    /// only). The coordinator consults it for the *scheduler-level*
+    /// sites — shard kill and heartbeat stall — which must fire outside
+    /// the per-job `catch_unwind` isolation that contains engine-level
+    /// faults.
+    #[cfg(any(test, feature = "failpoints"))]
+    fn fault_plan(&self) -> Option<&std::sync::Arc<crate::util::fault::FaultPlan>> {
+        None
+    }
 }
 
 /// Radix-match `st.prompt` against the shared-prefix cache and adopt the

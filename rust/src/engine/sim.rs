@@ -320,6 +320,11 @@ impl EngineCore for SimEngine {
         self.fault.as_ref().map_or(0, |p| p.injected_total())
     }
 
+    #[cfg(any(test, feature = "failpoints"))]
+    fn fault_plan(&self) -> Option<&Arc<crate::util::fault::FaultPlan>> {
+        self.fault.as_ref()
+    }
+
     fn prefix_cache(&self) -> Option<&Arc<PrefixCache>> {
         Some(&self.prefix)
     }

@@ -22,6 +22,8 @@ const SITE_ALLOC: u64 = 0xA110C;
 const SITE_PREFILL_STALL: u64 = 0x57A11;
 const SITE_DECODE_STALL: u64 = 0xDEC0D;
 const SITE_PANIC: u64 = 0x9A21C;
+const SITE_SHARD_KILL: u64 = 0x5A_DD1E;
+const SITE_SHARD_STALL: u64 = 0x5A_D57A;
 
 /// Per-site fire rates in permille (0 = site disabled) plus the stall
 /// duration used by the slow-path sites.
@@ -39,6 +41,19 @@ pub struct FaultConfig {
     pub panic_step_permille: u32,
     /// Stall duration for the slow-path sites, microseconds.
     pub stall_us: u64,
+    /// Cluster chaos: crash worker shard `.0` (its scheduler loop
+    /// panics *outside* the per-job `catch_unwind` isolation, so the
+    /// whole thread unwinds — every in-flight sequence drops without a
+    /// terminal event, pages recycle, and the router must fail the work
+    /// over) when that shard's cumulative decode-step counter reaches
+    /// `.1`. Keyed on work progress, never wall-clock, so the kill
+    /// point is stable across interleavings.
+    pub kill_shard: Option<(u64, u64)>,
+    /// Cluster chaos: worker shard `.0` stops heartbeating for
+    /// `stall_us` when its decode-step counter reaches `.1` (the shard
+    /// stays alive — this exercises the router's heartbeat-timeout
+    /// detection path, distinct from the crash path above).
+    pub stall_shard: Option<(u64, u64)>,
 }
 
 /// Seed + config for building a [`FaultPlan`]; carried through
@@ -120,6 +135,34 @@ impl FaultPlan {
         self.fire(self.cfg.panic_step_permille, SITE_PANIC, seq_id, pos)
     }
 
+    /// Should worker shard `shard_id` crash right now, given its
+    /// cumulative decode-step counter? Explicit-pair site (not a
+    /// permille roll): a shard kill is a whole-thread event, so the
+    /// schedule is described as data — `(shard, step)` — and stays a
+    /// pure function of work progress like every other site.
+    pub fn shard_kill_now(&self, shard_id: u64, decode_steps: u64) -> bool {
+        if self.cfg.kill_shard != Some((shard_id, decode_steps)) {
+            return false;
+        }
+        // mix the site in anyway so the counter attributes the fire
+        let _ = self.roll(SITE_SHARD_KILL, shard_id, decode_steps);
+        // Relaxed: see `fire` — scrape-only counter.
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        true
+    }
+
+    /// Heartbeat-stall duration (µs) to impose on worker shard
+    /// `shard_id` at this decode-step count, if any.
+    pub fn shard_stall_us(&self, shard_id: u64, decode_steps: u64) -> Option<u64> {
+        if self.cfg.stall_shard != Some((shard_id, decode_steps)) {
+            return None;
+        }
+        let _ = self.roll(SITE_SHARD_STALL, shard_id, decode_steps);
+        // Relaxed: see `fire` — scrape-only counter.
+        self.injected.fetch_add(1, Ordering::Relaxed);
+        Some(self.cfg.stall_us)
+    }
+
     /// Total faults fired so far (all sites).
     pub fn injected_total(&self) -> u64 {
         // Relaxed: see `fire` — scrape-only counter.
@@ -140,6 +183,7 @@ mod tests {
                 stall_decode_permille: 200,
                 panic_step_permille: 50,
                 stall_us: 10,
+                ..FaultConfig::default()
             },
         }
     }
@@ -187,6 +231,47 @@ mod tests {
             assert!(!plan.panic_at_step(0, step));
         }
         assert_eq!(plan.injected_total(), 0);
+    }
+
+    #[test]
+    fn shard_sites_fire_exactly_at_their_pair() {
+        let spec = FaultSpec {
+            seed: 11,
+            cfg: FaultConfig {
+                stall_us: 123,
+                kill_shard: Some((1, 40)),
+                stall_shard: Some((0, 7)),
+                ..FaultConfig::default()
+            },
+        };
+        let plan = FaultPlan::new(spec.clone());
+        let twin = FaultPlan::new(spec);
+        let mut kills = Vec::new();
+        let mut stalls = Vec::new();
+        for shard in 0..4u64 {
+            for step in 0..100u64 {
+                assert_eq!(
+                    plan.shard_kill_now(shard, step),
+                    twin.shard_kill_now(shard, step),
+                    "kill schedule diverged at ({shard}, {step})"
+                );
+                assert_eq!(plan.shard_stall_us(shard, step), twin.shard_stall_us(shard, step));
+                if plan.shard_kill_now(shard, step) {
+                    kills.push((shard, step));
+                }
+                if let Some(us) = plan.shard_stall_us(shard, step) {
+                    assert_eq!(us, 123);
+                    stalls.push((shard, step));
+                }
+            }
+        }
+        assert_eq!(kills, vec![(1, 40)]);
+        assert_eq!(stalls, vec![(0, 7)]);
+        assert!(plan.injected_total() >= 2, "shard sites never counted as injected");
+        // a plan without shard faults never fires either site
+        let quiet = FaultPlan::new(FaultSpec::default());
+        assert!(!quiet.shard_kill_now(1, 40));
+        assert!(quiet.shard_stall_us(0, 7).is_none());
     }
 
     #[test]
