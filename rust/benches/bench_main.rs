@@ -550,16 +550,195 @@ fn serving_json_section() -> String {
     }
     let prefix_fragment = prefix_reuse_fragment();
     let cluster_fragment = cluster_json_fragment();
+    let concurrency_fragment = concurrency_json_fragment();
     format!(
-        "{{\n  \"schema\": \"lychee-bench-serving-v3\",\n  \"smoke\": {},\n  \
+        "{{\n  \"schema\": \"lychee-bench-serving-v4\",\n  \"smoke\": {},\n  \
          \"engine\": \"sim\",\n  \"prefill_us_per_token\": {},\n  \"modes\": [\n    {}\n  ],\n  \
-         \"prefix_reuse\": {},\n  \"cluster\": {}\n}}\n",
+         \"prefix_reuse\": {},\n  \"cluster\": {},\n  \"concurrency\": {}\n}}\n",
         smoke,
         prefill_us_per_token,
         mode_rows.join(",\n    "),
         prefix_fragment,
-        cluster_fragment
+        cluster_fragment,
+        concurrency_fragment
     )
+}
+
+/// The event-driven-front trajectory (EXPERIMENTS.md §Concurrency):
+/// N simultaneous client streams against the epoll reactor, swept over
+/// stream counts — client-observed TTFT/TPOT p50+p99, the worst
+/// inter-token stall any stream saw, RSS growth per connection, and the
+/// peak process thread count during the run (the reactor's headline
+/// property: flat where thread-per-connection grows by ~2·N). The
+/// smallest size is also replayed against the legacy threads front for
+/// a like-for-like comparison.
+#[cfg(unix)]
+fn concurrency_json_fragment() -> String {
+    use lychee::config::Frontend;
+    use lychee::coordinator::spawn_with;
+    use lychee::engine::sim::{SimConfig, SimEngine};
+    use lychee::server::net::sys::raise_nofile_limit;
+    use lychee::server::{mux, Server};
+    use lychee::util::stats::percentile;
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use std::sync::Arc;
+
+    fn proc_status_kib(key: &str) -> u64 {
+        std::fs::read_to_string("/proc/self/status")
+            .ok()
+            .and_then(|s| {
+                s.lines().find_map(|l| {
+                    l.strip_prefix(key)
+                        .and_then(|v| v.trim().trim_end_matches("kB").trim().parse().ok())
+                })
+            })
+            .unwrap_or(0)
+    }
+    fn rss_kib() -> u64 {
+        proc_status_kib("VmRSS:")
+    }
+    fn thread_count() -> u64 {
+        proc_status_kib("Threads:")
+    }
+
+    let smoke = smoke();
+    let sizes: &[usize] = if smoke { &[64, 256] } else { &[256, 1024, 4096] };
+    let max_new = 4usize;
+    let decode_us_per_step = 200u64;
+
+    // fd budget: each stream costs two in-process fds (client end +
+    // server end) plus headroom for the poller, listener, and stdio
+    let biggest = *sizes.iter().max().unwrap();
+    let limit = raise_nofile_limit((4 * biggest + 128) as u64).unwrap_or(1024);
+    let cap = ((limit.saturating_sub(128)) / 4) as usize;
+
+    let run_load = |frontend: Frontend, n: usize| -> String {
+        let mut cfg = Config::new();
+        cfg.serving.frontend = frontend;
+        cfg.serving.max_batch = n.max(8);
+        cfg.serving.queue_cap = 2 * n + 16;
+        let serving = cfg.serving.clone();
+        let sim = SimConfig { decode_us_per_step, ..SimConfig::default() };
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) =
+            spawn_with(cfg, move || Ok(SimEngine::new(engine_cfg, sim))).unwrap();
+        let server = Server::start_single_with(
+            "127.0.0.1:0",
+            handle.clone(),
+            Some(Arc::clone(&metrics)),
+            &serving,
+        )
+        .unwrap();
+
+        let rss_before = rss_kib();
+        // sample the thread count while streams are live: the threads
+        // front's per-connection threads exit with their sockets, so a
+        // post-run reading would hide exactly the growth under test
+        let sampling = Arc::new(AtomicBool::new(true));
+        let s2 = Arc::clone(&sampling);
+        let sampler = std::thread::spawn(move || {
+            let mut peak = 0u64;
+            while s2.load(Ordering::Relaxed) {
+                peak = peak.max(thread_count());
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            peak
+        });
+
+        let lines: Vec<String> = (0..n)
+            .map(|i| mux::request_line(&format!("concurrent stream {i}"), max_new, "lychee"))
+            .collect();
+        let t0 = std::time::Instant::now();
+        let stats =
+            mux::run_streams(&server.addr, &lines, std::time::Duration::from_secs(600)).unwrap();
+        let wall_s = t0.elapsed().as_secs_f64();
+        let rss_after = rss_kib();
+        sampling.store(false, Ordering::Relaxed);
+        let peak_threads = sampler.join().unwrap();
+
+        let done = stats.iter().filter(|s| s.outcome == "done").count();
+        let ttft: Vec<f64> = stats
+            .iter()
+            .filter_map(|s| s.ttft.map(|d| d.as_secs_f64() * 1e3))
+            .collect();
+        // client-observed TPOT: decode span over the non-first tokens
+        let tpot: Vec<f64> = stats
+            .iter()
+            .filter(|s| s.tokens > 1 && s.ttft.is_some())
+            .map(|s| {
+                let decode = s.total.as_secs_f64() - s.ttft.map(|d| d.as_secs_f64()).unwrap_or(0.0);
+                decode * 1e3 / (s.tokens - 1) as f64
+            })
+            .collect();
+        let worst_stall_ms = stats
+            .iter()
+            .map(|s| s.max_gap.as_secs_f64() * 1e3)
+            .fold(0.0f64, f64::max);
+        let (wakeups, completed) = {
+            let m = metrics.lock().unwrap();
+            (m.reactor_wakeups_total, m.completed)
+        };
+        server.stop();
+        handle.shutdown();
+        let _ = join.join();
+
+        let rss_delta_kib = rss_after.saturating_sub(rss_before);
+        println!(
+            "concurrency[{:<7}] {n} streams: {done} done in {wall_s:.2}s | TTFT p99 {:.1} ms | \
+             TPOT p99 {:.2} ms | stall {:.1} ms | peak threads {peak_threads} | RSS +{rss_delta_kib} KiB",
+            frontend.name(),
+            percentile(&ttft, 0.99),
+            percentile(&tpot, 0.99),
+            worst_stall_ms
+        );
+        format!(
+            "{{\"front\": \"{}\", \"streams\": {n}, \"done\": {done}, \"completed\": {completed}, \
+             \"wall_s\": {wall_s:.3}, \
+             \"ttft_ms\": {{\"p50\": {:.2}, \"p99\": {:.2}}}, \
+             \"tpot_ms\": {{\"p50\": {:.3}, \"p99\": {:.3}}}, \
+             \"worst_intertoken_stall_ms\": {:.2}, \
+             \"rss_kib_delta\": {rss_delta_kib}, \"rss_bytes_per_conn\": {:.0}, \
+             \"peak_threads\": {peak_threads}, \"reactor_wakeups_total\": {wakeups}}}",
+            frontend.name(),
+            percentile(&ttft, 0.50),
+            percentile(&ttft, 0.99),
+            percentile(&tpot, 0.50),
+            percentile(&tpot, 0.99),
+            worst_stall_ms,
+            rss_delta_kib as f64 * 1024.0 / n.max(1) as f64,
+        )
+    };
+
+    let mut rows = Vec::new();
+    let mut skipped = Vec::new();
+    for &size in sizes {
+        if size > cap {
+            // no silent caps: sizes the fd limit cannot fund are
+            // recorded as skipped, not quietly shrunk
+            println!("concurrency: skipping {size} streams (fd limit {limit} allows {cap})");
+            skipped.push(size.to_string());
+            continue;
+        }
+        rows.push(run_load(Frontend::Epoll, size));
+    }
+    let threads_row = if sizes[0] <= cap {
+        run_load(Frontend::Threads, sizes[0])
+    } else {
+        "null".to_string()
+    };
+    format!(
+        "{{\"max_new_tokens\": {max_new}, \"decode_us_per_step\": {decode_us_per_step}, \
+         \"nofile_limit\": {limit}, \"skipped_sizes\": [{}], \
+         \"reactor\": [{}], \"threads_front\": {}}}",
+        skipped.join(", "),
+        rows.join(",\n    "),
+        threads_row
+    )
+}
+
+#[cfg(not(unix))]
+fn concurrency_json_fragment() -> String {
+    "null".to_string()
 }
 
 /// The sharded-tier trajectory (EXPERIMENTS.md §Cluster): a session-

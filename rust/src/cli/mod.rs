@@ -213,15 +213,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if cfg.serving.shards > 1 {
         return cmd_serve_cluster(addr, cfg);
     }
-    let session_cap = cfg.serving.session_store_cap;
+    let serving = cfg.serving.clone();
     let (handle, metrics, join) = crate::coordinator::spawn(cfg)?;
-    let server = crate::server::Server::start_single(
+    let server = crate::server::Server::start_single_with(
         addr,
         handle.clone(),
         Some(std::sync::Arc::clone(&metrics)),
-        session_cap,
+        &serving,
     )?;
-    println!("lychee serving on {} (JSON-lines; Ctrl-C to stop)", server.addr);
+    let protocols = match serving.frontend {
+        crate::config::Frontend::Epoll => "JSON-lines + HTTP/SSE",
+        crate::config::Frontend::Threads => "JSON-lines",
+    };
+    println!(
+        "lychee serving on {} (front={}, {protocols}; Ctrl-C to stop)",
+        server.addr,
+        serving.frontend.name()
+    );
     // block forever, reporting metrics periodically
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
@@ -229,6 +237,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "requests={} completed={} rejected={} tokens={} chunks={} preempt={} depth={} \
              inflight={} cancel={} deadline={} drain={} faults={} panics={} \
+             conns={} defer={} wakeups={} wq_hw={} \
              kv[{}]={:.1}MiB shared={:.1}MiB free={:.1}MiB recycled={} \
              prefix={}hit/{}tok evict={} reps[{}] blocks={}scan/{}prune p50_tpot={:.1}ms",
             m.requests,
@@ -244,6 +253,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             m.drain_state,
             m.faults_injected_total,
             m.sequence_panics,
+            m.connections_open,
+            m.accepts_deferred,
+            m.reactor_wakeups_total,
+            m.write_queue_high_water,
             m.kv_precision,
             m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
             m.kv_bytes_shared as f64 / (1024.0 * 1024.0),
@@ -274,13 +287,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// `serve` with `serving.shards > 1`: routing front + N engine-worker
 /// shards, each with its own KV arena and radix cache.
 fn cmd_serve_cluster(addr: &str, cfg: Config) -> Result<()> {
-    let session_cap = cfg.serving.session_store_cap;
+    let serving = cfg.serving.clone();
     let shards = cfg.serving.shards;
     let cluster = crate::coordinator::cluster::spawn_cluster(cfg)?;
-    let server = crate::server::Server::start_cluster(addr, cluster.clone(), session_cap)?;
+    let server = crate::server::Server::start_cluster_with(addr, cluster.clone(), &serving)?;
     println!(
-        "lychee serving on {} ({} shards, JSON-lines; Ctrl-C to stop)",
-        server.addr, shards
+        "lychee serving on {} ({} shards, front={}, JSON-lines; Ctrl-C to stop)",
+        server.addr,
+        shards,
+        serving.frontend.name()
     );
     loop {
         std::thread::sleep(std::time::Duration::from_secs(10));
@@ -289,7 +304,8 @@ fn cmd_serve_cluster(addr: &str, cfg: Config) -> Result<()> {
         let r = cluster.router_snapshot();
         println!(
             "shards={alive}/{} routed={} failover={} shed_retry={} | requests={} completed={} \
-             tokens={} inflight={} sheds={} kv={:.1}MiB p50_tpot={:.1}ms",
+             tokens={} inflight={} sheds={} conns={} defer={} wakeups={} kv={:.1}MiB \
+             p50_tpot={:.1}ms",
             cluster.shard_count(),
             r.routed_total,
             r.failovers_total,
@@ -299,6 +315,9 @@ fn cmd_serve_cluster(addr: &str, cfg: Config) -> Result<()> {
             m.tokens_out,
             m.requests_in_flight,
             m.sheds,
+            m.connections_open,
+            m.accepts_deferred,
+            m.reactor_wakeups_total,
             m.kv_bytes_in_use as f64 / (1024.0 * 1024.0),
             m.tpot_us.quantile(0.5) / 1e3
         );

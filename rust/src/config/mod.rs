@@ -22,6 +22,44 @@ fn parse_backend(v: &Json) -> Result<ScoringBackend> {
         .ok_or_else(|| anyhow::anyhow!("bad scoring backend '{s}' (dense|blockmax)"))
 }
 
+/// Which connection-handling front the TCP server runs
+/// (`serving.frontend`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Frontend {
+    /// Legacy thread-per-connection front: one blocking OS thread per
+    /// client socket. The default — byte-identical on the wire to
+    /// pre-reactor behavior.
+    Threads,
+    /// Event-driven reactor front: one thread owns every client socket
+    /// in nonblocking mode (epoll on Linux, portable `poll(2)`
+    /// elsewhere), serving the line protocol and HTTP/SSE off the same
+    /// listener with queue-coupled backpressure.
+    Epoll,
+}
+
+impl Frontend {
+    pub fn parse(s: &str) -> Option<Frontend> {
+        match s {
+            "threads" => Some(Frontend::Threads),
+            "epoll" => Some(Frontend::Epoll),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Frontend::Threads => "threads",
+            Frontend::Epoll => "epoll",
+        }
+    }
+}
+
+/// Parse a frontend knob value (`"threads"` | `"epoll"`).
+fn parse_frontend(v: &Json) -> Result<Frontend> {
+    let s = v.as_str().context("expected frontend string (threads|epoll)")?;
+    Frontend::parse(s).ok_or_else(|| anyhow::anyhow!("bad frontend '{s}' (threads|epoll)"))
+}
+
 /// LycheeCluster algorithm hyper-parameters (paper §4 + Appendix A).
 #[derive(Clone, Debug, PartialEq)]
 pub struct LycheeConfig {
@@ -203,6 +241,17 @@ pub struct ServingConfig {
     /// is evicted past the cap (a later turn against it gets a
     /// retryable `session_unknown` error).
     pub session_store_cap: usize,
+    /// Connection-handling front: `threads` (default, legacy
+    /// thread-per-connection, byte-identical to pre-reactor behavior)
+    /// or `epoll` (one reactor thread for all sockets, HTTP/SSE on the
+    /// same listener, accept gating off coordinator queue depth).
+    pub frontend: Frontend,
+    /// Reactor backpressure: once a connection's buffered-but-unwritten
+    /// response bytes reach this high-water mark the reactor stops
+    /// draining that request's token events until the socket catches
+    /// up, so one slow reader cannot balloon server memory. 0 disables
+    /// the cap.
+    pub write_high_water_bytes: usize,
 }
 
 impl Default for ServingConfig {
@@ -222,6 +271,8 @@ impl Default for ServingConfig {
             shed_watermark: 0,
             heartbeat_timeout_ms: 0,
             session_store_cap: 1024,
+            frontend: Frontend::Threads,
+            write_high_water_bytes: 256 * 1024,
         }
     }
 }
@@ -260,6 +311,8 @@ impl ServingConfig {
             "shed_watermark" => self.shed_watermark = u()?,
             "heartbeat_timeout_ms" => self.heartbeat_timeout_ms = u()? as u64,
             "session_store_cap" => self.session_store_cap = u()?,
+            "frontend" => self.frontend = parse_frontend(v)?,
+            "write_high_water_bytes" => self.write_high_water_bytes = u()?,
             _ => bail!("unknown serving config key '{key}'"),
         }
         Ok(())
@@ -513,6 +566,34 @@ mod tests {
         let mut bad2 = ServingConfig::default();
         bad2.session_store_cap = 0;
         assert!(bad2.validate().is_err());
+    }
+
+    #[test]
+    fn frontend_knobs() {
+        let mut cfg = Config::new();
+        // legacy thread-per-connection front by default: existing
+        // deployments see no behavior change
+        assert_eq!(cfg.serving.frontend, Frontend::Threads);
+        assert_eq!(cfg.serving.write_high_water_bytes, 256 * 1024);
+        cfg.apply_override("serving.frontend=epoll").unwrap();
+        cfg.apply_override("serving.write_high_water_bytes=4096").unwrap();
+        assert_eq!(cfg.serving.frontend, Frontend::Epoll);
+        assert_eq!(cfg.serving.write_high_water_bytes, 4096);
+        cfg.validate().unwrap();
+        cfg.apply_override("serving.frontend=threads").unwrap();
+        assert_eq!(cfg.serving.frontend, Frontend::Threads);
+        // 0 disables the per-connection write cap, still valid
+        cfg.apply_override("serving.write_high_water_bytes=0").unwrap();
+        cfg.validate().unwrap();
+        // unknown frontend names are rejected at parse time
+        assert!(cfg.apply_override("serving.frontend=mio").is_err());
+        // JSON form
+        let mut cfg2 = Config::new();
+        let j = Json::parse(r#"{"serving": {"frontend": "epoll"}}"#).unwrap();
+        cfg2.apply_json(&j).unwrap();
+        assert_eq!(cfg2.serving.frontend, Frontend::Epoll);
+        assert_eq!(Frontend::Epoll.as_str(), "epoll");
+        assert_eq!(Frontend::Threads.as_str(), "threads");
     }
 
     #[test]

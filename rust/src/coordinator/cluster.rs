@@ -41,7 +41,7 @@
 //!   The client stream is seamless: no duplicated tokens, no dropped
 //!   tokens, exactly one terminal event.
 
-use super::{CancelKind, Event, Handle, Metrics, Request};
+use super::{CancelKind, Event, EventTx, Handle, Metrics, Notify, Request};
 use crate::config::Config;
 use crate::engine::{Engine, EngineCore};
 use crate::util::lock_recover;
@@ -171,6 +171,11 @@ struct RouterInner {
     /// race into a lost update, and remove their id on exit.
     cancelled: Mutex<HashSet<u64>>,
     counters: RouterCounters,
+    /// Router-level metrics cell for the serving *front* (connection
+    /// gauges, accept gating, reactor wakeups). Shards never touch these
+    /// fields, so the aggregate simply adds this cell on top of the
+    /// per-shard sums.
+    front_metrics: Arc<Mutex<Metrics>>,
 }
 
 /// The sharded serving tier: routing front + worker shards. The cluster
@@ -251,7 +256,7 @@ impl RouterInner {
 /// Per-request relay: owns the client's event stream for the request's
 /// whole life, across sheds and failovers. Exactly one terminal event
 /// reaches the client, whatever the shards do.
-fn relay(inner: Arc<RouterInner>, req: Request, client: Sender<Event>) {
+fn relay(inner: Arc<RouterInner>, req: Request, client: EventTx) {
     let hb_timeout_ms = inner.cfg.serving.heartbeat_timeout_ms;
     // Absolute deadline fixed once at the router: failover resubmissions
     // carry the *remaining* budget, never a restarted clock.
@@ -424,6 +429,7 @@ where
         ring: build_ring(shards.len()),
         shards,
         cancelled: Mutex::new(HashSet::new()),
+        front_metrics: Arc::new(Mutex::new(Metrics::default())),
         counters: RouterCounters {
             routed: AtomicU64::new(0),
             failovers: AtomicU64::new(0),
@@ -439,12 +445,41 @@ impl Cluster {
     /// same contract as [`Handle::submit`] — routing, shedding, and
     /// failover are invisible apart from latency.
     pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        self.submit_with_notify(req, None)
+    }
+
+    /// [`Cluster::submit`] with a wakeup hook fired after every event
+    /// delivered to the returned receiver (see [`Notify`]): the relay
+    /// thread still exists per request (it owns shed-retry and failover
+    /// state), but the server front no longer needs one of its own.
+    pub fn submit_with_notify(
+        &self,
+        req: Request,
+        notify: Option<Notify>,
+    ) -> Result<Receiver<Event>> {
         let (tx, rx) = std::sync::mpsc::channel();
+        let client = EventTx::new(tx, notify);
         let inner = Arc::clone(&self.inner);
         std::thread::Builder::new()
             .name("lychee-relay".into())
-            .spawn(move || relay(inner, req, tx))?;
+            .spawn(move || relay(inner, req, client))?;
         Ok(rx)
+    }
+
+    /// The router-level metrics cell the serving front records its
+    /// connection gauges into (see [`RouterInner::front_metrics`]).
+    pub fn front_metrics(&self) -> Arc<Mutex<Metrics>> {
+        Arc::clone(&self.inner.front_metrics)
+    }
+
+    /// Cluster-wide pending depth (queued + mid-prefill across shards):
+    /// the accept-gating signal for the serving front.
+    pub fn queue_depth(&self) -> u64 {
+        self.inner
+            .shards
+            .iter()
+            .map(|s| lock_recover(&s.metrics).queue_depth)
+            .sum()
     }
 
     /// Blocking convenience: run a request to completion (cluster analog
@@ -579,6 +614,13 @@ impl Cluster {
                 agg.rep_precision = m.rep_precision.clone();
             }
         }
+        // the serving-front gauges live in the router's own cell (shards
+        // never see a socket), so the aggregate adds them on top
+        let f = lock_recover(&self.inner.front_metrics);
+        agg.connections_open += f.connections_open;
+        agg.accepts_deferred += f.accepts_deferred;
+        agg.reactor_wakeups_total += f.reactor_wakeups_total;
+        agg.write_queue_high_water = agg.write_queue_high_water.max(f.write_queue_high_water);
         agg
     }
 }

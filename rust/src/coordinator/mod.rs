@@ -198,6 +198,22 @@ pub struct Metrics {
     /// queue was over `serving.shed_watermark` (cluster mode; always 0
     /// with shedding disabled).
     pub sheds: u64,
+    /// Gauge: client connections the serving front currently holds open
+    /// (both frontends; line-protocol and HTTP connections alike).
+    pub connections_open: u64,
+    /// Times the reactor paused `accept` because the coordinator queue
+    /// depth was at or over `serving.shed_watermark` (arriving
+    /// connections wait in the kernel accept backlog instead of piling
+    /// requests onto an already-over queue).
+    pub accepts_deferred: u64,
+    /// Times the reactor was woken by its eventfd/pipe to drain newly
+    /// arrived coordinator events (wakeups coalesce: one wakeup can
+    /// drain events for thousands of streams).
+    pub reactor_wakeups_total: u64,
+    /// High-water mark (bytes) of any single connection's response write
+    /// queue; event draining pauses for a connection whose queue is over
+    /// `serving.write_high_water_bytes` until the socket drains.
+    pub write_queue_high_water: u64,
 }
 
 impl Metrics {
@@ -217,7 +233,7 @@ impl Metrics {
 /// other at most once each, then run to completion in turn).
 struct QueuedReq {
     req: Request,
-    tx: Sender<Event>,
+    tx: EventTx,
     submitted: Instant,
     carried: usize,
     preempted: bool,
@@ -234,7 +250,7 @@ struct PrefillJob {
     /// The submitting [`Request::id`] — cancellation and deadline
     /// teardown key on this, not the internal sequence id.
     req_id: u64,
-    tx: Sender<Event>,
+    tx: EventTx,
     policy: String,
     max_new: usize,
     carried: usize,
@@ -259,7 +275,7 @@ struct Running {
     seq: Sequence,
     /// See [`PrefillJob::req_id`].
     req_id: u64,
-    tx: Sender<Event>,
+    tx: EventTx,
     policy: String,
     max_new: usize,
     carried: usize,
@@ -272,8 +288,43 @@ struct Running {
     reserved_bytes: usize,
 }
 
+/// Wakeup hook paired with a request's event channel: called after
+/// every event delivered to the receiver. An event-driven front (the
+/// epoll reactor) backs this with an eventfd so it can sleep in
+/// `epoll_wait` and still learn about new tokens without a relay thread
+/// per request; wakeups coalesce, so the hook must be cheap and
+/// idempotent.
+pub type Notify = Arc<dyn Fn() + Send + Sync>;
+
+/// A request's event sender plus its optional [`Notify`] hook. Blocking
+/// fronts pass no hook and get plain channel semantics, byte for byte.
+#[derive(Clone)]
+pub(crate) struct EventTx {
+    tx: Sender<Event>,
+    notify: Option<Notify>,
+}
+
+impl EventTx {
+    pub(crate) fn new(tx: Sender<Event>, notify: Option<Notify>) -> EventTx {
+        EventTx { tx, notify }
+    }
+
+    /// Send one event, then fire the wakeup hook (only on successful
+    /// delivery: a closed channel means the receiver is gone and there
+    /// is nobody left to wake).
+    pub(crate) fn send(&self, ev: Event) -> Result<(), std::sync::mpsc::SendError<Event>> {
+        let sent = self.tx.send(ev);
+        if sent.is_ok() {
+            if let Some(n) = &self.notify {
+                n();
+            }
+        }
+        sent
+    }
+}
+
 enum Msg {
-    Submit(Request, Sender<Event>),
+    Submit(Request, EventTx),
     /// Cancel the request with this [`Request::id`], in any state.
     Cancel(u64),
     /// Graceful drain: stop admission, finish in-flight work, exit.
@@ -291,9 +342,21 @@ pub struct Handle {
 impl Handle {
     /// Submit a request; events stream on the returned receiver.
     pub fn submit(&self, req: Request) -> Result<Receiver<Event>> {
+        self.submit_with_notify(req, None)
+    }
+
+    /// [`Handle::submit`] with a wakeup hook fired after every event
+    /// delivered to the returned receiver (see [`Notify`]). The epoll
+    /// server front uses this to bridge the channel into its reactor
+    /// without a per-request relay thread.
+    pub fn submit_with_notify(
+        &self,
+        req: Request,
+        notify: Option<Notify>,
+    ) -> Result<Receiver<Event>> {
         let (tx, rx) = channel();
         self.tx
-            .send(Msg::Submit(req, tx))
+            .send(Msg::Submit(req, EventTx::new(tx, notify)))
             .map_err(|_| anyhow::anyhow!("coordinator stopped"))?;
         Ok(rx)
     }
@@ -481,7 +544,7 @@ impl<E: EngineCore> Coordinator<E> {
         pending: &mut VecDeque<QueuedReq>,
         draining: bool,
         mut req: Request,
-        tx: Sender<Event>,
+        tx: EventTx,
     ) {
         let err = if draining {
             Some("rejected: server is draining".to_string())

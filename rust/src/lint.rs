@@ -49,7 +49,10 @@ const SCORING_MODULES: &[&str] = &["sparse", "index", "linalg", "attention"];
 /// Modules whose atomics carry refcount / byte accounting.
 const ACCOUNTING_MODULES: &[&str] = &["kvcache", "coordinator"];
 /// Modules whose exit paths must emit structured terminal outcomes.
-const TERMINAL_MODULES: &[&str] = &["coordinator"];
+/// `net` is the reactor serving front: its event loop owns every client
+/// socket, so a silent early exit would strand connections without a
+/// terminal line exactly like a scheduler exit would strand requests.
+const TERMINAL_MODULES: &[&str] = &["coordinator", "net"];
 
 /// One rule violation at a source location.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -821,6 +824,37 @@ pub fn tick(stop: bool) {
 }
 "##;
         assert!(rules_of("src/coordinator/mod.rs", allowed).is_empty());
+    }
+
+    #[test]
+    fn rules_cover_the_reactor_net_module() {
+        // the epoll front lives under `server/net/`: the request-path
+        // unwrap ban must reach it (server component), and the
+        // terminal-outcome rule must treat its event loop like the
+        // coordinator's (net component) — a bare `return;` there would
+        // strand live connections without a terminal line
+        let unwrap_bad = r##"
+pub fn token(v: &[u64]) -> u64 {
+    v.first().copied().unwrap()
+}
+"##;
+        assert_eq!(rules_of("src/server/net/reactor.rs", unwrap_bad), vec![RULE_UNWRAP]);
+        assert_eq!(rules_of("src/server/net/mod.rs", unwrap_bad), vec![RULE_UNWRAP]);
+        let return_bad = r##"
+pub fn pump(stop: bool) {
+    if stop {
+        return;
+    }
+}
+"##;
+        assert_eq!(
+            rules_of("src/server/net/reactor.rs", return_bad),
+            vec![RULE_TERMINAL_OUTCOME]
+        );
+        assert_eq!(rules_of("src/server/net/sys.rs", return_bad), vec![RULE_TERMINAL_OUTCOME]);
+        // the rest of `server/` keeps its existing scope: unwrap-banned
+        // but not terminal-checked
+        assert!(rules_of("src/server/mod.rs", return_bad).is_empty());
     }
 
     #[test]

@@ -1,0 +1,228 @@
+//! Minimal HTTP/1.1 surface for the reactor front: just enough parsing
+//! to serve `POST /generate` (SSE token streaming) and `GET /metrics`
+//! (scrape JSON) off the same listener as the line protocol, with no
+//! crates. Requests are sniffed from the connection's first byte — a
+//! JSON-lines client opens with `{`, an HTTP client with a method
+//! letter — so both protocols coexist on one port.
+//!
+//! Responses always carry `Connection: close`: generation streams have
+//! no known length (the body ends when the server closes after the
+//! terminal SSE event), and one-shot endpoints keep the same lifecycle
+//! for simplicity. Clients that want multiplexing use the line protocol.
+
+use crate::util::json::Json;
+
+/// One parsed HTTP request (start line + the headers we act on + body).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpReq {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+    /// Total bytes this request consumed from the connection's read
+    /// buffer (headers + body), so the caller can drain exactly one
+    /// request and leave any pipelined bytes in place.
+    pub consumed: usize,
+}
+
+/// Incremental parse result over a connection's read buffer.
+#[derive(Debug, PartialEq, Eq)]
+pub enum HttpParse {
+    /// Headers (or declared body) incomplete: keep reading.
+    NeedMore,
+    /// Malformed request: reply 400 and close.
+    Bad(String),
+    Req(HttpReq),
+}
+
+/// Upper bound on the header block; past this without a blank line the
+/// request is malformed (and an unauthenticated client cannot make the
+/// server buffer unboundedly).
+const MAX_HEADER_BYTES: usize = 16 * 1024;
+/// Upper bound on a declared request body (a generation prompt).
+const MAX_BODY_BYTES: usize = 4 * 1024 * 1024;
+
+/// Try to parse one HTTP/1.1 request from the front of `buf`.
+pub fn parse_http(buf: &[u8]) -> HttpParse {
+    let Some(header_end) = find_header_end(buf) else {
+        if buf.len() > MAX_HEADER_BYTES {
+            return HttpParse::Bad("header block too large".to_string());
+        }
+        return HttpParse::NeedMore;
+    };
+    let head = match std::str::from_utf8(&buf[..header_end.start]) {
+        Ok(h) => h,
+        Err(_) => return HttpParse::Bad("non-UTF-8 header block".to_string()),
+    };
+    let mut lines = head.lines();
+    let Some(start) = lines.next() else {
+        return HttpParse::Bad("empty request".to_string());
+    };
+    let mut parts = start.split_whitespace();
+    let (Some(method), Some(path), Some(version)) = (parts.next(), parts.next(), parts.next())
+    else {
+        return HttpParse::Bad(format!("malformed request line '{start}'"));
+    };
+    if !version.starts_with("HTTP/1.") {
+        return HttpParse::Bad(format!("unsupported version '{version}'"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        if name.trim().eq_ignore_ascii_case("content-length") {
+            match value.trim().parse::<usize>() {
+                Ok(n) if n <= MAX_BODY_BYTES => content_length = n,
+                Ok(_) => return HttpParse::Bad("body too large".to_string()),
+                Err(_) => return HttpParse::Bad("bad Content-Length".to_string()),
+            }
+        }
+    }
+    let body_start = header_end.end;
+    if buf.len() < body_start + content_length {
+        return HttpParse::NeedMore;
+    }
+    HttpParse::Req(HttpReq {
+        method: method.to_string(),
+        path: path.to_string(),
+        body: buf[body_start..body_start + content_length].to_vec(),
+        consumed: body_start + content_length,
+    })
+}
+
+/// Byte range of the header terminator (`\r\n\r\n`, or bare `\n\n` for
+/// hand-typed requests): `start` = end of headers, `end` = start of body.
+fn find_header_end(buf: &[u8]) -> Option<std::ops::Range<usize>> {
+    let crlf = buf.windows(4).position(|w| w == b"\r\n\r\n");
+    let lf = buf.windows(2).position(|w| w == b"\n\n");
+    match (crlf, lf) {
+        (Some(c), Some(l)) if l + 1 < c => Some(l..l + 2),
+        (Some(c), _) => Some(c..c + 4),
+        (None, Some(l)) => Some(l..l + 2),
+        (None, None) => None,
+    }
+}
+
+/// Full one-shot response (status line + headers + body), ready for the
+/// write queue.
+pub fn response(status: u16, reason: &str, content_type: &str, body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 128);
+    out.extend_from_slice(
+        format!(
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Content-Length: {}\r\nConnection: close\r\n\r\n",
+            body.len()
+        )
+        .as_bytes(),
+    );
+    out.extend_from_slice(body);
+    out
+}
+
+/// One-shot JSON response.
+pub fn json_response(status: u16, reason: &str, j: &Json) -> Vec<u8> {
+    let mut body = j.dump().into_bytes();
+    body.push(b'\n');
+    response(status, reason, "application/json", &body)
+}
+
+/// Response head for an SSE stream; the body is a sequence of
+/// [`sse_event`] frames and the stream ends when the connection closes.
+pub fn sse_headers() -> Vec<u8> {
+    b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+      Cache-Control: no-cache\r\nConnection: close\r\n\r\n"
+        .to_vec()
+}
+
+/// One SSE frame carrying a JSON payload.
+pub fn sse_event(j: &Json) -> Vec<u8> {
+    format!("data: {}\n\n", j.dump()).into_bytes()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /generate HTTP/1.1\r\nHost: x\r\nContent-Length: 5\r\n\r\nhello";
+        match parse_http(raw) {
+            HttpParse::Req(r) => {
+                assert_eq!(r.method, "POST");
+                assert_eq!(r.path, "/generate");
+                assert_eq!(r.body, b"hello");
+                assert_eq!(r.consumed, raw.len());
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_get_without_body_and_leaves_pipelined_bytes() {
+        let raw = b"GET /metrics HTTP/1.1\r\n\r\nGET /next";
+        match parse_http(raw) {
+            HttpParse::Req(r) => {
+                assert_eq!(r.method, "GET");
+                assert_eq!(r.path, "/metrics");
+                assert!(r.body.is_empty());
+                assert_eq!(&raw[r.consumed..], b"GET /next");
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn case_insensitive_content_length_and_bare_lf() {
+        let raw = b"POST /generate HTTP/1.0\ncontent-LENGTH: 2\n\nok";
+        match parse_http(raw) {
+            HttpParse::Req(r) => assert_eq!(r.body, b"ok"),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn incomplete_requests_ask_for_more() {
+        assert_eq!(parse_http(b"POST /gen"), HttpParse::NeedMore);
+        assert_eq!(
+            parse_http(b"POST /g HTTP/1.1\r\nContent-Length: 9\r\n\r\nshort"),
+            HttpParse::NeedMore
+        );
+    }
+
+    #[test]
+    fn malformed_requests_are_rejected() {
+        assert!(matches!(
+            parse_http(b"NOPE\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            parse_http(b"GET /x SPDY/3\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        assert!(matches!(
+            parse_http(b"POST /g HTTP/1.1\r\nContent-Length: zap\r\n\r\n"),
+            HttpParse::Bad(_)
+        ));
+        let huge = vec![b'a'; MAX_HEADER_BYTES + 2];
+        assert!(matches!(parse_http(&huge), HttpParse::Bad(_)));
+    }
+
+    #[test]
+    fn response_builders_frame_correctly() {
+        let r = response(404, "Not Found", "application/json", b"{}");
+        let s = String::from_utf8(r).unwrap();
+        assert!(s.starts_with("HTTP/1.1 404 Not Found\r\n"));
+        assert!(s.contains("Content-Length: 2\r\n"));
+        assert!(s.contains("Connection: close\r\n"));
+        assert!(s.ends_with("\r\n\r\n{}"));
+
+        let h = String::from_utf8(sse_headers()).unwrap();
+        assert!(h.contains("text/event-stream"));
+        assert!(h.ends_with("\r\n\r\n"));
+
+        let ev = sse_event(&Json::obj(vec![("token", Json::str("a"))]));
+        let ev = String::from_utf8(ev).unwrap();
+        assert!(ev.starts_with("data: {"));
+        assert!(ev.ends_with("}\n\n"));
+    }
+}

@@ -41,11 +41,18 @@
 //! client raced another turn). Anonymous requests (no `session_id`)
 //! still benefit from content-based radix matching.
 //!
-//! Thread-per-connection (serving CPU-bound decode, connection counts
-//! are small); the coordinator handle is cloneable and thread-safe.
+//! Two connection fronts drive this protocol (`serving.frontend`): the
+//! legacy thread-per-connection loop (`threads`, the default —
+//! byte-identical wire behavior to prior releases) and the event-driven
+//! epoll reactor (`epoll`, see [`net::reactor`]) that owns every client
+//! socket on one thread, speaks HTTP/1.1 + SSE alongside the line
+//! protocol on the same listener, and couples accept/write backpressure
+//! to the coordinator queue depth. Both fronts build replies from the
+//! same JSON helpers below, so the line protocol is identical either
+//! way; the coordinator handle is cloneable and thread-safe.
 
 use crate::coordinator::cluster::Cluster;
-use crate::coordinator::{Event, Handle, Metrics, Request};
+use crate::coordinator::{CancelKind, Event, FinishStats, Handle, Metrics, Notify, Request};
 use crate::util::json::Json;
 use crate::util::lock_recover;
 use anyhow::{Context, Result};
@@ -53,19 +60,40 @@ use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::Receiver;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
 use std::sync::{Arc, Mutex};
+
+mod http;
+#[cfg(unix)]
+pub mod mux;
+#[cfg(unix)]
+pub mod net;
+mod stream;
+
+use stream::Utf8Stream;
 
 /// What the connection handler needs from the serving tier, so the same
 /// protocol loop runs over a single coordinator or the sharded cluster
 /// router: submit/cancel/drain semantics are identical, only the metrics
 /// scrape shape differs (flat vs per-shard + aggregate).
-trait Gateway: Send + Sync {
-    fn submit(&self, req: Request) -> Result<Receiver<Event>>;
+pub(crate) trait Gateway: Send + Sync {
+    /// Submit with an optional per-event wakeup hook: an event-loop
+    /// front passes `Some(waker)` so token arrival interrupts its poll
+    /// wait; blocking fronts pass `None` and get plain channel
+    /// semantics, byte for byte.
+    fn submit_with_notify(&self, req: Request, notify: Option<Notify>)
+        -> Result<Receiver<Event>>;
     fn cancel(&self, request_id: u64);
     fn drain(&self);
     /// `None` = metrics not enabled on this server.
     fn metrics_scrape(&self) -> Option<Json>;
+    /// Current coordinator pending depth (summed across shards), for
+    /// queue-coupled accept gating in the reactor front.
+    fn queue_depth(&self) -> u64;
+    /// The [`Metrics`] cell where the serving front publishes its own
+    /// gauges (`connections_open`, `accepts_deferred`, ...); `None` when
+    /// metrics are disabled.
+    fn front_cell(&self) -> Option<Arc<Mutex<Metrics>>>;
 }
 
 /// Single-coordinator tier: the pre-cluster behavior, byte for byte.
@@ -75,8 +103,12 @@ struct SingleGateway {
 }
 
 impl Gateway for SingleGateway {
-    fn submit(&self, req: Request) -> Result<Receiver<Event>> {
-        self.handle.submit(req)
+    fn submit_with_notify(
+        &self,
+        req: Request,
+        notify: Option<Notify>,
+    ) -> Result<Receiver<Event>> {
+        self.handle.submit_with_notify(req, notify)
     }
     fn cancel(&self, request_id: u64) {
         self.handle.cancel(request_id);
@@ -87,11 +119,21 @@ impl Gateway for SingleGateway {
     fn metrics_scrape(&self) -> Option<Json> {
         self.metrics.as_ref().map(|m| metrics_json(&lock_recover(m)))
     }
+    fn queue_depth(&self) -> u64 {
+        self.metrics.as_ref().map(|m| lock_recover(m).queue_depth).unwrap_or(0)
+    }
+    fn front_cell(&self) -> Option<Arc<Mutex<Metrics>>> {
+        self.metrics.clone()
+    }
 }
 
 impl Gateway for Cluster {
-    fn submit(&self, req: Request) -> Result<Receiver<Event>> {
-        Cluster::submit(self, req)
+    fn submit_with_notify(
+        &self,
+        req: Request,
+        notify: Option<Notify>,
+    ) -> Result<Receiver<Event>> {
+        Cluster::submit_with_notify(self, req, notify)
     }
     fn cancel(&self, request_id: u64) {
         Cluster::cancel(self, request_id);
@@ -103,6 +145,12 @@ impl Gateway for Cluster {
     }
     fn metrics_scrape(&self) -> Option<Json> {
         Some(cluster_metrics_json(self))
+    }
+    fn queue_depth(&self) -> u64 {
+        Cluster::queue_depth(self)
+    }
+    fn front_cell(&self) -> Option<Arc<Mutex<Metrics>>> {
+        Some(self.front_metrics())
     }
 }
 
@@ -122,14 +170,14 @@ struct SessionState {
 /// can always be resumed as a fresh one — the first turn of a session
 /// never carries `parent` — and the radix cache still content-matches the
 /// resent history.
-struct SessionStore {
+pub(crate) struct SessionStore {
     map: HashMap<String, SessionState>,
     tick: u64,
     cap: usize,
 }
 
 impl SessionStore {
-    fn new(cap: usize) -> SessionStore {
+    pub(crate) fn new(cap: usize) -> SessionStore {
         // a zero cap would evict every session the moment it is recorded,
         // turning every second turn into a `session_unknown` error;
         // config validation rejects it, this is belt and braces
@@ -160,7 +208,7 @@ impl SessionStore {
     }
 }
 
-type Sessions = Arc<Mutex<SessionStore>>;
+pub(crate) type Sessions = Arc<Mutex<SessionStore>>;
 
 /// A running TCP server; dropping stops accepting (in-flight requests
 /// finish on the coordinator).
@@ -174,6 +222,43 @@ pub struct Server {
 /// config through ([`Server::start`]); mirrors the
 /// `serving.session_store_cap` default.
 const DEFAULT_SESSION_CAP: usize = 1024;
+
+/// Connection-front selection and backpressure knobs, resolved from
+/// `serving.*` config (`frontend`, `session_store_cap`,
+/// `write_high_water_bytes`, `shed_watermark`).
+#[derive(Clone, Copy)]
+pub struct FrontOptions {
+    pub frontend: crate::config::Frontend,
+    pub session_cap: usize,
+    /// Per-connection write-queue high-water mark in bytes (reactor
+    /// front): past this the reactor stops pulling coordinator events
+    /// for the connection until the socket drains. 0 = unbounded.
+    pub write_high_water: usize,
+    /// Coordinator queue depth at which the reactor pauses `accept`
+    /// (mirrors `serving.shed_watermark`; 0 = never pause).
+    pub shed_watermark: usize,
+}
+
+impl FrontOptions {
+    pub fn from_serving(s: &crate::config::ServingConfig) -> FrontOptions {
+        FrontOptions {
+            frontend: s.frontend,
+            session_cap: s.session_store_cap,
+            write_high_water: s.write_high_water_bytes,
+            shed_watermark: s.shed_watermark,
+        }
+    }
+
+    /// The legacy front with default knobs (pre-`frontend` callers).
+    fn threads(session_cap: usize) -> FrontOptions {
+        FrontOptions {
+            frontend: crate::config::Frontend::Threads,
+            session_cap,
+            write_high_water: 0,
+            shed_watermark: 0,
+        }
+    }
+}
 
 impl Server {
     /// Bind and start serving on `addr` (use port 0 for an OS-assigned
@@ -197,7 +282,27 @@ impl Server {
         metrics: Option<Arc<Mutex<Metrics>>>,
         session_cap: usize,
     ) -> Result<Server> {
-        Self::start_gateway(addr, Arc::new(SingleGateway { handle, metrics }), session_cap)
+        Self::start_gateway(
+            addr,
+            Arc::new(SingleGateway { handle, metrics }),
+            FrontOptions::threads(session_cap),
+        )
+    }
+
+    /// [`Server::start_single`] with the connection front selected by
+    /// `serving.frontend` (`threads` | `epoll`) and the reactor's
+    /// backpressure knobs plumbed through.
+    pub fn start_single_with(
+        addr: &str,
+        handle: Handle,
+        metrics: Option<Arc<Mutex<Metrics>>>,
+        serving: &crate::config::ServingConfig,
+    ) -> Result<Server> {
+        Self::start_gateway(
+            addr,
+            Arc::new(SingleGateway { handle, metrics }),
+            FrontOptions::from_serving(serving),
+        )
     }
 
     /// Serve over a sharded [`Cluster`]: same wire protocol, but submit
@@ -205,21 +310,51 @@ impl Server {
     /// out to every shard, and `{"metrics": true}` reports per-shard and
     /// aggregated gauges plus the router counters.
     pub fn start_cluster(addr: &str, cluster: Cluster, session_cap: usize) -> Result<Server> {
-        Self::start_gateway(addr, Arc::new(cluster), session_cap)
+        Self::start_gateway(addr, Arc::new(cluster), FrontOptions::threads(session_cap))
+    }
+
+    /// [`Server::start_cluster`] with the front selected by
+    /// `serving.frontend`.
+    pub fn start_cluster_with(
+        addr: &str,
+        cluster: Cluster,
+        serving: &crate::config::ServingConfig,
+    ) -> Result<Server> {
+        Self::start_gateway(addr, Arc::new(cluster), FrontOptions::from_serving(serving))
     }
 
     fn start_gateway(
         addr: &str,
         gateway: Arc<dyn Gateway>,
-        session_cap: usize,
+        opts: FrontOptions,
     ) -> Result<Server> {
         let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
         let local = listener.local_addr()?;
         listener.set_nonblocking(true)?;
         let stop = Arc::new(AtomicBool::new(false));
+        // the epoll front: one reactor thread owns every client socket
+        // (non-unix builds have no epoll/poll bindings and fall back to
+        // the threads front)
+        #[cfg(unix)]
+        if opts.frontend == crate::config::Frontend::Epoll {
+            let stop2 = Arc::clone(&stop);
+            let ropts = net::reactor::ReactorOptions {
+                session_cap: opts.session_cap,
+                write_high_water: opts.write_high_water,
+                shed_watermark: opts.shed_watermark,
+            };
+            let accept_thread = std::thread::Builder::new()
+                .name("lychee-reactor".into())
+                .spawn(move || {
+                    let _ = net::reactor::run(listener, gateway, stop2, ropts);
+                })?;
+            return Ok(Server { addr: local, stop, accept_thread: Some(accept_thread) });
+        }
+        // the threads front: legacy accept loop, byte-identical wire
+        // behavior to prior releases
         let stop2 = Arc::clone(&stop);
         let next_id = Arc::new(AtomicU64::new(1));
-        let sessions: Sessions = Arc::new(Mutex::new(SessionStore::new(session_cap)));
+        let sessions: Sessions = Arc::new(Mutex::new(SessionStore::new(opts.session_cap)));
         let accept_thread = std::thread::Builder::new()
             .name("lychee-accept".into())
             .spawn(move || {
@@ -230,6 +365,7 @@ impl Server {
                             let ids = Arc::clone(&next_id);
                             let s = Arc::clone(&sessions);
                             std::thread::spawn(move || {
+                                let _gauge = ConnGauge::new(g.front_cell());
                                 let _ = handle_conn(stream, g, &ids, s);
                             });
                         }
@@ -434,6 +570,10 @@ fn metrics_fields(m: &Metrics) -> Vec<(&'static str, Json)> {
         ("faults_injected_total", Json::num(m.faults_injected_total as f64)),
         ("drain_state", Json::num(m.drain_state as f64)),
         ("sheds", Json::num(m.sheds as f64)),
+        ("connections_open", Json::num(m.connections_open as f64)),
+        ("accepts_deferred", Json::num(m.accepts_deferred as f64)),
+        ("reactor_wakeups_total", Json::num(m.reactor_wakeups_total as f64)),
+        ("write_queue_high_water", Json::num(m.write_queue_high_water as f64)),
         ("ttft_p50_us", Json::num(m.ttft_us.quantile(0.5))),
         ("ttft_p99_us", Json::num(m.ttft_us.quantile(0.99))),
         ("ttft_mean_us", Json::num(m.ttft_us.mean())),
@@ -441,6 +581,192 @@ fn metrics_fields(m: &Metrics) -> Vec<(&'static str, Json)> {
         ("tpot_p99_us", Json::num(m.tpot_us.quantile(0.99))),
         ("tpot_mean_us", Json::num(m.tpot_us.mean())),
     ]
+}
+
+// ---------------------------------------------------------------------
+// Shared protocol pieces: both fronts (threads + reactor) build every
+// reply from these, so the wire format cannot drift between them.
+// ---------------------------------------------------------------------
+
+/// `{"error": msg}`.
+pub(crate) fn err_json(msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg))])
+}
+
+/// `{"error": msg, "code": code}` — structured error with a
+/// machine-readable `code` (the session protocol needs clients to tell
+/// a retryable condition from a protocol bug without string-matching
+/// the message).
+pub(crate) fn err_code_json(code: &str, msg: &str) -> Json {
+    Json::obj(vec![("error", Json::str(msg)), ("code", Json::str(code))])
+}
+
+/// One streamed token delta.
+pub(crate) fn token_json(delta: &str) -> Json {
+    Json::obj(vec![("token", Json::str(delta))])
+}
+
+/// The terminal `done` line.
+pub(crate) fn done_json(request_id: u64, stats: &FinishStats) -> Json {
+    Json::obj(vec![
+        ("done", Json::Bool(true)),
+        ("request_id", Json::num(request_id as f64)),
+        ("tokens", Json::num(stats.tokens as f64)),
+        ("ttft_ms", Json::num(stats.ttft_ms)),
+        ("tpot_ms", Json::num(stats.tpot_ms)),
+        ("e2e_ms", Json::num(stats.e2e_ms)),
+    ])
+}
+
+/// The terminal `cancelled` line (explicit cancel or deadline).
+pub(crate) fn cancelled_json(request_id: u64, kind: CancelKind) -> Json {
+    Json::obj(vec![
+        ("cancelled", Json::Bool(true)),
+        ("request_id", Json::num(request_id as f64)),
+        ("reason", Json::str(kind.as_str())),
+    ])
+}
+
+/// Ack for `{"cancel": id}`.
+pub(crate) fn cancel_ack_json(id: f64) -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("cancel", Json::num(id))])
+}
+
+/// Ack for `{"drain": true}`.
+pub(crate) fn drain_ack_json() -> Json {
+    Json::obj(vec![("ok", Json::Bool(true)), ("drain", Json::Bool(true))])
+}
+
+/// Shed reply text (single tier with a watermark configured; the
+/// cluster router absorbs Shed and retries internally).
+pub(crate) const SHED_MSG: &str = "request shed: queue over watermark, retry later";
+
+/// Admin verbs a protocol line can carry instead of a generation
+/// request, in the order the threads front always checked them.
+pub(crate) enum Admin {
+    Cancel(u64),
+    /// `cancel` present but not a valid request id.
+    BadCancel,
+    Drain,
+    Metrics,
+    /// Not an admin line: parse as a generation request.
+    None,
+}
+
+pub(crate) fn classify_admin(j: &Json) -> Admin {
+    match j.get("cancel") {
+        Json::Null => {}
+        v => {
+            return match v.as_f64().filter(|n| n.fract() == 0.0 && *n >= 0.0) {
+                Some(n) => Admin::Cancel(n as u64),
+                None => Admin::BadCancel,
+            }
+        }
+    }
+    if j.get("drain").as_bool() == Some(true) {
+        return Admin::Drain;
+    }
+    if j.get("metrics").as_bool() == Some(true) {
+        return Admin::Metrics;
+    }
+    Admin::None
+}
+
+/// Session chaining: the engine-visible prompt (accumulated history +
+/// this turn, so the radix cache reuses the sealed prefix), or a
+/// structured `(code, message)` protocol error. A `parent` that does
+/// not match the session head is a real protocol bug (the client raced
+/// another turn, NOT retryable as-is); a `parent` against an unknown
+/// session (never seen, or LRU-evicted) is retryable by resending the
+/// history as a fresh first turn.
+pub(crate) fn resolve_session(
+    sessions: &Sessions,
+    wire: &WireRequest,
+) -> std::result::Result<Vec<u8>, (&'static str, String)> {
+    let Some(sid) = &wire.session_id else {
+        return Ok(wire.prompt.clone());
+    };
+    let state = lock_recover(sessions).touch(sid);
+    match state {
+        Some((head, text)) => {
+            if let Some(parent) = wire.parent {
+                if parent != head {
+                    return Err((
+                        "parent_mismatch",
+                        format!("parent {parent} does not match session '{sid}' head {head}"),
+                    ));
+                }
+            }
+            let mut p = text;
+            p.extend_from_slice(&wire.prompt);
+            Ok(p)
+        }
+        None => {
+            if wire.parent.is_some() {
+                return Err((
+                    "session_unknown",
+                    format!("'parent' given but session '{sid}' has no prior turn"),
+                ));
+            }
+            Ok(wire.prompt.clone())
+        }
+    }
+}
+
+/// Record a completed session turn: the next turn's prefix = this
+/// turn's full prompt + reply.
+pub(crate) fn record_turn(
+    sessions: &Sessions,
+    sid: &str,
+    request_id: u64,
+    full_prompt: &[u8],
+    generated: &[u8],
+) {
+    let mut text = full_prompt.to_vec();
+    text.extend_from_slice(generated);
+    lock_recover(sessions).update(sid, request_id, text);
+}
+
+/// RAII `connections_open` gauge: one per live connection on the
+/// threads front, decremented on every exit path.
+struct ConnGauge(Option<Arc<Mutex<Metrics>>>);
+
+impl ConnGauge {
+    fn new(cell: Option<Arc<Mutex<Metrics>>>) -> ConnGauge {
+        if let Some(m) = &cell {
+            lock_recover(m).connections_open += 1;
+        }
+        ConnGauge(cell)
+    }
+}
+
+impl Drop for ConnGauge {
+    fn drop(&mut self) {
+        if let Some(m) = &self.0 {
+            let mut g = lock_recover(m);
+            g.connections_open = g.connections_open.saturating_sub(1);
+        }
+    }
+}
+
+/// Nonblocking probe for a half-closed peer: a client that went away
+/// mid-stream reads as EOF (`Ok(0)`) long before writes start failing
+/// (TCP buffers absorb a window's worth of tokens first). Pipelined
+/// request bytes read as `Ok(n)` (alive); `WouldBlock` means quiet but
+/// connected. Probe failures count as gone: freeing the sequence is
+/// the safe direction.
+fn peer_gone(stream: &TcpStream) -> bool {
+    let mut probe = [0u8; 1];
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let gone = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    stream.set_nonblocking(false).is_err() || gone
 }
 
 fn handle_conn(
@@ -458,16 +784,7 @@ fn handle_conn(
             continue;
         }
         let reply_err = |w: &mut TcpStream, msg: &str| -> Result<()> {
-            let j = Json::obj(vec![("error", Json::str(msg))]);
-            writeln!(w, "{}", j.dump())?;
-            Ok(())
-        };
-        // structured error with a machine-readable `code` (the session
-        // protocol needs clients to tell a retryable condition from a
-        // protocol bug without string-matching the message)
-        let reply_err_code = |w: &mut TcpStream, code: &str, msg: &str| -> Result<()> {
-            let j = Json::obj(vec![("error", Json::str(msg)), ("code", Json::str(code))]);
-            writeln!(w, "{}", j.dump())?;
+            writeln!(w, "{}", err_json(msg).dump())?;
             Ok(())
         };
         let parsed = match Json::parse(&line) {
@@ -477,33 +794,31 @@ fn handle_conn(
                 continue;
             }
         };
-        match parsed.get("cancel") {
-            Json::Null => {}
-            v => {
-                let Some(n) = v.as_f64().filter(|n| n.fract() == 0.0 && *n >= 0.0) else {
-                    reply_err(&mut writer, "'cancel' must be a request id")?;
-                    continue;
-                };
+        match classify_admin(&parsed) {
+            Admin::Cancel(id) => {
                 // best-effort: the ack means the cancel was delivered to
                 // the scheduler, not that the request was found
-                gateway.cancel(n as u64);
-                let j = Json::obj(vec![("ok", Json::Bool(true)), ("cancel", Json::num(n))]);
-                writeln!(writer, "{}", j.dump())?;
+                gateway.cancel(id);
+                writeln!(writer, "{}", cancel_ack_json(id as f64).dump())?;
                 continue;
             }
-        }
-        if parsed.get("drain").as_bool() == Some(true) {
-            gateway.drain();
-            let j = Json::obj(vec![("ok", Json::Bool(true)), ("drain", Json::Bool(true))]);
-            writeln!(writer, "{}", j.dump())?;
-            continue;
-        }
-        if parsed.get("metrics").as_bool() == Some(true) {
-            match gateway.metrics_scrape() {
-                Some(j) => writeln!(writer, "{}", j.dump())?,
-                None => reply_err(&mut writer, "metrics not enabled on this server")?,
+            Admin::BadCancel => {
+                reply_err(&mut writer, "'cancel' must be a request id")?;
+                continue;
             }
-            continue;
+            Admin::Drain => {
+                gateway.drain();
+                writeln!(writer, "{}", drain_ack_json().dump())?;
+                continue;
+            }
+            Admin::Metrics => {
+                match gateway.metrics_scrape() {
+                    Some(j) => writeln!(writer, "{}", j.dump())?,
+                    None => reply_err(&mut writer, "metrics not enabled on this server")?,
+                }
+                continue;
+            }
+            Admin::None => {}
         }
         let wire = match parse_request(&parsed) {
             Ok(w) => w,
@@ -512,49 +827,11 @@ fn handle_conn(
                 continue;
             }
         };
-        // session chaining: prepend the session's accumulated text so
-        // the engine sees the full conversation (whose sealed prefix the
-        // radix cache reuses); validate `parent` against the session head
-        let full_prompt = match &wire.session_id {
-            None => wire.prompt.clone(),
-            Some(sid) => {
-                let state = lock_recover(&sessions).touch(sid);
-                match state {
-                    Some((head, text)) => {
-                        if let Some(parent) = wire.parent {
-                            if parent != head {
-                                // a real protocol bug (the client raced
-                                // another turn): NOT retryable as-is
-                                reply_err_code(
-                                    &mut writer,
-                                    "parent_mismatch",
-                                    &format!(
-                                        "parent {parent} does not match session '{sid}' head {head}"
-                                    ),
-                                )?;
-                                continue;
-                            }
-                        }
-                        let mut p = text;
-                        p.extend_from_slice(&wire.prompt);
-                        p
-                    }
-                    None => {
-                        if wire.parent.is_some() {
-                            // unknown session: never seen, or evicted by
-                            // the LRU bound (`serving.session_store_cap`).
-                            // Retryable — resend the history as a fresh
-                            // first turn (no `parent`)
-                            reply_err_code(
-                                &mut writer,
-                                "session_unknown",
-                                &format!("'parent' given but session '{sid}' has no prior turn"),
-                            )?;
-                            continue;
-                        }
-                        wire.prompt.clone()
-                    }
-                }
+        let full_prompt = match resolve_session(&sessions, &wire) {
+            Ok(p) => p,
+            Err((code, msg)) => {
+                writeln!(writer, "{}", err_code_json(code, &msg).dump())?;
+                continue;
             }
         };
         let req_id = ids.fetch_add(1, Ordering::Relaxed);
@@ -566,7 +843,7 @@ fn handle_conn(
             deadline_ms: wire.deadline_ms,
             carried_tokens: 0,
         };
-        let rx = match gateway.submit(req) {
+        let rx = match gateway.submit_with_notify(req, None) {
             Ok(rx) => rx,
             Err(e) => {
                 reply_err(&mut writer, &e.to_string())?;
@@ -574,70 +851,76 @@ fn handle_conn(
             }
         };
         let mut generated: Vec<u8> = Vec::new();
-        for ev in rx {
+        let mut utf8 = Utf8Stream::new();
+        'stream: loop {
+            let ev = match rx.recv_timeout(std::time::Duration::from_millis(50)) {
+                Ok(ev) => ev,
+                Err(RecvTimeoutError::Timeout) => {
+                    // quiet stream (e.g. a long prefill, no tokens yet):
+                    // poll the socket for read-EOF so a vanished client
+                    // frees its pages instead of us decoding to a dead
+                    // socket until a write finally fails
+                    if peer_gone(&writer) {
+                        gateway.cancel(req_id);
+                        return Ok(());
+                    }
+                    continue;
+                }
+                Err(RecvTimeoutError::Disconnected) => break 'stream,
+            };
             match ev {
                 Event::Token(t) => {
                     generated.push(t);
-                    let s = String::from_utf8_lossy(&[t]).into_owned();
-                    let j = Json::obj(vec![("token", Json::str(&s))]);
-                    // a failed stream write means the client is gone:
-                    // cancel coordinator-side so the sequence stops
-                    // burning KV pages and decode steps (TCP may only
-                    // surface the disconnect after a buffer's worth of
-                    // writes; the cancel is still exact once it does)
-                    if writeln!(writer, "{}", j.dump()).is_err() {
+                    // UTF-8-safe deltas: hold partial multibyte chars
+                    // until they close (ASCII passes through per byte)
+                    let Some(delta) = utf8.push(t) else { continue };
+                    // check for a half-closed peer between token writes:
+                    // writes land in socket buffers long after the
+                    // client is gone, but read-EOF shows up immediately,
+                    // and the cancel stops the sequence burning KV pages
+                    // and decode steps
+                    if peer_gone(&writer)
+                        || writeln!(writer, "{}", token_json(&delta).dump()).is_err()
+                    {
                         gateway.cancel(req_id);
                         return Ok(());
                     }
                 }
                 Event::Done(stats) => {
-                    let j = Json::obj(vec![
-                        ("done", Json::Bool(true)),
-                        ("request_id", Json::num(req_id as f64)),
-                        ("tokens", Json::num(stats.tokens as f64)),
-                        ("ttft_ms", Json::num(stats.ttft_ms)),
-                        ("tpot_ms", Json::num(stats.tpot_ms)),
-                        ("e2e_ms", Json::num(stats.e2e_ms)),
-                    ]);
+                    // flush a truncated multibyte tail (lossy) before the
+                    // terminal so the client's text is complete
+                    if let Some(tail) = utf8.flush() {
+                        if writeln!(writer, "{}", token_json(&tail).dump()).is_err() {
+                            return Ok(());
+                        }
+                    }
                     // write the done line *before* recording the turn:
                     // a turn the client never received must not become
                     // the session head (the client will retry it, and a
                     // phantom head would reject the retry's `parent`)
-                    if writeln!(writer, "{}", j.dump()).is_err() {
+                    if writeln!(writer, "{}", done_json(req_id, &stats).dump()).is_err() {
                         return Ok(());
                     }
                     if let Some(sid) = &wire.session_id {
-                        // next turn's prefix = this turn's prompt + reply
-                        let mut text = full_prompt.clone();
-                        text.extend_from_slice(&generated);
-                        lock_recover(&sessions).update(sid, req_id, text);
+                        record_turn(&sessions, sid, req_id, &full_prompt, &generated);
                     }
-                    break;
+                    break 'stream;
                 }
                 Event::Cancelled(kind) => {
                     // no session update: a cancelled turn has no reply
-                    let j = Json::obj(vec![
-                        ("cancelled", Json::Bool(true)),
-                        ("request_id", Json::num(req_id as f64)),
-                        ("reason", Json::str(kind.as_str())),
-                    ]);
-                    writeln!(writer, "{}", j.dump())?;
-                    break;
+                    writeln!(writer, "{}", cancelled_json(req_id, kind).dump())?;
+                    break 'stream;
                 }
                 Event::Error(e) => {
                     reply_err(&mut writer, &e)?;
-                    break;
+                    break 'stream;
                 }
                 Event::Shed => {
                     // only reachable on a direct single-coordinator tier
                     // with a shed watermark configured: the cluster
                     // router absorbs Shed and retries internally
-                    reply_err_code(
-                        &mut writer,
-                        "shed",
-                        "request shed: queue over watermark, retry later",
-                    )?;
-                    break;
+                    writeln!(writer, "{}", err_code_json("shed", SHED_MSG).dump())?;
+                    break 'stream;
                 }
             }
         }
@@ -875,6 +1158,13 @@ mod tests {
         assert_eq!(m.get("sequence_panics").as_usize(), Some(0));
         assert_eq!(m.get("faults_injected_total").as_usize(), Some(0));
         assert_eq!(m.get("drain_state").as_usize(), Some(0));
+        // serving-front gauges ride the same scrape; on the threads
+        // front the scraping connection itself is the one open conn and
+        // no reactor ever runs
+        assert_eq!(m.get("connections_open").as_usize(), Some(1));
+        assert_eq!(m.get("accepts_deferred").as_usize(), Some(0));
+        assert_eq!(m.get("reactor_wakeups_total").as_usize(), Some(0));
+        assert_eq!(m.get("write_queue_high_water").as_usize(), Some(0));
 
         // a server started without metrics answers the scrape with an error
         let server2 = Server::start("127.0.0.1:0", handle.clone(), None).unwrap();
@@ -1111,6 +1401,61 @@ mod tests {
         let shared = m.get("kv_bytes_shared").as_usize().unwrap_or(0);
         assert_eq!(in_use, shared, "{m:?}");
         server.stop();
+    }
+
+    /// Satellite pin: the legacy threads front must notice a mid-stream
+    /// client disconnect via read-EOF polling (not only via failed
+    /// writes, which TCP buffering defers for a window's worth of
+    /// tokens), cancel coordinator-side, and return every private KV
+    /// page to the pool.
+    #[test]
+    fn threads_frontend_disconnect_cancels_and_frees_pages() {
+        let mut cfg = crate::config::Config::new();
+        cfg.serving.prefill_chunk_tokens = 32;
+        let engine_cfg = cfg.clone();
+        let (handle, metrics, join) = crate::coordinator::spawn_with(cfg, move || {
+            Ok(crate::engine::sim::SimEngine::new(
+                engine_cfg,
+                crate::engine::sim::SimConfig {
+                    // slow decode: the stream is alive long enough for
+                    // the disconnect to land mid-generation
+                    decode_us_per_step: 2000,
+                    ..crate::engine::sim::SimConfig::default()
+                },
+            ))
+        })
+        .unwrap();
+        let server =
+            Server::start_single("127.0.0.1:0", handle.clone(), Some(metrics.clone()), 64)
+                .unwrap();
+
+        // start a long stream, read a few bytes, vanish
+        {
+            use std::io::Read;
+            let mut stream = TcpStream::connect(server.addr).unwrap();
+            writeln!(stream, r#"{{"prompt": "disconnect me", "max_new_tokens": 500}}"#).unwrap();
+            let mut first = [0u8; 8];
+            stream.read_exact(&mut first).unwrap();
+        } // dropped: the server sees read-EOF between token writes
+
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(10);
+        loop {
+            let (cancels, in_use, shared) = {
+                let m = lock_recover(&metrics);
+                (m.cancellations, m.kv_bytes_in_use, m.kv_bytes_shared)
+            };
+            if cancels == 1 && in_use == shared {
+                break;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "disconnect never cancelled: cancels={cancels} in_use={in_use} shared={shared}"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        server.stop();
+        handle.shutdown();
+        join.join().unwrap();
     }
 
     #[test]

@@ -1,0 +1,202 @@
+//! Multiplexed line-protocol client pump: drives hundreds-to-thousands
+//! of concurrent generation streams from **one** thread over a
+//! [`Poller`](super::net::Poller), collecting per-stream latency stats.
+//! This is the load side of the reactor-front tests and the
+//! `concurrency` section of the serving bench — a thread-per-stream
+//! client would perturb exactly the scaling property under measurement.
+
+use super::net::{PollEvent, Poller};
+use crate::util::json::Json;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::time::{Duration, Instant};
+
+/// Everything observed on one stream, client-side.
+#[derive(Debug)]
+pub struct StreamStats {
+    /// Token deltas received.
+    pub tokens: usize,
+    /// Terminal lines received (`done`/`cancelled`/`error`); the
+    /// protocol guarantees exactly one per request.
+    pub terminals: usize,
+    /// `"done"`, `"cancelled"`, `"shed"`, `"error"`, or `"none"` if the
+    /// overall deadline passed first.
+    pub outcome: String,
+    /// Concatenated token text.
+    pub text: String,
+    /// Submit-to-first-token latency.
+    pub ttft: Option<Duration>,
+    /// Worst observed inter-token stall (gap between reads that carried
+    /// tokens for this stream; batching makes this a lower bound on
+    /// smoothness, an upper-bound stall shows up regardless).
+    pub max_gap: Duration,
+    /// Submit-to-terminal wall time.
+    pub total: Duration,
+}
+
+struct MuxConn {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    stats: StreamStats,
+    started: Instant,
+    last_token_at: Option<Instant>,
+    open: bool,
+}
+
+/// Build one generation request line.
+pub fn request_line(prompt: &str, max_new_tokens: usize, policy: &str) -> String {
+    Json::obj(vec![
+        ("prompt", Json::str(prompt)),
+        ("max_new_tokens", Json::num(max_new_tokens as f64)),
+        ("policy", Json::str(policy)),
+    ])
+    .dump()
+}
+
+/// Open one connection per line, write each request, then pump every
+/// stream concurrently until all reach a terminal (or the overall
+/// deadline passes — remaining streams report outcome `"none"`).
+pub fn run_streams(
+    addr: &SocketAddr,
+    lines: &[String],
+    overall_timeout: Duration,
+) -> std::io::Result<Vec<StreamStats>> {
+    let mut poller = Poller::new()?;
+    let mut conns: Vec<MuxConn> = Vec::with_capacity(lines.len());
+    for (i, line) in lines.iter().enumerate() {
+        let mut stream = connect_retry(addr)?;
+        stream.write_all(line.as_bytes())?;
+        stream.write_all(b"\n")?;
+        stream.set_nonblocking(true)?;
+        poller.register(stream.as_raw_fd(), i as u64, true, false)?;
+        conns.push(MuxConn {
+            stream,
+            buf: Vec::new(),
+            stats: StreamStats {
+                tokens: 0,
+                terminals: 0,
+                outcome: "none".to_string(),
+                text: String::new(),
+                ttft: None,
+                max_gap: Duration::ZERO,
+                total: Duration::ZERO,
+            },
+            started: Instant::now(),
+            last_token_at: None,
+            open: true,
+        });
+    }
+    let deadline = Instant::now() + overall_timeout;
+    let mut open = conns.len();
+    let mut events: Vec<PollEvent> = Vec::new();
+    while open > 0 && Instant::now() < deadline {
+        poller.wait(&mut events, 100)?;
+        for i in 0..events.len() {
+            let ev = events[i];
+            let Some(c) = conns.get_mut(ev.token as usize) else { continue };
+            if !c.open {
+                continue;
+            }
+            if read_into(c) {
+                process_lines(c);
+            }
+            if !c.open {
+                let _ = poller.deregister(c.stream.as_raw_fd());
+                let _ = c.stream.shutdown(std::net::Shutdown::Both);
+                open -= 1;
+            }
+        }
+    }
+    Ok(conns.into_iter().map(|c| c.stats).collect())
+}
+
+/// Connect with a short retry loop: a momentarily full accept backlog
+/// (thousands of clients racing one reactor) refuses rather than parks
+/// on some stacks.
+fn connect_retry(addr: &SocketAddr) -> std::io::Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..5 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    Err(last
+        .unwrap_or_else(|| std::io::Error::new(std::io::ErrorKind::Other, "connect failed")))
+}
+
+/// Drain the socket; returns whether any bytes arrived. EOF or a hard
+/// error closes the stream (a missing terminal then stays visible in
+/// `terminals`).
+fn read_into(c: &mut MuxConn) -> bool {
+    let mut chunk = [0u8; 4096];
+    let mut got = false;
+    loop {
+        match c.stream.read(&mut chunk) {
+            Ok(0) => {
+                c.open = false;
+                break;
+            }
+            Ok(n) => {
+                c.buf.extend_from_slice(&chunk[..n]);
+                got = true;
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.open = false;
+                break;
+            }
+        }
+    }
+    got
+}
+
+fn process_lines(c: &mut MuxConn) {
+    let now = Instant::now();
+    while let Some(nl) = c.buf.iter().position(|&b| b == b'\n') {
+        let line: Vec<u8> = c.buf.drain(..=nl).collect();
+        let text = String::from_utf8_lossy(&line);
+        let text = text.trim();
+        if text.is_empty() {
+            continue;
+        }
+        let Ok(j) = Json::parse(text) else { continue };
+        if let Some(t) = j.get("token").as_str() {
+            c.stats.tokens += 1;
+            c.stats.text.push_str(t);
+            let prev = c.last_token_at.unwrap_or(c.started);
+            let gap = now.saturating_duration_since(prev);
+            if gap > c.stats.max_gap {
+                c.stats.max_gap = gap;
+            }
+            if c.stats.ttft.is_none() {
+                c.stats.ttft = Some(now.saturating_duration_since(c.started));
+            }
+            c.last_token_at = Some(now);
+        } else if j.get("done").as_bool() == Some(true) {
+            c.stats.terminals += 1;
+            c.stats.outcome = "done".to_string();
+            c.stats.total = now.saturating_duration_since(c.started);
+            c.open = false;
+        } else if j.get("cancelled").as_bool() == Some(true) {
+            c.stats.terminals += 1;
+            c.stats.outcome = "cancelled".to_string();
+            c.stats.total = now.saturating_duration_since(c.started);
+            c.open = false;
+        } else if j.get("error").as_str().is_some() {
+            c.stats.terminals += 1;
+            c.stats.outcome = if j.get("code").as_str() == Some("shed") {
+                "shed".to_string()
+            } else {
+                "error".to_string()
+            };
+            c.stats.total = now.saturating_duration_since(c.started);
+            c.open = false;
+        }
+    }
+}

@@ -1,0 +1,429 @@
+//! Event-driven I/O plumbing for the reactor serving front
+//! (`serving.frontend = epoll`): a [`Poller`] multiplexing readiness
+//! over every client socket from one thread, and a [`Waker`] that lets
+//! coordinator/cluster threads interrupt the poll wait when a token
+//! event lands. Linux uses `epoll` + `eventfd`; every other unix runs
+//! the same API over portable `poll(2)` + a self-pipe. Both backends
+//! compile on Linux so the fallback is exercised by tests, not just by
+//! other platforms.
+//!
+//! Level-triggered on both backends: a fd with unread input (or writable
+//! space and queued output) reports ready on every wait, so the reactor
+//! loop never needs edge-triggered bookkeeping.
+
+pub mod sys;
+
+pub mod reactor;
+
+use std::collections::HashMap;
+use std::io;
+use std::os::unix::io::RawFd;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// One readiness report from [`Poller::wait`].
+#[derive(Debug, Clone, Copy)]
+pub struct PollEvent {
+    /// The token the fd was registered under.
+    pub token: u64,
+    pub readable: bool,
+    pub writable: bool,
+    /// Peer hung up (`EPOLLHUP`/`POLLHUP`); a subsequent read returns 0.
+    pub hangup: bool,
+    /// Error condition on the fd (`EPOLLERR`/`POLLERR`/`POLLNVAL`).
+    pub error: bool,
+}
+
+/// Readiness multiplexer over raw fds, epoll- or poll-backed.
+pub struct Poller {
+    backend: Backend,
+}
+
+enum Backend {
+    #[cfg(target_os = "linux")]
+    Epoll(EpollBackend),
+    Poll(PollBackend),
+}
+
+impl Poller {
+    /// Platform-preferred backend: epoll on Linux, poll elsewhere.
+    pub fn new() -> io::Result<Poller> {
+        #[cfg(target_os = "linux")]
+        {
+            Ok(Poller { backend: Backend::Epoll(EpollBackend::new()?) })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Self::new_poll()
+        }
+    }
+
+    /// Force the portable `poll(2)` backend (tests; non-Linux default).
+    pub fn new_poll() -> io::Result<Poller> {
+        Ok(Poller { backend: Backend::Poll(PollBackend::new()) })
+    }
+
+    pub fn backend_name(&self) -> &'static str {
+        match &self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(_) => "epoll",
+            Backend::Poll(_) => "poll",
+        }
+    }
+
+    /// Start watching `fd` under `token` for the given readiness kinds.
+    pub fn register(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.ctl(sys::EPOLL_CTL_ADD, fd, token, readable, writable),
+            Backend::Poll(b) => {
+                b.interest.insert(fd, (token, readable, writable));
+                Ok(())
+            }
+        }
+    }
+
+    /// Change the readiness kinds watched for an already-registered fd.
+    pub fn modify(
+        &mut self,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.ctl(sys::EPOLL_CTL_MOD, fd, token, readable, writable),
+            Backend::Poll(b) => {
+                b.interest.insert(fd, (token, readable, writable));
+                Ok(())
+            }
+        }
+    }
+
+    /// Stop watching `fd` (must precede closing it).
+    pub fn deregister(&mut self, fd: RawFd) -> io::Result<()> {
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.ctl(sys::EPOLL_CTL_DEL, fd, 0, false, false),
+            Backend::Poll(b) => {
+                b.interest.remove(&fd);
+                Ok(())
+            }
+        }
+    }
+
+    /// Block up to `timeout_ms` for readiness; `out` is cleared and
+    /// refilled. A zero-event return (timeout or `EINTR`) is normal.
+    pub fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+        out.clear();
+        match &mut self.backend {
+            #[cfg(target_os = "linux")]
+            Backend::Epoll(b) => b.wait(out, timeout_ms),
+            Backend::Poll(b) => b.wait(out, timeout_ms),
+        }
+    }
+}
+
+// ------------------------------------------------------- epoll backend
+
+#[cfg(target_os = "linux")]
+struct EpollBackend {
+    epfd: RawFd,
+    buf: Vec<sys::EpollEvent>,
+}
+
+#[cfg(target_os = "linux")]
+impl EpollBackend {
+    fn new() -> io::Result<EpollBackend> {
+        Ok(EpollBackend {
+            epfd: sys::sys_epoll_create()?,
+            buf: vec![sys::EpollEvent { events: 0, data: 0 }; 1024],
+        })
+    }
+
+    fn ctl(
+        &mut self,
+        op: std::os::raw::c_int,
+        fd: RawFd,
+        token: u64,
+        readable: bool,
+        writable: bool,
+    ) -> io::Result<()> {
+        let mut events = 0u32;
+        if readable {
+            events |= sys::EPOLLIN;
+        }
+        if writable {
+            events |= sys::EPOLLOUT;
+        }
+        sys::sys_epoll_ctl(self.epfd, op, fd, events, token)
+    }
+
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+        let n = sys::sys_epoll_wait(self.epfd, &mut self.buf, timeout_ms)?;
+        for ev in &self.buf[..n] {
+            // copy out of the (possibly packed) record before testing bits
+            let (events, token) = (ev.events, ev.data);
+            out.push(PollEvent {
+                token,
+                readable: events & sys::EPOLLIN != 0,
+                writable: events & sys::EPOLLOUT != 0,
+                hangup: events & sys::EPOLLHUP != 0,
+                error: events & sys::EPOLLERR != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+#[cfg(target_os = "linux")]
+impl Drop for EpollBackend {
+    fn drop(&mut self) {
+        sys::sys_close(self.epfd);
+    }
+}
+
+// -------------------------------------------------------- poll backend
+
+/// Portable fallback: the interest set is rebuilt into a `pollfd` array
+/// on every wait. O(fds) per wait versus epoll's O(ready), which is fine
+/// for the fallback's role (non-Linux platforms and backend-parity
+/// tests); Linux production serving takes the epoll arm.
+struct PollBackend {
+    interest: HashMap<RawFd, (u64, bool, bool)>,
+    fds: Vec<sys::PollFd>,
+}
+
+impl PollBackend {
+    fn new() -> PollBackend {
+        PollBackend { interest: HashMap::new(), fds: Vec::new() }
+    }
+
+    fn wait(&mut self, out: &mut Vec<PollEvent>, timeout_ms: i32) -> io::Result<()> {
+        self.fds.clear();
+        let mut tokens = Vec::with_capacity(self.interest.len());
+        for (&fd, &(token, r, w)) in &self.interest {
+            self.fds.push(sys::PollFd::interest(fd, r, w));
+            tokens.push(token);
+        }
+        let n = sys::sys_poll(&mut self.fds, timeout_ms)?;
+        if n == 0 {
+            return Ok(());
+        }
+        for (pfd, &token) in self.fds.iter().zip(&tokens) {
+            let re = pfd.revents;
+            if re == 0 {
+                continue;
+            }
+            out.push(PollEvent {
+                token,
+                readable: re & sys::POLLIN != 0,
+                writable: re & sys::POLLOUT != 0,
+                hangup: re & sys::POLLHUP != 0,
+                error: re & (sys::POLLERR | sys::POLLNVAL) != 0,
+            });
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------- waker
+
+/// Cross-thread wakeup for a [`Poller`] wait: scheduler/relay threads
+/// call [`Waker::wake`] after pushing an event, the reactor registers
+/// [`Waker::read_fd`] and calls [`Waker::drain`] when it reports
+/// readable. Eventfd on Linux, self-pipe elsewhere. Wakes coalesce
+/// (both carriers saturate rather than queue), which is exactly the
+/// semantics a level-triggered drain loop wants.
+pub struct Waker {
+    read_fd: RawFd,
+    /// Same fd as `read_fd` for eventfd, the pipe's write end otherwise.
+    write_fd: RawFd,
+    /// Pipe carrier: skip redundant writes while a wake is pending
+    /// (an eventfd coalesces natively; a pipe would fill).
+    pending: AtomicBool,
+    /// Whether dropping should close `write_fd` separately.
+    two_fds: bool,
+}
+
+impl Waker {
+    pub fn new() -> io::Result<Waker> {
+        #[cfg(target_os = "linux")]
+        {
+            let efd = sys::sys_eventfd()?;
+            Ok(Waker {
+                read_fd: efd,
+                write_fd: efd,
+                pending: AtomicBool::new(false),
+                two_fds: false,
+            })
+        }
+        #[cfg(not(target_os = "linux"))]
+        {
+            Self::new_pipe()
+        }
+    }
+
+    /// Force the self-pipe carrier (tests; non-Linux default).
+    pub fn new_pipe() -> io::Result<Waker> {
+        let (r, w) = sys::sys_pipe_nonblocking()?;
+        Ok(Waker { read_fd: r, write_fd: w, pending: AtomicBool::new(false), two_fds: true })
+    }
+
+    /// The fd the reactor registers for readability.
+    pub fn read_fd(&self) -> RawFd {
+        self.read_fd
+    }
+
+    /// Signal the poller; callable from any thread, lock-free, and safe
+    /// to spam — concurrent wakes coalesce into one readable report.
+    pub fn wake(&self) {
+        if self.two_fds {
+            // Relaxed: a stale read at worst writes one extra byte into
+            // the pipe or skips a write that another thread already
+            // made; both still leave the pipe readable.
+            if !self.pending.swap(true, Ordering::Relaxed) {
+                // a full pipe is also fine: the reader has a wake pending
+                let _ = sys::sys_write(self.write_fd, &[1u8]);
+            }
+        } else {
+            let _ = sys::sys_write(self.write_fd, &1u64.to_ne_bytes());
+        }
+    }
+
+    /// Consume the pending wake(s) so the fd stops reporting readable.
+    pub fn drain(&self) {
+        let mut buf = [0u8; 64];
+        while let Ok(n) = sys::sys_read(self.read_fd, &mut buf) {
+            if n < buf.len() {
+                break;
+            }
+        }
+        if self.two_fds {
+            // Relaxed: ordered after the reads above only loosely; a
+            // wake racing this store re-arms the pipe with a fresh byte,
+            // so the loop's next wait still sees it.
+            self.pending.store(false, Ordering::Relaxed);
+        }
+    }
+}
+
+impl Drop for Waker {
+    fn drop(&mut self) {
+        sys::sys_close(self.read_fd);
+        if self.two_fds {
+            sys::sys_close(self.write_fd);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+    use std::net::{TcpListener, TcpStream};
+    use std::os::unix::io::AsRawFd;
+
+    fn socket_pair() -> (TcpStream, TcpStream) {
+        let l = TcpListener::bind("127.0.0.1:0").unwrap();
+        let a = TcpStream::connect(l.local_addr().unwrap()).unwrap();
+        let (b, _) = l.accept().unwrap();
+        (a, b)
+    }
+
+    fn poller_round_trip(mut p: Poller) {
+        let (mut a, b) = socket_pair();
+        b.set_nonblocking(true).unwrap();
+        p.register(b.as_raw_fd(), 7, true, false).unwrap();
+        let mut evs = Vec::new();
+        p.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty(), "{evs:?}");
+
+        a.write_all(b"ping").unwrap();
+        p.wait(&mut evs, 2000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 7);
+        assert!(evs[0].readable);
+
+        // level-triggered: unread input keeps reporting
+        p.wait(&mut evs, 0).unwrap();
+        assert_eq!(evs.len(), 1, "level-triggered readiness must persist");
+
+        // writable interest on an idle socket reports immediately
+        p.modify(b.as_raw_fd(), 7, true, true).unwrap();
+        p.wait(&mut evs, 2000).unwrap();
+        assert!(evs[0].writable);
+
+        // after the peer closes, read readiness reports EOF (read 0)
+        drop(a);
+        p.wait(&mut evs, 2000).unwrap();
+        assert_eq!(evs.len(), 1);
+        assert!(evs[0].readable || evs[0].hangup, "{evs:?}");
+        let mut buf = [0u8; 16];
+        let mut c = &b;
+        assert_eq!(c.read(&mut buf).unwrap(), 4); // the unread "ping"
+        assert_eq!(c.read(&mut buf).unwrap(), 0); // then EOF
+
+        p.deregister(b.as_raw_fd()).unwrap();
+        p.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty());
+    }
+
+    #[test]
+    fn poll_backend_round_trip() {
+        poller_round_trip(Poller::new_poll().unwrap());
+        assert_eq!(Poller::new_poll().unwrap().backend_name(), "poll");
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn epoll_backend_round_trip() {
+        poller_round_trip(Poller::new().unwrap());
+        assert_eq!(Poller::new().unwrap().backend_name(), "epoll");
+    }
+
+    fn waker_wakes(w: Waker, mut p: Poller) {
+        let w = std::sync::Arc::new(w);
+        p.register(w.read_fd(), 1, true, false).unwrap();
+        let mut evs = Vec::new();
+        p.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty());
+
+        // wake from another thread interrupts a blocking wait
+        let w2 = std::sync::Arc::clone(&w);
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(20));
+            w2.wake();
+            w2.wake(); // coalesces
+        });
+        p.wait(&mut evs, 5000).unwrap();
+        t.join().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].token, 1);
+
+        // drain clears readiness; the next wake re-arms it
+        w.drain();
+        p.wait(&mut evs, 0).unwrap();
+        assert!(evs.is_empty(), "{evs:?}");
+        w.wake();
+        p.wait(&mut evs, 2000).unwrap();
+        assert_eq!(evs.len(), 1);
+    }
+
+    #[test]
+    fn pipe_waker_wakes_poll_backend() {
+        waker_wakes(Waker::new_pipe().unwrap(), Poller::new_poll().unwrap());
+    }
+
+    #[cfg(target_os = "linux")]
+    #[test]
+    fn eventfd_waker_wakes_epoll_backend() {
+        waker_wakes(Waker::new().unwrap(), Poller::new().unwrap());
+    }
+}

@@ -1,0 +1,165 @@
+//! Incremental UTF-8-safe streaming deltas (the `TokenOutputStream`
+//! idiom): the engine emits *bytes*, one per decode step, but a stream
+//! write must never split a multibyte character across two deltas — a
+//! client rendering each delta as it arrives would show replacement
+//! garbage for every CJK/emoji character.
+//!
+//! [`Utf8Stream`] buffers undecodable tails: push a byte, get back
+//! `Some(delta)` only once the buffered bytes form complete characters.
+//! Invalid sequences degrade to U+FFFD exactly like the previous
+//! per-byte `from_utf8_lossy` path, so pure-ASCII token streams (the sim
+//! engine's entire vocabulary) are byte-identical to pre-stream
+//! behavior.
+
+/// Incremental UTF-8 decoder over a byte-at-a-time token stream.
+#[derive(Default)]
+pub struct Utf8Stream {
+    /// Undecoded tail: at most 3 bytes of an incomplete character.
+    buf: Vec<u8>,
+}
+
+impl Utf8Stream {
+    pub fn new() -> Utf8Stream {
+        Utf8Stream { buf: Vec::new() }
+    }
+
+    /// Feed one token byte; returns the newly-decodable text, if any.
+    /// Complete characters (and U+FFFD for invalid bytes) are emitted as
+    /// soon as they close; an incomplete multibyte prefix stays buffered
+    /// for the next push.
+    pub fn push(&mut self, b: u8) -> Option<String> {
+        self.buf.push(b);
+        let out = self.drain_decodable();
+        if out.is_empty() {
+            None
+        } else {
+            Some(out)
+        }
+    }
+
+    /// Flush the remaining tail at end of stream: an unfinished multibyte
+    /// prefix can never complete, so it degrades to replacement
+    /// characters (lossy semantics, matching `String::from_utf8_lossy`).
+    pub fn flush(&mut self) -> Option<String> {
+        if self.buf.is_empty() {
+            return None;
+        }
+        let out = String::from_utf8_lossy(&self.buf).into_owned();
+        self.buf.clear();
+        Some(out)
+    }
+
+    /// Decode and drain every complete character currently buffered,
+    /// replacing definitively-invalid bytes, keeping an incomplete tail.
+    fn drain_decodable(&mut self) -> String {
+        let mut out = String::new();
+        loop {
+            match std::str::from_utf8(&self.buf) {
+                Ok(s) => {
+                    out.push_str(s);
+                    self.buf.clear();
+                    break;
+                }
+                Err(e) => {
+                    let valid = e.valid_up_to();
+                    if let Ok(s) = std::str::from_utf8(&self.buf[..valid]) {
+                        out.push_str(s);
+                    }
+                    match e.error_len() {
+                        // incomplete trailing sequence: may still close
+                        None => {
+                            self.buf.drain(..valid);
+                            break;
+                        }
+                        // definitively invalid bytes: one U+FFFD per
+                        // byte, mirroring the old per-byte lossy path
+                        Some(n) => {
+                            for _ in 0..n {
+                                out.push('\u{FFFD}');
+                            }
+                            self.buf.drain(..valid + n);
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feed(s: &mut Utf8Stream, bytes: &[u8]) -> Vec<Option<String>> {
+        bytes.iter().map(|&b| s.push(b)).collect()
+    }
+
+    #[test]
+    fn ascii_is_emitted_per_byte() {
+        let mut s = Utf8Stream::new();
+        let out = feed(&mut s, b"hi!");
+        assert_eq!(
+            out,
+            vec![Some("h".into()), Some("i".into()), Some("!".into())]
+        );
+        assert_eq!(s.flush(), None);
+    }
+
+    /// The satellite case: a tokenizer that splits a multibyte char
+    /// across token boundaries must not split the stream write.
+    #[test]
+    fn split_multibyte_chars_emit_once_complete() {
+        // "é" (2 bytes), "中" (3 bytes), "🦀" (4 bytes)
+        let mut s = Utf8Stream::new();
+        assert_eq!(feed(&mut s, "é".as_bytes()), vec![None, Some("é".into())]);
+        assert_eq!(
+            feed(&mut s, "中".as_bytes()),
+            vec![None, None, Some("中".into())]
+        );
+        assert_eq!(
+            feed(&mut s, "🦀".as_bytes()),
+            vec![None, None, None, Some("🦀".into())]
+        );
+        assert_eq!(s.flush(), None);
+    }
+
+    #[test]
+    fn mixed_ascii_and_multibyte_stream() {
+        let mut s = Utf8Stream::new();
+        let text = "a中b";
+        let mut got = String::new();
+        for &b in text.as_bytes() {
+            if let Some(d) = s.push(b) {
+                got.push_str(&d);
+            }
+        }
+        assert_eq!(got, text);
+    }
+
+    #[test]
+    fn invalid_bytes_degrade_to_replacement_chars() {
+        let mut s = Utf8Stream::new();
+        // 0xFF can never start a sequence: replaced immediately
+        assert_eq!(s.push(0xFF), Some("\u{FFFD}".to_string()));
+        // a continuation byte with no lead byte is also invalid
+        assert_eq!(s.push(0x80), Some("\u{FFFD}".to_string()));
+        // an aborted 3-byte sequence followed by ASCII: the lead+cont
+        // bytes are invalidated by the ASCII byte and replaced
+        assert_eq!(s.push(0xE4), None);
+        assert_eq!(s.push(0xB8), None);
+        let d = s.push(b'x');
+        assert_eq!(d, Some("\u{FFFD}\u{FFFD}x".to_string()));
+    }
+
+    #[test]
+    fn flush_replaces_truncated_tail() {
+        let mut s = Utf8Stream::new();
+        // first two bytes of "中", never completed
+        assert_eq!(s.push(0xE4), None);
+        assert_eq!(s.push(0xB8), None);
+        assert_eq!(s.flush(), Some("\u{FFFD}".to_string()));
+        // flush on a clean stream is a no-op
+        assert_eq!(s.flush(), None);
+    }
+}
